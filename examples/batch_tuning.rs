@@ -1,0 +1,66 @@
+//! Deployment-tuning flow: pick the best serving batch size (§2.2's
+//! doubling sweep as a library), then compare fused vs eager at that
+//! batch (§3.2's compiler question for the chosen config).
+//!
+//! ```sh
+//! cargo run --release --example batch_tuning -- [model]
+//! ```
+
+use anyhow::Result;
+use std::rc::Rc;
+
+use xbench::config::{BatchPolicy, Compiler, RunConfig};
+use xbench::coordinator::{sweep_model, Runner};
+use xbench::report::{fmt_ratio, fmt_secs};
+use xbench::runtime::{ArtifactStore, Device, Manifest};
+use xbench::suite::Suite;
+
+fn main() -> Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "deeprec_ae".to_string());
+    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+    let suite = Suite::new(manifest);
+    let device = Rc::new(Device::cpu()?);
+    let store = ArtifactStore::new(device, "artifacts");
+    let entry = suite.model(&model)?;
+    anyhow::ensure!(
+        entry.has_tag("sweep"),
+        "{model} has no batch ladder; sweep-tagged models: resnet_tiny gpt_tiny dlrm_tiny deeprec_ae"
+    );
+
+    // 1. Doubling sweep → best-throughput batch (paper §2.2).
+    let cfg = RunConfig { repeats: 3, iterations: 2, warmup: 1, ..Default::default() };
+    let runner = Runner::new(&store, cfg.clone());
+    let sweep = sweep_model(&runner, entry)?;
+    println!("batch  iter-time   samples/s");
+    for p in &sweep.points {
+        println!(
+            "{:>5}  {:>9}  {:>9.1}{}",
+            p.batch,
+            fmt_secs(p.iter_secs),
+            p.throughput,
+            if p.batch == sweep.best_batch { "  ← best" } else { "" }
+        );
+    }
+
+    // 2. Compiler choice at the chosen batch (needs staged artifacts at
+    //    the default batch — fall back if the ladder point has none).
+    let Some(stages) = &entry.stages else {
+        println!("\n{model} has no staged artifacts; skipping compiler comparison");
+        return Ok(());
+    };
+    let batch = stages.batch;
+    let mut fused_cfg = cfg.clone();
+    fused_cfg.batch = BatchPolicy::Fixed(batch);
+    let fused = Runner::new(&store, fused_cfg).run_model(entry)?;
+    let mut eager_cfg = cfg;
+    eager_cfg.batch = BatchPolicy::Fixed(batch);
+    eager_cfg.compiler = Compiler::Eager;
+    let eager = Runner::new(&store, eager_cfg).run_model(entry)?;
+    println!(
+        "\ncompiler at batch {batch}: fused {} vs eager {} — fused is {} faster",
+        fmt_secs(fused.iter_secs),
+        fmt_secs(eager.iter_secs),
+        fmt_ratio(eager.iter_secs / fused.iter_secs)
+    );
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Drive the §4.2 CI pipeline programmatically (the library view of
+//! `xbench ci`): record baselines, simulate a commit day with a planted
+//! fault, gate the nightly, bisect, and print the auto-filed issue.
+//!
+//! ```sh
+//! cargo run --release --example ci_regression -- [pr_number]
+//! ```
+//!
+//! Also demonstrates the threshold ablation DESIGN.md calls out: the 7%
+//! gate vs the measured run-to-run noise (CV) of each benchmark.
+
+use anyhow::Result;
+use std::rc::Rc;
+
+use xbench::ci::{CiPipeline, Day, FaultKind};
+use xbench::config::{RunConfig, SuiteSelection};
+use xbench::metrics;
+use xbench::runtime::{ArtifactStore, Device, Manifest};
+use xbench::suite::Suite;
+
+fn main() -> Result<()> {
+    let pr: u32 = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(61056);
+    let fault = FaultKind::catalog()
+        .into_iter()
+        .find(|f| f.pr_number() == pr)
+        .ok_or_else(|| anyhow::anyhow!("PR #{pr} is not in the Table 4 catalog"))?;
+
+    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+    let suite = Suite::new(manifest);
+    let device = Rc::new(Device::cpu()?);
+    let store = ArtifactStore::new(device, "artifacts");
+
+    let cfg = RunConfig {
+        repeats: 5,
+        iterations: 2,
+        warmup: 1,
+        selection: SuiteSelection {
+            models: vec!["deeprec_ae".into(), "dlrm_tiny".into(), "deeprec_ae_quant".into()],
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let pipeline = CiPipeline::new(&store, &suite, cfg);
+
+    println!("recording clean baselines…");
+    let baselines = pipeline.record_baselines()?;
+
+    // Noise floor: how close is each benchmark to the 7% gate on a clean
+    // re-run? (The threshold-ablation question from DESIGN.md.)
+    let clean = pipeline.run_build(&Default::default())?;
+    println!("\nbenchmark noise (clean re-run vs baseline; gate = 7%):");
+    for r in &clean {
+        let key = xbench::ci::bench_key(r);
+        if let Some(b) = baselines.get(&key) {
+            let drift = (r.iter_secs / b.iter_secs - 1.0) * 100.0;
+            let cv = metrics::cv(&r.repeats_secs) * 100.0;
+            println!("  {key:<38} drift {drift:+6.2}%  cv {cv:5.2}%");
+        }
+    }
+
+    // A 70-commit day (paper: >70/day land in PyTorch) with the fault
+    // planted at a seeded position.
+    let day = Day::generate("2023-01-02", 70, &[fault], 0xC1);
+    let planted = day.fault_indices()[0];
+    println!(
+        "\nsimulated day: 70 commits; planted #{pr} ({}) at position {planted}",
+        fault.issue()
+    );
+
+    match pipeline.nightly(&day, &baselines)? {
+        Some(report) => {
+            println!("\n{}", report.to_markdown());
+            if let Some(c) = &report.culprit {
+                let idx = day.commits.iter().position(|x| x.id == c.id).unwrap();
+                println!(
+                    "bisection {} (planted at {planted}, found {idx}); cost: {} runs vs {} per-commit",
+                    if idx == planted { "CORRECT" } else { "MISSED" },
+                    report.runs_spent,
+                    day.commits.len(),
+                );
+            }
+        }
+        None => println!("nightly passed the gate — fault impact below threshold"),
+    }
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Downstream use-case: "which GPU wins for *my* model?" — project any
+//! artifact across the paper's device profiles (§3.3 methodology as a
+//! library).
+//!
+//! ```sh
+//! cargo run --release --example device_projection -- artifacts/gpt_tiny.infer.b4.hlo.txt
+//! ```
+//!
+//! Parses the HLO, counts FLOPs by precision-eligibility class, and
+//! prints the roofline projection on A100 vs MI210 for both modes —
+//! exactly how Fig 5 is generated, exposed for arbitrary workloads.
+
+use anyhow::Result;
+use std::path::PathBuf;
+
+use xbench::config::Mode;
+use xbench::devmodel::{a100, mi210};
+use xbench::hlo;
+use xbench::report::fmt_bytes;
+
+fn main() -> Result<()> {
+    let path = PathBuf::from(
+        std::env::args()
+            .nth(1)
+            .unwrap_or_else(|| "artifacts/gpt_tiny.infer.b4.hlo.txt".to_string()),
+    );
+    let cost = hlo::analyze_file(&path)?;
+
+    println!("workload: {}", path.display());
+    println!(
+        "  FLOPs: dot {:.2}M / conv {:.2}M / elementwise {:.2}M",
+        cost.flops.dot / 1e6,
+        cost.flops.conv / 1e6,
+        cost.flops.elementwise / 1e6
+    );
+    println!(
+        "  traffic {:.2} MiB | arena {} | params {}",
+        cost.traffic_bytes / (1024.0 * 1024.0),
+        fmt_bytes(cost.arena_bytes),
+        fmt_bytes(cost.param_bytes)
+    );
+
+    for mode in [Mode::Infer, Mode::Train] {
+        println!("\nmode: {}", mode.as_str());
+        let (mut tn, mut ta) = (0.0, 0.0);
+        for dev in [a100(), mi210()] {
+            let p = dev.predict(&cost, mode);
+            println!(
+                "  {:<12} total {:>10.3}µs  (compute {:.3}µs, memory {:.3}µs)  {:.2} achieved TFLOPS",
+                dev.name,
+                p.total_secs * 1e6,
+                p.compute_secs * 1e6,
+                p.memory_secs * 1e6,
+                p.achieved_tflops
+            );
+            if dev.name.contains("A100") {
+                tn = p.total_secs;
+            } else {
+                ta = p.total_secs;
+            }
+        }
+        let ratio = tn / ta;
+        println!(
+            "  T_NVIDIA/T_AMD = {ratio:.3} → {} wins",
+            if ratio < 1.0 { "A100" } else { "MI210" }
+        );
+    }
+    Ok(())
+}

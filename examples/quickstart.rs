@@ -1,0 +1,55 @@
+//! Quickstart: load the suite, run one benchmark, read its breakdown.
+//!
+//! ```sh
+//! make artifacts                       # once: AOT-lower the model zoo
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! This is the smallest complete use of the public API: manifest →
+//! suite → runner → RunResult. Everything else in `examples/` builds on
+//! this skeleton.
+
+use anyhow::Result;
+use std::rc::Rc;
+
+use xbench::config::RunConfig;
+use xbench::coordinator::Runner;
+use xbench::report::{fmt_pct, fmt_secs};
+use xbench::runtime::{ArtifactStore, Device, Manifest};
+use xbench::suite::Suite;
+
+fn main() -> Result<()> {
+    // 1. Load the artifact manifest produced by `make artifacts`.
+    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+    let suite = Suite::new(manifest);
+    println!(
+        "suite: {} models / {} benchmark configs",
+        suite.models().count(),
+        suite.config_count()
+    );
+
+    // 2. Bring up the PJRT device and the compile-once artifact store.
+    let device = Rc::new(Device::cpu()?);
+    let store = ArtifactStore::new(device, "artifacts");
+
+    // 3. Run one benchmark under the paper's protocol (median of N
+    //    repeats, warmup excluded).
+    let cfg = RunConfig { repeats: 5, iterations: 2, warmup: 1, ..Default::default() };
+    let entry = suite.model("gpt_tiny")?;
+    let result = Runner::new(&store, cfg).run_model(entry)?;
+
+    // 4. Read the numbers the paper reports per benchmark.
+    println!(
+        "{}: {} per iteration ({:.1} samples/s)",
+        result.model,
+        fmt_secs(result.iter_secs),
+        result.throughput
+    );
+    println!(
+        "breakdown: device-active {} / data-movement {} / idle {}",
+        fmt_pct(result.breakdown.active),
+        fmt_pct(result.breakdown.movement),
+        fmt_pct(result.breakdown.idle)
+    );
+    Ok(())
+}

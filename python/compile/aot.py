@@ -1,0 +1,208 @@
+"""AOT compiler: lower the whole zoo to HLO text + manifest for rust.
+
+Runs ONCE at build time (``make artifacts``); the rust coordinator is
+self-contained afterwards. For every zoo model this emits:
+
+- ``<name>.infer.b<B>.hlo.txt`` — fused inference graph per batch size
+  (default batch + batch 1; sweep-tagged models get the full doubling
+  ladder from paper §2.2);
+- ``<name>.train.b<B>.hlo.txt`` — one fused SGD step
+  ``(params…, batch…) -> (params…, loss)`` (models with a loss only);
+- ``<name>.stage<K>.b<B>.hlo.txt`` — per-stage graphs for the eager
+  executor (stageable models only);
+- ``params/<name>/p<I>.bin`` — seeded initial parameters (raw
+  little-endian), replayed bit-identically by rust;
+- a ``manifest.json`` entry describing all of the above plus input specs.
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax ≥ 0.5 emits
+64-bit instruction ids which xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .models import SWEEP_BATCHES, all_names, build, tags
+from .models.base import Model
+from .models.layers import InputSpec
+
+_DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+_NP_DTYPE_NAMES = {
+    np.dtype(np.float32): "f32",
+    np.dtype(np.int32): "i32",
+    np.dtype(np.int8): "s8",
+}
+PARAM_SEED = 0x5EED
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _abstract(spec: InputSpec) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(spec.shape), _DTYPES[spec.dtype])
+
+
+def _param_structs(params: list[np.ndarray]) -> list[jax.ShapeDtypeStruct]:
+    return [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params]
+
+
+def _specs_json(specs: list[InputSpec]) -> list[dict]:
+    return [s.to_json() for s in specs]
+
+
+def _lower(fn, *example) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*example))
+
+
+def _write(out_dir: Path, rel: str, text: str) -> str:
+    path = out_dir / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(text)
+    return rel
+
+
+def compile_model(name: str, out_dir: Path, verbose: bool = True) -> dict:
+    """Lower one model to all of its artifacts; returns its manifest entry."""
+    t0 = time.time()
+    model = build(name)
+    params = model.init(PARAM_SEED)
+
+    entry: dict = {
+        "name": name,
+        "domain": model.domain,
+        "task": model.task,
+        "default_batch": model.default_batch,
+        "lr": model.lr,
+        "tags": list(tags(name)),
+        "params": [],
+        "infer": {},
+        "train": None,
+        "stages": None,
+    }
+
+    # --- parameters -------------------------------------------------------
+    pdir = out_dir / "params" / name
+    pdir.mkdir(parents=True, exist_ok=True)
+    for i, p in enumerate(params):
+        rel = f"params/{name}/p{i:03d}.bin"
+        (out_dir / rel).write_bytes(np.ascontiguousarray(p).tobytes())
+        entry["params"].append(
+            {"file": rel, "shape": list(p.shape), "dtype": _NP_DTYPE_NAMES[p.dtype]}
+        )
+
+    pstructs = _param_structs(params)
+
+    # --- fused inference per batch size ------------------------------------
+    batches = sorted({1, model.default_batch}
+                     | (set(SWEEP_BATCHES) if "sweep" in tags(name) else set()))
+    for b in batches:
+        specs = model.input_specs(b)
+        text = _lower(
+            lambda ps, *xs: model.forward(ps, *xs),
+            pstructs, *[_abstract(s) for s in specs],
+        )
+        rel = _write(out_dir, f"{name}.infer.b{b}.hlo.txt", text)
+        entry["infer"][str(b)] = {"artifact": rel, "inputs": _specs_json(specs)}
+
+    # --- fused train step ---------------------------------------------------
+    if model.loss is not None:
+        b = model.default_batch
+        batch_specs = model.input_specs(b) + model.target_specs(b)
+        text = _lower(
+            lambda ps, *xs: model.train_step(ps, *xs),
+            pstructs, *[_abstract(s) for s in batch_specs],
+        )
+        rel = _write(out_dir, f"{name}.train.b{b}.hlo.txt", text)
+        entry["train"] = {
+            "artifact": rel,
+            "batch": b,
+            "inputs": _specs_json(batch_specs),
+            "n_params": len(params),
+        }
+
+    # --- eager stages --------------------------------------------------------
+    stages = model.stages()
+    if stages:
+        b = model.default_batch
+        acts = [_abstract(s) for s in model.input_specs(b)]
+        stage_entries = []
+        for k, stage in enumerate(stages):
+            sub = [pstructs[i] for i in stage.param_idx]
+            text = _lower(
+                lambda ps, *xs, _s=stage: _s.apply(ps, *xs), sub, *acts
+            )
+            rel = _write(out_dir, f"{name}.stage{k:02d}.b{b}.hlo.txt", text)
+            out_shape = jax.eval_shape(lambda ps, *xs, _s=stage: _s.apply(ps, *xs), sub, *acts)
+            stage_entries.append(
+                {
+                    "name": stage.name,
+                    "artifact": rel,
+                    "param_idx": list(stage.param_idx),
+                    "acts_in": [
+                        {"shape": list(a.shape), "dtype": _NP_DTYPE_NAMES[np.dtype(a.dtype)]}
+                        for a in acts
+                    ],
+                    "act_out": {
+                        "shape": list(out_shape.shape),
+                        "dtype": _NP_DTYPE_NAMES[np.dtype(out_shape.dtype)],
+                    },
+                }
+            )
+            acts = [out_shape]
+        entry["stages"] = {"batch": b, "list": stage_entries}
+
+    if verbose:
+        n_art = len(entry["infer"]) + (1 if entry["train"] else 0) + (
+            len(entry["stages"]["list"]) if entry["stages"] else 0
+        )
+        print(f"  {name}: {n_art} artifacts, {len(params)} params, "
+              f"{time.time() - t0:.1f}s", flush=True)
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--models", nargs="*", default=None,
+                    help="subset of zoo names (default: all)")
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    names = args.models or all_names()
+    print(f"AOT-lowering {len(names)} models -> {out_dir}", flush=True)
+    # Partial rebuilds (--models subset) merge into the existing manifest
+    # so recompiling one model never drops the rest of the suite.
+    manifest_path = out_dir / "manifest.json"
+    manifest = {"version": 1, "param_seed": PARAM_SEED, "models": []}
+    if args.models and manifest_path.exists():
+        manifest = json.loads(manifest_path.read_text())
+    rebuilt = {name: compile_model(name, out_dir) for name in names}
+    kept = [m for m in manifest["models"] if m["name"] not in rebuilt]
+    # Preserve registry order.
+    manifest["models"] = [
+        rebuilt.get(n) or next(m for m in kept if m["name"] == n)
+        for n in all_names()
+        if n in rebuilt or any(m["name"] == n for m in kept)
+    ]
+    manifest_path.write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

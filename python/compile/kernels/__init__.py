@@ -1,0 +1,21 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into L2 HLO).
+
+Every kernel has a pure-jnp oracle in :mod:`ref` and a hypothesis-driven
+conformance sweep in ``python/tests/test_kernels.py``. All kernels run
+with ``interpret=True`` on this testbed (see :mod:`common`).
+"""
+
+from .attention import attention
+from .flash_attention import flash_attention
+from .embedding_bag import embedding_bag
+from .fused_linear import dequant_linear, fused_linear
+from .layernorm import layernorm
+
+__all__ = [
+    "attention",
+    "flash_attention",
+    "dequant_linear",
+    "embedding_bag",
+    "fused_linear",
+    "layernorm",
+]

@@ -1,0 +1,74 @@
+"""Shared tiling helpers for the Pallas kernels.
+
+TPU-idiomatic block selection: the MXU wants the trailing (lane) dimension
+tiled to 128 and the penultimate (sublane) dimension tiled to 8 (f32).
+Shapes in the XBench model zoo are small enough that whole-axis blocks are
+common; ``pick_block`` degrades gracefully to the full axis when it is
+shorter than the preferred tile, and otherwise returns the largest
+preferred multiple that divides the axis (falling back to the full axis —
+never an uneven tile, so kernels need no masking on this testbed).
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, so on this testbed Pallas runs through
+the interpreter and the BlockSpec schedule is validated *structurally*
+(VMEM footprint / MXU-alignment estimates live in `estimate_vmem_bytes`,
+reported in DESIGN.md §Perf) rather than by TPU wallclock.
+"""
+
+from __future__ import annotations
+
+import math
+
+# Lane / sublane tiles for f32 on TPU. bf16 doubles the sublane tile; the
+# zoo is f32-dominant so we size for f32 and note bf16 in estimates.
+LANE = 128
+SUBLANE = 8
+
+# Run every pallas_call in interpret mode (see module docstring).
+INTERPRET = True
+
+
+def pick_block(axis: int, preferred: int) -> int:
+    """Largest tile ≤ ``preferred`` that evenly divides ``axis``.
+
+    Prefers multiples of ``preferred``'s base alignment; returns ``axis``
+    itself when the axis is small or has no aligned divisor (whole-axis
+    block ⇒ no masking needed).
+    """
+    if axis <= preferred:
+        return axis
+    if axis % preferred == 0:
+        return preferred
+    # Largest divisor of `axis` that is ≤ preferred keeps the grid exact.
+    best = 1
+    for d in range(1, int(math.isqrt(axis)) + 1):
+        if axis % d == 0:
+            for cand in (d, axis // d):
+                if cand <= preferred and cand > best:
+                    best = cand
+    return best
+
+
+def estimate_vmem_bytes(block_shapes: list[tuple[int, ...]], dtype_bytes: int = 4) -> int:
+    """Sum of block footprints — the kernel's VMEM residency per grid step.
+
+    Used by DESIGN.md §Perf to check each kernel fits the ~16 MiB/core
+    VMEM budget with headroom for double-buffering (×2).
+    """
+    total = 0
+    for shape in block_shapes:
+        total += dtype_bytes * math.prod(shape)
+    return 2 * total  # double-buffered HBM↔VMEM pipeline
+
+
+def mxu_alignment_ratio(m: int, n: int, k: int) -> float:
+    """Fraction of MXU lanes kept busy by an (m,k)@(k,n) block matmul.
+
+    1.0 means all three dims are multiples of the MXU tile; smaller values
+    quantify padding waste. Purely structural — reported, not enforced.
+    """
+
+    def eff(dim: int, tile: int) -> float:
+        return dim / (math.ceil(dim / tile) * tile)
+
+    return eff(m, SUBLANE) * eff(n, LANE) * eff(k, LANE)

@@ -1,0 +1,50 @@
+"""Sum-pooled embedding lookup (DLRM-style ``EmbeddingBag``) in Pallas.
+
+DLRM's sparse path is gather-bound: each bag touches ``bag_len`` random
+rows of a (vocab, dim) table. The CUDA implementations assign one warp per
+bag; the TPU mapping instead grids over bags and keeps the *table* VMEM-
+resident (zoo tables are ≤ 2k × 128 ⇒ ~1 MiB), turning the random HBM
+gathers into VMEM loads. Row indices arrive per-bag via the BlockSpec;
+the in-kernel loop accumulates rows in f32.
+
+For vocab sizes that exceed VMEM this kernel would shard the table over
+the grid and partial-sum — noted in DESIGN.md §Hardware-Adaptation; zoo
+sizes do not need it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _kernel(idx_ref, table_ref, o_ref):
+    bag_len = idx_ref.shape[-1]
+
+    def body(j, acc):
+        row = idx_ref[0, j]
+        return acc + pl.load(table_ref, (row, slice(None))).astype(jnp.float32)
+
+    dim = table_ref.shape[-1]
+    acc = jax.lax.fori_loop(0, bag_len, body, jnp.zeros((dim,), jnp.float32))
+    o_ref[0, :] = acc.astype(o_ref.dtype)
+
+
+def embedding_bag(table: jax.Array, indices: jax.Array) -> jax.Array:
+    """Sum rows of ``table``:(vocab, dim) per bag of ``indices``:(bags, L)."""
+    vocab, dim = table.shape
+    bags, bag_len = indices.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(bags,),
+        in_specs=[
+            pl.BlockSpec((1, bag_len), lambda i: (i, 0)),
+            pl.BlockSpec((vocab, dim), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bags, dim), table.dtype),
+        interpret=common.INTERPRET,
+    )(indices, table)

@@ -1,0 +1,112 @@
+"""Streaming (FlashAttention-style) SDPA: K/V tiled with online softmax.
+
+The baseline :mod:`attention` kernel keeps each head's whole K/V resident
+in VMEM — right for the zoo's seq≤128, but it stops scaling when
+`seq × head_dim` outgrows the scratchpad. This variant implements the
+long-sequence regime the paper's GPU kernels handle with FlashAttention:
+the grid adds a K/V-block dimension and the kernel maintains the online
+softmax state (running max `m`, normalizer `l`, unnormalized accumulator
+`acc`) across K/V steps, so VMEM residency is O(block_q·d + block_k·d)
+instead of O(seq·d).
+
+TPU re-think of the CUDA original: the accumulator lives in a VMEM
+scratch ref carried across the innermost grid dimension (Pallas
+"multiple-step" dimension semantics) rather than in per-warp registers;
+block shapes stay MXU-aligned. Numerics are pinned to the same oracle as
+the resident kernel (`ref.attention_ref`) by the hypothesis sweep.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, causal: bool, block_q: int, block_k: int, n_kv: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    # Reset the online-softmax state at the first K/V block.
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]  # (block_q, d)
+    k = k_ref[0]  # (block_k, d)
+    v = v_ref[0]  # (block_k, d)
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+        cols = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+        scores = jnp.where(rows >= cols, scores, jnp.float32(-1e30))
+
+    # Online softmax update (Milakov–Gimelshein / FlashAttention).
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+    correction = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)
+    l_ref[...] = l_ref[...] * correction + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * correction + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    # Final K/V block: normalize and emit the output tile.
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = False,
+    block_q: int = 4 * common.SUBLANE,
+    block_k: int = common.LANE,
+) -> jax.Array:
+    """Streaming SDPA over (heads, seq, head_dim); same math as
+    :func:`..attention.attention`, O(block) VMEM residency."""
+    h, s, d = q.shape
+    assert k.shape == (h, s, d) and v.shape == (h, s, d)
+    bq = common.pick_block(s, block_q)
+    bk = common.pick_block(s, block_k)
+    n_kv = s // bk
+    scale = 1.0 / (d ** 0.5)
+    return pl.pallas_call(
+        functools.partial(
+            _kernel,
+            scale=scale, causal=causal, block_q=bq, block_k=bk, n_kv=n_kv,
+        ),
+        grid=(h, s // bq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda hi, qi, ki: (hi, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda hi, qi, ki: (hi, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda hi, qi, ki: (hi, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda hi, qi, ki: (hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu_scratch((bq, 1), jnp.float32),  # running max m
+            pltpu_scratch((bq, 1), jnp.float32),  # normalizer l
+            pltpu_scratch((bq, d), jnp.float32),  # accumulator
+        ],
+        interpret=common.INTERPRET,
+    )(q, k, v)
+
+
+def pltpu_scratch(shape, dtype):
+    """VMEM scratch allocation (interpret-mode compatible)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,103 @@
+"""Fused linear Pallas kernel: ``act(x @ w + b)`` in one VMEM-resident pass.
+
+This is the zoo's workhorse hot-spot (MLP blocks, attention projections,
+classifier heads, DLRM towers). Fusing bias-add and activation into the
+matmul epilogue removes two full HBM round-trips of the (M, N) output —
+the same fusion TorchInductor performs with Triton epilogues (paper §3.2);
+here it is expressed as a Pallas BlockSpec schedule.
+
+Tiling: grid over (M/bm, N/bn); each grid step loads an (bm, K) strip of
+``x`` and a (K, bn) strip of ``w``, accumulates in f32 on the MXU, applies
+bias + activation in-register, and writes the (bm, bn) tile once. K is
+kept whole per step (zoo K ≤ 1024 ⇒ strips fit VMEM comfortably); see
+common.estimate_vmem_bytes for the footprint check.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+from .ref import apply_activation
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str):
+    x = x_ref[...]
+    w = w_ref[...]
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...].astype(jnp.float32)
+    o_ref[...] = apply_activation(acc, activation).astype(o_ref.dtype)
+
+
+def fused_linear(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    activation: str = "none",
+    block_m: int = 4 * common.SUBLANE,
+    block_n: int = common.LANE,
+) -> jax.Array:
+    """``act(x @ w + b)`` with x:(M,K), w:(K,N), b:(N,) → (M,N)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims disagree: {k} vs {k2}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+    bm = common.pick_block(m, block_m)
+    bn = common.pick_block(n, block_n)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_kernel, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=common.INTERPRET,
+    )(x, w, b)
+
+
+def _dequant_kernel(x_ref, wq_ref, scale_ref, b_ref, o_ref):
+    # Dequantize the weight tile in VMEM (int8 → f32 × per-channel scale)
+    # so HBM traffic for weights is 4× smaller than an f32 matmul — the
+    # quantized-model path exercised by the ``*_quant`` zoo variants.
+    w = wq_ref[...].astype(jnp.float32) * scale_ref[...].astype(jnp.float32)
+    acc = jnp.dot(x_ref[...].astype(jnp.float32), w)
+    o_ref[...] = (acc + b_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def dequant_linear(
+    x: jax.Array,
+    w_q: jax.Array,
+    scale: jax.Array,
+    b: jax.Array,
+    block_m: int = 4 * common.SUBLANE,
+    block_n: int = common.LANE,
+) -> jax.Array:
+    """``x @ (w_q * scale) + b`` with int8 weights and per-output-channel
+    f32 scales. x:(M,K), w_q:(K,N) int8, scale:(N,), b:(N,) → (M,N)."""
+    m, k = x.shape
+    k2, n = w_q.shape
+    assert k == k2 and scale.shape == (n,) and b.shape == (n,)
+    bm = common.pick_block(m, block_m)
+    bn = common.pick_block(n, block_n)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=common.INTERPRET,
+    )(x, w_q, scale, b)

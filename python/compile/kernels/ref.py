@@ -1,0 +1,107 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the CORE correctness signal of layer 1: each Pallas kernel must
+match its oracle to float tolerance across the shape/dtype sweep in
+``python/tests/test_kernels.py`` (hypothesis drives the sweep). The oracles
+are deliberately written in the most literal jnp form — no tiling, no
+tricks — so a mismatch always implicates the kernel, not the reference.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Activations (shared by kernel and oracle so the *math* is identical and
+# only the tiling/memory schedule differs).
+# ---------------------------------------------------------------------------
+
+
+def apply_activation(x: jax.Array, activation: str) -> jax.Array:
+    """Apply one of the supported activations. ``none`` is identity."""
+    if activation == "none":
+        return x
+    if activation == "relu":
+        return jnp.maximum(x, 0.0)
+    if activation == "gelu":
+        # tanh-approximated GELU — same formula the Pallas kernel uses.
+        c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+        return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+    if activation == "tanh":
+        return jnp.tanh(x)
+    if activation == "sigmoid":
+        return jax.nn.sigmoid(x)
+    raise ValueError(f"unknown activation: {activation!r}")
+
+
+# ---------------------------------------------------------------------------
+# Oracles
+# ---------------------------------------------------------------------------
+
+
+def fused_linear_ref(
+    x: jax.Array, w: jax.Array, b: jax.Array, activation: str = "none"
+) -> jax.Array:
+    """``act(x @ w + b)`` — oracle for kernels.fused_linear."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b.astype(jnp.float32)
+    return apply_activation(y, activation).astype(x.dtype)
+
+
+def dequant_linear_ref(
+    x: jax.Array, w_q: jax.Array, scale: jax.Array, b: jax.Array
+) -> jax.Array:
+    """``x @ (w_q * scale) + b`` with int8 ``w_q`` — oracle for the
+    weight-dequantizing matmul used by the ``*_quant`` model variants."""
+    w = w_q.astype(jnp.float32) * scale.astype(jnp.float32)
+    return (jnp.dot(x.astype(jnp.float32), w) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_ref(
+    x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5
+) -> jax.Array:
+    """LayerNorm over the last axis — oracle for kernels.layernorm."""
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+def attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = False
+) -> jax.Array:
+    """Scaled dot-product attention — oracle for kernels.attention.
+
+    Shapes are ``(heads, seq, head_dim)``; softmax in f32 for stability,
+    matching the kernel's accumulate-in-f32 policy.
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    scores = jnp.einsum(
+        "hqd,hkd->hqk", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    if causal:
+        s = q.shape[-2]
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask, scores, jnp.float32(-1e30))
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hqk,hkd->hqd", p.astype(v.dtype), v)
+    return out.astype(q.dtype)
+
+
+def embedding_bag_ref(table: jax.Array, indices: jax.Array) -> jax.Array:
+    """Sum-pooled embedding lookup — oracle for kernels.embedding_bag.
+
+    ``table``: (vocab, dim); ``indices``: (bags, bag_len) int32.
+    Returns (bags, dim): sum of the looked-up rows per bag.
+    """
+    gathered = table[indices]  # (bags, bag_len, dim)
+    return jnp.sum(gathered.astype(jnp.float32), axis=1).astype(table.dtype)
+
+
+def softmax_xent_ref(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean softmax cross-entropy — oracle for the loss used in train steps."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - picked)

@@ -1,0 +1,126 @@
+"""Differentiable wrappers: Pallas forward, oracle-VJP backward.
+
+Interpret-mode ``pallas_call`` does not support reverse-mode autodiff, so
+the zoo's training graphs cannot call the raw kernels under ``jax.grad``.
+Each wrapper here pairs the Pallas kernel (forward) with the VJP of its
+pure-jnp oracle (backward) via ``jax.custom_vjp``. Because the kernel
+conformance sweep (test_kernels.py) pins forward == oracle to float
+tolerance, the pairing is mathematically consistent: the backward is the
+exact adjoint of a function numerically indistinguishable from the
+forward.
+
+The residuals saved for the backward are the primal *inputs* (recompute-
+in-backward policy). That matches how a production TPU kernel would be
+wired — fwd kernel + a hand-written bwd kernel over the same operands —
+and keeps the AOT-lowered training HLO free of interpreter-only ops.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+
+from . import ref
+from .attention import attention as _attention_kernel
+from .embedding_bag import embedding_bag as _embedding_bag_kernel
+from .fused_linear import dequant_linear as _dequant_kernel
+from .fused_linear import fused_linear as _fused_linear_kernel
+from .layernorm import layernorm as _layernorm_kernel
+
+
+def _pair(kernel: Callable, oracle: Callable, n_diff: int) -> Callable:
+    """Build a custom-vjp function: ``kernel`` forward, ``oracle`` adjoint.
+
+    ``n_diff`` leading positional args are differentiable; anything after
+    is static configuration (activation name, causal flag) and must be
+    passed by keyword through the returned wrapper's closure.
+    """
+
+    @jax.custom_vjp
+    def fn(*args):
+        return kernel(*args)
+
+    def fwd(*args):
+        return kernel(*args), args
+
+    def bwd(args, g):
+        _, vjp = jax.vjp(lambda *diff: oracle(*diff, *args[n_diff:]), *args[:n_diff])
+        grads = vjp(g)
+        return grads + (None,) * (len(args) - n_diff)
+
+    fn.defvjp(fwd, bwd)
+    return fn
+
+
+_layernorm_vjp = _pair(_layernorm_kernel, ref.layernorm_ref, n_diff=3)
+
+
+@functools.lru_cache(maxsize=None)
+def _closed_fused(activation: str):
+    # Static activation must not be a vjp positional arg; close over it.
+    kernel = lambda x, w, b: _fused_linear_kernel(x, w, b, activation)
+    oracle = lambda x, w, b: ref.fused_linear_ref(x, w, b, activation)
+    return _pair(kernel, oracle, n_diff=3)
+
+
+def fused_linear(x, w, b, activation: str = "none"):
+    """Differentiable ``act(x @ w + b)`` (Pallas fwd / oracle bwd)."""
+    return _closed_fused(activation)(x, w, b)
+
+
+def layernorm(x, gamma, beta):
+    """Differentiable LayerNorm (Pallas fwd / oracle bwd)."""
+    return _layernorm_vjp(x, gamma, beta)
+
+
+@functools.lru_cache(maxsize=None)
+def _closed_attention(causal: bool):
+    kernel = lambda q, k, v: _attention_kernel(q, k, v, causal=causal)
+    oracle = lambda q, k, v: ref.attention_ref(q, k, v, causal=causal)
+    return _pair(kernel, oracle, n_diff=3)
+
+
+def attention(q, k, v, causal: bool = False):
+    """Differentiable SDPA (Pallas fwd / oracle bwd)."""
+    return _closed_attention(causal)(q, k, v)
+
+
+@jax.custom_vjp
+def embedding_bag(table, indices):
+    """Differentiable sum-pooled embedding lookup (grad wrt table only)."""
+    return _embedding_bag_kernel(table, indices)
+
+
+def _eb_fwd(table, indices):
+    return _embedding_bag_kernel(table, indices), (table, indices)
+
+
+def _eb_bwd(res, g):
+    table, indices = res
+    _, vjp = jax.vjp(lambda t: ref.embedding_bag_ref(t, indices), table)
+    return vjp(g) + (None,)
+
+
+embedding_bag.defvjp(_eb_fwd, _eb_bwd)
+
+
+def dequant_linear(x, w_q, scale, b):
+    """Differentiable dequant matmul: grads flow to x and b only (int8
+    weights and scales are frozen, as in QAT-exported inference graphs)."""
+
+    @jax.custom_vjp
+    def fn(x, b):
+        return _dequant_kernel(x, w_q, scale, b)
+
+    def fwd(x, b):
+        return fn(x, b), (x, b)
+
+    def bwd(res, g):
+        xs, bs = res
+        _, vjp = jax.vjp(lambda x, b: ref.dequant_linear_ref(x, w_q, scale, b), xs, bs)
+        return vjp(g)
+
+    fn.defvjp(fwd, bwd)
+    return fn(x, b)

@@ -1,0 +1,17 @@
+"""Layer-2 model zoo: JAX graphs AOT-lowered to HLO artifacts.
+
+See :mod:`zoo` for the registry and DESIGN.md for the paper mapping.
+"""
+
+from .base import Model, Sequential
+from .zoo import REGISTRY, SWEEP_BATCHES, all_names, build, tags
+
+__all__ = [
+    "Model",
+    "Sequential",
+    "REGISTRY",
+    "SWEEP_BATCHES",
+    "all_names",
+    "build",
+    "tags",
+]

@@ -1,0 +1,180 @@
+"""Model protocol for the XBench zoo + Sequential composition.
+
+Every zoo entry is a :class:`Model`: flat numpy parameter list (seeded,
+reproducible — dumped to artifacts so the rust runtime replays identical
+state), a jax ``forward``, an optional ``loss`` (presence ⇒ the model has
+a train-mode benchmark), runtime :class:`InputSpec`s, and an optional
+staged decomposition for the eager executor.
+
+The generic train step (fwd + loss + grad + SGD) lives here so every
+model's training artifact has the same calling convention:
+``(param_0..param_{P-1}, *batch) -> (new_param_0..new_param_{P-1}, loss)``
+— the rust train loop threads the returned params back in as the next
+iteration's inputs (donated-buffer style).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import InputSpec, Layer, Stage
+
+
+class Model:
+    """Base: subclasses set name/domain/task and implement the protocol."""
+
+    name: str = "model"
+    domain: str = "other"
+    task: str = "-"
+    default_batch: int = 4
+    lr: float = 1e-3
+
+    def init(self, seed: int) -> list[np.ndarray]:
+        raise NotImplementedError
+
+    def forward(self, params: Sequence[jax.Array], *inputs: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    # loss is optional: models without it are inference-only benchmarks.
+    loss: Optional[Callable] = None
+
+    def input_specs(self, batch: int) -> list[InputSpec]:
+        raise NotImplementedError
+
+    def target_specs(self, batch: int) -> list[InputSpec]:
+        """Extra train-batch inputs (labels/targets). Default: none."""
+        return []
+
+    def stages(self) -> Optional[list[Stage]]:
+        """Eager-mode decomposition; None ⇒ fused-only model."""
+        return None
+
+    # -- derived -----------------------------------------------------------
+
+    def train_step(self, params: Sequence[jax.Array], *batch: jax.Array):
+        """One SGD step. Returns (*new_params, loss)."""
+        assert self.loss is not None, f"{self.name} is inference-only"
+
+        def scalar_loss(ps):
+            return self.loss(ps, *batch)
+
+        loss, grads = jax.value_and_grad(scalar_loss)(list(params))
+        new = [
+            p - self.lr * g if jnp.issubdtype(p.dtype, jnp.floating) else p
+            for p, g in zip(params, grads)
+        ]
+        return (*new, loss)
+
+
+class Sequential(Model):
+    """A layer pipeline; derives init/forward/stages from the layer list.
+
+    ``stage_groups`` optionally names coarser eager-dispatch units (list of
+    (group_name, n_layers)); default is one stage per layer, mirroring
+    op-at-a-time eager execution.
+    """
+
+    def __init__(
+        self,
+        name: str,
+        domain: str,
+        task: str,
+        layers: list[Layer],
+        in_specs: Callable[[int], list[InputSpec]],
+        default_batch: int = 4,
+        loss_kind: Optional[str] = None,  # xent | mse | None
+        n_classes: int = 0,
+        lr: float = 1e-3,
+        stageable: bool = True,
+    ) -> None:
+        self.name, self.domain, self.task = name, domain, task
+        self.layers = layers
+        self._in_specs = in_specs
+        self.default_batch = default_batch
+        self.loss_kind = loss_kind
+        self.n_classes = n_classes
+        self.lr = lr
+        self.stageable = stageable
+        self._layer_param_counts: list[int] | None = None
+        if loss_kind is None:
+            self.loss = None
+        elif loss_kind == "xent":
+            self.loss = self._xent_loss
+        elif loss_kind == "mse":
+            self.loss = self._mse_loss
+        else:
+            raise ValueError(f"unknown loss kind {loss_kind!r}")
+
+    # -- protocol ----------------------------------------------------------
+
+    def init(self, seed: int) -> list[np.ndarray]:
+        rng = np.random.default_rng(seed)
+        spec = self._in_specs(self.default_batch)[0]
+        shape = tuple(spec.shape)
+        params: list[np.ndarray] = []
+        counts: list[int] = []
+        for layer in self.layers:
+            p, shape = layer.init(rng, shape)
+            params.extend(p)
+            counts.append(len(p))
+        self._layer_param_counts = counts
+        return params
+
+    def _ensure_counts(self):
+        if self._layer_param_counts is None:
+            self.init(0)
+        return self._layer_param_counts
+
+    def forward(self, params, *inputs):
+        counts = self._ensure_counts()
+        x, off = inputs[0], 0
+        for layer, n in zip(self.layers, counts):
+            x = layer.apply(list(params[off : off + n]), x)
+            off += n
+        return x
+
+    def input_specs(self, batch: int) -> list[InputSpec]:
+        return self._in_specs(batch)
+
+    def target_specs(self, batch: int) -> list[InputSpec]:
+        if self.loss_kind == "xent":
+            return [InputSpec("labels", (batch,), "i32", "randint", self.n_classes)]
+        if self.loss_kind == "mse":
+            out = jax.eval_shape(
+                lambda p, x: self.forward(p, x),
+                [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in self.init(0)],
+                jax.ShapeDtypeStruct(tuple(self._in_specs(batch)[0].shape), jnp.float32),
+            )
+            return [InputSpec("target", tuple(out.shape), "f32", "normal")]
+        return []
+
+    def stages(self) -> Optional[list[Stage]]:
+        if not self.stageable:
+            return None
+        counts = self._ensure_counts()
+        stages, off = [], 0
+        for i, (layer, n) in enumerate(zip(self.layers, counts)):
+            idx = tuple(range(off, off + n))
+
+            def apply(ps, *acts, _layer=layer):
+                return _layer.apply(list(ps), acts[0])
+
+            stages.append(Stage(f"{i:02d}_{layer.name}", idx, apply))
+            off += n
+        return stages
+
+    # -- losses ------------------------------------------------------------
+
+    def _xent_loss(self, params, x, labels):
+        logits = self.forward(params, x).astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        return jnp.mean(logz - picked)
+
+    def _mse_loss(self, params, x, target):
+        out = self.forward(params, x)
+        return jnp.mean(jnp.square(out.astype(jnp.float32) - target.astype(jnp.float32)))

@@ -1,0 +1,257 @@
+"""Computer-vision zoo entries (paper Table 1, Computer Vision rows).
+
+Tiny-but-faithful analogues: each keeps the operator character of its
+namesake (residual convs, dense VGG stacks, depthwise-separable blocks,
+transposed-conv generators, encoder-decoder skips) at CPU-friendly sizes.
+BatchNorm is omitted (stateful running stats don't fit the stateless
+AOT calling convention); LayerNorm over channels stands in where the
+original normalizes — documented in DESIGN.md substitutions.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from .base import Model, Sequential
+from .layers import InputSpec, Layer
+
+
+def _image_specs(h: int = 32, w: int = 32, c: int = 3):
+    def specs(batch: int) -> list[InputSpec]:
+        return [InputSpec("image", (batch, h, w, c))]
+
+    return specs
+
+
+def _reshape_to(shape_fn, name: str = "reshape") -> Layer:
+    """Parameter-free reshape; ``shape_fn(in_shape) -> out_shape``."""
+
+    def init(rng, in_shape):
+        return [], shape_fn(in_shape)
+
+    def apply(params, x):
+        out = shape_fn(x.shape)
+        return x.reshape(out)
+
+    return Layer(name, init, apply)
+
+
+def resnet_tiny() -> Sequential:
+    """ResNet-style: 3 stages of residual conv pairs (cf. resnet18/50)."""
+
+    def res_block(ch: int) -> Layer:
+        return L.residual(
+            [L.conv2d(ch, 3, 1, "relu", name="rconv1"), L.conv2d(ch, 3, 1, name="rconv2")],
+            name=f"res{ch}",
+        )
+
+    lys = [
+        L.conv2d(16, 3, 1, "relu", name="stem"),
+        res_block(16), res_block(16),
+        L.conv2d(32, 3, 2, "relu", name="down1"),
+        res_block(32), res_block(32),
+        L.conv2d(64, 3, 2, "relu", name="down2"),
+        res_block(64),
+        L.global_avg_pool(),
+        L.dense(10, name="head"),
+    ]
+    return Sequential(
+        "resnet_tiny", "computer_vision", "classification", lys,
+        # lr: un-normalized residual stacks explode above ~1e-3 (no
+        # BatchNorm in the zoo — see DESIGN.md substitutions).
+        _image_specs(), default_batch=4, loss_kind="xent", n_classes=10, lr=1e-3,
+    )
+
+
+def vgg_tiny() -> Sequential:
+    """VGG-style dense conv stacks + big linear head (cf. vgg16)."""
+    lys = [
+        L.conv2d(32, 3, 1, "relu", name="c1a"), L.conv2d(32, 3, 1, "relu", name="c1b"),
+        L.max_pool(2),
+        L.conv2d(64, 3, 1, "relu", name="c2a"), L.conv2d(64, 3, 1, "relu", name="c2b"),
+        L.max_pool(2),
+        L.conv2d(128, 3, 1, "relu", name="c3a"),
+        L.max_pool(2),
+        L.flatten(),
+        L.dense(256, "relu", name="fc1"),
+        L.dense(10, name="head"),
+    ]
+    return Sequential(
+        "vgg_tiny", "computer_vision", "classification", lys,
+        _image_specs(), default_batch=4, loss_kind="xent", n_classes=10, lr=1e-2,
+    )
+
+
+def mobilenet_tiny() -> Sequential:
+    """Depthwise-separable inverted-bottleneck blocks (cf. mobilenet_v2)."""
+
+    def sep_block(ch: int, expand: int = 2) -> list[Layer]:
+        e = ch * expand
+        return [
+            L.conv2d(e, 1, 1, "relu", name=f"expand{ch}"),
+            L.conv2d(e, 3, 1, "relu", groups=e, name=f"dw{ch}"),
+            L.conv2d(ch, 1, 1, name=f"project{ch}"),
+        ]
+
+    lys = [
+        L.conv2d(16, 3, 2, "relu", name="stem"),
+        *sep_block(16), *sep_block(16),
+        L.conv2d(32, 1, 1, "relu", name="widen"),
+        *sep_block(32),
+        L.global_avg_pool(),
+        L.dense(10, name="head"),
+    ]
+    return Sequential(
+        "mobilenet_tiny", "computer_vision", "classification", lys,
+        _image_specs(), default_batch=4, loss_kind="xent", n_classes=10, lr=1e-2,
+    )
+
+
+def dcgan_gen() -> Sequential:
+    """DCGAN generator: latent → transposed-conv upsampling (cf. dcgan)."""
+    lys = [
+        L.dense(4 * 4 * 64, "relu", name="project"),
+        _reshape_to(lambda s: (s[0], 4, 4, 64)),
+        L.conv2d_transpose(32, 4, 2, "relu", name="up1"),
+        L.conv2d_transpose(16, 4, 2, "relu", name="up2"),
+        L.conv2d_transpose(3, 4, 2, "tanh", name="to_rgb"),
+    ]
+
+    def specs(batch: int):
+        return [InputSpec("latent", (batch, 64))]
+
+    return Sequential(
+        "dcgan_gen", "computer_vision", "image_generation", lys,
+        specs, default_batch=8, loss_kind="mse", lr=1e-3,
+    )
+
+
+def alexnet_tiny() -> Sequential:
+    """Early-CNN shape: big strided stem + wide dense head (cf. alexnet)."""
+    lys = [
+        L.conv2d(32, 5, 2, "relu", name="stem"),
+        L.max_pool(2),
+        L.conv2d(64, 3, 1, "relu", name="c2"),
+        L.max_pool(2),
+        L.conv2d(96, 3, 1, "relu", name="c3"),
+        L.conv2d(64, 3, 1, "relu", name="c4"),
+        L.flatten(),
+        L.dense(256, "relu", name="fc1"),
+        L.dense(10, name="head"),
+    ]
+    return Sequential(
+        "alexnet_tiny", "computer_vision", "classification", lys,
+        _image_specs(), default_batch=4, loss_kind="xent", n_classes=10, lr=1e-2,
+    )
+
+
+def vit_tiny() -> Sequential:
+    """Vision transformer (cf. timm_vision_transformer): 4x4 patches →
+    transformer encoder → mean-pool head. CV domain but *dot*-heavy —
+    the case that separates domain from operator class in Fig 5."""
+    patch, d = 4, 128
+    n_patches = (32 // patch) ** 2
+
+    def patchify(s):
+        # (n, 32, 32, 3) -> (n, 64, 48): non-overlapping 4x4 patches.
+        n = s[0]
+        return (n, n_patches, patch * patch * 3)
+
+    lys = [
+        # Rearrangement is shape-only at these sizes: unfold via reshape
+        # of row-major blocks (exactness vs conv-patchify is irrelevant —
+        # a linear layer follows immediately).
+        _reshape_to(patchify, name="patchify"),
+        _reshape_to(lambda s: (s[0] * s[1], s[2]), name="fold_patches"),
+        L.dense(d, name="embed"),
+        _reshape_to(lambda s: (-1, n_patches, d), name="unfold_patches"),
+        L.positional_embedding(n_patches),
+        L.transformer_block(d, 4, name="block0"),
+        L.transformer_block(d, 4, name="block1"),
+        L.layer_norm(name="final_ln"),
+        _reshape_to(lambda s: (s[0], s[1] * s[2]), name="fold_tokens"),
+        L.dense(10, name="head"),
+    ]
+    return Sequential(
+        "vit_tiny", "computer_vision", "classification", lys,
+        _image_specs(), default_batch=4, loss_kind="xent", n_classes=10, lr=1e-2,
+    )
+
+
+class UNetTiny(Model):
+    """Encoder-decoder with skip concatenation (cf. pytorch_unet).
+
+    Non-sequential (skips span the bottleneck) ⇒ fused-only: no staged
+    eager artifacts, like several paper models that resist op-slicing.
+    """
+
+    name = "unet_tiny"
+    domain = "computer_vision"
+    task = "segmentation"
+    default_batch = 2
+    lr = 1e-3
+
+    CH = (16, 32, 64)
+
+    def init(self, seed: int) -> list[np.ndarray]:
+        rng = np.random.default_rng(seed)
+
+        def conv(cin, cout, k=3):
+            w = (rng.standard_normal((k, k, cin, cout)) * math.sqrt(2 / (k * k * cin))).astype(np.float32)
+            return [w, np.zeros((cout,), np.float32)]
+
+        c1, c2, c3 = self.CH
+        params: list[np.ndarray] = []
+        params += conv(3, c1) + conv(c1, c1)        # enc1
+        params += conv(c1, c2) + conv(c2, c2)       # enc2
+        params += conv(c2, c3) + conv(c3, c3)       # bottleneck
+        params += conv(c3 + c2, c2) + conv(c2, c2)  # dec2 (after skip concat)
+        params += conv(c2 + c1, c1) + conv(c1, c1)  # dec1
+        params += conv(c1, 2, 1)                    # head: 2-class mask
+        return params
+
+    @staticmethod
+    def _conv(x, w, b, act="relu"):
+        y = jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        ) + b
+        return jnp.maximum(y, 0.0) if act == "relu" else y
+
+    @staticmethod
+    def _pool(x):
+        return jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        )
+
+    @staticmethod
+    def _upsample(x):
+        n, h, w, c = x.shape
+        return jax.image.resize(x, (n, h * 2, w * 2, c), "nearest")
+
+    def forward(self, p: Sequence[jax.Array], x: jax.Array) -> jax.Array:
+        e1 = self._conv(self._conv(x, p[0], p[1]), p[2], p[3])
+        e2 = self._conv(self._conv(self._pool(e1), p[4], p[5]), p[6], p[7])
+        bott = self._conv(self._conv(self._pool(e2), p[8], p[9]), p[10], p[11])
+        d2 = jnp.concatenate([self._upsample(bott), e2], axis=-1)
+        d2 = self._conv(self._conv(d2, p[12], p[13]), p[14], p[15])
+        d1 = jnp.concatenate([self._upsample(d2), e1], axis=-1)
+        d1 = self._conv(self._conv(d1, p[16], p[17]), p[18], p[19])
+        return self._conv(d1, p[20], p[21], act="none")  # (n, 32, 32, 2) logits
+
+    def loss(self, params, x, mask):
+        logits = self.forward(params, x).astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, mask[..., None], axis=-1)[..., 0]
+        return jnp.mean(logz - picked)
+
+    def input_specs(self, batch: int):
+        return [InputSpec("image", (batch, 32, 32, 3))]
+
+    def target_specs(self, batch: int):
+        return [InputSpec("mask", (batch, 32, 32), "i32", "randint", 2)]

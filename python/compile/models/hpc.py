@@ -1,0 +1,102 @@
+"""HPC / "other" zoo entry (paper Table 1, Other rows).
+
+``pyhpc_eos`` mirrors pyhpc_equation_of_state: a parameter-free,
+purely-elementwise polynomial over three ocean-state fields. Zero matmul
+FLOPs ⇒ it is the suite's bandwidth-bound extreme, the case where the
+paper's Fig 5 analysis predicts the FP32-rate (not TF32-rate) device
+wins. Inference-only, like the original benchmark.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .base import Model
+from .layers import InputSpec, Stage
+
+
+class PyhpcEos(Model):
+    """Simplified seawater equation of state (density from S, T, p)."""
+
+    name = "pyhpc_eos"
+    domain = "other"
+    task = "hpc_stencil"
+    default_batch = 1
+
+    NZ, NY, NX = 16, 32, 32
+
+    def init(self, seed: int) -> list[np.ndarray]:
+        return []  # parameter-free, like the original
+
+    def forward(self, p: Sequence[jax.Array], salt, temp, pres):
+        """Polynomial EOS (UNESCO-style truncation): density anomaly."""
+        t, s = temp, salt
+        t2, t3 = t * t, t * t * t
+        s15 = s * jnp.sqrt(jnp.abs(s) + 1e-6)
+        rho0 = (
+            999.842594 + 6.793952e-2 * t - 9.095290e-3 * t2 + 1.001685e-4 * t3
+            + (0.824493 - 4.0899e-3 * t + 7.6438e-5 * t2) * s
+            + (-5.72466e-3 + 1.0227e-4 * t) * s15
+            + 4.8314e-4 * s * s
+        )
+        k = (
+            19652.21 + 148.4206 * t - 2.327105 * t2 + 1.360477e-2 * t3
+            + (54.6746 - 0.603459 * t + 1.09987e-2 * t2) * s
+            + 7.944e-2 * s15
+            + pres * (3.239908 + 1.43713e-3 * t + 1.16092e-4 * t2)
+        )
+        return rho0 / (1.0 - pres / k)
+
+    loss = None  # inference-only benchmark
+
+    def input_specs(self, batch: int):
+        shape = (batch, self.NZ, self.NY, self.NX)
+        return [
+            InputSpec("salinity", shape, "f32", "uniform"),
+            InputSpec("temperature", shape, "f32", "uniform"),
+            InputSpec("pressure", shape, "f32", "uniform"),
+        ]
+
+    def stages(self):
+        """Eager split along the physical terms — many tiny elementwise
+        dispatches, the regime where eager launch overhead dominates."""
+
+        def rho0(ps, salt, temp, pres):
+            t, s = temp, salt
+            t2, t3 = t * t, t * t * t
+            s15 = s * jnp.sqrt(jnp.abs(s) + 1e-6)
+            r = (
+                999.842594 + 6.793952e-2 * t - 9.095290e-3 * t2 + 1.001685e-4 * t3
+                + (0.824493 - 4.0899e-3 * t + 7.6438e-5 * t2) * s
+                + (-5.72466e-3 + 1.0227e-4 * t) * s15
+                + 4.8314e-4 * s * s
+            )
+            # Pack (rho0, t, s, pres) along a new leading axis so later
+            # stages stay single-activation.
+            return jnp.stack([r, t, s, pres])
+
+        def bulk(ps, packed):
+            r, t, s, pres = packed[0], packed[1], packed[2], packed[3]
+            t2, t3 = t * t, t * t * t
+            s15 = s * jnp.sqrt(jnp.abs(s) + 1e-6)
+            k = (
+                19652.21 + 148.4206 * t - 2.327105 * t2 + 1.360477e-2 * t3
+                + (54.6746 - 0.603459 * t + 1.09987e-2 * t2) * s
+                + 7.944e-2 * s15
+                + pres * (3.239908 + 1.43713e-3 * t + 1.16092e-4 * t2)
+            )
+            return jnp.stack([r, k, pres])
+
+        def combine(ps, packed):
+            r, k, pres = packed[0], packed[1], packed[2]
+            return r / (1.0 - pres / k)
+
+        return [
+            Stage("00_rho0", (), rho0),
+            Stage("01_bulk", (), bulk),
+            Stage("02_combine", (), combine),
+        ]

@@ -1,0 +1,337 @@
+"""Layer combinators for the XBench model zoo.
+
+A tiny stax-like library: each :class:`Layer` owns its parameter slice and
+knows how to initialize (numpy, seeded — the initial values are dumped to
+``artifacts/params`` so the rust runtime replays bit-identical state) and
+apply itself. :class:`Sequential` composes layers into a :class:`Model`
+and derives the *staged* decomposition used by the eager executor (one
+AOT artifact per stage ⇒ per-op dispatch, the paper's eager-mode
+analogue). Hot-spots (Dense, LayerNorm, Attention, EmbeddingBag) call the
+differentiable Pallas wrappers from ``kernels.vjp`` so both inference and
+training HLO contain the L1 kernels.
+
+Convolutions use ``lax.conv_general_dilated`` (NHWC/HWIO): conv is not an
+XBench L1 hot-spot (the paper's conv models lean on cuDNN, which maps to
+XLA's native conv here — see DESIGN.md substitution table).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import vjp
+from ..kernels.ref import apply_activation
+
+
+# ---------------------------------------------------------------------------
+# Specs shared with the AOT manifest (mirrored by rust/src/runtime).
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class InputSpec:
+    """How the rust runtime synthesizes one runtime input tensor."""
+
+    name: str
+    shape: tuple[int, ...]
+    dtype: str = "f32"  # f32 | i32
+    kind: str = "normal"  # normal | randint | uniform
+    bound: int = 0  # exclusive upper bound for randint
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "shape": list(self.shape),
+            "dtype": self.dtype,
+            "kind": self.kind,
+            "bound": self.bound,
+        }
+
+
+@dataclass(frozen=True)
+class Stage:
+    """One eager-mode dispatch unit: ``apply(params_subset, *acts) -> act``.
+
+    ``param_idx`` indexes the model's flat parameter list. The first stage
+    receives the model's runtime inputs; later stages receive exactly the
+    previous stage's activation.
+    """
+
+    name: str
+    param_idx: tuple[int, ...]
+    apply: Callable
+
+
+# ---------------------------------------------------------------------------
+# Layers
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Layer:
+    """A parameterized transform: init -> (params, out_shape); apply."""
+
+    name: str
+    init: Callable[[np.random.Generator, tuple[int, ...]], tuple[list[np.ndarray], tuple[int, ...]]]
+    apply: Callable[[Sequence[jax.Array], jax.Array], jax.Array]
+
+
+def _he(rng: np.random.Generator, shape, fan_in: int) -> np.ndarray:
+    return (rng.standard_normal(shape) * math.sqrt(2.0 / max(fan_in, 1))).astype(np.float32)
+
+
+def dense(out_dim: int, activation: str = "none", name: str = "dense") -> Layer:
+    """Fused linear (Pallas): flattens trailing dims, ``act(x @ w + b)``."""
+
+    def init(rng, in_shape):
+        in_dim = int(np.prod(in_shape[1:]))
+        w = _he(rng, (in_dim, out_dim), in_dim)
+        b = np.zeros((out_dim,), np.float32)
+        return [w, b], (in_shape[0], out_dim)
+
+    def apply(params, x):
+        w, b = params
+        x2 = x.reshape(x.shape[0], -1)
+        return vjp.fused_linear(x2, w, b, activation)
+
+    return Layer(name, init, apply)
+
+
+def dequant_dense(out_dim: int, name: str = "qdense") -> Layer:
+    """Int8-weight dequantizing linear (Pallas) — the ``*_quant`` path."""
+
+    def init(rng, in_shape):
+        in_dim = int(np.prod(in_shape[1:]))
+        w_q = rng.integers(-127, 128, (in_dim, out_dim)).astype(np.int8)
+        scale = (rng.random(out_dim).astype(np.float32) * 0.02 + 0.005)
+        b = np.zeros((out_dim,), np.float32)
+        return [w_q, scale, b], (in_shape[0], out_dim)
+
+    def apply(params, x):
+        w_q, scale, b = params
+        return vjp.dequant_linear(x.reshape(x.shape[0], -1), w_q, scale, b)
+
+    return Layer(name, init, apply)
+
+
+def layer_norm(name: str = "ln") -> Layer:
+    """Pallas LayerNorm over the last axis (any leading rank)."""
+
+    def init(rng, in_shape):
+        d = in_shape[-1]
+        return [np.ones((d,), np.float32), np.zeros((d,), np.float32)], in_shape
+
+    def apply(params, x):
+        g, b = params
+        y = vjp.layernorm(x.reshape(-1, x.shape[-1]), g, b)
+        return y.reshape(x.shape)
+
+    return Layer(name, init, apply)
+
+
+def activation(kind: str) -> Layer:
+    """Parameter-free pointwise activation."""
+    return Layer(
+        kind,
+        lambda rng, in_shape: ([], in_shape),
+        lambda params, x: apply_activation(x, kind),
+    )
+
+
+def conv2d(
+    out_ch: int, ksize: int = 3, stride: int = 1, activation: str = "none",
+    groups: int = 1, name: str = "conv",
+) -> Layer:
+    """SAME conv (NHWC / HWIO). ``groups=in_ch`` gives depthwise."""
+
+    def init(rng, in_shape):
+        n, h, w, c = in_shape
+        assert c % groups == 0, f"channels {c} not divisible by groups {groups}"
+        k = _he(rng, (ksize, ksize, c // groups, out_ch), ksize * ksize * c // groups)
+        b = np.zeros((out_ch,), np.float32)
+        out = (n, math.ceil(h / stride), math.ceil(w / stride), out_ch)
+        return [k, b], out
+
+    def apply(params, x):
+        k, b = params
+        y = jax.lax.conv_general_dilated(
+            x, k, window_strides=(stride, stride), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=groups,
+        )
+        return apply_activation(y + b, activation)
+
+    return Layer(name, init, apply)
+
+
+def conv2d_transpose(
+    out_ch: int, ksize: int = 4, stride: int = 2, activation: str = "none",
+    name: str = "convT",
+) -> Layer:
+    """SAME transposed conv — the DCGAN upsampling block."""
+
+    def init(rng, in_shape):
+        n, h, w, c = in_shape
+        k = _he(rng, (ksize, ksize, c, out_ch), ksize * ksize * c)
+        b = np.zeros((out_ch,), np.float32)
+        return [k, b], (n, h * stride, w * stride, out_ch)
+
+    def apply(params, x):
+        k, b = params
+        y = jax.lax.conv_transpose(
+            x, k, strides=(stride, stride), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        return apply_activation(y + b, activation)
+
+    return Layer(name, init, apply)
+
+
+def avg_pool(window: int = 2, name: str = "avgpool") -> Layer:
+    def init(rng, in_shape):
+        n, h, w, c = in_shape
+        return [], (n, h // window, w // window, c)
+
+    def apply(params, x):
+        y = jax.lax.reduce_window(
+            x, 0.0, jax.lax.add,
+            (1, window, window, 1), (1, window, window, 1), "VALID",
+        )
+        return y / float(window * window)
+
+    return Layer(name, init, apply)
+
+
+def max_pool(window: int = 2, name: str = "maxpool") -> Layer:
+    def init(rng, in_shape):
+        n, h, w, c = in_shape
+        return [], (n, h // window, w // window, c)
+
+    def apply(params, x):
+        return jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max,
+            (1, window, window, 1), (1, window, window, 1), "VALID",
+        )
+
+    return Layer(name, init, apply)
+
+
+def global_avg_pool(name: str = "gap") -> Layer:
+    def init(rng, in_shape):
+        n, _, _, c = in_shape
+        return [], (n, c)
+
+    return Layer(name, init, lambda params, x: jnp.mean(x, axis=(1, 2)))
+
+
+def flatten(name: str = "flatten") -> Layer:
+    def init(rng, in_shape):
+        return [], (in_shape[0], int(np.prod(in_shape[1:])))
+
+    return Layer(name, init, lambda params, x: x.reshape(x.shape[0], -1))
+
+
+def residual(inner: list[Layer], name: str = "res") -> Layer:
+    """``x + inner(x)`` — inner must preserve shape."""
+
+    def init(rng, in_shape):
+        params, shape = [], in_shape
+        sizes = []
+        for layer in inner:
+            p, shape = layer.init(rng, shape)
+            params.extend(p)
+            sizes.append(len(p))
+        assert shape == in_shape, f"residual inner changed shape {in_shape}->{shape}"
+        init.sizes = sizes  # stash the per-layer split for apply
+        return params, in_shape
+
+    def apply(params, x):
+        y, off = x, 0
+        for layer, n in zip(inner, init.sizes):
+            y = layer.apply(params[off : off + n], y)
+            off += n
+        return x + y
+
+    return Layer(name, init, apply)
+
+
+def transformer_block(
+    d_model: int, heads: int, ff_mult: int = 4, causal: bool = False,
+    name: str = "xformer",
+) -> Layer:
+    """Pre-LN transformer block: LN→MHA(+res), LN→FFN(+res).
+
+    QKV/out projections are Pallas fused-linears; attention and layernorm
+    are the Pallas kernels; all on (batch*seq, d) flattened activations.
+    """
+    assert d_model % heads == 0
+    hd = d_model // heads
+
+    def init(rng, in_shape):
+        n, s, d = in_shape
+        assert d == d_model
+        params = [
+            np.ones((d,), np.float32), np.zeros((d,), np.float32),     # ln1
+            _he(rng, (d, 3 * d), d), np.zeros((3 * d,), np.float32),   # qkv
+            _he(rng, (d, d), d), np.zeros((d,), np.float32),           # out
+            np.ones((d,), np.float32), np.zeros((d,), np.float32),     # ln2
+            _he(rng, (d, ff_mult * d), d), np.zeros((ff_mult * d,), np.float32),
+            _he(rng, (ff_mult * d, d), ff_mult * d), np.zeros((d,), np.float32),
+        ]
+        return params, in_shape
+
+    def apply(params, x):
+        (g1, b1, wqkv, bqkv, wo, bo, g2, b2, w1, bf1, w2, bf2) = params
+        n, s, d = x.shape
+        flat = x.reshape(n * s, d)
+        h1 = vjp.layernorm(flat, g1, b1)
+        qkv = vjp.fused_linear(h1, wqkv, bqkv, "none")  # (n*s, 3d)
+        qkv = qkv.reshape(n, s, 3, heads, hd)
+        # → (3, n*heads, s, hd)
+        qkv = jnp.moveaxis(qkv, 2, 0).transpose(0, 1, 3, 2, 4).reshape(3, n * heads, s, hd)
+        att = vjp.attention(qkv[0], qkv[1], qkv[2], causal=causal)
+        att = att.reshape(n, heads, s, hd).transpose(0, 2, 1, 3).reshape(n * s, d)
+        x = flat + vjp.fused_linear(att, wo, bo, "none")
+        h2 = vjp.layernorm(x, g2, b2)
+        ff = vjp.fused_linear(h2, w1, bf1, "gelu")
+        x = x + vjp.fused_linear(ff, w2, bf2, "none")
+        return x.reshape(n, s, d)
+
+    return Layer(name, init, apply)
+
+
+def embedding(vocab: int, dim: int, name: str = "embed") -> Layer:
+    """Token embedding lookup: (n, s) i32 → (n, s, dim)."""
+
+    def init(rng, in_shape):
+        n, s = in_shape
+        table = (rng.standard_normal((vocab, dim)) * 0.02).astype(np.float32)
+        return [table], (n, s, dim)
+
+    def apply(params, x):
+        (table,) = params
+        return table[x]
+
+    return Layer(name, init, apply)
+
+
+def positional_embedding(max_len: int, name: str = "pos") -> Layer:
+    """Learned positional embedding added to (n, s, d) activations."""
+
+    def init(rng, in_shape):
+        n, s, d = in_shape
+        assert s <= max_len
+        pos = (rng.standard_normal((max_len, d)) * 0.02).astype(np.float32)
+        return [pos], in_shape
+
+    def apply(params, x):
+        (pos,) = params
+        return x + pos[: x.shape[1]][None, :, :]
+
+    return Layer(name, init, apply)

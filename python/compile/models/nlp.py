@@ -1,0 +1,205 @@
+"""NLP zoo entries (paper Table 1, NLP rows).
+
+Transformer language models built from the Pallas hot-spot kernels
+(attention, layernorm, fused linear): a bidirectional encoder (hf_Bert
+analogue), a causal decoder at two sizes (hf_ptg1 / hf_ptg1_large
+analogues), and an encoder-decoder translation model with cross-attention
+(attention_is_all_you_need analogue). Matmul-heavy with large activations
+— the domain the paper measures >80% GPU-active time for in training.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import vjp
+from . import layers as L
+from .base import Model, Sequential
+from .layers import InputSpec
+
+
+class LangModel(Sequential):
+    """Sequential transformer LM: token-level xent over all positions."""
+
+    def __init__(self, *args, vocab: int, **kwargs):
+        super().__init__(*args, loss_kind=None, **kwargs)
+        self.vocab = vocab
+        self.loss = self._lm_loss
+
+    def _lm_loss(self, params, tokens, labels):
+        logits = self.forward(params, tokens).astype(jnp.float32)  # (n, s, V)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        return jnp.mean(logz - picked)
+
+    def target_specs(self, batch: int):
+        seq = self._in_specs(batch)[0].shape[1]
+        return [InputSpec("labels", (batch, seq), "i32", "randint", self.vocab)]
+
+
+def _token_specs(seq: int, vocab: int):
+    def specs(batch: int):
+        return [InputSpec("tokens", (batch, seq), "i32", "randint", vocab)]
+
+    return specs
+
+
+def _lm(name: str, *, d: int, heads: int, n_layers: int, seq: int, vocab: int,
+        causal: bool, batch: int, task: str) -> LangModel:
+    lys = [
+        L.embedding(vocab, d),
+        L.positional_embedding(seq),
+        *[L.transformer_block(d, heads, causal=causal, name=f"block{i}")
+          for i in range(n_layers)],
+        L.layer_norm(name="final_ln"),
+        L.dense(vocab, name="lm_head"),
+    ]
+    # dense() flattens trailing dims — reshape around the head instead.
+    head = lys.pop()
+    from .cv import _reshape_to
+
+    s_holder = seq
+    lys.append(_reshape_to(lambda sh: (sh[0] * s_holder, sh[2]) if len(sh) == 3 else sh,
+                           name="fold_seq"))
+    lys.append(head)
+    lys.append(_reshape_to(lambda sh: (-1, s_holder, sh[-1]), name="unfold_seq"))
+    m = LangModel(
+        name, "nlp", task, lys, _token_specs(seq, vocab),
+        default_batch=batch, vocab=vocab, lr=1e-2,
+    )
+    return m
+
+
+def bert_tiny() -> LangModel:
+    """Bidirectional encoder LM (cf. hf_Bert)."""
+    return _lm("bert_tiny", d=128, heads=4, n_layers=2, seq=64, vocab=1000,
+               causal=False, batch=4, task="language_modeling")
+
+
+def gpt_tiny() -> LangModel:
+    """Causal decoder LM (cf. hf_ptg1)."""
+    return _lm("gpt_tiny", d=128, heads=4, n_layers=2, seq=64, vocab=1000,
+               causal=True, batch=4, task="language_modeling")
+
+
+def gpt_tiny_large() -> LangModel:
+    """Same graph, ~4× parameters (cf. hf_ptg1_large)."""
+    return _lm("gpt_tiny_large", d=256, heads=8, n_layers=4, seq=64, vocab=1000,
+               causal=True, batch=2, task="language_modeling")
+
+
+class Seq2SeqTiny(Model):
+    """Encoder-decoder with cross-attention (cf. attention_is_all_you_need).
+
+    Non-sequential (decoder attends to encoder memory) ⇒ fused-only.
+    One encoder block + one decoder block with self- and cross-attention,
+    all hot-spots on the Pallas kernels.
+    """
+
+    name = "seq2seq_tiny"
+    domain = "nlp"
+    task = "translation"
+    default_batch = 4
+    lr = 1e-2
+
+    D, HEADS, SEQ, VOCAB = 128, 4, 32, 1000
+
+    def init(self, seed: int) -> list[np.ndarray]:
+        rng = np.random.default_rng(seed)
+        d = self.D
+
+        def lin(din, dout):
+            return [(rng.standard_normal((din, dout)) * math.sqrt(2 / din)).astype(np.float32),
+                    np.zeros((dout,), np.float32)]
+
+        def ln():
+            return [np.ones((d,), np.float32), np.zeros((d,), np.float32)]
+
+        emb = [(rng.standard_normal((self.VOCAB, d)) * 0.02).astype(np.float32)]
+        pos = [(rng.standard_normal((self.SEQ, d)) * 0.02).astype(np.float32)]
+        params: list[np.ndarray] = []
+        params += emb + pos                                     # 0: src embed, 1: pos
+        # encoder block: ln, qkv, out, ln, ff1, ff2
+        params += ln() + lin(d, 3 * d) + lin(d, d) + ln() + lin(d, 4 * d) + lin(4 * d, d)
+        # decoder self-attn: ln, qkv, out
+        params += ln() + lin(d, 3 * d) + lin(d, d)
+        # decoder cross-attn: ln, q, kv (from memory), out
+        params += ln() + lin(d, d) + lin(d, 2 * d) + lin(d, d)
+        # decoder ffn: ln, ff1, ff2
+        params += ln() + lin(d, 4 * d) + lin(4 * d, d)
+        # head
+        params += lin(d, self.VOCAB)
+        return params
+
+    def _mha(self, x_q, x_kv, wq, bq, wkv, bkv, wo, bo, causal: bool):
+        """Cross/self attention over flattened (n*s, d) activations."""
+        n, sq, d = x_q.shape
+        sk = x_kv.shape[1]
+        h, hd = self.HEADS, d // self.HEADS
+        q = vjp.fused_linear(x_q.reshape(n * sq, d), wq, bq, "none")
+        kv = vjp.fused_linear(x_kv.reshape(n * sk, d), wkv, bkv, "none")
+        q = q.reshape(n, sq, h, hd).transpose(0, 2, 1, 3).reshape(n * h, sq, hd)
+        kv = kv.reshape(n, sk, 2, h, hd)
+        k = kv[:, :, 0].transpose(0, 2, 1, 3).reshape(n * h, sk, hd)
+        v = kv[:, :, 1].transpose(0, 2, 1, 3).reshape(n * h, sk, hd)
+        # Cross-attention has sq == sk in this zoo so the fused kernel's
+        # square-score path applies; causal only for decoder self-attn.
+        att = vjp.attention(q, k, v, causal=causal)
+        att = att.reshape(n, h, sq, hd).transpose(0, 2, 1, 3).reshape(n * sq, d)
+        return vjp.fused_linear(att, wo, bo, "none").reshape(n, sq, d)
+
+    def _selfattn_qkv(self, x, wqkv, bqkv, wo, bo, causal: bool):
+        n, s, d = x.shape
+        h, hd = self.HEADS, d // self.HEADS
+        qkv = vjp.fused_linear(x.reshape(n * s, d), wqkv, bqkv, "none")
+        qkv = qkv.reshape(n, s, 3, h, hd)
+        qkv = jnp.moveaxis(qkv, 2, 0).transpose(0, 1, 3, 2, 4).reshape(3, n * h, s, hd)
+        att = vjp.attention(qkv[0], qkv[1], qkv[2], causal=causal)
+        att = att.reshape(n, h, s, hd).transpose(0, 2, 1, 3).reshape(n * s, d)
+        return vjp.fused_linear(att, wo, bo, "none").reshape(n, s, d)
+
+    def _ln(self, x, g, b):
+        n, s, d = x.shape
+        return vjp.layernorm(x.reshape(n * s, d), g, b).reshape(n, s, d)
+
+    def _ffn(self, x, w1, b1, w2, b2):
+        n, s, d = x.shape
+        h = vjp.fused_linear(x.reshape(n * s, d), w1, b1, "gelu")
+        return vjp.fused_linear(h, w2, b2, "none").reshape(n, s, d)
+
+    def forward(self, p: Sequence[jax.Array], src: jax.Array, tgt: jax.Array):
+        emb, pos = p[0], p[1]
+        x = emb[src] + pos[None, : src.shape[1]]
+        # encoder
+        x = x + self._selfattn_qkv(self._ln(x, p[2], p[3]), p[4], p[5], p[6], p[7], False)
+        x = x + self._ffn(self._ln(x, p[8], p[9]), p[10], p[11], p[12], p[13])
+        memory = x
+        # decoder
+        y = emb[tgt] + pos[None, : tgt.shape[1]]
+        y = y + self._selfattn_qkv(self._ln(y, p[14], p[15]), p[16], p[17], p[18], p[19], True)
+        y = y + self._mha(self._ln(y, p[20], p[21]), memory,
+                          p[22], p[23], p[24], p[25], p[26], p[27], False)
+        y = y + self._ffn(self._ln(y, p[28], p[29]), p[30], p[31], p[32], p[33])
+        n, s, d = y.shape
+        logits = vjp.fused_linear(y.reshape(n * s, d), p[34], p[35], "none")
+        return logits.reshape(n, s, self.VOCAB)
+
+    def loss(self, params, src, tgt, labels):
+        logits = self.forward(params, src, tgt).astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        return jnp.mean(logz - picked)
+
+    def input_specs(self, batch: int):
+        return [
+            InputSpec("src", (batch, self.SEQ), "i32", "randint", self.VOCAB),
+            InputSpec("tgt", (batch, self.SEQ), "i32", "randint", self.VOCAB),
+        ]
+
+    def target_specs(self, batch: int):
+        return [InputSpec("labels", (batch, self.SEQ), "i32", "randint", self.VOCAB)]

@@ -1,0 +1,143 @@
+"""Recommendation zoo entries (paper Table 1, Recommendation rows).
+
+``dlrm_tiny`` keeps DLRM's three-part structure — sum-pooled embedding
+bags (the Pallas gather kernel), a dense bottom MLP, and pairwise dot
+interaction feeding a top MLP. ``deeprec_ae`` is the six-layer
+deep-autoencoder of nvidia_deeprecommender; ``deeprec_ae_quant`` is its
+int8-weight variant (the quantized path exercised by the §1.1
+error-handling study at the eager-dispatch layer).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import vjp
+from . import layers as L
+from .base import Model, Sequential
+from .layers import InputSpec, Stage
+
+
+class DlrmTiny(Model):
+    """DLRM: embedding bags + bottom MLP + dot interaction + top MLP."""
+
+    name = "dlrm_tiny"
+    domain = "recommendation"
+    task = "ctr_prediction"
+    default_batch = 16
+    lr = 1e-2
+
+    N_TABLES, VOCAB, EMB_DIM, BAG_LEN, N_DENSE = 4, 1000, 16, 3, 13
+
+    def init(self, seed: int) -> list[np.ndarray]:
+        rng = np.random.default_rng(seed)
+
+        def lin(din, dout):
+            return [(rng.standard_normal((din, dout)) * math.sqrt(2 / din)).astype(np.float32),
+                    np.zeros((dout,), np.float32)]
+
+        params: list[np.ndarray] = []
+        for _ in range(self.N_TABLES):  # 0..3: embedding tables
+            params.append((rng.standard_normal((self.VOCAB, self.EMB_DIM)) * 0.02)
+                          .astype(np.float32))
+        params += lin(self.N_DENSE, 32) + lin(32, self.EMB_DIM)  # bottom MLP
+        n_vec = self.N_TABLES + 1
+        n_inter = n_vec * (n_vec - 1) // 2
+        params += lin(n_inter + self.EMB_DIM, 32) + lin(32, 16) + lin(16, 1)  # top MLP
+        return params
+
+    def _features(self, p, dense, indices):
+        """Stage 0: bags + bottom MLP + pairwise interaction → features."""
+        embs = [vjp.embedding_bag(p[t], indices[:, t, :]) for t in range(self.N_TABLES)]
+        d = vjp.fused_linear(dense, p[4], p[5], "relu")
+        d = vjp.fused_linear(d, p[6], p[7], "relu")  # (b, EMB_DIM)
+        vecs = jnp.stack(embs + [d], axis=1)  # (b, n_vec, EMB_DIM)
+        inter = jnp.einsum("bie,bje->bij", vecs, vecs)
+        iu, ju = np.triu_indices(vecs.shape[1], k=1)
+        flat_inter = inter[:, iu, ju]  # (b, n_inter)
+        return jnp.concatenate([d, flat_inter], axis=-1)
+
+    def forward(self, p: Sequence[jax.Array], dense, indices):
+        x = self._features(p, dense, indices)
+        x = vjp.fused_linear(x, p[8], p[9], "relu")
+        x = vjp.fused_linear(x, p[10], p[11], "relu")
+        return vjp.fused_linear(x, p[12], p[13], "sigmoid")  # (b, 1) CTR
+
+    def loss(self, params, dense, indices, labels):
+        pred = self.forward(params, dense, indices)[:, 0]
+        return jnp.mean(jnp.square(pred - labels))
+
+    def input_specs(self, batch: int):
+        return [
+            InputSpec("dense", (batch, self.N_DENSE)),
+            InputSpec("indices", (batch, self.N_TABLES, self.BAG_LEN),
+                      "i32", "randint", self.VOCAB),
+        ]
+
+    def target_specs(self, batch: int):
+        return [InputSpec("labels", (batch,), "f32", "uniform")]
+
+    def stages(self):
+        """Eager split: sparse+interaction stage, then per-layer top MLP."""
+        return [
+            Stage("00_features", tuple(range(0, 8)),
+                  lambda ps, dense, indices: self._features(list(ps), dense, indices)),
+            Stage("01_top1", (8, 9),
+                  lambda ps, x: vjp.fused_linear(x, ps[0], ps[1], "relu")),
+            Stage("02_top2", (10, 11),
+                  lambda ps, x: vjp.fused_linear(x, ps[0], ps[1], "relu")),
+            Stage("03_head", (12, 13),
+                  lambda ps, x: vjp.fused_linear(x, ps[0], ps[1], "sigmoid")),
+        ]
+
+
+def deeprec_ae() -> Sequential:
+    """Six-layer deep autoencoder (cf. nvidia_deeprecommender)."""
+    n_items = 512
+    lys = [
+        L.dense(256, "relu", name="enc1"),
+        L.dense(128, "relu", name="enc2"),
+        L.dense(64, "relu", name="code"),
+        L.dense(128, "relu", name="dec1"),
+        L.dense(256, "relu", name="dec2"),
+        L.dense(n_items, name="out"),
+    ]
+
+    def specs(batch: int):
+        return [InputSpec("ratings", (batch, n_items))]
+
+    return Sequential(
+        "deeprec_ae", "recommendation", "collaborative_filtering", lys,
+        specs, default_batch=16, loss_kind="mse", lr=1e-3,
+    )
+
+
+def deeprec_ae_quant() -> Sequential:
+    """Int8-weight variant of deeprec_ae (cf. *_quantized_qat models).
+
+    Inference-only: QAT-exported int8 graphs are deployment artifacts.
+    Tagged ``quant`` in the registry — the eager dispatcher's fallback
+    probing (§1.1 error-handling study) triggers on this tag.
+    """
+    n_items = 512
+    lys = [
+        L.dequant_dense(256, name="enc1"), L.activation("relu"),
+        L.dequant_dense(128, name="enc2"), L.activation("relu"),
+        L.dequant_dense(64, name="code"), L.activation("relu"),
+        L.dequant_dense(128, name="dec1"), L.activation("relu"),
+        L.dequant_dense(256, name="dec2"), L.activation("relu"),
+        L.dequant_dense(n_items, name="out"),
+    ]
+
+    def specs(batch: int):
+        return [InputSpec("ratings", (batch, n_items))]
+
+    return Sequential(
+        "deeprec_ae_quant", "recommendation", "collaborative_filtering", lys,
+        specs, default_batch=16, loss_kind=None,
+    )

@@ -1,0 +1,75 @@
+"""Reinforcement-learning zoo entry (paper Table 1, RL rows).
+
+The paper's RL models show the *lowest* GPU-active time because every
+step interleaves a non-framework environment interaction on the host.
+XBench reproduces that structurally: the network below is the on-device
+part (policy + value heads, cf. soft_actor_critic's MLPs); the
+environment itself lives in the rust coordinator
+(``coordinator::env::CartPoleSim``), which steps it on the host between
+device dispatches — so the breakdown profiler attributes the gap to
+device idleness exactly as the paper's Figure 1/2 does.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import vjp
+from .base import Model
+from .layers import InputSpec
+
+
+class ActorCritic(Model):
+    """Shared-trunk actor-critic MLP (cf. soft_actor_critic)."""
+
+    name = "actor_critic"
+    domain = "reinforcement_learning"
+    task = "continuous_control"
+    default_batch = 8
+    lr = 3e-3
+
+    OBS, ACT, HIDDEN = 17, 6, 64
+
+    def init(self, seed: int) -> list[np.ndarray]:
+        rng = np.random.default_rng(seed)
+
+        def lin(din, dout):
+            return [(rng.standard_normal((din, dout)) * math.sqrt(2 / din)).astype(np.float32),
+                    np.zeros((dout,), np.float32)]
+
+        params: list[np.ndarray] = []
+        params += lin(self.OBS, self.HIDDEN) + lin(self.HIDDEN, self.HIDDEN)  # trunk
+        params += lin(self.HIDDEN, self.ACT)   # policy head (mean action)
+        params += lin(self.HIDDEN, 1)          # value head
+        return params
+
+    def forward(self, p: Sequence[jax.Array], obs: jax.Array) -> jax.Array:
+        h = vjp.fused_linear(obs, p[0], p[1], "tanh")
+        h = vjp.fused_linear(h, p[2], p[3], "tanh")
+        action = vjp.fused_linear(h, p[4], p[5], "tanh")
+        value = vjp.fused_linear(h, p[6], p[7], "none")
+        return jnp.concatenate([action, value], axis=-1)  # (b, ACT+1)
+
+    def loss(self, params, obs, target_actions, returns):
+        out = self.forward(params, obs)
+        action, value = out[:, : self.ACT], out[:, self.ACT]
+        # Behavioural-cloning surrogate + value regression: keeps the
+        # backward pass (the benchmark's subject) identical in structure
+        # to an actor-critic update without an on-device env.
+        return jnp.mean(jnp.square(action - target_actions)) + jnp.mean(
+            jnp.square(value - returns)
+        )
+
+    def input_specs(self, batch: int):
+        return [InputSpec("obs", (batch, self.OBS))]
+
+    def target_specs(self, batch: int):
+        return [
+            InputSpec("target_actions", (batch, self.ACT), "f32", "uniform"),
+            InputSpec("returns", (batch,), "f32", "uniform"),
+        ]

@@ -1,0 +1,51 @@
+"""Speech zoo entry (paper Table 1, Speech rows).
+
+Conv-subsampling frontend over mel frames feeding transformer blocks —
+the speech_transformer shape: 2-D conv downsamples time×frequency 4×,
+then attention over the reduced sequence, then a per-frame token head.
+"""
+
+from __future__ import annotations
+
+from . import layers as L
+from .cv import _reshape_to
+from .nlp import LangModel
+from .layers import InputSpec
+
+
+def speech_conformer_tiny() -> LangModel:
+    """Conv frontend + transformer encoder (cf. speech_transformer)."""
+    frames, mels, d, n_tokens = 64, 40, 128, 50
+    sub_frames = frames // 4  # two stride-2 convs
+    sub_mels = mels // 4
+    lys = [
+        _reshape_to(lambda s: (s[0], s[1], s[2], 1), name="add_channel"),
+        L.conv2d(8, 3, 2, "relu", name="sub1"),
+        L.conv2d(16, 3, 2, "relu", name="sub2"),
+        _reshape_to(lambda s: (s[0], s[1], s[2] * s[3]), name="fold_freq"),
+        _reshape_to(lambda s: (s[0] * s[1], s[2]), name="fold_time"),
+        L.dense(d, name="proj"),
+        _reshape_to(lambda s: (-1, sub_frames, d), name="unfold_time"),
+        L.positional_embedding(sub_frames),
+        L.transformer_block(d, 4, name="block0"),
+        L.transformer_block(d, 4, name="block1"),
+        L.layer_norm(name="final_ln"),
+        _reshape_to(lambda s: (s[0] * s[1], s[2]), name="fold_out"),
+        L.dense(n_tokens, name="token_head"),
+        _reshape_to(lambda s: (-1, sub_frames, n_tokens), name="unfold_out"),
+    ]
+
+    def specs(batch: int):
+        return [InputSpec("mels", (batch, frames, mels))]
+
+    m = LangModel(
+        "speech_conformer_tiny", "speech", "recognition", lys, specs,
+        default_batch=2, vocab=n_tokens, lr=1e-2,
+    )
+
+    # Labels are per *subsampled* frame.
+    def target_specs(batch: int):
+        return [InputSpec("labels", (batch, sub_frames), "i32", "randint", n_tokens)]
+
+    m.target_specs = target_specs
+    return m

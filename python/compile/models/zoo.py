@@ -1,0 +1,57 @@
+"""The XBench model registry (paper Table 1 analogue).
+
+Maps benchmark names to constructors and carries the registry-level
+metadata (domain, tags) the rust suite mirrors via ``manifest.json``.
+Models tagged ``sweep`` get a batch-size ladder of inference artifacts
+(paper §2.2's doubling sweep); models tagged ``quant`` trigger the eager
+dispatcher's fallback probing (§1.1 error-handling study).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+from .base import Model
+from .cv import UNetTiny, alexnet_tiny, dcgan_gen, mobilenet_tiny, resnet_tiny, vgg_tiny, vit_tiny
+from .hpc import PyhpcEos
+from .nlp import Seq2SeqTiny, bert_tiny, gpt_tiny, gpt_tiny_large
+from .rec import DlrmTiny, deeprec_ae, deeprec_ae_quant
+from .rl import ActorCritic
+from .speech import speech_conformer_tiny
+
+# name -> (constructor, tags)
+REGISTRY: dict[str, tuple[Callable[[], Model], tuple[str, ...]]] = {
+    "alexnet_tiny": (alexnet_tiny, ()),
+    "resnet_tiny": (resnet_tiny, ("sweep",)),
+    "vit_tiny": (vit_tiny, ()),
+    "vgg_tiny": (vgg_tiny, ()),
+    "mobilenet_tiny": (mobilenet_tiny, ()),
+    "dcgan_gen": (dcgan_gen, ()),
+    "unet_tiny": (UNetTiny, ()),
+    "bert_tiny": (bert_tiny, ()),
+    "gpt_tiny": (gpt_tiny, ("sweep",)),
+    "gpt_tiny_large": (gpt_tiny_large, ()),
+    "seq2seq_tiny": (Seq2SeqTiny, ()),
+    "dlrm_tiny": (DlrmTiny, ("sweep",)),
+    "deeprec_ae": (deeprec_ae, ("sweep",)),
+    "deeprec_ae_quant": (deeprec_ae_quant, ("quant",)),
+    "actor_critic": (ActorCritic, ()),
+    "speech_conformer_tiny": (speech_conformer_tiny, ()),
+    "pyhpc_eos": (PyhpcEos, ()),
+}
+
+# Inference batch ladder for sweep-tagged models (paper: double from 1).
+SWEEP_BATCHES = (1, 2, 4, 8, 16, 32)
+
+
+def build(name: str) -> Model:
+    ctor, _tags = REGISTRY[name]
+    return ctor()
+
+
+def tags(name: str) -> tuple[str, ...]:
+    return REGISTRY[name][1]
+
+
+def all_names() -> list[str]:
+    return list(REGISTRY)

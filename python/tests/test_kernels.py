@@ -1,0 +1,291 @@
+"""L1 conformance: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes, dtypes, activations, and block sizes; each
+property asserts allclose against ``kernels.ref``. These tests are the
+core correctness signal for the kernels that get lowered into every model
+artifact — if they pass, the HLO the rust runtime executes computes the
+same numbers as the literal jnp formulation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    attention,
+    dequant_linear,
+    embedding_bag,
+    flash_attention,
+    fused_linear,
+    layernorm,
+)
+from compile.kernels import common, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+# Interpret-mode pallas is slow; cap the example count but keep the search
+# space wide (irregular sizes exercise pick_block's divisor fallback).
+SWEEP = settings(max_examples=20, deadline=None)
+
+_dims = st.sampled_from([1, 2, 3, 4, 8, 16, 24, 32, 48, 64, 96, 128, 160])
+_small_dims = st.sampled_from([1, 2, 3, 5, 8, 12, 16])
+_acts = st.sampled_from(["none", "relu", "gelu", "tanh", "sigmoid"])
+_dtypes = st.sampled_from([jnp.float32, jnp.bfloat16])
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=3e-5, atol=3e-5)
+
+
+def _randn(rng, shape, dtype=jnp.float32):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32)).astype(dtype)
+
+
+def _check(actual, expected, dtype):
+    np.testing.assert_allclose(
+        np.asarray(actual, np.float32), np.asarray(expected, np.float32), **_tol(dtype)
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused_linear
+# ---------------------------------------------------------------------------
+
+
+@SWEEP
+@given(m=_dims, k=_dims, n=_dims, act=_acts, dtype=_dtypes, seed=st.integers(0, 2**31 - 1))
+def test_fused_linear_matches_ref(m, k, n, act, dtype, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _randn(rng, (m, k), dtype), _randn(rng, (k, n), dtype)
+    b = _randn(rng, (n,), dtype)
+    _check(fused_linear(x, w, b, act), ref.fused_linear_ref(x, w, b, act), dtype)
+
+
+@SWEEP
+@given(
+    m=_dims, k=_dims, n=_dims,
+    bm=st.sampled_from([1, 4, 8, 32, 256]),
+    bn=st.sampled_from([1, 8, 128, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_linear_block_shape_invariance(m, k, n, bm, bn, seed):
+    """The BlockSpec schedule must never change the numbers."""
+    rng = np.random.default_rng(seed)
+    x, w, b = _randn(rng, (m, k)), _randn(rng, (k, n)), _randn(rng, (n,))
+    got = fused_linear(x, w, b, "relu", block_m=bm, block_n=bn)
+    _check(got, ref.fused_linear_ref(x, w, b, "relu"), jnp.float32)
+
+
+@SWEEP
+@given(m=_dims, k=_dims, n=_dims, seed=st.integers(0, 2**31 - 1))
+def test_dequant_linear_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = _randn(rng, (m, k))
+    wq = jnp.asarray(rng.integers(-127, 128, (k, n)), dtype=jnp.int8)
+    scale = jnp.asarray(rng.random(n, dtype=np.float32) * 0.1 + 1e-3)
+    b = _randn(rng, (n,))
+    _check(dequant_linear(x, wq, scale, b), ref.dequant_linear_ref(x, wq, scale, b), jnp.float32)
+
+
+def test_fused_linear_rejects_mismatched_inner_dim():
+    x, w, b = jnp.ones((4, 8)), jnp.ones((9, 4)), jnp.ones((4,))
+    with pytest.raises(AssertionError):
+        fused_linear(x, w, b)
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+
+@SWEEP
+@given(rows=_dims, d=_dims, dtype=_dtypes, seed=st.integers(0, 2**31 - 1))
+def test_layernorm_matches_ref(rows, d, dtype, seed):
+    rng = np.random.default_rng(seed)
+    x = _randn(rng, (rows, d), dtype)
+    g, b = _randn(rng, (d,), dtype), _randn(rng, (d,), dtype)
+    _check(layernorm(x, g, b), ref.layernorm_ref(x, g, b), dtype)
+
+
+@SWEEP
+@given(rows=_dims, d=_dims, seed=st.integers(0, 2**31 - 1))
+def test_layernorm_output_is_normalized(rows, d, seed):
+    """With identity affine, rows have ~zero mean and ~unit variance."""
+    if d < 8:
+        return  # variance of tiny rows is dominated by eps
+    rng = np.random.default_rng(seed)
+    x = _randn(rng, (rows, d)) * 3.0 + 5.0
+    y = np.asarray(layernorm(x, jnp.ones((d,)), jnp.zeros((d,))))
+    np.testing.assert_allclose(y.mean(axis=-1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(y.var(axis=-1), 1.0, rtol=2e-2)
+
+
+@SWEEP
+@given(rows=_dims, d=_dims, shift=st.floats(-8, 8), seed=st.integers(0, 2**31 - 1))
+def test_layernorm_shift_invariance(rows, d, shift, seed):
+    """LayerNorm(x + c) ≈ LayerNorm(x) — the defining invariance.
+
+    Tolerance is loose in absolute terms: the f32 mean subtraction loses
+    ~|shift| ulps of the centered values, which is inherent to the
+    formulation (the oracle loses them identically), not a kernel bug.
+    """
+    rng = np.random.default_rng(seed)
+    x = _randn(rng, (rows, d))
+    g, b = _randn(rng, (d,)), _randn(rng, (d,))
+    np.testing.assert_allclose(
+        np.asarray(layernorm(x + shift, g, b)),
+        np.asarray(layernorm(x, g, b)),
+        rtol=1e-3, atol=2e-3,
+    )
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@SWEEP
+@given(
+    h=_small_dims,
+    s=st.sampled_from([1, 2, 4, 8, 16, 32, 64]),
+    d=st.sampled_from([4, 8, 16, 32]),
+    causal=st.booleans(),
+    dtype=_dtypes,
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(h, s, d, causal, dtype, seed):
+    rng = np.random.default_rng(seed)
+    q = _randn(rng, (h, s, d), dtype)
+    k = _randn(rng, (h, s, d), dtype)
+    v = _randn(rng, (h, s, d), dtype)
+    _check(attention(q, k, v, causal=causal), ref.attention_ref(q, k, v, causal=causal), dtype)
+
+
+@SWEEP
+@given(h=_small_dims, s=st.sampled_from([2, 4, 8, 16, 32]), d=st.sampled_from([4, 8, 16]),
+       seed=st.integers(0, 2**31 - 1))
+def test_attention_causal_first_token_sees_only_itself(h, s, d, seed):
+    """Row 0 of a causal attention output is exactly v[:, 0, :]."""
+    rng = np.random.default_rng(seed)
+    q = _randn(rng, (h, s, d))
+    k = _randn(rng, (h, s, d))
+    v = _randn(rng, (h, s, d))
+    out = np.asarray(attention(q, k, v, causal=True))
+    np.testing.assert_allclose(out[:, 0, :], np.asarray(v)[:, 0, :], rtol=3e-5, atol=3e-5)
+
+
+@SWEEP
+@given(h=_small_dims, s=st.sampled_from([4, 8, 32]), d=st.sampled_from([8, 16]),
+       bq=st.sampled_from([1, 2, 8, 64]), seed=st.integers(0, 2**31 - 1))
+def test_attention_block_shape_invariance(h, s, d, bq, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = (_randn(rng, (h, s, d)) for _ in range(3))
+    _check(attention(q, k, v, causal=True, block_q=bq),
+           ref.attention_ref(q, k, v, causal=True), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention (streaming K/V + online softmax)
+# ---------------------------------------------------------------------------
+
+
+@SWEEP
+@given(
+    h=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([8, 16, 32, 64, 128]),
+    d=st.sampled_from([4, 8, 16, 32]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_attention_matches_ref(h, s, d, causal, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = (_randn(rng, (h, s, d)) for _ in range(3))
+    _check(flash_attention(q, k, v, causal=causal),
+           ref.attention_ref(q, k, v, causal=causal), jnp.float32)
+
+
+@SWEEP
+@given(
+    s=st.sampled_from([16, 32, 64]),
+    bq=st.sampled_from([4, 8, 16]),
+    bk=st.sampled_from([4, 8, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_attention_block_shape_invariance(s, bq, bk, seed):
+    """The online-softmax state must make the K/V tiling invisible."""
+    rng = np.random.default_rng(seed)
+    q, k, v = (_randn(rng, (2, s, 8)) for _ in range(3))
+    got = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk)
+    _check(got, ref.attention_ref(q, k, v, causal=True), jnp.float32)
+
+
+@SWEEP
+@given(seed=st.integers(0, 2**31 - 1))
+def test_flash_and_resident_attention_agree(seed):
+    """Both kernels implement the same function (shared oracle closes the
+    triangle, but the direct comparison catches tolerance stacking)."""
+    rng = np.random.default_rng(seed)
+    q, k, v = (_randn(rng, (2, 64, 16)) for _ in range(3))
+    _check(flash_attention(q, k, v, causal=True),
+           attention(q, k, v, causal=True), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# embedding_bag
+# ---------------------------------------------------------------------------
+
+
+@SWEEP
+@given(
+    vocab=st.sampled_from([1, 7, 64, 500]),
+    dim=st.sampled_from([4, 8, 64, 128]),
+    bags=_small_dims,
+    bag_len=st.sampled_from([1, 2, 5, 10, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_embedding_bag_matches_ref(vocab, dim, bags, bag_len, seed):
+    rng = np.random.default_rng(seed)
+    table = _randn(rng, (vocab, dim))
+    idx = jnp.asarray(rng.integers(0, vocab, (bags, bag_len)), dtype=jnp.int32)
+    _check(embedding_bag(table, idx), ref.embedding_bag_ref(table, idx), jnp.float32)
+
+
+def test_embedding_bag_repeated_index_scales_row():
+    """A bag of the same index L times is L × that row."""
+    table = jnp.arange(12.0, dtype=jnp.float32).reshape(3, 4)
+    idx = jnp.full((2, 5), 1, dtype=jnp.int32)
+    out = np.asarray(embedding_bag(table, idx))
+    np.testing.assert_allclose(out, np.tile(np.asarray(table)[1] * 5, (2, 1)))
+
+
+# ---------------------------------------------------------------------------
+# common: tiling helpers
+# ---------------------------------------------------------------------------
+
+
+@given(axis=st.integers(1, 4096), preferred=st.sampled_from([8, 32, 128, 256]))
+@settings(max_examples=200, deadline=None)
+def test_pick_block_divides_axis(axis, preferred):
+    b = common.pick_block(axis, preferred)
+    assert 1 <= b <= axis
+    assert axis % b == 0, f"block {b} does not divide axis {axis}"
+
+
+@given(axis=st.integers(1, 4096), preferred=st.sampled_from([8, 32, 128]))
+@settings(max_examples=200, deadline=None)
+def test_pick_block_respects_preferred_when_divisible(axis, preferred):
+    if axis % preferred == 0 and axis > preferred:
+        assert common.pick_block(axis, preferred) == preferred
+
+
+def test_vmem_estimate_counts_double_buffering():
+    assert common.estimate_vmem_bytes([(8, 128)], 4) == 2 * 8 * 128 * 4
+
+
+def test_mxu_alignment_perfect_for_aligned_shapes():
+    assert common.mxu_alignment_ratio(8, 128, 128) == 1.0
+    assert common.mxu_alignment_ratio(4, 128, 128) == 0.5

@@ -1,0 +1,88 @@
+//! Regenerates paper Figures 1 & 2 and Table 2: per-model execution-time
+//! breakdown (device-active / data-movement / idle) for training and
+//! inference, plus the per-domain means.
+//!
+//! `cargo bench --bench fig1_2_breakdown` — CSVs land in bench_out/.
+//! Env: XBENCH_REPEATS (default 5), XBENCH_ARTIFACTS (default artifacts).
+
+use std::rc::Rc;
+
+use xbench::config::{Mode, RunConfig};
+use xbench::coordinator::Runner;
+use xbench::metrics;
+use xbench::report::{fmt_pct, fmt_secs, Table};
+use xbench::runtime::{ArtifactStore, Device, Manifest};
+use xbench::suite::Suite;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::var("XBENCH_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let repeats = env_usize("XBENCH_REPEATS", 5);
+    let manifest = Manifest::load(std::path::Path::new(&artifacts))?;
+    let suite = Suite::new(manifest);
+    let device = Rc::new(Device::cpu()?);
+    let store = ArtifactStore::new(device, artifacts.clone());
+    std::fs::create_dir_all("bench_out")?;
+
+    for mode in [Mode::Train, Mode::Infer] {
+        let fig = if mode == Mode::Train { "fig1" } else { "fig2" };
+        let cfg = RunConfig {
+            mode,
+            repeats,
+            iterations: 2,
+            warmup: 1,
+            artifacts: artifacts.clone().into(),
+            ..Default::default()
+        };
+        let mut t = Table::new(
+            format!("Execution-time breakdown, {} (paper {})", mode.as_str(),
+                    if mode == Mode::Train { "Fig 1" } else { "Fig 2" }),
+            &["model", "domain", "active", "movement", "idle", "iter time"],
+        );
+        let mut per_domain: Vec<(String, [f64; 3])> = Vec::new();
+        for bench in suite.benches(&Default::default(), mode)? {
+            let entry = suite.model(&bench.model)?;
+            let r = Runner::new(&store, cfg.clone()).run_model(entry)?;
+            t.row(vec![
+                r.model.clone(),
+                r.domain.clone(),
+                fmt_pct(r.breakdown.active),
+                fmt_pct(r.breakdown.movement),
+                fmt_pct(r.breakdown.idle),
+                fmt_secs(r.iter_secs),
+            ]);
+            per_domain.push((
+                r.domain,
+                [r.breakdown.active, r.breakdown.movement, r.breakdown.idle],
+            ));
+        }
+        print!("{}", t.render());
+        t.write_csv(std::path::Path::new(&format!("bench_out/{fig}_breakdown.csv")))?;
+
+        // Table 2 rows for this mode.
+        let mut t2 = Table::new(
+            format!("Per-domain means, {} (paper Table 2)", mode.as_str()),
+            &["domain", "activeness", "data movement", "idleness"],
+        );
+        let actives: Vec<_> = per_domain.iter().map(|(d, b)| (d.clone(), b[0])).collect();
+        let moves: Vec<_> = per_domain.iter().map(|(d, b)| (d.clone(), b[1])).collect();
+        let idles: Vec<_> = per_domain.iter().map(|(d, b)| (d.clone(), b[2])).collect();
+        let (am, mm, im) = (
+            metrics::group_mean(&actives),
+            metrics::group_mean(&moves),
+            metrics::group_mean(&idles),
+        );
+        for (d, a) in &am {
+            t2.row(vec![d.clone(), fmt_pct(*a), fmt_pct(mm[d]), fmt_pct(im[d])]);
+        }
+        print!("{}", t2.render());
+        t2.write_csv(std::path::Path::new(&format!("bench_out/table2_{}.csv", mode.as_str())))?;
+    }
+    // All results are printed + CSVs closed: exit without running PJRT
+    // destructors (their teardown ordering is flaky on this wrapper —
+    // see DESIGN.md runtime findings).
+    std::process::exit(0);
+}

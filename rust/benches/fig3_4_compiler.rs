@@ -1,0 +1,72 @@
+//! Regenerates paper Figures 3 & 4: fused (TorchInductor-analogue) vs
+//! eager execution — time, host (CM) and device (GM) memory ratios per
+//! stageable model, plus the geomean speedup headline.
+//!
+//! `cargo bench --bench fig3_4_compiler`
+
+use std::rc::Rc;
+
+use xbench::config::{BatchPolicy, Compiler, RunConfig};
+use xbench::coordinator::Runner;
+use xbench::metrics;
+use xbench::report::{fmt_ratio, fmt_secs, Table};
+use xbench::runtime::{ArtifactStore, Device, Manifest};
+use xbench::suite::Suite;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::var("XBENCH_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let manifest = Manifest::load(std::path::Path::new(&artifacts))?;
+    let suite = Suite::new(manifest);
+    let device = Rc::new(Device::cpu()?);
+    let store = ArtifactStore::new(device, artifacts.clone());
+    std::fs::create_dir_all("bench_out")?;
+
+    let base = RunConfig {
+        repeats: 5,
+        iterations: 2,
+        warmup: 1,
+        artifacts: artifacts.into(),
+        ..Default::default()
+    };
+    let mut t = Table::new(
+        "Fused vs eager (paper Fig 3/4): ratios fused/eager, <1 = fused wins",
+        &["model", "T ratio", "CM ratio", "GM ratio", "fused", "eager"],
+    );
+    let mut speedups = Vec::new();
+    for m in suite.models() {
+        let Some(stages) = &m.stages else { continue };
+        let mut fused_cfg = base.clone();
+        fused_cfg.batch = BatchPolicy::Fixed(stages.batch);
+        let fused = Runner::new(&store, fused_cfg).run_model(m)?;
+        let mut eager_cfg = base.clone();
+        eager_cfg.compiler = Compiler::Eager;
+        let eager = Runner::new(&store, eager_cfg).run_model(m)?;
+        let tr = fused.iter_secs / eager.iter_secs;
+        speedups.push(1.0 / tr);
+        t.row(vec![
+            m.name.clone(),
+            format!("{tr:.3}"),
+            format!(
+                "{:.3}",
+                fused.memory.host_peak.max(1) as f64 / eager.memory.host_peak.max(1) as f64
+            ),
+            format!(
+                "{:.3}",
+                fused.memory.device_total.max(1) as f64
+                    / eager.memory.device_total.max(1) as f64
+            ),
+            fmt_secs(fused.iter_secs),
+            fmt_secs(eager.iter_secs),
+        ]);
+    }
+    print!("{}", t.render());
+    t.write_csv(std::path::Path::new("bench_out/fig3_4_compiler.csv"))?;
+    println!(
+        "geomean fused speedup: {} (paper: 1.30x train / 1.46x infer)",
+        fmt_ratio(metrics::geomean(&speedups))
+    );
+    // All results are printed + CSVs closed: exit without running PJRT
+    // destructors (their teardown ordering is flaky on this wrapper —
+    // see DESIGN.md runtime findings).
+    std::process::exit(0);
+}

@@ -1,0 +1,69 @@
+//! Regenerates paper Figure 5 + Table 3: the analytical A100-vs-MI210
+//! projection for every model/mode, and the peak-TFLOPS matrix the model
+//! is parameterized with.
+//!
+//! `cargo bench --bench fig5_devices` (static analysis only — fast).
+
+use xbench::config::Mode;
+use xbench::devmodel::{a100, mi210, nvidia_over_amd};
+use xbench::hlo;
+use xbench::report::Table;
+use xbench::runtime::Manifest;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::var("XBENCH_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let dir = std::path::PathBuf::from(&artifacts);
+    let manifest = Manifest::load(&dir)?;
+    std::fs::create_dir_all("bench_out")?;
+
+    // Table 3.
+    let mut t3 = Table::new(
+        "Peak theoretical TFLOPS (paper Table 3)",
+        &["GPU", "FP32", "Matrix32", "FP64", "Matrix64", "HBM GB/s"],
+    );
+    for d in [a100(), mi210()] {
+        t3.row(vec![
+            d.name.to_string(),
+            d.fp32.to_string(),
+            d.matrix32.map(|v| v.to_string()).unwrap_or("-".into()),
+            d.fp64.to_string(),
+            d.matrix64.map(|v| v.to_string()).unwrap_or("-".into()),
+            d.hbm_gbps.to_string(),
+        ]);
+    }
+    print!("{}", t3.render());
+    t3.write_csv(std::path::Path::new("bench_out/table3_devices.csv"))?;
+
+    // Fig 5.
+    let mut t = Table::new(
+        "T_NVIDIA/T_AMD (paper Fig 5): <1 A100 wins, >1 MI210 wins",
+        &["model", "infer", "train", "dot%", "conv%", "ew%"],
+    );
+    for m in &manifest.models {
+        let Some(infer) = m.infer_at(m.default_batch) else { continue };
+        let ci = hlo::analyze_file(&dir.join(&infer.artifact))?;
+        let ri = nvidia_over_amd(&ci, Mode::Infer);
+        let (rt, f) = match &m.train {
+            Some(tr) => {
+                let c = hlo::analyze_file(&dir.join(&tr.artifact))?;
+                (Some(nvidia_over_amd(&c, Mode::Train)), c.flops)
+            }
+            None => (None, ci.flops),
+        };
+        let total = f.total().max(1.0);
+        t.row(vec![
+            m.name.clone(),
+            format!("{ri:.3}"),
+            rt.map(|r| format!("{r:.3}")).unwrap_or("-".into()),
+            format!("{:.0}", f.dot / total * 100.0),
+            format!("{:.0}", f.conv / total * 100.0),
+            format!("{:.0}", f.elementwise / total * 100.0),
+        ]);
+    }
+    print!("{}", t.render());
+    t.write_csv(std::path::Path::new("bench_out/fig5_devices.csv"))?;
+    // All results are printed + CSVs closed: exit without running PJRT
+    // destructors (their teardown ordering is flaky on this wrapper —
+    // see DESIGN.md runtime findings).
+    std::process::exit(0);
+}

@@ -1,0 +1,77 @@
+//! Regenerates paper Figure 6 / §4.1: the optimization case studies,
+//! each measured as before/after schedules on the real runtime.
+//!
+//! `cargo bench --bench fig6_optim`
+
+use std::rc::Rc;
+
+use xbench::optim;
+use xbench::report::{fmt_bytes, fmt_pct, fmt_ratio, fmt_secs, Table};
+use xbench::runtime::{ArtifactStore, Device, Manifest};
+use xbench::suite::Suite;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::var("XBENCH_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let manifest = Manifest::load(std::path::Path::new(&artifacts))?;
+    let suite = Suite::new(manifest);
+    let device = Rc::new(Device::cpu()?);
+    let store = ArtifactStore::new(device, artifacts);
+    std::fs::create_dir_all("bench_out")?;
+    let iters = 20;
+
+    let mut t = Table::new(
+        "Optimization case studies (paper §4.1 / Fig 6)",
+        &["case", "target", "before", "after", "speedup", "paper"],
+    );
+
+    let zg = optim::zero_grad::run(store.device(), suite.model("mobilenet_tiny")?, iters)?;
+    t.row(vec![
+        "zero_grad foreach".into(),
+        format!("{} ({} tensors)", zg.model, zg.tensors),
+        fmt_secs(zg.serial_secs),
+        fmt_secs(zg.foreach_secs),
+        fmt_ratio(zg.speedup),
+        "framework-wide".into(),
+    ]);
+
+    let rs = optim::rsqrt::run(store.device(), 64 * 1024, iters)?;
+    t.row(vec![
+        "rsqrt on host".into(),
+        format!("{} elements", rs.elements),
+        fmt_secs(rs.device_scalar_secs),
+        fmt_secs(rs.host_scalar_secs),
+        fmt_ratio(rs.speedup),
+        "27x (function-local)".into(),
+    ]);
+
+    let of = optim::offload::run(&store, suite.model("gpt_tiny_large")?, iters)?;
+    t.row(vec![
+        "resident weights".into(),
+        format!("{} ({})", of.model, fmt_bytes(of.param_bytes)),
+        fmt_secs(of.offload_secs),
+        fmt_secs(of.resident_secs),
+        fmt_ratio(of.speedup),
+        "10.1x (pig2, PCIe)".into(),
+    ]);
+    println!(
+        "offload mode: {} of wall re-uploading weights (paper pig2: 52.7% over PCIe)",
+        fmt_pct(of.offload_movement_frac)
+    );
+
+    let eh = optim::error_handling_study(&store, suite.model("deeprec_ae_quant")?, 400)?;
+    t.row(vec![
+        "lazy error handling".into(),
+        eh.model.clone(),
+        fmt_secs(eh.rich_secs),
+        fmt_secs(eh.lite_secs),
+        fmt_ratio(eh.slowdown),
+        "10x (quant models)".into(),
+    ]);
+
+    print!("{}", t.render());
+    t.write_csv(std::path::Path::new("bench_out/fig6_optim.csv"))?;
+    // All results are printed + CSVs closed: exit without running PJRT
+    // destructors (their teardown ordering is flaky on this wrapper —
+    // see DESIGN.md runtime findings).
+    std::process::exit(0);
+}

@@ -1,0 +1,87 @@
+//! Regenerates paper Table 4: replay each of the seven problematic PRs
+//! through the CI pipeline (detect at the 7% gate, bisect the day's
+//! commits, file the issue).
+//!
+//! `cargo bench --bench table4_ci` — the slowest bench (~4 min: 7 days ×
+//! (baseline + nightly + ~10 bisection probes)). Env:
+//! XBENCH_CI_COMMITS (default 70).
+
+use std::rc::Rc;
+
+use xbench::ci::{CiPipeline, Day, FaultKind};
+use xbench::config::{RunConfig, SuiteSelection};
+use xbench::report::Table;
+use xbench::runtime::{ArtifactStore, Device, Manifest};
+use xbench::suite::Suite;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::var("XBENCH_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let commits: usize = std::env::var("XBENCH_CI_COMMITS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(70);
+    let manifest = Manifest::load(std::path::Path::new(&artifacts))?;
+    let suite = Suite::new(manifest);
+    let device = Rc::new(Device::cpu()?);
+    let store = ArtifactStore::new(device, artifacts.clone());
+    std::fs::create_dir_all("bench_out")?;
+
+    let cfg = RunConfig {
+        repeats: 5,
+        iterations: 2,
+        warmup: 1,
+        artifacts: artifacts.into(),
+        selection: SuiteSelection {
+            models: vec![
+                "deeprec_ae".into(),
+                "dlrm_tiny".into(),
+                "mobilenet_tiny".into(),
+                "deeprec_ae_quant".into(),
+            ],
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let pipeline = CiPipeline::new(&store, &suite, cfg);
+    eprintln!("recording clean baselines…");
+    let baselines = pipeline.record_baselines()?;
+
+    let mut t = Table::new(
+        "Seven issues found by CI (paper Table 4)",
+        &["PR#", "Issue", "Perf issue", "detected", "bisected", "runs", "resolution"],
+    );
+    for (i, fault) in FaultKind::catalog().into_iter().enumerate() {
+        let day = Day::generate(&format!("day-{:02}", i + 1), commits, &[fault], 20230102);
+        let planted = day.fault_indices()[0];
+        let report = pipeline.nightly(&day, &baselines)?;
+        let (detected, bisected, runs) = match &report {
+            Some(r) => (
+                format!("yes ({})", r.regressions.len()),
+                r.culprit
+                    .as_ref()
+                    .map(|c| {
+                        let idx = day.commits.iter().position(|x| x.id == c.id).unwrap();
+                        if idx == planted { "correct".to_string() } else { format!("off-by {}", idx as i64 - planted as i64) }
+                    })
+                    .unwrap_or_else(|| "unconverged".into()),
+                r.runs_spent.to_string(),
+            ),
+            None => ("MISSED".into(), "-".into(), "1".into()),
+        };
+        t.row(vec![
+            fault.pr_number().to_string(),
+            fault.issue().to_string(),
+            fault.perf_issue().to_string(),
+            detected,
+            bisected,
+            runs,
+            fault.resolution().to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    t.write_csv(std::path::Path::new("bench_out/table4_ci.csv"))?;
+    // All results are printed + CSVs closed: exit without running PJRT
+    // destructors (their teardown ordering is flaky on this wrapper —
+    // see DESIGN.md runtime findings).
+    std::process::exit(0);
+}

@@ -1,0 +1,82 @@
+//! Regenerates paper Table 5: the per-model slowdown of PR#65839 (the
+//! template-mismatch fault) for training and inference — measured by
+//! running each model clean and with the fault injected.
+//!
+//! `cargo bench --bench table5_pr65839`
+
+use std::rc::Rc;
+
+use xbench::ci::FaultKind;
+use xbench::config::{Mode, RunConfig};
+use xbench::coordinator::Runner;
+use xbench::report::{fmt_ratio, Table};
+use xbench::runtime::{ArtifactStore, Device, Manifest};
+use xbench::suite::Suite;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::var("XBENCH_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let manifest = Manifest::load(std::path::Path::new(&artifacts))?;
+    let suite = Suite::new(manifest);
+    let device = Rc::new(Device::cpu()?);
+    let store = ArtifactStore::new(device, artifacts.clone());
+    std::fs::create_dir_all("bench_out")?;
+
+    // Paper Table 5 lists six affected models across train + inference;
+    // we measure the fault on a matching spread of the zoo.
+    let targets = [
+        (Mode::Train, "dcgan_gen"),      // pytorch_stargan analogue (GAN)
+        (Mode::Train, "unet_tiny"),      // vision_maskrcnn analogue
+        (Mode::Train, "actor_critic"),   // maml_omniglot analogue (small MLPs)
+        (Mode::Train, "resnet_tiny"),    // timm_regnet analogue
+        (Mode::Infer, "dcgan_gen"),
+        (Mode::Infer, "speech_conformer_tiny"), // demucs analogue (audio)
+        (Mode::Infer, "unet_tiny"),
+        (Mode::Infer, "mobilenet_tiny"), // mnasnet1_0 analogue
+    ];
+    let fault = FaultKind::TemplateMismatch.overheads();
+
+    let mut t = Table::new(
+        "PR#65839 slowdowns (paper Table 5)",
+        &["mode", "model", "clean", "faulted", "slowdown"],
+    );
+    let mut by_mode: Vec<(Mode, f64)> = Vec::new();
+    for (mode, model) in targets {
+        let entry = suite.model(model)?;
+        let cfg = RunConfig {
+            mode,
+            repeats: 5,
+            iterations: 2,
+            warmup: 1,
+            artifacts: artifacts.clone().into(),
+            ..Default::default()
+        };
+        let clean = Runner::new(&store, cfg.clone()).run_model(entry)?;
+        let faulted = Runner::new(&store, cfg)
+            .with_overheads(fault.clone())
+            .run_model(entry)?;
+        let slowdown = faulted.iter_secs / clean.iter_secs;
+        by_mode.push((mode, slowdown));
+        t.row(vec![
+            mode.as_str().into(),
+            model.into(),
+            xbench::report::fmt_secs(clean.iter_secs),
+            xbench::report::fmt_secs(faulted.iter_secs),
+            fmt_ratio(slowdown),
+        ]);
+    }
+    print!("{}", t.render());
+    t.write_csv(std::path::Path::new("bench_out/table5_pr65839.csv"))?;
+    for mode in [Mode::Train, Mode::Infer] {
+        let s: Vec<f64> = by_mode.iter().filter(|(m, _)| *m == mode).map(|(_, s)| *s).collect();
+        println!(
+            "{} average slowdown: {} (paper: {} average)",
+            mode.as_str(),
+            fmt_ratio(xbench::metrics::mean(&s)),
+            if mode == Mode::Train { "6.82x" } else { "24.47x" }
+        );
+    }
+    // All results are printed + CSVs closed: exit without running PJRT
+    // destructors (their teardown ordering is flaky on this wrapper —
+    // see DESIGN.md runtime findings).
+    std::process::exit(0);
+}

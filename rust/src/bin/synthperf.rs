@@ -1,0 +1,52 @@
+//! §Perf probe: input-synthesis hot path, before/after A-B.
+//!
+//! Compares the original synthesis path (per-element Box–Muller +
+//! rank-1 literal + reshape: two copies) against the shipped path
+//! (paired Box–Muller + single-copy shaped literal). Recorded in
+//! EXPERIMENTS.md §Perf; kept as a regression probe.
+
+use std::time::Instant;
+use xbench::runtime::{
+    inputs,
+    manifest::{Dtype, InputSpec},
+};
+use xbench::util::Rng;
+
+/// The pre-optimization implementation, kept verbatim for the A-B.
+fn old_synth(spec: &InputSpec, stream: u64) -> xla::Literal {
+    let mut rng = Rng::seed_from_name(&spec.name, stream);
+    let n = spec.element_count();
+    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+    let data: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+    xla::Literal::vec1(&data).reshape(&dims).unwrap()
+}
+
+fn main() {
+    let spec = InputSpec {
+        name: "salinity".into(),
+        shape: vec![1, 16, 32, 32],
+        dtype: Dtype::F32,
+        kind: "normal".into(),
+        bound: 0,
+    };
+    let iters = 2000u64;
+    let t0 = Instant::now();
+    for i in 0..iters {
+        std::hint::black_box(old_synth(&spec, i));
+    }
+    let old = t0.elapsed();
+    let t1 = Instant::now();
+    for i in 0..iters {
+        std::hint::black_box(inputs::synth_literal(&spec, i).unwrap());
+    }
+    let new = t1.elapsed();
+    let n = spec.element_count() as f64;
+    println!(
+        "old: {:.2}us/call ({:.2}ns/elem)  new: {:.2}us/call ({:.2}ns/elem)  speedup {:.2}x",
+        old.as_secs_f64() / iters as f64 * 1e6,
+        old.as_secs_f64() / iters as f64 / n * 1e9,
+        new.as_secs_f64() / iters as f64 * 1e6,
+        new.as_secs_f64() / iters as f64 / n * 1e9,
+        old.as_secs_f64() / new.as_secs_f64()
+    );
+}

@@ -1,0 +1,165 @@
+//! Baseline store: the known-good numbers CI compares nightlies against.
+//!
+//! A JSON file mapping benchmark keys (`model.mode.compiler.bN`) to the
+//! metrics CI gates on (paper §4.2.1: execution time + CPU/GPU memory in
+//! all four mode configurations).
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+use crate::util::Json;
+use std::path::Path;
+
+use crate::coordinator::RunResult;
+
+/// The gated metrics of one benchmark config.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BaselineEntry {
+    pub iter_secs: f64,
+    pub host_bytes: usize,
+    pub device_bytes: usize,
+}
+
+impl From<&RunResult> for BaselineEntry {
+    fn from(r: &RunResult) -> Self {
+        BaselineEntry {
+            iter_secs: r.iter_secs,
+            host_bytes: r.memory.host_peak,
+            device_bytes: r.memory.device_total,
+        }
+    }
+}
+
+/// Key for one benchmark config.
+pub fn bench_key(r: &RunResult) -> String {
+    format!(
+        "{}.{}.{}.b{}",
+        r.model,
+        r.mode.as_str(),
+        r.compiler.as_str(),
+        r.batch
+    )
+}
+
+/// The store: persisted map of baselines.
+#[derive(Debug, Clone, Default)]
+pub struct BaselineStore {
+    pub entries: BTreeMap<String, BaselineEntry>,
+}
+
+impl BaselineStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, r: &RunResult) {
+        self.entries.insert(bench_key(r), BaselineEntry::from(r));
+    }
+
+    pub fn get(&self, key: &str) -> Option<&BaselineEntry> {
+        self.entries.get(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Encode to JSON (util::json — no serde on this testbed).
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.entries
+                .iter()
+                .map(|(k, e)| {
+                    (
+                        k.clone(),
+                        Json::obj(vec![
+                            ("iter_secs", Json::num(e.iter_secs)),
+                            ("host_bytes", Json::num(e.host_bytes as f64)),
+                            ("device_bytes", Json::num(e.device_bytes as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    /// Decode from JSON text.
+    pub fn decode_str(text: &str) -> Result<Self> {
+        let v = crate::util::json::parse(text)?;
+        let mut entries = BTreeMap::new();
+        for (k, e) in v.as_object().context("baseline store must be an object")? {
+            entries.insert(
+                k.clone(),
+                BaselineEntry {
+                    iter_secs: e.req_f64("iter_secs")?,
+                    host_bytes: e.req_usize("host_bytes")?,
+                    device_bytes: e.req_usize("device_bytes")?,
+                },
+            );
+        }
+        Ok(BaselineStore { entries })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_json_pretty())
+            .with_context(|| format!("writing baseline {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading baseline {}", path.display()))?;
+        Self::decode_str(&text).context("parsing baseline store")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Compiler, Mode};
+    use crate::profiler::{Breakdown, MemoryReport};
+
+    fn result(model: &str, secs: f64) -> RunResult {
+        RunResult {
+            model: model.into(),
+            domain: "nlp".into(),
+            mode: Mode::Infer,
+            compiler: Compiler::Fused,
+            batch: 4,
+            iter_secs: secs,
+            repeats_secs: vec![secs],
+            breakdown: Breakdown { active: 1.0, movement: 0.0, idle: 0.0, total_secs: secs },
+            memory: MemoryReport { host_peak: 100, device_total: 200 },
+            throughput: 4.0 / secs,
+        }
+    }
+
+    #[test]
+    fn record_and_roundtrip() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let mut store = BaselineStore::new();
+        store.record(&result("gpt_tiny", 0.01));
+        assert_eq!(store.len(), 1);
+        let path = dir.path().join("baseline.json");
+        store.save(&path).unwrap();
+        let loaded = BaselineStore::load(&path).unwrap();
+        let e = loaded.get("gpt_tiny.infer.fused.b4").unwrap();
+        assert_eq!(e.iter_secs, 0.01);
+        assert_eq!(e.host_bytes, 100);
+    }
+
+    #[test]
+    fn rerecord_overwrites() {
+        let mut store = BaselineStore::new();
+        store.record(&result("m", 1.0));
+        store.record(&result("m", 2.0));
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.get("m.infer.fused.b4").unwrap().iter_secs, 2.0);
+    }
+}

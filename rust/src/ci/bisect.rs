@@ -1,0 +1,103 @@
+//! Commit bisection (§4.2.1): binary search over the day's commits.
+//!
+//! "CI uses the binary search to check the commits submitted on the same
+//! day ordered by their submission timestamps" — given a predicate
+//! "build at commit prefix ..=i regresses", find the first offending
+//! commit in O(log n) benchmark runs instead of n (the paper's CI-cost
+//! optimization over per-commit testing).
+
+/// Outcome of one bisection.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BisectOutcome {
+    /// Index of the first commit whose build regresses.
+    pub first_bad: usize,
+    /// How many predicate evaluations (benchmark runs) it took.
+    pub probes: usize,
+}
+
+/// Binary-search the first index in `0..n` where `is_bad(i)` is true.
+///
+/// Precondition (guaranteed by the caller re-checking the nightly): the
+/// predicate is monotone — once a fault lands, every later prefix carries
+/// it. Returns None if no prefix regresses (flaky nightly signal).
+pub fn bisect_first_bad(n: usize, is_bad: impl FnMut(usize) -> bool) -> Option<BisectOutcome> {
+    bisect_first_bad_opts(n, is_bad, false)
+}
+
+/// [`bisect_first_bad`] with `trust_last`: skip the initial full-prefix
+/// probe when the caller already *measured* the full build as bad (the
+/// nightly run itself) — avoids a noisy re-probe vetoing a real
+/// regression, and saves one benchmark run.
+pub fn bisect_first_bad_opts(
+    n: usize,
+    mut is_bad: impl FnMut(usize) -> bool,
+    trust_last: bool,
+) -> Option<BisectOutcome> {
+    if n == 0 {
+        return None;
+    }
+    let mut probes = 0;
+    let (mut lo, mut hi) = (0usize, n - 1);
+    if !trust_last {
+        // Fast reject: if even the full prefix is good, there is no bad
+        // commit.
+        probes += 1;
+        if !is_bad(hi) {
+            return None;
+        }
+    }
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        probes += 1;
+        if is_bad(mid) {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    Some(BisectOutcome { first_bad: lo, probes })
+}
+
+/// Cost comparison for the ablation bench: probes needed to localize one
+/// fault under per-commit testing vs nightly+bisect.
+pub fn per_commit_cost(n: usize) -> usize {
+    n
+}
+
+pub fn nightly_bisect_cost(n: usize) -> usize {
+    // 1 nightly run + ~log2(n) bisection probes.
+    1 + (n.max(1) as f64).log2().ceil() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_the_planted_commit() {
+        for planted in [0usize, 1, 17, 34, 68, 69] {
+            let out = bisect_first_bad(70, |i| i >= planted).unwrap();
+            assert_eq!(out.first_bad, planted, "planted at {planted}");
+            assert!(out.probes <= 9, "{} probes for n=70", out.probes);
+        }
+    }
+
+    #[test]
+    fn no_fault_returns_none() {
+        assert_eq!(bisect_first_bad(70, |_| false), None);
+        assert_eq!(bisect_first_bad(0, |_| true), None);
+    }
+
+    #[test]
+    fn single_commit_day() {
+        let out = bisect_first_bad(1, |_| true).unwrap();
+        assert_eq!(out.first_bad, 0);
+        assert_eq!(out.probes, 1);
+    }
+
+    #[test]
+    fn bisect_is_cheaper_than_per_commit() {
+        assert!(nightly_bisect_cost(70) < per_commit_cost(70));
+        assert_eq!(nightly_bisect_cost(70), 1 + 7); // ceil(log2 70) = 7
+    }
+}

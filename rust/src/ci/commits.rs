@@ -1,0 +1,165 @@
+//! Simulated commit stream: the repository-evolution substrate (§4.2).
+//!
+//! The paper's CI watches >70 commits/day landing in PyTorch. This
+//! testbed has no PyTorch repository (DESIGN.md substitution), so the
+//! stream is simulated deterministically: a seeded day of commits, most
+//! benign, some carrying a fault from the Table 4 catalog. Nightly
+//! builds compose the day's commits in submission order — exactly the
+//! object the binary-search bisection walks.
+
+
+use crate::coordinator::InjectedOverheads;
+
+use super::faults::FaultKind;
+
+/// One simulated commit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Commit {
+    /// Short hash-like id.
+    pub id: String,
+    /// Submission timestamp within the day (minutes from midnight) —
+    /// the ordering key the paper bisects over.
+    pub minutes: u32,
+    pub message: String,
+    /// The regression the commit introduces, if any.
+    pub fault: Option<FaultKind>,
+}
+
+/// A day of commits, submission-ordered.
+#[derive(Debug, Clone, Default)]
+pub struct Day {
+    pub date: String,
+    pub commits: Vec<Commit>,
+}
+
+const BENIGN_MESSAGES: &[&str] = &[
+    "Refactor dispatcher registration macros",
+    "Add dtype checks to sparse add",
+    "Improve docs for scaled_dot_product_attention",
+    "Fix typo in distributed launcher help",
+    "Extend opinfo coverage for narrow()",
+    "Clean up unused includes in ATen core",
+    "Support negative dims in unfold",
+    "Bump nightly version",
+    "Add missing type annotations to optim",
+    "Rewrite flaky test for dataloader workers",
+    "Vectorize CPU path of clamp_min",
+    "Reduce log spam in autograd engine",
+];
+
+impl Day {
+    /// Generate a deterministic day: `n_commits` commits with the given
+    /// faults planted at seeded positions.
+    pub fn generate(date: &str, n_commits: usize, faults: &[FaultKind], seed: u64) -> Day {
+        assert!(
+            faults.len() <= n_commits,
+            "more faults than commits ({} > {n_commits})",
+            faults.len()
+        );
+        let mut rng = crate::util::Rng::seed_from_u64(seed);
+        // Pick distinct fault positions.
+        let mut positions: Vec<usize> = Vec::new();
+        while positions.len() < faults.len() {
+            let p = rng.gen_range(n_commits as u64) as usize;
+            if !positions.contains(&p) {
+                positions.push(p);
+            }
+        }
+        let mut minutes: Vec<u32> = (0..n_commits)
+            .map(|_| rng.gen_range(24 * 60) as u32)
+            .collect();
+        minutes.sort_unstable();
+
+        let commits = (0..n_commits)
+            .map(|i| {
+                let fault = positions
+                    .iter()
+                    .position(|&p| p == i)
+                    .map(|fi| faults[fi]);
+                let message = match fault {
+                    Some(f) => format!("[{}] {}", f.pr_number(), f.issue()),
+                    None => BENIGN_MESSAGES[rng.gen_range(BENIGN_MESSAGES.len() as u64) as usize].to_string(),
+                };
+                Commit {
+                    id: format!("{:08x}", rng.next_u32()),
+                    minutes: minutes[i],
+                    message,
+                    fault,
+                }
+            })
+            .collect();
+        Day { date: date.to_string(), commits }
+    }
+
+    /// The overheads a build at commit prefix `..=idx` carries (nightly =
+    /// full-day prefix).
+    pub fn overheads_through(&self, idx: usize) -> InjectedOverheads {
+        self.commits[..=idx.min(self.commits.len().saturating_sub(1))]
+            .iter()
+            .filter_map(|c| c.fault.map(|f| f.overheads()))
+            .fold(InjectedOverheads::NONE, |acc, o| acc.merge(&o))
+    }
+
+    /// Overheads of the nightly build (all commits).
+    pub fn nightly_overheads(&self) -> InjectedOverheads {
+        if self.commits.is_empty() {
+            return InjectedOverheads::NONE;
+        }
+        self.overheads_through(self.commits.len() - 1)
+    }
+
+    /// Indices of fault-carrying commits.
+    pub fn fault_indices(&self) -> Vec<usize> {
+        self.commits
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.fault.is_some())
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = Day::generate("2023-01-02", 70, &[FaultKind::TemplateMismatch], 42);
+        let b = Day::generate("2023-01-02", 70, &[FaultKind::TemplateMismatch], 42);
+        assert_eq!(a.commits, b.commits);
+        assert_eq!(a.fault_indices().len(), 1);
+    }
+
+    #[test]
+    fn minutes_are_sorted() {
+        let d = Day::generate("d", 50, &[], 7);
+        let m: Vec<u32> = d.commits.iter().map(|c| c.minutes).collect();
+        let mut sorted = m.clone();
+        sorted.sort_unstable();
+        assert_eq!(m, sorted);
+    }
+
+    #[test]
+    fn prefix_overheads_activate_at_fault() {
+        let d = Day::generate("d", 20, &[FaultKind::DuplicateErrorCheck], 3);
+        let fi = d.fault_indices()[0];
+        if fi > 0 {
+            assert!(d.overheads_through(fi - 1).is_none());
+        }
+        assert!(d.overheads_through(fi).validity_scan);
+        assert!(d.nightly_overheads().validity_scan);
+    }
+
+    #[test]
+    fn multiple_faults_merge() {
+        let d = Day::generate(
+            "d",
+            30,
+            &[FaultKind::DuplicateErrorCheck, FaultKind::WorkspaceLeak],
+            11,
+        );
+        let o = d.nightly_overheads();
+        assert!(o.validity_scan && o.leak_outputs);
+    }
+}

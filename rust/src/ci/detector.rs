@@ -1,0 +1,177 @@
+//! Regression detection (§4.2.1): the 7% gate over time and memory.
+//!
+//! "From our experiences, we define the thresholds as a 7% increment in
+//! execution time and memory usage. If at least one TorchBench benchmark
+//! exceeds the thresholds, PyTorch CI automatically submits a GitHub
+//! issue" — this module is that gate.
+
+
+use crate::coordinator::RunResult;
+
+use super::baseline::{bench_key, BaselineStore};
+
+/// The paper's default gate.
+pub const DEFAULT_THRESHOLD: f64 = 0.07;
+
+/// Which gated metric regressed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    ExecutionTime,
+    HostMemory,
+    DeviceMemory,
+}
+
+impl std::fmt::Display for Metric {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Metric::ExecutionTime => "execution time",
+            Metric::HostMemory => "CPU memory",
+            Metric::DeviceMemory => "GPU memory",
+        })
+    }
+}
+
+/// One detected regression.
+#[derive(Debug, Clone)]
+pub struct Regression {
+    pub bench: String,
+    pub metric: Metric,
+    pub baseline: f64,
+    pub measured: f64,
+    /// measured / baseline.
+    pub ratio: f64,
+}
+
+/// The detector: threshold + baseline store.
+#[derive(Debug, Clone)]
+pub struct Detector {
+    pub threshold: f64,
+}
+
+impl Default for Detector {
+    fn default() -> Self {
+        Detector { threshold: DEFAULT_THRESHOLD }
+    }
+}
+
+impl Detector {
+    pub fn new(threshold: f64) -> Self {
+        Detector { threshold }
+    }
+
+    fn check(
+        &self,
+        bench: &str,
+        metric: Metric,
+        baseline: f64,
+        measured: f64,
+        out: &mut Vec<Regression>,
+    ) {
+        if baseline <= 0.0 {
+            return;
+        }
+        let ratio = measured / baseline;
+        if ratio > 1.0 + self.threshold {
+            out.push(Regression {
+                bench: bench.to_string(),
+                metric,
+                baseline,
+                measured,
+                ratio,
+            });
+        }
+    }
+
+    /// Gate one nightly result against the baseline store.
+    pub fn detect(&self, baselines: &BaselineStore, results: &[RunResult]) -> Vec<Regression> {
+        let mut out = Vec::new();
+        for r in results {
+            let key = bench_key(r);
+            let Some(b) = baselines.get(&key) else { continue };
+            self.check(&key, Metric::ExecutionTime, b.iter_secs, r.iter_secs, &mut out);
+            self.check(
+                &key,
+                Metric::HostMemory,
+                b.host_bytes as f64,
+                r.memory.host_peak as f64,
+                &mut out,
+            );
+            self.check(
+                &key,
+                Metric::DeviceMemory,
+                b.device_bytes as f64,
+                r.memory.device_total as f64,
+                &mut out,
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Compiler, Mode};
+    use crate::profiler::{Breakdown, MemoryReport};
+
+    fn result(secs: f64, host: usize, dev: usize) -> RunResult {
+        RunResult {
+            model: "m".into(),
+            domain: "nlp".into(),
+            mode: Mode::Infer,
+            compiler: Compiler::Fused,
+            batch: 4,
+            iter_secs: secs,
+            repeats_secs: vec![secs],
+            breakdown: Breakdown { active: 1.0, movement: 0.0, idle: 0.0, total_secs: secs },
+            memory: MemoryReport { host_peak: host, device_total: dev },
+            throughput: 4.0 / secs,
+        }
+    }
+
+    fn baselines() -> BaselineStore {
+        let mut s = BaselineStore::new();
+        s.record(&result(1.0, 1000, 2000));
+        s
+    }
+
+    #[test]
+    fn under_threshold_passes() {
+        let d = Detector::default();
+        assert!(d.detect(&baselines(), &[result(1.06, 1000, 2000)]).is_empty());
+    }
+
+    #[test]
+    fn time_regression_detected() {
+        let d = Detector::default();
+        let regs = d.detect(&baselines(), &[result(1.12, 1000, 2000)]);
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].metric, Metric::ExecutionTime);
+        assert!((regs[0].ratio - 1.12).abs() < 1e-9);
+    }
+
+    #[test]
+    fn memory_regressions_detected_independently() {
+        let d = Detector::default();
+        let regs = d.detect(&baselines(), &[result(1.0, 1200, 2500)]);
+        let metrics: Vec<Metric> = regs.iter().map(|r| r.metric).collect();
+        assert!(metrics.contains(&Metric::HostMemory));
+        assert!(metrics.contains(&Metric::DeviceMemory));
+        assert_eq!(regs.len(), 2);
+    }
+
+    #[test]
+    fn unknown_bench_is_skipped() {
+        let d = Detector::default();
+        let mut r = result(9.9, 9, 9);
+        r.model = "unknown".into();
+        assert!(d.detect(&baselines(), &[r]).is_empty());
+    }
+
+    #[test]
+    fn custom_threshold() {
+        let d = Detector::new(0.5);
+        assert!(d.detect(&baselines(), &[result(1.4, 1000, 2000)]).is_empty());
+        assert_eq!(d.detect(&baselines(), &[result(1.6, 1000, 2000)]).len(), 1);
+    }
+}

@@ -1,0 +1,153 @@
+//! The fault catalog: paper Table 4's seven problematic PRs.
+//!
+//! Each fault maps a real PyTorch regression class onto concrete injected
+//! work in the runner ([`crate::coordinator::InjectedOverheads`]). The
+//! simulated commit stream attaches these to commits; nightly builds
+//! carry the union of the day's faults; the detector + bisector then find
+//! them from *measured* slowdowns, exactly as §4.2 describes.
+
+
+use crate::coordinator::InjectedOverheads;
+
+/// One Table 4 row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultKind {
+    /// PR#85447 — break-chain API change: cuBLAS workspace never freed
+    /// (memory bloat).
+    WorkspaceLeak,
+    /// PR#61056 — duplicate error check: redundant `valid.all()` scan
+    /// (runtime inflation).
+    DuplicateErrorCheck,
+    /// PR#65594 — optimization without device-compatibility gating:
+    /// fusion path disabled on this device (runtime inflation).
+    DeviceCompatFusion,
+    /// PR#72148 — suboptimal library configuration: workspace re-derived
+    /// per dispatch (runtime inflation).
+    SuboptimalLibConfig,
+    /// PR#71904 — redundant bound checks on index tensors (runtime
+    /// inflation).
+    RedundantBoundChecks,
+    /// PR#65839 — template mismatch: dtype round-trip conversions
+    /// (runtime inflation; Table 5 quantifies per model).
+    TemplateMismatch,
+    /// PR#87855 — misused error handling: eager backtraces on benign
+    /// fallback probes (runtime inflation; §1.1's 10× on quant models).
+    MisusedErrorHandling,
+}
+
+impl FaultKind {
+    /// The PyTorch PR number of the paper's Table 4 row.
+    pub fn pr_number(self) -> u32 {
+        match self {
+            FaultKind::WorkspaceLeak => 85447,
+            FaultKind::DuplicateErrorCheck => 61056,
+            FaultKind::DeviceCompatFusion => 65594,
+            FaultKind::SuboptimalLibConfig => 72148,
+            FaultKind::RedundantBoundChecks => 71904,
+            FaultKind::TemplateMismatch => 65839,
+            FaultKind::MisusedErrorHandling => 87855,
+        }
+    }
+
+    pub fn issue(self) -> &'static str {
+        match self {
+            FaultKind::WorkspaceLeak => "Break-chain API change",
+            FaultKind::DuplicateErrorCheck => "Duplicate error check",
+            FaultKind::DeviceCompatFusion => "Optimization's device compatibility",
+            FaultKind::SuboptimalLibConfig => "Suboptimal library configuration",
+            FaultKind::RedundantBoundChecks => "Redundant bound checks",
+            FaultKind::TemplateMismatch => "Template Mismatch",
+            FaultKind::MisusedErrorHandling => "Misused error handling",
+        }
+    }
+
+    /// Whether the paper records the PR as fixed-by-patch or reverted.
+    pub fn resolution(self) -> &'static str {
+        match self {
+            FaultKind::TemplateMismatch | FaultKind::MisusedErrorHandling => "Reverted",
+            _ => "Fixed",
+        }
+    }
+
+    /// The performance-issue class (Table 4 column 3).
+    pub fn perf_issue(self) -> &'static str {
+        match self {
+            FaultKind::WorkspaceLeak => "Memory bloat",
+            _ => "Runtime inflation",
+        }
+    }
+
+    /// Map the fault onto runner-injected work.
+    pub fn overheads(self) -> InjectedOverheads {
+        match self {
+            FaultKind::WorkspaceLeak => InjectedOverheads {
+                leak_outputs: true,
+                ..Default::default()
+            },
+            FaultKind::DuplicateErrorCheck => InjectedOverheads {
+                validity_scan: true,
+                ..Default::default()
+            },
+            FaultKind::DeviceCompatFusion => InjectedOverheads {
+                disable_fusion: true,
+                ..Default::default()
+            },
+            FaultKind::SuboptimalLibConfig => InjectedOverheads {
+                workspace_kb: 32768,
+                ..Default::default()
+            },
+            FaultKind::RedundantBoundChecks => InjectedOverheads {
+                bound_checks: true,
+                ..Default::default()
+            },
+            FaultKind::TemplateMismatch => InjectedOverheads {
+                convert_f64_roundtrip: true,
+                ..Default::default()
+            },
+            FaultKind::MisusedErrorHandling => InjectedOverheads {
+                rich_error_probes: 400,
+                ..Default::default()
+            },
+        }
+    }
+
+    /// The full catalog, Table 4 row order.
+    pub fn catalog() -> [FaultKind; 7] {
+        [
+            FaultKind::WorkspaceLeak,
+            FaultKind::DuplicateErrorCheck,
+            FaultKind::DeviceCompatFusion,
+            FaultKind::SuboptimalLibConfig,
+            FaultKind::RedundantBoundChecks,
+            FaultKind::TemplateMismatch,
+            FaultKind::MisusedErrorHandling,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_matches_table4() {
+        let prs: Vec<u32> = FaultKind::catalog().iter().map(|f| f.pr_number()).collect();
+        assert_eq!(prs, vec![85447, 61056, 65594, 72148, 71904, 65839, 87855]);
+    }
+
+    #[test]
+    fn reverted_rows() {
+        assert_eq!(FaultKind::TemplateMismatch.resolution(), "Reverted");
+        assert_eq!(FaultKind::MisusedErrorHandling.resolution(), "Reverted");
+        assert_eq!(FaultKind::WorkspaceLeak.resolution(), "Fixed");
+    }
+
+    #[test]
+    fn only_memory_fault_bloats() {
+        for f in FaultKind::catalog() {
+            let o = f.overheads();
+            assert_eq!(o.leak_outputs, f == FaultKind::WorkspaceLeak);
+            assert!(!o.is_none(), "{f:?} must inject something");
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Auto-filed issue reports (§4.2.1): "PyTorch CI automatically submits a
+//! GitHub issue with the detailed performance report and the problematic
+//! commit" — rendered here as markdown.
+
+
+use super::commits::Commit;
+use super::detector::Regression;
+
+/// The report CI files when a nightly regresses.
+#[derive(Debug, Clone)]
+pub struct IssueReport {
+    pub date: String,
+    pub regressions: Vec<Regression>,
+    /// The bisected culprit, if bisection converged.
+    pub culprit: Option<Commit>,
+    /// Benchmark runs spent (nightly + bisection probes).
+    pub runs_spent: usize,
+}
+
+impl IssueReport {
+    pub fn title(&self) -> String {
+        let worst = self
+            .regressions
+            .iter()
+            .max_by(|a, b| a.ratio.partial_cmp(&b.ratio).unwrap());
+        match (worst, &self.culprit) {
+            (Some(w), Some(c)) => format!(
+                "[perf] {:.0}% {} regression on {} (bisected to {})",
+                (w.ratio - 1.0) * 100.0,
+                w.metric,
+                w.bench,
+                c.id
+            ),
+            (Some(w), None) => format!(
+                "[perf] {:.0}% {} regression on {} (culprit unknown)",
+                (w.ratio - 1.0) * 100.0,
+                w.metric,
+                w.bench
+            ),
+            _ => format!("[perf] nightly {} regression report", self.date),
+        }
+    }
+
+    /// Render the full issue body as markdown.
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("# {}\n\n", self.title()));
+        out.push_str(&format!(
+            "Nightly `{}` failed the performance gate (threshold 7%).\n\n",
+            self.date
+        ));
+        out.push_str("| benchmark | metric | baseline | measured | ratio |\n");
+        out.push_str("|---|---|---|---|---|\n");
+        for r in &self.regressions {
+            out.push_str(&format!(
+                "| {} | {} | {:.6} | {:.6} | {:.2}x |\n",
+                r.bench, r.metric, r.baseline, r.measured, r.ratio
+            ));
+        }
+        match &self.culprit {
+            Some(c) => out.push_str(&format!(
+                "\nBisection identified commit `{}` (\"{}\", submitted {:02}:{:02}) in {} benchmark runs.\n",
+                c.id,
+                c.message,
+                c.minutes / 60,
+                c.minutes % 60,
+                self.runs_spent
+            )),
+            None => out.push_str("\nBisection did not converge (noise suspected); manual triage required.\n"),
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ci::detector::Metric;
+
+    fn report() -> IssueReport {
+        IssueReport {
+            date: "2023-01-02".into(),
+            regressions: vec![Regression {
+                bench: "gpt_tiny.infer.fused.b4".into(),
+                metric: Metric::ExecutionTime,
+                baseline: 1.0,
+                measured: 1.5,
+                ratio: 1.5,
+            }],
+            culprit: Some(Commit {
+                id: "deadbeef".into(),
+                minutes: 14 * 60 + 7,
+                message: "[65839] Template Mismatch".into(),
+                fault: None,
+            }),
+            runs_spent: 8,
+        }
+    }
+
+    #[test]
+    fn title_names_culprit_and_ratio() {
+        let t = report().title();
+        assert!(t.contains("50%"), "{t}");
+        assert!(t.contains("deadbeef"), "{t}");
+    }
+
+    #[test]
+    fn markdown_has_table_and_commit() {
+        let md = report().to_markdown();
+        assert!(md.contains("| gpt_tiny.infer.fused.b4 |"));
+        assert!(md.contains("14:07"));
+        assert!(md.contains("8 benchmark runs"));
+    }
+
+    #[test]
+    fn unconverged_bisection_asks_for_triage() {
+        let mut r = report();
+        r.culprit = None;
+        assert!(r.to_markdown().contains("manual triage"));
+    }
+}

@@ -1,0 +1,203 @@
+//! Run configuration: what to benchmark and how.
+//!
+//! Mirrors the paper's §2.2 configuration axes — computation-only
+//! measurement, batch-size policy, precision, mode (train/inference),
+//! compiler (fused/eager) — plus harness knobs (warmup, iterations,
+//! artifact dir). Configs load from a TOML subset (`xbench.toml`, parsed
+//! by [`crate::util::toml_lite`]) and are overridable from the CLI.
+
+mod schema;
+
+pub use schema::{BatchPolicy, Compiler, Mode, Precision, RunConfig, SuiteSelection};
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::util::toml_lite::{self, TomlDoc};
+
+impl Mode {
+    pub fn parse(s: &str) -> Result<Mode> {
+        match s {
+            "infer" | "inference" => Ok(Mode::Infer),
+            "train" | "training" => Ok(Mode::Train),
+            _ => bail!("unknown mode {s:?} (infer|train)"),
+        }
+    }
+}
+
+impl Compiler {
+    pub fn parse(s: &str) -> Result<Compiler> {
+        match s {
+            "fused" => Ok(Compiler::Fused),
+            "eager" => Ok(Compiler::Eager),
+            _ => bail!("unknown compiler {s:?} (fused|eager)"),
+        }
+    }
+}
+
+impl Precision {
+    pub fn parse(s: &str) -> Result<Precision> {
+        match s {
+            "f32" | "fp32" => Ok(Precision::F32),
+            "tf32" => Ok(Precision::Tf32),
+            "bf16" => Ok(Precision::Bf16),
+            _ => bail!("unknown precision {s:?} (f32|tf32|bf16)"),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load a TOML config file, falling back to defaults for absent keys.
+    pub fn from_toml(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let cfg = Self::from_toml_str(&text)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Decode from TOML text (defaults for anything absent).
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let doc: TomlDoc = toml_lite::parse(text)?;
+        let mut cfg = RunConfig::default();
+        if let Some(v) = doc.get("mode") {
+            cfg.mode = Mode::parse(v.as_str().context("mode must be a string")?)?;
+        }
+        if let Some(v) = doc.get("compiler") {
+            cfg.compiler = Compiler::parse(v.as_str().context("compiler must be a string")?)?;
+        }
+        if let Some(v) = doc.get("precision") {
+            cfg.precision = Precision::parse(v.as_str().context("precision must be a string")?)?;
+        }
+        let read_usize = |key: &str| -> Result<Option<usize>> {
+            match doc.get(key) {
+                None => Ok(None),
+                Some(v) => {
+                    let i = v.as_int().with_context(|| format!("{key} must be an integer"))?;
+                    anyhow::ensure!(i >= 0, "{key} must be >= 0");
+                    Ok(Some(i as usize))
+                }
+            }
+        };
+        if let Some(v) = read_usize("iterations")? {
+            cfg.iterations = v;
+        }
+        if let Some(v) = read_usize("repeats")? {
+            cfg.repeats = v;
+        }
+        if let Some(v) = read_usize("warmup")? {
+            cfg.warmup = v;
+        }
+        if let Some(v) = doc.get("artifacts") {
+            cfg.artifacts = PathBuf::from(v.as_str().context("artifacts must be a string")?);
+        }
+        if let Some(v) = doc.get("batch.policy") {
+            cfg.batch = match v.as_str().context("batch.policy must be a string")? {
+                "default" => BatchPolicy::Default,
+                "sweep" => BatchPolicy::Sweep,
+                "fixed" => {
+                    let size = doc
+                        .get("batch.size")
+                        .and_then(|s| s.as_int())
+                        .context("batch.policy = \"fixed\" requires batch.size")?;
+                    anyhow::ensure!(size >= 1, "batch.size must be >= 1");
+                    BatchPolicy::Fixed(size as usize)
+                }
+                other => bail!("unknown batch.policy {other:?} (default|fixed|sweep)"),
+            };
+        }
+        if let Some(v) = doc.get("selection.models") {
+            cfg.selection.models = v
+                .as_str_array()
+                .context("selection.models must be a string array")?
+                .to_vec();
+        }
+        if let Some(v) = doc.get("selection.domain") {
+            cfg.selection.domain =
+                Some(v.as_str().context("selection.domain must be a string")?.to_string());
+        }
+        if let Some(v) = doc.get("selection.tag") {
+            cfg.selection.tag =
+                Some(v.as_str().context("selection.tag must be a string")?.to_string());
+        }
+        Ok(cfg)
+    }
+
+    /// Reject configurations that would produce meaningless measurements.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.iterations >= 1, "iterations must be >= 1");
+        anyhow::ensure!(
+            self.repeats >= 1,
+            "repeats must be >= 1 (paper runs each benchmark 10x, reporting the median run)"
+        );
+        if let BatchPolicy::Fixed(b) = self.batch {
+            anyhow::ensure!(b >= 1, "fixed batch size must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_zero_iterations() {
+        let cfg = RunConfig { iterations: 0, ..Default::default() };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn parses_full_toml() {
+        let toml = r#"
+            mode = "train"
+            compiler = "eager"
+            precision = "tf32"
+            iterations = 3
+            repeats = 5
+            warmup = 2
+            [batch]
+            policy = "sweep"
+            [selection]
+            models = ["gpt_tiny"]
+            domain = "nlp"
+        "#;
+        let cfg = RunConfig::from_toml_str(toml).unwrap();
+        assert_eq!(cfg.mode, Mode::Train);
+        assert_eq!(cfg.compiler, Compiler::Eager);
+        assert_eq!(cfg.precision, Precision::Tf32);
+        assert_eq!(cfg.iterations, 3);
+        assert_eq!(cfg.repeats, 5);
+        assert!(matches!(cfg.batch, BatchPolicy::Sweep));
+        assert_eq!(cfg.selection.models, vec!["gpt_tiny"]);
+        assert_eq!(cfg.selection.domain.as_deref(), Some("nlp"));
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn parses_fixed_batch() {
+        let cfg = RunConfig::from_toml_str(
+            "[batch]\npolicy = \"fixed\"\nsize = 8\n",
+        )
+        .unwrap();
+        assert!(matches!(cfg.batch, BatchPolicy::Fixed(8)));
+    }
+
+    #[test]
+    fn fixed_batch_requires_size() {
+        assert!(RunConfig::from_toml_str("[batch]\npolicy = \"fixed\"\n").is_err());
+    }
+
+    #[test]
+    fn empty_toml_is_defaults() {
+        let cfg = RunConfig::from_toml_str("").unwrap();
+        assert_eq!(cfg.mode, Mode::Infer);
+        assert_eq!(cfg.repeats, 10);
+    }
+}

@@ -1,0 +1,117 @@
+//! Schema types for [`RunConfig`] and its enums (parsed from the
+//! TOML-subset by `config::mod`; no external serialization framework).
+
+use std::path::PathBuf;
+
+/// Train or inference benchmark (paper Figures 1 vs 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Mode {
+    #[default]
+    Infer,
+    Train,
+}
+
+impl Mode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Mode::Infer => "infer",
+            Mode::Train => "train",
+        }
+    }
+}
+
+/// Execution strategy: one fused XLA executable (the TorchInductor
+/// analogue) or per-stage dispatch (the eager analogue). Paper §3.2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Compiler {
+    #[default]
+    Fused,
+    Eager,
+}
+
+impl Compiler {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Compiler::Fused => "fused",
+            Compiler::Eager => "eager",
+        }
+    }
+}
+
+/// Numeric precision configuration (paper §2.2: FP32/TF32 default).
+/// On this testbed precision only affects the analytical device model —
+/// measured CPU execution is f32 throughout.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    #[default]
+    F32,
+    Tf32,
+    Bf16,
+}
+
+/// Batch-size policy (paper §2.2): training uses the model's default
+/// (convergence-preserving); inference may sweep doubling sizes for the
+/// best-throughput batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchPolicy {
+    /// The model's default batch size.
+    Default,
+    /// A specific batch size (must exist among the lowered artifacts).
+    Fixed(usize),
+    /// Doubling sweep over available inference artifacts; pick best
+    /// throughput (sweep-tagged models only).
+    Sweep,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy::Default
+    }
+}
+
+/// Which zoo entries to run.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct SuiteSelection {
+    /// Explicit model names; empty = all.
+    pub models: Vec<String>,
+    /// Restrict to one domain (e.g. "nlp").
+    pub domain: Option<String>,
+    /// Restrict to models carrying a tag (e.g. "quant").
+    pub tag: Option<String>,
+}
+
+/// Full benchmark-run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub mode: Mode,
+    pub compiler: Compiler,
+    pub precision: Precision,
+    pub batch: BatchPolicy,
+    /// Measured iterations per repeat (paper: 1 iteration, repeated).
+    pub iterations: usize,
+    /// Independent repeats; the median repeat is reported (paper: 10).
+    pub repeats: usize,
+    /// Warmup iterations excluded from measurement (first-touch compile,
+    /// caches) — the paper's "medium execution time" protocol implies
+    /// steady state.
+    pub warmup: usize,
+    /// Directory of AOT artifacts + manifest.json.
+    pub artifacts: PathBuf,
+    pub selection: SuiteSelection,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            mode: Mode::Infer,
+            compiler: Compiler::Fused,
+            precision: Precision::F32,
+            batch: BatchPolicy::Default,
+            iterations: 1,
+            repeats: 10,
+            warmup: 2,
+            artifacts: PathBuf::from("artifacts"),
+            selection: SuiteSelection::default(),
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! Eager (staged) execution: the paper's default-compiler analogue.
+//!
+//! Instead of one fused executable, the model runs as a chain of
+//! per-stage executables (one per layer/op group, AOT-lowered by
+//! `aot.py`). Each stage is a separate PJRT dispatch with its own
+//! host-side bookkeeping — the launch overhead and intermediate
+//! materialization that TorchInductor's fusion removes (§3.2). The
+//! Fig 3/4 comparison is `Runner::run_model` with `Compiler::Fused` vs
+//! this path.
+
+use anyhow::Result;
+
+use crate::config::Compiler;
+use crate::hlo;
+use crate::metrics;
+use crate::profiler::{HostMemTracker, MemoryReport, PhaseKind, Timeline};
+use crate::runtime::{inputs, params, ModelEntry};
+
+use super::runner::{RunResult, Runner};
+
+/// Run a stageable model op-at-a-time (inference).
+pub fn run_eager_infer(runner: &Runner, entry: &ModelEntry) -> Result<RunResult> {
+    let stages = entry
+        .stages
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("{} has no staged artifacts", entry.name))?;
+    let batch = stages.batch;
+    let infer = entry
+        .infer_at(batch)
+        .ok_or_else(|| anyhow::anyhow!("{}: no inference inputs at batch {batch}", entry.name))?;
+    let device = runner.store.device();
+
+    // Compile every stage (cold-compile cost excluded, like fused).
+    let exes: Vec<_> = stages
+        .list
+        .iter()
+        .map(|s| runner.store.get(&s.artifact))
+        .collect::<Result<_>>()?;
+    // Diagnostic only (RSS attribution is allocator-order biased; the
+    // honest host-memory signal is the staged-bytes tracker below).
+    let _exe_host_bytes: usize = stages
+        .list
+        .iter()
+        .map(|s| runner.store.compile_rss(&s.artifact))
+        .sum();
+
+    // Stage parameters resident on device, per stage.
+    let param_lits = params::load_params(runner.store.dir(), entry)?;
+    let mut host_mem = HostMemTracker::new();
+    let stage_params: Vec<Vec<xla::PjRtBuffer>> = stages
+        .list
+        .iter()
+        .map(|s| {
+            s.param_idx
+                .iter()
+                .map(|&i| device.upload(&param_lits[i]).map(|t| t.value))
+                .collect::<Result<Vec<_>>>()
+        })
+        .collect::<Result<_>>()?;
+    // param_lits intentionally kept alive (buffers may alias host data).
+
+    // §3.2 outlier machinery: JIT guard revalidation before every reuse
+    // of a traced stage (see coordinator::guards).
+    let guard_set = (runner.overheads.guard_checks_per_stage > 0).then(|| {
+        super::guards::GuardSet::from_stages(stages, runner.overheads.guard_checks_per_stage)
+    });
+
+    let mut repeats: Vec<(f64, Timeline)> = Vec::new();
+    let mut peak_act_bytes = 0usize;
+    for rep in 0..runner.cfg.repeats {
+        let mut tl = Timeline::new();
+        for iter in 0..runner.cfg.warmup + runner.cfg.iterations {
+            let measured = iter >= runner.cfg.warmup;
+            let mut iter_tl = Timeline::new();
+            let stream = (rep * 1000 + iter) as u64;
+
+            let lits = iter_tl.host("synth_inputs", || {
+                inputs::synth_inputs(&infer.inputs, stream)
+            })?;
+            let lits = runner.apply_input_overheads(&mut iter_tl, &infer.inputs, lits)?;
+            for l in &lits {
+                host_mem.alloc(l.size_bytes());
+            }
+            let mut act_bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(lits.len());
+            for l in &lits {
+                let t = device.upload(l)?;
+                iter_tl.push(PhaseKind::H2D, "upload_batch", t.elapsed);
+                act_bufs.push(t.value);
+            }
+            // Keepalive for the literals backing act_bufs (upload()
+            // contract): starts as the model inputs, then each stage's
+            // fetched leaves. Replaced only *after* the buffers that
+            // alias it have been dropped.
+            let mut act_keepalive: Vec<xla::Literal> = Vec::new();
+
+            // Dispatch the chain: each stage consumes the previous
+            // activation(s); intermediates materialize as real device
+            // buffers between dispatches (what fusion eliminates).
+            #[allow(unused_assignments)]
+            let mut live_act_bytes: usize =
+                stages.list.first().map(|s| s.acts_in.iter().map(|a| a.byte_size()).sum()).unwrap_or(0);
+            for (si, (stage, exe)) in stages.list.iter().zip(&exes).enumerate() {
+                if let Some(gs) = &guard_set {
+                    iter_tl.host("guard_checks", || {
+                        std::hint::black_box(gs.evaluate());
+                    });
+                }
+                runner.apply_dispatch_overheads(&mut iter_tl, entry);
+                // Eager-mode dispatch bookkeeping (op record, arg
+                // marshalling) happens on the host every op.
+                let sp = &stage_params[si];
+                let refs: Vec<&xla::PjRtBuffer> =
+                    sp.iter().chain(act_bufs.iter()).collect();
+                // The stage output is a 1-tuple buffer; it stays on
+                // device and becomes the next stage's activation. PJRT
+                // cannot split tuple buffers without a host copy, so the
+                // handoff is a timed D2H+H2D hop — the materialization
+                // cost eager execution pays on this runtime.
+                let run = exe.run_profiled(&refs)?;
+                iter_tl.push(PhaseKind::Compute, stage.name.clone(), run.compute);
+                iter_tl.push(PhaseKind::D2H, "stage_out", run.d2h);
+                let last_stage = si + 1 == stages.list.len();
+                let mut next = Vec::with_capacity(run.leaves.len());
+                let mut bytes = 0usize;
+                for leaf in &run.leaves {
+                    // Every intermediate materializes on the host in eager
+                    // mode (the D2H+H2D hop) — the CPU-memory cost the
+                    // paper credits Inductor with removing (Fig 3/4 CM).
+                    host_mem.alloc(leaf.size_bytes());
+                    bytes += leaf.size_bytes();
+                    if !last_stage {
+                        // Feed the next stage. The final stage's output
+                        // stays on the host: uploading it would leave a
+                        // pending async transfer that nothing consumes —
+                        // dropping such a buffer races the transfer
+                        // against the literal's lifetime (observed UAF).
+                        let t = device.upload(leaf)?;
+                        iter_tl.push(PhaseKind::H2D, "stage_in", t.elapsed);
+                        next.push(t.value);
+                    }
+                }
+                live_act_bytes = bytes;
+                peak_act_bytes = peak_act_bytes.max(live_act_bytes);
+                act_bufs = next; // drops the buffers aliasing act_keepalive…
+                for old in &act_keepalive {
+                    host_mem.free(old.size_bytes());
+                }
+                act_keepalive = run.leaves; // …then their backing leaves
+            }
+            for l in &lits {
+                host_mem.free(l.size_bytes());
+            }
+            std::hint::black_box(&act_bufs);
+            drop(act_bufs); // before act_keepalive (drop order: bufs first)
+            for old in &act_keepalive {
+                host_mem.free(old.size_bytes());
+            }
+            drop(act_keepalive);
+            if measured {
+                tl.extend(&iter_tl);
+            }
+        }
+        let iter_secs = tl.total().as_secs_f64() / runner.cfg.iterations as f64;
+        repeats.push((iter_secs, tl));
+    }
+
+    // Device memory: only one stage's arena is ever live at a time, plus
+    // resident params and the threaded activation (vs the fused module's
+    // whole-graph arena) — the Fig 3/4 GM direction.
+    let max_stage_arena = stages
+        .list
+        .iter()
+        .filter_map(|s| {
+            hlo::analyze_file(&runner.store.dir().join(&s.artifact))
+                .ok()
+                .map(|c| c.arena_bytes)
+        })
+        .max()
+        .unwrap_or(0);
+    let memory = MemoryReport {
+        host_peak: host_mem.peak(),
+        device_total: entry.param_bytes() + max_stage_arena + peak_act_bytes,
+    };
+    let _ = metrics::median(&repeats.iter().map(|(s, _)| *s).collect::<Vec<_>>());
+    runner.finish(entry, batch, Compiler::Eager, repeats, memory)
+}

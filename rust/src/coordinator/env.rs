@@ -1,0 +1,125 @@
+//! Host-side RL environment (the non-framework component of paper §3.1).
+//!
+//! The paper attributes RL's ~85% GPU idleness to environment interaction
+//! that happens outside the framework. XBench reproduces that structurally:
+//! this pole-balancing physics simulation runs *on the host inside the
+//! coordinator* between device dispatches of the `actor_critic` model, so
+//! the breakdown profiler attributes its wall time to device idleness.
+
+/// A batch of independent pole-cart environments (f64 physics, like the
+/// classic control implementations the paper's RL models wrap).
+#[derive(Debug, Clone)]
+pub struct CartPoleSim {
+    /// Per-env state: [x, x_dot, theta, theta_dot].
+    states: Vec<[f64; 4]>,
+    steps: u64,
+}
+
+const GRAVITY: f64 = 9.8;
+const CART_MASS: f64 = 1.0;
+const POLE_MASS: f64 = 0.1;
+const POLE_HALF_LEN: f64 = 0.5;
+const FORCE_MAG: f64 = 10.0;
+const TAU: f64 = 0.02;
+
+impl CartPoleSim {
+    pub fn new(batch: usize) -> Self {
+        // Deterministic spread of initial states.
+        let states = (0..batch)
+            .map(|i| {
+                let f = (i as f64 + 1.0) * 0.01;
+                [f, -f, f * 0.5, -f * 0.5]
+            })
+            .collect();
+        CartPoleSim { states, steps: 0 }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.states.len()
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Advance every environment one physics step under `actions`
+    /// (clamped to [-1, 1], scaled to the force magnitude). Returns the
+    /// flattened next observations (4 features per env, padded/cycled to
+    /// `obs_dim`) — the host work the paper blames for RL idleness.
+    pub fn step(&mut self, actions: &[f32], obs_dim: usize) -> Vec<f32> {
+        let mut obs = Vec::with_capacity(self.states.len() * obs_dim);
+        for (i, s) in self.states.iter_mut().enumerate() {
+            let a = actions.get(i).copied().unwrap_or(0.0).clamp(-1.0, 1.0) as f64;
+            let force = a * FORCE_MAG;
+            let [x, x_dot, theta, theta_dot] = *s;
+            let total_mass = CART_MASS + POLE_MASS;
+            let pole_ml = POLE_MASS * POLE_HALF_LEN;
+            let cos_t = theta.cos();
+            let sin_t = theta.sin();
+            let temp = (force + pole_ml * theta_dot * theta_dot * sin_t) / total_mass;
+            let theta_acc = (GRAVITY * sin_t - cos_t * temp)
+                / (POLE_HALF_LEN * (4.0 / 3.0 - POLE_MASS * cos_t * cos_t / total_mass));
+            let x_acc = temp - pole_ml * theta_acc * cos_t / total_mass;
+            *s = [
+                x + TAU * x_dot,
+                x_dot + TAU * x_acc,
+                theta + TAU * theta_dot,
+                theta_dot + TAU * theta_acc,
+            ];
+            // Reset fallen poles so the sim runs forever.
+            if s[2].abs() > 0.21 || s[0].abs() > 2.4 {
+                let f = (i as f64 + 1.0) * 0.01;
+                *s = [f, -f, f * 0.5, -f * 0.5];
+            }
+            for k in 0..obs_dim {
+                obs.push(s[k % 4] as f32);
+            }
+        }
+        self.steps += 1;
+        obs
+    }
+
+    /// Roll out `n` steps with the given constant actions (the
+    /// experience-collection phase between training iterations).
+    pub fn rollout(&mut self, actions: &[f32], obs_dim: usize, n: usize) -> Vec<f32> {
+        let mut last = Vec::new();
+        for _ in 0..n {
+            last = self.step(actions, obs_dim);
+        }
+        last
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steps_advance_state() {
+        let mut env = CartPoleSim::new(4);
+        let o1 = env.step(&[1.0, -1.0, 0.5, 0.0], 17);
+        assert_eq!(o1.len(), 4 * 17);
+        let o2 = env.step(&[1.0, -1.0, 0.5, 0.0], 17);
+        assert_ne!(o1, o2, "physics must move");
+        assert_eq!(env.steps(), 2);
+    }
+
+    #[test]
+    fn fallen_poles_reset() {
+        let mut env = CartPoleSim::new(1);
+        // Push hard in one direction long enough to fall over.
+        for _ in 0..500 {
+            env.step(&[1.0], 4);
+        }
+        // State stays bounded because of resets.
+        let obs = env.step(&[1.0], 4);
+        assert!(obs.iter().all(|v| v.is_finite() && v.abs() < 10.0));
+    }
+
+    #[test]
+    fn rollout_runs_n_steps() {
+        let mut env = CartPoleSim::new(2);
+        env.rollout(&[0.1, 0.2], 8, 10);
+        assert_eq!(env.steps(), 10);
+    }
+}

@@ -1,0 +1,94 @@
+//! Injected overheads: the mechanism behind CI fault replay (§4.2).
+//!
+//! Each field models one *class* of real PyTorch regression from the
+//! paper's Table 4, implemented as genuine extra work in the runner's hot
+//! path (never a sleep): the CI detector then measures honest slowdowns.
+//! `ci::faults` maps named PRs onto these knobs.
+
+
+/// Work injected into the benchmark hot path.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct InjectedOverheads {
+    /// PR#61056 analogue: redundant host-side validity scan (`valid.all()`)
+    /// over every f32 input element, every iteration.
+    pub validity_scan: bool,
+    /// PR#71904 analogue: redundant per-element bound checks over every
+    /// i32 index input, every iteration.
+    pub bound_checks: bool,
+    /// PR#65839 analogue: template mismatch forcing a round-trip dtype
+    /// conversion (f32→f64→f32) of the input batch each iteration.
+    pub convert_f64_roundtrip: bool,
+    /// PR#72148 analogue: suboptimal library workspace config — a real
+    /// host-side re-initialization of a scratch workspace per dispatch,
+    /// `workspace_kb` kilobytes zeroed each time (0 = off).
+    pub workspace_kb: usize,
+    /// PR#65594 analogue: fusion bypassed on this "device" — the runner
+    /// falls back to staged (eager) execution even when fused was asked.
+    pub disable_fusion: bool,
+    /// PR#85447 analogue: workspace memory never reclaimed — the runner
+    /// keeps every iteration's output alive (device-buffer leak).
+    pub leak_outputs: bool,
+    /// PR#87855 / §1.1 analogue: error handling with eager backtrace
+    /// construction; quant-tagged models probe a fallback registry per
+    /// dispatch, and each probe throws this many rich errors.
+    pub rich_error_probes: usize,
+    /// §3.2 outlier analogue: TorchDynamo-style guard revalidation —
+    /// this many guard checks per staged dispatch (hf_Reformer: 2699
+    /// total, ~30% heavy). 0 = no guard machinery.
+    pub guard_checks_per_stage: usize,
+}
+
+impl InjectedOverheads {
+    pub const NONE: InjectedOverheads = InjectedOverheads {
+        validity_scan: false,
+        bound_checks: false,
+        convert_f64_roundtrip: false,
+        workspace_kb: 0,
+        disable_fusion: false,
+        leak_outputs: false,
+        rich_error_probes: 0,
+        guard_checks_per_stage: 0,
+    };
+
+    pub fn is_none(&self) -> bool {
+        *self == Self::NONE
+    }
+
+    /// Compose two overhead sets (a nightly build carries the union of
+    /// the day's commits).
+    pub fn merge(&self, other: &InjectedOverheads) -> InjectedOverheads {
+        InjectedOverheads {
+            validity_scan: self.validity_scan || other.validity_scan,
+            bound_checks: self.bound_checks || other.bound_checks,
+            convert_f64_roundtrip: self.convert_f64_roundtrip || other.convert_f64_roundtrip,
+            workspace_kb: self.workspace_kb.max(other.workspace_kb),
+            disable_fusion: self.disable_fusion || other.disable_fusion,
+            leak_outputs: self.leak_outputs || other.leak_outputs,
+            rich_error_probes: self.rich_error_probes.max(other.rich_error_probes),
+            guard_checks_per_stage: self
+                .guard_checks_per_stage
+                .max(other.guard_checks_per_stage),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_none() {
+        assert!(InjectedOverheads::NONE.is_none());
+        assert!(InjectedOverheads::default().is_none());
+    }
+
+    #[test]
+    fn merge_is_union() {
+        let a = InjectedOverheads { validity_scan: true, ..Default::default() };
+        let b = InjectedOverheads { workspace_kb: 64, ..Default::default() };
+        let m = a.merge(&b);
+        assert!(m.validity_scan);
+        assert_eq!(m.workspace_kb, 64);
+        assert!(!m.leak_outputs);
+    }
+}

@@ -1,0 +1,31 @@
+//! The Layer-3 coordinator: scheduling, execution, and measurement.
+//!
+//! This is the paper's system contribution rebuilt for the XLA stack —
+//! the machinery that turns AOT artifacts into the paper's numbers:
+//!
+//! - [`runner`]: §2.2 measurement protocol (median-of-N, warmup, phase
+//!   breakdown) over fused executables;
+//! - [`eager`]: staged per-op execution — the default-compiler analogue
+//!   for the Fig 3/4 comparison;
+//! - [`sweep`]: §2.2 batch-size doubling sweep;
+//! - [`train`]: the end-to-end training loop threading real parameter
+//!   state (examples/train_loop);
+//! - [`env`]: the host-side RL environment that reproduces §3.1's RL
+//!   idleness structurally;
+//! - [`hooks`]: injected-overhead knobs the CI fault catalog (§4.2) maps
+//!   onto.
+
+pub mod eager;
+pub mod env;
+pub mod guards;
+pub mod hooks;
+pub mod runner;
+pub mod sweep;
+pub mod train;
+
+pub use env::CartPoleSim;
+pub use guards::GuardSet;
+pub use hooks::InjectedOverheads;
+pub use runner::{RunResult, Runner};
+pub use sweep::{sweep_model, SweepResult};
+pub use train::{train_loop, TrainRun};

@@ -1,0 +1,50 @@
+//! Batch-size sweep (paper §2.2): double from 1, pick best throughput.
+//!
+//! Training never sweeps (batch affects convergence); inference sweeps
+//! the doubling ladder of lowered artifacts and selects the batch with
+//! the highest samples/second — the paper's "optimal batch size yielding
+//! the highest GPU utilization".
+
+use anyhow::Result;
+
+use crate::config::{BatchPolicy, Mode};
+use crate::runtime::ModelEntry;
+
+use super::runner::{RunResult, Runner};
+
+/// Outcome of sweeping one model.
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    pub model: String,
+    /// (batch, result) per ladder point, ascending batch.
+    pub points: Vec<RunResult>,
+    /// Batch with best throughput.
+    pub best_batch: usize,
+}
+
+/// Sweep a model over all its lowered inference batch sizes.
+pub fn sweep_model(runner: &Runner, entry: &ModelEntry) -> Result<SweepResult> {
+    anyhow::ensure!(
+        runner.cfg.mode == Mode::Infer,
+        "batch sweep is inference-only (paper §2.2)"
+    );
+    let batches = entry.infer_batches();
+    anyhow::ensure!(!batches.is_empty(), "{} has no inference artifacts", entry.name);
+
+    let mut points = Vec::with_capacity(batches.len());
+    for b in batches {
+        let mut cfg = runner.cfg.clone();
+        cfg.batch = BatchPolicy::Fixed(b);
+        let sub = Runner::new(runner.store, cfg).with_overheads(runner.overheads.clone());
+        points.push(sub.run_model(entry)?);
+    }
+    let best = points
+        .iter()
+        .max_by(|a, b| a.throughput.partial_cmp(&b.throughput).unwrap())
+        .expect("non-empty sweep");
+    Ok(SweepResult {
+        model: entry.name.clone(),
+        best_batch: best.batch,
+        points,
+    })
+}

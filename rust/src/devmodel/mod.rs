@@ -1,0 +1,204 @@
+//! Analytical GPU device models (paper Table 3 + Fig 5).
+//!
+//! This testbed has no A100/MI210 (repro substitution, see DESIGN.md):
+//! the cross-vendor comparison is an analytical roofline over the static
+//! HLO cost summary, parameterized with the *paper's own* Table 3 peak
+//! numbers and its §3.3 precision-eligibility rules:
+//!
+//! - convolutions run at the library default (TF32 on A100, FP32-Matrix
+//!   on MI210);
+//! - `dot` contractions run at TF32/FP32-Matrix in inference, but are
+//!   FP32-pinned in training (the paper: `aten::matmul` requires FP32
+//!   since PyTorch 1.12 — the reason NLP training favours MI210);
+//! - elementwise work always runs at plain FP32 rates (bandwidth-capped).
+//!
+//! The model predicts *relative* time (who wins, by what factor), never
+//! absolute testbed wallclock.
+
+
+use crate::config::Mode;
+use crate::hlo::CostSummary;
+
+const TERA: f64 = 1e12;
+const GIGA: f64 = 1e9;
+
+/// Peak rates of one GPU (paper Table 3; TFLOPS) + memory system.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    /// Plain FP32 TFLOPS.
+    pub fp32: f64,
+    /// Accelerated 32-bit matrix rate (TF32 on A100, FP32-Matrix on
+    /// MI210) — None if the device has no such mode.
+    pub matrix32: Option<f64>,
+    /// FP64 TFLOPS (Table 3 completeness; unused by the f32 zoo).
+    pub fp64: f64,
+    /// Accelerated FP64 rate (Tensor-Core / FP64-Matrix).
+    pub matrix64: Option<f64>,
+    /// HBM bandwidth, GB/s.
+    pub hbm_gbps: f64,
+    /// Per-dispatch launch overhead, microseconds.
+    pub launch_us: f64,
+    /// Host↔device interconnect bandwidth, GB/s (PCIe 4.0 x16).
+    pub pcie_gbps: f64,
+}
+
+/// NVIDIA A100 40 GB (paper Table 3 row 1).
+pub fn a100() -> DeviceProfile {
+    DeviceProfile {
+        name: "NVIDIA A100",
+        fp32: 19.5,
+        matrix32: Some(156.0), // TF32
+        fp64: 9.7,
+        matrix64: Some(19.5), // FP64 Tensor Core
+        hbm_gbps: 1555.0,
+        launch_us: 5.0,
+        pcie_gbps: 25.0,
+    }
+}
+
+/// AMD Instinct MI210 64 GB (paper Table 3 row 2).
+pub fn mi210() -> DeviceProfile {
+    DeviceProfile {
+        name: "AMD MI210",
+        fp32: 22.6,
+        matrix32: Some(45.3), // FP32-Matrix
+        fp64: 22.6,
+        matrix64: Some(45.3), // FP64-Matrix
+        hbm_gbps: 1638.0,
+        launch_us: 5.0,
+        pcie_gbps: 25.0,
+    }
+}
+
+/// Predicted execution profile of one artifact on one device.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Prediction {
+    /// Compute-bound seconds.
+    pub compute_secs: f64,
+    /// Bandwidth-bound seconds.
+    pub memory_secs: f64,
+    /// Dispatch-overhead seconds.
+    pub launch_secs: f64,
+    /// Roofline total: max(compute, memory) + launch.
+    pub total_secs: f64,
+    /// Achieved TFLOPS at the predicted time.
+    pub achieved_tflops: f64,
+}
+
+impl DeviceProfile {
+    /// Effective contraction rate for `dot` FLOPs in a mode.
+    fn dot_rate(&self, mode: Mode) -> f64 {
+        match mode {
+            // Inference matmuls may use the accelerated 32-bit mode.
+            Mode::Infer => self.matrix32.unwrap_or(self.fp32),
+            // Training matmuls are FP32-pinned (paper §3.3).
+            Mode::Train => self.fp32,
+        }
+    }
+
+    /// Convolutions follow the library default in both modes.
+    fn conv_rate(&self) -> f64 {
+        self.matrix32.unwrap_or(self.fp32)
+    }
+
+    /// Roofline prediction for a module's static cost.
+    pub fn predict(&self, cost: &CostSummary, mode: Mode) -> Prediction {
+        let f = &cost.flops;
+        let compute_secs = f.dot / (self.dot_rate(mode) * TERA)
+            + f.conv / (self.conv_rate() * TERA)
+            + f.elementwise / (self.fp32 * TERA);
+        let memory_secs = cost.traffic_bytes / (self.hbm_gbps * GIGA);
+        // Fused module = one dispatch; the eager path multiplies this
+        // out per stage (see coordinator::eager).
+        let launch_secs = self.launch_us * 1e-6;
+        let total_secs = compute_secs.max(memory_secs) + launch_secs;
+        Prediction {
+            compute_secs,
+            memory_secs,
+            launch_secs,
+            total_secs,
+            achieved_tflops: if total_secs > 0.0 {
+                f.total() / total_secs / TERA
+            } else {
+                0.0
+            },
+        }
+    }
+
+    /// Host↔device transfer seconds for `bytes` over the interconnect.
+    pub fn transfer_secs(&self, bytes: usize) -> f64 {
+        bytes as f64 / (self.pcie_gbps * GIGA)
+    }
+}
+
+/// Ratio T_nvidia / T_amd for one cost summary (Fig 5's bars; <1 ⇒ A100
+/// wins, >1 ⇒ MI210 wins).
+pub fn nvidia_over_amd(cost: &CostSummary, mode: Mode) -> f64 {
+    let tn = a100().predict(cost, mode).total_secs;
+    let ta = mi210().predict(cost, mode).total_secs;
+    tn / ta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::Flops;
+
+    fn cost(dot: f64, conv: f64, ew: f64, bytes: f64) -> CostSummary {
+        CostSummary {
+            flops: Flops { dot, conv, elementwise: ew },
+            bytes_accessed: bytes,
+            traffic_bytes: bytes,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn table3_rates() {
+        let a = a100();
+        assert_eq!(a.fp32, 19.5);
+        assert_eq!(a.matrix32, Some(156.0));
+        let m = mi210();
+        assert_eq!(m.fp32, 22.6);
+        assert_eq!(m.matrix32, Some(45.3));
+    }
+
+    #[test]
+    fn dot_heavy_inference_favours_a100() {
+        // 1 TFLOP of pure dot work, negligible bytes.
+        let c = cost(1e12, 0.0, 0.0, 1e6);
+        let r = nvidia_over_amd(&c, Mode::Infer);
+        assert!(r < 0.5, "A100 TF32 should dominate, got ratio {r}");
+    }
+
+    #[test]
+    fn dot_heavy_training_favours_mi210() {
+        // Training pins dots to FP32: 19.5 vs 22.6 ⇒ MI210 wins.
+        let c = cost(1e12, 0.0, 0.0, 1e6);
+        let r = nvidia_over_amd(&c, Mode::Train);
+        assert!(r > 1.0, "FP32-pinned training should favour MI210, got {r}");
+    }
+
+    #[test]
+    fn elementwise_heavy_favours_mi210_slightly() {
+        let c = cost(0.0, 0.0, 1e12, 1e6);
+        let r = nvidia_over_amd(&c, Mode::Infer);
+        assert!(r > 1.0 && r < 1.3, "FP32 rates differ by ~16%, got {r}");
+    }
+
+    #[test]
+    fn bandwidth_bound_work_is_memory_limited() {
+        let d = a100();
+        // 1 GB of traffic, trivial flops: memory term dominates.
+        let p = d.predict(&cost(0.0, 0.0, 1e3, 1e9), Mode::Infer);
+        assert!(p.memory_secs > p.compute_secs);
+        assert!((p.total_secs - (p.memory_secs + p.launch_secs)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn transfer_time_scales_with_bytes() {
+        let d = a100();
+        assert!(d.transfer_secs(25_000_000_000) > 0.99);
+    }
+}

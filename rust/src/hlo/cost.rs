@@ -1,0 +1,400 @@
+//! Static FLOP / byte-traffic / arena analysis over parsed HLO.
+//!
+//! Drives two reproductions: the analytical A100-vs-MI210 projection
+//! (Fig 5 — FLOPs split by *class*, since TF32 eligibility differs for
+//! matmul vs elementwise work) and the device-memory estimate of the
+//! compiler comparison (Fig 3/4 — the fused executable's temp arena).
+//!
+//! `while` loops (Pallas grid/fori loops lower to these) are weighted by
+//! a trip-count heuristic: the loop condition's `compare(iv, constant)`
+//! bound. Transcendentals count 1 FLOP/element like other elementwise
+//! ops — a uniform undercount that cancels in the cross-device ratios.
+
+use std::collections::HashMap;
+
+use super::parser::{Computation, HloModule, Instruction, Shape};
+
+/// FLOPs split by the precision-eligibility classes of paper §3.3:
+/// convolutions follow the library default (TF32 on A100), dots follow
+/// the framework rule (FP32-pinned in training since PyTorch 1.12),
+/// elementwise work is always plain FP32.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Flops {
+    /// dot contraction FLOPs.
+    pub dot: f64,
+    /// convolution contraction FLOPs.
+    pub conv: f64,
+    /// Elementwise/reduction FLOPs.
+    pub elementwise: f64,
+}
+
+impl Flops {
+    /// All contraction (MXU/TensorCore-shaped) FLOPs.
+    pub fn matmul(&self) -> f64 {
+        self.dot + self.conv
+    }
+
+    pub fn total(&self) -> f64 {
+        self.dot + self.conv + self.elementwise
+    }
+}
+
+/// Full cost summary of one HLO module.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CostSummary {
+    pub flops: Flops,
+    /// Estimated HBM traffic: operand + result bytes of every executed
+    /// instruction (loop-weighted).
+    pub bytes_accessed: f64,
+    /// Temp-arena estimate: one-shot sum of all intermediate result
+    /// buffers (no-reuse upper bound — XLA's fused-module allocation).
+    pub arena_bytes: usize,
+    /// Fusion-aware HBM-traffic estimate: parameters + root outputs +
+    /// explicit memory ops (gather/scatter/dynamic slices). Unlike
+    /// `bytes_accessed`, intermediates that XLA fuses into registers are
+    /// *not* counted — this is the roofline memory term for a compiled
+    /// module (the quantity Fig 5's device model divides by bandwidth).
+    pub traffic_bytes: f64,
+    /// Parameter/input residency bytes.
+    pub param_bytes: usize,
+    /// Executed-instruction estimate (loop-weighted dispatch count).
+    pub instructions: f64,
+}
+
+/// Analyze a parsed module.
+pub fn analyze(module: &HloModule) -> CostSummary {
+    let mut an = Analyzer { module, memo: HashMap::new() };
+    let mut total = CompCost::default();
+    if let Some(entry) = module.entry_computation() {
+        total = an.computation_cost(entry);
+    }
+    let mut arena = 0usize;
+    let mut params = 0usize;
+    let mut traffic = 0f64;
+    const MEMORY_OPS: [&str; 6] = [
+        "gather",
+        "scatter",
+        "dynamic-slice",
+        "dynamic-update-slice",
+        "concatenate",
+        "sort",
+    ];
+    for comp in module.computations.values() {
+        for inst in &comp.instructions {
+            match inst.opcode.as_str() {
+                "parameter" => {
+                    if comp.is_entry {
+                        params += inst.shape.byte_size();
+                    }
+                }
+                "constant" => params += inst.shape.byte_size(),
+                op => {
+                    arena += inst.shape.byte_size();
+                    if comp.is_entry {
+                        if MEMORY_OPS.contains(&op) {
+                            traffic += inst.shape.byte_size() as f64;
+                        }
+                        if inst.is_root {
+                            traffic += inst.shape.byte_size() as f64;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    traffic += params as f64;
+    CostSummary {
+        flops: total.flops,
+        bytes_accessed: total.bytes,
+        arena_bytes: arena,
+        param_bytes: params,
+        traffic_bytes: traffic,
+        instructions: total.instructions,
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct CompCost {
+    flops: Flops,
+    bytes: f64,
+    instructions: f64,
+}
+
+struct Analyzer<'a> {
+    module: &'a HloModule,
+    memo: HashMap<String, CompCost>,
+}
+
+impl<'a> Analyzer<'a> {
+    fn computation_cost(&mut self, comp: &Computation) -> CompCost {
+        if let Some(c) = self.memo.get(&comp.name) {
+            return *c;
+        }
+        let mut total = CompCost::default();
+        for inst in &comp.instructions {
+            let c = self.instruction_cost(comp, inst);
+            total.flops.dot += c.flops.dot;
+            total.flops.conv += c.flops.conv;
+            total.flops.elementwise += c.flops.elementwise;
+            total.bytes += c.bytes;
+            total.instructions += c.instructions;
+        }
+        self.memo.insert(comp.name.clone(), total);
+        total
+    }
+
+    fn called(&mut self, name: Option<&str>) -> CompCost {
+        match name.and_then(|n| self.module.computations.get(n)) {
+            // Clone breaks the borrow so the recursive call can re-borrow.
+            Some(c) => {
+                let c = c.clone();
+                self.computation_cost(&c)
+            }
+            None => CompCost::default(),
+        }
+    }
+
+    fn instruction_cost(&mut self, comp: &Computation, inst: &Instruction) -> CompCost {
+        let out_elems = match &inst.shape {
+            Shape::Array(a) => a.element_count() as f64,
+            _ => 0.0,
+        };
+        let io_bytes = self.io_bytes(comp, inst);
+        let mut c = CompCost { instructions: 1.0, bytes: io_bytes, ..Default::default() };
+        match inst.opcode.as_str() {
+            "dot" => c.flops.dot = 2.0 * out_elems * self.contraction_size(comp, inst),
+            "convolution" => {
+                c.flops.conv = 2.0 * out_elems * self.conv_per_output_macs(comp, inst)
+            }
+            // Elementwise + comparisons + transcendentals: 1 flop/elem.
+            "add" | "subtract" | "multiply" | "divide" | "maximum" | "minimum" | "power"
+            | "exponential" | "log" | "tanh" | "rsqrt" | "sqrt" | "negate" | "abs"
+            | "compare" | "select" | "and" | "or" | "xor" | "not" | "floor" | "ceil"
+            | "sign" | "cosine" | "sine" | "atan2" | "remainder" | "clamp"
+            | "exponential-minus-one" | "log-plus-one" | "logistic" | "cbrt" => {
+                c.flops.elementwise = out_elems
+            }
+            "reduce" | "reduce-window" => {
+                let in_elems = inst
+                    .operands
+                    .first()
+                    .and_then(|o| self.operand_elems(comp, o))
+                    .unwrap_or(out_elems);
+                c.flops.elementwise = in_elems;
+            }
+            "while" => {
+                let trips = self.while_trip_count(inst);
+                let body = self.called(inst.attr_str("body"));
+                let cond = self.called(inst.attr_str("condition"));
+                c.flops.dot = trips * (body.flops.dot + cond.flops.dot);
+                c.flops.conv = trips * (body.flops.conv + cond.flops.conv);
+                c.flops.elementwise = trips * (body.flops.elementwise + cond.flops.elementwise);
+                c.bytes += trips * (body.bytes + cond.bytes);
+                c.instructions += trips * (body.instructions + cond.instructions);
+            }
+            "call" | "fusion" => {
+                let inner = self.called(inst.attr_str("to_apply"));
+                c.flops.dot += inner.flops.dot;
+                c.flops.conv += inner.flops.conv;
+                c.flops.elementwise += inner.flops.elementwise;
+                c.bytes += inner.bytes;
+                c.instructions += inner.instructions;
+            }
+            "conditional" => {
+                // Take the true branch as representative.
+                let inner = self.called(inst.attr_str("true_computation"));
+                c.flops.dot += inner.flops.dot;
+                c.flops.conv += inner.flops.conv;
+                c.flops.elementwise += inner.flops.elementwise;
+                c.bytes += inner.bytes;
+            }
+            // Pure data movement / bookkeeping: bytes only.
+            _ => {}
+        }
+        c
+    }
+
+    fn operand_shape(&self, comp: &Computation, name: &str) -> Option<Shape> {
+        comp.instruction(name).map(|i| i.shape.clone())
+    }
+
+    fn operand_elems(&self, comp: &Computation, name: &str) -> Option<f64> {
+        self.operand_shape(comp, name)
+            .and_then(|s| s.as_array().map(|a| a.element_count() as f64))
+    }
+
+    fn io_bytes(&self, comp: &Computation, inst: &Instruction) -> f64 {
+        let out = inst.shape.byte_size() as f64;
+        let ins: f64 = inst
+            .operands
+            .iter()
+            .filter_map(|o| self.operand_shape(comp, o))
+            .map(|s| s.byte_size() as f64)
+            .sum();
+        out + ins
+    }
+
+    /// Product of the lhs contracting-dimension sizes of a dot.
+    fn contraction_size(&self, comp: &Computation, inst: &Instruction) -> f64 {
+        let dims = parse_dim_list(inst.attr_str("lhs_contracting_dims").unwrap_or(""));
+        let lhs = inst
+            .operands
+            .first()
+            .and_then(|o| self.operand_shape(comp, o));
+        match lhs.as_ref().and_then(|s| s.as_array()) {
+            Some(a) => dims
+                .iter()
+                .filter_map(|&d| a.dims.get(d))
+                .map(|&x| x as f64)
+                .product::<f64>()
+                .max(1.0),
+            None => 1.0,
+        }
+    }
+
+    /// MACs per conv output element = kernel elems / output-feature dim.
+    fn conv_per_output_macs(&self, comp: &Computation, inst: &Instruction) -> f64 {
+        let kernel = inst
+            .operands
+            .get(1)
+            .and_then(|o| self.operand_shape(comp, o));
+        let Some(k) = kernel.as_ref().and_then(|s| s.as_array()) else {
+            return 1.0;
+        };
+        let kernel_elems: usize = k.element_count();
+        // dim_labels like `b01f_01io->b01f`: the kernel part is between
+        // `_` and `->`; `o` marks the output-feature dimension.
+        let out_dim = inst
+            .attr_str("dim_labels")
+            .and_then(|l| {
+                let kpart = l.split('_').nth(1)?.split("->").next()?;
+                kpart.find('o')
+            })
+            .unwrap_or(k.dims.len().saturating_sub(1));
+        let out_features = *k.dims.get(out_dim).unwrap_or(&1) as f64;
+        (kernel_elems as f64 / out_features.max(1.0)).max(1.0)
+    }
+
+    /// Trip-count heuristic: the condition's `compare(iv, constant)` bound.
+    fn while_trip_count(&self, inst: &Instruction) -> f64 {
+        let Some(cond) = inst
+            .attr_str("condition")
+            .and_then(|n| self.module.computations.get(n))
+        else {
+            return 1.0;
+        };
+        let Some(root) = cond.root() else { return 1.0 };
+        if root.opcode != "compare" {
+            return 1.0;
+        }
+        for op in &root.operands {
+            if let Some(c) = cond.instruction(op) {
+                if c.opcode == "constant" {
+                    if let Ok(v) = c.payload.trim().parse::<f64>() {
+                        if v > 0.0 {
+                            return v;
+                        }
+                    }
+                }
+            }
+        }
+        1.0
+    }
+}
+
+fn parse_dim_list(s: &str) -> Vec<usize> {
+    s.trim_start_matches('{')
+        .trim_end_matches('}')
+        .split(',')
+        .filter_map(|d| d.trim().parse().ok())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::parser::parse;
+
+    #[test]
+    fn dot_flops() {
+        let text = r#"HloModule m
+
+ENTRY main.1 {
+  a.1 = f32[8,16]{1,0} parameter(0)
+  b.2 = f32[16,4]{1,0} parameter(1)
+  ROOT dot.3 = f32[8,4]{1,0} dot(a.1, b.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"#;
+        let cost = analyze(&parse(text).unwrap());
+        // 2 * M*N * K = 2 * 32 * 16
+        assert_eq!(cost.flops.dot, 1024.0);
+        assert_eq!(cost.flops.elementwise, 0.0);
+    }
+
+    #[test]
+    fn elementwise_and_arena() {
+        let text = r#"HloModule m
+
+ENTRY main.1 {
+  a.1 = f32[10]{0} parameter(0)
+  e.2 = f32[10]{0} exponential(a.1)
+  ROOT add.3 = f32[10]{0} add(e.2, a.1)
+}
+"#;
+        let cost = analyze(&parse(text).unwrap());
+        assert_eq!(cost.flops.elementwise, 20.0);
+        assert_eq!(cost.param_bytes, 40);
+        assert_eq!(cost.arena_bytes, 80); // exp + add outputs
+    }
+
+    #[test]
+    fn while_loop_weighting() {
+        let text = r#"HloModule m
+
+cond.1 {
+  t.1 = (s32[], f32[4]{0}) parameter(0)
+  iv.2 = s32[] get-tuple-element(t.1), index=0
+  limit.3 = s32[] constant(10)
+  ROOT lt.4 = pred[] compare(iv.2, limit.3), direction=LT
+}
+
+body.2 {
+  t.1 = (s32[], f32[4]{0}) parameter(0)
+  iv.2 = s32[] get-tuple-element(t.1), index=0
+  one.3 = s32[] constant(1)
+  next.4 = s32[] add(iv.2, one.3)
+  x.5 = f32[4]{0} get-tuple-element(t.1), index=1
+  y.6 = f32[4]{0} multiply(x.5, x.5)
+  ROOT out.7 = (s32[], f32[4]{0}) tuple(next.4, y.6)
+}
+
+ENTRY main.3 {
+  p.1 = f32[4]{0} parameter(0)
+  zero.2 = s32[] constant(0)
+  init.3 = (s32[], f32[4]{0}) tuple(zero.2, p.1)
+  w.4 = (s32[], f32[4]{0}) while(init.3), condition=cond.1, body=body.2
+  ROOT done.5 = f32[4]{0} get-tuple-element(w.4), index=1
+}
+"#;
+        let cost = analyze(&parse(text).unwrap());
+        // body: multiply(4) + add(1) = 5 elementwise flops, ×10 trips,
+        // cond: compare(1) ×10.
+        assert_eq!(cost.flops.elementwise, 60.0);
+    }
+
+    #[test]
+    fn conv_flops_from_dim_labels() {
+        let text = r#"HloModule m
+
+ENTRY main.1 {
+  x.1 = f32[1,8,8,3]{3,2,1,0} parameter(0)
+  k.2 = f32[3,3,3,16]{3,2,1,0} parameter(1)
+  ROOT c.3 = f32[1,8,8,16]{3,2,1,0} convolution(x.1, k.2), window={size=3x3 pad=1_1x1_1}, dim_labels=b01f_01io->b01f
+}
+"#;
+        let cost = analyze(&parse(text).unwrap());
+        // out elems = 1024; per-output MACs = 3*3*3 = 27; flops = 2*1024*27
+        assert_eq!(cost.flops.conv, 55296.0);
+        assert_eq!(cost.flops.matmul(), 55296.0);
+    }
+}

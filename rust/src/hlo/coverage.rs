@@ -1,0 +1,126 @@
+//! API-surface coverage (the paper's headline "2.3× more than MLPerf").
+//!
+//! TorchBench §2.3 counts covered PyTorch APIs; the XLA-stack analogue is
+//! the *operator surface* a suite exercises: distinct HLO opcodes plus
+//! distinct (opcode, element-type) pairs across all of a suite's
+//! artifacts. `xbench coverage` compares the full zoo against an
+//! MLPerf-like subset (few models, few domains) and reports the ratio.
+
+use std::collections::BTreeSet;
+
+use super::parser::{HloModule, Shape};
+
+/// The operator surface of one or more modules.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Surface {
+    /// Distinct opcodes.
+    pub opcodes: BTreeSet<String>,
+    /// Distinct (opcode, result element type) pairs — the finer measure,
+    /// analogous to counting per-dtype operator kernels.
+    pub typed_ops: BTreeSet<(String, String)>,
+    /// Distinct operator *configurations* (opcode, dtype, result rank) —
+    /// the closest analogue to "API surface with distinct kernel
+    /// instantiations" (what a per-dtype per-rank kernel registry keys on).
+    pub configs: BTreeSet<String>,
+}
+
+impl Surface {
+    pub fn from_module(m: &HloModule) -> Self {
+        let mut s = Surface::default();
+        s.absorb(m);
+        s
+    }
+
+    /// Merge a module's instructions into this surface.
+    pub fn absorb(&mut self, m: &HloModule) {
+        for inst in m.all_instructions() {
+            self.opcodes.insert(inst.opcode.clone());
+            let (dtype, rank) = match &inst.shape {
+                Shape::Array(a) => (a.dtype.clone(), a.dims.len()),
+                Shape::Tuple(t) => ("tuple".to_string(), t.len()),
+                Shape::Other => ("other".to_string(), 0),
+            };
+            self.configs
+                .insert(format!("{}:{}:r{}", inst.opcode, dtype, rank));
+            self.typed_ops.insert((inst.opcode.clone(), dtype));
+        }
+    }
+
+    pub fn union(&self, other: &Surface) -> Surface {
+        Surface {
+            opcodes: self.opcodes.union(&other.opcodes).cloned().collect(),
+            typed_ops: self.typed_ops.union(&other.typed_ops).cloned().collect(),
+            configs: self.configs.union(&other.configs).cloned().collect(),
+        }
+    }
+
+    pub fn opcode_count(&self) -> usize {
+        self.opcodes.len()
+    }
+
+    pub fn typed_count(&self) -> usize {
+        self.typed_ops.len()
+    }
+
+    pub fn config_count(&self) -> usize {
+        self.configs.len()
+    }
+
+    /// Coverage ratio vs a baseline surface (paper: 2.3× vs MLPerf),
+    /// measured on operator configurations.
+    pub fn ratio_over(&self, baseline: &Surface) -> f64 {
+        if baseline.config_count() == 0 {
+            return f64::INFINITY;
+        }
+        self.config_count() as f64 / baseline.config_count() as f64
+    }
+
+    /// Ops in `self` but not in `baseline` — the surface only the wider
+    /// suite exercises (where §1.1-style cold-path bugs hide).
+    pub fn exclusive_over(&self, baseline: &Surface) -> Vec<(String, String)> {
+        self.typed_ops.difference(&baseline.typed_ops).cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::parser::parse;
+
+    fn module(body: &str) -> HloModule {
+        parse(&format!("HloModule m\n\nENTRY main.1 {{\n{body}\n}}\n")).unwrap()
+    }
+
+    #[test]
+    fn counts_distinct_ops() {
+        let m = module(
+            "  a.1 = f32[4]{0} parameter(0)\n  b.2 = f32[4]{0} add(a.1, a.1)\n  ROOT c.3 = f32[4]{0} add(b.2, a.1)",
+        );
+        let s = Surface::from_module(&m);
+        assert_eq!(s.opcode_count(), 2); // parameter, add
+        assert_eq!(s.typed_count(), 2);
+    }
+
+    #[test]
+    fn typed_ops_distinguish_dtypes() {
+        let m = module(
+            "  a.1 = f32[4]{0} parameter(0)\n  i.2 = s32[4]{0} parameter(1)\n  b.3 = f32[4]{0} add(a.1, a.1)\n  ROOT c.4 = s32[4]{0} add(i.2, i.2)",
+        );
+        let s = Surface::from_module(&m);
+        assert_eq!(s.opcode_count(), 2);
+        // (parameter, f32), (parameter, s32), (add, f32), (add, s32)
+        assert_eq!(s.typed_count(), 4);
+    }
+
+    #[test]
+    fn ratio_and_exclusive() {
+        let big = module(
+            "  a.1 = f32[4]{0} parameter(0)\n  b.2 = f32[4]{0} add(a.1, a.1)\n  ROOT c.3 = f32[4]{0} tanh(b.2)",
+        );
+        let small = module("  a.1 = f32[4]{0} parameter(0)\n  ROOT b.2 = f32[4]{0} add(a.1, a.1)");
+        let sb = Surface::from_module(&big);
+        let ss = Surface::from_module(&small);
+        assert!(sb.ratio_over(&ss) > 1.0);
+        assert_eq!(sb.exclusive_over(&ss), vec![("tanh".to_string(), "f32".to_string())]);
+    }
+}

@@ -1,0 +1,30 @@
+//! HLO-text analysis: parsing, static cost, API-surface coverage.
+//!
+//! The artifacts the runtime executes are HLO text; this module gives the
+//! coordinator a static view of them — FLOPs by class (feeding the Fig 5
+//! device projection), memory-arena estimates (Fig 3/4 device memory),
+//! and the operator-surface measure behind the paper's "2.3× MLPerf
+//! coverage" claim (§2.3).
+
+pub mod cost;
+pub mod coverage;
+pub mod parser;
+
+pub use cost::{analyze, CostSummary, Flops};
+pub use coverage::Surface;
+pub use parser::{parse, HloModule};
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Parse an artifact file.
+pub fn parse_file(path: &Path) -> Result<HloModule> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading HLO {}", path.display()))?;
+    parse(&text).with_context(|| format!("parsing HLO {}", path.display()))
+}
+
+/// Parse + analyze in one step.
+pub fn analyze_file(path: &Path) -> Result<CostSummary> {
+    Ok(analyze(&parse_file(path)?))
+}

@@ -1,0 +1,366 @@
+//! Minimal HLO-text parser: computations, instructions, shapes, attrs.
+//!
+//! Parses exactly the dialect `aot.py` emits (XLA's canonical text form):
+//! enough structure for FLOP/byte cost analysis ([`super::cost`]) and
+//! API-surface coverage ([`super::coverage`]). Not a general HLO parser —
+//! unknown constructs degrade to opcode-only instructions rather than
+//! erroring, so coverage still counts them.
+
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// Element type + dimensions of an array shape.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayShape {
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl ArrayShape {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn dtype_bytes(&self) -> usize {
+        match self.dtype.as_str() {
+            "pred" | "s8" | "u8" => 1,
+            "bf16" | "f16" | "s16" | "u16" => 2,
+            "f32" | "s32" | "u32" => 4,
+            "f64" | "s64" | "u64" | "c64" => 8,
+            "c128" => 16,
+            _ => 4,
+        }
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.element_count() * self.dtype_bytes()
+    }
+}
+
+/// Result shape of an instruction.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+    /// token / opaque / unparsed.
+    Other,
+}
+
+impl Shape {
+    pub fn byte_size(&self) -> usize {
+        match self {
+            Shape::Array(a) => a.byte_size(),
+            Shape::Tuple(elems) => elems.iter().map(|e| e.byte_size()).sum(),
+            Shape::Other => 0,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&ArrayShape> {
+        match self {
+            Shape::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// One parsed instruction.
+#[derive(Debug, Clone)]
+pub struct Instruction {
+    pub name: String,
+    pub opcode: String,
+    pub shape: Shape,
+    /// Operand names (empty for constants/parameters).
+    pub operands: Vec<String>,
+    /// Raw parenthesized payload (constant values, parameter index).
+    pub payload: String,
+    /// Raw attribute tail (`to_apply=..., direction=EQ, ...`).
+    pub attrs: String,
+    pub is_root: bool,
+}
+
+impl Instruction {
+    /// `attr_str("to_apply")` -> `Some("region_0.3")`.
+    pub fn attr_str(&self, key: &str) -> Option<&str> {
+        let pat = format!("{key}=");
+        let start = self.attrs.find(&pat)? + pat.len();
+        let rest = &self.attrs[start..];
+        let end = rest
+            .find(|c: char| c == ',' || c == ' ' || c == '}')
+            .unwrap_or(rest.len());
+        Some(&rest[..end])
+    }
+}
+
+/// A named computation (ENTRY or region).
+#[derive(Debug, Clone, Default)]
+pub struct Computation {
+    pub name: String,
+    pub instructions: Vec<Instruction>,
+    pub is_entry: bool,
+}
+
+impl Computation {
+    pub fn root(&self) -> Option<&Instruction> {
+        self.instructions
+            .iter()
+            .find(|i| i.is_root)
+            .or_else(|| self.instructions.last())
+    }
+
+    pub fn instruction(&self, name: &str) -> Option<&Instruction> {
+        self.instructions.iter().find(|i| i.name == name)
+    }
+}
+
+/// A parsed HLO module.
+#[derive(Debug, Clone, Default)]
+pub struct HloModule {
+    pub name: String,
+    pub computations: BTreeMap<String, Computation>,
+    pub entry: String,
+}
+
+impl HloModule {
+    pub fn entry_computation(&self) -> Option<&Computation> {
+        self.computations.get(&self.entry)
+    }
+
+    pub fn all_instructions(&self) -> impl Iterator<Item = &Instruction> {
+        self.computations.values().flat_map(|c| c.instructions.iter())
+    }
+}
+
+/// Parse HLO text (as emitted by `as_hlo_text()`).
+pub fn parse(text: &str) -> Result<HloModule> {
+    let mut module = HloModule::default();
+    let mut current: Option<Computation> = None;
+
+    for raw in text.lines() {
+        let line = raw.trim_end();
+        let trimmed = line.trim_start();
+        if trimmed.is_empty() {
+            continue;
+        }
+        if let Some(rest) = trimmed.strip_prefix("HloModule ") {
+            module.name = rest.split([',', ' ']).next().unwrap_or("").to_string();
+            continue;
+        }
+        // Computation header: `name {` or `ENTRY name {` (possibly with
+        // a parameter-list signature in some dialects — we key on the
+        // trailing `{` at top level).
+        if !line.starts_with(' ') && trimmed.ends_with('{') {
+            let is_entry = trimmed.starts_with("ENTRY ");
+            let header = trimmed.trim_start_matches("ENTRY ").trim_end_matches('{').trim();
+            let name = header
+                .split(|c: char| c == ' ' || c == '(')
+                .next()
+                .unwrap_or("")
+                .to_string();
+            current = Some(Computation { name, instructions: Vec::new(), is_entry });
+            continue;
+        }
+        if !line.starts_with(' ') && trimmed == "}" {
+            if let Some(c) = current.take() {
+                if c.is_entry {
+                    module.entry = c.name.clone();
+                }
+                module.computations.insert(c.name.clone(), c);
+            }
+            continue;
+        }
+        if let Some(c) = current.as_mut() {
+            if let Some(inst) = parse_instruction(trimmed) {
+                c.instructions.push(inst);
+            }
+        }
+    }
+    anyhow::ensure!(
+        !module.computations.is_empty(),
+        "no computations parsed — not HLO text?"
+    );
+    if module.entry.is_empty() {
+        // Fall back: last computation is conventionally the entry.
+        if let Some(name) = module.computations.keys().last() {
+            module.entry = name.clone();
+        }
+    }
+    Ok(module)
+}
+
+fn parse_instruction(line: &str) -> Option<Instruction> {
+    let is_root = line.starts_with("ROOT ");
+    let line = line.trim_start_matches("ROOT ");
+    let eq = line.find(" = ")?;
+    let name = line[..eq].trim().to_string();
+    let rest = &line[eq + 3..];
+
+    let (shape, after_shape) = parse_shape(rest)?;
+    let after = after_shape.trim_start();
+    let paren = after.find('(')?;
+    let opcode = after[..paren].trim().to_string();
+    let (operand_str, tail) = split_parens(&after[paren..])?;
+
+    let operands = if opcode == "constant" || opcode == "parameter" {
+        Vec::new()
+    } else {
+        operand_str
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    };
+
+    Some(Instruction {
+        name,
+        opcode,
+        shape,
+        operands,
+        payload: operand_str.to_string(),
+        attrs: tail.trim_start_matches(',').trim().to_string(),
+        is_root,
+    })
+}
+
+/// Parse a shape prefix, returning the remainder of the line.
+fn parse_shape(s: &str) -> Option<(Shape, &str)> {
+    let s = s.trim_start();
+    if let Some(rest) = s.strip_prefix('(') {
+        // Tuple: parse elements until the matching `)`.
+        let mut elems = Vec::new();
+        let mut rem = rest;
+        loop {
+            rem = rem.trim_start().trim_start_matches(',').trim_start();
+            // Skip `/*index=N*/` comments the printer inserts.
+            while let Some(r) = rem.strip_prefix("/*") {
+                rem = &r[r.find("*/")? + 2..];
+                rem = rem.trim_start();
+            }
+            if let Some(r) = rem.strip_prefix(')') {
+                return Some((Shape::Tuple(elems), r));
+            }
+            let (e, r) = parse_shape(rem)?;
+            elems.push(e);
+            rem = r;
+        }
+    }
+    // Array: dtype[dims]{layout}?
+    let bracket = s.find('[')?;
+    let dtype: String = s[..bracket].trim().to_string();
+    if dtype.is_empty() || !dtype.chars().all(|c| c.is_ascii_alphanumeric()) {
+        return None;
+    }
+    let close = s[bracket..].find(']')? + bracket;
+    let dims_str = &s[bracket + 1..close];
+    let dims: Vec<usize> = if dims_str.trim().is_empty() {
+        Vec::new()
+    } else {
+        dims_str
+            .split(',')
+            .map(|d| d.trim().trim_start_matches("<=").parse().ok())
+            .collect::<Option<Vec<usize>>>()?
+    };
+    let mut rest = &s[close + 1..];
+    if let Some(r) = rest.strip_prefix('{') {
+        rest = &r[r.find('}')? + 1..];
+    }
+    Some((Shape::Array(ArrayShape { dtype, dims }), rest))
+}
+
+/// Split `(...)` at the matching close paren: returns (inside, after).
+fn split_parens(s: &str) -> Option<(&str, &str)> {
+    debug_assert!(s.starts_with('('));
+    let mut depth = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' | '{' | '[' => depth += 1,
+            ')' | '}' | ']' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some((&s[1..i], &s[i + 1..]));
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"HloModule jit_fn, entry_computation_layout={(f32[2,2]{1,0})->(f32[2,2]{1,0})}
+
+region_0.1 {
+  Arg_0.0 = f32[2,2]{1,0} parameter(0)
+  constant.1 = f32[] constant(2)
+  broadcast.2 = f32[2,2]{1,0} broadcast(constant.1), dimensions={}
+  ROOT add.3 = f32[2,2]{1,0} add(Arg_0.0, broadcast.2)
+}
+
+ENTRY main.5 {
+  p0.1 = f32[2,2]{1,0} parameter(0)
+  p1.2 = f32[2,2]{1,0} parameter(1)
+  dot.3 = f32[2,2]{1,0} dot(p0.1, p1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  call.4 = f32[2,2]{1,0} call(dot.3), to_apply=region_0.1
+  ROOT tuple.5 = (f32[2,2]{1,0}) tuple(call.4)
+}
+"#;
+
+    #[test]
+    fn parses_module_structure() {
+        let m = parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "jit_fn");
+        assert_eq!(m.entry, "main.5");
+        assert_eq!(m.computations.len(), 2);
+        let entry = m.entry_computation().unwrap();
+        assert_eq!(entry.instructions.len(), 5);
+    }
+
+    #[test]
+    fn parses_shapes_and_operands() {
+        let m = parse(SAMPLE).unwrap();
+        let entry = m.entry_computation().unwrap();
+        let dot = entry.instruction("dot.3").unwrap();
+        assert_eq!(dot.opcode, "dot");
+        assert_eq!(dot.operands, vec!["p0.1", "p1.2"]);
+        let arr = dot.shape.as_array().unwrap();
+        assert_eq!(arr.dims, vec![2, 2]);
+        assert_eq!(arr.byte_size(), 16);
+    }
+
+    #[test]
+    fn parses_attrs_and_root() {
+        let m = parse(SAMPLE).unwrap();
+        let entry = m.entry_computation().unwrap();
+        let call = entry.instruction("call.4").unwrap();
+        assert_eq!(call.attr_str("to_apply"), Some("region_0.1"));
+        assert!(entry.instruction("tuple.5").unwrap().is_root);
+        assert!(matches!(
+            entry.instruction("tuple.5").unwrap().shape,
+            Shape::Tuple(_)
+        ));
+    }
+
+    #[test]
+    fn tuple_shape_with_index_comments() {
+        let (shape, _) =
+            parse_shape("(s32[], f32[8,17]{1,0}, /*index=2*/f32[64]{0}) parameter(0)").unwrap();
+        match shape {
+            Shape::Tuple(elems) => assert_eq!(elems.len(), 3),
+            _ => panic!("expected tuple"),
+        }
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let (shape, rest) = parse_shape("f32[] constant(1)").unwrap();
+        assert_eq!(shape.as_array().unwrap().element_count(), 1);
+        assert!(rest.trim_start().starts_with("constant"));
+    }
+
+    #[test]
+    fn rejects_non_hlo() {
+        assert!(parse("this is not hlo").is_err());
+    }
+}

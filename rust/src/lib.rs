@@ -1,0 +1,32 @@
+//! # XBench — benchmarking the JAX/XLA/PJRT stack with high API-surface coverage
+//!
+//! Rust reproduction of *TorchBench: Benchmarking PyTorch with High API
+//! Surface Coverage* (cs.LG 2023). The crate is the Layer-3 coordinator of
+//! a three-layer system: JAX models (L2) call Pallas kernels (L1) and are
+//! AOT-lowered to HLO-text artifacts at build time; this crate loads those
+//! artifacts through the PJRT C API and runs every experiment in the paper
+//! — execution-time breakdown (Fig 1/2, Table 2), eager-vs-compiled
+//! comparison (Fig 3/4), analytical A100-vs-MI210 projection (Table 3,
+//! Fig 5), the §4.1 optimization case studies (Fig 6), and the §4.2 CI
+//! regression pipeline (Tables 4/5). Python never runs on the hot path.
+//!
+//! Entry points: the `xbench` binary (see `main.rs`) or the library
+//! modules below; `examples/` shows the public API on realistic flows.
+
+pub mod ci;
+pub mod config;
+pub mod util;
+pub mod coordinator;
+pub mod devmodel;
+pub mod hlo;
+pub mod metrics;
+pub mod optim;
+pub mod profiler;
+pub mod report;
+pub mod runtime;
+pub mod suite;
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,136 @@
+//! Measurement statistics (paper §2.2/§4.1 protocol).
+//!
+//! The paper runs each benchmark 10×, reports the *median* run, uses the
+//! *geometric mean* for cross-model speedups (§3.2), and the *arithmetic
+//! mean* for optimization speedups (§4.1.3). These primitives implement
+//! exactly those conventions plus the per-domain aggregation of Table 2.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// Median of a sample (average of middle two for even n). Panics on empty.
+pub fn median(samples: &[f64]) -> f64 {
+    assert!(!samples.is_empty(), "median of empty sample");
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// The run whose value is the median — the paper reports the statistics
+/// *of the median run*, not the median of each statistic. Returns the
+/// index of the selected run (lower-middle for even n).
+pub fn median_run_index(samples: &[f64]) -> usize {
+    assert!(!samples.is_empty());
+    let mut idx: Vec<usize> = (0..samples.len()).collect();
+    idx.sort_by(|&a, &b| samples[a].partial_cmp(&samples[b]).expect("NaN"));
+    idx[(samples.len() - 1) / 2]
+}
+
+/// Geometric mean (speedup aggregation, paper §3.2).
+pub fn geomean(samples: &[f64]) -> f64 {
+    assert!(!samples.is_empty(), "geomean of empty sample");
+    let log_sum: f64 = samples
+        .iter()
+        .map(|&x| {
+            assert!(x > 0.0, "geomean requires positive samples, got {x}");
+            x.ln()
+        })
+        .sum();
+    (log_sum / samples.len() as f64).exp()
+}
+
+/// Arithmetic mean.
+pub fn mean(samples: &[f64]) -> f64 {
+    assert!(!samples.is_empty());
+    samples.iter().sum::<f64>() / samples.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator); 0 for n < 2.
+pub fn stddev(samples: &[f64]) -> f64 {
+    if samples.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(samples);
+    let var = samples.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (samples.len() - 1) as f64;
+    var.sqrt()
+}
+
+/// Coefficient of variation — the noise floor the CI detector must clear.
+pub fn cv(samples: &[f64]) -> f64 {
+    let m = mean(samples);
+    if m == 0.0 {
+        0.0
+    } else {
+        stddev(samples) / m
+    }
+}
+
+pub fn dur_secs(d: Duration) -> f64 {
+    d.as_secs_f64()
+}
+
+/// Average a per-item metric within groups (Table 2's per-domain rows).
+pub fn group_mean<K: Ord + Clone>(items: &[(K, f64)]) -> BTreeMap<K, f64> {
+    let mut sums: BTreeMap<K, (f64, usize)> = BTreeMap::new();
+    for (k, v) in items {
+        let e = sums.entry(k.clone()).or_insert((0.0, 0));
+        e.0 += v;
+        e.1 += 1;
+    }
+    sums.into_iter()
+        .map(|(k, (s, n))| (k, s / n as f64))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert_eq!(median(&[5.0]), 5.0);
+    }
+
+    #[test]
+    fn median_run_index_picks_actual_run() {
+        let samples = [10.0, 1.0, 5.0];
+        assert_eq!(median_run_index(&samples), 2); // 5.0 is the median run
+        let even = [10.0, 1.0, 5.0, 7.0];
+        assert_eq!(median_run_index(&even), 2); // lower-middle: 5.0
+    }
+
+    #[test]
+    fn geomean_matches_hand_computation() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn geomean_rejects_nonpositive() {
+        geomean(&[1.0, 0.0]);
+    }
+
+    #[test]
+    fn stddev_and_cv() {
+        assert_eq!(stddev(&[5.0]), 0.0);
+        let s = stddev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s - 2.138089935).abs() < 1e-6);
+        assert!(cv(&[1.0, 1.0]) == 0.0);
+    }
+
+    #[test]
+    fn group_mean_averages_within_key() {
+        let items = [("a", 1.0), ("a", 3.0), ("b", 10.0)];
+        let m = group_mean(&items);
+        assert_eq!(m["a"], 2.0);
+        assert_eq!(m["b"], 10.0);
+    }
+}

@@ -1,0 +1,106 @@
+//! §4.1.2 / pig2: ping-pong weight offloading vs device-resident weights.
+//!
+//! pig2 kept one network on the GPU and offloaded the rest to CPU,
+//! copying them back every inference — 52.7% of its time went to CPU↔GPU
+//! copies. On large-memory devices the offloading is pure waste; the fix
+//! (upstreamed as an option) keeps weights resident for a 10.1× speedup.
+//!
+//! XBench runs a real zoo model both ways: *offload* re-uploads every
+//! parameter each iteration before dispatch; *resident* uploads once.
+
+use anyhow::Result;
+use std::time::{Duration, Instant};
+
+use crate::profiler::{PhaseKind, Timeline};
+use crate::runtime::{inputs, params, ArtifactStore, ModelEntry};
+
+#[derive(Debug, Clone)]
+pub struct OffloadResult {
+    pub model: String,
+    pub param_bytes: usize,
+    pub offload_secs: f64,
+    pub resident_secs: f64,
+    pub speedup: f64,
+    /// Fraction of offload-mode time spent moving weights (paper: 52.7%).
+    pub offload_movement_frac: f64,
+}
+
+/// Run the study on a model's fused inference artifact.
+pub fn run(store: &ArtifactStore, entry: &ModelEntry, iters: usize) -> Result<OffloadResult> {
+    let batch = entry.default_batch;
+    let infer = entry
+        .infer_at(batch)
+        .ok_or_else(|| anyhow::anyhow!("{}: no artifact at batch {batch}", entry.name))?;
+    let exe = store.get(&infer.artifact)?;
+    let device = store.device();
+    let param_lits = params::load_params(store.dir(), entry)?;
+    anyhow::ensure!(!param_lits.is_empty(), "{} has no params", entry.name);
+
+    // Warmup.
+    let warm: Vec<xla::PjRtBuffer> = param_lits
+        .iter()
+        .map(|l| device.upload(l).map(|t| t.value))
+        .collect::<Result<_>>()?;
+    let in_lits = inputs::synth_inputs(&infer.inputs, 0)?;
+    let in_bufs: Vec<xla::PjRtBuffer> = in_lits
+        .iter()
+        .map(|l| device.upload(l).map(|t| t.value))
+        .collect::<Result<_>>()?;
+    crate::runtime::fetch_tuple(&exe.run_buffers(&warm.iter().chain(in_bufs.iter()).collect::<Vec<_>>())?.value)?;
+
+    // Offload mode: weights re-uploaded every iteration (ping-pong).
+    let mut tl = Timeline::new();
+    let mut offload = Duration::ZERO;
+    for i in 0..iters {
+        let t0 = Instant::now();
+        let lits = inputs::synth_inputs(&infer.inputs, i as u64)?;
+        let mut bufs = Vec::with_capacity(param_lits.len() + lits.len());
+        for l in param_lits.iter() {
+            let t = device.upload(l)?;
+            tl.push(PhaseKind::H2D, "reload_weights", t.elapsed);
+            bufs.push(t.value);
+        }
+        for l in &lits {
+            let t = device.upload(l)?;
+            tl.push(PhaseKind::H2D, "upload_batch", t.elapsed);
+            bufs.push(t.value);
+        }
+        let out = exe.run_buffers(&bufs.iter().collect::<Vec<_>>())?;
+        tl.push(PhaseKind::Compute, "execute", out.elapsed);
+        std::hint::black_box(crate::runtime::fetch_tuple(&out.value)?);
+        offload += t0.elapsed();
+    }
+
+    // Resident mode: weights uploaded once (the fix).
+    let mut resident = Duration::ZERO;
+    for i in 0..iters {
+        let t0 = Instant::now();
+        let lits = inputs::synth_inputs(&infer.inputs, i as u64)?;
+        let mut bufs = Vec::with_capacity(lits.len());
+        for l in &lits {
+            bufs.push(device.upload(l)?.value);
+        }
+        let refs: Vec<&xla::PjRtBuffer> = warm.iter().chain(bufs.iter()).collect();
+        let out = exe.run_buffers(&refs)?;
+        std::hint::black_box(crate::runtime::fetch_tuple(&out.value)?);
+        resident += t0.elapsed();
+    }
+
+    let weight_move = tl
+        .phases
+        .iter()
+        .filter(|p| p.label == "reload_weights")
+        .map(|p| p.elapsed)
+        .sum::<Duration>()
+        .as_secs_f64();
+    let o = offload.as_secs_f64() / iters as f64;
+    let r = resident.as_secs_f64() / iters as f64;
+    Ok(OffloadResult {
+        model: entry.name.clone(),
+        param_bytes: entry.param_bytes(),
+        offload_secs: o,
+        resident_secs: r,
+        speedup: o / r,
+        offload_movement_frac: weight_move / offload.as_secs_f64().max(1e-12),
+    })
+}

@@ -1,0 +1,117 @@
+//! §4.1.2 / Listing 3: scalar `rsqrt` on device vs host.
+//!
+//! hf_Reformer's `_len_and_dim_norm` called `torch.rsqrt()` on a *scalar*,
+//! forcing a CPU→GPU scalar copy and a one-element kernel before the real
+//! division. The fix computes the reciprocal square root on the host and
+//! lets the device run a single division kernel.
+//!
+//! XBench builds both schedules with `XlaBuilder`:
+//! - *device-scalar*: upload the scalar each call, dispatch `rsqrt` on
+//!   it, then dispatch the division — two kernels + one transfer;
+//! - *host-scalar*: compute `1/sqrt(s)` in rust, dispatch one division
+//!   kernel with the precomputed scalar bundled into the argument batch.
+
+use anyhow::Result;
+use std::time::{Duration, Instant};
+
+use crate::runtime::Device;
+
+#[derive(Debug, Clone)]
+pub struct RsqrtResult {
+    pub elements: usize,
+    pub device_scalar_secs: f64,
+    pub host_scalar_secs: f64,
+    pub speedup: f64,
+}
+
+fn compile(
+    device: &Device,
+    b: &xla::XlaBuilder,
+    root: &xla::XlaOp,
+    name: &str,
+    sig: Vec<usize>,
+) -> Result<crate::runtime::Executable> {
+    // Tuple-rooted, like every AOT artifact (fetch_tuple convention).
+    let tup = b.tuple(&[root]).map_err(|e| anyhow::anyhow!("tuple {name}: {e:?}"))?;
+    let comp = b.build(&tup).map_err(|e| anyhow::anyhow!("build {name}: {e:?}"))?;
+    device.compile_computation(&comp, name, Some(sig))
+}
+
+/// Run the study over an activation of `n` f32 elements.
+pub fn run(device: &Device, n: usize, iters: usize) -> Result<RsqrtResult> {
+    let dims = [n as i64];
+
+    // Schedule A, kernel 1: scalar rsqrt on device.
+    let b1 = xla::XlaBuilder::new("scalar_rsqrt");
+    let s = b1
+        .parameter(0, xla::ElementType::F32, &[], "len_scalar")
+        .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let r = s.rsqrt().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let scalar_rsqrt = compile(device, &b1, &r, "scalar_rsqrt", vec![4])?;
+
+    // Shared kernel: x * scalar (the division rewritten as multiply, as
+    // both PyTorch and XLA canonicalize it).
+    let b2 = xla::XlaBuilder::new("scale");
+    let x = b2
+        .parameter(0, xla::ElementType::F32, &dims, "x")
+        .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let c = b2
+        .parameter(1, xla::ElementType::F32, &[], "inv_norm")
+        .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let cb = c.broadcast(&dims).map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let y = x.mul_(&cb).map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let scale = compile(device, &b2, &y, "scale", vec![n * 4, 4])?;
+
+    let x_lit = xla::Literal::vec1(&vec![2.0f32; n]);
+    let x_buf = device.upload(&x_lit)?.value;
+    let attention_head_size = 64.0f32;
+
+    // Warmup.
+    {
+        let s_lit = xla::Literal::scalar(attention_head_size);
+        let s_buf = device.upload(&s_lit)?.value;
+        let r = scalar_rsqrt.run_buffers(&[&s_buf])?;
+        let r_host = crate::runtime::fetch_tuple(&r.value)?; // scalar hop
+        let r_lit = xla::Literal::scalar(r_host.value[0].to_vec::<f32>()?[0]);
+        let r_buf = device.upload(&r_lit)?.value;
+        crate::runtime::fetch_tuple(&scale.run_buffers(&[&x_buf, &r_buf])?.value)?;
+    }
+
+    // Schedule A: per call — upload scalar, rsqrt kernel, fetch, scale.
+    let mut dev_scalar = Duration::ZERO;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let s_lit = xla::Literal::scalar(attention_head_size);
+        let s_buf = device.upload(&s_lit)?.value;
+        let r = scalar_rsqrt.run_buffers(&[&s_buf])?;
+        // The rsqrt result lives in a device tuple; the division kernel
+        // needs it as an argument — the hop PyTorch paid implicitly.
+        let r_host = crate::runtime::fetch_tuple(&r.value)?;
+        let r_lit = xla::Literal::scalar(r_host.value[0].to_vec::<f32>()?[0]);
+        let r_buf = device.upload(&r_lit)?.value;
+        let out = scale.run_buffers(&[&x_buf, &r_buf])?;
+        std::hint::black_box(crate::runtime::fetch_tuple(&out.value)?);
+        dev_scalar += t0.elapsed();
+    }
+
+    // Schedule B: host rsqrt + one kernel.
+    let mut host_scalar = Duration::ZERO;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let inv = 1.0f32 / attention_head_size.sqrt(); // numpy.sqrt analogue
+        let inv_lit = xla::Literal::scalar(inv); // must outlive s_buf (upload contract)
+        let s_buf = device.upload(&inv_lit)?.value;
+        let out = scale.run_buffers(&[&x_buf, &s_buf])?;
+        std::hint::black_box(crate::runtime::fetch_tuple(&out.value)?);
+        host_scalar += t0.elapsed();
+    }
+
+    let a = dev_scalar.as_secs_f64() / iters as f64;
+    let b = host_scalar.as_secs_f64() / iters as f64;
+    Ok(RsqrtResult {
+        elements: n,
+        device_scalar_secs: a,
+        host_scalar_secs: b,
+        speedup: a / b,
+    })
+}

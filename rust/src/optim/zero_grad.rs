@@ -1,0 +1,127 @@
+//! §4.1.1 / Listing 2: `zero_grad` — serial tiny kernels vs one foreach.
+//!
+//! The paper's fix replaced a loop of per-tensor `p.grad.zero_()` GPU
+//! kernels (device idle between every launch) with one
+//! `torch._foreach_zero_` kernel over all gradients. XBench builds both
+//! schedules with `XlaBuilder` over a model's real gradient shapes:
+//! *serial* = one zeroing executable per tensor, dispatched in a loop;
+//! *foreach* = a single executable producing every zeroed tensor in one
+//! dispatch. The measured gap is pure launch/idle overhead — the paper's
+//! point.
+
+use anyhow::Result;
+use std::time::{Duration, Instant};
+
+use crate::runtime::{Device, ModelEntry};
+
+/// Outcome of the zero_grad study on one model.
+#[derive(Debug, Clone)]
+pub struct ZeroGradResult {
+    pub model: String,
+    pub tensors: usize,
+    pub serial_secs: f64,
+    pub foreach_secs: f64,
+    pub speedup: f64,
+}
+
+/// Build an executable that zeroes one f32 tensor of `dims`.
+fn build_zero_one(device: &Device, dims: &[i64]) -> Result<crate::runtime::Executable> {
+    let b = xla::XlaBuilder::new("zero_one");
+    let p = b
+        .parameter(0, xla::ElementType::F32, dims, "grad")
+        .map_err(|e| anyhow::anyhow!("builder: {e:?}"))?;
+    let z = p.zeros_like().map_err(|e| anyhow::anyhow!("zeros_like: {e:?}"))?;
+    // Tuple-rooted, like every AOT artifact: fetch_tuple is the one
+    // output convention the whole runtime uses.
+    let tup = b.tuple(&[z]).map_err(|e| anyhow::anyhow!("tuple: {e:?}"))?;
+    let comp = b.build(&tup).map_err(|e| anyhow::anyhow!("build: {e:?}"))?;
+    let bytes = dims.iter().product::<i64>() as usize * 4;
+    device.compile_computation(&comp, "zero_one", Some(vec![bytes]))
+}
+
+/// Build one executable zeroing *all* tensors (returns a tuple).
+fn build_zero_foreach(device: &Device, shapes: &[Vec<i64>]) -> Result<crate::runtime::Executable> {
+    let b = xla::XlaBuilder::new("zero_foreach");
+    let mut outs = Vec::with_capacity(shapes.len());
+    for (i, dims) in shapes.iter().enumerate() {
+        let p = b
+            .parameter(i as i64, xla::ElementType::F32, dims, &format!("grad{i}"))
+            .map_err(|e| anyhow::anyhow!("builder: {e:?}"))?;
+        outs.push(p.zeros_like().map_err(|e| anyhow::anyhow!("zeros_like: {e:?}"))?);
+    }
+    let tup = b.tuple(&outs).map_err(|e| anyhow::anyhow!("tuple: {e:?}"))?;
+    let comp = b.build(&tup).map_err(|e| anyhow::anyhow!("build: {e:?}"))?;
+    let sig: Vec<usize> = shapes
+        .iter()
+        .map(|dims| dims.iter().product::<i64>() as usize * 4)
+        .collect();
+    device.compile_computation(&comp, "zero_foreach", Some(sig))
+}
+
+/// Run the study over a model's parameter (≅ gradient) shapes.
+pub fn run(device: &Device, entry: &ModelEntry, iters: usize) -> Result<ZeroGradResult> {
+    let shapes: Vec<Vec<i64>> = entry
+        .params
+        .iter()
+        .filter(|p| matches!(p.dtype, crate::runtime::Dtype::F32))
+        .map(|p| p.shape.iter().map(|&d| d as i64).collect())
+        .collect();
+    anyhow::ensure!(!shapes.is_empty(), "{} has no f32 params", entry.name);
+
+    // "Gradients": arbitrary resident buffers of the right shapes. The
+    // backing literals must outlive the buffers (upload() contract).
+    let grad_lits: Vec<xla::Literal> = shapes
+        .iter()
+        .map(|dims| {
+            let n: i64 = dims.iter().product();
+            xla::Literal::vec1(&vec![1.0f32; n.max(1) as usize])
+                .reshape(dims)
+                .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+        })
+        .collect::<Result<_>>()?;
+    let grads: Vec<xla::PjRtBuffer> = grad_lits
+        .iter()
+        .map(|lit| Ok(device.upload(lit)?.value))
+        .collect::<Result<_>>()?;
+
+    let serial_exes: Vec<_> = shapes
+        .iter()
+        .map(|dims| build_zero_one(device, dims))
+        .collect::<Result<_>>()?;
+    let foreach_exe = build_zero_foreach(device, &shapes)?;
+
+    // Warmup both schedules once (fetch = sync: unsynchronized PJRT
+    // buffers cannot be safely dropped on this build).
+    for (exe, g) in serial_exes.iter().zip(&grads) {
+        crate::runtime::fetch_tuple(&exe.run_buffers(&[g])?.value)?;
+    }
+    crate::runtime::fetch_tuple(
+        &foreach_exe.run_buffers(&grads.iter().collect::<Vec<_>>())?.value,
+    )?;
+
+    let mut serial = Duration::ZERO;
+    let mut foreach = Duration::ZERO;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        for (exe, g) in serial_exes.iter().zip(&grads) {
+            let out = exe.run_buffers(&[g])?;
+            std::hint::black_box(crate::runtime::fetch_tuple(&out.value)?);
+        }
+        serial += t0.elapsed();
+
+        let t1 = Instant::now();
+        let out = foreach_exe.run_buffers(&grads.iter().collect::<Vec<_>>())?;
+        std::hint::black_box(crate::runtime::fetch_tuple(&out.value)?);
+        foreach += t1.elapsed();
+    }
+
+    let serial_secs = serial.as_secs_f64() / iters as f64;
+    let foreach_secs = foreach.as_secs_f64() / iters as f64;
+    Ok(ZeroGradResult {
+        model: entry.name.clone(),
+        tensors: shapes.len(),
+        serial_secs,
+        foreach_secs,
+        speedup: serial_secs / foreach_secs,
+    })
+}

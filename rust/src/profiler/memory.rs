@@ -1,0 +1,113 @@
+//! Memory accounting for the Fig 3/4 comparison (CPU & device memory).
+//!
+//! Host memory is *measured*: every literal the runner materializes is
+//! registered here, tracking current and peak staged bytes (the eager
+//! executor stages per-op literals, the fused path stages once — the
+//! direction the paper reports as TorchInductor's 71-74% CPU-memory
+//! saving). Device memory is *estimated* from the HLO (see
+//! [`DeviceMemEstimator`]): the fused executable owns one arena covering
+//! all intermediates (XLA temp allocation — the analogue of Inductor's
+//! caching-allocator bloat), while eager stages only ever hold one
+//! stage's working set plus the threaded activation.
+
+
+/// Peak/current host-staged bytes (measured).
+#[derive(Debug, Default, Clone)]
+pub struct HostMemTracker {
+    current: usize,
+    peak: usize,
+}
+
+impl HostMemTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn alloc(&mut self, bytes: usize) {
+        self.current += bytes;
+        self.peak = self.peak.max(self.current);
+    }
+
+    pub fn free(&mut self, bytes: usize) {
+        self.current = self.current.saturating_sub(bytes);
+    }
+
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+
+    pub fn current(&self) -> usize {
+        self.current
+    }
+}
+
+/// Analytic device-side arena estimate (bytes).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DeviceMemEstimator {
+    /// Bytes of resident inputs/params.
+    pub resident: usize,
+    /// Temp-arena bytes (sum of intermediate buffers of the executable).
+    pub arena: usize,
+}
+
+impl DeviceMemEstimator {
+    pub fn total(&self) -> usize {
+        self.resident + self.arena
+    }
+}
+
+/// The memory line of one benchmark run (Fig 3/4 columns CM & GM).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MemoryReport {
+    /// Measured host bytes: RSS growth across setup+run plus peak staged
+    /// literal bytes (eager compiles one executable per stage ⇒ more
+    /// host-resident jitted code, the direction of Fig 3/4's CM column).
+    pub host_peak: usize,
+    /// Estimated device bytes (resident + arena).
+    pub device_total: usize,
+}
+
+/// Current resident-set size of this process (bytes), from /proc.
+/// Returns 0 on platforms without procfs — callers treat it as a lower
+/// bound, never an error.
+pub fn current_rss_bytes() -> usize {
+    let Ok(statm) = std::fs::read_to_string("/proc/self/statm") else {
+        return 0;
+    };
+    let pages: usize = statm
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    pages * 4096
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_tracks_high_water_mark() {
+        let mut t = HostMemTracker::new();
+        t.alloc(100);
+        t.alloc(50);
+        t.free(120);
+        t.alloc(10);
+        assert_eq!(t.peak(), 150);
+        assert_eq!(t.current(), 40);
+    }
+
+    #[test]
+    fn free_saturates() {
+        let mut t = HostMemTracker::new();
+        t.alloc(10);
+        t.free(100);
+        assert_eq!(t.current(), 0);
+    }
+
+    #[test]
+    fn estimator_totals() {
+        let e = DeviceMemEstimator { resident: 10, arena: 5 };
+        assert_eq!(e.total(), 15);
+    }
+}

@@ -1,0 +1,15 @@
+//! Phase-timeline profiler: the paper's execution-time decomposition.
+//!
+//! Figures 1/2 split each model's wall time into *GPU active* (blue),
+//! *CPU↔GPU data movement* (red), and *GPU idle* (grey). XBench captures
+//! the same decomposition by instrumenting every runtime call (the CPU
+//! PJRT client is synchronous, so host-side attribution is exact):
+//! device dispatches → active, timed H2D/D2H transfers → movement,
+//! everything else in the iteration (input synthesis, host-side env
+//! steps, scheduling) → idle.
+
+pub mod memory;
+pub mod timeline;
+
+pub use memory::{DeviceMemEstimator, HostMemTracker, MemoryReport};
+pub use timeline::{Breakdown, Phase, PhaseKind, Timeline};

@@ -1,0 +1,151 @@
+//! Timeline capture + breakdown ratios (Fig 1/2, Table 2).
+
+use std::time::{Duration, Instant};
+
+/// What a span of wall time was spent on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PhaseKind {
+    /// Device executing a dispatched computation (paper: GPU active).
+    Compute,
+    /// Host→device transfer (paper: data movement).
+    H2D,
+    /// Device→host transfer (paper: data movement).
+    D2H,
+    /// Host-side work while the device waits (paper: GPU idleness) —
+    /// input prep, environment interaction, dispatch bookkeeping.
+    Host,
+}
+
+/// One recorded span.
+#[derive(Debug, Clone)]
+pub struct Phase {
+    pub kind: PhaseKind,
+    pub label: String,
+    pub elapsed: Duration,
+}
+
+/// An iteration-granularity execution timeline.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    pub phases: Vec<Phase>,
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, kind: PhaseKind, label: impl Into<String>, elapsed: Duration) {
+        self.phases.push(Phase { kind, label: label.into(), elapsed });
+    }
+
+    /// Time a host-side closure and record it as a Host phase.
+    pub fn host<T>(&mut self, label: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let v = f();
+        self.push(PhaseKind::Host, label, t0.elapsed());
+        v
+    }
+
+    pub fn total(&self) -> Duration {
+        self.phases.iter().map(|p| p.elapsed).sum()
+    }
+
+    pub fn total_of(&self, kind: PhaseKind) -> Duration {
+        self.phases
+            .iter()
+            .filter(|p| p.kind == kind)
+            .map(|p| p.elapsed)
+            .sum()
+    }
+
+    /// Merge another timeline's phases (multi-iteration accumulation).
+    pub fn extend(&mut self, other: &Timeline) {
+        self.phases.extend(other.phases.iter().cloned());
+    }
+
+    pub fn breakdown(&self) -> Breakdown {
+        Breakdown::from_timeline(self)
+    }
+}
+
+/// Normalized ratios of the three paper buckets (sum to 1 when total>0).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Breakdown {
+    /// Fraction of wall time the device computed (paper: GPU activeness).
+    pub active: f64,
+    /// Fraction spent in H2D+D2H transfers (paper: data movement).
+    pub movement: f64,
+    /// Fraction the device sat idle on host work (paper: GPU idleness).
+    pub idle: f64,
+    /// Total wall seconds the ratios are over.
+    pub total_secs: f64,
+}
+
+impl Breakdown {
+    pub fn from_timeline(t: &Timeline) -> Self {
+        let total = t.total().as_secs_f64();
+        if total == 0.0 {
+            return Breakdown { active: 0.0, movement: 0.0, idle: 0.0, total_secs: 0.0 };
+        }
+        let active = t.total_of(PhaseKind::Compute).as_secs_f64() / total;
+        let movement = (t.total_of(PhaseKind::H2D) + t.total_of(PhaseKind::D2H)).as_secs_f64()
+            / total;
+        Breakdown {
+            active,
+            movement,
+            idle: (1.0 - active - movement).max(0.0),
+            total_secs: total,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(n: u64) -> Duration {
+        Duration::from_millis(n)
+    }
+
+    #[test]
+    fn breakdown_ratios_sum_to_one() {
+        let mut t = Timeline::new();
+        t.push(PhaseKind::Compute, "exec", ms(60));
+        t.push(PhaseKind::H2D, "up", ms(20));
+        t.push(PhaseKind::D2H, "down", ms(10));
+        t.push(PhaseKind::Host, "prep", ms(10));
+        let b = t.breakdown();
+        assert!((b.active - 0.6).abs() < 1e-9);
+        assert!((b.movement - 0.3).abs() < 1e-9);
+        assert!((b.idle - 0.1).abs() < 1e-9);
+        assert!((b.active + b.movement + b.idle - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_timeline_is_all_zero() {
+        let b = Timeline::new().breakdown();
+        assert_eq!(b.total_secs, 0.0);
+        assert_eq!(b.active, 0.0);
+    }
+
+    #[test]
+    fn host_closure_is_recorded() {
+        let mut t = Timeline::new();
+        let v = t.host("work", || 42);
+        assert_eq!(v, 42);
+        assert_eq!(t.phases.len(), 1);
+        assert_eq!(t.phases[0].kind, PhaseKind::Host);
+    }
+
+    #[test]
+    fn extend_accumulates() {
+        let mut a = Timeline::new();
+        a.push(PhaseKind::Compute, "x", ms(5));
+        let mut b = Timeline::new();
+        b.push(PhaseKind::Host, "y", ms(5));
+        a.extend(&b);
+        assert_eq!(a.phases.len(), 2);
+        assert_eq!(a.total(), ms(10));
+    }
+}

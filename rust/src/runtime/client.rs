@@ -1,0 +1,290 @@
+//! PJRT device wrapper with *timed* transfers and dispatches.
+//!
+//! Every H2D upload, device execution, and D2H fetch goes through this
+//! wrapper so the profiler can attribute wall time to the paper's three
+//! breakdown buckets (GPU active / data movement / idle) without any
+//! external profiler. The tfrt CPU client schedules work asynchronously,
+//! so attribution goes through [`Executable::run_profiled`] (see the
+//! runtime-findings section of DESIGN.md).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use super::manifest::Dtype;
+
+/// A timed sub-operation: what happened and how long it took.
+#[derive(Debug, Clone, Copy)]
+pub struct Timed<T> {
+    pub value: T,
+    pub elapsed: Duration,
+}
+
+fn timed<T>(f: impl FnOnce() -> T) -> Timed<T> {
+    let t0 = Instant::now();
+    let value = f();
+    Timed { value, elapsed: t0.elapsed() }
+}
+
+impl Dtype {
+    pub fn element_type(self) -> xla::ElementType {
+        match self {
+            Dtype::F32 => xla::ElementType::F32,
+            Dtype::I32 => xla::ElementType::S32,
+            Dtype::S8 => xla::ElementType::S8,
+        }
+    }
+}
+
+/// The PJRT device handle (CPU plugin on this testbed).
+pub struct Device {
+    client: xla::PjRtClient,
+}
+
+impl Device {
+    /// Connect to the CPU PJRT plugin.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Device { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text artifact into a loaded executable.
+    ///
+    /// HLO *text* is the interchange format: jax ≥ 0.5 emits protos with
+    /// 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+    /// parser reassigns ids (see /opt/xla-example/README.md).
+    pub fn compile_hlo_file(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| anyhow::anyhow!("loading HLO {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))?;
+        // Parse the text once more for the entry-parameter signature —
+        // the dispatch-validation data (see Executable::validate_args).
+        let param_bytes = crate::hlo::parse_file(path).ok().and_then(|m| {
+            let entry = m.entry_computation()?;
+            Some(
+                entry
+                    .instructions
+                    .iter()
+                    .filter(|i| i.opcode == "parameter")
+                    .map(|i| i.shape.byte_size())
+                    .collect::<Vec<_>>(),
+            )
+        });
+        Ok(Executable {
+            exe,
+            name: path
+                .file_name()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+            param_bytes,
+        })
+    }
+
+    /// Compile an in-memory computation (used by the §4.1 case studies,
+    /// which build schedules directly with `XlaBuilder`). `param_bytes`
+    /// is the caller-declared argument signature (byte size per
+    /// parameter) — this wrapper cannot recover it from the computation,
+    /// and unvalidated dispatch segfaults in PJRT.
+    pub fn compile_computation(
+        &self,
+        comp: &xla::XlaComputation,
+        name: &str,
+        param_bytes: Option<Vec<usize>>,
+    ) -> Result<Executable> {
+        let exe = self
+            .client
+            .compile(comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+        Ok(Executable { exe, name: name.to_string(), param_bytes })
+    }
+
+    /// Timed host→device transfer of one literal.
+    ///
+    /// CONTRACT: the caller must keep `lit` alive until the returned
+    /// buffer's last use. PJRT's BufferFromHostLiteral copies
+    /// asynchronously, so the literal backs the buffer until the transfer
+    /// completes — passing a temporary is a use-after-free (observed as
+    /// `literal.size_bytes() == b->size()` CHECK failures or segfaults).
+    pub fn upload(&self, lit: &xla::Literal) -> Result<Timed<xla::PjRtBuffer>> {
+        let t = timed(|| self.client.buffer_from_host_literal(None, lit));
+        Ok(Timed {
+            value: t.value.map_err(|e| anyhow::anyhow!("H2D transfer: {e:?}"))?,
+            elapsed: t.elapsed,
+        })
+    }
+}
+
+/// A compiled artifact ready to dispatch.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    /// Entry-parameter byte sizes, when known (parsed from the HLO).
+    /// The PJRT C wrapper does NOT validate dispatch arguments — a wrong
+    /// arity or shape segfaults inside the runtime — so we gate every
+    /// dispatch here.
+    param_bytes: Option<Vec<usize>>,
+}
+
+impl Executable {
+    fn validate_args(&self, n: usize, sizes: impl Iterator<Item = usize>) -> Result<()> {
+        let Some(expect) = &self.param_bytes else { return Ok(()) };
+        anyhow::ensure!(
+            n == expect.len(),
+            "{}: dispatched with {n} arguments, executable takes {} \
+             (unvalidated dispatch segfaults in PJRT)",
+            self.name,
+            expect.len()
+        );
+        for (i, (got, want)) in sizes.zip(expect.iter()).enumerate() {
+            if got == usize::MAX {
+                continue; // size unknown (buffer path): arity-only check
+            }
+            anyhow::ensure!(
+                got == *want,
+                "{}: argument {i} is {got} bytes, executable expects {want}",
+                self.name
+            );
+        }
+        Ok(())
+    }
+}
+
+impl Executable {
+    /// Dispatch with host literals (PJRT uploads internally): returns the
+    /// raw tuple output buffer + device time. Literal-mode dispatch folds
+    /// H2D into the execute call, so use [`Executable::run_buffers`] when
+    /// transfers must be timed separately.
+    pub fn run_literals(&self, inputs: &[xla::Literal]) -> Result<Timed<xla::PjRtBuffer>> {
+        self.validate_args(inputs.len(), inputs.iter().map(|l| l.size_bytes()))?;
+        let t = timed(|| self.exe.execute::<xla::Literal>(inputs));
+        let mut out = t.value.map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.name))?;
+        let buf = take_single(&mut out, &self.name)?;
+        Ok(Timed { value: buf, elapsed: t.elapsed })
+    }
+
+    /// Dispatch with device-resident buffers: pure device compute time.
+    pub fn run_buffers(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Timed<xla::PjRtBuffer>> {
+        // Arity-only validation here: querying on_device_shape on a
+        // buffer whose upload is still in flight is itself unsafe on
+        // this wrapper, so per-argument shape checks live on the literal
+        // path (run_literals) where sizes are host-known.
+        self.validate_args(inputs.len(), inputs.iter().map(|_| usize::MAX))?;
+        let t = timed(|| self.exe.execute_b::<&xla::PjRtBuffer>(inputs));
+        let mut out = t.value.map_err(|e| anyhow::anyhow!("execute_b {}: {e:?}", self.name))?;
+        let buf = take_single(&mut out, &self.name)?;
+        Ok(Timed { value: buf, elapsed: t.elapsed })
+    }
+}
+
+/// A dispatch with correct phase attribution (see [`Executable::run_profiled`]).
+pub struct ProfiledRun {
+    /// The untupled output literals (host-side).
+    pub leaves: Vec<xla::Literal>,
+    /// The raw output buffer (synchronized; safe to keep or drop).
+    pub buffer: xla::PjRtBuffer,
+    /// Device compute time: dispatch + completion wait.
+    pub compute: Duration,
+    /// Pure D2H transfer time of the materialized result.
+    pub d2h: Duration,
+}
+
+impl Executable {
+    /// Dispatch + fetch with *attributed* phases.
+    ///
+    /// The tfrt CPU client schedules executions asynchronously: the
+    /// `execute` call may return in microseconds with the work still
+    /// running, and the (single — fetching the same output buffer twice
+    /// is unsafe on this wrapper) D2H fetch then blocks until completion.
+    /// Naively splitting exec/fetch would misattribute compute time to
+    /// data movement, so the pure-transfer share of the fetch is bounded
+    /// by [`estimated_copy_time`] for the fetched byte count (on a CPU
+    /// device, D2H *is* a host memcpy):
+    /// `d2h = min(memcpy_est, fetch)`, `compute = exec + fetch − d2h`.
+    pub fn run_profiled(&self, inputs: &[&xla::PjRtBuffer]) -> Result<ProfiledRun> {
+        let exec = self.run_buffers(inputs)?;
+        let first = fetch_tuple(&exec.value)?;
+        let bytes: usize = first.value.iter().map(|l| l.size_bytes()).sum();
+        let d2h = estimated_copy_time(bytes).min(first.elapsed);
+        let compute = exec.elapsed + first.elapsed.saturating_sub(d2h);
+        Ok(ProfiledRun {
+            leaves: first.value,
+            buffer: exec.value,
+            compute,
+            d2h,
+        })
+    }
+}
+
+/// Measured host memcpy bandwidth (bytes/sec), benchmarked once per
+/// process over a cache-busting 64 MiB copy.
+pub fn memcpy_bandwidth() -> f64 {
+    static BW: std::sync::OnceLock<f64> = std::sync::OnceLock::new();
+    *BW.get_or_init(|| {
+        const N: usize = 64 << 20;
+        let src = vec![7u8; N];
+        let mut dst = vec![0u8; N];
+        let t0 = Instant::now();
+        dst.copy_from_slice(&src);
+        std::hint::black_box(&dst);
+        let secs = t0.elapsed().as_secs_f64().max(1e-9);
+        N as f64 / secs
+    })
+}
+
+/// Estimated wall time to copy `bytes` on the host — the pure-transfer
+/// component of a CPU-device D2H fetch (plus a fixed per-call overhead).
+pub fn estimated_copy_time(bytes: usize) -> Duration {
+    let per_call = Duration::from_micros(5); // literal alloc + bookkeeping
+    per_call + Duration::from_secs_f64(bytes as f64 / memcpy_bandwidth())
+}
+
+/// Byte size of an on-device shape (tuples sum their leaves).
+pub fn shape_bytes(shape: &xla::Shape) -> usize {
+    match shape {
+        xla::Shape::Array(a) => a.element_count() * element_bytes(a.ty()),
+        xla::Shape::Tuple(elems) => elems.iter().map(shape_bytes).sum(),
+        xla::Shape::Unsupported(_) => 0,
+    }
+}
+
+fn element_bytes(ty: xla::ElementType) -> usize {
+    use xla::ElementType as E;
+    match ty {
+        E::Pred | E::S8 | E::U8 => 1,
+        E::S16 | E::U16 | E::F16 | E::Bf16 => 2,
+        E::S32 | E::U32 | E::F32 => 4,
+        E::S64 | E::U64 | E::F64 | E::C64 => 8,
+        E::C128 => 16,
+    }
+}
+
+/// All artifacts are lowered with `return_tuple=True`: exactly one output
+/// buffer per dispatch, holding the result tuple.
+fn take_single(out: &mut Vec<Vec<xla::PjRtBuffer>>, name: &str) -> Result<xla::PjRtBuffer> {
+    anyhow::ensure!(!out.is_empty(), "{name}: no output devices");
+    let dev0 = &mut out[0];
+    anyhow::ensure!(
+        dev0.len() == 1,
+        "{name}: expected 1 tuple output buffer, got {}",
+        dev0.len()
+    );
+    Ok(dev0.remove(0))
+}
+
+/// Timed device→host fetch, untupled into leaf literals.
+pub fn fetch_tuple(buf: &xla::PjRtBuffer) -> Result<Timed<Vec<xla::Literal>>> {
+    let t0 = Instant::now();
+    let lit = buf
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("D2H transfer: {e:?}"))?;
+    let leaves = lit.to_tuple().map_err(|e| anyhow::anyhow!("untupling output: {e:?}"))?;
+    Ok(Timed { value: leaves, elapsed: t0.elapsed() })
+}

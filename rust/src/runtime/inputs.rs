@@ -1,0 +1,127 @@
+//! Synthetic runtime inputs, generated from manifest [`InputSpec`]s.
+//!
+//! The paper's protocol (§2.2) assumes inputs are "already preprocessed
+//! and prefetched" — data loading is out of scope — so XBench synthesizes
+//! batches host-side with a seeded deterministic stream (identical across
+//! runs ⇒ CI comparisons are measurement-noise only, never data noise).
+
+use anyhow::Result;
+
+use super::manifest::{Dtype, InputSpec};
+use crate::util::Rng;
+
+/// Generate one input literal. `stream` distinguishes iterations so
+/// successive batches differ (training actually optimizes something).
+pub fn synth_literal(spec: &InputSpec, stream: u64) -> Result<xla::Literal> {
+    let mut rng = Rng::seed_from_name(&spec.name, stream);
+    let n = spec.element_count();
+    // Single-copy path: fill a typed buffer, hand its bytes straight to
+    // the shaped literal constructor (the previous vec1+reshape path
+    // copied twice; see EXPERIMENTS.md §Perf).
+    match spec.dtype {
+        Dtype::F32 => {
+            let mut data = vec![0f32; n];
+            match spec.kind.as_str() {
+                "normal" => rng.fill_normal_f32(&mut data),
+                "uniform" => rng.fill_uniform_f32(&mut data),
+                k => anyhow::bail!("f32 input {} has unsupported kind {k}", spec.name),
+            }
+            typed_literal(&data, xla::ElementType::F32, &spec.shape, &spec.name)
+        }
+        Dtype::I32 => {
+            anyhow::ensure!(
+                spec.kind == "randint",
+                "i32 input {} must be randint",
+                spec.name
+            );
+            anyhow::ensure!(spec.bound > 0, "randint {} needs bound > 0", spec.name);
+            let data: Vec<i32> = (0..n)
+                .map(|_| rng.gen_range(spec.bound as u64) as i32)
+                .collect();
+            typed_literal(&data, xla::ElementType::S32, &spec.shape, &spec.name)
+        }
+        Dtype::S8 => anyhow::bail!("s8 runtime inputs are not produced by the zoo"),
+    }
+}
+
+/// Build a shaped literal from a typed buffer without an intermediate
+/// rank-1 literal + reshape (one copy instead of two).
+fn typed_literal<T>(
+    data: &[T],
+    ty: xla::ElementType,
+    shape: &[usize],
+    name: &str,
+) -> Result<xla::Literal> {
+    // SAFETY: reinterpreting a dense primitive slice as bytes is sound
+    // for the POD element types used here (f32/i32).
+    let bytes = unsafe {
+        std::slice::from_raw_parts(
+            data.as_ptr() as *const u8,
+            std::mem::size_of_val(data),
+        )
+    };
+    xla::Literal::create_from_shape_and_untyped_data(ty, shape, bytes)
+        .map_err(|e| anyhow::anyhow!("literal for input {name}: {e:?}"))
+}
+
+/// Generate the full input batch for an artifact.
+pub fn synth_inputs(specs: &[InputSpec], stream: u64) -> Result<Vec<xla::Literal>> {
+    specs.iter().map(|s| synth_literal(s, stream)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(kind: &str, dtype: Dtype, bound: i64) -> InputSpec {
+        InputSpec {
+            name: "x".into(),
+            shape: vec![4, 8],
+            dtype,
+            kind: kind.into(),
+            bound,
+        }
+    }
+
+    #[test]
+    fn deterministic_per_stream() {
+        let s = spec("normal", Dtype::F32, 0);
+        let a = synth_literal(&s, 7).unwrap().to_vec::<f32>().unwrap();
+        let b = synth_literal(&s, 7).unwrap().to_vec::<f32>().unwrap();
+        let c = synth_literal(&s, 8).unwrap().to_vec::<f32>().unwrap();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn randint_respects_bound() {
+        let s = spec("randint", Dtype::I32, 10);
+        let v = synth_literal(&s, 0).unwrap().to_vec::<i32>().unwrap();
+        assert!(v.iter().all(|&x| (0..10).contains(&x)));
+    }
+
+    #[test]
+    fn normal_has_sane_moments() {
+        let mut s = spec("normal", Dtype::F32, 0);
+        s.shape = vec![10_000];
+        let v = synth_literal(&s, 0).unwrap().to_vec::<f32>().unwrap();
+        let mean = v.iter().sum::<f32>() / v.len() as f32;
+        let var = v.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / v.len() as f32;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn rejects_unbounded_randint() {
+        let s = spec("randint", Dtype::I32, 0);
+        assert!(synth_literal(&s, 0).is_err());
+    }
+
+    #[test]
+    fn shape_matches_spec() {
+        let s = spec("uniform", Dtype::F32, 0);
+        let lit = synth_literal(&s, 0).unwrap();
+        assert_eq!(lit.element_count(), 32);
+        assert_eq!(lit.size_bytes(), 128);
+    }
+}

@@ -1,0 +1,402 @@
+//! Decoder for `artifacts/manifest.json` (written by `compile/aot.py`).
+//!
+//! The manifest is the only contract between the build-time python side
+//! and this runtime: model metadata, parameter dumps, per-batch inference
+//! artifacts, the train-step artifact, and the eager stage chain. Decoded
+//! by hand over [`crate::util::json`] — every missing/mistyped key errors
+//! with its path so a stale manifest fails loudly, not subtly.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Value};
+
+/// Element type of a runtime tensor (subset the zoo uses).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    F32,
+    I32,
+    S8,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            "s8" => Ok(Dtype::S8),
+            _ => bail!("unknown dtype {s:?}"),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::S8 => 1,
+        }
+    }
+}
+
+/// How to synthesize one runtime input (mirrors python `InputSpec`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+    /// "normal" | "randint" | "uniform"
+    pub kind: String,
+    /// Exclusive upper bound for randint.
+    pub bound: i64,
+}
+
+impl InputSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.element_count() * self.dtype.size_bytes()
+    }
+
+    fn decode(v: &Value) -> Result<InputSpec> {
+        Ok(InputSpec {
+            name: v.req_str("name")?.to_string(),
+            shape: decode_shape(v.req("shape")?)?,
+            dtype: Dtype::parse(v.req_str("dtype")?)?,
+            kind: v.req_str("kind")?.to_string(),
+            bound: v.get("bound").and_then(|b| b.as_i64()).unwrap_or(0),
+        })
+    }
+}
+
+/// One dumped parameter tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub file: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl ParamSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.element_count() * self.dtype.size_bytes()
+    }
+
+    fn decode(v: &Value) -> Result<ParamSpec> {
+        Ok(ParamSpec {
+            file: v.req_str("file")?.to_string(),
+            shape: decode_shape(v.req("shape")?)?,
+            dtype: Dtype::parse(v.req_str("dtype")?)?,
+        })
+    }
+}
+
+/// A fused inference artifact at one batch size.
+#[derive(Debug, Clone)]
+pub struct InferEntry {
+    pub artifact: String,
+    pub inputs: Vec<InputSpec>,
+}
+
+impl InferEntry {
+    fn decode(v: &Value) -> Result<InferEntry> {
+        Ok(InferEntry {
+            artifact: v.req_str("artifact")?.to_string(),
+            inputs: decode_list(v.req("inputs")?, InputSpec::decode)?,
+        })
+    }
+}
+
+/// The fused train-step artifact.
+#[derive(Debug, Clone)]
+pub struct TrainEntry {
+    pub artifact: String,
+    pub batch: usize,
+    /// Runtime batch inputs (params are prepended implicitly).
+    pub inputs: Vec<InputSpec>,
+    pub n_params: usize,
+}
+
+impl TrainEntry {
+    fn decode(v: &Value) -> Result<TrainEntry> {
+        Ok(TrainEntry {
+            artifact: v.req_str("artifact")?.to_string(),
+            batch: v.req_usize("batch")?,
+            inputs: decode_list(v.req("inputs")?, InputSpec::decode)?,
+            n_params: v.req_usize("n_params")?,
+        })
+    }
+}
+
+/// Shape/dtype of a staged activation.
+#[derive(Debug, Clone)]
+pub struct ActSpec {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl ActSpec {
+    pub fn byte_size(&self) -> usize {
+        self.shape.iter().product::<usize>() * self.dtype.size_bytes()
+    }
+
+    fn decode(v: &Value) -> Result<ActSpec> {
+        Ok(ActSpec {
+            shape: decode_shape(v.req("shape")?)?,
+            dtype: Dtype::parse(v.req_str("dtype")?)?,
+        })
+    }
+}
+
+/// One eager-mode dispatch unit.
+#[derive(Debug, Clone)]
+pub struct StageEntry {
+    pub name: String,
+    pub artifact: String,
+    pub param_idx: Vec<usize>,
+    pub acts_in: Vec<ActSpec>,
+    pub act_out: ActSpec,
+}
+
+impl StageEntry {
+    fn decode(v: &Value) -> Result<StageEntry> {
+        Ok(StageEntry {
+            name: v.req_str("name")?.to_string(),
+            artifact: v.req_str("artifact")?.to_string(),
+            param_idx: v
+                .req_array("param_idx")?
+                .iter()
+                .map(|x| x.as_usize().context("param_idx element"))
+                .collect::<Result<_>>()?,
+            acts_in: decode_list(v.req("acts_in")?, ActSpec::decode)?,
+            act_out: ActSpec::decode(v.req("act_out")?)?,
+        })
+    }
+}
+
+/// The eager stage chain for one model.
+#[derive(Debug, Clone)]
+pub struct StagesEntry {
+    pub batch: usize,
+    pub list: Vec<StageEntry>,
+}
+
+/// One zoo model's manifest entry.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub domain: String,
+    pub task: String,
+    pub default_batch: usize,
+    pub lr: f64,
+    pub tags: Vec<String>,
+    pub params: Vec<ParamSpec>,
+    /// Batch size -> inference artifact.
+    pub infer: BTreeMap<usize, InferEntry>,
+    pub train: Option<TrainEntry>,
+    pub stages: Option<StagesEntry>,
+}
+
+impl ModelEntry {
+    pub fn has_tag(&self, tag: &str) -> bool {
+        self.tags.iter().any(|t| t == tag)
+    }
+
+    /// Sorted batch sizes with inference artifacts.
+    pub fn infer_batches(&self) -> Vec<usize> {
+        self.infer.keys().copied().collect()
+    }
+
+    pub fn infer_at(&self, batch: usize) -> Option<&InferEntry> {
+        self.infer.get(&batch)
+    }
+
+    /// Total parameter bytes (device residency of the weights).
+    pub fn param_bytes(&self) -> usize {
+        self.params.iter().map(|p| p.byte_size()).sum()
+    }
+
+    fn decode(v: &Value) -> Result<ModelEntry> {
+        let name = v.req_str("name")?.to_string();
+        let decode_inner = |v: &Value| -> Result<ModelEntry> {
+            let mut infer = BTreeMap::new();
+            for (k, e) in v
+                .req("infer")?
+                .as_object()
+                .context("infer must be an object")?
+            {
+                let batch: usize = k.parse().with_context(|| format!("infer key {k:?}"))?;
+                infer.insert(batch, InferEntry::decode(e)?);
+            }
+            let train = match v.req("train")? {
+                Value::Null => None,
+                t => Some(TrainEntry::decode(t)?),
+            };
+            let stages = match v.req("stages")? {
+                Value::Null => None,
+                s => Some(StagesEntry {
+                    batch: s.req_usize("batch")?,
+                    list: decode_list(s.req("list")?, StageEntry::decode)?,
+                }),
+            };
+            Ok(ModelEntry {
+                name: v.req_str("name")?.to_string(),
+                domain: v.req_str("domain")?.to_string(),
+                task: v.req_str("task")?.to_string(),
+                default_batch: v.req_usize("default_batch")?,
+                lr: v.req_f64("lr")?,
+                tags: v
+                    .req_array("tags")?
+                    .iter()
+                    .map(|t| t.as_str().map(str::to_string).context("tag"))
+                    .collect::<Result<_>>()?,
+                params: decode_list(v.req("params")?, ParamSpec::decode)?,
+                infer,
+                train,
+                stages,
+            })
+        };
+        decode_inner(v).with_context(|| format!("decoding model {name:?}"))
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u64,
+    pub param_seed: u64,
+    pub models: Vec<ModelEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(artifact_dir: &Path) -> Result<Self> {
+        let path = artifact_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {} (run `make artifacts`?)", path.display()))?;
+        Self::decode_str(&text).context("parsing manifest.json")
+    }
+
+    /// Decode from JSON text.
+    pub fn decode_str(text: &str) -> Result<Self> {
+        let v = json::parse(text)?;
+        let version = v.req_usize("version")? as u64;
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+        Ok(Manifest {
+            version,
+            param_seed: v.req_usize("param_seed")? as u64,
+            models: decode_list(v.req("models")?, ModelEntry::decode)?,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| anyhow::anyhow!("model {name} not in manifest"))
+    }
+
+    /// Absolute path of a manifest-relative artifact file.
+    pub fn resolve(&self, dir: &Path, rel: &str) -> PathBuf {
+        dir.join(rel)
+    }
+}
+
+fn decode_shape(v: &Value) -> Result<Vec<usize>> {
+    v.as_array()
+        .context("shape must be an array")?
+        .iter()
+        .map(|d| d.as_usize().context("shape dim"))
+        .collect()
+}
+
+fn decode_list<T>(v: &Value, f: impl Fn(&Value) -> Result<T>) -> Result<Vec<T>> {
+    v.as_array()
+        .context("expected an array")?
+        .iter()
+        .map(f)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 1, "param_seed": 42,
+        "models": [{
+            "name": "m", "domain": "nlp", "task": "lm", "default_batch": 4,
+            "lr": 0.01, "tags": ["sweep"],
+            "params": [{"file": "params/m/p000.bin", "shape": [2, 3], "dtype": "f32"}],
+            "infer": {
+                "1": {"artifact": "m.infer.b1.hlo.txt",
+                       "inputs": [{"name": "x", "shape": [1, 8], "dtype": "f32",
+                                    "kind": "normal", "bound": 0}]},
+                "16": {"artifact": "m.infer.b16.hlo.txt", "inputs": []},
+                "4": {"artifact": "m.infer.b4.hlo.txt", "inputs": []}
+            },
+            "train": {"artifact": "m.train.b4.hlo.txt", "batch": 4,
+                       "inputs": [{"name": "x", "shape": [4], "dtype": "i32",
+                                    "kind": "randint", "bound": 10}],
+                       "n_params": 1},
+            "stages": {"batch": 4, "list": [
+                {"name": "00_s", "artifact": "m.stage00.b4.hlo.txt",
+                 "param_idx": [0],
+                 "acts_in": [{"shape": [4, 8], "dtype": "f32"}],
+                 "act_out": {"shape": [4, 2], "dtype": "f32"}}
+            ]}
+        }]
+    }"#;
+
+    fn manifest() -> Manifest {
+        Manifest::decode_str(SAMPLE).unwrap()
+    }
+
+    #[test]
+    fn decodes_everything() {
+        let m = manifest();
+        assert_eq!(m.param_seed, 42);
+        let e = &m.models[0];
+        assert_eq!(e.infer_batches(), vec![1, 4, 16]); // numeric sort
+        assert_eq!(e.param_bytes(), 24);
+        assert!(e.has_tag("sweep"));
+        let tr = e.train.as_ref().unwrap();
+        assert_eq!(tr.inputs[0].bound, 10);
+        let st = e.stages.as_ref().unwrap();
+        assert_eq!(st.list[0].act_out.byte_size(), 32);
+    }
+
+    #[test]
+    fn lookup_and_missing() {
+        let m = manifest();
+        assert!(m.model("m").is_ok());
+        assert!(m.model("nope").is_err());
+        assert!(m.models[0].infer_at(4).is_some());
+        assert!(m.models[0].infer_at(3).is_none());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let text = SAMPLE.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::decode_str(&text).is_err());
+    }
+
+    #[test]
+    fn error_names_the_model() {
+        let text = SAMPLE.replace("\"domain\": \"nlp\",", "");
+        let err = format!("{:?}", Manifest::decode_str(&text).unwrap_err());
+        assert!(err.contains("\"m\""), "{err}");
+    }
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(Dtype::F32.size_bytes(), 4);
+        assert_eq!(Dtype::S8.size_bytes(), 1);
+        assert!(Dtype::parse("f64").is_err());
+    }
+}

@@ -1,0 +1,98 @@
+//! PJRT runtime: load AOT artifacts and execute them from the hot path.
+//!
+//! Wraps the `xla` crate (PJRT C API): [`client::Device`] owns the PJRT
+//! client and times every transfer/dispatch; [`ArtifactStore`] caches
+//! compiled executables keyed by artifact path (compile once per process,
+//! like a deployment would); [`inputs`] synthesizes deterministic batches;
+//! [`params`] replays the python-dumped initial weights.
+
+pub mod client;
+pub mod inputs;
+pub mod manifest;
+pub mod params;
+
+pub use client::{estimated_copy_time, fetch_tuple, memcpy_bandwidth, Device, Executable, ProfiledRun, Timed};
+pub use manifest::{Dtype, InputSpec, Manifest, ModelEntry, ParamSpec};
+
+use anyhow::Result;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Duration;
+
+/// Compile-once cache over a manifest's artifacts.
+///
+/// Compilation time is *excluded* from benchmark timings (the paper
+/// measures steady-state iterations; JIT-compile overhead is studied
+/// separately in the §3.2 outlier discussion, which XBench reproduces by
+/// reading this cache's cold-compile times).
+pub struct ArtifactStore {
+    device: Rc<Device>,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    compile_times: RefCell<HashMap<String, Duration>>,
+    compile_rss: RefCell<HashMap<String, usize>>,
+}
+
+impl ArtifactStore {
+    pub fn new(device: Rc<Device>, artifact_dir: impl Into<PathBuf>) -> Self {
+        ArtifactStore {
+            device,
+            dir: artifact_dir.into(),
+            cache: RefCell::new(HashMap::new()),
+            compile_times: RefCell::new(HashMap::new()),
+            compile_rss: RefCell::new(HashMap::new()),
+        }
+    }
+
+    pub fn device(&self) -> &Device {
+        &self.device
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Fetch (compiling on first use) the executable for a manifest-
+    /// relative artifact path.
+    pub fn get(&self, rel: &str) -> Result<Rc<Executable>> {
+        if let Some(exe) = self.cache.borrow().get(rel) {
+            return Ok(exe.clone());
+        }
+        let t0 = std::time::Instant::now();
+        let rss0 = crate::profiler::memory::current_rss_bytes();
+        let exe = Rc::new(self.device.compile_hlo_file(&self.dir.join(rel))?);
+        self.compile_rss.borrow_mut().insert(
+            rel.to_string(),
+            crate::profiler::memory::current_rss_bytes().saturating_sub(rss0),
+        );
+        self.compile_times
+            .borrow_mut()
+            .insert(rel.to_string(), t0.elapsed());
+        self.cache.borrow_mut().insert(rel.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Cold-compile wall time of an artifact (None if never compiled).
+    /// Feeds the §3.2 JIT-overhead outlier reproduction.
+    pub fn compile_time(&self, rel: &str) -> Option<Duration> {
+        self.compile_times.borrow().get(rel).copied()
+    }
+
+    /// Host-RSS growth attributable to compiling an artifact — the
+    /// executable's host-code/metadata footprint (Fig 3/4's CM column:
+    /// eager compiles one executable per stage, fused compiles one).
+    pub fn compile_rss(&self, rel: &str) -> usize {
+        self.compile_rss.borrow().get(rel).copied().unwrap_or(0)
+    }
+
+    /// Number of compiled executables held.
+    pub fn len(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}

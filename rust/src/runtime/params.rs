@@ -1,0 +1,67 @@
+//! Load the AOT-dumped initial parameters into XLA literals.
+//!
+//! `aot.py` writes each parameter as raw little-endian bytes next to the
+//! manifest; replaying them here gives the rust runtime bit-identical
+//! initial state to the python build (so e.g. the E2E training example
+//! reproduces the loss curve the python side would produce).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+use super::manifest::{ModelEntry, ParamSpec};
+
+/// Read one parameter dump into a literal.
+pub fn load_param(artifact_dir: &Path, spec: &ParamSpec) -> Result<xla::Literal> {
+    let path = artifact_dir.join(&spec.file);
+    let bytes = std::fs::read(&path)
+        .with_context(|| format!("reading param dump {}", path.display()))?;
+    anyhow::ensure!(
+        bytes.len() == spec.byte_size(),
+        "{}: expected {} bytes, found {}",
+        spec.file,
+        spec.byte_size(),
+        bytes.len()
+    );
+    xla::Literal::create_from_shape_and_untyped_data(
+        spec.dtype.element_type(),
+        &spec.shape,
+        &bytes,
+    )
+    .map_err(|e| anyhow::anyhow!("literal for {}: {e:?}", spec.file))
+}
+
+/// Load a model's full parameter list (manifest order — the calling
+/// convention of every artifact).
+pub fn load_params(artifact_dir: &Path, model: &ModelEntry) -> Result<Vec<xla::Literal>> {
+    model
+        .params
+        .iter()
+        .map(|p| load_param(artifact_dir, p))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Dtype;
+
+    #[test]
+    fn roundtrips_f32_bytes() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let data: Vec<f32> = vec![1.0, -2.5, 3.25, 0.0, 7.5, -0.125];
+        let bytes: Vec<u8> = data.iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(dir.path().join("p.bin"), &bytes).unwrap();
+        let spec = ParamSpec { file: "p.bin".into(), shape: vec![2, 3], dtype: Dtype::F32 };
+        let lit = load_param(dir.path(), &spec).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+        assert_eq!(lit.size_bytes(), 24);
+    }
+
+    #[test]
+    fn rejects_size_mismatch() {
+        let dir = crate::util::TempDir::new().unwrap();
+        std::fs::write(dir.path().join("p.bin"), [0u8; 7]).unwrap();
+        let spec = ParamSpec { file: "p.bin".into(), shape: vec![2], dtype: Dtype::F32 };
+        assert!(load_param(dir.path(), &spec).is_err());
+    }
+}

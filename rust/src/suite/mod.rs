@@ -1,0 +1,146 @@
+//! The benchmark suite: registry view over the manifest + selection.
+//!
+//! Mirrors the paper's Table 1 — models grouped by domain/task — and the
+//! §2 selection machinery: filter by name, domain, or tag; enumerate the
+//! benchmark *configs* (model × mode) a run expands to.
+
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+use crate::config::{Mode, SuiteSelection};
+use crate::runtime::{Manifest, ModelEntry};
+
+/// One runnable benchmark: a model in one mode.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BenchId {
+    pub model: String,
+    pub mode: Mode,
+}
+
+impl std::fmt::Display for BenchId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}.{}", self.model, self.mode.as_str())
+    }
+}
+
+/// The suite: manifest + domain ordering.
+pub struct Suite {
+    manifest: Manifest,
+}
+
+impl Suite {
+    pub fn new(manifest: Manifest) -> Self {
+        Suite { manifest }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn models(&self) -> impl Iterator<Item = &ModelEntry> {
+        self.manifest.models.iter()
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.manifest.model(name)
+    }
+
+    /// Apply a selection filter; errors on unknown explicit names.
+    pub fn select(&self, sel: &SuiteSelection) -> Result<Vec<&ModelEntry>> {
+        for name in &sel.models {
+            self.manifest.model(name)?; // fail fast on typos
+        }
+        Ok(self
+            .models()
+            .filter(|m| sel.models.is_empty() || sel.models.iter().any(|n| n == &m.name))
+            .filter(|m| sel.domain.as_deref().map_or(true, |d| m.domain == d))
+            .filter(|m| sel.tag.as_deref().map_or(true, |t| m.has_tag(t)))
+            .collect())
+    }
+
+    /// Expand a selection into runnable benchmarks for a mode, skipping
+    /// models that don't support it (inference-only models in train mode).
+    pub fn benches(&self, sel: &SuiteSelection, mode: Mode) -> Result<Vec<BenchId>> {
+        Ok(self
+            .select(sel)?
+            .into_iter()
+            .filter(|m| mode == Mode::Infer || m.train.is_some())
+            .map(|m| BenchId { model: m.name.clone(), mode })
+            .collect())
+    }
+
+    /// Domain -> model names (paper Table 1 layout).
+    pub fn by_domain(&self) -> BTreeMap<String, Vec<String>> {
+        let mut map: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        for m in self.models() {
+            map.entry(m.domain.clone()).or_default().push(m.name.clone());
+        }
+        map
+    }
+
+    /// Count of (model, mode) benchmark configs in the whole suite.
+    pub fn config_count(&self) -> usize {
+        self.models().count() + self.models().filter(|m| m.train.is_some()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    fn tiny_manifest() -> Manifest {
+        Manifest::decode_str(
+            r#"{
+            "version": 1, "param_seed": 0,
+            "models": [
+                {"name": "a", "domain": "nlp", "task": "lm", "default_batch": 4,
+                 "lr": 0.01, "tags": ["sweep"], "params": [], "infer": {},
+                 "train": {"artifact": "a.train.b4.hlo.txt", "batch": 4,
+                            "inputs": [], "n_params": 0},
+                 "stages": null},
+                {"name": "b", "domain": "cv", "task": "cls", "default_batch": 2,
+                 "lr": 0.01, "tags": [], "params": [], "infer": {},
+                 "train": null, "stages": null}
+            ]
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn selects_all_by_default() {
+        let s = Suite::new(tiny_manifest());
+        assert_eq!(s.select(&SuiteSelection::default()).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn filters_by_domain_and_tag() {
+        let s = Suite::new(tiny_manifest());
+        let sel = SuiteSelection { domain: Some("nlp".into()), ..Default::default() };
+        assert_eq!(s.select(&sel).unwrap().len(), 1);
+        let sel = SuiteSelection { tag: Some("sweep".into()), ..Default::default() };
+        assert_eq!(s.select(&sel).unwrap()[0].name, "a");
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let s = Suite::new(tiny_manifest());
+        let sel = SuiteSelection { models: vec!["nope".into()], ..Default::default() };
+        assert!(s.select(&sel).is_err());
+    }
+
+    #[test]
+    fn train_mode_skips_inference_only() {
+        let s = Suite::new(tiny_manifest());
+        let b = s.benches(&SuiteSelection::default(), Mode::Train).unwrap();
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].model, "a");
+        assert_eq!(s.benches(&SuiteSelection::default(), Mode::Infer).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn config_count_counts_modes() {
+        assert_eq!(Suite::new(tiny_manifest()).config_count(), 3);
+    }
+}

@@ -1,0 +1,157 @@
+//! Minimal CLI argument parser (substrate — no clap on this testbed).
+//!
+//! Grammar: `xbench <subcommand> [--flag [value...]]...`. Flags may take
+//! zero values (boolean), one value, or several (`--models a b c` — all
+//! tokens up to the next `--flag`). Unknown flags are rejected by
+//! [`Args::finish`] so typos fail loudly.
+
+use anyhow::{bail, Result};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: String,
+    flags: BTreeMap<String, Vec<String>>,
+    consumed: BTreeSet<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let subcommand = match it.peek() {
+            Some(s) if !s.starts_with("--") => it.next().unwrap(),
+            _ => String::new(),
+        };
+        let mut flags: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        let mut current: Option<String> = None;
+        for tok in it {
+            if let Some(name) = tok.strip_prefix("--") {
+                // Support --flag=value.
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.entry(k.to_string()).or_default().push(v.to_string());
+                    current = Some(k.to_string());
+                } else {
+                    flags.entry(name.to_string()).or_default();
+                    current = Some(name.to_string());
+                }
+            } else {
+                match &current {
+                    Some(flag) => flags.get_mut(flag).unwrap().push(tok),
+                    None => bail!("unexpected positional argument {tok:?}"),
+                }
+            }
+        }
+        Ok(Args { subcommand, flags, consumed: BTreeSet::new() })
+    }
+
+    pub fn has(&mut self, name: &str) -> bool {
+        self.consumed.insert(name.to_string());
+        self.flags.contains_key(name)
+    }
+
+    /// Single string value, or default.
+    pub fn get_str(&mut self, name: &str, default: &str) -> Result<String> {
+        self.consumed.insert(name.to_string());
+        match self.flags.get(name) {
+            None => Ok(default.to_string()),
+            Some(v) if v.len() == 1 => Ok(v[0].clone()),
+            Some(v) => bail!("--{name} expects one value, got {}", v.len()),
+        }
+    }
+
+    /// All values of a repeatable flag (empty if absent).
+    pub fn get_many(&mut self, name: &str) -> Vec<String> {
+        self.consumed.insert(name.to_string());
+        self.flags.get(name).cloned().unwrap_or_default()
+    }
+
+    pub fn get_usize(&mut self, name: &str, default: usize) -> Result<usize> {
+        let s = self.get_str(name, &default.to_string())?;
+        s.parse().map_err(|e| anyhow::anyhow!("--{name}: bad integer {s:?}: {e}"))
+    }
+
+    pub fn get_u64(&mut self, name: &str, default: u64) -> Result<u64> {
+        let s = self.get_str(name, &default.to_string())?;
+        s.parse().map_err(|e| anyhow::anyhow!("--{name}: bad integer {s:?}: {e}"))
+    }
+
+    pub fn get_f64(&mut self, name: &str, default: f64) -> Result<f64> {
+        let s = self.get_str(name, &default.to_string())?;
+        s.parse().map_err(|e| anyhow::anyhow!("--{name}: bad number {s:?}: {e}"))
+    }
+
+    /// Optional single value.
+    pub fn get_opt(&mut self, name: &str) -> Result<Option<String>> {
+        self.consumed.insert(name.to_string());
+        match self.flags.get(name) {
+            None => Ok(None),
+            Some(v) if v.len() == 1 => Ok(Some(v[0].clone())),
+            Some(v) if v.is_empty() => bail!("--{name} expects a value"),
+            Some(v) => bail!("--{name} expects one value, got {}", v.len()),
+        }
+    }
+
+    /// Error on any flag nobody consumed (typo protection).
+    pub fn finish(&self) -> Result<()> {
+        for flag in self.flags.keys() {
+            if !self.consumed.contains(flag) {
+                bail!("unknown flag --{flag}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let mut a = args("run --mode train --models gpt_tiny dlrm_tiny --repeats 3");
+        assert_eq!(a.subcommand, "run");
+        assert_eq!(a.get_str("mode", "infer").unwrap(), "train");
+        assert_eq!(a.get_many("models"), vec!["gpt_tiny", "dlrm_tiny"]);
+        assert_eq!(a.get_usize("repeats", 5).unwrap(), 3);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_and_booleans() {
+        let mut a = args("ci --replay-history");
+        assert!(a.has("replay-history"));
+        assert!(!a.has("missing"));
+        assert_eq!(a.get_usize("commits", 70).unwrap(), 70);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let mut a = args("run --mode=train");
+        assert_eq!(a.get_str("mode", "infer").unwrap(), "train");
+    }
+
+    #[test]
+    fn rejects_unknown_flags() {
+        let mut a = args("run --oops 1");
+        let _ = a.get_str("mode", "infer");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn rejects_stray_positional() {
+        assert!(Args::parse(vec!["run".into(), "stray".into()]).is_err());
+    }
+
+    #[test]
+    fn multi_value_on_single_flag_errors() {
+        let mut a = args("run --mode a b");
+        assert!(a.get_str("mode", "x").is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! Self-built substrates: JSON, TOML-subset, PRNG, CLI parsing, temp dirs.
+//!
+//! This testbed builds fully offline against a vendored dependency set
+//! that contains only the `xla` crate closure — so the usual ecosystem
+//! crates (serde, clap, rand, tempfile) are rebuilt here at the scope
+//! XBench needs. Each module documents its supported subset and is
+//! tested like any other subsystem.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod tmpdir;
+pub mod toml_lite;
+
+pub use cli::Args;
+pub use json::Value as Json;
+pub use rng::Rng;
+pub use tmpdir::TempDir;

@@ -1,0 +1,213 @@
+//! Minimal TOML subset parser (substrate — no `toml` crate here).
+//!
+//! Supports what `xbench.toml` needs: top-level and `[section]` tables,
+//! `key = value` with strings, integers, floats, booleans, and flat
+//! string arrays; `#` comments. Nested tables beyond one level and
+//! datetimes are out of scope (and rejected loudly).
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    StrArray(Vec<String>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str_array(&self) -> Option<&[String]> {
+        match self {
+            TomlValue::StrArray(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: `section.key` (top level = empty section) -> value.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    /// Lookup with dotted path (`"batch.policy"`; top-level: `"mode"`).
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.entries.get(path)
+    }
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<TomlDoc> {
+    let mut doc = TomlDoc::default();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                bail!("line {}: unterminated section header", lineno + 1);
+            };
+            if name.starts_with('[') {
+                bail!("line {}: array-of-tables is not supported", lineno + 1);
+            }
+            section = name.trim().to_string();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            bail!("line {}: expected key = value", lineno + 1);
+        };
+        let key = line[..eq].trim();
+        let value = parse_value(line[eq + 1..].trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        let full_key = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        doc.entries.insert(full_key, value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` outside of quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let Some(inner) = rest.strip_suffix('"') else {
+            bail!("unterminated string {s:?}");
+        };
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let Some(inner) = rest.strip_suffix(']') else {
+            bail!("unterminated array {s:?}");
+        };
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            match parse_value(part)? {
+                TomlValue::Str(v) => items.push(v),
+                other => bail!("only string arrays are supported, got {other:?}"),
+            }
+        }
+        return Ok(TomlValue::StrArray(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            r#"
+            # harness config
+            mode = "train"          # inline comment
+            repeats = 10
+            threshold = 0.07
+            verbose = true
+            [batch]
+            policy = "fixed"
+            size = 8
+            [selection]
+            models = ["gpt_tiny", "dlrm_tiny"]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("mode").unwrap().as_str(), Some("train"));
+        assert_eq!(doc.get("repeats").unwrap().as_int(), Some(10));
+        assert_eq!(doc.get("threshold").unwrap().as_float(), Some(0.07));
+        assert_eq!(doc.get("verbose").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.get("batch.policy").unwrap().as_str(), Some("fixed"));
+        assert_eq!(doc.get("batch.size").unwrap().as_int(), Some(8));
+        assert_eq!(
+            doc.get("selection.models").unwrap().as_str_array().unwrap(),
+            &["gpt_tiny".to_string(), "dlrm_tiny".to_string()]
+        );
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = parse(r#"name = "a#b""#).unwrap();
+        assert_eq!(doc.get("name").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = parse("a = 3\nb = 3.5").unwrap();
+        assert_eq!(doc.get("a").unwrap().as_int(), Some(3));
+        assert_eq!(doc.get("a").unwrap().as_float(), Some(3.0)); // widening ok
+        assert_eq!(doc.get("b").unwrap().as_int(), None);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("novalue").is_err());
+        assert!(parse("x = @").is_err());
+        assert!(parse("[[tables]]\n").is_err());
+    }
+}

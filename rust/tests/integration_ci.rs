@@ -1,0 +1,70 @@
+//! Integration: the full §4.2 CI pipeline over real artifacts.
+//!
+//! One fast fault (validity scan) end to end: baseline → nightly →
+//! detection → bisection → issue report. Requires `make artifacts`.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use xbench::ci::{CiPipeline, Day, FaultKind};
+use xbench::config::{RunConfig, SuiteSelection};
+use xbench::runtime::{ArtifactStore, Device, Manifest};
+use xbench::suite::Suite;
+
+fn have_artifacts() -> bool {
+    Path::new("artifacts/manifest.json").exists()
+}
+
+#[test]
+fn ci_detects_and_bisects_a_planted_fault() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let device = Rc::new(Device::cpu().expect("PJRT CPU client"));
+    let store = ArtifactStore::new(device, "artifacts");
+    let suite = Suite::new(Manifest::load(Path::new("artifacts")).unwrap());
+    let cfg = RunConfig {
+        repeats: 3,
+        iterations: 1,
+        warmup: 1,
+        artifacts: "artifacts".into(),
+        selection: SuiteSelection {
+            models: vec!["deeprec_ae".into()],
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let pipeline = CiPipeline::new(&store, &suite, cfg);
+    let baselines = pipeline.record_baselines().unwrap();
+    assert_eq!(baselines.len(), 1);
+
+    // Clean day: the gate must stay silent (no false positive at 7%).
+    let clean_day = Day::generate("clean", 30, &[], 1);
+    let clean = pipeline.nightly(&clean_day, &baselines).unwrap();
+    assert!(
+        clean.is_none(),
+        "clean nightly false-positived: {:?}",
+        clean.map(|r| r.title())
+    );
+
+    // Faulted day: detect + bisect.
+    let day = Day::generate("faulted", 30, &[FaultKind::DuplicateErrorCheck], 2);
+    let planted = day.fault_indices()[0];
+    let report = pipeline
+        .nightly(&day, &baselines)
+        .unwrap()
+        .expect("validity-scan fault must trip the 7% gate");
+    assert!(!report.regressions.is_empty());
+    let culprit = report.culprit.as_ref().expect("bisection must converge");
+    let found = day.commits.iter().position(|c| c.id == culprit.id).unwrap();
+    // Noise can land the bisect a commit or two off; it must be close.
+    assert!(
+        (found as i64 - planted as i64).abs() <= 2,
+        "bisected to {found}, planted at {planted}"
+    );
+    // O(log n) cost, not O(n) — with confirm-positive doubling.
+    assert!(report.runs_spent <= 2 + 2 * 6, "spent {} runs", report.runs_spent);
+    let md = report.to_markdown();
+    assert!(md.contains("deeprec_ae"), "{md}");
+}

@@ -1,0 +1,240 @@
+//! Integration: runtime + coordinator over the real AOT artifacts.
+//!
+//! Requires `make artifacts` (skips with a clear message otherwise).
+//! One `#[test]` per subsystem seam; a shared PJRT device (process-global
+//! state in the CPU plugin makes one client per process the safe choice).
+
+use std::path::Path;
+use std::rc::Rc;
+
+use xbench::config::{BatchPolicy, Compiler, Mode, RunConfig};
+use xbench::coordinator::{sweep_model, train_loop, InjectedOverheads, Runner};
+use xbench::runtime::{inputs, params, ArtifactStore, Device, Manifest};
+use xbench::suite::Suite;
+
+fn artifacts_dir() -> &'static Path {
+    Path::new("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+// One device + store per test thread, lazily initialized (ArtifactStore
+// is deliberately single-threaded — Rc/RefCell — matching the
+// coordinator's one-leader design; parallel test threads each get their
+// own PJRT client).
+fn store() -> &'static ArtifactStore {
+    thread_local! {
+        static STORE: &'static ArtifactStore = Box::leak(Box::new(ArtifactStore::new(
+            Rc::new(Device::cpu().expect("PJRT CPU client")),
+            "artifacts",
+        )));
+    }
+    STORE.with(|s| *s)
+}
+
+fn suite() -> Suite {
+    Suite::new(Manifest::load(artifacts_dir()).expect("manifest"))
+}
+
+fn fast_cfg() -> RunConfig {
+    RunConfig {
+        repeats: 2,
+        iterations: 1,
+        warmup: 1,
+        artifacts: artifacts_dir().to_path_buf(),
+        ..Default::default()
+    }
+}
+
+macro_rules! needs_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+#[test]
+fn manifest_covers_all_six_domains() {
+    needs_artifacts!();
+    let suite = suite();
+    let domains = suite.by_domain();
+    for d in [
+        "computer_vision",
+        "nlp",
+        "recommendation",
+        "reinforcement_learning",
+        "speech",
+        "other",
+    ] {
+        assert!(domains.contains_key(d), "missing domain {d}");
+    }
+    assert!(suite.models().count() >= 15);
+}
+
+#[test]
+fn artifact_loads_and_executes_with_correct_output_shape() {
+    needs_artifacts!();
+    let suite = suite();
+    let entry = suite.model("actor_critic").unwrap();
+    let infer = entry.infer_at(entry.default_batch).unwrap();
+    let exe = store().get(&infer.artifact).unwrap();
+
+    let plits = params::load_params(artifacts_dir(), entry).unwrap();
+    let mut bufs = Vec::new();
+    for l in &plits {
+        bufs.push(store().device().upload(l).unwrap().value);
+    }
+    let ins = inputs::synth_inputs(&infer.inputs, 0).unwrap();
+    for l in &ins {
+        bufs.push(store().device().upload(l).unwrap().value);
+    }
+    let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+    let run = exe.run_profiled(&refs).unwrap();
+    assert_eq!(run.leaves.len(), 1);
+    // actor_critic: (batch, ACT+1) = (8, 7)
+    let v = run.leaves[0].to_vec::<f32>().unwrap();
+    assert_eq!(v.len(), 8 * 7);
+    assert!(v.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn executing_same_inputs_is_deterministic() {
+    needs_artifacts!();
+    let suite = suite();
+    let entry = suite.model("deeprec_ae").unwrap();
+    let infer = entry.infer_at(entry.default_batch).unwrap();
+    let exe = store().get(&infer.artifact).unwrap();
+    let plits = params::load_params(artifacts_dir(), entry).unwrap();
+    let ins = inputs::synth_inputs(&infer.inputs, 3).unwrap();
+
+    let mut run_once = || {
+        let mut bufs = Vec::new();
+        for l in plits.iter().chain(ins.iter()) {
+            bufs.push(store().device().upload(l).unwrap().value);
+        }
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        exe.run_profiled(&refs).unwrap().leaves[0].to_vec::<f32>().unwrap()
+    };
+    assert_eq!(run_once(), run_once());
+}
+
+#[test]
+fn runner_produces_consistent_breakdown() {
+    needs_artifacts!();
+    let suite = suite();
+    let entry = suite.model("deeprec_ae").unwrap();
+    let r = Runner::new(store(), fast_cfg()).run_model(entry).unwrap();
+    let b = r.breakdown;
+    assert!((b.active + b.movement + b.idle - 1.0).abs() < 1e-6);
+    assert!(r.iter_secs > 0.0);
+    assert_eq!(r.repeats_secs.len(), 2);
+    assert!(r.throughput > 0.0);
+    assert!(r.memory.device_total > entry.param_bytes());
+}
+
+#[test]
+fn eager_and_fused_compute_the_same_function() {
+    needs_artifacts!();
+    // Same model, same batch: throughputs differ but both run to
+    // completion and report the same batch size.
+    let suite = suite();
+    let entry = suite.model("dlrm_tiny").unwrap();
+    let fused = Runner::new(store(), fast_cfg()).run_model(entry).unwrap();
+    let mut cfg = fast_cfg();
+    cfg.compiler = Compiler::Eager;
+    let eager = Runner::new(store(), cfg).run_model(entry).unwrap();
+    assert_eq!(fused.batch, eager.batch);
+    assert_eq!(eager.compiler, Compiler::Eager);
+    // Eager pays per-stage dispatch: it must not be faster than fused
+    // beyond noise.
+    assert!(eager.iter_secs > fused.iter_secs * 0.5);
+}
+
+#[test]
+fn train_mode_runs_and_reports_high_activity_for_nlp() {
+    needs_artifacts!();
+    let suite = suite();
+    let entry = suite.model("gpt_tiny").unwrap();
+    let mut cfg = fast_cfg();
+    cfg.mode = Mode::Train;
+    let r = Runner::new(store(), cfg).run_model(entry).unwrap();
+    // Paper Table 2: NLP training is the most device-bound domain.
+    assert!(
+        r.breakdown.active > 0.5,
+        "NLP train active {} should dominate",
+        r.breakdown.active
+    );
+}
+
+#[test]
+fn train_loop_decreases_loss_end_to_end() {
+    needs_artifacts!();
+    let suite = suite();
+    let entry = suite.model("actor_critic").unwrap();
+    let run = train_loop(store(), entry, 40, 10).unwrap();
+    let first = run.losses.first().unwrap().1;
+    let last = run.losses.last().unwrap().1;
+    assert!(last < first, "loss {first} -> {last} must decrease");
+    assert!(last.is_finite());
+}
+
+#[test]
+fn batch_sweep_points_are_monotone_in_batch() {
+    needs_artifacts!();
+    let suite = suite();
+    let entry = suite.model("deeprec_ae").unwrap();
+    let runner = Runner::new(store(), fast_cfg());
+    let sweep = sweep_model(&runner, entry).unwrap();
+    let batches: Vec<usize> = sweep.points.iter().map(|p| p.batch).collect();
+    let mut sorted = batches.clone();
+    sorted.sort_unstable();
+    assert_eq!(batches, sorted);
+    assert!(batches.contains(&sweep.best_batch));
+    assert!(sweep.points.len() >= 4);
+}
+
+#[test]
+fn unknown_batch_size_errors_cleanly() {
+    needs_artifacts!();
+    let suite = suite();
+    let entry = suite.model("deeprec_ae").unwrap();
+    let mut cfg = fast_cfg();
+    cfg.batch = BatchPolicy::Fixed(3); // not in the lowered ladder
+    let err = Runner::new(store(), cfg).run_model(entry).unwrap_err();
+    assert!(format!("{err}").contains("batch"), "{err}");
+}
+
+#[test]
+fn injected_overheads_slow_the_benchmark() {
+    needs_artifacts!();
+    let suite = suite();
+    let entry = suite.model("deeprec_ae").unwrap();
+    let clean = Runner::new(store(), fast_cfg()).run_model(entry).unwrap();
+    let faulted = Runner::new(store(), fast_cfg())
+        .with_overheads(InjectedOverheads {
+            validity_scan: true,
+            ..Default::default()
+        })
+        .run_model(entry)
+        .unwrap();
+    assert!(
+        faulted.iter_secs > clean.iter_secs,
+        "validity scan must cost time ({} vs {})",
+        faulted.iter_secs,
+        clean.iter_secs
+    );
+}
+
+#[test]
+fn fused_only_model_rejects_eager() {
+    needs_artifacts!();
+    let suite = suite();
+    let entry = suite.model("unet_tiny").unwrap();
+    let mut cfg = fast_cfg();
+    cfg.compiler = Compiler::Eager;
+    assert!(Runner::new(store(), cfg).run_model(entry).is_err());
+}

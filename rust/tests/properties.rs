@@ -1,0 +1,230 @@
+//! Property tests over coordinator invariants (hand-rolled generator —
+//! the vendored dependency set has no proptest; `util::Rng` drives the
+//! case generation, failures print the offending seed).
+
+use xbench::ci::{bisect_first_bad, commits::Day, Detector, FaultKind};
+use xbench::hlo;
+use xbench::metrics;
+use xbench::profiler::{PhaseKind, Timeline};
+use xbench::util::{json, Rng};
+
+const CASES: u64 = 300;
+
+/// Run `f` across seeded cases; panic with the seed on failure.
+fn for_all(name: &str, f: impl Fn(&mut Rng)) {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed ^ 0xDEAD_BEEF);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            panic!("property {name} failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+// --- metrics ----------------------------------------------------------------
+
+#[test]
+fn prop_median_is_order_invariant_and_bounded() {
+    for_all("median", |rng| {
+        let n = 1 + rng.gen_range(20) as usize;
+        let mut v: Vec<f64> = (0..n).map(|_| rng.uniform_f32() as f64 * 100.0).collect();
+        let m1 = metrics::median(&v);
+        v.reverse();
+        let m2 = metrics::median(&v);
+        assert_eq!(m1, m2);
+        let lo = v.iter().cloned().fold(f64::MAX, f64::min);
+        let hi = v.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(m1 >= lo && m1 <= hi);
+    });
+}
+
+#[test]
+fn prop_median_run_index_points_at_median_value() {
+    for_all("median_run_index", |rng| {
+        let n = 1 + rng.gen_range(15) as usize;
+        let v: Vec<f64> = (0..n).map(|_| rng.uniform_f32() as f64).collect();
+        let idx = metrics::median_run_index(&v);
+        // For odd n the selected run IS the median; for even n it is the
+        // lower-middle order statistic.
+        let mut sorted = v.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(v[idx], sorted[(n - 1) / 2]);
+    });
+}
+
+#[test]
+fn prop_geomean_of_ratios_is_scale_free() {
+    for_all("geomean", |rng| {
+        let n = 1 + rng.gen_range(10) as usize;
+        let v: Vec<f64> = (0..n).map(|_| 0.1 + rng.uniform_f32() as f64 * 10.0).collect();
+        let g = metrics::geomean(&v);
+        let scaled: Vec<f64> = v.iter().map(|x| x * 3.0).collect();
+        let gs = metrics::geomean(&scaled);
+        assert!((gs / g - 3.0).abs() < 1e-9);
+    });
+}
+
+// --- timeline/breakdown ------------------------------------------------------
+
+#[test]
+fn prop_breakdown_fractions_sum_to_one() {
+    for_all("breakdown", |rng| {
+        let mut tl = Timeline::new();
+        let n = 1 + rng.gen_range(30) as usize;
+        for _ in 0..n {
+            let kind = match rng.gen_range(4) {
+                0 => PhaseKind::Compute,
+                1 => PhaseKind::H2D,
+                2 => PhaseKind::D2H,
+                _ => PhaseKind::Host,
+            };
+            tl.push(kind, "p", std::time::Duration::from_nanos(1 + rng.gen_range(1_000_000)));
+        }
+        let b = tl.breakdown();
+        assert!((b.active + b.movement + b.idle - 1.0).abs() < 1e-9);
+        assert!(b.active >= 0.0 && b.movement >= 0.0 && b.idle >= 0.0);
+    });
+}
+
+// --- bisection ----------------------------------------------------------------
+
+#[test]
+fn prop_bisect_finds_any_planted_index() {
+    for_all("bisect", |rng| {
+        let n = 1 + rng.gen_range(200) as usize;
+        let planted = rng.gen_range(n as u64) as usize;
+        let mut probes = 0usize;
+        let out = bisect_first_bad(n, |i| {
+            probes += 1;
+            i >= planted
+        })
+        .expect("monotone predicate with a bad tail must converge");
+        assert_eq!(out.first_bad, planted);
+        // 1 initial check + ceil(log2 n) halvings.
+        assert!(probes <= 2 + (n as f64).log2().ceil() as usize);
+    });
+}
+
+#[test]
+fn prop_bisect_never_false_positives_on_clean_history() {
+    for_all("bisect_clean", |rng| {
+        let n = 1 + rng.gen_range(100) as usize;
+        assert!(bisect_first_bad(n, |_| false).is_none());
+    });
+}
+
+// --- commit stream -------------------------------------------------------------
+
+#[test]
+fn prop_day_overheads_are_monotone_in_prefix() {
+    for_all("day_monotone", |rng| {
+        let n = 2 + rng.gen_range(60) as usize;
+        let catalog = FaultKind::catalog();
+        let fault = catalog[rng.gen_range(catalog.len() as u64) as usize];
+        let day = Day::generate("d", n, &[fault], rng.next_u64());
+        let planted = day.fault_indices()[0];
+        for i in 0..n {
+            let active = !day.overheads_through(i).is_none();
+            assert_eq!(active, i >= planted, "prefix {i}, planted {planted}");
+        }
+    });
+}
+
+// --- detector -------------------------------------------------------------------
+
+#[test]
+fn prop_detector_fires_iff_over_threshold() {
+    use xbench::ci::BaselineStore;
+    use xbench::config::{Compiler, Mode};
+    use xbench::coordinator::RunResult;
+    use xbench::profiler::{Breakdown, MemoryReport};
+
+    let result = |secs: f64| RunResult {
+        model: "m".into(),
+        domain: "d".into(),
+        mode: Mode::Infer,
+        compiler: Compiler::Fused,
+        batch: 1,
+        iter_secs: secs,
+        repeats_secs: vec![secs],
+        breakdown: Breakdown { active: 1.0, movement: 0.0, idle: 0.0, total_secs: secs },
+        memory: MemoryReport { host_peak: 1, device_total: 1 },
+        throughput: 1.0 / secs,
+    };
+    for_all("detector", |rng| {
+        let base = 0.5 + rng.uniform_f32() as f64;
+        let ratio = 0.5 + rng.uniform_f32() as f64 * 1.5;
+        let mut store = BaselineStore::new();
+        store.record(&result(base));
+        let d = Detector::new(0.07);
+        let regs = d.detect(&store, &[result(base * ratio)]);
+        let time_regs = regs
+            .iter()
+            .filter(|r| matches!(r.metric, xbench::ci::Metric::ExecutionTime))
+            .count();
+        assert_eq!(time_regs > 0, ratio > 1.07, "ratio {ratio}");
+    });
+}
+
+// --- json substrate -------------------------------------------------------------
+
+#[test]
+fn prop_json_roundtrips_random_documents() {
+    fn gen_value(rng: &mut Rng, depth: usize) -> json::Value {
+        match if depth > 2 { rng.gen_range(4) } else { rng.gen_range(6) } {
+            0 => json::Value::Null,
+            1 => json::Value::Bool(rng.gen_range(2) == 0),
+            2 => json::Value::Num((rng.gen_range(2_000_001) as f64 - 1e6) / 8.0),
+            3 => {
+                let n = rng.gen_range(12) as usize;
+                json::Value::Str((0..n).map(|_| (b'a' + rng.gen_range(26) as u8) as char).collect())
+            }
+            4 => {
+                let n = rng.gen_range(4) as usize;
+                json::Value::Arr((0..n).map(|_| gen_value(rng, depth + 1)).collect())
+            }
+            _ => {
+                let n = rng.gen_range(4) as usize;
+                json::Value::Obj(
+                    (0..n)
+                        .map(|i| (format!("k{i}"), gen_value(rng, depth + 1)))
+                        .collect(),
+                )
+            }
+        }
+    }
+    for_all("json_roundtrip", |rng| {
+        let v = gen_value(rng, 0);
+        assert_eq!(json::parse(&v.to_json()).unwrap(), v);
+        assert_eq!(json::parse(&v.to_json_pretty()).unwrap(), v);
+    });
+}
+
+// --- hlo parser -------------------------------------------------------------------
+
+#[test]
+fn prop_hlo_parser_handles_random_wellformed_modules() {
+    for_all("hlo_parse", |rng| {
+        let n_inst = 1 + rng.gen_range(10) as usize;
+        let mut body = String::from("  p.0 = f32[4,4]{1,0} parameter(0)\n");
+        let mut last = "p.0".to_string();
+        for i in 1..=n_inst {
+            let op = ["add", "multiply", "tanh", "negate"][rng.gen_range(4) as usize];
+            let name = format!("v.{i}");
+            if op == "tanh" || op == "negate" {
+                body.push_str(&format!("  {name} = f32[4,4]{{1,0}} {op}({last})\n"));
+            } else {
+                body.push_str(&format!("  {name} = f32[4,4]{{1,0}} {op}({last}, p.0)\n"));
+            }
+            last = name;
+        }
+        body.push_str(&format!("  ROOT t.99 = (f32[4,4]{{1,0}}) tuple({last})\n"));
+        let text = format!("HloModule m\n\nENTRY main.1 {{\n{body}}}\n");
+        let module = hlo::parse(&text).unwrap();
+        let entry = module.entry_computation().unwrap();
+        assert_eq!(entry.instructions.len(), n_inst + 2);
+        let cost = hlo::analyze(&module);
+        // Every elementwise op contributes 16 flops (4x4).
+        assert_eq!(cost.flops.elementwise, 16.0 * n_inst as f64);
+    });
+}
