@@ -1,0 +1,136 @@
+//! Archive read/query throughput probe.
+//!
+//! `cargo bench --bench store` — generates a synthetic multi-run
+//! archive, measures append / load / filter / aggregate throughput, and
+//! writes `BENCH_store.json` (machine-readable, consumed by CI) plus a
+//! human table on stdout.
+
+use std::time::Instant;
+
+use xbench::report::Table;
+use xbench::store::{latest_per_key, run_summaries, Archive, Filter, RunMeta, RunRecord};
+use xbench::util::{Json, TempDir};
+
+const RUNS: usize = 50;
+const MODELS: usize = 40;
+const MODES: [&str; 2] = ["infer", "train"];
+const COMPILERS: [&str; 2] = ["fused", "eager"];
+
+fn synth_records() -> Vec<Vec<RunRecord>> {
+    let mut out = Vec::with_capacity(RUNS);
+    for run in 0..RUNS {
+        let meta = RunMeta {
+            run_id: format!("run-{run:04}"),
+            timestamp: 1_700_000_000 + run as u64 * 86_400,
+            git_commit: format!("{run:07x}"),
+            host: "bench-host".into(),
+            config_hash: "cafebabecafebabe".into(),
+            note: "".into(),
+        };
+        let mut records = Vec::with_capacity(MODELS * MODES.len() * COMPILERS.len());
+        for m in 0..MODELS {
+            for (mi, mode) in MODES.iter().enumerate() {
+                for (ci, compiler) in COMPILERS.iter().enumerate() {
+                    let secs = 0.001 * (1.0 + m as f64) * (1.0 + mi as f64) * (1.0 + ci as f64);
+                    records.push(RunRecord {
+                        run_id: meta.run_id.clone(),
+                        timestamp: meta.timestamp,
+                        git_commit: meta.git_commit.clone(),
+                        host: meta.host.clone(),
+                        config_hash: meta.config_hash.clone(),
+                        note: meta.note.clone(),
+                        model: format!("model_{m:03}"),
+                        domain: "nlp".into(),
+                        mode: mode.to_string(),
+                        compiler: compiler.to_string(),
+                        batch: 4,
+                        iter_secs: secs,
+                        repeats_secs: vec![secs; 5],
+                        throughput: 4.0 / secs,
+                        active: 0.6,
+                        movement: 0.3,
+                        idle: 0.1,
+                        host_bytes: 4096,
+                        device_bytes: 8192,
+                    });
+                }
+            }
+        }
+        out.push(records);
+    }
+    out
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = TempDir::new()?;
+    let archive = Archive::new(dir.path().join("runs.jsonl"));
+    let runs = synth_records();
+    let total: usize = runs.iter().map(|r| r.len()).sum();
+
+    let t0 = Instant::now();
+    for records in &runs {
+        archive.append(records)?;
+    }
+    let append_secs = t0.elapsed().as_secs_f64();
+
+    let t1 = Instant::now();
+    let records = archive.load()?;
+    let load_secs = t1.elapsed().as_secs_f64();
+    assert_eq!(records.len(), total);
+
+    let t2 = Instant::now();
+    let filtered = Filter {
+        models: vec!["model_007".into()],
+        mode: Some("infer".into()),
+        ..Default::default()
+    }
+    .apply(&records);
+    let filter_secs = t2.elapsed().as_secs_f64();
+    assert_eq!(filtered.len(), RUNS * COMPILERS.len());
+
+    let t3 = Instant::now();
+    let latest = latest_per_key(records.iter());
+    let aggregate_secs = t3.elapsed().as_secs_f64();
+    assert_eq!(latest.len(), MODELS * MODES.len() * COMPILERS.len());
+
+    let t4 = Instant::now();
+    let summaries = run_summaries(&records);
+    let summarize_secs = t4.elapsed().as_secs_f64();
+    assert_eq!(summaries.len(), RUNS);
+
+    let bytes = std::fs::metadata(archive.path())?.len();
+    let rps = |secs: f64| total as f64 / secs.max(1e-9);
+
+    let mut t = Table::new(
+        format!("Archive throughput ({total} records, {RUNS} runs, {} KiB)", bytes / 1024),
+        &["operation", "wall", "records/s"],
+    );
+    for (name, secs) in [
+        ("append", append_secs),
+        ("load", load_secs),
+        ("filter", filter_secs),
+        ("latest_per_key", aggregate_secs),
+        ("run_summaries", summarize_secs),
+    ] {
+        t.row(vec![
+            name.into(),
+            format!("{:.2}ms", secs * 1e3),
+            format!("{:.0}", rps(secs)),
+        ]);
+    }
+    print!("{}", t.render());
+
+    let json = Json::obj(vec![
+        ("records", Json::num(total as f64)),
+        ("runs", Json::num(RUNS as f64)),
+        ("archive_bytes", Json::num(bytes as f64)),
+        ("append_records_per_sec", Json::num(rps(append_secs))),
+        ("load_records_per_sec", Json::num(rps(load_secs))),
+        ("filter_records_per_sec", Json::num(rps(filter_secs))),
+        ("latest_per_key_records_per_sec", Json::num(rps(aggregate_secs))),
+        ("run_summaries_records_per_sec", Json::num(rps(summarize_secs))),
+    ]);
+    std::fs::write("BENCH_store.json", json.to_json_pretty())?;
+    eprintln!("wrote BENCH_store.json");
+    Ok(())
+}

@@ -30,15 +30,11 @@ impl From<&RunResult> for BaselineEntry {
     }
 }
 
-/// Key for one benchmark config.
+/// Key for one benchmark config (delegates to the crate-wide canonical
+/// format in [`crate::store`], so archive queries and CI gates join on
+/// identical strings).
 pub fn bench_key(r: &RunResult) -> String {
-    format!(
-        "{}.{}.{}.b{}",
-        r.model,
-        r.mode.as_str(),
-        r.compiler.as_str(),
-        r.batch
-    )
+    r.bench_key()
 }
 
 /// The store: persisted map of baselines.
@@ -116,6 +112,38 @@ impl BaselineStore {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading baseline {}", path.display()))?;
         Self::decode_str(&text).context("parsing baseline store")
+    }
+
+    /// Derive baselines from the archive's known-good run instead of a
+    /// hand-maintained snapshot: every record of the selected run
+    /// (default `"latest"`; any [`crate::store::Archive::resolve_run`]
+    /// selector works)
+    /// becomes one gated entry. This is how `xbench ci` sources its
+    /// baseline after a clean `xbench run --record` — no baseline JSON
+    /// to curate or go stale.
+    pub fn from_archive(archive: &crate::store::Archive, selector: &str) -> Result<Self> {
+        let records = archive.load()?;
+        let run_id = archive.resolve_run(&records, selector)?;
+        Self::from_records(&records, &run_id)
+    }
+
+    /// [`BaselineStore::from_archive`] over already-loaded records —
+    /// callers that need the record set for other checks (config-drift
+    /// warnings, coverage) avoid re-reading the archive.
+    pub fn from_records(records: &[crate::store::RunRecord], run_id: &str) -> Result<Self> {
+        let mut entries = BTreeMap::new();
+        for r in records.iter().filter(|r| r.run_id == run_id) {
+            entries.insert(
+                r.bench_key(),
+                BaselineEntry {
+                    iter_secs: r.iter_secs,
+                    host_bytes: r.host_bytes,
+                    device_bytes: r.device_bytes,
+                },
+            );
+        }
+        anyhow::ensure!(!entries.is_empty(), "run {run_id} has no records");
+        Ok(BaselineStore { entries })
     }
 }
 

@@ -1,0 +1,64 @@
+//! `xbench breakdown` — execution-time decomposition (Fig 1/2, Table 2).
+
+use anyhow::Result;
+
+use crate::config::{Mode, RunConfig};
+use crate::coordinator::Runner;
+use crate::metrics;
+use crate::report::{fmt_pct, fmt_secs, Table};
+use crate::runtime::ArtifactStore;
+
+use super::Ctx;
+
+pub fn cmd(ctx: &Ctx, store: &ArtifactStore, cfg: RunConfig) -> Result<()> {
+    let suite = &ctx.suite;
+    let benches = suite.benches(&cfg.selection, cfg.mode)?;
+    let fig = if cfg.mode == Mode::Train { "Fig 1" } else { "Fig 2" };
+    let mut t = Table::new(
+        format!("Execution-time breakdown, {} ({fig})", cfg.mode.as_str()),
+        &["model", "domain", "active", "movement", "idle", "iter time"],
+    );
+    let mut per_domain: Vec<(String, [f64; 3])> = Vec::new();
+    for b in &benches {
+        let entry = suite.model(&b.model)?;
+        let runner = Runner::new(store, cfg.clone());
+        let r = runner.run_model(entry)?;
+        t.row(vec![
+            r.model.clone(),
+            r.domain.clone(),
+            fmt_pct(r.breakdown.active),
+            fmt_pct(r.breakdown.movement),
+            fmt_pct(r.breakdown.idle),
+            fmt_secs(r.iter_secs),
+        ]);
+        per_domain.push((
+            r.domain.clone(),
+            [r.breakdown.active, r.breakdown.movement, r.breakdown.idle],
+        ));
+    }
+    let fign = if cfg.mode == Mode::Train { 1 } else { 2 };
+    ctx.emit(&t, &format!("fig{}_breakdown_{}", fign, cfg.mode.as_str()))?;
+
+    // Table 2: per-domain means.
+    let actives: Vec<(String, f64)> = per_domain.iter().map(|(d, b)| (d.clone(), b[0])).collect();
+    let moves: Vec<(String, f64)> = per_domain.iter().map(|(d, b)| (d.clone(), b[1])).collect();
+    let idles: Vec<(String, f64)> = per_domain.iter().map(|(d, b)| (d.clone(), b[2])).collect();
+    let (am, mm, im) = (
+        metrics::group_mean(&actives),
+        metrics::group_mean(&moves),
+        metrics::group_mean(&idles),
+    );
+    let mut t2 = Table::new(
+        format!("Per-domain breakdown means, {} (Table 2)", cfg.mode.as_str()),
+        &["domain", "activeness", "data movement", "idleness"],
+    );
+    for (domain, a) in &am {
+        t2.row(vec![
+            domain.clone(),
+            fmt_pct(*a),
+            fmt_pct(mm[domain]),
+            fmt_pct(im[domain]),
+        ]);
+    }
+    ctx.emit(&t2, &format!("table2_{}", cfg.mode.as_str()))
+}

@@ -1,0 +1,234 @@
+//! `xbench ci` — the §4.2 nightly gate demo (Table 4), now wired into
+//! the persistent archive: `--record-baseline` appends the clean run to
+//! the archive, `--baseline-from-archive [RUN]` derives the gate's
+//! baselines from a recorded run instead of re-measuring (no
+//! hand-maintained baseline snapshot anywhere).
+
+use anyhow::Result;
+
+use crate::ci::{BaselineStore, CiPipeline, Day, FaultKind};
+use crate::config::RunConfig;
+use crate::coordinator::InjectedOverheads;
+use crate::report::Table;
+use crate::runtime::ArtifactStore;
+use crate::store::RunMeta;
+
+use super::Ctx;
+
+/// `xbench ci` options.
+pub struct Opts {
+    pub commits: usize,
+    pub fault_prs: Vec<u32>,
+    pub seed: u64,
+    pub replay_history: bool,
+    /// Measure a clean build and append it to the archive (note
+    /// "ci-baseline") before gating.
+    pub record_baseline: bool,
+    /// Derive baselines from this archive run instead of measuring.
+    pub baseline_from_archive: Option<String>,
+}
+
+pub fn cmd(ctx: &Ctx, store: &ArtifactStore, mut cfg: RunConfig, opts: Opts) -> Result<()> {
+    let suite = &ctx.suite;
+    // CI uses a small, fast subset when none specified.
+    if cfg.selection.models.is_empty() {
+        // Stable, fast benches (the RL bench's host env adds run-to-run
+        // variance the 7% gate would false-positive on).
+        cfg.selection.models = vec![
+            "deeprec_ae".into(),
+            "dlrm_tiny".into(),
+            "mobilenet_tiny".into(),
+            // Quant coverage: the §1.1 error-handling fault only bites
+            // models that probe the fallback registry.
+            "deeprec_ae_quant".into(),
+        ];
+    }
+    // Measurement protocol comes from the layered config (CLI default
+    // 5/2/1) — forcing values here would silently discard a user's
+    // --repeats/--iterations/--warmup and stamp the recorded baseline
+    // with a config_hash they never asked for.
+    let pipeline = CiPipeline::new(store, suite, cfg.clone());
+    anyhow::ensure!(
+        !(opts.record_baseline && opts.baseline_from_archive.is_some()),
+        "--record-baseline and --baseline-from-archive are mutually exclusive: \
+         record a clean baseline first, then gate against it"
+    );
+
+    let baselines = match &opts.baseline_from_archive {
+        Some(selector) => {
+            // One archive read serves baseline derivation and the
+            // protocol/coverage sanity checks below.
+            let records = ctx.archive.load()?;
+            let run_id = ctx.archive.resolve_run(&records, selector)?;
+            let baselines = BaselineStore::from_records(&records, &run_id)?;
+            eprintln!(
+                "baselines: {} entries from archive run {run_id} ({})",
+                baselines.len(),
+                ctx.archive.path().display()
+            );
+            // Gate verdicts are only meaningful when baseline and
+            // nightly share the measurement protocol (same contract
+            // `cmp` warns about).
+            let want = crate::store::config_hash(&cfg);
+            if let Some(r) = records.iter().find(|r| r.run_id == run_id) {
+                if r.config_hash != want {
+                    eprintln!(
+                        "warning: archive run {run_id} was measured under config {} but this \
+                         CI run uses {want}; the 7% gate may flag protocol drift, not code",
+                        r.config_hash
+                    );
+                }
+            }
+            // The detector skips any nightly result whose key is absent
+            // from the baselines, so a run recorded under a different
+            // mode/compiler/batch/model set would silently gate nothing.
+            // Fail loudly when coverage is zero, warn when partial.
+            let expected = expected_bench_keys(&cfg, suite)?;
+            let covered =
+                expected.iter().filter(|k| baselines.get(k).is_some()).count();
+            anyhow::ensure!(
+                covered > 0,
+                "archive run covers none of the {} benchmark configs this CI run gates \
+                 (e.g. {:?}); record a matching baseline with \
+                 `xbench ci --record-baseline` or `xbench run --record`",
+                expected.len(),
+                expected.first().map(String::as_str).unwrap_or("?")
+            );
+            if covered < expected.len() {
+                eprintln!(
+                    "warning: archive baselines cover {covered}/{} CI benchmark configs; \
+                     uncovered configs will not be gated",
+                    expected.len()
+                );
+            }
+            baselines
+        }
+        None => {
+            eprintln!("recording clean baselines…");
+            let results = pipeline.run_build(&InjectedOverheads::NONE)?;
+            let mut baselines = BaselineStore::new();
+            for r in &results {
+                baselines.record(r);
+            }
+            if opts.record_baseline {
+                let meta = RunMeta::capture(&cfg, "ci-baseline");
+                ctx.archive.record_results(&results, &meta)?;
+                eprintln!(
+                    "recorded clean baseline as {} in {}",
+                    meta.run_id,
+                    ctx.archive.path().display()
+                );
+            }
+            baselines
+        }
+    };
+
+    let days: Vec<(String, Vec<FaultKind>)> = if opts.replay_history {
+        FaultKind::catalog()
+            .iter()
+            .enumerate()
+            .map(|(i, f)| (format!("day-{:02}", i + 1), vec![*f]))
+            .collect()
+    } else {
+        let faults: Vec<FaultKind> = opts
+            .fault_prs
+            .iter()
+            .map(|pr| {
+                FaultKind::catalog()
+                    .into_iter()
+                    .find(|f| f.pr_number() == *pr)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "unknown PR #{pr}; catalog: 85447 61056 65594 72148 71904 65839 87855"
+                        )
+                    })
+            })
+            .collect::<Result<_>>()?;
+        vec![("nightly".into(), faults)]
+    };
+
+    run_days(ctx, &pipeline, &baselines, &opts, days)
+}
+
+/// The bench keys this CI configuration will measure and gate — one per
+/// selected model, at the batch the runner would resolve.
+fn expected_bench_keys(cfg: &RunConfig, suite: &crate::suite::Suite) -> Result<Vec<String>> {
+    let mut keys = Vec::new();
+    for entry in suite.select(&cfg.selection)? {
+        // Mirrors Runner::resolve_batch: train pins the train batch,
+        // inference honors a fixed batch override, default/sweep use
+        // the model default.
+        let batch = match cfg.mode {
+            crate::config::Mode::Train => match &entry.train {
+                Some(t) => t.batch,
+                None => continue, // inference-only model skipped in train mode
+            },
+            crate::config::Mode::Infer => match cfg.batch {
+                crate::config::BatchPolicy::Fixed(b) => b,
+                _ => entry.default_batch,
+            },
+        };
+        keys.push(crate::store::bench_key_of(
+            &entry.name,
+            cfg.mode.as_str(),
+            cfg.compiler.as_str(),
+            batch,
+        ));
+    }
+    Ok(keys)
+}
+
+fn run_days(
+    ctx: &Ctx,
+    pipeline: &CiPipeline<'_>,
+    baselines: &BaselineStore,
+    opts: &Opts,
+    days: Vec<(String, Vec<FaultKind>)>,
+) -> Result<()> {
+    let mut t = Table::new(
+        "CI nightly gate (paper §4.2, Table 4)",
+        &["day", "planted PR", "detected", "bisected to", "runs", "resolution"],
+    );
+    for (date, faults) in days {
+        let day = Day::generate(&date, opts.commits, &faults, opts.seed);
+        let report = pipeline.nightly(&day, baselines)?;
+        let planted: Vec<String> = faults.iter().map(|f| format!("#{}", f.pr_number())).collect();
+        match report {
+            Some(r) => {
+                let hit = r
+                    .culprit
+                    .as_ref()
+                    .map(|c| {
+                        let idx = day
+                            .commits
+                            .iter()
+                            .position(|x| x.id == c.id)
+                            .unwrap_or(usize::MAX);
+                        let correct = day.fault_indices().contains(&idx);
+                        format!("{} ({})", c.id, if correct { "correct" } else { "WRONG" })
+                    })
+                    .unwrap_or_else(|| "-".into());
+                t.row(vec![
+                    date,
+                    planted.join(","),
+                    format!("{} regressions", r.regressions.len()),
+                    hit,
+                    r.runs_spent.to_string(),
+                    faults.first().map(|f| f.resolution().to_string()).unwrap_or_default(),
+                ]);
+                println!("\n{}\n", r.to_markdown());
+            }
+            None => {
+                t.row(vec![
+                    date,
+                    planted.join(","),
+                    "none".into(),
+                    "-".into(),
+                    "1".into(),
+                    "-".into(),
+                ]);
+            }
+        }
+    }
+    ctx.emit(&t, "table4_ci")
+}

@@ -1,0 +1,163 @@
+//! `xbench cmp <run-a> <run-b>` — ranked speedup/regression diff of two
+//! recorded runs (the rebar `cmp` of this harness), with the paper's
+//! §4.2.1 7% gate highlighted per metric.
+
+use anyhow::Result;
+use std::path::Path;
+
+use crate::metrics;
+use crate::report::{fmt_ratio, fmt_secs, Table};
+use crate::store::{fmt_utc, latest_per_key, run_summaries, Archive, Filter, RunRecord};
+
+use super::emit_table;
+
+pub fn cmd(
+    archive: &Archive,
+    csv_dir: Option<&Path>,
+    run_a: &str,
+    run_b: &str,
+    threshold: f64,
+) -> Result<()> {
+    let records = archive.load()?;
+    let a_id = archive.resolve_run(&records, run_a)?;
+    let b_id = archive.resolve_run(&records, run_b)?;
+    anyhow::ensure!(a_id != b_id, "both selectors resolve to {a_id}");
+
+    for s in run_summaries(&records) {
+        if s.run_id == a_id || s.run_id == b_id {
+            let tag = if s.run_id == a_id { "A" } else { "B" };
+            eprintln!(
+                "{tag}: {} ({}, commit {}, host {}{})",
+                s.run_id,
+                fmt_utc(s.timestamp),
+                s.git_commit,
+                s.host,
+                if s.note.is_empty() { String::new() } else { format!(", note {:?}", s.note) },
+            );
+        }
+    }
+
+    let a = latest_per_key(Filter::for_run(&a_id).apply(&records).into_iter());
+    let b = latest_per_key(Filter::for_run(&b_id).apply(&records).into_iter());
+    warn_config_drift(&a, &b);
+
+    // Join on bench key; rank worst regression first (rebar's cmp order).
+    let mut rows: Vec<(f64, Vec<String>)> = Vec::new();
+    let mut time_ratios = Vec::new();
+    let mut regressed = 0usize;
+    let mut improved = 0usize;
+    for (key, ra) in &a {
+        let Some(rb) = b.get(key) else { continue };
+        let ratio = (rb.iter_secs / ra.iter_secs.max(1e-12)).max(1e-12);
+        time_ratios.push(ratio);
+        let gate = gate_cell(ra, rb, threshold);
+        // Summary counts are time-only (the gate cell still flags
+        // memory trips per row) so the geomean line never reports a
+        // phantom time regression for a memory-only change.
+        if ratio > 1.0 + threshold {
+            regressed += 1;
+        } else if ratio < 1.0 / (1.0 + threshold) {
+            improved += 1;
+        }
+        rows.push((
+            ratio,
+            vec![
+                key.clone(),
+                fmt_secs(ra.iter_secs),
+                fmt_secs(rb.iter_secs),
+                format!("{ratio:.3}"),
+                format!("{:+.1}%", (ratio - 1.0) * 100.0),
+                gate,
+            ],
+        ));
+    }
+    rows.sort_by(|x, y| y.0.partial_cmp(&x.0).unwrap_or(std::cmp::Ordering::Equal));
+
+    let mut t = Table::new(
+        format!(
+            "Run comparison: B vs A (time ratio B/A; gate {:.0}%)",
+            threshold * 100.0
+        ),
+        &["bench", "A time", "B time", "ratio", "Δ", "gate"],
+    );
+    for (_, cells) in rows {
+        t.row(cells);
+    }
+    emit_table(&t, csv_dir, "cmp")?;
+
+    let only_a: Vec<&String> = a.keys().filter(|k| !b.contains_key(*k)).collect();
+    let only_b: Vec<&String> = b.keys().filter(|k| !a.contains_key(*k)).collect();
+    if !only_a.is_empty() {
+        println!("{} configs only in A: {}", only_a.len(), join(&only_a));
+    }
+    if !only_b.is_empty() {
+        println!("{} configs only in B: {}", only_b.len(), join(&only_b));
+    }
+    if !time_ratios.is_empty() {
+        println!(
+            "geomean time ratio B/A: {} over {} shared configs \
+             ({regressed} time-regressed, {improved} time-improved)",
+            fmt_ratio(metrics::geomean(&time_ratios)),
+            time_ratios.len(),
+        );
+    } else {
+        println!("no shared benchmark configs between {a_id} and {b_id}");
+    }
+    Ok(())
+}
+
+/// Which gated metrics (§4.2.1: time + CPU/GPU memory) moved past the
+/// threshold, as a compact cell.
+fn gate_cell(a: &RunRecord, b: &RunRecord, threshold: f64) -> String {
+    let mut worse = Vec::new();
+    let mut better = Vec::new();
+    let mut check = |name: &str, base: f64, measured: f64| {
+        if base <= 0.0 {
+            return;
+        }
+        let r = measured / base;
+        if r > 1.0 + threshold {
+            worse.push(format!("{name} {:+.1}%", (r - 1.0) * 100.0));
+        } else if r < 1.0 / (1.0 + threshold) {
+            better.push(name.to_string());
+        }
+    };
+    check("time", a.iter_secs, b.iter_secs);
+    check("host-mem", a.host_bytes as f64, b.host_bytes as f64);
+    check("dev-mem", a.device_bytes as f64, b.device_bytes as f64);
+    if !worse.is_empty() {
+        format!("REGRESSED({})", worse.join(", "))
+    } else if !better.is_empty() {
+        format!("improved({})", better.join(", "))
+    } else {
+        "-".into()
+    }
+}
+
+/// Comparing runs measured under different configs is apples-to-oranges;
+/// flag it rather than refuse (the archive may legitimately mix).
+fn warn_config_drift(
+    a: &std::collections::BTreeMap<String, &RunRecord>,
+    b: &std::collections::BTreeMap<String, &RunRecord>,
+) {
+    let hash = |m: &std::collections::BTreeMap<String, &RunRecord>| {
+        m.values().next().map(|r| r.config_hash.clone())
+    };
+    if let (Some(ha), Some(hb)) = (hash(a), hash(b)) {
+        if ha != hb {
+            eprintln!(
+                "warning: runs were measured under different configs ({ha} vs {hb}); \
+                 ratios may reflect config changes, not code changes"
+            );
+        }
+    }
+}
+
+fn join(keys: &[&String]) -> String {
+    const MAX: usize = 6;
+    let mut shown: Vec<&str> = keys.iter().take(MAX).map(|k| k.as_str()).collect();
+    if keys.len() > MAX {
+        shown.push("…");
+    }
+    shown.join(", ")
+}

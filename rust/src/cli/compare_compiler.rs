@@ -1,0 +1,52 @@
+//! `xbench compare-compiler` — fused vs eager (Fig 3/4).
+
+use anyhow::Result;
+
+use crate::config::{BatchPolicy, Compiler, RunConfig};
+use crate::coordinator::Runner;
+use crate::metrics;
+use crate::report::{fmt_ratio, fmt_secs, Table};
+use crate::runtime::ArtifactStore;
+
+use super::Ctx;
+
+pub fn cmd(ctx: &Ctx, store: &ArtifactStore, cfg: RunConfig) -> Result<()> {
+    let suite = &ctx.suite;
+    // Staged artifacts are inference-lowered; Fig 3's train column is
+    // approximated by the inference comparison (DESIGN.md substitution).
+    let mut t = Table::new(
+        "Fused (Inductor-analogue) vs eager (Fig 3/4) — ratios fused/eager: <1 means fused wins",
+        &["model", "T ratio", "CM ratio", "GM ratio", "fused time", "eager time"],
+    );
+    let mut speedups = Vec::new();
+    for m in suite.select(&cfg.selection)? {
+        let Some(stages) = &m.stages else { continue };
+        let mut fused_cfg = cfg.clone();
+        fused_cfg.compiler = Compiler::Fused;
+        fused_cfg.batch = BatchPolicy::Fixed(stages.batch);
+        let fused = Runner::new(store, fused_cfg).run_model(m)?;
+        let mut eager_cfg = cfg.clone();
+        eager_cfg.compiler = Compiler::Eager;
+        let eager = Runner::new(store, eager_cfg).run_model(m)?;
+        let tr = fused.iter_secs / eager.iter_secs;
+        let cm = fused.memory.host_peak.max(1) as f64 / eager.memory.host_peak.max(1) as f64;
+        let gm = fused.memory.device_total.max(1) as f64 / eager.memory.device_total.max(1) as f64;
+        speedups.push(1.0 / tr.max(1e-12));
+        t.row(vec![
+            m.name.clone(),
+            format!("{tr:.3}"),
+            format!("{cm:.3}"),
+            format!("{gm:.3}"),
+            fmt_secs(fused.iter_secs),
+            fmt_secs(eager.iter_secs),
+        ]);
+    }
+    ctx.emit(&t, "fig3_4_compiler")?;
+    if !speedups.is_empty() {
+        println!(
+            "geomean fused speedup over eager: {} (paper: 1.30x train / 1.46x infer)",
+            fmt_ratio(metrics::geomean(&speedups))
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! `xbench devices` / `xbench compare-devices` — the analytical device
+//! model (paper Table 3 and Fig 5).
+
+use anyhow::Result;
+
+use crate::config::Mode;
+use crate::devmodel;
+use crate::hlo;
+use crate::report::Table;
+
+use super::Ctx;
+
+pub fn cmd(ctx: &Ctx) -> Result<()> {
+    let mut t = Table::new(
+        "Peak theoretical TFLOPS (paper Table 3)",
+        &["GPU", "FP32", "Matrix32 (TF32/FP32-Matrix)", "FP64", "Matrix64", "HBM GB/s"],
+    );
+    for d in [devmodel::a100(), devmodel::mi210()] {
+        t.row(vec![
+            d.name.to_string(),
+            format!("{}", d.fp32),
+            d.matrix32.map(|v| v.to_string()).unwrap_or("-".into()),
+            format!("{}", d.fp64),
+            d.matrix64.map(|v| v.to_string()).unwrap_or("-".into()),
+            format!("{}", d.hbm_gbps),
+        ]);
+    }
+    ctx.emit(&t, "table3_devices")
+}
+
+pub fn cmd_compare(ctx: &Ctx) -> Result<()> {
+    let suite = &ctx.suite;
+    let mut t = Table::new(
+        "T_NVIDIA / T_AMD analytical projection (Fig 5) — <1: A100 wins, >1: MI210 wins",
+        &["model", "infer ratio", "train ratio", "dot%", "conv%", "elementwise%"],
+    );
+    for m in suite.models() {
+        let Some(infer) = m.infer_at(m.default_batch) else { continue };
+        let cost_i = hlo::analyze_file(&ctx.artifacts.join(&infer.artifact))?;
+        let ratio_i = devmodel::nvidia_over_amd(&cost_i, Mode::Infer);
+        let (ratio_t, cost_t) = match &m.train {
+            Some(tr) => {
+                let c = hlo::analyze_file(&ctx.artifacts.join(&tr.artifact))?;
+                (Some(devmodel::nvidia_over_amd(&c, Mode::Train)), Some(c))
+            }
+            None => (None, None),
+        };
+        let f = cost_t.map(|c| c.flops).unwrap_or(cost_i.flops);
+        let total = f.total().max(1.0);
+        t.row(vec![
+            m.name.clone(),
+            format!("{ratio_i:.3}"),
+            ratio_t.map(|r| format!("{r:.3}")).unwrap_or("-".into()),
+            format!("{:.0}%", f.dot / total * 100.0),
+            format!("{:.0}%", f.conv / total * 100.0),
+            format!("{:.0}%", f.elementwise / total * 100.0),
+        ]);
+    }
+    ctx.emit(&t, "fig5_devices")
+}

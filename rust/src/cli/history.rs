@@ -1,0 +1,106 @@
+//! `xbench history <bench-key>` — one benchmark config's trajectory
+//! across every recorded run, oldest first, with per-step deltas and
+//! the 7% gate flagged (CSV twin via `--csv-dir`).
+
+use anyhow::Result;
+use std::path::Path;
+
+use crate::ci::DEFAULT_THRESHOLD;
+use crate::metrics;
+use crate::report::{fmt_bytes, fmt_secs, Table};
+use crate::store::{fmt_utc, median_iter_per_key, series, Archive};
+
+use super::emit_table;
+
+pub fn cmd(archive: &Archive, csv_dir: Option<&Path>, bench_key: &str, limit: usize) -> Result<()> {
+    let records = archive.load()?;
+    let mut s = series(&records, bench_key);
+    if s.is_empty() {
+        let mut keys: Vec<String> = records.iter().map(|r| r.bench_key()).collect();
+        keys.sort();
+        keys.dedup();
+        let model = bench_key.split('.').next().unwrap_or(bench_key);
+        let near: Vec<&String> =
+            keys.iter().filter(|k| k.starts_with(model)).take(8).collect();
+        anyhow::bail!(
+            "no records for bench key {bench_key:?} in {}{}",
+            archive.path().display(),
+            if near.is_empty() {
+                format!(
+                    "; {} keys recorded (see `xbench runs` / `xbench cmp`)",
+                    keys.len()
+                )
+            } else {
+                format!(
+                    "; nearby keys: {}",
+                    near.iter().map(|k| k.as_str()).collect::<Vec<_>>().join(", ")
+                )
+            }
+        );
+    }
+    // "vs first" and the summary statistics are anchored to the
+    // benchmark's FULL history — computed before --limit trims the
+    // display window, or a capped view would silently rebase them and
+    // hide old regressions.
+    let first = s[0].iter_secs;
+    let total_runs = s.len();
+    let all_secs: Vec<f64> = s.iter().map(|r| r.iter_secs).collect();
+    let median_all = median_iter_per_key(s.iter().copied())
+        .remove(bench_key)
+        .unwrap_or(first);
+    if limit > 0 && s.len() > limit {
+        s.drain(..s.len() - limit);
+    }
+    let mut t = Table::new(
+        format!("History of {bench_key} (oldest first)"),
+        &["run", "when (UTC)", "commit", "iter time", "Δ prev", "vs first", "host mem", "gate"],
+    );
+    let mut prev: Option<f64> = None;
+    for r in &s {
+        let d_prev = match prev {
+            Some(p) if p > 0.0 => {
+                let ratio = r.iter_secs / p;
+                format!("{:+.1}%", (ratio - 1.0) * 100.0)
+            }
+            _ => "-".into(),
+        };
+        let gate = match prev {
+            Some(p) if p > 0.0 && r.iter_secs / p > 1.0 + DEFAULT_THRESHOLD => "REGRESSED",
+            Some(p) if p > 0.0 && r.iter_secs / p < 1.0 / (1.0 + DEFAULT_THRESHOLD) => "improved",
+            _ => "-",
+        };
+        t.row(vec![
+            r.run_id.clone(),
+            fmt_utc(r.timestamp),
+            r.git_commit.clone(),
+            fmt_secs(r.iter_secs),
+            d_prev,
+            format!("{:.3}x", r.iter_secs / first.max(1e-12)),
+            fmt_bytes(r.host_bytes),
+            gate.into(),
+        ]);
+        prev = Some(r.iter_secs);
+    }
+    emit_table(&t, csv_dir, &format!("history_{}", sanitize(bench_key)))?;
+
+    println!(
+        "{} runs: min {}, median {}, max {}, cv {:.1}%{}",
+        total_runs,
+        fmt_secs(all_secs.iter().cloned().fold(f64::INFINITY, f64::min)),
+        fmt_secs(median_all),
+        fmt_secs(all_secs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)),
+        metrics::cv(&all_secs) * 100.0,
+        if s.len() < total_runs {
+            format!(" (stats over full history; table shows last {})", s.len())
+        } else {
+            String::new()
+        }
+    );
+    Ok(())
+}
+
+fn sanitize(key: &str) -> String {
+    key.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect()
+}

@@ -1,0 +1,34 @@
+//! `xbench list` — suite composition (paper Table 1).
+
+use anyhow::Result;
+
+use crate::report::{fmt_bytes, Table};
+
+use super::Ctx;
+
+pub fn cmd(ctx: &Ctx) -> Result<()> {
+    let suite = &ctx.suite;
+    let mut t = Table::new(
+        "Suite composition (paper Table 1)",
+        &["domain", "task", "model", "modes", "params", "tags"],
+    );
+    for m in suite.models() {
+        let modes = if m.train.is_some() { "train+infer" } else { "infer" };
+        t.row(vec![
+            m.domain.clone(),
+            m.task.clone(),
+            m.name.clone(),
+            modes.into(),
+            fmt_bytes(m.param_bytes()),
+            m.tags.join(","),
+        ]);
+    }
+    ctx.emit(&t, "table1_suite")?;
+    println!(
+        "{} models, {} benchmark configs across {} domains",
+        suite.models().count(),
+        suite.config_count(),
+        suite.by_domain().len()
+    );
+    Ok(())
+}

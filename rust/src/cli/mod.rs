@@ -1,0 +1,347 @@
+//! The `xbench` command-line layer: one module per subcommand.
+//!
+//! `main.rs` is a thin shim over [`main`]; each verb lives in its own
+//! file so the dispatch stays navigable as the surface grows. Commands
+//! split into three groups:
+//!
+//! - **archive-only** (`cmp`, `rank`, `history`, `runs`): query the
+//!   persistent [`crate::store`] archive — no artifacts, manifest, or
+//!   device needed, so they work on a bare checkout;
+//! - **static** (`list`, `devices`, `coverage`, `compare-devices`,
+//!   `synth-artifacts`): need the manifest/artifacts but no device;
+//! - **executing** (`run`, `breakdown`, `compare-compiler`, `sweep`,
+//!   `optim`, `ci`, `train`): bring up the PJRT device and dispatch.
+
+pub mod breakdown;
+pub mod ci;
+pub mod cmp;
+pub mod compare_compiler;
+pub mod coverage;
+pub mod devices;
+pub mod history;
+pub mod list;
+pub mod optim;
+pub mod rank;
+pub mod run;
+pub mod runs;
+pub mod sweep;
+pub mod synth;
+pub mod train;
+
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use crate::config::{BatchPolicy, Compiler, Mode, RunConfig};
+use crate::report::Table;
+use crate::runtime::{ArtifactStore, Device, Manifest};
+use crate::store::Archive;
+use crate::suite::Suite;
+use crate::util::Args;
+
+const USAGE: &str = "\
+xbench — benchmarking the JAX/XLA/PJRT stack with high API-surface coverage
+
+USAGE: xbench <command> [args] [--flags]
+
+COMMANDS (paper exhibit in parens):
+  list              suite composition (Table 1)
+  run               run benchmarks        [--mode infer|train] [--compiler fused|eager] [--batch N]
+                                          [--record] [--note TEXT]
+  breakdown         time decomposition    (Fig 1/2 + Table 2)  [--mode infer|train]
+  compare-compiler  fused vs eager        (Fig 3/4)
+  devices           device profiles       (Table 3)
+  compare-devices   A100 vs MI210 model   (Fig 5)
+  coverage          operator surface      (§2.3, the 2.3x claim)
+  sweep             batch-size doubling sweep (§2.2)
+  optim             optimization studies  (Fig 6, §4.1)  [--case all|zero-grad|rsqrt|offload|guards|error-handling]
+  ci                nightly gate demo     (§4.2, Table 4) [--commits N] [--faults PR..] [--seed S]
+                                          [--replay-history] [--record-baseline]
+                                          [--baseline-from-archive [RUN]]
+  train             E2E training loop     [--model NAME] [--steps N] [--log-every N]
+  synth-artifacts   generate the offline synthetic artifact set [--seed S] [--force]
+
+ARCHIVE QUERIES (read the --archive JSONL; no artifacts needed):
+  runs              list recorded runs (id, when, commit, host, records)
+  cmp <A> <B>       ranked speedup/regression diff of two runs (7% gate flagged)
+                                          [--threshold F]
+  rank [RUN|all]    geometric-mean ranking per compiler.mode engine
+                    (default: latest record per config across all runs)
+  history <KEY>     one benchmark config across all runs [--limit N]
+                    KEY is model.mode.compiler.bN (see `runs`/`cmp` output)
+  Run selectors: latest, latest~N, a run id, or a unique id prefix.
+
+GLOBAL FLAGS:
+  --artifacts DIR   artifact directory (default: artifacts)
+  --archive FILE    run archive (default: <artifacts>/runs.jsonl)
+  --config FILE     xbench.toml run config (CLI flags override it)
+  --models A B ..   restrict to models    --domain D   restrict to domain
+  --repeats N       measured repeats (default 5)
+  --iterations N    timed iterations per repeat (default 2)
+  --warmup N        warmup iterations (default 1)
+  --csv-dir DIR     also write each table as CSV
+";
+
+/// Shared command context.
+pub struct Ctx {
+    pub artifacts: PathBuf,
+    pub csv_dir: Option<PathBuf>,
+    pub archive: Archive,
+    pub suite: Suite,
+    pub base_cfg: RunConfig,
+}
+
+impl Ctx {
+    /// Print a table and, with `--csv-dir`, write its CSV twin.
+    pub fn emit(&self, t: &Table, name: &str) -> Result<()> {
+        emit_table(t, self.csv_dir.as_deref(), name)
+    }
+}
+
+/// The free-standing emit helper (archive-only commands have no [`Ctx`]).
+pub fn emit_table(t: &Table, csv_dir: Option<&Path>, name: &str) -> Result<()> {
+    print!("{}", t.render());
+    if let Some(dir) = csv_dir {
+        t.write_csv(&dir.join(format!("{name}.csv")))?;
+    }
+    Ok(())
+}
+
+/// Parse argv and dispatch. The `xbench` binary's whole main.
+pub fn main() -> Result<()> {
+    let mut args = Args::parse(std::env::args().skip(1))?;
+    if args.subcommand.is_empty() || args.has("help") {
+        print!("{USAGE}");
+        return Ok(());
+    }
+
+    // Layered config: defaults <- xbench.toml (if given) <- CLI flags.
+    let config_path = args.get_opt("config")?;
+    let base_cfg_from_file = config_path.is_some();
+    let mut base_cfg = match &config_path {
+        Some(path) => RunConfig::from_toml(Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    let artifacts = PathBuf::from(
+        args.get_str("artifacts", base_cfg.artifacts.to_str().unwrap_or("artifacts"))?,
+    );
+    base_cfg.artifacts = artifacts.clone();
+    let models = args.get_many("models");
+    let selection_flags_given = !models.is_empty() || args.has("domain");
+    if !models.is_empty() {
+        base_cfg.selection.models = models;
+    }
+    if let Some(d) = args.get_opt("domain")? {
+        base_cfg.selection.domain = Some(d);
+    }
+    // Protocol knobs: CLI flag > xbench.toml > the CLI's fast defaults
+    // (5/2/1). The fast defaults only apply when no config file is in
+    // play — a toml-configured protocol must reach the archive intact,
+    // or config_hash's "equal hashes ⇒ comparable runs" contract lies.
+    let knob = |args: &mut Args, name: &str| -> Result<Option<usize>> {
+        match args.get_opt(name)? {
+            Some(v) => Ok(Some(v.parse().map_err(|e| {
+                anyhow::anyhow!("--{name}: bad integer {v:?}: {e}")
+            })?)),
+            None => Ok(None),
+        }
+    };
+    if let Some(v) = knob(&mut args, "repeats")? {
+        base_cfg.repeats = v;
+    } else if !base_cfg_from_file {
+        base_cfg.repeats = 5;
+    }
+    if let Some(v) = knob(&mut args, "iterations")? {
+        base_cfg.iterations = v;
+    } else if !base_cfg_from_file {
+        base_cfg.iterations = 2;
+    }
+    if let Some(v) = knob(&mut args, "warmup")? {
+        base_cfg.warmup = v;
+    } else if !base_cfg_from_file {
+        base_cfg.warmup = 1;
+    }
+    base_cfg.validate()?;
+    let csv_dir = args.get_opt("csv-dir")?.map(PathBuf::from);
+    let archive = Archive::new(
+        args.get_opt("archive")?
+            .map(PathBuf::from)
+            .unwrap_or_else(|| artifacts.join("runs.jsonl")),
+    );
+
+    // Suite-selection flags steer which benchmarks *run*; the archive
+    // queries operate on recorded bench keys and would silently ignore
+    // them — reject instead of pretending to restrict. Only the actual
+    // CLI flags count: a shared xbench.toml with a selection section
+    // must not break archive queries.
+    if matches!(args.subcommand.as_str(), "runs" | "cmp" | "rank" | "history") {
+        anyhow::ensure!(
+            !selection_flags_given,
+            "--models/--domain don't apply to archive queries; \
+             cmp/rank/history operate on recorded bench keys and run selectors"
+        );
+    }
+
+    match args.subcommand.as_str() {
+        // -- archive queries & generation: no manifest, no device ------------
+        "runs" => {
+            args.finish()?;
+            runs::cmd(&archive, csv_dir.as_deref())
+        }
+        "cmp" => {
+            let a = args.positional("run-a")?;
+            let b = args.positional("run-b")?;
+            let threshold = args.get_f64("threshold", crate::ci::DEFAULT_THRESHOLD)?;
+            args.finish()?;
+            cmp::cmd(&archive, csv_dir.as_deref(), &a, &b, threshold)
+        }
+        "rank" => {
+            let sel = args.positional_opt().unwrap_or_else(|| "all".into());
+            args.finish()?;
+            rank::cmd(&archive, csv_dir.as_deref(), &sel)
+        }
+        "history" => {
+            let key = args.positional("bench-key")?;
+            let limit = args.get_usize("limit", 0)?;
+            args.finish()?;
+            history::cmd(&archive, csv_dir.as_deref(), &key, limit)
+        }
+        "synth-artifacts" => {
+            let seed = args.get_u64("seed", 20230102)?;
+            let force = args.has("force");
+            args.finish()?;
+            synth::cmd(&artifacts, seed, force)
+        }
+        sub => {
+            // Reject typos before touching the manifest or device — on a
+            // bare checkout an unknown verb should say "unknown command",
+            // not "reading artifacts/manifest.json: No such file".
+            const KNOWN: [&str; 11] = [
+                "list",
+                "devices",
+                "compare-devices",
+                "coverage",
+                "run",
+                "breakdown",
+                "compare-compiler",
+                "sweep",
+                "optim",
+                "ci",
+                "train",
+            ];
+            if !KNOWN.contains(&sub) {
+                eprint!("unknown command {sub:?}\n\n{USAGE}");
+                std::process::exit(2);
+            }
+            let manifest = Manifest::load(&artifacts)?;
+            let suite = Suite::new(manifest);
+            let ctx = Ctx { artifacts, csv_dir, archive, suite, base_cfg };
+            match sub {
+                // -- static views --------------------------------------------
+                "list" => {
+                    args.finish()?;
+                    list::cmd(&ctx)
+                }
+                "devices" => {
+                    args.finish()?;
+                    devices::cmd(&ctx)
+                }
+                "compare-devices" => {
+                    args.finish()?;
+                    devices::cmd_compare(&ctx)
+                }
+                "coverage" => {
+                    args.finish()?;
+                    coverage::cmd(&ctx)
+                }
+                // -- executing commands: bring up the PJRT device ------------
+                sub => {
+                    let device = Rc::new(Device::cpu()?);
+                    eprintln!("platform: {}", device.platform());
+                    let store = ArtifactStore::new(device, ctx.artifacts.clone());
+                    match sub {
+                        "run" => {
+                            let mut cfg = ctx.base_cfg.clone();
+                            cfg.mode = Mode::parse(&args.get_str("mode", "infer")?)?;
+                            cfg.compiler = Compiler::parse(&args.get_str("compiler", "fused")?)?;
+                            if let Some(b) = args.get_opt("batch")? {
+                                cfg.batch = BatchPolicy::Fixed(b.parse()?);
+                            }
+                            let record = args.has("record");
+                            let note = args.get_str("note", "")?;
+                            args.finish()?;
+                            run::cmd(&ctx, &store, cfg, record, &note)
+                        }
+                        "breakdown" => {
+                            let mut cfg = ctx.base_cfg.clone();
+                            cfg.mode = Mode::parse(&args.get_str("mode", "infer")?)?;
+                            args.finish()?;
+                            breakdown::cmd(&ctx, &store, cfg)
+                        }
+                        "compare-compiler" => {
+                            args.finish()?;
+                            compare_compiler::cmd(&ctx, &store, ctx.base_cfg.clone())
+                        }
+                        "sweep" => {
+                            args.finish()?;
+                            sweep::cmd(&ctx, &store, ctx.base_cfg.clone())
+                        }
+                        "optim" => {
+                            let case = args.get_str("case", "all")?;
+                            args.finish()?;
+                            optim::cmd(&ctx, &store, &case)
+                        }
+                        "ci" => {
+                            let opts = ci::Opts {
+                                commits: args.get_usize("commits", 70)?,
+                                fault_prs: {
+                                    let fault_strs = args.get_many("faults");
+                                    if fault_strs.is_empty() {
+                                        vec![61056]
+                                    } else {
+                                        fault_strs
+                                            .iter()
+                                            .map(|s| {
+                                                s.parse().map_err(|e| {
+                                                    anyhow::anyhow!("--faults: {e}")
+                                                })
+                                            })
+                                            .collect::<Result<_>>()?
+                                    }
+                                },
+                                seed: args.get_u64("seed", 20230102)?,
+                                replay_history: args.has("replay-history"),
+                                record_baseline: args.has("record-baseline"),
+                                baseline_from_archive: {
+                                    // Value optional: bare flag means "latest".
+                                    let vals = args.get_many("baseline-from-archive");
+                                    anyhow::ensure!(
+                                        vals.len() <= 1,
+                                        "--baseline-from-archive expects one run selector, got {}",
+                                        vals.len()
+                                    );
+                                    args.has("baseline-from-archive").then(|| {
+                                        vals.first().cloned().unwrap_or_else(|| "latest".into())
+                                    })
+                                },
+                            };
+                            args.finish()?;
+                            ci::cmd(&ctx, &store, ctx.base_cfg.clone(), opts)
+                        }
+                        "train" => {
+                            let model = args.get_str("model", "gpt_tiny")?;
+                            let steps = args.get_usize("steps", 50)?;
+                            let log_every = args.get_usize("log-every", 10)?;
+                            args.finish()?;
+                            train::cmd(&ctx, &store, &model, steps, log_every)
+                        }
+                        other => {
+                            eprint!("unknown command {other:?}\n\n{USAGE}");
+                            std::process::exit(2);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! `xbench optim` — the §4.1 optimization case studies (Fig 6).
+
+use anyhow::Result;
+
+use crate::report::{fmt_bytes, fmt_pct, fmt_ratio, fmt_secs, Table};
+use crate::runtime::ArtifactStore;
+
+use super::Ctx;
+
+const CASES: [&str; 6] = ["all", "zero-grad", "rsqrt", "offload", "guards", "error-handling"];
+
+pub fn cmd(ctx: &Ctx, store: &ArtifactStore, case: &str) -> Result<()> {
+    anyhow::ensure!(
+        CASES.contains(&case),
+        "unknown --case {case:?} (expected one of: {})",
+        CASES.join("|")
+    );
+    let suite = &ctx.suite;
+    let mut t = Table::new(
+        "Optimization case studies (paper §4.1, Fig 6)",
+        &["case", "target", "before", "after", "speedup"],
+    );
+    let iters = 20;
+    if case == "all" || case == "zero-grad" {
+        // Many small gradient tensors: the regime where per-kernel launch
+        // overhead (not bytes) dominates — the paper's zero_grad setting.
+        let entry = suite.model("mobilenet_tiny")?;
+        let r = crate::optim::zero_grad::run(store.device(), entry, iters)?;
+        t.row(vec![
+            "zero_grad foreach".into(),
+            format!("{} ({} tensors)", r.model, r.tensors),
+            fmt_secs(r.serial_secs),
+            fmt_secs(r.foreach_secs),
+            fmt_ratio(r.speedup),
+        ]);
+    }
+    if case == "all" || case == "rsqrt" {
+        let r = crate::optim::rsqrt::run(store.device(), 64 * 1024, iters)?;
+        t.row(vec![
+            "rsqrt on host".into(),
+            format!("{} elements", r.elements),
+            fmt_secs(r.device_scalar_secs),
+            fmt_secs(r.host_scalar_secs),
+            fmt_ratio(r.speedup),
+        ]);
+    }
+    if case == "all" || case == "offload" {
+        let entry = suite.model("gpt_tiny_large")?;
+        let r = crate::optim::offload::run(store, entry, iters)?;
+        t.row(vec![
+            "resident weights".into(),
+            format!("{} ({})", r.model, fmt_bytes(r.param_bytes)),
+            fmt_secs(r.offload_secs),
+            fmt_secs(r.resident_secs),
+            fmt_ratio(r.speedup),
+        ]);
+        println!(
+            "offload mode spent {} of wall time re-uploading weights (paper pig2: 52.7%)",
+            fmt_pct(r.offload_movement_frac)
+        );
+    }
+    if case == "all" || case == "guards" {
+        // §3.2 outlier: hf_Reformer-style guard revalidation (~245/stage
+        // ≈ 2700 total on an 11-stage chain).
+        let entry = suite.model("deeprec_ae")?;
+        let r = crate::optim::guard_overhead_study(store, entry, 245)?;
+        t.row(vec![
+            "drop guard checks".into(),
+            format!("{} ({} guards)", r.model, r.guards_total),
+            fmt_secs(r.guarded_secs),
+            fmt_secs(r.fused_secs),
+            fmt_ratio(r.guarded_over_fused),
+        ]);
+        println!(
+            "guarded-eager {} vs plain eager {} vs fused {} (paper §3.2: guard-heavy models make the JIT slower than eager)",
+            fmt_secs(r.guarded_secs),
+            fmt_secs(r.eager_secs),
+            fmt_secs(r.fused_secs)
+        );
+    }
+    if case == "all" || case == "error-handling" {
+        let entry = suite.model("deeprec_ae_quant")?;
+        let r = crate::optim::error_handling_study(store, entry, 400)?;
+        t.row(vec![
+            "lazy error handling".into(),
+            r.model.clone(),
+            fmt_secs(r.rich_secs),
+            fmt_secs(r.lite_secs),
+            fmt_ratio(r.slowdown),
+        ]);
+    }
+    ctx.emit(&t, "fig6_optim")
+}

@@ -1,0 +1,97 @@
+//! `xbench rank [RUN]` — geometric-mean ranking of execution engines
+//! (compiler × mode combinations) across the suite, in the mold of
+//! rebar's `rank`: per-benchmark slowdown vs the best engine on that
+//! benchmark, geomeaned per engine.
+//!
+//! Each recorded run carries one compiler+mode, so by default the
+//! ranking joins the **latest record per bench key across the whole
+//! archive** — record a fused run and an eager run separately and
+//! `rank` compares them. Pass a run selector to restrict to one run.
+
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::metrics;
+use crate::report::{fmt_ratio, Table};
+use crate::store::{latest_per_key, Archive, Filter, RunRecord};
+
+use super::emit_table;
+
+pub fn cmd(archive: &Archive, csv_dir: Option<&Path>, run_sel: &str) -> Result<()> {
+    let records = archive.load()?;
+    let (scope, latest): (String, BTreeMap<String, &RunRecord>) = if run_sel == "all" {
+        ("all runs".to_string(), latest_per_key(records.iter()))
+    } else {
+        let run_id = archive.resolve_run(&records, run_sel)?;
+        let map = latest_per_key(Filter::for_run(&run_id).apply(&records).into_iter());
+        (format!("run {run_id}"), map)
+    };
+
+    // engine = "compiler.mode"; bench unit = "model.bN" (what stays
+    // fixed while engines vary).
+    let mut per_bench: BTreeMap<String, Vec<(String, f64)>> = BTreeMap::new();
+    for r in latest.values() {
+        let engine = format!("{}.{}", r.compiler, r.mode);
+        let bench = format!("{}.b{}", r.model, r.batch);
+        per_bench.entry(bench).or_default().push((engine, r.iter_secs));
+    }
+
+    // Slowdown vs the best engine per bench, accumulated per engine.
+    let mut slowdowns: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    let mut wins: BTreeMap<String, usize> = BTreeMap::new();
+    for engines in per_bench.values() {
+        let best = engines
+            .iter()
+            .map(|(_, s)| *s)
+            .fold(f64::INFINITY, f64::min)
+            .max(1e-12);
+        for (engine, secs) in engines {
+            slowdowns
+                .entry(engine.clone())
+                .or_default()
+                .push((secs / best).max(1.0));
+            if (secs / best) <= 1.0 + 1e-9 {
+                *wins.entry(engine.clone()).or_default() += 1;
+            }
+        }
+    }
+    anyhow::ensure!(!slowdowns.is_empty(), "{scope} has no records to rank");
+
+    let mut ranked: Vec<(String, f64, usize, usize)> = slowdowns
+        .into_iter()
+        .map(|(engine, v)| {
+            let score = metrics::geomean(&v);
+            let w = wins.get(&engine).copied().unwrap_or(0);
+            (engine, score, w, v.len())
+        })
+        .collect();
+    ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal));
+    if ranked.len() == 1 {
+        eprintln!(
+            "note: only one engine recorded; record runs with other --mode/--compiler \
+             combinations to make the ranking comparative"
+        );
+    }
+
+    let mut t = Table::new(
+        format!("Engine ranking, {scope} (geomean slowdown vs best; 1.00x = always best)"),
+        &["rank", "engine", "geomean slowdown", "wins", "benches"],
+    );
+    for (i, (engine, score, w, n)) in ranked.iter().enumerate() {
+        t.row(vec![
+            (i + 1).to_string(),
+            engine.clone(),
+            fmt_ratio(*score),
+            w.to_string(),
+            n.to_string(),
+        ]);
+    }
+    emit_table(&t, csv_dir, "rank")?;
+    println!(
+        "{} engines ranked over {} benchmark units",
+        ranked.len(),
+        per_bench.len()
+    );
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! `xbench run` — the workhorse benchmark command; with `--record` it
+//! appends one [`RunRecord`](crate::store::RunRecord) per benchmark
+//! config to the persistent archive.
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::coordinator::Runner;
+use crate::report::{fmt_pct, fmt_secs, Table};
+use crate::runtime::ArtifactStore;
+use crate::store::RunMeta;
+
+use super::Ctx;
+
+pub fn cmd(
+    ctx: &Ctx,
+    store: &ArtifactStore,
+    cfg: RunConfig,
+    record: bool,
+    note: &str,
+) -> Result<()> {
+    let suite = &ctx.suite;
+    let benches = suite.benches(&cfg.selection, cfg.mode)?;
+    let mut t = Table::new(
+        format!("Benchmark results ({}, {})", cfg.mode.as_str(), cfg.compiler.as_str()),
+        &["model", "batch", "iter time", "throughput/s", "active", "movement", "idle"],
+    );
+    let mut results = Vec::with_capacity(benches.len());
+    for b in benches {
+        let entry = suite.model(&b.model)?;
+        let runner = Runner::new(store, cfg.clone());
+        match runner.run_model(entry) {
+            Ok(r) => {
+                t.row(vec![
+                    r.model.clone(),
+                    r.batch.to_string(),
+                    fmt_secs(r.iter_secs),
+                    format!("{:.1}", r.throughput),
+                    fmt_pct(r.breakdown.active),
+                    fmt_pct(r.breakdown.movement),
+                    fmt_pct(r.breakdown.idle),
+                ]);
+                results.push(r);
+            }
+            Err(e) => eprintln!("skip {}: {e}", b.model),
+        }
+    }
+    ctx.emit(&t, "run")?;
+
+    if record {
+        if results.is_empty() {
+            // Don't hand the user a run id that was never written
+            // (Archive::append is a no-op on an empty batch).
+            anyhow::bail!("no benchmark succeeded; nothing recorded");
+        }
+        let meta = RunMeta::capture(&cfg, note);
+        let records = ctx.archive.record_results(&results, &meta)?;
+        eprintln!(
+            "recorded {} configs as {} (commit {}, host {}) in {}",
+            records.len(),
+            meta.run_id,
+            meta.git_commit,
+            meta.host,
+            ctx.archive.path().display()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,31 @@
+//! `xbench runs` — list the archive's recorded runs.
+
+use anyhow::Result;
+use std::path::Path;
+
+use crate::report::Table;
+use crate::store::{fmt_utc, run_summaries, Archive};
+
+use super::emit_table;
+
+pub fn cmd(archive: &Archive, csv_dir: Option<&Path>) -> Result<()> {
+    let records = archive.load()?;
+    let summaries = run_summaries(&records);
+    let mut t = Table::new(
+        format!("Recorded runs ({})", archive.path().display()),
+        &["run", "when (UTC)", "commit", "host", "note", "records"],
+    );
+    for s in &summaries {
+        t.row(vec![
+            s.run_id.clone(),
+            fmt_utc(s.timestamp),
+            s.git_commit.clone(),
+            s.host.clone(),
+            s.note.clone(),
+            s.records.to_string(),
+        ]);
+    }
+    emit_table(&t, csv_dir, "runs")?;
+    println!("{} runs, {} records", summaries.len(), records.len());
+    Ok(())
+}

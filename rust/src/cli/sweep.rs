@@ -1,0 +1,35 @@
+//! `xbench sweep` — inference batch-size doubling sweep (paper §2.2).
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::coordinator::{sweep_model, Runner};
+use crate::report::{fmt_secs, Table};
+use crate::runtime::ArtifactStore;
+
+use super::Ctx;
+
+pub fn cmd(ctx: &Ctx, store: &ArtifactStore, cfg: RunConfig) -> Result<()> {
+    let suite = &ctx.suite;
+    let mut t = Table::new(
+        "Inference batch-size sweep (paper §2.2)",
+        &["model", "batch", "iter time", "throughput/s", "best"],
+    );
+    for m in suite.select(&cfg.selection)? {
+        if !m.has_tag("sweep") {
+            continue;
+        }
+        let runner = Runner::new(store, cfg.clone());
+        let sweep = sweep_model(&runner, m)?;
+        for p in &sweep.points {
+            t.row(vec![
+                m.name.clone(),
+                p.batch.to_string(),
+                fmt_secs(p.iter_secs),
+                format!("{:.1}", p.throughput),
+                if p.batch == sweep.best_batch { "*".into() } else { "".into() },
+            ]);
+        }
+    }
+    ctx.emit(&t, "sweep")
+}

@@ -1,0 +1,20 @@
+//! `xbench synth-artifacts` — generate the offline synthetic artifact
+//! set (manifest + HLO + params) so every other verb runs with no
+//! Python/JAX build step.
+
+use anyhow::Result;
+use std::path::Path;
+
+use crate::suite::synth::write_synthetic_artifacts;
+
+pub fn cmd(artifacts: &Path, seed: u64, force: bool) -> Result<()> {
+    let summary = write_synthetic_artifacts(artifacts, seed, force)?;
+    println!(
+        "wrote {} models ({} files) into {} [seed {seed}]",
+        summary.models,
+        summary.files,
+        artifacts.display()
+    );
+    println!("next: `xbench run --record --artifacts {}`", artifacts.display());
+    Ok(())
+}

@@ -1,0 +1,36 @@
+//! `xbench train` — the end-to-end training loop.
+
+use anyhow::Result;
+
+use crate::coordinator::train_loop;
+use crate::report::{fmt_pct, fmt_secs};
+use crate::runtime::ArtifactStore;
+
+use super::Ctx;
+
+pub fn cmd(
+    ctx: &Ctx,
+    store: &ArtifactStore,
+    model: &str,
+    steps: usize,
+    log_every: usize,
+) -> Result<()> {
+    let entry = ctx.suite.model(model)?;
+    let run = train_loop(store, entry, steps, log_every)?;
+    println!(
+        "trained {} for {} steps in {}",
+        run.model,
+        run.steps,
+        fmt_secs(run.total_secs)
+    );
+    println!(
+        "breakdown: active {} movement {} idle {}",
+        fmt_pct(run.breakdown.active),
+        fmt_pct(run.breakdown.movement),
+        fmt_pct(run.breakdown.idle)
+    );
+    for (step, loss) in &run.losses {
+        println!("step {step:>5}  loss {loss:.4}");
+    }
+    Ok(())
+}

@@ -39,6 +39,20 @@ pub struct RunResult {
     pub throughput: f64,
 }
 
+impl RunResult {
+    /// The canonical `model.mode.compiler.bN` key this result is gated,
+    /// archived, and queried under (shared with [`crate::store`] and
+    /// [`crate::ci::baseline`]).
+    pub fn bench_key(&self) -> String {
+        crate::store::bench_key_of(
+            &self.model,
+            self.mode.as_str(),
+            self.compiler.as_str(),
+            self.batch,
+        )
+    }
+}
+
 /// The coordinator's benchmark runner.
 pub struct Runner<'a> {
     pub store: &'a ArtifactStore,

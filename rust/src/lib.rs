@@ -14,6 +14,7 @@
 //! modules below; `examples/` shows the public API on realistic flows.
 
 pub mod ci;
+pub mod cli;
 pub mod config;
 pub mod util;
 pub mod coordinator;
@@ -24,6 +25,7 @@ pub mod optim;
 pub mod profiler;
 pub mod report;
 pub mod runtime;
+pub mod store;
 pub mod suite;
 
 /// Crate version (mirrors Cargo.toml).

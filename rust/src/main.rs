@@ -1,657 +1,9 @@
 //! `xbench` — the XBench leader binary.
 //!
-//! Every paper exhibit has a subcommand that regenerates it (see the
-//! experiment index in DESIGN.md): `breakdown` (Fig 1/2, Table 2),
-//! `compare-compiler` (Fig 3/4), `devices` (Table 3), `compare-devices`
-//! (Fig 5), `optim` (Fig 6, §4.1), `ci` (§4.2, Tables 4/5), `coverage`
-//! (§2.3), plus suite utilities (`list`, `run`, `sweep`, `train`).
-//!
-//! Argument parsing uses the crate's own [`xbench::util::cli`] substrate
-//! (no clap on this vendored testbed).
+//! All argument parsing and dispatch lives in [`xbench::cli`] (one
+//! module per subcommand); this shim only exists so `cargo run` has a
+//! binary target.
 
-use anyhow::Result;
-use std::path::PathBuf;
-use std::rc::Rc;
-
-use xbench::ci::{CiPipeline, Day, FaultKind};
-use xbench::config::{BatchPolicy, Compiler, Mode, RunConfig};
-use xbench::coordinator::{sweep_model, train_loop, Runner};
-use xbench::devmodel;
-use xbench::hlo;
-use xbench::metrics;
-use xbench::report::{fmt_bytes, fmt_pct, fmt_ratio, fmt_secs, Table};
-use xbench::runtime::{ArtifactStore, Device, Manifest};
-use xbench::suite::Suite;
-use xbench::util::Args;
-
-const USAGE: &str = "\
-xbench — benchmarking the JAX/XLA/PJRT stack with high API-surface coverage
-
-USAGE: xbench <command> [--flags]
-
-COMMANDS (paper exhibit in parens):
-  list              suite composition (Table 1)
-  run               run benchmarks        [--mode infer|train] [--compiler fused|eager] [--batch N]
-  breakdown         time decomposition    (Fig 1/2 + Table 2)  [--mode infer|train]
-  compare-compiler  fused vs eager        (Fig 3/4)
-  devices           device profiles       (Table 3)
-  compare-devices   A100 vs MI210 model   (Fig 5)
-  coverage          operator surface      (§2.3, the 2.3x claim)
-  sweep             batch-size doubling sweep (§2.2)
-  optim             optimization studies  (Fig 6, §4.1)  [--case all|zero-grad|rsqrt|offload|error-handling]
-  ci                nightly gate demo     (§4.2, Table 4) [--commits N] [--faults PR..] [--seed S] [--replay-history]
-  train             E2E training loop     [--model NAME] [--steps N] [--log-every N]
-
-GLOBAL FLAGS:
-  --artifacts DIR   artifact directory (default: artifacts)
-  --config FILE     xbench.toml run config (CLI flags override it)
-  --models A B ..   restrict to models    --domain D   restrict to domain
-  --repeats N       measured repeats (default 5)
-  --iterations N    timed iterations per repeat (default 2)
-  --warmup N        warmup iterations (default 1)
-  --csv-dir DIR     also write每 table as CSV
-";
-
-struct Ctx {
-    artifacts: PathBuf,
-    csv_dir: Option<PathBuf>,
-    suite: Suite,
-    base_cfg: RunConfig,
-}
-
-impl Ctx {
-    fn emit(&self, t: &Table, name: &str) -> Result<()> {
-        print!("{}", t.render());
-        if let Some(dir) = &self.csv_dir {
-            t.write_csv(&dir.join(format!("{name}.csv")))?;
-        }
-        Ok(())
-    }
-}
-
-fn main() -> Result<()> {
-    let mut args = Args::parse(std::env::args().skip(1))?;
-    if args.subcommand.is_empty() || args.has("help") {
-        print!("{USAGE}");
-        return Ok(());
-    }
-
-    // Layered config: defaults <- xbench.toml (if given) <- CLI flags.
-    let mut base_cfg = match args.get_opt("config")? {
-        Some(path) => RunConfig::from_toml(std::path::Path::new(&path))?,
-        None => RunConfig::default(),
-    };
-    let artifacts = PathBuf::from(args.get_str("artifacts", base_cfg.artifacts.to_str().unwrap_or("artifacts"))?);
-    base_cfg.artifacts = artifacts.clone();
-    let models = args.get_many("models");
-    if !models.is_empty() {
-        base_cfg.selection.models = models;
-    }
-    if let Some(d) = args.get_opt("domain")? {
-        base_cfg.selection.domain = Some(d);
-    }
-    base_cfg.repeats = args.get_usize("repeats", 5)?;
-    base_cfg.iterations = args.get_usize("iterations", 2)?;
-    base_cfg.warmup = args.get_usize("warmup", 1)?;
-    base_cfg.validate()?;
-    let csv_dir = args.get_opt("csv-dir")?.map(PathBuf::from);
-
-    let manifest = Manifest::load(&artifacts)?;
-    let suite = Suite::new(manifest);
-    let ctx = Ctx { artifacts, csv_dir, suite, base_cfg };
-
-    match args.subcommand.as_str() {
-        "list" => {
-            args.finish()?;
-            cmd_list(&ctx)
-        }
-        "devices" => {
-            args.finish()?;
-            cmd_devices(&ctx)
-        }
-        "coverage" => {
-            args.finish()?;
-            cmd_coverage(&ctx)
-        }
-        "compare-devices" => {
-            args.finish()?;
-            cmd_compare_devices(&ctx)
-        }
-        sub => {
-            // Commands below execute artifacts: bring up the PJRT device.
-            let device = Rc::new(Device::cpu()?);
-            eprintln!("platform: {}", device.platform());
-            let store = ArtifactStore::new(device, ctx.artifacts.clone());
-            match sub {
-                "run" => {
-                    let mut cfg = ctx.base_cfg.clone();
-                    cfg.mode = Mode::parse(&args.get_str("mode", "infer")?)?;
-                    cfg.compiler = Compiler::parse(&args.get_str("compiler", "fused")?)?;
-                    if let Some(b) = args.get_opt("batch")? {
-                        cfg.batch = BatchPolicy::Fixed(b.parse()?);
-                    }
-                    args.finish()?;
-                    cmd_run(&ctx, &store, cfg)
-                }
-                "breakdown" => {
-                    let mut cfg = ctx.base_cfg.clone();
-                    cfg.mode = Mode::parse(&args.get_str("mode", "infer")?)?;
-                    args.finish()?;
-                    cmd_breakdown(&ctx, &store, cfg)
-                }
-                "compare-compiler" => {
-                    args.finish()?;
-                    cmd_compare_compiler(&ctx, &store, ctx.base_cfg.clone())
-                }
-                "sweep" => {
-                    args.finish()?;
-                    cmd_sweep(&ctx, &store, ctx.base_cfg.clone())
-                }
-                "optim" => {
-                    let case = args.get_str("case", "all")?;
-                    args.finish()?;
-                    cmd_optim(&ctx, &store, &case)
-                }
-                "ci" => {
-                    let commits = args.get_usize("commits", 70)?;
-                    let fault_strs = args.get_many("faults");
-                    let faults: Vec<u32> = if fault_strs.is_empty() {
-                        vec![61056]
-                    } else {
-                        fault_strs
-                            .iter()
-                            .map(|s| s.parse().map_err(|e| anyhow::anyhow!("--faults: {e}")))
-                            .collect::<Result<_>>()?
-                    };
-                    let seed = args.get_u64("seed", 20230102)?;
-                    let replay = args.has("replay-history");
-                    args.finish()?;
-                    cmd_ci(&ctx, &store, ctx.base_cfg.clone(), commits, &faults, seed, replay)
-                }
-                "train" => {
-                    let model = args.get_str("model", "gpt_tiny")?;
-                    let steps = args.get_usize("steps", 50)?;
-                    let log_every = args.get_usize("log-every", 10)?;
-                    args.finish()?;
-                    let entry = ctx.suite.model(&model)?;
-                    let run = train_loop(&store, entry, steps, log_every)?;
-                    println!(
-                        "trained {} for {} steps in {}",
-                        run.model,
-                        run.steps,
-                        fmt_secs(run.total_secs)
-                    );
-                    println!(
-                        "breakdown: active {} movement {} idle {}",
-                        fmt_pct(run.breakdown.active),
-                        fmt_pct(run.breakdown.movement),
-                        fmt_pct(run.breakdown.idle)
-                    );
-                    for (step, loss) in &run.losses {
-                        println!("step {step:>5}  loss {loss:.4}");
-                    }
-                    Ok(())
-                }
-                other => {
-                    eprint!("unknown command {other:?}\n\n{USAGE}");
-                    std::process::exit(2);
-                }
-            }
-        }
-    }
-}
-fn cmd_list(ctx: &Ctx) -> Result<()> {
-    let suite = &ctx.suite;
-    let mut t = Table::new(
-        "Suite composition (paper Table 1)",
-        &["domain", "task", "model", "modes", "params", "tags"],
-    );
-    for m in suite.models() {
-        let modes = if m.train.is_some() { "train+infer" } else { "infer" };
-        t.row(vec![
-            m.domain.clone(),
-            m.task.clone(),
-            m.name.clone(),
-            modes.into(),
-            fmt_bytes(m.param_bytes()),
-            m.tags.join(","),
-        ]);
-    }
-    ctx.emit(&t, "table1_suite")?;
-    println!(
-        "{} models, {} benchmark configs across {} domains",
-        suite.models().count(),
-        suite.config_count(),
-        suite.by_domain().len()
-    );
-    Ok(())
-}
-
-fn cmd_devices(ctx: &Ctx) -> Result<()> {
-    let mut t = Table::new(
-        "Peak theoretical TFLOPS (paper Table 3)",
-        &["GPU", "FP32", "Matrix32 (TF32/FP32-Matrix)", "FP64", "Matrix64", "HBM GB/s"],
-    );
-    for d in [devmodel::a100(), devmodel::mi210()] {
-        t.row(vec![
-            d.name.to_string(),
-            format!("{}", d.fp32),
-            d.matrix32.map(|v| v.to_string()).unwrap_or("-".into()),
-            format!("{}", d.fp64),
-            d.matrix64.map(|v| v.to_string()).unwrap_or("-".into()),
-            format!("{}", d.hbm_gbps),
-        ]);
-    }
-    ctx.emit(&t, "table3_devices")
-}
-
-/// The MLPerf-like subset: few models, few domains (paper: 5 models with
-/// PyTorch across 5 domains; we keep the per-domain singletons).
-const MLPERF_SUBSET: [&str; 5] =
-    ["resnet_tiny", "bert_tiny", "dlrm_tiny", "speech_conformer_tiny", "unet_tiny"];
-
-fn cmd_coverage(ctx: &Ctx) -> Result<()> {
-    let suite = &ctx.suite;
-    let mut full = hlo::Surface::default();
-    let mut subset = hlo::Surface::default();
-    for m in suite.models() {
-        for entry in m.infer.values() {
-            let module = hlo::parse_file(&ctx.artifacts.join(&entry.artifact))?;
-            full.absorb(&module);
-            if MLPERF_SUBSET.contains(&m.name.as_str()) {
-                subset.absorb(&module);
-            }
-        }
-        if let Some(tr) = &m.train {
-            let module = hlo::parse_file(&ctx.artifacts.join(&tr.artifact))?;
-            full.absorb(&module);
-            if MLPERF_SUBSET.contains(&m.name.as_str()) {
-                subset.absorb(&module);
-            }
-        }
-    }
-    let mut t = Table::new(
-        "Operator-surface coverage (paper §2.3)",
-        &["suite", "models", "opcodes", "typed ops", "op configs"],
-    );
-    t.row(vec![
-        "xbench (full)".into(),
-        suite.models().count().to_string(),
-        full.opcode_count().to_string(),
-        full.typed_count().to_string(),
-        full.config_count().to_string(),
-    ]);
-    t.row(vec![
-        "mlperf-like subset".into(),
-        MLPERF_SUBSET.len().to_string(),
-        subset.opcode_count().to_string(),
-        subset.typed_count().to_string(),
-        subset.config_count().to_string(),
-    ]);
-    ctx.emit(&t, "coverage")?;
-    println!(
-        "coverage ratio (op configs): {} (paper reports 2.3x over MLPerf)",
-        fmt_ratio(full.ratio_over(&subset))
-    );
-    let excl = full.exclusive_over(&subset);
-    println!("{} typed ops only the full suite exercises (cold paths)", excl.len());
-    Ok(())
-}
-
-fn cmd_run(ctx: &Ctx, store: &ArtifactStore, cfg: RunConfig) -> Result<()> {
-    let suite = &ctx.suite;
-    let benches = suite.benches(&cfg.selection, cfg.mode)?;
-    let mut t = Table::new(
-        format!("Benchmark results ({}, {})", cfg.mode.as_str(), cfg.compiler.as_str()),
-        &["model", "batch", "iter time", "throughput/s", "active", "movement", "idle"],
-    );
-    for b in benches {
-        let entry = suite.model(&b.model)?;
-        let runner = Runner::new(store, cfg.clone());
-        match runner.run_model(entry) {
-            Ok(r) => {
-                t.row(vec![
-                    r.model.clone(),
-                    r.batch.to_string(),
-                    fmt_secs(r.iter_secs),
-                    format!("{:.1}", r.throughput),
-                    fmt_pct(r.breakdown.active),
-                    fmt_pct(r.breakdown.movement),
-                    fmt_pct(r.breakdown.idle),
-                ]);
-            }
-            Err(e) => eprintln!("skip {}: {e}", b.model),
-        }
-    }
-    ctx.emit(&t, "run")
-}
-
-fn cmd_breakdown(ctx: &Ctx, store: &ArtifactStore, cfg: RunConfig) -> Result<()> {
-    let suite = &ctx.suite;
-    let benches = suite.benches(&cfg.selection, cfg.mode)?;
-    let fig = if cfg.mode == Mode::Train { "Fig 1" } else { "Fig 2" };
-    let mut t = Table::new(
-        format!("Execution-time breakdown, {} ({fig})", cfg.mode.as_str()),
-        &["model", "domain", "active", "movement", "idle", "iter time"],
-    );
-    let mut per_domain: Vec<(String, [f64; 3])> = Vec::new();
-    for b in &benches {
-        let entry = suite.model(&b.model)?;
-        let runner = Runner::new(store, cfg.clone());
-        let r = runner.run_model(entry)?;
-        t.row(vec![
-            r.model.clone(),
-            r.domain.clone(),
-            fmt_pct(r.breakdown.active),
-            fmt_pct(r.breakdown.movement),
-            fmt_pct(r.breakdown.idle),
-            fmt_secs(r.iter_secs),
-        ]);
-        per_domain.push((
-            r.domain.clone(),
-            [r.breakdown.active, r.breakdown.movement, r.breakdown.idle],
-        ));
-    }
-    let fign = if cfg.mode == Mode::Train { 1 } else { 2 };
-    ctx.emit(&t, &format!("fig{}_breakdown_{}", fign, cfg.mode.as_str()))?;
-
-    // Table 2: per-domain means.
-    let actives: Vec<(String, f64)> = per_domain.iter().map(|(d, b)| (d.clone(), b[0])).collect();
-    let moves: Vec<(String, f64)> = per_domain.iter().map(|(d, b)| (d.clone(), b[1])).collect();
-    let idles: Vec<(String, f64)> = per_domain.iter().map(|(d, b)| (d.clone(), b[2])).collect();
-    let (am, mm, im) = (
-        metrics::group_mean(&actives),
-        metrics::group_mean(&moves),
-        metrics::group_mean(&idles),
-    );
-    let mut t2 = Table::new(
-        format!("Per-domain breakdown means, {} (Table 2)", cfg.mode.as_str()),
-        &["domain", "activeness", "data movement", "idleness"],
-    );
-    for (domain, a) in &am {
-        t2.row(vec![
-            domain.clone(),
-            fmt_pct(*a),
-            fmt_pct(mm[domain]),
-            fmt_pct(im[domain]),
-        ]);
-    }
-    ctx.emit(&t2, &format!("table2_{}", cfg.mode.as_str()))
-}
-
-fn cmd_compare_compiler(ctx: &Ctx, store: &ArtifactStore, cfg: RunConfig) -> Result<()> {
-    let suite = &ctx.suite;
-    // Staged artifacts are inference-lowered; Fig 3's train column is
-    // approximated by the inference comparison (DESIGN.md substitution).
-    let mut t = Table::new(
-        "Fused (Inductor-analogue) vs eager (Fig 3/4) — ratios fused/eager: <1 means fused wins",
-        &["model", "T ratio", "CM ratio", "GM ratio", "fused time", "eager time"],
-    );
-    let mut speedups = Vec::new();
-    for m in suite.select(&cfg.selection)? {
-        let Some(stages) = &m.stages else { continue };
-        let mut fused_cfg = cfg.clone();
-        fused_cfg.compiler = Compiler::Fused;
-        fused_cfg.batch = BatchPolicy::Fixed(stages.batch);
-        let fused = Runner::new(store, fused_cfg).run_model(m)?;
-        let mut eager_cfg = cfg.clone();
-        eager_cfg.compiler = Compiler::Eager;
-        let eager = Runner::new(store, eager_cfg).run_model(m)?;
-        let tr = fused.iter_secs / eager.iter_secs;
-        let cm = fused.memory.host_peak.max(1) as f64 / eager.memory.host_peak.max(1) as f64;
-        let gm = fused.memory.device_total.max(1) as f64 / eager.memory.device_total.max(1) as f64;
-        speedups.push(1.0 / tr.max(1e-12));
-        t.row(vec![
-            m.name.clone(),
-            format!("{tr:.3}"),
-            format!("{cm:.3}"),
-            format!("{gm:.3}"),
-            fmt_secs(fused.iter_secs),
-            fmt_secs(eager.iter_secs),
-        ]);
-    }
-    ctx.emit(&t, "fig3_4_compiler")?;
-    if !speedups.is_empty() {
-        println!(
-            "geomean fused speedup over eager: {} (paper: 1.30x train / 1.46x infer)",
-            fmt_ratio(metrics::geomean(&speedups))
-        );
-    }
-    Ok(())
-}
-
-fn cmd_compare_devices(ctx: &Ctx) -> Result<()> {
-    let suite = &ctx.suite;
-    let mut t = Table::new(
-        "T_NVIDIA / T_AMD analytical projection (Fig 5) — <1: A100 wins, >1: MI210 wins",
-        &["model", "infer ratio", "train ratio", "dot%", "conv%", "elementwise%"],
-    );
-    for m in suite.models() {
-        let Some(infer) = m.infer_at(m.default_batch) else { continue };
-        let cost_i = hlo::analyze_file(&ctx.artifacts.join(&infer.artifact))?;
-        let ratio_i = devmodel::nvidia_over_amd(&cost_i, Mode::Infer);
-        let (ratio_t, cost_t) = match &m.train {
-            Some(tr) => {
-                let c = hlo::analyze_file(&ctx.artifacts.join(&tr.artifact))?;
-                (Some(devmodel::nvidia_over_amd(&c, Mode::Train)), Some(c))
-            }
-            None => (None, None),
-        };
-        let f = cost_t.map(|c| c.flops).unwrap_or(cost_i.flops);
-        let total = f.total().max(1.0);
-        t.row(vec![
-            m.name.clone(),
-            format!("{ratio_i:.3}"),
-            ratio_t.map(|r| format!("{r:.3}")).unwrap_or("-".into()),
-            format!("{:.0}%", f.dot / total * 100.0),
-            format!("{:.0}%", f.conv / total * 100.0),
-            format!("{:.0}%", f.elementwise / total * 100.0),
-        ]);
-    }
-    ctx.emit(&t, "fig5_devices")
-}
-
-fn cmd_sweep(ctx: &Ctx, store: &ArtifactStore, cfg: RunConfig) -> Result<()> {
-    let suite = &ctx.suite;
-    let mut t = Table::new(
-        "Inference batch-size sweep (paper §2.2)",
-        &["model", "batch", "iter time", "throughput/s", "best"],
-    );
-    for m in suite.select(&cfg.selection)? {
-        if !m.has_tag("sweep") {
-            continue;
-        }
-        let runner = Runner::new(store, cfg.clone());
-        let sweep = sweep_model(&runner, m)?;
-        for p in &sweep.points {
-            t.row(vec![
-                m.name.clone(),
-                p.batch.to_string(),
-                fmt_secs(p.iter_secs),
-                format!("{:.1}", p.throughput),
-                if p.batch == sweep.best_batch { "*".into() } else { "".into() },
-            ]);
-        }
-    }
-    ctx.emit(&t, "sweep")
-}
-
-fn cmd_optim(ctx: &Ctx, store: &ArtifactStore, case: &str) -> Result<()> {
-    let suite = &ctx.suite;
-    let mut t = Table::new(
-        "Optimization case studies (paper §4.1, Fig 6)",
-        &["case", "target", "before", "after", "speedup"],
-    );
-    let iters = 20;
-    if case == "all" || case == "zero-grad" {
-        // Many small gradient tensors: the regime where per-kernel launch
-        // overhead (not bytes) dominates — the paper's zero_grad setting.
-        let entry = suite.model("mobilenet_tiny")?;
-        let r = xbench::optim::zero_grad::run(store.device(), entry, iters)?;
-        t.row(vec![
-            "zero_grad foreach".into(),
-            format!("{} ({} tensors)", r.model, r.tensors),
-            fmt_secs(r.serial_secs),
-            fmt_secs(r.foreach_secs),
-            fmt_ratio(r.speedup),
-        ]);
-    }
-    if case == "all" || case == "rsqrt" {
-        let r = xbench::optim::rsqrt::run(store.device(), 64 * 1024, iters)?;
-        t.row(vec![
-            "rsqrt on host".into(),
-            format!("{} elements", r.elements),
-            fmt_secs(r.device_scalar_secs),
-            fmt_secs(r.host_scalar_secs),
-            fmt_ratio(r.speedup),
-        ]);
-    }
-    if case == "all" || case == "offload" {
-        let entry = suite.model("gpt_tiny_large")?;
-        let r = xbench::optim::offload::run(store, entry, iters)?;
-        t.row(vec![
-            "resident weights".into(),
-            format!("{} ({})", r.model, fmt_bytes(r.param_bytes)),
-            fmt_secs(r.offload_secs),
-            fmt_secs(r.resident_secs),
-            fmt_ratio(r.speedup),
-        ]);
-        println!(
-            "offload mode spent {} of wall time re-uploading weights (paper pig2: 52.7%)",
-            fmt_pct(r.offload_movement_frac)
-        );
-    }
-    if case == "all" || case == "guards" {
-        // §3.2 outlier: hf_Reformer-style guard revalidation (~245/stage
-        // ≈ 2700 total on an 11-stage chain).
-        let entry = suite.model("deeprec_ae")?;
-        let r = xbench::optim::guard_overhead_study(store, entry, 245)?;
-        t.row(vec![
-            "drop guard checks".into(),
-            format!("{} ({} guards)", r.model, r.guards_total),
-            fmt_secs(r.guarded_secs),
-            fmt_secs(r.fused_secs),
-            fmt_ratio(r.guarded_over_fused),
-        ]);
-        println!(
-            "guarded-eager {} vs plain eager {} vs fused {} (paper §3.2: guard-heavy models make the JIT slower than eager)",
-            fmt_secs(r.guarded_secs),
-            fmt_secs(r.eager_secs),
-            fmt_secs(r.fused_secs)
-        );
-    }
-    if case == "all" || case == "error-handling" {
-        let entry = suite.model("deeprec_ae_quant")?;
-        let r = xbench::optim::error_handling_study(store, entry, 400)?;
-        t.row(vec![
-            "lazy error handling".into(),
-            r.model.clone(),
-            fmt_secs(r.rich_secs),
-            fmt_secs(r.lite_secs),
-            fmt_ratio(r.slowdown),
-        ]);
-    }
-    ctx.emit(&t, "fig6_optim")
-}
-
-#[allow(clippy::too_many_arguments)]
-fn cmd_ci(
-    ctx: &Ctx,
-    store: &ArtifactStore,
-    mut cfg: RunConfig,
-    commits: usize,
-    fault_prs: &[u32],
-    seed: u64,
-    replay_history: bool,
-) -> Result<()> {
-    let suite = &ctx.suite;
-    // CI uses a small, fast subset when none specified.
-    if cfg.selection.models.is_empty() {
-        // Stable, fast benches (the RL bench's host env adds run-to-run
-        // variance the 7% gate would false-positive on).
-        cfg.selection.models = vec![
-            "deeprec_ae".into(),
-            "dlrm_tiny".into(),
-            "mobilenet_tiny".into(),
-            // Quant coverage: the §1.1 error-handling fault only bites
-            // models that probe the fallback registry.
-            "deeprec_ae_quant".into(),
-        ];
-    }
-    cfg.repeats = 5;
-    cfg.iterations = 2;
-    cfg.warmup = 1;
-    let pipeline = CiPipeline::new(store, suite, cfg);
-    eprintln!("recording clean baselines…");
-    let baselines = pipeline.record_baselines()?;
-
-    let days: Vec<(String, Vec<FaultKind>)> = if replay_history {
-        FaultKind::catalog()
-            .iter()
-            .enumerate()
-            .map(|(i, f)| (format!("day-{:02}", i + 1), vec![*f]))
-            .collect()
-    } else {
-        let faults: Vec<FaultKind> = fault_prs
-            .iter()
-            .map(|pr| {
-                FaultKind::catalog()
-                    .into_iter()
-                    .find(|f| f.pr_number() == *pr)
-                    .ok_or_else(|| {
-                        anyhow::anyhow!(
-                            "unknown PR #{pr}; catalog: 85447 61056 65594 72148 71904 65839 87855"
-                        )
-                    })
-            })
-            .collect::<Result<_>>()?;
-        vec![("nightly".into(), faults)]
-    };
-
-    let mut t = Table::new(
-        "CI nightly gate (paper §4.2, Table 4)",
-        &["day", "planted PR", "detected", "bisected to", "runs", "resolution"],
-    );
-    for (date, faults) in days {
-        let day = Day::generate(&date, commits, &faults, seed);
-        let report = pipeline.nightly(&day, &baselines)?;
-        let planted: Vec<String> = faults.iter().map(|f| format!("#{}", f.pr_number())).collect();
-        match report {
-            Some(r) => {
-                let hit = r
-                    .culprit
-                    .as_ref()
-                    .map(|c| {
-                        let idx = day
-                            .commits
-                            .iter()
-                            .position(|x| x.id == c.id)
-                            .unwrap_or(usize::MAX);
-                        let correct = day.fault_indices().contains(&idx);
-                        format!("{} ({})", c.id, if correct { "correct" } else { "WRONG" })
-                    })
-                    .unwrap_or_else(|| "-".into());
-                t.row(vec![
-                    date,
-                    planted.join(","),
-                    format!("{} regressions", r.regressions.len()),
-                    hit,
-                    r.runs_spent.to_string(),
-                    faults.first().map(|f| f.resolution().to_string()).unwrap_or_default(),
-                ]);
-                println!("\n{}\n", r.to_markdown());
-            }
-            None => {
-                t.row(vec![
-                    date,
-                    planted.join(","),
-                    "none".into(),
-                    "-".into(),
-                    "1".into(),
-                    "-".into(),
-                ]);
-            }
-        }
-    }
-    ctx.emit(&t, "table4_ci")
+fn main() -> anyhow::Result<()> {
+    xbench::cli::main()
 }

@@ -27,8 +27,21 @@ impl Table {
         }
     }
 
-    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
-        debug_assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+    /// Add a row, normalized to header arity: short rows are padded with
+    /// empty cells, long rows truncated with a stderr warning.
+    /// (Previously a `debug_assert!`, which let release builds silently
+    /// render misaligned tables; truncation stays loud so arity bugs in
+    /// callers don't ship as quiet data loss.)
+    pub fn row(&mut self, mut cells: Vec<String>) -> &mut Self {
+        if cells.len() > self.headers.len() {
+            eprintln!(
+                "warning: table {:?} row has {} cells for {} columns; extra cells dropped",
+                self.title,
+                cells.len(),
+                self.headers.len()
+            );
+        }
+        cells.resize(self.headers.len(), String::new());
         self.rows.push(cells);
         self
     }
@@ -150,6 +163,22 @@ mod tests {
         t.write_csv(&p).unwrap();
         let text = std::fs::read_to_string(&p).unwrap();
         assert_eq!(text, "a,b\n\"x,y\",z\n");
+    }
+
+    #[test]
+    fn row_arity_is_normalized_not_asserted() {
+        let mut t = Table::new("", &["a", "b", "c"]);
+        t.row(vec!["short".into()]);
+        t.row(vec!["1".into(), "2".into(), "3".into(), "over".into()]);
+        assert!(t.rows.iter().all(|r| r.len() == 3));
+        let rendered = t.render();
+        assert!(!rendered.contains("over"));
+        // CSV twin stays rectangular too.
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("pad.csv");
+        t.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "a,b,c\nshort,,\n1,2,3\n");
     }
 
     #[test]

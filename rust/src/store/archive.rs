@@ -1,0 +1,256 @@
+//! The append-only JSONL run archive.
+//!
+//! One [`RunRecord`] per line, appended and never rewritten — the
+//! durability model of rebar's recorded CSVs: safe under concurrent
+//! readers, trivially diffable, and any prefix of the file is itself a
+//! valid archive. Malformed lines fail loudly with their line number.
+
+use anyhow::{bail, Context, Result};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use super::record::RunRecord;
+
+/// Handle to an archive file (which may not exist yet).
+#[derive(Debug, Clone)]
+pub struct Archive {
+    path: PathBuf,
+}
+
+impl Archive {
+    pub fn new(path: impl Into<PathBuf>) -> Archive {
+        Archive { path: path.into() }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn exists(&self) -> bool {
+        self.path.exists()
+    }
+
+    /// Append records (creates the file and parent directories on first
+    /// use). One compact JSON object per line.
+    pub fn append(&self, records: &[RunRecord]) -> Result<()> {
+        if records.is_empty() {
+            return Ok(());
+        }
+        if let Some(parent) = self.path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
+        }
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)
+            .with_context(|| format!("opening archive {}", self.path.display()))?;
+        let mut buf = String::new();
+        for r in records {
+            buf.push_str(&r.to_json().to_json());
+            buf.push('\n');
+        }
+        f.write_all(buf.as_bytes())
+            .with_context(|| format!("appending to {}", self.path.display()))
+    }
+
+    /// Stamp runner results with run provenance and append them — the
+    /// one recording path `run --record` and `ci --record-baseline`
+    /// share. Returns the records written.
+    pub fn record_results(
+        &self,
+        results: &[crate::coordinator::RunResult],
+        meta: &super::record::RunMeta,
+    ) -> Result<Vec<RunRecord>> {
+        let records: Vec<RunRecord> = results
+            .iter()
+            .map(|r| RunRecord::from_result(r, meta))
+            .collect();
+        self.append(&records)?;
+        Ok(records)
+    }
+
+    /// Load every record, in file (= chronological append) order.
+    pub fn load(&self) -> Result<Vec<RunRecord>> {
+        let text = std::fs::read_to_string(&self.path).with_context(|| {
+            format!(
+                "reading archive {} (record a run with `xbench run --record`?)",
+                self.path.display()
+            )
+        })?;
+        let mut records = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            records.push(
+                RunRecord::decode_line(line)
+                    .with_context(|| format!("{}:{}", self.path.display(), i + 1))?,
+            );
+        }
+        Ok(records)
+    }
+
+    /// Distinct run ids, in first-appearance (chronological) order —
+    /// one view over [`crate::store::query::run_summaries`] so listing
+    /// and selector resolution can never disagree.
+    pub fn run_order(records: &[RunRecord]) -> Vec<String> {
+        crate::store::query::run_summaries(records)
+            .into_iter()
+            .map(|s| s.run_id)
+            .collect()
+    }
+
+    /// Resolve a run selector against loaded records:
+    /// `latest`, `latest~N`, an exact run id, or a unique id prefix.
+    pub fn resolve_run(&self, records: &[RunRecord], selector: &str) -> Result<String> {
+        let order = Self::run_order(records);
+        if order.is_empty() {
+            bail!(
+                "archive {} has no runs (record one with `xbench run --record`)",
+                self.path.display()
+            );
+        }
+        if let Some(back) = selector.strip_prefix("latest") {
+            let n: usize = match back.strip_prefix('~') {
+                None if back.is_empty() => 0,
+                Some(d) => d
+                    .parse()
+                    .with_context(|| format!("bad run selector {selector:?}"))?,
+                _ => bail!("bad run selector {selector:?} (latest, latest~N, id, or id prefix)"),
+            };
+            if n >= order.len() {
+                bail!(
+                    "selector {selector:?} reaches past the archive ({} runs recorded)",
+                    order.len()
+                );
+            }
+            return Ok(order[order.len() - 1 - n].clone());
+        }
+        if order.iter().any(|id| id == selector) {
+            return Ok(selector.to_string());
+        }
+        let matches: Vec<&String> = order.iter().filter(|id| id.starts_with(selector)).collect();
+        match matches.len() {
+            1 => Ok(matches[0].clone()),
+            0 => bail!(
+                "no run matches {selector:?}; known runs:\n  {}",
+                order.join("\n  ")
+            ),
+            _ => bail!(
+                "run selector {selector:?} is ambiguous ({} matches); disambiguate:\n  {}",
+                matches.len(),
+                matches.iter().map(|s| s.as_str()).collect::<Vec<_>>().join("\n  ")
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::record::{RunMeta, RunRecord};
+
+    fn rec(run: &str, ts: u64, model: &str, secs: f64) -> RunRecord {
+        RunRecord {
+            run_id: run.into(),
+            timestamp: ts,
+            git_commit: "abc".into(),
+            host: "h".into(),
+            config_hash: "cfg".into(),
+            note: "".into(),
+            model: model.into(),
+            domain: "nlp".into(),
+            mode: "infer".into(),
+            compiler: "fused".into(),
+            batch: 4,
+            iter_secs: secs,
+            repeats_secs: vec![secs],
+            throughput: 4.0 / secs,
+            active: 0.6,
+            movement: 0.3,
+            idle: 0.1,
+            host_bytes: 100,
+            device_bytes: 200,
+        }
+    }
+
+    #[test]
+    fn append_reload_roundtrip_preserves_order() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let archive = Archive::new(dir.path().join("nested/runs.jsonl"));
+        assert!(!archive.exists());
+        archive
+            .append(&[rec("run-a", 100, "m1", 0.01), rec("run-a", 100, "m2", 0.02)])
+            .unwrap();
+        archive.append(&[rec("run-b", 200, "m1", 0.03)]).unwrap();
+        let records = archive.load().unwrap();
+        assert_eq!(records.len(), 3);
+        assert_eq!(records[0].model, "m1");
+        assert_eq!(records[2].run_id, "run-b");
+        assert_eq!(Archive::run_order(&records), vec!["run-a", "run-b"]);
+    }
+
+    #[test]
+    fn selectors_resolve() {
+        let records = vec![
+            rec("run-20260101-aa", 1, "m", 0.01),
+            rec("run-20260202-bb", 2, "m", 0.01),
+        ];
+        let dir = crate::util::TempDir::new().unwrap();
+        let a = Archive::new(dir.path().join("r.jsonl"));
+        assert_eq!(a.resolve_run(&records, "latest").unwrap(), "run-20260202-bb");
+        assert_eq!(a.resolve_run(&records, "latest~1").unwrap(), "run-20260101-aa");
+        assert!(a.resolve_run(&records, "latest~2").is_err());
+        assert_eq!(
+            a.resolve_run(&records, "run-20260101-aa").unwrap(),
+            "run-20260101-aa"
+        );
+        assert_eq!(a.resolve_run(&records, "run-202601").unwrap(), "run-20260101-aa");
+        let err = a.resolve_run(&records, "run-").unwrap_err();
+        assert!(format!("{err}").contains("ambiguous"), "{err}");
+        assert!(a.resolve_run(&records, "nope").is_err());
+        assert!(a.resolve_run(&[], "latest").is_err());
+    }
+
+    #[test]
+    fn corrupt_line_errors_with_line_number() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let path = dir.path().join("r.jsonl");
+        let archive = Archive::new(&path);
+        archive.append(&[rec("run-a", 1, "m", 0.01)]).unwrap();
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("{ not json\n");
+        std::fs::write(&path, text).unwrap();
+        let err = archive.load().unwrap_err();
+        assert!(format!("{err:#}").contains(":2"), "{err:#}");
+    }
+
+    #[test]
+    fn missing_archive_mentions_record_flag() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let archive = Archive::new(dir.path().join("none.jsonl"));
+        let err = archive.load().unwrap_err();
+        assert!(format!("{err:#}").contains("--record"), "{err:#}");
+    }
+
+    #[test]
+    fn meta_capture_roundtrips_through_archive() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let archive = Archive::new(dir.path().join("r.jsonl"));
+        let meta = RunMeta {
+            run_id: "run-x".into(),
+            timestamp: 42,
+            git_commit: "g".into(),
+            host: "h".into(),
+            config_hash: "c".into(),
+            note: "baseline".into(),
+        };
+        let mut r = rec("run-x", 42, "m", 0.01);
+        r.note = meta.note.clone();
+        archive.append(&[r.clone()]).unwrap();
+        assert_eq!(archive.load().unwrap()[0], r);
+    }
+}

@@ -1,0 +1,26 @@
+//! Persistent results archive: the durable, queryable memory of every
+//! benchmark run (paper §4.2's missing substrate).
+//!
+//! The paper's CI use case compares tonight's numbers against history,
+//! but a process-local [`crate::ci::BaselineStore`] forgets everything
+//! at exit. This module is the fix, in the mold of rebar's recorded
+//! measurements and bencher's result database:
+//!
+//! - [`record`]: one [`RunRecord`] per benchmark config per run —
+//!   the measured metrics stamped with run id, timestamp, git commit,
+//!   host, and config hash;
+//! - [`archive`]: an append-only JSONL file of records ([`Archive`]) —
+//!   `xbench run --record` appends, nothing ever rewrites;
+//! - [`query`]: filters (model/mode/compiler/batch/time-window/run) and
+//!   per-key aggregations (latest, median, series) over loaded records.
+//!
+//! The CLI's `cmp` / `rank` / `history` verbs and
+//! `BaselineStore::from_archive` are all views over this module.
+
+pub mod archive;
+pub mod query;
+pub mod record;
+
+pub use archive::Archive;
+pub use query::{latest_per_key, median_iter_per_key, run_summaries, series, Filter, RunSummary};
+pub use record::{bench_key_of, config_hash, fmt_utc, RunMeta, RunRecord};

@@ -1,0 +1,214 @@
+//! The query engine over loaded archive records: filters, per-key
+//! aggregation, run summaries, and per-key time series.
+
+use std::collections::BTreeMap;
+
+use crate::metrics;
+
+use super::record::RunRecord;
+
+/// A conjunctive record filter; `None`/empty fields match everything.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Filter {
+    pub run_id: Option<String>,
+    /// Explicit model names; empty = all.
+    pub models: Vec<String>,
+    pub mode: Option<String>,
+    pub compiler: Option<String>,
+    pub batch: Option<usize>,
+    /// Inclusive unix-seconds time window.
+    pub since: Option<u64>,
+    pub until: Option<u64>,
+}
+
+impl Filter {
+    pub fn for_run(run_id: impl Into<String>) -> Filter {
+        Filter { run_id: Some(run_id.into()), ..Default::default() }
+    }
+
+    pub fn matches(&self, r: &RunRecord) -> bool {
+        self.run_id.as_deref().map_or(true, |id| r.run_id == id)
+            && (self.models.is_empty() || self.models.iter().any(|m| m == &r.model))
+            && self.mode.as_deref().map_or(true, |m| r.mode == m)
+            && self.compiler.as_deref().map_or(true, |c| r.compiler == c)
+            && self.batch.map_or(true, |b| r.batch == b)
+            && self.since.map_or(true, |t| r.timestamp >= t)
+            && self.until.map_or(true, |t| r.timestamp <= t)
+    }
+
+    /// Matching records, preserving archive order.
+    pub fn apply<'a>(&self, records: &'a [RunRecord]) -> Vec<&'a RunRecord> {
+        records.iter().filter(|r| self.matches(r)).collect()
+    }
+}
+
+/// One run's identity line (for listings and `cmp` headers).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunSummary {
+    pub run_id: String,
+    pub timestamp: u64,
+    pub git_commit: String,
+    pub host: String,
+    pub note: String,
+    pub records: usize,
+}
+
+/// Summarize runs in first-appearance (chronological) order.
+pub fn run_summaries(records: &[RunRecord]) -> Vec<RunSummary> {
+    let mut order: Vec<RunSummary> = Vec::new();
+    // Index keyed by borrowed run ids keeps this O(n log runs) — an
+    // append-only nightly archive makes `records` grow without bound.
+    let mut index: BTreeMap<&str, usize> = BTreeMap::new();
+    for r in records {
+        match index.get(r.run_id.as_str()) {
+            Some(&i) => order[i].records += 1,
+            None => {
+                index.insert(r.run_id.as_str(), order.len());
+                order.push(RunSummary {
+                    run_id: r.run_id.clone(),
+                    timestamp: r.timestamp,
+                    git_commit: r.git_commit.clone(),
+                    host: r.host.clone(),
+                    note: r.note.clone(),
+                    records: 1,
+                });
+            }
+        }
+    }
+    order
+}
+
+/// Latest record per bench key (archive order breaks timestamp ties, so
+/// a re-measured config within one run resolves to its last record).
+pub fn latest_per_key<'a, I>(records: I) -> BTreeMap<String, &'a RunRecord>
+where
+    I: IntoIterator<Item = &'a RunRecord>,
+{
+    let mut map: BTreeMap<String, &'a RunRecord> = BTreeMap::new();
+    for r in records {
+        let key = r.bench_key();
+        let replace = map.get(&key).map_or(true, |prev| prev.timestamp <= r.timestamp);
+        if replace {
+            map.insert(key, r);
+        }
+    }
+    map
+}
+
+/// Median `iter_secs` per bench key across all matching records — the
+/// noise-robust per-key aggregate for cross-run trend analysis.
+pub fn median_iter_per_key<'a, I>(records: I) -> BTreeMap<String, f64>
+where
+    I: IntoIterator<Item = &'a RunRecord>,
+{
+    let mut samples: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    for r in records {
+        samples.entry(r.bench_key()).or_default().push(r.iter_secs);
+    }
+    samples
+        .into_iter()
+        .map(|(k, v)| (k, metrics::median(&v)))
+        .collect()
+}
+
+/// All records of one bench key, archive (chronological) order.
+pub fn series<'a>(records: &'a [RunRecord], bench_key: &str) -> Vec<&'a RunRecord> {
+    records.iter().filter(|r| r.bench_key() == bench_key).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(run: &str, ts: u64, model: &str, mode: &str, secs: f64) -> RunRecord {
+        RunRecord {
+            run_id: run.into(),
+            timestamp: ts,
+            git_commit: "abc".into(),
+            host: "h".into(),
+            config_hash: "cfg".into(),
+            note: "".into(),
+            model: model.into(),
+            domain: "nlp".into(),
+            mode: mode.into(),
+            compiler: "fused".into(),
+            batch: 4,
+            iter_secs: secs,
+            repeats_secs: vec![secs],
+            throughput: 4.0 / secs,
+            active: 0.6,
+            movement: 0.3,
+            idle: 0.1,
+            host_bytes: 100,
+            device_bytes: 200,
+        }
+    }
+
+    fn archive() -> Vec<RunRecord> {
+        vec![
+            rec("run-a", 100, "gpt", "infer", 0.010),
+            rec("run-a", 100, "gpt", "train", 0.050),
+            rec("run-a", 100, "dlrm", "infer", 0.020),
+            rec("run-b", 200, "gpt", "infer", 0.012),
+            rec("run-b", 200, "dlrm", "infer", 0.018),
+        ]
+    }
+
+    #[test]
+    fn filters_compose() {
+        let records = archive();
+        let f = Filter { models: vec!["gpt".into()], ..Default::default() };
+        assert_eq!(f.apply(&records).len(), 3);
+        let f = Filter {
+            models: vec!["gpt".into()],
+            mode: Some("infer".into()),
+            ..Default::default()
+        };
+        assert_eq!(f.apply(&records).len(), 2);
+        let f = Filter { since: Some(150), ..Default::default() };
+        assert_eq!(f.apply(&records).len(), 2);
+        let f = Filter { until: Some(150), ..Default::default() };
+        assert_eq!(f.apply(&records).len(), 3);
+        let f = Filter::for_run("run-b");
+        assert_eq!(f.apply(&records).len(), 2);
+        assert_eq!(Filter::default().apply(&records).len(), 5);
+        let f = Filter { batch: Some(8), ..Default::default() };
+        assert!(f.apply(&records).is_empty());
+    }
+
+    #[test]
+    fn run_summaries_count_in_order() {
+        let s = run_summaries(&archive());
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].run_id, "run-a");
+        assert_eq!(s[0].records, 3);
+        assert_eq!(s[1].records, 2);
+    }
+
+    #[test]
+    fn latest_per_key_prefers_newest() {
+        let records = archive();
+        let latest = latest_per_key(records.iter());
+        assert_eq!(latest.len(), 3);
+        assert_eq!(latest["gpt.infer.fused.b4"].iter_secs, 0.012);
+        assert_eq!(latest["gpt.train.fused.b4"].iter_secs, 0.050);
+        assert_eq!(latest["dlrm.infer.fused.b4"].run_id, "run-b");
+    }
+
+    #[test]
+    fn median_per_key_aggregates_across_runs() {
+        let mut records = archive();
+        records.push(rec("run-c", 300, "gpt", "infer", 0.020));
+        let med = median_iter_per_key(records.iter());
+        assert_eq!(med["gpt.infer.fused.b4"], 0.012);
+    }
+
+    #[test]
+    fn series_is_chronological() {
+        let records = archive();
+        let s = series(&records, "gpt.infer.fused.b4");
+        assert_eq!(s.len(), 2);
+        assert!(s[0].timestamp < s[1].timestamp);
+        assert!(series(&records, "nope").is_empty());
+    }
+}

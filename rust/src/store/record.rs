@@ -1,0 +1,366 @@
+//! [`RunRecord`]: one benchmark config's measured metrics in one run,
+//! stamped with enough provenance to be compared across months.
+
+use anyhow::{Context, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::RunResult;
+use crate::util::Json;
+
+/// The canonical benchmark-config key: `model.mode.compiler.bN`.
+///
+/// Single source of truth — [`RunResult::bench_key`],
+/// [`crate::ci::bench_key`], and the archive all format through here, so
+/// CI baselines and archive queries always join on the same strings.
+pub fn bench_key_of(model: &str, mode: &str, compiler: &str, batch: usize) -> String {
+    format!("{model}.{mode}.{compiler}.b{batch}")
+}
+
+/// Provenance shared by every record of one `xbench` invocation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunMeta {
+    /// Unique run id (`run-<utc-compact>-<hash>`), the unit `cmp`,
+    /// `rank`, and baseline derivation select on.
+    pub run_id: String,
+    /// Unix seconds at run start.
+    pub timestamp: u64,
+    /// Git commit the binary measured (env `XBENCH_GIT_COMMIT`, else
+    /// `git rev-parse --short HEAD`, else "unknown").
+    pub git_commit: String,
+    /// Hostname ("unknown" when undiscoverable).
+    pub host: String,
+    /// FNV-1a hash of the run configuration axes — records are only
+    /// comparable when their config hashes agree.
+    pub config_hash: String,
+    /// Free-form label ("", "baseline", "nightly", ...).
+    pub note: String,
+}
+
+impl RunMeta {
+    /// Capture provenance for a run starting now.
+    pub fn capture(cfg: &RunConfig, note: &str) -> RunMeta {
+        let timestamp = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.subsec_nanos() as u64)
+            .unwrap_or(0);
+        let config_hash = config_hash(cfg);
+        let uniq = fnv1a(
+            format!("{timestamp}.{nanos}.{}.{config_hash}", std::process::id()).as_bytes(),
+        );
+        RunMeta {
+            run_id: format!("run-{}-{:08x}", compact_utc(timestamp), uniq as u32),
+            timestamp,
+            git_commit: detect_git_commit(),
+            host: detect_host(),
+            config_hash,
+            note: note.to_string(),
+        }
+    }
+}
+
+/// Hash the configuration axes that make two measurements comparable.
+pub fn config_hash(cfg: &RunConfig) -> String {
+    let canon = format!(
+        "mode={};compiler={};precision={:?};batch={:?};iterations={};repeats={};warmup={}",
+        cfg.mode.as_str(),
+        cfg.compiler.as_str(),
+        cfg.precision,
+        cfg.batch,
+        cfg.iterations,
+        cfg.repeats,
+        cfg.warmup,
+    );
+    format!("{:016x}", fnv1a(canon.as_bytes()))
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3); // FNV-64 prime
+    }
+    h
+}
+
+fn detect_git_commit() -> String {
+    if let Ok(c) = std::env::var("XBENCH_GIT_COMMIT") {
+        if !c.is_empty() {
+            return c;
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+fn detect_host() -> String {
+    if let Ok(h) = std::env::var("HOSTNAME") {
+        if !h.is_empty() {
+            return h;
+        }
+    }
+    std::fs::read_to_string("/etc/hostname")
+        .map(|s| s.trim().to_string())
+        .ok()
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// One benchmark config's metrics in one run — the archive's row type.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunRecord {
+    pub run_id: String,
+    pub timestamp: u64,
+    pub git_commit: String,
+    pub host: String,
+    pub config_hash: String,
+    pub note: String,
+    pub model: String,
+    pub domain: String,
+    /// "infer" | "train".
+    pub mode: String,
+    /// "fused" | "eager".
+    pub compiler: String,
+    pub batch: usize,
+    /// Median-run per-iteration wall seconds (the gated metric).
+    pub iter_secs: f64,
+    /// Per-repeat seconds (noise/CV analysis across history).
+    pub repeats_secs: Vec<f64>,
+    pub throughput: f64,
+    /// Fig 1/2 breakdown fractions of the median run.
+    pub active: f64,
+    pub movement: f64,
+    pub idle: f64,
+    /// §4.2.1 memory gates.
+    pub host_bytes: usize,
+    pub device_bytes: usize,
+}
+
+impl RunRecord {
+    /// Stamp a runner result with run provenance.
+    pub fn from_result(r: &RunResult, meta: &RunMeta) -> RunRecord {
+        RunRecord {
+            run_id: meta.run_id.clone(),
+            timestamp: meta.timestamp,
+            git_commit: meta.git_commit.clone(),
+            host: meta.host.clone(),
+            config_hash: meta.config_hash.clone(),
+            note: meta.note.clone(),
+            model: r.model.clone(),
+            domain: r.domain.clone(),
+            mode: r.mode.as_str().to_string(),
+            compiler: r.compiler.as_str().to_string(),
+            batch: r.batch,
+            iter_secs: r.iter_secs,
+            repeats_secs: r.repeats_secs.clone(),
+            throughput: r.throughput,
+            active: r.breakdown.active,
+            movement: r.breakdown.movement,
+            idle: r.breakdown.idle,
+            host_bytes: r.memory.host_peak,
+            device_bytes: r.memory.device_total,
+        }
+    }
+
+    pub fn bench_key(&self) -> String {
+        bench_key_of(&self.model, &self.mode, &self.compiler, self.batch)
+    }
+
+    /// Encode as a JSON object (one archive line, compact).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("run_id", Json::str(&self.run_id)),
+            ("ts", Json::num(self.timestamp as f64)),
+            ("git", Json::str(&self.git_commit)),
+            ("host", Json::str(&self.host)),
+            ("cfg", Json::str(&self.config_hash)),
+            ("note", Json::str(&self.note)),
+            ("model", Json::str(&self.model)),
+            ("domain", Json::str(&self.domain)),
+            ("mode", Json::str(&self.mode)),
+            ("compiler", Json::str(&self.compiler)),
+            ("batch", Json::num(self.batch as f64)),
+            ("iter_secs", Json::num(self.iter_secs)),
+            (
+                "repeats_secs",
+                Json::Arr(self.repeats_secs.iter().map(|&s| Json::num(s)).collect()),
+            ),
+            ("throughput", Json::num(self.throughput)),
+            ("active", Json::num(self.active)),
+            ("movement", Json::num(self.movement)),
+            ("idle", Json::num(self.idle)),
+            ("host_bytes", Json::num(self.host_bytes as f64)),
+            ("device_bytes", Json::num(self.device_bytes as f64)),
+        ])
+    }
+
+    /// Decode from a parsed JSON object (unknown keys are ignored, so
+    /// the schema can grow without invalidating old archives).
+    pub fn decode(v: &Json) -> Result<RunRecord> {
+        Ok(RunRecord {
+            run_id: v.req_str("run_id")?.to_string(),
+            timestamp: v.req_usize("ts")? as u64,
+            git_commit: v.req_str("git")?.to_string(),
+            host: v.req_str("host")?.to_string(),
+            config_hash: v.req_str("cfg")?.to_string(),
+            note: v.get("note").and_then(|n| n.as_str()).unwrap_or("").to_string(),
+            model: v.req_str("model")?.to_string(),
+            domain: v.req_str("domain")?.to_string(),
+            mode: v.req_str("mode")?.to_string(),
+            compiler: v.req_str("compiler")?.to_string(),
+            batch: v.req_usize("batch")?,
+            iter_secs: v.req_f64("iter_secs")?,
+            repeats_secs: v
+                .req_array("repeats_secs")?
+                .iter()
+                .map(|s| s.as_f64().context("repeats_secs element"))
+                .collect::<Result<_>>()?,
+            throughput: v.req_f64("throughput")?,
+            active: v.req_f64("active")?,
+            movement: v.req_f64("movement")?,
+            idle: v.req_f64("idle")?,
+            host_bytes: v.req_usize("host_bytes")?,
+            device_bytes: v.req_usize("device_bytes")?,
+        })
+    }
+
+    /// Decode one archive line.
+    pub fn decode_line(line: &str) -> Result<RunRecord> {
+        Self::decode(&crate::util::json::parse(line)?)
+    }
+}
+
+// -- UTC formatting (no chrono on this testbed) ------------------------------
+
+/// `"YYYY-MM-DD HH:MM:SS"` for a unix timestamp (UTC).
+pub fn fmt_utc(unix_secs: u64) -> String {
+    let (y, m, d, hh, mm, ss) = civil_utc(unix_secs);
+    format!("{y:04}-{m:02}-{d:02} {hh:02}:{mm:02}:{ss:02}")
+}
+
+fn compact_utc(unix_secs: u64) -> String {
+    let (y, m, d, hh, mm, ss) = civil_utc(unix_secs);
+    format!("{y:04}{m:02}{d:02}T{hh:02}{mm:02}{ss:02}")
+}
+
+/// Days-to-civil conversion (Howard Hinnant's algorithm).
+fn civil_utc(unix_secs: u64) -> (i64, u32, u32, u32, u32, u32) {
+    let days = (unix_secs / 86_400) as i64;
+    let rem = unix_secs % 86_400;
+    let z = days + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = (doy - (153 * mp + 2) / 5 + 1) as u32;
+    let m = (if mp < 10 { mp + 3 } else { mp - 9 }) as u32;
+    let y = if m <= 2 { y + 1 } else { y };
+    (
+        y,
+        m,
+        d,
+        (rem / 3600) as u32,
+        (rem % 3600 / 60) as u32,
+        (rem % 60) as u32,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Compiler, Mode};
+    use crate::profiler::{Breakdown, MemoryReport};
+
+    fn sample_result() -> RunResult {
+        RunResult {
+            model: "gpt_tiny".into(),
+            domain: "nlp".into(),
+            mode: Mode::Infer,
+            compiler: Compiler::Fused,
+            batch: 4,
+            iter_secs: 0.01,
+            repeats_secs: vec![0.011, 0.01, 0.012],
+            breakdown: Breakdown { active: 0.7, movement: 0.2, idle: 0.1, total_secs: 0.01 },
+            memory: MemoryReport { host_peak: 1000, device_total: 2000 },
+            throughput: 400.0,
+        }
+    }
+
+    fn sample_meta() -> RunMeta {
+        RunMeta {
+            run_id: "run-20260730T120000-00000001".into(),
+            timestamp: 1_785_000_000,
+            git_commit: "abc1234".into(),
+            host: "ci-host".into(),
+            config_hash: "deadbeefdeadbeef".into(),
+            note: "".into(),
+        }
+    }
+
+    #[test]
+    fn bench_key_format_is_shared() {
+        let r = RunRecord::from_result(&sample_result(), &sample_meta());
+        assert_eq!(r.bench_key(), "gpt_tiny.infer.fused.b4");
+        assert_eq!(r.bench_key(), sample_result().bench_key());
+        assert_eq!(r.bench_key(), crate::ci::bench_key(&sample_result()));
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let r = RunRecord::from_result(&sample_result(), &sample_meta());
+        let line = r.to_json().to_json();
+        assert!(!line.contains('\n'), "archive lines must be single-line");
+        let back = RunRecord::decode_line(&line).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn decode_ignores_unknown_keys_and_missing_note() {
+        let r = RunRecord::from_result(&sample_result(), &sample_meta());
+        let mut line = r.to_json().to_json();
+        line.insert_str(1, "\"future_field\": [1, 2, 3],");
+        let back = RunRecord::decode_line(&line).unwrap();
+        assert_eq!(back.model, "gpt_tiny");
+        // A line without "note" (older schema) still decodes.
+        let stripped = line.replace("\"note\":\"\",", "");
+        assert_eq!(RunRecord::decode_line(&stripped).unwrap().note, "");
+    }
+
+    #[test]
+    fn config_hash_tracks_axes() {
+        let a = config_hash(&RunConfig::default());
+        let b = config_hash(&RunConfig { repeats: 3, ..Default::default() });
+        assert_ne!(a, b);
+        assert_eq!(a, config_hash(&RunConfig::default()));
+    }
+
+    #[test]
+    fn utc_formatting() {
+        assert_eq!(fmt_utc(0), "1970-01-01 00:00:00");
+        // 2023-01-02 03:04:05 UTC.
+        assert_eq!(fmt_utc(1_672_628_645), "2023-01-02 03:04:05");
+        assert_eq!(compact_utc(1_672_628_645), "20230102T030405");
+    }
+
+    #[test]
+    fn capture_produces_unique_ids() {
+        let cfg = RunConfig::default();
+        let a = RunMeta::capture(&cfg, "x");
+        let b = RunMeta::capture(&cfg, "x");
+        assert!(a.run_id.starts_with("run-"));
+        assert_eq!(a.note, "x");
+        assert_eq!(a.config_hash, b.config_hash);
+    }
+}

@@ -4,6 +4,8 @@
 //! §2 selection machinery: filter by name, domain, or tag; enumerate the
 //! benchmark *configs* (model × mode) a run expands to.
 
+pub mod synth;
+
 use anyhow::Result;
 use std::collections::BTreeMap;
 

@@ -1,0 +1,572 @@
+//! Synthetic artifact generation: a tiny, fully offline stand-in for
+//! the python AOT pipeline (`compile/aot.py`).
+//!
+//! Emits a valid `manifest.json`, parameter dumps, and HLO-text
+//! artifacts for a small model zoo — enough to exercise every CLI verb
+//! (`run`, `breakdown`, `compare-compiler`, `sweep`, `optim`, `ci`,
+//! `train`, and the archive workflow) on the simulator backend with no
+//! Python or JAX anywhere in the loop. The zoo includes the models the
+//! CI subset and the §4.1 case studies reference by name.
+//!
+//! Everything is deterministic in the seed: parameter dumps come from
+//! the crate PRNG, artifacts are pure functions of the model specs.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+use crate::util::{Json, Rng};
+
+/// What the generator wrote.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SynthSummary {
+    pub models: usize,
+    pub files: usize,
+}
+
+/// Runtime input dtype of a synthetic model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum InKind {
+    /// f32, standard-normal synthesis.
+    F32,
+    /// i32 ids in `[0, bound)`.
+    I32 { bound: i64 },
+}
+
+/// One synthetic zoo model: a dense tanh-MLP whose weights chain from
+/// `in_feat` to the last weight's output width.
+struct Spec {
+    name: &'static str,
+    domain: &'static str,
+    task: &'static str,
+    default_batch: usize,
+    batches: &'static [usize],
+    /// Weight shapes, in chain order: `[in_feat, h1], [h1, h2], ...`
+    weights: &'static [&'static [usize]],
+    in_feat: usize,
+    input: InKind,
+    train_batch: Option<usize>,
+    /// Lower the two-stage eager chain (autoencoder models).
+    stages: bool,
+    tags: &'static [&'static str],
+}
+
+fn zoo() -> Vec<Spec> {
+    vec![
+        Spec {
+            name: "gpt_tiny",
+            domain: "nlp",
+            task: "language_modeling",
+            default_batch: 4,
+            batches: &[1, 4],
+            weights: &[&[8, 16], &[16, 32]],
+            in_feat: 8,
+            input: InKind::I32 { bound: 32 },
+            train_batch: Some(4),
+            stages: false,
+            tags: &[],
+        },
+        Spec {
+            name: "gpt_tiny_large",
+            domain: "nlp",
+            task: "language_modeling",
+            default_batch: 4,
+            batches: &[4],
+            weights: &[&[16, 128], &[128, 64]],
+            in_feat: 16,
+            input: InKind::I32 { bound: 128 },
+            train_batch: None,
+            stages: false,
+            tags: &[],
+        },
+        Spec {
+            name: "mobilenet_tiny",
+            domain: "computer_vision",
+            task: "classification",
+            default_batch: 4,
+            batches: &[1, 2, 4, 8],
+            weights: &[
+                &[8, 8],
+                &[8, 8],
+                &[8, 8],
+                &[8, 8],
+                &[8, 8],
+                &[8, 8],
+                &[8, 8],
+                &[8, 10],
+            ],
+            in_feat: 8,
+            input: InKind::F32,
+            train_batch: Some(4),
+            stages: false,
+            tags: &["sweep"],
+        },
+        Spec {
+            name: "dlrm_tiny",
+            domain: "recommendation",
+            task: "ctr_prediction",
+            default_batch: 4,
+            batches: &[2, 4],
+            weights: &[&[8, 4], &[4, 1]],
+            in_feat: 8,
+            input: InKind::I32 { bound: 64 },
+            train_batch: None,
+            stages: false,
+            tags: &[],
+        },
+        Spec {
+            name: "deeprec_ae",
+            domain: "recommendation",
+            task: "autoencoder",
+            default_batch: 4,
+            batches: &[1, 2, 4, 8],
+            weights: &[&[16, 4], &[4, 16]],
+            in_feat: 16,
+            input: InKind::F32,
+            train_batch: None,
+            stages: true,
+            tags: &["sweep"],
+        },
+        Spec {
+            name: "deeprec_ae_quant",
+            domain: "recommendation",
+            task: "autoencoder",
+            default_batch: 4,
+            batches: &[4],
+            weights: &[&[16, 4], &[4, 16]],
+            in_feat: 16,
+            input: InKind::F32,
+            train_batch: None,
+            stages: true,
+            tags: &["quant"],
+        },
+        Spec {
+            name: "unet_tiny",
+            domain: "computer_vision",
+            task: "segmentation",
+            default_batch: 2,
+            batches: &[2],
+            weights: &[&[16, 16]],
+            in_feat: 16,
+            input: InKind::F32,
+            train_batch: None,
+            stages: false,
+            tags: &[],
+        },
+    ]
+}
+
+/// Generate the synthetic artifact set into `dir`.
+pub fn write_synthetic_artifacts(dir: &Path, seed: u64, force: bool) -> Result<SynthSummary> {
+    let manifest_path = dir.join("manifest.json");
+    if manifest_path.exists() && !force {
+        bail!(
+            "{} already exists (pass --force to regenerate)",
+            manifest_path.display()
+        );
+    }
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+
+    let mut files = 0usize;
+    let mut models_json = Vec::new();
+    for spec in zoo() {
+        models_json.push(emit_model(dir, &spec, seed, &mut files)?);
+    }
+    let manifest = Json::obj(vec![
+        ("version", Json::num(1.0)),
+        ("param_seed", Json::num(seed as f64)),
+        ("models", Json::Arr(models_json)),
+    ]);
+    std::fs::write(&manifest_path, manifest.to_json_pretty())
+        .with_context(|| format!("writing {}", manifest_path.display()))?;
+    files += 1;
+    Ok(SynthSummary { models: zoo().len(), files })
+}
+
+fn emit_model(dir: &Path, spec: &Spec, seed: u64, files: &mut usize) -> Result<Json> {
+    // Parameter dumps.
+    let mut params_json = Vec::new();
+    for (i, dims) in spec.weights.iter().enumerate() {
+        let rel = format!("params/{}/p{i:03}.bin", spec.name);
+        let path = dir.join(&rel);
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let n: usize = dims.iter().product();
+        let mut rng = Rng::seed_from_name(&format!("{}/{rel}", spec.name), seed);
+        let mut data = vec![0f32; n];
+        rng.fill_normal_f32(&mut data);
+        let bytes: Vec<u8> = data.iter().flat_map(|v| (v * 0.05).to_le_bytes()).collect();
+        std::fs::write(&path, &bytes).with_context(|| format!("writing {}", path.display()))?;
+        *files += 1;
+        params_json.push(Json::obj(vec![
+            ("file", Json::str(rel)),
+            ("shape", dims_json(dims)),
+            ("dtype", Json::str("f32")),
+        ]));
+    }
+
+    // Fused inference artifacts, one per batch.
+    let mut infer_map = std::collections::BTreeMap::new();
+    for &b in spec.batches {
+        let rel = format!("{}.infer.b{b}.hlo.txt", spec.name);
+        std::fs::write(dir.join(&rel), infer_hlo(spec, b))?;
+        *files += 1;
+        infer_map.insert(
+            b.to_string(),
+            Json::obj(vec![
+                ("artifact", Json::str(rel)),
+                ("inputs", Json::Arr(vec![input_spec_json(spec, b)])),
+            ]),
+        );
+    }
+
+    // Fused train-step artifact.
+    let train_json = match spec.train_batch {
+        Some(b) => {
+            let rel = format!("{}.train.b{b}.hlo.txt", spec.name);
+            std::fs::write(dir.join(&rel), train_hlo(spec, b))?;
+            *files += 1;
+            Json::obj(vec![
+                ("artifact", Json::str(rel)),
+                ("batch", Json::num(b as f64)),
+                ("inputs", Json::Arr(vec![input_spec_json(spec, b)])),
+                ("n_params", Json::num(spec.weights.len() as f64)),
+            ])
+        }
+        None => Json::Null,
+    };
+
+    // The eager stage chain (one stage per weight of the chain).
+    let stages_json = if spec.stages {
+        let b = spec.default_batch;
+        let mut list = Vec::new();
+        let mut in_feat = spec.in_feat;
+        for (i, dims) in spec.weights.iter().enumerate() {
+            let rel = format!("{}.stage{i:02}.b{b}.hlo.txt", spec.name);
+            std::fs::write(dir.join(&rel), stage_hlo(spec, i, b, in_feat))?;
+            *files += 1;
+            list.push(Json::obj(vec![
+                ("name", Json::str(format!("{i:02}_dense"))),
+                ("artifact", Json::str(rel)),
+                ("param_idx", Json::Arr(vec![Json::num(i as f64)])),
+                (
+                    "acts_in",
+                    Json::Arr(vec![Json::obj(vec![
+                        ("shape", dims_json(&[b, in_feat])),
+                        ("dtype", Json::str("f32")),
+                    ])]),
+                ),
+                (
+                    "act_out",
+                    Json::obj(vec![
+                        ("shape", dims_json(&[b, dims[1]])),
+                        ("dtype", Json::str("f32")),
+                    ]),
+                ),
+            ]));
+            in_feat = dims[1];
+        }
+        Json::obj(vec![
+            ("batch", Json::num(b as f64)),
+            ("list", Json::Arr(list)),
+        ])
+    } else {
+        Json::Null
+    };
+
+    Ok(Json::obj(vec![
+        ("name", Json::str(spec.name)),
+        ("domain", Json::str(spec.domain)),
+        ("task", Json::str(spec.task)),
+        ("default_batch", Json::num(spec.default_batch as f64)),
+        ("lr", Json::num(0.01)),
+        (
+            "tags",
+            Json::Arr(spec.tags.iter().map(|t| Json::str(*t)).collect()),
+        ),
+        ("params", Json::Arr(params_json)),
+        (
+            "infer",
+            Json::Obj(infer_map.into_iter().collect()),
+        ),
+        ("train", train_json),
+        ("stages", stages_json),
+    ]))
+}
+
+fn input_spec_json(spec: &Spec, batch: usize) -> Json {
+    let mut pairs = vec![
+        ("name", Json::str("x")),
+        ("shape", dims_json(&[batch, spec.in_feat])),
+    ];
+    match spec.input {
+        InKind::F32 => {
+            pairs.push(("dtype", Json::str("f32")));
+            pairs.push(("kind", Json::str("normal")));
+        }
+        InKind::I32 { bound } => {
+            pairs.push(("dtype", Json::str("i32")));
+            pairs.push(("kind", Json::str("randint")));
+            pairs.push(("bound", Json::num(bound as f64)));
+        }
+    }
+    Json::obj(pairs)
+}
+
+fn dims_json(dims: &[usize]) -> Json {
+    Json::Arr(dims.iter().map(|&d| Json::num(d as f64)).collect())
+}
+
+// -- HLO-text emission -------------------------------------------------------
+
+fn dims_str(dims: &[usize]) -> String {
+    dims.iter()
+        .map(|d| d.to_string())
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// Incremental instruction writer with XLA-style `name.N` ids.
+struct Emit {
+    n: usize,
+    out: String,
+}
+
+impl Emit {
+    fn new() -> Emit {
+        Emit { n: 0, out: String::new() }
+    }
+
+    fn id(&mut self, prefix: &str) -> String {
+        self.n += 1;
+        format!("{prefix}.{}", self.n)
+    }
+
+    fn line(&mut self, text: String) {
+        self.out.push_str("  ");
+        self.out.push_str(&text);
+        self.out.push('\n');
+    }
+}
+
+/// Declare the entry parameters (weights, then the runtime input) and
+/// return their instruction names + the input's (possibly converted)
+/// f32 activation name.
+fn emit_entry_params(e: &mut Emit, spec: &Spec, batch: usize) -> (Vec<String>, String) {
+    let mut weight_names = Vec::new();
+    for (i, dims) in spec.weights.iter().enumerate() {
+        let name = e.id("w");
+        e.line(format!("{name} = f32[{}] parameter({i})", dims_str(dims)));
+        weight_names.push(name);
+    }
+    let x = e.id("x");
+    let in_dims = dims_str(&[batch, spec.in_feat]);
+    let act = match spec.input {
+        InKind::F32 => {
+            e.line(format!("{x} = f32[{in_dims}] parameter({})", spec.weights.len()));
+            x
+        }
+        InKind::I32 { .. } => {
+            e.line(format!("{x} = s32[{in_dims}] parameter({})", spec.weights.len()));
+            let xf = e.id("convert");
+            e.line(format!("{xf} = f32[{in_dims}] convert({x})"));
+            xf
+        }
+    };
+    (weight_names, act)
+}
+
+/// Chain `act` through every weight: dot + tanh per layer. Returns the
+/// final activation's name and feature width.
+fn emit_chain(
+    e: &mut Emit,
+    spec: &Spec,
+    batch: usize,
+    weight_names: &[String],
+    mut act: String,
+) -> (String, usize) {
+    let mut feat = spec.in_feat;
+    for (w, dims) in weight_names.iter().zip(spec.weights) {
+        debug_assert_eq!(dims[0], feat, "weight chain mismatch in synth zoo");
+        let out = dims_str(&[batch, dims[1]]);
+        let d = e.id("dot");
+        e.line(format!(
+            "{d} = f32[{out}] dot({act}, {w}), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}"
+        ));
+        let t = e.id("tanh");
+        e.line(format!("{t} = f32[{out}] tanh({d})"));
+        act = t;
+        feat = dims[1];
+    }
+    (act, feat)
+}
+
+/// Fused inference artifact: weights + input → (logits).
+fn infer_hlo(spec: &Spec, batch: usize) -> String {
+    let mut e = Emit::new();
+    let (weights, act) = emit_entry_params(&mut e, spec, batch);
+    let (out, feat) = emit_chain(&mut e, spec, batch, &weights, act);
+    let root = e.id("tuple");
+    let out_shape = dims_str(&[batch, feat]);
+    e.line(format!("ROOT {root} = (f32[{out_shape}]) tuple({out})"));
+    format!(
+        "HloModule {}_infer_b{batch}\n\nENTRY main.0 {{\n{}}}\n",
+        spec.name, e.out
+    )
+}
+
+/// Fused train-step artifact: weights + batch → (weights', loss).
+fn train_hlo(spec: &Spec, batch: usize) -> String {
+    let mut e = Emit::new();
+    let (weights, act) = emit_entry_params(&mut e, spec, batch);
+    let (out, feat) = emit_chain(&mut e, spec, batch, &weights, act);
+    let out_shape = dims_str(&[batch, feat]);
+    let sq = e.id("sq");
+    e.line(format!("{sq} = f32[{out_shape}] multiply({out}, {out})"));
+    let zero = e.id("zero");
+    e.line(format!("{zero} = f32[] constant(0)"));
+    let loss = e.id("loss");
+    e.line(format!(
+        "{loss} = f32[] reduce({sq}, {zero}), dimensions={{0,1}}, to_apply=add_f32.0"
+    ));
+    let lr = e.id("lr");
+    e.line(format!("{lr} = f32[] constant(0.001)"));
+    let mut new_weights = Vec::new();
+    for (w, dims) in weights.iter().zip(spec.weights) {
+        let shape = dims_str(dims);
+        let b = e.id("lrb");
+        e.line(format!("{b} = f32[{shape}] broadcast({lr}), dimensions={{}}"));
+        let g = e.id("g");
+        e.line(format!("{g} = f32[{shape}] multiply({w}, {b})"));
+        let nw = e.id("nw");
+        e.line(format!("{nw} = f32[{shape}] subtract({w}, {g})"));
+        new_weights.push(nw);
+    }
+    let root = e.id("tuple");
+    let mut tuple_shapes: Vec<String> = spec
+        .weights
+        .iter()
+        .map(|d| format!("f32[{}]", dims_str(d)))
+        .collect();
+    tuple_shapes.push("f32[]".to_string());
+    let mut tuple_args = new_weights;
+    tuple_args.push(loss);
+    e.line(format!(
+        "ROOT {root} = ({}) tuple({})",
+        tuple_shapes.join(", "),
+        tuple_args.join(", ")
+    ));
+    format!(
+        "HloModule {}_train_b{batch}\n\n\
+         add_f32.0 {{\n  a.0 = f32[] parameter(0)\n  b.0 = f32[] parameter(1)\n  ROOT r.0 = f32[] add(a.0, b.0)\n}}\n\n\
+         ENTRY main.0 {{\n{}}}\n",
+        spec.name, e.out
+    )
+}
+
+/// One eager stage: (stage weight, activation in) → (activation out).
+fn stage_hlo(spec: &Spec, stage: usize, batch: usize, in_feat: usize) -> String {
+    let dims = spec.weights[stage];
+    let mut e = Emit::new();
+    let w = e.id("w");
+    e.line(format!("{w} = f32[{}] parameter(0)", dims_str(dims)));
+    let a = e.id("act");
+    e.line(format!("{a} = f32[{}] parameter(1)", dims_str(&[batch, in_feat])));
+    let out_shape = dims_str(&[batch, dims[1]]);
+    let d = e.id("dot");
+    e.line(format!(
+        "{d} = f32[{out_shape}] dot({a}, {w}), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}"
+    ));
+    let t = e.id("tanh");
+    e.line(format!("{t} = f32[{out_shape}] tanh({d})"));
+    let root = e.id("tuple");
+    e.line(format!("ROOT {root} = (f32[{out_shape}]) tuple({t})"));
+    format!(
+        "HloModule {}_stage{stage}_b{batch}\n\nENTRY main.0 {{\n{}}}\n",
+        spec.name, e.out
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    #[test]
+    fn generated_set_decodes_and_parses_everywhere() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let summary = write_synthetic_artifacts(dir.path(), 7, false).unwrap();
+        assert_eq!(summary.models, 7);
+        let manifest = Manifest::load(dir.path()).unwrap();
+        assert_eq!(manifest.models.len(), 7);
+        for m in &manifest.models {
+            // Every artifact parses under the coordinator's HLO parser
+            // and its cost analysis is sane.
+            for entry in m.infer.values() {
+                let cost = crate::hlo::analyze_file(&dir.path().join(&entry.artifact)).unwrap();
+                assert!(cost.flops.total() > 0.0, "{}", entry.artifact);
+            }
+            if let Some(tr) = &m.train {
+                crate::hlo::analyze_file(&dir.path().join(&tr.artifact)).unwrap();
+            }
+            if let Some(st) = &m.stages {
+                for s in &st.list {
+                    crate::hlo::analyze_file(&dir.path().join(&s.artifact)).unwrap();
+                }
+                assert!(m.infer_at(st.batch).is_some());
+            }
+            // Parameter dumps exist with the declared sizes.
+            for p in &m.params {
+                let bytes = std::fs::read(dir.path().join(&p.file)).unwrap();
+                assert_eq!(bytes.len(), p.byte_size());
+            }
+            assert!(m.infer_at(m.default_batch).is_some(), "{}", m.name);
+        }
+        // The CI subset and case-study models are present.
+        for name in [
+            "gpt_tiny",
+            "gpt_tiny_large",
+            "mobilenet_tiny",
+            "dlrm_tiny",
+            "deeprec_ae",
+            "deeprec_ae_quant",
+        ] {
+            assert!(manifest.model(name).is_ok(), "{name}");
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_guarded() {
+        let a = crate::util::TempDir::new().unwrap();
+        let b = crate::util::TempDir::new().unwrap();
+        write_synthetic_artifacts(a.path(), 11, false).unwrap();
+        write_synthetic_artifacts(b.path(), 11, false).unwrap();
+        let ma = std::fs::read_to_string(a.path().join("manifest.json")).unwrap();
+        let mb = std::fs::read_to_string(b.path().join("manifest.json")).unwrap();
+        assert_eq!(ma, mb);
+        let pa = std::fs::read(a.path().join("params/gpt_tiny/p000.bin")).unwrap();
+        let pb = std::fs::read(b.path().join("params/gpt_tiny/p000.bin")).unwrap();
+        assert_eq!(pa, pb);
+        // Refuses to clobber without force.
+        assert!(write_synthetic_artifacts(a.path(), 11, false).is_err());
+        write_synthetic_artifacts(a.path(), 11, true).unwrap();
+    }
+
+    #[test]
+    fn artifacts_execute_on_the_sim_device() {
+        let dir = crate::util::TempDir::new().unwrap();
+        write_synthetic_artifacts(dir.path(), 3, false).unwrap();
+        let device = crate::runtime::Device::cpu().unwrap();
+        let manifest = Manifest::load(dir.path()).unwrap();
+        let m = manifest.model("deeprec_ae").unwrap();
+        let infer = m.infer_at(m.default_batch).unwrap();
+        let exe = device.compile_hlo_file(&dir.path().join(&infer.artifact)).unwrap();
+        let params = crate::runtime::params::load_params(dir.path(), m).unwrap();
+        let inputs = crate::runtime::inputs::synth_inputs(&infer.inputs, 0).unwrap();
+        let lits: Vec<xla::Literal> = params.into_iter().chain(inputs).collect();
+        let out = exe.run_literals(&lits).unwrap();
+        let leaves = crate::runtime::fetch_tuple(&out.value).unwrap().value;
+        assert_eq!(leaves.len(), 1);
+        assert_eq!(leaves[0].to_vec::<f32>().unwrap().len(), 4 * 16);
+    }
+}

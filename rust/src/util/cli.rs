@@ -1,8 +1,10 @@
 //! Minimal CLI argument parser (substrate — no clap on this testbed).
 //!
-//! Grammar: `xbench <subcommand> [--flag [value...]]...`. Flags may take
-//! zero values (boolean), one value, or several (`--models a b c` — all
-//! tokens up to the next `--flag`). Unknown flags are rejected by
+//! Grammar: `xbench <subcommand> [positional...] [--flag [value...]]...`.
+//! Tokens between the subcommand and the first flag are positionals
+//! (`xbench cmp run-a run-b`); flags may take zero values (boolean), one
+//! value, or several (`--models a b c` — all tokens up to the next
+//! `--flag`). Unknown flags and unconsumed positionals are rejected by
 //! [`Args::finish`] so typos fail loudly.
 
 use anyhow::{bail, Result};
@@ -12,6 +14,8 @@ use std::collections::{BTreeMap, BTreeSet};
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     pub subcommand: String,
+    positionals: Vec<String>,
+    next_positional: usize,
     flags: BTreeMap<String, Vec<String>>,
     consumed: BTreeSet<String>,
 }
@@ -24,6 +28,7 @@ impl Args {
             Some(s) if !s.starts_with("--") => it.next().unwrap(),
             _ => String::new(),
         };
+        let mut positionals: Vec<String> = Vec::new();
         let mut flags: BTreeMap<String, Vec<String>> = BTreeMap::new();
         let mut current: Option<String> = None;
         for tok in it {
@@ -39,11 +44,35 @@ impl Args {
             } else {
                 match &current {
                     Some(flag) => flags.get_mut(flag).unwrap().push(tok),
-                    None => bail!("unexpected positional argument {tok:?}"),
+                    None => positionals.push(tok),
                 }
             }
         }
-        Ok(Args { subcommand, flags, consumed: BTreeSet::new() })
+        Ok(Args {
+            subcommand,
+            positionals,
+            next_positional: 0,
+            flags,
+            consumed: BTreeSet::new(),
+        })
+    }
+
+    /// Consume the next required positional argument (`name` is for the
+    /// error message only).
+    pub fn positional(&mut self, name: &str) -> Result<String> {
+        match self.positional_opt() {
+            Some(v) => Ok(v),
+            None => bail!("missing required argument <{name}>"),
+        }
+    }
+
+    /// Consume the next positional argument, if any.
+    pub fn positional_opt(&mut self) -> Option<String> {
+        let v = self.positionals.get(self.next_positional).cloned();
+        if v.is_some() {
+            self.next_positional += 1;
+        }
+        v
     }
 
     pub fn has(&mut self, name: &str) -> bool {
@@ -93,12 +122,15 @@ impl Args {
         }
     }
 
-    /// Error on any flag nobody consumed (typo protection).
+    /// Error on any flag or positional nobody consumed (typo protection).
     pub fn finish(&self) -> Result<()> {
         for flag in self.flags.keys() {
             if !self.consumed.contains(flag) {
                 bail!("unknown flag --{flag}");
             }
+        }
+        if let Some(extra) = self.positionals.get(self.next_positional) {
+            bail!("unexpected positional argument {extra:?}");
         }
         Ok(())
     }
@@ -145,8 +177,28 @@ mod tests {
     }
 
     #[test]
-    fn rejects_stray_positional() {
-        assert!(Args::parse(vec!["run".into(), "stray".into()]).is_err());
+    fn rejects_unconsumed_positional() {
+        let a = Args::parse(vec!["run".into(), "stray".into()]).unwrap();
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn positionals_are_consumed_in_order() {
+        let mut a = args("cmp run-a run-b --threshold 0.07");
+        assert_eq!(a.positional("run-a").unwrap(), "run-a");
+        assert_eq!(a.positional("run-b").unwrap(), "run-b");
+        assert!(a.positional("missing").is_err());
+        assert!(a.positional_opt().is_none());
+        assert_eq!(a.get_f64("threshold", 0.0).unwrap(), 0.07);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn flag_values_are_not_positionals() {
+        let mut a = args("history key --csv-dir out");
+        assert_eq!(a.positional("key").unwrap(), "key");
+        assert_eq!(a.get_str("csv-dir", "").unwrap(), "out");
+        a.finish().unwrap();
     }
 
     #[test]

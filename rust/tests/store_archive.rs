@@ -1,0 +1,232 @@
+//! Integration: the persistent results archive + query engine + the
+//! CI gate sourcing its baselines from the archive.
+//!
+//! Everything here is hermetic (no PJRT device, no artifacts): records
+//! are constructed directly or read from the checked-in two-run sample
+//! archive at `tests/data/sample_archive.jsonl` — the same fixture the
+//! CI workflow smokes `xbench cmp` against.
+
+use std::path::Path;
+
+use xbench::ci::{BaselineStore, Detector, Metric};
+use xbench::config::{Compiler, Mode};
+use xbench::coordinator::RunResult;
+use xbench::profiler::{Breakdown, MemoryReport};
+use xbench::store::{
+    latest_per_key, run_summaries, Archive, Filter, RunMeta, RunRecord,
+};
+use xbench::util::TempDir;
+
+const FIXTURE: &str = "tests/data/sample_archive.jsonl";
+
+fn fixture() -> Archive {
+    assert!(
+        Path::new(FIXTURE).exists(),
+        "sample archive fixture missing (run tests from the crate root)"
+    );
+    Archive::new(FIXTURE)
+}
+
+fn result(model: &str, secs: f64) -> RunResult {
+    RunResult {
+        model: model.into(),
+        domain: "recommendation".into(),
+        mode: Mode::Infer,
+        compiler: Compiler::Fused,
+        batch: 4,
+        iter_secs: secs,
+        repeats_secs: vec![secs],
+        breakdown: Breakdown { active: 0.6, movement: 0.3, idle: 0.1, total_secs: secs },
+        memory: MemoryReport { host_peak: 4096, device_total: 8192 },
+        throughput: 4.0 / secs,
+    }
+}
+
+fn meta(run: &str, ts: u64) -> RunMeta {
+    RunMeta {
+        run_id: run.into(),
+        timestamp: ts,
+        git_commit: "test".into(),
+        host: "test-host".into(),
+        config_hash: "cfg".into(),
+        note: "".into(),
+    }
+}
+
+// -- archive round-trip over the full runner result type ---------------------
+
+#[test]
+fn runner_results_roundtrip_through_archive() {
+    let dir = TempDir::new().unwrap();
+    let archive = Archive::new(dir.path().join("runs.jsonl"));
+    let m1 = meta("run-one", 1000);
+    let m2 = meta("run-two", 2000);
+    archive
+        .append(&[
+            RunRecord::from_result(&result("deeprec_ae", 0.01), &m1),
+            RunRecord::from_result(&result("dlrm_tiny", 0.02), &m1),
+        ])
+        .unwrap();
+    archive
+        .append(&[RunRecord::from_result(&result("deeprec_ae", 0.03), &m2)])
+        .unwrap();
+
+    let records = archive.load().unwrap();
+    assert_eq!(records.len(), 3);
+    // bench_key agrees across runner, CI, and store layers.
+    assert_eq!(records[0].bench_key(), result("deeprec_ae", 0.01).bench_key());
+    assert_eq!(records[0].bench_key(), xbench::ci::bench_key(&result("deeprec_ae", 0.01)));
+
+    let summaries = run_summaries(&records);
+    assert_eq!(summaries.len(), 2);
+    assert_eq!(summaries[0].run_id, "run-one");
+    assert_eq!(summaries[0].records, 2);
+
+    let latest = latest_per_key(records.iter());
+    assert_eq!(latest["deeprec_ae.infer.fused.b4"].iter_secs, 0.03);
+    assert_eq!(latest["dlrm_tiny.infer.fused.b4"].run_id, "run-one");
+
+    let filtered = Filter {
+        models: vec!["deeprec_ae".into()],
+        since: Some(1500),
+        ..Default::default()
+    }
+    .apply(&records);
+    assert_eq!(filtered.len(), 1);
+    assert_eq!(filtered[0].run_id, "run-two");
+}
+
+// -- the checked-in sample archive -------------------------------------------
+
+#[test]
+fn sample_archive_resolves_and_ranks_the_regression() {
+    let archive = fixture();
+    let records = archive.load().unwrap();
+    assert_eq!(records.len(), 8);
+    assert_eq!(
+        Archive::run_order(&records),
+        vec!["run-20230101T000000-0000aaaa", "run-20230102T000000-0000bbbb"]
+    );
+    let a = archive.resolve_run(&records, "latest~1").unwrap();
+    let b = archive.resolve_run(&records, "latest").unwrap();
+    assert_eq!(a, "run-20230101T000000-0000aaaa");
+    assert_eq!(b, "run-20230102T000000-0000bbbb");
+    // Prefix selection works on the date part.
+    assert_eq!(archive.resolve_run(&records, "run-20230102").unwrap(), b);
+
+    let la = latest_per_key(Filter::for_run(&a).apply(&records).into_iter());
+    let lb = latest_per_key(Filter::for_run(&b).apply(&records).into_iter());
+    assert_eq!(la.len(), 4);
+    assert_eq!(lb.len(), 4);
+    // The planted +50% regression dominates; the -20% improvement and
+    // the ±7%-inside drifts don't trip the gate.
+    let ratio = |key: &str| lb[key].iter_secs / la[key].iter_secs;
+    assert!(ratio("deeprec_ae.infer.fused.b4") > 1.07);
+    assert!(ratio("dlrm_tiny.infer.fused.b4") < 1.0 / 1.07);
+    assert!((1.0..1.07).contains(&ratio("mobilenet_tiny.infer.fused.b4")));
+    assert!((ratio("deeprec_ae_quant.infer.fused.b4") - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn cmp_verb_flags_the_regression_and_writes_csv_twin() {
+    let dir = TempDir::new().unwrap();
+    xbench::cli::cmp::cmd(&fixture(), Some(dir.path()), "latest~1", "latest", 0.07).unwrap();
+    let csv = std::fs::read_to_string(dir.path().join("cmp.csv")).unwrap();
+    let deeprec_line = csv
+        .lines()
+        .find(|l| l.starts_with("deeprec_ae.infer.fused.b4"))
+        .expect("deeprec row present");
+    assert!(deeprec_line.contains("REGRESSED"), "{deeprec_line}");
+    assert!(deeprec_line.contains("1.500"), "{deeprec_line}");
+    let dlrm_line = csv.lines().find(|l| l.starts_with("dlrm_tiny")).unwrap();
+    assert!(dlrm_line.contains("improved"), "{dlrm_line}");
+    // Worst regression ranks first (rebar cmp order): header, then deeprec.
+    let first_data_line = csv.lines().nth(1).unwrap();
+    assert!(first_data_line.starts_with("deeprec_ae"), "{first_data_line}");
+}
+
+#[test]
+fn history_and_rank_verbs_work_over_the_sample_archive() {
+    let dir = TempDir::new().unwrap();
+    xbench::cli::history::cmd(
+        &fixture(),
+        Some(dir.path()),
+        "deeprec_ae.infer.fused.b4",
+        0,
+    )
+    .unwrap();
+    let csv =
+        std::fs::read_to_string(dir.path().join("history_deeprec_ae_infer_fused_b4.csv")).unwrap();
+    assert_eq!(csv.lines().count(), 3, "{csv}"); // header + 2 runs
+    assert!(csv.contains("REGRESSED"), "{csv}");
+
+    // Unknown key errors with suggestions, not a panic.
+    let err = xbench::cli::history::cmd(&fixture(), None, "deeprec_ae.train.fused.b4", 0)
+        .unwrap_err();
+    assert!(format!("{err}").contains("deeprec_ae.infer.fused.b4"), "{err}");
+
+    xbench::cli::rank::cmd(&fixture(), Some(dir.path()), "latest").unwrap();
+    let rank_csv = std::fs::read_to_string(dir.path().join("rank.csv")).unwrap();
+    assert!(rank_csv.contains("fused.infer"), "{rank_csv}");
+}
+
+// -- CI baselines sourced from the archive ------------------------------------
+
+#[test]
+fn baseline_store_derives_from_latest_known_good_run() {
+    let archive = fixture();
+    let from_a = BaselineStore::from_archive(&archive, "latest~1").unwrap();
+    assert_eq!(from_a.len(), 4);
+    let e = from_a.get("deeprec_ae.infer.fused.b4").unwrap();
+    assert_eq!(e.iter_secs, 0.010);
+    assert_eq!(e.host_bytes, 4096);
+    assert_eq!(e.device_bytes, 8192);
+
+    // "latest" picks the newer run — different numbers.
+    let from_b = BaselineStore::from_archive(&archive, "latest").unwrap();
+    assert_eq!(from_b.get("deeprec_ae.infer.fused.b4").unwrap().iter_secs, 0.015);
+
+    // The detector gates nightly results against archive-derived
+    // baselines exactly like hand-recorded ones.
+    let d = Detector::default();
+    let regs = d.detect(&from_a, &[result("deeprec_ae", 0.016)]);
+    assert_eq!(regs.len(), 1);
+    assert_eq!(regs[0].metric, Metric::ExecutionTime);
+    assert!((regs[0].ratio - 1.6).abs() < 1e-9);
+    // Against the newer baseline the same measurement passes.
+    assert!(d.detect(&from_b, &[result("deeprec_ae", 0.016)]).is_empty());
+}
+
+#[test]
+fn seven_percent_gate_boundary_is_exclusive() {
+    // Build an archive whose baseline is exactly 1.0s so the ratio
+    // arithmetic at the boundary is bit-exact.
+    let dir = TempDir::new().unwrap();
+    let archive = Archive::new(dir.path().join("runs.jsonl"));
+    archive
+        .append(&[RunRecord::from_result(&result("deeprec_ae", 1.0), &meta("run-base", 10))])
+        .unwrap();
+    let baselines = BaselineStore::from_archive(&archive, "latest").unwrap();
+    let d = Detector::default();
+    // Exactly +7.000% — the paper's threshold is exclusive: no issue filed.
+    assert!(d.detect(&baselines, &[result("deeprec_ae", 1.07)]).is_empty());
+    // One ulp-ish past the gate → regression.
+    let regs = d.detect(&baselines, &[result("deeprec_ae", 1.0700001)]);
+    assert_eq!(regs.len(), 1);
+    assert!(regs[0].ratio > 1.07);
+    // Just under → clean.
+    assert!(d.detect(&baselines, &[result("deeprec_ae", 1.0699999)]).is_empty());
+}
+
+#[test]
+fn from_archive_rejects_empty_or_unknown_runs() {
+    let dir = TempDir::new().unwrap();
+    let archive = Archive::new(dir.path().join("none.jsonl"));
+    assert!(BaselineStore::from_archive(&archive, "latest").is_err());
+    let archive = Archive::new(dir.path().join("runs.jsonl"));
+    archive
+        .append(&[RunRecord::from_result(&result("m", 0.01), &meta("run-a", 1))])
+        .unwrap();
+    assert!(BaselineStore::from_archive(&archive, "run-zzz").is_err());
+    assert!(BaselineStore::from_archive(&archive, "latest~5").is_err());
+}

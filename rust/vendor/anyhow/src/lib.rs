@@ -1,0 +1,205 @@
+//! Vendored minimal `anyhow`-compatible error substrate.
+//!
+//! This testbed builds fully offline against path dependencies only, so
+//! the subset of `anyhow` that XBench uses is rebuilt here: [`Error`]
+//! (a message + cause chain), [`Result`], the [`anyhow!`] / [`bail!`] /
+//! [`ensure!`] macros, and the [`Context`] extension trait for `Result`
+//! and `Option`. Formatting matches the upstream conventions the tests
+//! rely on: `{}` prints the outermost message, `{:#}` prints the whole
+//! chain colon-separated, `{:?}` prints the message plus a `Caused by:`
+//! list.
+
+use std::fmt;
+
+/// An error: an outermost message plus its cause chain (outermost first).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a printable message.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(mut self, ctx: impl fmt::Display) -> Error {
+        self.chain.insert(0, ctx.to_string());
+        self
+    }
+
+    /// The cause chain, outermost message first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the whole chain, colon-separated (anyhow's format).
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.chain.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for (i, cause) in self.chain.iter().skip(1).enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: like upstream anyhow, `Error` deliberately does NOT implement
+// `std::error::Error` — that keeps the blanket `From` below coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src: Option<&(dyn std::error::Error + 'static)> = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>` (second parameter defaulted like upstream).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (`Result`) or absences (`Option`).
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(ctx)
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_and_alternate_display() {
+        let e: Error = io_err().into();
+        let e = e.context("reading manifest");
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: no such file");
+    }
+
+    #[test]
+    fn debug_prints_cause_chain() {
+        let e = Error::msg("inner").context("outer");
+        let d = format!("{e:?}");
+        assert!(d.contains("outer"));
+        assert!(d.contains("Caused by:"));
+        assert!(d.contains("inner"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: Result<()> = Err(io_err().into());
+        let r = r.context("ctx");
+        assert_eq!(format!("{}", r.unwrap_err()), "ctx");
+        let o: Option<u32> = None;
+        assert_eq!(format!("{}", o.context("missing key").unwrap_err()), "missing key");
+        assert_eq!(Some(7).context("missing").unwrap(), 7);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<u32> {
+            let n: u32 = "not a number".parse()?;
+            Ok(n)
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(format!("{}", f(12).unwrap_err()).contains("12"));
+        assert!(format!("{}", f(5).unwrap_err()).contains("five"));
+        let e = anyhow!("code {}", 404);
+        assert_eq!(format!("{e}"), "code 404");
+    }
+}

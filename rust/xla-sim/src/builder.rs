@@ -1,0 +1,349 @@
+//! `XlaBuilder`: the op subset XBench's §4.1 case studies construct
+//! directly (parameters, zeros_like, rsqrt, broadcast, multiply, tuple),
+//! evaluated for real by the simulator.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::hlo_text::HloSig;
+use crate::literal::{ElementType, Literal, NativeType, Repr};
+use crate::{Error, Result};
+
+#[derive(Debug, Clone)]
+pub(crate) enum Op {
+    Parameter { index: i64, ty: ElementType, dims: Vec<i64> },
+    ZerosLike(usize),
+    Rsqrt(usize),
+    Broadcast { src: usize, dims: Vec<i64> },
+    Mul(usize, usize),
+    Tuple(Vec<usize>),
+}
+
+#[derive(Debug, Default)]
+struct BuilderInner {
+    name: String,
+    ops: Vec<Op>,
+    /// (ty, dims) result shape per op, indexed by op id.
+    shapes: Vec<(ElementType, Vec<i64>)>,
+}
+
+/// Builds a small op graph; cheap to clone (shared interior).
+#[derive(Debug, Clone)]
+pub struct XlaBuilder {
+    inner: Rc<RefCell<BuilderInner>>,
+}
+
+/// A handle to one op in its builder's graph.
+#[derive(Debug, Clone)]
+pub struct XlaOp {
+    id: usize,
+    builder: XlaBuilder,
+}
+
+impl XlaBuilder {
+    pub fn new(name: &str) -> XlaBuilder {
+        XlaBuilder {
+            inner: Rc::new(RefCell::new(BuilderInner {
+                name: name.to_string(),
+                ..Default::default()
+            })),
+        }
+    }
+
+    fn push(&self, op: Op, ty: ElementType, dims: Vec<i64>) -> XlaOp {
+        let mut inner = self.inner.borrow_mut();
+        inner.ops.push(op);
+        inner.shapes.push((ty, dims));
+        XlaOp { id: inner.ops.len() - 1, builder: self.clone() }
+    }
+
+    fn shape_of(&self, id: usize) -> (ElementType, Vec<i64>) {
+        let inner = self.inner.borrow();
+        let (ty, dims) = &inner.shapes[id];
+        (*ty, dims.clone())
+    }
+
+    /// Declare entry parameter `index` of the given shape.
+    pub fn parameter(
+        &self,
+        index: i64,
+        ty: ElementType,
+        dims: &[i64],
+        _name: &str,
+    ) -> Result<XlaOp> {
+        if index < 0 {
+            return Err(Error::new(format!("negative parameter index {index}")));
+        }
+        Ok(self.push(
+            Op::Parameter { index, ty, dims: dims.to_vec() },
+            ty,
+            dims.to_vec(),
+        ))
+    }
+
+    /// Tuple several ops into one result.
+    pub fn tuple<T: std::borrow::Borrow<XlaOp>>(&self, ops: &[T]) -> Result<XlaOp> {
+        let ids: Vec<usize> = ops.iter().map(|o| o.borrow().id).collect();
+        Ok(self.push(Op::Tuple(ids), ElementType::F32, Vec::new()))
+    }
+
+    /// Finish the graph rooted at `root`.
+    pub fn build(&self, root: &XlaOp) -> Result<XlaComputation> {
+        let inner = self.inner.borrow();
+        Ok(XlaComputation {
+            kind: CompKind::Graph {
+                name: inner.name.clone(),
+                ops: inner.ops.clone(),
+                root: root.id,
+            },
+        })
+    }
+}
+
+impl XlaOp {
+    fn unary(&self, make: impl FnOnce(usize) -> Op) -> Result<XlaOp> {
+        let (ty, dims) = self.builder.shape_of(self.id);
+        Ok(self.builder.push(make(self.id), ty, dims))
+    }
+
+    /// A zero-filled tensor of this op's shape.
+    pub fn zeros_like(&self) -> Result<XlaOp> {
+        self.unary(Op::ZerosLike)
+    }
+
+    /// Elementwise reciprocal square root (float only).
+    pub fn rsqrt(&self) -> Result<XlaOp> {
+        let (ty, _) = self.builder.shape_of(self.id);
+        if !matches!(ty, ElementType::F32 | ElementType::F64) {
+            return Err(Error::new(format!("rsqrt of non-float {ty:?}")));
+        }
+        self.unary(Op::Rsqrt)
+    }
+
+    /// Broadcast to `dims` (scalar → any shape, or identity).
+    pub fn broadcast(&self, dims: &[i64]) -> Result<XlaOp> {
+        let (ty, src_dims) = self.builder.shape_of(self.id);
+        if !src_dims.is_empty() && src_dims != dims {
+            return Err(Error::new(format!(
+                "broadcast {src_dims:?} -> {dims:?} unsupported (scalar or identity only)"
+            )));
+        }
+        Ok(self
+            .builder
+            .push(Op::Broadcast { src: self.id, dims: dims.to_vec() }, ty, dims.to_vec()))
+    }
+
+    /// Elementwise multiply (shapes must match).
+    pub fn mul_(&self, rhs: &XlaOp) -> Result<XlaOp> {
+        let (ty, dims) = self.builder.shape_of(self.id);
+        let (rty, rdims) = rhs.builder.shape_of(rhs.id);
+        if ty != rty || dims != rdims {
+            return Err(Error::new(format!(
+                "mul shape mismatch: {ty:?}{dims:?} vs {rty:?}{rdims:?}"
+            )));
+        }
+        Ok(self.builder.push(Op::Mul(self.id, rhs.id), ty, dims))
+    }
+}
+
+#[derive(Debug, Clone)]
+pub(crate) enum CompKind {
+    /// Built op-by-op with `XlaBuilder`; evaluated for real.
+    Graph { name: String, ops: Vec<Op>, root: usize },
+    /// Loaded from HLO text; simulated from the module signature.
+    Hlo(HloSig),
+}
+
+/// A computation ready to compile.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    pub(crate) kind: CompKind,
+}
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(proto: &crate::hlo_text::HloModuleProto) -> XlaComputation {
+        XlaComputation { kind: CompKind::Hlo(proto.sig.clone()) }
+    }
+
+    pub(crate) fn name(&self) -> &str {
+        match &self.kind {
+            CompKind::Graph { name, .. } => name,
+            CompKind::Hlo(sig) => &sig.name,
+        }
+    }
+}
+
+/// Evaluate a builder graph against input literals.
+pub(crate) fn evaluate_graph(
+    name: &str,
+    ops: &[Op],
+    root: usize,
+    args: &[&Literal],
+) -> Result<Literal> {
+    let mut values: Vec<Option<Literal>> = vec![None; ops.len()];
+    for id in 0..=root.min(ops.len().saturating_sub(1)) {
+        let value = match &ops[id] {
+            Op::Parameter { index, ty, dims } => {
+                let arg = args.get(*index as usize).ok_or_else(|| {
+                    Error::new(format!(
+                        "{name}: parameter {index} missing ({} arguments passed)",
+                        args.len()
+                    ))
+                })?;
+                match &arg.repr {
+                    Repr::Array { ty: aty, data, .. } => {
+                        let want: usize =
+                            dims.iter().map(|&d| d.max(0) as usize).product::<usize>()
+                                * ty.size_bytes();
+                        if *aty != *ty || data.len() != want {
+                            return Err(Error::new(format!(
+                                "{name}: parameter {index} expects {ty:?}{dims:?} ({want} bytes), \
+                                 got {aty:?} ({} bytes)",
+                                data.len()
+                            )));
+                        }
+                    }
+                    Repr::Tuple(_) => {
+                        return Err(Error::new(format!(
+                            "{name}: parameter {index} is a tuple literal"
+                        )))
+                    }
+                }
+                (*arg).clone()
+            }
+            Op::ZerosLike(a) => {
+                let src = taken(&values, *a, name)?;
+                match &src.repr {
+                    Repr::Array { ty, dims, data } => {
+                        Literal::array(*ty, dims.clone(), vec![0u8; data.len()])
+                    }
+                    Repr::Tuple(_) => {
+                        return Err(Error::new(format!("{name}: zeros_like of tuple")))
+                    }
+                }
+            }
+            Op::Rsqrt(a) => {
+                let src = taken(&values, *a, name)?;
+                map_f32(src, name, |x| 1.0 / x.sqrt())?
+            }
+            Op::Broadcast { src, dims } => {
+                let src = taken(&values, *src, name)?;
+                match &src.repr {
+                    Repr::Array { ty, dims: sdims, data } => {
+                        if sdims == dims {
+                            src.clone()
+                        } else if sdims.is_empty() {
+                            let n: usize = dims.iter().map(|&d| d.max(0) as usize).product();
+                            let mut out = Vec::with_capacity(n * data.len());
+                            for _ in 0..n {
+                                out.extend_from_slice(data);
+                            }
+                            Literal::array(*ty, dims.clone(), out)
+                        } else {
+                            return Err(Error::new(format!(
+                                "{name}: broadcast {sdims:?} -> {dims:?} unsupported"
+                            )));
+                        }
+                    }
+                    Repr::Tuple(_) => {
+                        return Err(Error::new(format!("{name}: broadcast of tuple")))
+                    }
+                }
+            }
+            Op::Mul(a, b) => {
+                let lhs = taken(&values, *a, name)?.clone();
+                let rhs = taken(&values, *b, name)?;
+                let rv = rhs.to_vec::<f32>().map_err(|e| {
+                    Error::new(format!("{name}: mul rhs: {e}"))
+                })?;
+                let mut i = 0;
+                map_f32(&lhs, name, |x| {
+                    let v = x * rv[i];
+                    i += 1;
+                    v
+                })?
+            }
+            Op::Tuple(ids) => {
+                let mut leaves = Vec::with_capacity(ids.len());
+                for &i in ids {
+                    leaves.push(taken(&values, i, name)?.clone());
+                }
+                Literal::tuple(leaves)
+            }
+        };
+        values[id] = Some(value);
+    }
+    values
+        .get(root)
+        .and_then(|v| v.clone())
+        .ok_or_else(|| Error::new(format!("{name}: root op {root} was not evaluated")))
+}
+
+fn taken<'a>(values: &'a [Option<Literal>], id: usize, name: &str) -> Result<&'a Literal> {
+    values
+        .get(id)
+        .and_then(|v| v.as_ref())
+        .ok_or_else(|| Error::new(format!("{name}: operand {id} not evaluated")))
+}
+
+fn map_f32(src: &Literal, name: &str, mut f: impl FnMut(f32) -> f32) -> Result<Literal> {
+    match &src.repr {
+        Repr::Array { ty: ElementType::F32, dims, data } => {
+            let mut out = Vec::with_capacity(data.len());
+            for c in data.chunks_exact(4) {
+                f(f32::read_le(c)).write_le(&mut out);
+            }
+            Ok(Literal::array(ElementType::F32, dims.clone(), out))
+        }
+        _ => Err(Error::new(format!("{name}: f32 elementwise op on non-f32 literal"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_like_and_tuple_evaluate() {
+        let b = XlaBuilder::new("t");
+        let p = b.parameter(0, ElementType::F32, &[4], "x").unwrap();
+        let z = p.zeros_like().unwrap();
+        let t = b.tuple(&[z]).unwrap();
+        let comp = b.build(&t).unwrap();
+        let arg = Literal::vec1(&[1f32, 2.0, 3.0, 4.0]);
+        let CompKind::Graph { name, ops, root } = &comp.kind else { panic!() };
+        let out = evaluate_graph(name, ops, *root, &[&arg]).unwrap();
+        let leaves = out.to_tuple().unwrap();
+        assert_eq!(leaves[0].to_vec::<f32>().unwrap(), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn rsqrt_broadcast_mul_pipeline() {
+        let b = XlaBuilder::new("t");
+        let s = b.parameter(0, ElementType::F32, &[], "s").unwrap();
+        let r = s.rsqrt().unwrap();
+        let x = b.parameter(1, ElementType::F32, &[4], "x").unwrap();
+        let rb = r.broadcast(&[4]).unwrap();
+        let y = x.mul_(&rb).unwrap();
+        let t = b.tuple(&[y]).unwrap();
+        let comp = b.build(&t).unwrap();
+        let CompKind::Graph { name, ops, root } = &comp.kind else { panic!() };
+        let s_lit = Literal::scalar(64.0f32);
+        let x_lit = Literal::vec1(&[8f32, 16.0, 24.0, 32.0]);
+        let out = evaluate_graph(name, ops, *root, &[&s_lit, &x_lit]).unwrap();
+        let v = out.to_tuple().unwrap()[0].to_vec::<f32>().unwrap();
+        assert_eq!(v, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn parameter_shape_mismatch_errors() {
+        let b = XlaBuilder::new("t");
+        let p = b.parameter(0, ElementType::F32, &[4], "x").unwrap();
+        let t = b.tuple(&[p]).unwrap();
+        let comp = b.build(&t).unwrap();
+        let CompKind::Graph { name, ops, root } = &comp.kind else { panic!() };
+        let bad = Literal::vec1(&[1f32, 2.0]);
+        assert!(evaluate_graph(name, ops, *root, &[&bad]).is_err());
+    }
+}

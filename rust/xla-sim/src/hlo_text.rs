@@ -1,0 +1,248 @@
+//! HLO-text module loading: extract the entry signature (parameter
+//! shapes + ROOT shape) the simulator needs to execute an artifact.
+//!
+//! Parses the canonical text dialect `aot.py` emits (the same one
+//! XBench's own `hlo::parser` consumes): top-level `name {` blocks,
+//! 2-space-indented instructions, `ENTRY` marking the entry computation,
+//! `ROOT` marking its result.
+
+use crate::literal::{ArrayShape, ElementType, Shape};
+use crate::{Error, Result};
+
+/// The signature the simulator executes from.
+#[derive(Debug, Clone)]
+pub(crate) struct HloSig {
+    pub name: String,
+    /// Entry parameter shapes, by parameter index.
+    pub params: Vec<Shape>,
+    /// The ROOT instruction's shape.
+    pub root: Shape,
+}
+
+/// A loaded HLO module (proto stand-in: the parsed signature).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    pub(crate) sig: HloSig,
+}
+
+impl HloModuleProto {
+    /// Parse an HLO-text file.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::new(format!("reading HLO text: {e}")))?;
+        Ok(HloModuleProto { sig: parse_signature(&text)? })
+    }
+
+    /// Parse HLO text directly (tests, in-memory artifacts).
+    pub fn from_text(text: &str) -> Result<HloModuleProto> {
+        Ok(HloModuleProto { sig: parse_signature(text)? })
+    }
+}
+
+#[derive(Debug, Default)]
+struct Block {
+    name: String,
+    is_entry: bool,
+    /// (parameter index, shape) declarations.
+    params: Vec<(usize, Shape)>,
+    root: Option<Shape>,
+    last: Option<Shape>,
+}
+
+fn parse_signature(text: &str) -> Result<HloSig> {
+    let mut module_name = String::new();
+    let mut blocks: Vec<Block> = Vec::new();
+    let mut current: Option<Block> = None;
+
+    for raw in text.lines() {
+        let line = raw.trim_end();
+        let trimmed = line.trim_start();
+        if trimmed.is_empty() {
+            continue;
+        }
+        if let Some(rest) = trimmed.strip_prefix("HloModule ") {
+            module_name = rest.split([',', ' ']).next().unwrap_or("").to_string();
+            continue;
+        }
+        if !line.starts_with(' ') && trimmed.ends_with('{') {
+            let is_entry = trimmed.starts_with("ENTRY ");
+            let header = trimmed.trim_start_matches("ENTRY ").trim_end_matches('{').trim();
+            let name = header
+                .split(|c: char| c == ' ' || c == '(')
+                .next()
+                .unwrap_or("")
+                .to_string();
+            current = Some(Block { name, is_entry, ..Default::default() });
+            continue;
+        }
+        if !line.starts_with(' ') && trimmed == "}" {
+            if let Some(b) = current.take() {
+                blocks.push(b);
+            }
+            continue;
+        }
+        if let Some(block) = current.as_mut() {
+            parse_instruction_line(trimmed, block);
+        }
+    }
+
+    if blocks.is_empty() {
+        return Err(Error::new("no computations found — not HLO text?"));
+    }
+    let entry_idx = blocks
+        .iter()
+        .position(|b| b.is_entry)
+        .unwrap_or(blocks.len() - 1);
+    let entry = &blocks[entry_idx];
+    let root = entry
+        .root
+        .clone()
+        .or_else(|| entry.last.clone())
+        .ok_or_else(|| Error::new(format!("entry computation {} is empty", entry.name)))?;
+
+    let mut params: Vec<Option<Shape>> = Vec::new();
+    for (idx, shape) in &entry.params {
+        if params.len() <= *idx {
+            params.resize(*idx + 1, None);
+        }
+        params[*idx] = Some(shape.clone());
+    }
+    let params: Vec<Shape> = params
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| s.ok_or_else(|| Error::new(format!("entry parameter {i} undeclared"))))
+        .collect::<Result<_>>()?;
+
+    Ok(HloSig {
+        name: if module_name.is_empty() { entry.name.clone() } else { module_name },
+        params,
+        root,
+    })
+}
+
+/// Record one instruction's shape into the current block (lines the
+/// subset parser can't digest are skipped, like the coordinator's own
+/// HLO parser).
+fn parse_instruction_line(line: &str, block: &mut Block) {
+    let is_root = line.starts_with("ROOT ");
+    let line = line.trim_start_matches("ROOT ");
+    let Some(eq) = line.find(" = ") else { return };
+    let rest = &line[eq + 3..];
+    let Some((shape, after)) = parse_shape(rest) else { return };
+    let after = after.trim_start();
+    if let Some(payload) = after
+        .strip_prefix("parameter(")
+        .and_then(|p| p.split(')').next())
+    {
+        if let Ok(idx) = payload.trim().parse::<usize>() {
+            block.params.push((idx, shape.clone()));
+        }
+    }
+    if is_root {
+        block.root = Some(shape.clone());
+    }
+    block.last = Some(shape);
+}
+
+/// Parse a shape prefix (`f32[4,8]{1,0}` or a tuple of them), returning
+/// the remainder of the line.
+fn parse_shape(s: &str) -> Option<(Shape, &str)> {
+    let s = s.trim_start();
+    if let Some(rest) = s.strip_prefix('(') {
+        let mut elems = Vec::new();
+        let mut rem = rest;
+        loop {
+            rem = rem.trim_start().trim_start_matches(',').trim_start();
+            while let Some(r) = rem.strip_prefix("/*") {
+                rem = &r[r.find("*/")? + 2..];
+                rem = rem.trim_start();
+            }
+            if let Some(r) = rem.strip_prefix(')') {
+                return Some((Shape::Tuple(elems), r));
+            }
+            let (e, r) = parse_shape(rem)?;
+            elems.push(e);
+            rem = r;
+        }
+    }
+    let bracket = s.find('[')?;
+    let dtype = s[..bracket].trim();
+    if dtype.is_empty() || !dtype.chars().all(|c| c.is_ascii_alphanumeric()) {
+        return None;
+    }
+    let close = s[bracket..].find(']')? + bracket;
+    let dims_str = &s[bracket + 1..close];
+    let dims: Vec<i64> = if dims_str.trim().is_empty() {
+        Vec::new()
+    } else {
+        dims_str
+            .split(',')
+            .map(|d| d.trim().trim_start_matches("<=").parse().ok())
+            .collect::<Option<Vec<i64>>>()?
+    };
+    let mut rest = &s[close + 1..];
+    if let Some(r) = rest.strip_prefix('{') {
+        rest = &r[r.find('}')? + 1..];
+    }
+    let shape = match ElementType::from_hlo_dtype(dtype) {
+        Some(ty) => Shape::Array(ArrayShape::new(ty, dims)),
+        None => Shape::Unsupported(dtype.to_string()),
+    };
+    Some((shape, rest))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"HloModule jit_step, entry_computation_layout={(f32[2,3]{1,0})->(f32[2,3]{1,0})}
+
+region_0.1 {
+  Arg_0.0 = f32[] parameter(0)
+  Arg_1.0 = f32[] parameter(1)
+  ROOT add.1 = f32[] add(Arg_0.0, Arg_1.0)
+}
+
+ENTRY main.9 {
+  w.1 = f32[2,3]{1,0} parameter(0)
+  x.2 = f32[4,2]{1,0} parameter(1)
+  dot.3 = f32[4,3]{1,0} dot(x.2, w.1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT tuple.4 = (f32[2,3]{1,0}, f32[]) tuple(w.1, dot.3)
+}
+"#;
+
+    #[test]
+    fn entry_signature_is_extracted() {
+        let sig = parse_signature(SAMPLE).unwrap();
+        assert_eq!(sig.name, "jit_step");
+        assert_eq!(sig.params.len(), 2);
+        assert_eq!(
+            sig.params[0],
+            Shape::Array(ArrayShape::new(ElementType::F32, vec![2, 3]))
+        );
+        match &sig.root {
+            Shape::Tuple(elems) => assert_eq!(elems.len(), 2),
+            other => panic!("root {other:?}"),
+        }
+    }
+
+    #[test]
+    fn region_parameters_do_not_leak_into_entry() {
+        let sig = parse_signature(SAMPLE).unwrap();
+        // region_0.1's two scalar parameters must not appear.
+        assert!(sig.params.iter().all(|p| p.byte_size() > 4));
+    }
+
+    #[test]
+    fn garbage_is_rejected() {
+        assert!(parse_signature("this is definitely not HLO text { ( [").is_err());
+        assert!(parse_signature("").is_err());
+    }
+
+    #[test]
+    fn missing_entry_falls_back_to_last_block() {
+        let text = "m.1 {\n  p.1 = f32[4]{0} parameter(0)\n  ROOT t.2 = (f32[4]{0}) tuple(p.1)\n}\n";
+        let sig = parse_signature(text).unwrap();
+        assert_eq!(sig.params.len(), 1);
+    }
+}

@@ -1,0 +1,72 @@
+//! Deterministic in-process XLA/PJRT simulator.
+//!
+//! This crate presents the exact API surface XBench's runtime layer uses
+//! from the real `xla` bindings (PJRT C API) — literals, a CPU client,
+//! loaded executables, the `XlaBuilder` op subset of the §4.1 case
+//! studies, and HLO-text module loading — backed by a pure-Rust
+//! simulator instead of the native XLA closure, so the whole benchmark
+//! harness builds and runs fully offline.
+//!
+//! Simulation contract (what the coordinator can rely on):
+//! - **Shapes are honest.** Executing a compiled HLO artifact produces
+//!   output literals of exactly the module's ROOT shape; builder graphs
+//!   are evaluated for real (`zeros_like`, `rsqrt`, `broadcast`, `mul`).
+//! - **Execution is deterministic.** Outputs are a pure function of the
+//!   input literals, so repeated runs are bit-identical and CI deltas
+//!   are measurement noise only.
+//! - **Work is proportional to data.** Uploads copy their literal,
+//!   executions scan every input byte and materialize every output
+//!   byte, so measured H2D/compute/D2H times scale with tensor sizes.
+//! - **Training threads state.** An output leaf whose shape matches an
+//!   unconsumed input is returned as that input decayed by 0.1% (the
+//!   "SGD step" of the simulator); a floating-point leaf with no match
+//!   (a loss) is filled with the mean |x| of the matched inputs — so a
+//!   train-step artifact iterated by the coordinator produces a
+//!   monotonically decreasing, finite loss curve.
+//!
+//! The real hardware path is feature-gated behind `pjrt-c-api`.
+
+#[cfg(feature = "pjrt-c-api")]
+compile_error!(
+    "the `pjrt-c-api` backend needs the vendored xla_extension native closure, \
+     which this offline testbed does not ship; build without --features pjrt-c-api \
+     to use the deterministic in-process simulator"
+);
+
+mod builder;
+mod hlo_text;
+mod literal;
+mod runtime;
+
+pub use builder::{XlaBuilder, XlaComputation, XlaOp};
+pub use hlo_text::HloModuleProto;
+pub use literal::{ArrayShape, ElementType, Literal, NativeType, PrimitiveType, Shape};
+pub use runtime::{PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+/// Crate-local error type (Debug-formatted at the XBench call sites).
+#[derive(Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub(crate) fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::fmt::Debug for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "XlaError({:?})", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;

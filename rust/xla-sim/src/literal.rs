@@ -1,0 +1,460 @@
+//! Literals (host tensors), element types, and shapes.
+
+use crate::{Error, Result};
+
+/// XLA element types (the set the PJRT wrapper exposes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+    C64,
+    C128,
+}
+
+impl ElementType {
+    pub fn size_bytes(self) -> usize {
+        use ElementType as E;
+        match self {
+            E::Pred | E::S8 | E::U8 => 1,
+            E::S16 | E::U16 | E::F16 | E::Bf16 => 2,
+            E::S32 | E::U32 | E::F32 => 4,
+            E::S64 | E::U64 | E::F64 | E::C64 => 8,
+            E::C128 => 16,
+        }
+    }
+
+    pub(crate) fn from_hlo_dtype(s: &str) -> Option<ElementType> {
+        use ElementType as E;
+        Some(match s {
+            "pred" => E::Pred,
+            "s8" => E::S8,
+            "s16" => E::S16,
+            "s32" => E::S32,
+            "s64" => E::S64,
+            "u8" => E::U8,
+            "u16" => E::U16,
+            "u32" => E::U32,
+            "u64" => E::U64,
+            "f16" => E::F16,
+            "bf16" => E::Bf16,
+            "f32" => E::F32,
+            "f64" => E::F64,
+            "c64" => E::C64,
+            "c128" => E::C128,
+            _ => return None,
+        })
+    }
+}
+
+/// Primitive types (the proto-level twin of [`ElementType`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PrimitiveType {
+    Pred,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+    C64,
+    C128,
+}
+
+impl PrimitiveType {
+    pub fn element_type(self) -> ElementType {
+        use ElementType as E;
+        use PrimitiveType as P;
+        match self {
+            P::Pred => E::Pred,
+            P::S8 => E::S8,
+            P::S16 => E::S16,
+            P::S32 => E::S32,
+            P::S64 => E::S64,
+            P::U8 => E::U8,
+            P::U16 => E::U16,
+            P::U32 => E::U32,
+            P::U64 => E::U64,
+            P::F16 => E::F16,
+            P::Bf16 => E::Bf16,
+            P::F32 => E::F32,
+            P::F64 => E::F64,
+            P::C64 => E::C64,
+            P::C128 => E::C128,
+        }
+    }
+}
+
+impl ElementType {
+    pub fn primitive_type(self) -> PrimitiveType {
+        use ElementType as E;
+        use PrimitiveType as P;
+        match self {
+            E::Pred => P::Pred,
+            E::S8 => P::S8,
+            E::S16 => P::S16,
+            E::S32 => P::S32,
+            E::S64 => P::S64,
+            E::U8 => P::U8,
+            E::U16 => P::U16,
+            E::U32 => P::U32,
+            E::U64 => P::U64,
+            E::F16 => P::F16,
+            E::Bf16 => P::Bf16,
+            E::F32 => P::F32,
+            E::F64 => P::F64,
+            E::C64 => P::C64,
+            E::C128 => P::C128,
+        }
+    }
+}
+
+/// An array shape: element type + dimensions.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn new(ty: ElementType, dims: Vec<i64>) -> ArrayShape {
+        ArrayShape { ty, dims }
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().map(|&d| d.max(0) as usize).product()
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.element_count() * self.ty.size_bytes()
+    }
+}
+
+/// An on-device shape: array, tuple, or something the wrapper can't map.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+    Unsupported(String),
+}
+
+impl Shape {
+    pub fn byte_size(&self) -> usize {
+        match self {
+            Shape::Array(a) => a.byte_size(),
+            Shape::Tuple(elems) => elems.iter().map(|s| s.byte_size()).sum(),
+            Shape::Unsupported(_) => 0,
+        }
+    }
+}
+
+/// Native Rust element types a literal can be built from / read into.
+pub trait NativeType: Copy + Default {
+    const TY: ElementType;
+    fn write_le(self, out: &mut Vec<u8>);
+    fn read_le(bytes: &[u8]) -> Self;
+}
+
+macro_rules! native {
+    ($t:ty, $ty:expr) => {
+        impl NativeType for $t {
+            const TY: ElementType = $ty;
+            fn write_le(self, out: &mut Vec<u8>) {
+                out.extend_from_slice(&self.to_le_bytes());
+            }
+            fn read_le(bytes: &[u8]) -> Self {
+                let mut buf = [0u8; std::mem::size_of::<$t>()];
+                buf.copy_from_slice(&bytes[..std::mem::size_of::<$t>()]);
+                <$t>::from_le_bytes(buf)
+            }
+        }
+    };
+}
+
+native!(f32, ElementType::F32);
+native!(f64, ElementType::F64);
+native!(i8, ElementType::S8);
+native!(i32, ElementType::S32);
+native!(i64, ElementType::S64);
+native!(u8, ElementType::U8);
+native!(u32, ElementType::U32);
+native!(u64, ElementType::U64);
+
+/// A host tensor: dense array bytes or a tuple of literals.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    pub(crate) repr: Repr,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) enum Repr {
+    Array {
+        ty: ElementType,
+        dims: Vec<i64>,
+        data: Vec<u8>,
+    },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    pub(crate) fn array(ty: ElementType, dims: Vec<i64>, data: Vec<u8>) -> Literal {
+        debug_assert_eq!(
+            data.len(),
+            dims.iter().map(|&d| d.max(0) as usize).product::<usize>() * ty.size_bytes()
+        );
+        Literal { repr: Repr::Array { ty, dims, data } }
+    }
+
+    pub(crate) fn tuple(leaves: Vec<Literal>) -> Literal {
+        Literal { repr: Repr::Tuple(leaves) }
+    }
+
+    /// Rank-1 literal from a native slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        let mut bytes = Vec::with_capacity(data.len() * std::mem::size_of::<T>());
+        for v in data {
+            v.write_le(&mut bytes);
+        }
+        Literal::array(T::TY, vec![data.len() as i64], bytes)
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        let mut bytes = Vec::with_capacity(std::mem::size_of::<T>());
+        v.write_le(&mut bytes);
+        Literal::array(T::TY, Vec::new(), bytes)
+    }
+
+    /// Shaped literal from raw little-endian bytes.
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let elems: usize = dims.iter().product();
+        let want = elems * ty.size_bytes();
+        if data.len() != want {
+            return Err(Error::new(format!(
+                "untyped data is {} bytes, shape {dims:?} of {ty:?} needs {want}",
+                data.len()
+            )));
+        }
+        Ok(Literal::array(
+            ty,
+            dims.iter().map(|&d| d as i64).collect(),
+            data.to_vec(),
+        ))
+    }
+
+    /// Same data, new dimensions (element counts must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        match &self.repr {
+            Repr::Array { ty, data, dims: old } => {
+                let old_n: i64 = old.iter().product();
+                let new_n: i64 = dims.iter().product();
+                if old_n != new_n {
+                    return Err(Error::new(format!(
+                        "cannot reshape {old:?} ({old_n} elements) to {dims:?} ({new_n})"
+                    )));
+                }
+                Ok(Literal::array(*ty, dims.to_vec(), data.clone()))
+            }
+            Repr::Tuple(_) => Err(Error::new("cannot reshape a tuple literal")),
+        }
+    }
+
+    /// Total byte size (tuples sum their leaves).
+    pub fn size_bytes(&self) -> usize {
+        match &self.repr {
+            Repr::Array { data, .. } => data.len(),
+            Repr::Tuple(leaves) => leaves.iter().map(|l| l.size_bytes()).sum(),
+        }
+    }
+
+    /// Total element count (tuples sum their leaves).
+    pub fn element_count(&self) -> usize {
+        match &self.repr {
+            Repr::Array { ty, data, .. } => data.len() / ty.size_bytes(),
+            Repr::Tuple(leaves) => leaves.iter().map(|l| l.element_count()).sum(),
+        }
+    }
+
+    /// The element type of an array literal.
+    pub fn primitive_type(&self) -> Result<PrimitiveType> {
+        match &self.repr {
+            Repr::Array { ty, .. } => Ok(ty.primitive_type()),
+            Repr::Tuple(_) => Err(Error::new("tuple literal has no primitive type")),
+        }
+    }
+
+    pub fn element_type(&self) -> Result<ElementType> {
+        self.primitive_type().map(|p| p.element_type())
+    }
+
+    /// The literal's shape.
+    pub fn shape(&self) -> Shape {
+        match &self.repr {
+            Repr::Array { ty, dims, .. } => Shape::Array(ArrayShape::new(*ty, dims.clone())),
+            Repr::Tuple(leaves) => Shape::Tuple(leaves.iter().map(|l| l.shape()).collect()),
+        }
+    }
+
+    /// Read the array data into a native vector (exact type match).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match &self.repr {
+            Repr::Array { ty, data, .. } => {
+                if *ty != T::TY {
+                    return Err(Error::new(format!(
+                        "literal is {ty:?}, requested {:?}",
+                        T::TY
+                    )));
+                }
+                let sz = std::mem::size_of::<T>();
+                Ok(data.chunks_exact(sz).map(T::read_le).collect())
+            }
+            Repr::Tuple(_) => Err(Error::new("cannot to_vec a tuple literal")),
+        }
+    }
+
+    /// Untuple into leaf literals.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.repr {
+            Repr::Tuple(leaves) => Ok(leaves),
+            Repr::Array { .. } => Err(Error::new("literal is not a tuple")),
+        }
+    }
+
+    /// Element-type conversion (numeric types; same-type is a copy).
+    pub fn convert(&self, to: PrimitiveType) -> Result<Literal> {
+        let (ty, dims, data) = match &self.repr {
+            Repr::Array { ty, dims, data } => (*ty, dims, data),
+            Repr::Tuple(_) => return Err(Error::new("cannot convert a tuple literal")),
+        };
+        let to_ty = to.element_type();
+        if to_ty == ty {
+            return Ok(self.clone());
+        }
+        let values = read_as_f64(ty, data)
+            .ok_or_else(|| Error::new(format!("convert from {ty:?} unsupported")))?;
+        let out = write_from_f64(to_ty, &values)
+            .ok_or_else(|| Error::new(format!("convert to {to_ty:?} unsupported")))?;
+        Ok(Literal::array(to_ty, dims.clone(), out))
+    }
+}
+
+fn read_as_f64(ty: ElementType, data: &[u8]) -> Option<Vec<f64>> {
+    use ElementType as E;
+    let sz = ty.size_bytes();
+    let mut out = Vec::with_capacity(data.len() / sz.max(1));
+    for c in data.chunks_exact(sz) {
+        let v = match ty {
+            E::F32 => f32::read_le(c) as f64,
+            E::F64 => f64::read_le(c),
+            E::S8 => i8::read_le(c) as f64,
+            E::S32 => i32::read_le(c) as f64,
+            E::S64 => i64::read_le(c) as f64,
+            E::U8 => u8::read_le(c) as f64,
+            E::U32 => u32::read_le(c) as f64,
+            E::U64 => u64::read_le(c) as f64,
+            _ => return None,
+        };
+        out.push(v);
+    }
+    Some(out)
+}
+
+fn write_from_f64(ty: ElementType, values: &[f64]) -> Option<Vec<u8>> {
+    use ElementType as E;
+    let mut out = Vec::with_capacity(values.len() * ty.size_bytes());
+    for &v in values {
+        match ty {
+            E::F32 => (v as f32).write_le(&mut out),
+            E::F64 => v.write_le(&mut out),
+            E::S8 => (v as i8).write_le(&mut out),
+            E::S32 => (v as i32).write_le(&mut out),
+            E::S64 => (v as i64).write_le(&mut out),
+            E::U8 => (v as u8).write_le(&mut out),
+            E::U32 => (v as u32).write_le(&mut out),
+            E::U64 => (v as u64).write_le(&mut out),
+            _ => return None,
+        }
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec1_scalar_and_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, -2.5, 3.25]);
+        assert_eq!(l.size_bytes(), 12);
+        assert_eq!(l.element_count(), 3);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, -2.5, 3.25]);
+        assert!(l.to_vec::<i32>().is_err());
+        let s = Literal::scalar(7i32);
+        assert_eq!(s.element_count(), 1);
+        assert_eq!(s.to_vec::<i32>().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn reshape_checks_element_count() {
+        let l = Literal::vec1(&[0f32; 6]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.element_count(), 6);
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn untyped_data_size_is_checked() {
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 2], &[0u8; 16])
+            .is_ok());
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 2], &[0u8; 15])
+            .is_err());
+    }
+
+    #[test]
+    fn convert_roundtrips() {
+        let l = Literal::vec1(&[1.5f32, -2.0]);
+        let up = l.convert(PrimitiveType::F64).unwrap();
+        assert_eq!(up.to_vec::<f64>().unwrap(), vec![1.5, -2.0]);
+        let back = up.convert(PrimitiveType::F32).unwrap();
+        assert_eq!(back.to_vec::<f32>().unwrap(), vec![1.5, -2.0]);
+        let ints = Literal::vec1(&[3i32, -4]).convert(PrimitiveType::S64).unwrap();
+        assert_eq!(ints.to_vec::<i64>().unwrap(), vec![3, -4]);
+    }
+
+    #[test]
+    fn tuple_untuples() {
+        let t = Literal::tuple(vec![Literal::scalar(1f32), Literal::vec1(&[2i32, 3])]);
+        assert_eq!(t.size_bytes(), 12);
+        let leaves = t.to_tuple().unwrap();
+        assert_eq!(leaves.len(), 2);
+        assert!(Literal::scalar(1f32).to_tuple().is_err());
+    }
+}
