@@ -26,6 +26,8 @@ fn synth_records() -> Vec<Vec<RunRecord>> {
             host: "bench-host".into(),
             config_hash: "cafebabecafebabe".into(),
             note: "".into(),
+            jobs: None,
+            shard: None,
         };
         let mut records = Vec::with_capacity(MODELS * MODES.len() * COMPILERS.len());
         for m in 0..MODELS {
@@ -33,6 +35,10 @@ fn synth_records() -> Vec<Vec<RunRecord>> {
                 for (ci, compiler) in COMPILERS.iter().enumerate() {
                     let secs = 0.001 * (1.0 + m as f64) * (1.0 + mi as f64) * (1.0 + ci as f64);
                     records.push(RunRecord {
+                        schema: 2,
+                        seq: None,
+                        jobs: None,
+                        shard: None,
                         run_id: meta.run_id.clone(),
                         timestamp: meta.timestamp,
                         git_commit: meta.git_commit.clone(),

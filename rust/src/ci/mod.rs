@@ -6,6 +6,25 @@
 //! runner, a nightly build that carries the day's composed faults, the 7%
 //! [`detector`], O(log n) [`bisect`]ion to the culprit commit, and an
 //! auto-filed [`issue`] report.
+//!
+//! # How results flow: runner → archive → gate
+//!
+//! 1. The [`crate::coordinator`] runner measures each benchmark config
+//!    into a [`RunResult`] — in parallel/sharded invocations the
+//!    scheduler ([`crate::coordinator::sched`]) reassembles them in
+//!    worklist order first, so the gate sees the same ordered results a
+//!    serial run would produce.
+//! 2. `xbench run --record` / `xbench ci --record-baseline` stamp those
+//!    results into [`RunRecord`](crate::store::RunRecord)s and append
+//!    them to the persistent [`crate::store::Archive`].
+//! 3. `xbench ci --baseline-from-archive` derives this module's
+//!    [`BaselineStore`] from a recorded known-good run
+//!    ([`BaselineStore::from_archive`]), and the [`Detector`] flags any
+//!    nightly result whose gated metric regresses past the 7% threshold
+//!    ([`DEFAULT_THRESHOLD`]).
+//!
+//! The protocol behind the numbers and the gate's semantics are
+//! documented in `docs/METHODOLOGY.md`.
 
 pub mod baseline;
 pub mod bisect;
@@ -36,23 +55,60 @@ pub struct CiPipeline<'a> {
     /// precision for latency, the threshold absorbs the noise).
     pub cfg: RunConfig,
     pub detector: Detector,
+    /// How builds fan out (`--jobs`/`--shard`). Error policy is always
+    /// fail-fast here: a gate over partial measurements would pass
+    /// silently on whatever failed to run.
+    pub exec: crate::coordinator::ExecOpts,
 }
 
 impl<'a> CiPipeline<'a> {
     pub fn new(store: &'a ArtifactStore, suite: &'a Suite, cfg: RunConfig) -> Self {
-        CiPipeline { store, suite, cfg, detector: Detector::default() }
+        CiPipeline {
+            store,
+            suite,
+            cfg,
+            detector: Detector::default(),
+            exec: crate::coordinator::ExecOpts::SERIAL,
+        }
+    }
+
+    /// Fan builds out across workers / restrict to one shard.
+    pub fn with_exec(mut self, exec: crate::coordinator::ExecOpts) -> Self {
+        self.exec = exec;
+        self
     }
 
     /// Run the configured benchmark subset under the given build.
     pub fn run_build(&self, overheads: &InjectedOverheads) -> Result<Vec<RunResult>> {
+        Ok(self.run_build_indexed(overheads)?.into_iter().map(|(_, r)| r).collect())
+    }
+
+    /// [`CiPipeline::run_build`], keeping each result's global worklist
+    /// index (what `--record-baseline` stamps into the archive so
+    /// sharded baselines merge deterministically).
+    pub fn run_build_indexed(
+        &self,
+        overheads: &InjectedOverheads,
+    ) -> Result<Vec<(usize, RunResult)>> {
         let entries = self.suite.select(&self.cfg.selection)?;
-        let mut results = Vec::with_capacity(entries.len());
-        for entry in entries {
-            let runner = Runner::new(self.store, self.cfg.clone())
-                .with_overheads(overheads.clone());
-            results.push(runner.run_model(entry)?);
-        }
-        Ok(results)
+        let labels: Vec<String> = entries.iter().map(|e| e.name.clone()).collect();
+        let opts = crate::coordinator::ExecOpts { fail_fast: true, ..self.exec.clone() };
+        // Capture only `Sync` data (not `&self` — the pipeline holds a
+        // single-threaded `&ArtifactStore`).
+        let cfg = &self.cfg;
+        let outcome = crate::coordinator::run_partitioned(
+            &opts,
+            self.store,
+            &entries,
+            &labels,
+            "ci",
+            |store, entry| {
+                Runner::new(store, cfg.clone())
+                    .with_overheads(overheads.clone())
+                    .run_model(entry)
+            },
+        )?;
+        Ok(outcome.completed)
     }
 
     /// Establish (or refresh) baselines from a clean build.

@@ -8,7 +8,7 @@ use anyhow::Result;
 
 use crate::ci::{BaselineStore, CiPipeline, Day, FaultKind};
 use crate::config::RunConfig;
-use crate::coordinator::InjectedOverheads;
+use crate::coordinator::{ExecOpts, InjectedOverheads};
 use crate::report::Table;
 use crate::runtime::ArtifactStore;
 use crate::store::RunMeta;
@@ -26,6 +26,13 @@ pub struct Opts {
     pub record_baseline: bool,
     /// Derive baselines from this archive run instead of measuring.
     pub baseline_from_archive: Option<String>,
+    /// `--jobs`/`--shard`: how measurement builds fan out. A sharded CI
+    /// invocation measures, records, and gates only its slice of the
+    /// worklist (each host runs one shard; the archive merges them).
+    pub exec: ExecOpts,
+    /// Run-id override for `--record-baseline`, so shards of one
+    /// logical baseline run land under a single archive run id.
+    pub run_id: Option<String>,
 }
 
 pub fn cmd(ctx: &Ctx, store: &ArtifactStore, mut cfg: RunConfig, opts: Opts) -> Result<()> {
@@ -47,11 +54,15 @@ pub fn cmd(ctx: &Ctx, store: &ArtifactStore, mut cfg: RunConfig, opts: Opts) -> 
     // 5/2/1) — forcing values here would silently discard a user's
     // --repeats/--iterations/--warmup and stamp the recorded baseline
     // with a config_hash they never asked for.
-    let pipeline = CiPipeline::new(store, suite, cfg.clone());
+    let pipeline = CiPipeline::new(store, suite, cfg.clone()).with_exec(opts.exec.clone());
     anyhow::ensure!(
         !(opts.record_baseline && opts.baseline_from_archive.is_some()),
         "--record-baseline and --baseline-from-archive are mutually exclusive: \
          record a clean baseline first, then gate against it"
+    );
+    anyhow::ensure!(
+        opts.run_id.is_none() || opts.record_baseline,
+        "--run-id only applies when recording a baseline (--record-baseline)"
     );
 
     let baselines = match &opts.baseline_from_archive {
@@ -83,7 +94,9 @@ pub fn cmd(ctx: &Ctx, store: &ArtifactStore, mut cfg: RunConfig, opts: Opts) -> 
             // from the baselines, so a run recorded under a different
             // mode/compiler/batch/model set would silently gate nothing.
             // Fail loudly when coverage is zero, warn when partial.
-            let expected = expected_bench_keys(&cfg, suite)?;
+            // Under --shard only this shard's slice is measured, so only
+            // it needs baseline coverage.
+            let expected = expected_bench_keys(&cfg, suite, opts.exec.shard)?;
             let covered =
                 expected.iter().filter(|k| baselines.get(k).is_some()).count();
             anyhow::ensure!(
@@ -104,15 +117,43 @@ pub fn cmd(ctx: &Ctx, store: &ArtifactStore, mut cfg: RunConfig, opts: Opts) -> 
             baselines
         }
         None => {
+            // Capture provenance — and pre-flight any --run-id — before
+            // measuring, so a reserved or inconsistently reused id fails
+            // in milliseconds (record_scheduled re-checks at append).
+            let worklist = expected_bench_keys(&cfg, suite, None)?;
+            let meta = if opts.record_baseline {
+                let mut meta = RunMeta::capture(&cfg, "ci-baseline");
+                if opts.exec.jobs > 1 || opts.exec.shard.is_some() {
+                    meta = meta.with_parallelism(
+                        opts.exec.jobs,
+                        opts.exec.shard.map(|s| s.to_string()),
+                    );
+                }
+                if let Some(id) = &opts.run_id {
+                    meta = meta.with_run_id(id)?;
+                    ctx.archive.check_run_id_reuse(
+                        &meta,
+                        &expected_bench_keys(&cfg, suite, opts.exec.shard)?,
+                        &worklist,
+                    )?;
+                }
+                Some(meta)
+            } else {
+                None
+            };
             eprintln!("recording clean baselines…");
-            let results = pipeline.run_build(&InjectedOverheads::NONE)?;
+            let indexed = pipeline.run_build_indexed(&InjectedOverheads::NONE)?;
             let mut baselines = BaselineStore::new();
-            for r in &results {
+            for (_, r) in &indexed {
                 baselines.record(r);
             }
-            if opts.record_baseline {
-                let meta = RunMeta::capture(&cfg, "ci-baseline");
-                ctx.archive.record_results(&results, &meta)?;
+            if let Some(meta) = meta {
+                let (_, meta) = ctx.archive.record_scheduled(
+                    &indexed,
+                    meta,
+                    opts.run_id.as_deref(),
+                    &worklist,
+                )?;
                 eprintln!(
                     "recorded clean baseline as {} in {}",
                     meta.run_id,
@@ -151,29 +192,25 @@ pub fn cmd(ctx: &Ctx, store: &ArtifactStore, mut cfg: RunConfig, opts: Opts) -> 
 }
 
 /// The bench keys this CI configuration will measure and gate — one per
-/// selected model, at the batch the runner would resolve.
-fn expected_bench_keys(cfg: &RunConfig, suite: &crate::suite::Suite) -> Result<Vec<String>> {
+/// selected model this invocation's shard owns, at the batch the runner
+/// would resolve. Shard indices are positions in the selection order,
+/// matching the scheduler's worklist expansion exactly.
+fn expected_bench_keys(
+    cfg: &RunConfig,
+    suite: &crate::suite::Suite,
+    shard: Option<crate::coordinator::ShardSpec>,
+) -> Result<Vec<String>> {
     let mut keys = Vec::new();
-    for entry in suite.select(&cfg.selection)? {
-        // Mirrors Runner::resolve_batch: train pins the train batch,
-        // inference honors a fixed batch override, default/sweep use
-        // the model default.
-        let batch = match cfg.mode {
-            crate::config::Mode::Train => match &entry.train {
-                Some(t) => t.batch,
-                None => continue, // inference-only model skipped in train mode
-            },
-            crate::config::Mode::Infer => match cfg.batch {
-                crate::config::BatchPolicy::Fixed(b) => b,
-                _ => entry.default_batch,
-            },
-        };
-        keys.push(crate::store::bench_key_of(
-            &entry.name,
-            cfg.mode.as_str(),
-            cfg.compiler.as_str(),
-            batch,
-        ));
+    for (i, entry) in suite.select(&cfg.selection)?.into_iter().enumerate() {
+        if !shard.map_or(true, |s| s.owns(i)) {
+            continue;
+        }
+        if cfg.mode == crate::config::Mode::Train && entry.train.is_none() {
+            continue; // inference-only model skipped in train mode
+        }
+        // Batch resolution shared with the runner (planned_bench_key →
+        // planned_batch), so predicted keys can't drift from measured.
+        keys.push(crate::coordinator::planned_bench_key(cfg, entry));
     }
     Ok(keys)
 }

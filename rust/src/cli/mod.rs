@@ -39,25 +39,52 @@ use crate::store::Archive;
 use crate::suite::Suite;
 use crate::util::Args;
 
+/// The dispatch table: every `xbench` verb with its one-line summary,
+/// in USAGE order. This is the single machine-readable source the
+/// unknown-command check and the `docs/CLI.md` drift test
+/// (`tests/cli_docs.rs`) both walk — a verb added to [`main`]'s match
+/// without a row here (or a doc section there) fails loudly.
+pub const VERBS: &[(&str, &str)] = &[
+    ("list", "suite composition (Table 1)"),
+    ("run", "run benchmarks, optionally in parallel/sharded, and record them"),
+    ("breakdown", "Host/H2D/Compute/D2H time decomposition (Fig 1/2, Table 2)"),
+    ("compare-compiler", "fused vs eager execution (Fig 3/4)"),
+    ("devices", "device profiles (Table 3)"),
+    ("compare-devices", "analytical A100 vs MI210 projection (Fig 5)"),
+    ("coverage", "operator-surface coverage (§2.3)"),
+    ("sweep", "inference batch-size doubling sweep (§2.2)"),
+    ("optim", "optimization case studies (Fig 6, §4.1)"),
+    ("ci", "nightly regression gate demo (§4.2, Table 4)"),
+    ("train", "end-to-end training loop"),
+    ("synth-artifacts", "generate the offline synthetic artifact set"),
+    ("runs", "list recorded runs in the archive"),
+    ("cmp", "ranked speedup/regression diff of two recorded runs"),
+    ("rank", "geometric-mean ranking per compiler.mode engine"),
+    ("history", "one benchmark config across all recorded runs"),
+];
+
 const USAGE: &str = "\
 xbench — benchmarking the JAX/XLA/PJRT stack with high API-surface coverage
 
 USAGE: xbench <command> [args] [--flags]
+(full per-verb reference: docs/CLI.md; measurement protocol: docs/METHODOLOGY.md)
 
 COMMANDS (paper exhibit in parens):
   list              suite composition (Table 1)
   run               run benchmarks        [--mode infer|train] [--compiler fused|eager] [--batch N]
-                                          [--record] [--note TEXT]
+                                          [--record] [--note TEXT] [--run-id ID]
+                                          [--jobs N] [--shard I/M] [--fail-fast]
   breakdown         time decomposition    (Fig 1/2 + Table 2)  [--mode infer|train]
   compare-compiler  fused vs eager        (Fig 3/4)
   devices           device profiles       (Table 3)
   compare-devices   A100 vs MI210 model   (Fig 5)
   coverage          operator surface      (§2.3, the 2.3x claim)
-  sweep             batch-size doubling sweep (§2.2)
+  sweep             batch-size doubling sweep (§2.2)  [--jobs N] [--shard I/M] [--fail-fast]
   optim             optimization studies  (Fig 6, §4.1)  [--case all|zero-grad|rsqrt|offload|guards|error-handling]
   ci                nightly gate demo     (§4.2, Table 4) [--commits N] [--faults PR..] [--seed S]
-                                          [--replay-history] [--record-baseline]
+                                          [--replay-history] [--record-baseline] [--run-id ID]
                                           [--baseline-from-archive [RUN]]
+                                          [--jobs N] [--shard I/M]
   train             E2E training loop     [--model NAME] [--steps N] [--log-every N]
   synth-artifacts   generate the offline synthetic artifact set [--seed S] [--force]
 
@@ -70,6 +97,15 @@ ARCHIVE QUERIES (read the --archive JSONL; no artifacts needed):
   history <KEY>     one benchmark config across all runs [--limit N]
                     KEY is model.mode.compiler.bN (see `runs`/`cmp` output)
   Run selectors: latest, latest~N, a run id, or a unique id prefix.
+
+EXECUTION FLAGS (run, sweep, ci):
+  --jobs N          fan the worklist out over N worker threads (default 1)
+  --shard I/M       run only shard I of M (deterministic round-robin split;
+                    results merge in worklist order — see docs/METHODOLOGY.md)
+  --fail-fast       run/sweep only: abort on the first failing config
+                    (default: collect errors; ci is always fail-fast)
+  --run-id ID       override the archive run id (shards of one logical run
+                    record under one id; run/ci recording only)
 
 GLOBAL FLAGS:
   --artifacts DIR   artifact directory (default: artifacts)
@@ -105,6 +141,35 @@ pub fn emit_table(t: &Table, csv_dir: Option<&Path>, name: &str) -> Result<()> {
         t.write_csv(&dir.join(format!("{name}.csv")))?;
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Companion to the `docs/CLI.md` drift test (`tests/cli_docs.rs`):
+    /// the hand-written USAGE screen must mention every dispatched verb,
+    /// so adding a verb to VERBS without updating `--help` fails here.
+    #[test]
+    fn usage_mentions_every_verb() {
+        for (name, _) in VERBS {
+            let name: &str = name;
+            assert!(
+                USAGE.lines().any(|l| l.trim_start().starts_with(name)),
+                "verb {name:?} is dispatched (VERBS) but missing from the USAGE text"
+            );
+        }
+    }
+
+    /// Archive verbs and the pre-manifest check both assume VERBS is
+    /// complete; a duplicate entry would make the doc drift test lie.
+    #[test]
+    fn verbs_are_unique() {
+        let mut names: Vec<&str> = VERBS.iter().map(|(n, _)| *n).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), VERBS.len(), "duplicate verb in VERBS");
+    }
 }
 
 /// Parse argv and dispatch. The `xbench` binary's whole main.
@@ -215,21 +280,10 @@ pub fn main() -> Result<()> {
         sub => {
             // Reject typos before touching the manifest or device — on a
             // bare checkout an unknown verb should say "unknown command",
-            // not "reading artifacts/manifest.json: No such file".
-            const KNOWN: [&str; 11] = [
-                "list",
-                "devices",
-                "compare-devices",
-                "coverage",
-                "run",
-                "breakdown",
-                "compare-compiler",
-                "sweep",
-                "optim",
-                "ci",
-                "train",
-            ];
-            if !KNOWN.contains(&sub) {
+            // not "reading artifacts/manifest.json: No such file". The
+            // archive-only verbs were dispatched above, so membership in
+            // the full VERBS table is the right check here.
+            if !VERBS.iter().any(|(name, _)| *name == sub) {
                 eprint!("unknown command {sub:?}\n\n{USAGE}");
                 std::process::exit(2);
             }
@@ -267,10 +321,16 @@ pub fn main() -> Result<()> {
                             if let Some(b) = args.get_opt("batch")? {
                                 cfg.batch = BatchPolicy::Fixed(b.parse()?);
                             }
+                            let exec = crate::coordinator::ExecOpts::from_args(&mut args)?;
                             let record = args.has("record");
                             let note = args.get_str("note", "")?;
+                            let run_id = args.get_opt("run-id")?;
+                            anyhow::ensure!(
+                                run_id.is_none() || record,
+                                "--run-id only applies when recording (--record)"
+                            );
                             args.finish()?;
-                            run::cmd(&ctx, &store, cfg, record, &note)
+                            run::cmd(&ctx, &store, cfg, &exec, record, &note, run_id.as_deref())
                         }
                         "breakdown" => {
                             let mut cfg = ctx.base_cfg.clone();
@@ -283,8 +343,9 @@ pub fn main() -> Result<()> {
                             compare_compiler::cmd(&ctx, &store, ctx.base_cfg.clone())
                         }
                         "sweep" => {
+                            let exec = crate::coordinator::ExecOpts::from_args(&mut args)?;
                             args.finish()?;
-                            sweep::cmd(&ctx, &store, ctx.base_cfg.clone())
+                            sweep::cmd(&ctx, &store, ctx.base_cfg.clone(), &exec)
                         }
                         "optim" => {
                             let case = args.get_str("case", "all")?;
@@ -292,7 +353,16 @@ pub fn main() -> Result<()> {
                             optim::cmd(&ctx, &store, &case)
                         }
                         "ci" => {
+                            let exec = crate::coordinator::ExecOpts::from_args(&mut args)?;
+                            anyhow::ensure!(
+                                !exec.fail_fast,
+                                "--fail-fast doesn't apply to ci: gate builds are always \
+                                 fail-fast (a gate over partial measurements would pass \
+                                 silently)"
+                            );
                             let opts = ci::Opts {
+                                exec,
+                                run_id: args.get_opt("run-id")?,
                                 commits: args.get_usize("commits", 70)?,
                                 fault_prs: {
                                     let fault_strs = args.get_many("faults");

@@ -1,60 +1,121 @@
 //! `xbench run` — the workhorse benchmark command; with `--record` it
 //! appends one [`RunRecord`](crate::store::RunRecord) per benchmark
 //! config to the persistent archive.
+//!
+//! Execution goes through the [`crate::coordinator::sched`] engine:
+//! `--jobs N` fans the expanded worklist out across worker threads,
+//! `--shard I/M` restricts this invocation to a deterministic slice of
+//! it (multi-host CI), and results are reassembled in worklist order so
+//! the table, the archive, and the gate see exactly what a serial run
+//! would have produced.
 
 use anyhow::Result;
 
 use crate::config::RunConfig;
-use crate::coordinator::Runner;
+use crate::coordinator::{planned_bench_key, run_partitioned, ExecOpts, Runner, ShardSpec};
 use crate::report::{fmt_pct, fmt_secs, Table};
-use crate::runtime::ArtifactStore;
+use crate::runtime::{ArtifactStore, ModelEntry};
 use crate::store::RunMeta;
 
 use super::Ctx;
+
+/// Bench keys of the worklist, in worklist (= `seq`) order, derived
+/// without running anything (batch via
+/// [`planned_bench_key`](crate::coordinator::planned_bench_key)).
+/// `shard = None` gives the full worklist; `Some` restricts to one
+/// shard's slice — what the pre-flight `--run-id` reuse guard checks
+/// before any benchmark has spent wall time.
+fn expected_keys(
+    cfg: &RunConfig,
+    entries: &[&ModelEntry],
+    shard: Option<ShardSpec>,
+) -> Vec<String> {
+    entries
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| shard.map_or(true, |s| s.owns(*i)))
+        .map(|(_, e)| planned_bench_key(cfg, e))
+        .collect()
+}
 
 pub fn cmd(
     ctx: &Ctx,
     store: &ArtifactStore,
     cfg: RunConfig,
+    exec: &ExecOpts,
     record: bool,
     note: &str,
+    run_id: Option<&str>,
 ) -> Result<()> {
     let suite = &ctx.suite;
+    // Expand the selection into the full config worklist. Sharding
+    // partitions *this* list, so every shard agrees on global indices.
     let benches = suite.benches(&cfg.selection, cfg.mode)?;
+    let entries = benches
+        .iter()
+        .map(|b| suite.model(&b.model))
+        .collect::<Result<Vec<_>>>()?;
+    let labels: Vec<String> = benches.iter().map(|b| b.to_string()).collect();
+
+    // Capture provenance — and validate any `--run-id` against the
+    // archive — *before* measuring: a reserved id or an already-
+    // recorded shard must fail in milliseconds, not after the suite
+    // has burned hours of wall time. (`record_scheduled` re-checks at
+    // append time, guarding the keys actually written.)
+    let worklist_keys = expected_keys(&cfg, &entries, None);
+    let meta = if record {
+        let mut meta = RunMeta::capture(&cfg, note);
+        if exec.jobs > 1 || exec.shard.is_some() {
+            meta = meta.with_parallelism(exec.jobs, exec.shard.map(|s| s.to_string()));
+        }
+        if let Some(id) = run_id {
+            meta = meta.with_run_id(id)?;
+            ctx.archive.check_run_id_reuse(
+                &meta,
+                &expected_keys(&cfg, &entries, exec.shard),
+                &worklist_keys,
+            )?;
+        }
+        Some(meta)
+    } else {
+        None
+    };
+
+    let cfg_ref = &cfg;
+    let outcome = run_partitioned(exec, store, &entries, &labels, "run", |st, entry| {
+        Runner::new(st, cfg_ref.clone()).run_model(entry)
+    })?;
+
     let mut t = Table::new(
         format!("Benchmark results ({}, {})", cfg.mode.as_str(), cfg.compiler.as_str()),
         &["model", "batch", "iter time", "throughput/s", "active", "movement", "idle"],
     );
-    let mut results = Vec::with_capacity(benches.len());
-    for b in benches {
-        let entry = suite.model(&b.model)?;
-        let runner = Runner::new(store, cfg.clone());
-        match runner.run_model(entry) {
-            Ok(r) => {
-                t.row(vec![
-                    r.model.clone(),
-                    r.batch.to_string(),
-                    fmt_secs(r.iter_secs),
-                    format!("{:.1}", r.throughput),
-                    fmt_pct(r.breakdown.active),
-                    fmt_pct(r.breakdown.movement),
-                    fmt_pct(r.breakdown.idle),
-                ]);
-                results.push(r);
-            }
-            Err(e) => eprintln!("skip {}: {e}", b.model),
-        }
+    for (_, r) in &outcome.completed {
+        t.row(vec![
+            r.model.clone(),
+            r.batch.to_string(),
+            fmt_secs(r.iter_secs),
+            format!("{:.1}", r.throughput),
+            fmt_pct(r.breakdown.active),
+            fmt_pct(r.breakdown.movement),
+            fmt_pct(r.breakdown.idle),
+        ]);
+    }
+    for e in &outcome.errors {
+        eprintln!("skip {}: {}", e.label, e.message);
     }
     ctx.emit(&t, "run")?;
 
     if record {
-        if results.is_empty() {
+        if outcome.completed.is_empty() {
             // Don't hand the user a run id that was never written
             // (Archive::append is a no-op on an empty batch).
             anyhow::bail!("no benchmark succeeded; nothing recorded");
         }
-        let meta = RunMeta::capture(&cfg, note);
-        let records = ctx.archive.record_results(&results, &meta)?;
+        let meta = meta.expect("meta captured above whenever record is set");
+        let (records, meta) =
+            ctx.archive
+                .record_scheduled(&outcome.completed, meta, run_id, &worklist_keys)?;
         eprintln!(
             "recorded {} configs as {} (commit {}, host {}) in {}",
             records.len(),

@@ -1,35 +1,48 @@
 //! `xbench sweep` — inference batch-size doubling sweep (paper §2.2).
+//!
+//! Each sweep-tagged model is one worklist item (its whole batch ladder
+//! runs on one worker, since ladder points share compiled artifacts);
+//! `--jobs`/`--shard` parallelize and partition across models.
 
 use anyhow::Result;
 
 use crate::config::RunConfig;
-use crate::coordinator::{sweep_model, Runner};
+use crate::coordinator::{run_partitioned, sweep_model, ExecOpts, Runner};
 use crate::report::{fmt_secs, Table};
 use crate::runtime::ArtifactStore;
 
-use super::Ctx;
-
-pub fn cmd(ctx: &Ctx, store: &ArtifactStore, cfg: RunConfig) -> Result<()> {
+pub fn cmd(ctx: &super::Ctx, store: &ArtifactStore, cfg: RunConfig, exec: &ExecOpts) -> Result<()> {
     let suite = &ctx.suite;
+    let models: Vec<&crate::runtime::ModelEntry> = suite
+        .select(&cfg.selection)?
+        .into_iter()
+        .filter(|m| m.has_tag("sweep"))
+        .collect();
+    let labels: Vec<String> = models.iter().map(|m| m.name.clone()).collect();
+
+    let cfg_ref = &cfg;
+    let outcome = run_partitioned(exec, store, &models, &labels, "sweep", |st, m| {
+        let runner = Runner::new(st, cfg_ref.clone());
+        sweep_model(&runner, m)
+    })?;
+
     let mut t = Table::new(
         "Inference batch-size sweep (paper §2.2)",
         &["model", "batch", "iter time", "throughput/s", "best"],
     );
-    for m in suite.select(&cfg.selection)? {
-        if !m.has_tag("sweep") {
-            continue;
-        }
-        let runner = Runner::new(store, cfg.clone());
-        let sweep = sweep_model(&runner, m)?;
+    for (_, sweep) in &outcome.completed {
         for p in &sweep.points {
             t.row(vec![
-                m.name.clone(),
+                sweep.model.clone(),
                 p.batch.to_string(),
                 fmt_secs(p.iter_secs),
                 format!("{:.1}", p.throughput),
                 if p.batch == sweep.best_batch { "*".into() } else { "".into() },
             ]);
         }
+    }
+    for e in &outcome.errors {
+        eprintln!("skip {}: {}", e.label, e.message);
     }
     ctx.emit(&t, "sweep")
 }

@@ -13,19 +13,32 @@
 //! - [`env`]: the host-side RL environment that reproduces §3.1's RL
 //!   idleness structurally;
 //! - [`hooks`]: injected-overhead knobs the CI fault catalog (§4.2) maps
-//!   onto.
+//!   onto;
+//! - [`sched`]: the parallel, shardable suite scheduler (`--jobs N`,
+//!   `--shard I/M`) — expands a selection into the full config worklist,
+//!   deterministically partitions it, fans it out over worker threads,
+//!   and reassembles results in worklist order.
+//!
+//! Results flow *out* of this layer as [`RunResult`]s: the CLI renders
+//! them, [`crate::store`] stamps them into durable
+//! [`RunRecord`](crate::store::RunRecord)s, and [`crate::ci`] gates them
+//! against archive-derived baselines. See `docs/METHODOLOGY.md` for the
+//! measurement protocol and the determinism guarantees of parallel and
+//! sharded execution.
 
 pub mod eager;
 pub mod env;
 pub mod guards;
 pub mod hooks;
 pub mod runner;
+pub mod sched;
 pub mod sweep;
 pub mod train;
 
 pub use env::CartPoleSim;
 pub use guards::GuardSet;
 pub use hooks::InjectedOverheads;
-pub use runner::{RunResult, Runner};
+pub use runner::{planned_batch, planned_bench_key, RunResult, Runner};
+pub use sched::{run_partitioned, ExecOpts, SchedError, SchedOutcome, ShardSpec};
 pub use sweep::{sweep_model, SweepResult};
 pub use train::{train_loop, TrainRun};

@@ -53,6 +53,33 @@ impl RunResult {
     }
 }
 
+/// The batch size a config *plans* to run a model at — the pure
+/// (no artifact validation) twin of [`Runner::resolve_batch`], shared
+/// with key-prediction paths (`ci`'s coverage check, `run`'s
+/// pre-flight `--run-id` guard) so predicted bench keys can never
+/// drift from what the runner measures.
+pub fn planned_batch(cfg: &RunConfig, entry: &ModelEntry) -> usize {
+    match (cfg.mode, cfg.batch) {
+        // Training always uses the model default (paper: batch size
+        // affects convergence, so training is never swept).
+        (Mode::Train, _) => entry.train.as_ref().map(|t| t.batch).unwrap_or(entry.default_batch),
+        (Mode::Infer, BatchPolicy::Fixed(b)) => b,
+        // Sweep is expanded by coordinator::sweep; default here.
+        (Mode::Infer, BatchPolicy::Default | BatchPolicy::Sweep) => entry.default_batch,
+    }
+}
+
+/// The bench key a config will record for a model (see
+/// [`planned_batch`]; key format via [`crate::store::bench_key_of`]).
+pub fn planned_bench_key(cfg: &RunConfig, entry: &ModelEntry) -> String {
+    crate::store::bench_key_of(
+        &entry.name,
+        cfg.mode.as_str(),
+        cfg.compiler.as_str(),
+        planned_batch(cfg, entry),
+    )
+}
+
 /// The coordinator's benchmark runner.
 pub struct Runner<'a> {
     pub store: &'a ArtifactStore,
@@ -70,25 +97,18 @@ impl<'a> Runner<'a> {
         self
     }
 
-    /// Resolve the batch size this config runs a model at.
+    /// Resolve the batch size this config runs a model at, validating
+    /// that the needed inference artifact exists.
     pub fn resolve_batch(&self, entry: &ModelEntry) -> Result<usize> {
-        Ok(match (self.cfg.mode, self.cfg.batch) {
-            // Training always uses the model default (paper: batch size
-            // affects convergence, so training is never swept).
-            (Mode::Train, _) => entry.train.as_ref().map(|t| t.batch).unwrap_or(entry.default_batch),
-            (Mode::Infer, BatchPolicy::Default) => entry.default_batch,
-            (Mode::Infer, BatchPolicy::Fixed(b)) => {
-                anyhow::ensure!(
-                    entry.infer_at(b).is_some(),
-                    "{}: no inference artifact at batch {b} (have {:?})",
-                    entry.name,
-                    entry.infer_batches()
-                );
-                b
-            }
-            // Sweep is expanded by coordinator::sweep; default here.
-            (Mode::Infer, BatchPolicy::Sweep) => entry.default_batch,
-        })
+        if let (Mode::Infer, BatchPolicy::Fixed(b)) = (self.cfg.mode, self.cfg.batch) {
+            anyhow::ensure!(
+                entry.infer_at(b).is_some(),
+                "{}: no inference artifact at batch {b} (have {:?})",
+                entry.name,
+                entry.infer_batches()
+            );
+        }
+        Ok(planned_batch(&self.cfg, entry))
     }
 
     /// Run one model under this config.

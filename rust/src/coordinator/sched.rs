@@ -1,0 +1,473 @@
+//! The parallel, shardable suite scheduler.
+//!
+//! The paper's value comes from sweeping a large config surface (model ×
+//! mode × compiler × batch) often enough to catch daily regressions
+//! (§2.2, §5); a serial runner makes suite wall-time scale linearly with
+//! every model added. This module turns a selection's expanded worklist
+//! into a deterministically partitioned, parallel execution:
+//!
+//! - [`ShardSpec`] (`--shard I/M`): round-robin partition of the
+//!   worklist for multi-host CI splits. Shard `I` of `M` owns exactly
+//!   the items whose worklist index `i` satisfies `i % M == I`, so the
+//!   partition depends only on the worklist order — never on timing.
+//! - [`ExecOpts`] (`--jobs N`, `--fail-fast`): intra-host worker-thread
+//!   fan-out over a shared queue (work-stealing: idle workers claim the
+//!   next unclaimed index), plus the error policy.
+//! - [`run_partitioned`]: the engine. Workers emit `(index, result)`
+//!   and the coordinator reassembles in worklist order before anything
+//!   downstream (tables, gating, archive recording) sees them, so a
+//!   parallel run's output is ordered identically to a serial run's.
+//!
+//! Each worker thread brings up its own device + [`ArtifactStore`]
+//! (the store is deliberately single-threaded — `Rc`/`RefCell`), so
+//! executables are compiled once per worker, not shared across threads.
+//! With `--jobs 1` no threads are spawned and the caller's store is
+//! used directly — byte-for-byte the old serial behavior.
+//!
+//! Cost note: workers live for one [`run_partitioned`] call, so a
+//! caller that fans out repeatedly (`ci` runs one build per nightly
+//! day) re-compiles each artifact per worker per call. That never
+//! skews *measurements* — compilation is excluded from the §2.2 timed
+//! protocol — but it is wall-time overhead on the real PJRT backend;
+//! a persistent worker pool is the natural follow-up once fleets get
+//! big enough to care (see ROADMAP).
+
+use anyhow::Result;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+use crate::report::Progress;
+use crate::runtime::{ArtifactStore, Device};
+use crate::util::Args;
+
+/// One shard of a deterministically partitioned worklist: `--shard I/M`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// Zero-based shard index.
+    pub index: usize,
+    /// Total shard count (>= 1).
+    pub total: usize,
+}
+
+impl ShardSpec {
+    /// Parse `"I/M"` (e.g. `"0/2"`). Rejects `M == 0` and `I >= M`.
+    pub fn parse(s: &str) -> Result<ShardSpec> {
+        let (i, m) = s.split_once('/').ok_or_else(|| {
+            anyhow::anyhow!("bad shard spec {s:?}: expected I/M (e.g. 0/2)")
+        })?;
+        let index: usize = i
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad shard index in {s:?}: {e}"))?;
+        let total: usize = m
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad shard count in {s:?}: {e}"))?;
+        anyhow::ensure!(total >= 1, "bad shard spec {s:?}: total shards must be >= 1");
+        anyhow::ensure!(
+            index < total,
+            "bad shard spec {s:?}: index {index} out of range for {total} shard(s)"
+        );
+        Ok(ShardSpec { index, total })
+    }
+
+    /// Does this shard own worklist index `i`? Round-robin: balanced
+    /// regardless of how domains cluster in the manifest order.
+    pub fn owns(&self, i: usize) -> bool {
+        i % self.total == self.index
+    }
+}
+
+impl std::fmt::Display for ShardSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}", self.index, self.total)
+    }
+}
+
+/// How a suite execution fans out and fails: `--jobs`, `--shard`,
+/// `--fail-fast`.
+#[derive(Debug, Clone, Default)]
+pub struct ExecOpts {
+    /// Worker threads (0 is normalized to 1; 1 = serial, no threads).
+    pub jobs: usize,
+    /// Worklist partition this invocation runs (None = all of it).
+    pub shard: Option<ShardSpec>,
+    /// Abort on the first failing config instead of collecting errors
+    /// and finishing the rest of the worklist.
+    pub fail_fast: bool,
+}
+
+impl ExecOpts {
+    /// Serial, unsharded, collect-errors — the pre-scheduler behavior.
+    pub const SERIAL: ExecOpts = ExecOpts { jobs: 1, shard: None, fail_fast: false };
+
+    /// Parse `--jobs N`, `--shard I/M`, `--fail-fast` from a command
+    /// line (shared by the `run`, `sweep`, and `ci` verbs).
+    pub fn from_args(args: &mut Args) -> Result<ExecOpts> {
+        let jobs = args.get_usize("jobs", 1)?;
+        anyhow::ensure!(jobs >= 1, "--jobs must be >= 1");
+        let shard = match args.get_opt("shard")? {
+            Some(s) => Some(ShardSpec::parse(&s)?),
+            None => None,
+        };
+        Ok(ExecOpts { jobs, shard, fail_fast: args.has("fail-fast") })
+    }
+}
+
+/// One failed worklist item (collect-errors policy).
+#[derive(Debug)]
+pub struct SchedError {
+    /// Global (unsharded) worklist index.
+    pub seq: usize,
+    /// Human label of the item (model / bench key).
+    pub label: String,
+    /// Rendered error chain.
+    pub message: String,
+}
+
+/// Reassembled outcome of a partitioned execution.
+#[derive(Debug)]
+pub struct SchedOutcome<T> {
+    /// Successful results as `(global worklist index, result)`,
+    /// ascending by index — identical order to a serial run.
+    pub completed: Vec<(usize, T)>,
+    /// Failed items, ascending by index (empty under fail-fast: the
+    /// first failure is returned as an `Err` instead).
+    pub errors: Vec<SchedError>,
+    /// Full (unsharded) worklist length.
+    pub worklist_len: usize,
+    /// Items this invocation's shard owned.
+    pub ran: usize,
+}
+
+enum Msg<T> {
+    Done(usize, std::result::Result<T, String>),
+    /// A worker could not bring up its device/store at all.
+    Fatal(String),
+}
+
+/// Execute `f` over every worklist item this shard owns, fanning out
+/// across `opts.jobs` worker threads, and reassemble results in
+/// worklist order.
+///
+/// `items` is the *full* worklist (sharding is applied here, so every
+/// shard computes the same global indices); `labels` names each item
+/// for progress lines and error messages (`labels.len() == items.len()`).
+/// `f` receives a per-worker [`ArtifactStore`] — the caller's `store`
+/// on the serial path, a worker-private one (same artifact dir) on the
+/// parallel path.
+pub fn run_partitioned<I, T, F>(
+    opts: &ExecOpts,
+    store: &ArtifactStore,
+    items: &[I],
+    labels: &[String],
+    what: &str,
+    f: F,
+) -> Result<SchedOutcome<T>>
+where
+    I: Sync,
+    T: Send,
+    F: Fn(&ArtifactStore, &I) -> Result<T> + Sync,
+{
+    assert_eq!(items.len(), labels.len(), "one label per worklist item");
+    let work: Vec<usize> = (0..items.len())
+        .filter(|i| opts.shard.map_or(true, |s| s.owns(*i)))
+        .collect();
+    if let Some(s) = opts.shard {
+        eprintln!(
+            "shard {s}: {} of {} worklist item(s)",
+            work.len(),
+            items.len()
+        );
+    }
+    let progress = Progress::new(what, work.len());
+    let jobs = opts.jobs.max(1).min(work.len().max(1));
+
+    let mut completed: Vec<(usize, T)> = Vec::with_capacity(work.len());
+    let mut errors: Vec<SchedError> = Vec::new();
+
+    if jobs <= 1 {
+        // Serial path: caller's store, caller's thread, worklist order.
+        for &seq in &work {
+            match f(store, &items[seq]) {
+                Ok(t) => {
+                    progress.tick(&labels[seq], "ok");
+                    completed.push((seq, t));
+                }
+                Err(e) => {
+                    progress.tick(&labels[seq], "FAILED");
+                    if opts.fail_fast {
+                        return Err(e.context(format!("{what} {}", labels[seq])));
+                    }
+                    errors.push(SchedError {
+                        seq,
+                        label: labels[seq].clone(),
+                        message: format!("{e:#}"),
+                    });
+                }
+            }
+        }
+    } else {
+        let next = AtomicUsize::new(0);
+        let stop = AtomicBool::new(false);
+        let artifacts: PathBuf = store.dir().to_path_buf();
+        let (tx, rx) = mpsc::channel::<Msg<T>>();
+        let mut fatal: Option<String> = None;
+
+        std::thread::scope(|scope| {
+            for w in 0..jobs {
+                let tx = tx.clone();
+                let work = &work;
+                let next = &next;
+                let stop = &stop;
+                let f = &f;
+                let artifacts = artifacts.clone();
+                scope.spawn(move || {
+                    // Per-worker device + store: compile-once-per-worker,
+                    // no shared mutable state across threads.
+                    let device = match Device::cpu() {
+                        Ok(d) => Rc::new(d),
+                        Err(e) => {
+                            let _ = tx.send(Msg::Fatal(format!(
+                                "worker {w}: creating device: {e:#}"
+                            )));
+                            return;
+                        }
+                    };
+                    let wstore = ArtifactStore::new(device, artifacts);
+                    loop {
+                        if stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        // The shared queue: claiming an index is the
+                        // steal, so whichever worker is idle takes the
+                        // next item.
+                        let slot = next.fetch_add(1, Ordering::Relaxed);
+                        if slot >= work.len() {
+                            break;
+                        }
+                        let seq = work[slot];
+                        let res = f(&wstore, &items[seq]).map_err(|e| format!("{e:#}"));
+                        if tx.send(Msg::Done(seq, res)).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+            drop(tx);
+
+            // Coordinator: drain as results land (completion order),
+            // reassembly to worklist order happens after the scope.
+            for msg in rx {
+                match msg {
+                    Msg::Done(seq, Ok(t)) => {
+                        progress.tick(&labels[seq], "ok");
+                        completed.push((seq, t));
+                    }
+                    Msg::Done(seq, Err(message)) => {
+                        progress.tick(&labels[seq], "FAILED");
+                        if opts.fail_fast {
+                            stop.store(true, Ordering::Relaxed);
+                        }
+                        errors.push(SchedError {
+                            seq,
+                            label: labels[seq].clone(),
+                            message,
+                        });
+                    }
+                    Msg::Fatal(message) => {
+                        stop.store(true, Ordering::Relaxed);
+                        if fatal.is_none() {
+                            fatal = Some(message);
+                        }
+                    }
+                }
+            }
+        });
+
+        if let Some(message) = fatal {
+            anyhow::bail!("{what}: {message}");
+        }
+    }
+
+    // Reassemble: downstream consumers (tables, gate, archive) must see
+    // worklist order regardless of completion order.
+    completed.sort_by_key(|(seq, _)| *seq);
+    errors.sort_by_key(|e| e.seq);
+    if opts.fail_fast {
+        if let Some(e) = errors.first() {
+            anyhow::bail!("{what} {}: {}", e.label, e.message);
+        }
+    }
+    Ok(SchedOutcome {
+        completed,
+        errors,
+        worklist_len: items.len(),
+        ran: work.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_store() -> ArtifactStore {
+        ArtifactStore::new(
+            Rc::new(Device::cpu().expect("sim device")),
+            std::env::temp_dir(),
+        )
+    }
+
+    fn labels(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("item-{i}")).collect()
+    }
+
+    #[test]
+    fn shard_spec_parses_and_rejects() {
+        let s = ShardSpec::parse("0/2").unwrap();
+        assert_eq!((s.index, s.total), (0, 2));
+        assert_eq!(s.to_string(), "0/2");
+        assert_eq!(ShardSpec::parse("1/2").unwrap().index, 1);
+        assert!(ShardSpec::parse("3/2").is_err());
+        assert!(ShardSpec::parse("0/0").is_err());
+        assert!(ShardSpec::parse("2/2").is_err());
+        assert!(ShardSpec::parse("x/2").is_err());
+        assert!(ShardSpec::parse("1of2").is_err());
+        assert!(ShardSpec::parse("-1/2").is_err());
+    }
+
+    #[test]
+    fn shards_partition_the_worklist_exactly() {
+        let total = 3;
+        let n = 10;
+        let mut seen = vec![0usize; n];
+        for index in 0..total {
+            let s = ShardSpec { index, total };
+            for (i, hit) in seen.iter_mut().enumerate() {
+                if s.owns(i) {
+                    *hit += 1;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "{seen:?}");
+    }
+
+    #[test]
+    fn parallel_results_match_serial_order() {
+        let items: Vec<usize> = (0..17).collect();
+        let f = |_: &ArtifactStore, i: &usize| -> Result<String> {
+            // Finish out of order on purpose.
+            std::thread::sleep(std::time::Duration::from_millis(((17 - *i) % 5) as u64));
+            Ok(format!("r{i}"))
+        };
+        let store = test_store();
+        let serial = run_partitioned(
+            &ExecOpts::SERIAL, &store, &items, &labels(17), "t", f,
+        )
+        .unwrap();
+        let parallel = run_partitioned(
+            &ExecOpts { jobs: 4, ..ExecOpts::SERIAL }, &store, &items, &labels(17), "t", f,
+        )
+        .unwrap();
+        let flat = |o: &SchedOutcome<String>| -> Vec<(usize, String)> {
+            o.completed.iter().map(|(s, t)| (*s, t.clone())).collect()
+        };
+        assert_eq!(flat(&serial), flat(&parallel));
+        assert_eq!(parallel.worklist_len, 17);
+        assert_eq!(parallel.ran, 17);
+    }
+
+    #[test]
+    fn sharded_runs_merge_to_the_serial_worklist() {
+        let items: Vec<usize> = (0..9).collect();
+        let f = |_: &ArtifactStore, i: &usize| -> Result<usize> { Ok(i * 10) };
+        let store = test_store();
+        let serial =
+            run_partitioned(&ExecOpts::SERIAL, &store, &items, &labels(9), "t", f).unwrap();
+        let mut merged: Vec<(usize, usize)> = Vec::new();
+        for index in 0..2 {
+            let opts = ExecOpts {
+                jobs: 2,
+                shard: Some(ShardSpec { index, total: 2 }),
+                fail_fast: false,
+            };
+            let out = run_partitioned(&opts, &store, &items, &labels(9), "t", f).unwrap();
+            assert_eq!(out.worklist_len, 9);
+            assert!(out.completed.iter().all(|(s, _)| s % 2 == index));
+            merged.extend(out.completed);
+        }
+        merged.sort_by_key(|(s, _)| *s);
+        assert_eq!(merged, serial.completed);
+    }
+
+    #[test]
+    fn collect_errors_policy_reports_and_continues() {
+        let items: Vec<usize> = (0..6).collect();
+        let f = |_: &ArtifactStore, i: &usize| -> Result<usize> {
+            anyhow::ensure!(i % 3 != 1, "planted failure at {i}");
+            Ok(*i)
+        };
+        let store = test_store();
+        for jobs in [1, 3] {
+            let opts = ExecOpts { jobs, ..ExecOpts::SERIAL };
+            let out = run_partitioned(&opts, &store, &items, &labels(6), "t", f).unwrap();
+            assert_eq!(
+                out.completed.iter().map(|(s, _)| *s).collect::<Vec<_>>(),
+                vec![0, 2, 3, 5]
+            );
+            assert_eq!(out.errors.len(), 2);
+            assert_eq!(out.errors[0].seq, 1);
+            assert_eq!(out.errors[1].seq, 4);
+            assert!(out.errors[0].message.contains("planted failure"));
+        }
+    }
+
+    #[test]
+    fn fail_fast_policy_errors_out() {
+        let items: Vec<usize> = (0..6).collect();
+        let f = |_: &ArtifactStore, i: &usize| -> Result<usize> {
+            anyhow::ensure!(*i != 2, "planted failure at {i}");
+            Ok(*i)
+        };
+        let store = test_store();
+        for jobs in [1, 3] {
+            let opts = ExecOpts { jobs, fail_fast: true, ..ExecOpts::SERIAL };
+            let err = run_partitioned(&opts, &store, &items, &labels(6), "t", f)
+                .map(|o| o.completed.len())
+                .unwrap_err();
+            assert!(format!("{err:#}").contains("planted failure"), "{err:#}");
+        }
+    }
+
+    #[test]
+    fn exec_opts_parse_from_args() {
+        let mut args = Args::parse(
+            ["run", "--jobs", "8", "--shard", "1/4", "--fail-fast"]
+                .into_iter()
+                .map(String::from),
+        )
+        .unwrap();
+        let opts = ExecOpts::from_args(&mut args).unwrap();
+        assert_eq!(opts.jobs, 8);
+        assert_eq!(opts.shard, Some(ShardSpec { index: 1, total: 4 }));
+        assert!(opts.fail_fast);
+        args.finish().unwrap();
+
+        let mut bare = Args::parse(["run".to_string()].into_iter()).unwrap();
+        let opts = ExecOpts::from_args(&mut bare).unwrap();
+        assert_eq!(opts.jobs, 1);
+        assert!(opts.shard.is_none());
+        assert!(!opts.fail_fast);
+
+        let mut bad = Args::parse(
+            ["run", "--shard", "3/2"].into_iter().map(String::from),
+        )
+        .unwrap();
+        assert!(ExecOpts::from_args(&mut bad).is_err());
+        let mut zero = Args::parse(
+            ["run", "--jobs", "0"].into_iter().map(String::from),
+        )
+        .unwrap();
+        assert!(ExecOpts::from_args(&mut zero).is_err());
+    }
+}

@@ -12,6 +12,34 @@
 //!
 //! Entry points: the `xbench` binary (see `main.rs`) or the library
 //! modules below; `examples/` shows the public API on realistic flows.
+//!
+//! # How results flow through the crate
+//!
+//! ```text
+//! suite selection ──► coordinator (sched + runner) ──► RunResult
+//!                        │  --jobs N worker threads,
+//!                        │  --shard I/M worklist slice,
+//!                        │  reassembled in worklist order
+//!                        ▼
+//!                     store (RunRecord → append-only JSONL archive)
+//!                        │  run --record / ci --record-baseline
+//!                        ▼
+//!                     ci (BaselineStore::from_archive → 7% Detector)
+//! ```
+//!
+//! - [`suite`] expands a selection into the benchmark worklist;
+//! - [`coordinator`] measures each config under the §2.2 protocol,
+//!   in parallel and/or sharded ([`coordinator::sched`]) with results
+//!   reassembled in worklist order;
+//! - [`store`] makes measurements durable and queryable
+//!   (`runs`/`cmp`/`rank`/`history`);
+//! - [`ci`] gates tonight's numbers against archive-derived baselines
+//!   and bisects regressions to a culprit commit.
+//!
+//! The measurement protocol and the determinism guarantees of parallel
+//! and sharded execution are specified in `docs/METHODOLOGY.md`; the
+//! full command surface is documented in `docs/CLI.md` (kept honest by
+//! `tests/cli_docs.rs`).
 
 pub mod ci;
 pub mod cli;

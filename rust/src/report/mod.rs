@@ -101,6 +101,37 @@ impl Table {
     }
 }
 
+/// Live progress lines for long suite executions (`[run 3/7] gpt_tiny:
+/// ok`), printed to stderr so stdout stays clean table output.
+///
+/// The counter is atomic so the scheduler's coordinator thread can tick
+/// it while workers run; ticks count *completions*, which under
+/// parallel execution arrive out of worklist order — the line names the
+/// item so interleaving stays readable.
+#[derive(Debug)]
+pub struct Progress {
+    what: String,
+    total: usize,
+    done: std::sync::atomic::AtomicUsize,
+}
+
+impl Progress {
+    pub fn new(what: impl Into<String>, total: usize) -> Progress {
+        Progress { what: what.into(), total, done: std::sync::atomic::AtomicUsize::new(0) }
+    }
+
+    /// Report one finished item with its outcome ("ok" / "FAILED").
+    pub fn tick(&self, label: &str, outcome: &str) {
+        let n = self.done.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
+        eprintln!("[{} {n}/{}] {label}: {outcome}", self.what, self.total);
+    }
+
+    /// Completions so far.
+    pub fn done(&self) -> usize {
+        self.done.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
 /// Format seconds human-readably (µs/ms/s).
 pub fn fmt_secs(s: f64) -> String {
     if s < 1e-3 {

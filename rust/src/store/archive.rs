@@ -11,6 +11,11 @@ use std::path::{Path, PathBuf};
 
 use super::record::RunRecord;
 
+/// Shard total `M` out of an `"I/M"` provenance string.
+fn shard_total(spec: &str) -> Option<usize> {
+    spec.split_once('/').and_then(|(_, m)| m.parse().ok())
+}
+
 /// Handle to an archive file (which may not exist yet).
 #[derive(Debug, Clone)]
 pub struct Archive {
@@ -56,20 +61,142 @@ impl Archive {
             .with_context(|| format!("appending to {}", self.path.display()))
     }
 
-    /// Stamp runner results with run provenance and append them — the
-    /// one recording path `run --record` and `ci --record-baseline`
-    /// share. Returns the records written.
-    pub fn record_results(
+    /// Stamp scheduler output with run provenance and append it: each
+    /// result is stamped with its *global* worklist index (`seq`), so a
+    /// sharded run's records can be merged back into serial worklist
+    /// order no matter which shard/archive they landed in. CLI verbs
+    /// should go through [`Archive::record_scheduled`] instead, which
+    /// adds the `--run-id` validation and reuse guard.
+    pub fn record_indexed(
         &self,
-        results: &[crate::coordinator::RunResult],
+        results: &[(usize, crate::coordinator::RunResult)],
         meta: &super::record::RunMeta,
     ) -> Result<Vec<RunRecord>> {
         let records: Vec<RunRecord> = results
             .iter()
-            .map(|r| RunRecord::from_result(r, meta))
+            .map(|(seq, r)| RunRecord::from_result(r, meta).with_seq(*seq))
             .collect();
         self.append(&records)?;
         Ok(records)
+    }
+
+    /// The one recording path the CLI's `run --record` and
+    /// `ci --record-baseline` share: apply an optional `--run-id`
+    /// override (validated, and guarded against unsafe reuse via
+    /// [`Archive::check_run_id_reuse`]), then append. Worklist-index
+    /// (`seq`) provenance is stamped only when `meta` carries
+    /// parallelism (see `RunMeta::with_parallelism`), so plain serial
+    /// runs keep writing v1-shaped lines plus only the version key.
+    /// Returns the records written and the (possibly re-identified)
+    /// meta.
+    pub fn record_scheduled(
+        &self,
+        results: &[(usize, crate::coordinator::RunResult)],
+        meta: super::record::RunMeta,
+        run_id: Option<&str>,
+        worklist: &[String],
+    ) -> Result<(Vec<RunRecord>, super::record::RunMeta)> {
+        let meta = match run_id {
+            Some(id) => {
+                let meta = meta.with_run_id(id)?;
+                let keys: Vec<String> =
+                    results.iter().map(|(_, r)| r.bench_key()).collect();
+                self.check_run_id_reuse(&meta, &keys, worklist)?;
+                meta
+            }
+            None => meta,
+        };
+        let stamp_seq = meta.jobs.is_some() || meta.shard.is_some();
+        let records: Vec<RunRecord> = results
+            .iter()
+            .map(|(seq, r)| {
+                let rec = RunRecord::from_result(r, &meta);
+                if stamp_seq {
+                    rec.with_seq(*seq)
+                } else {
+                    rec
+                }
+            })
+            .collect();
+        self.append(&records)?;
+        Ok((records, meta))
+    }
+
+    /// Guard a `--run-id` override against inconsistent reuse. A run
+    /// id that already exists in the archive may only be extended by
+    /// another *shard* of the same logical run:
+    ///
+    /// - both invocations sharded, with the same shard total `M`
+    ///   (otherwise the round-robin classes overlap or diverge);
+    /// - same config hash (identical measurement protocol);
+    /// - same underlying worklist — every recorded `(seq, key)` pair
+    ///   must match this invocation's full worklist at that index, so
+    ///   ordering the merged run by `seq` provably reconstructs one
+    ///   serial run;
+    /// - no bench key recorded twice.
+    ///
+    /// `worklist` is the full (unsharded) bench-key worklist of this
+    /// invocation, indexed by `seq`.
+    pub fn check_run_id_reuse(
+        &self,
+        meta: &super::record::RunMeta,
+        new_keys: &[String],
+        worklist: &[String],
+    ) -> Result<()> {
+        if !self.exists() {
+            return Ok(());
+        }
+        let records = self.load()?;
+        let existing: Vec<&RunRecord> =
+            records.iter().filter(|r| r.run_id == meta.run_id).collect();
+        if existing.is_empty() {
+            return Ok(());
+        }
+        let my_total = meta.shard.as_deref().and_then(shard_total);
+        anyhow::ensure!(
+            my_total.is_some(),
+            "run id {:?} is already recorded; only --shard invocations of one \
+             logical run may share a run id (pick a fresh --run-id)",
+            meta.run_id
+        );
+        for r in existing {
+            anyhow::ensure!(
+                r.config_hash == meta.config_hash,
+                "run id {:?} already recorded under config {} (this invocation is {}); \
+                 shards of one run must use identical protocol flags",
+                meta.run_id,
+                r.config_hash,
+                meta.config_hash
+            );
+            anyhow::ensure!(
+                r.shard.as_deref().and_then(shard_total) == my_total,
+                "run id {:?} was recorded as shard {:?} but this invocation is shard {:?}; \
+                 shards of one run must split the worklist the same way",
+                meta.run_id,
+                r.shard.as_deref().unwrap_or("<none>"),
+                meta.shard.as_deref().unwrap_or("<none>")
+            );
+            let key = r.bench_key();
+            if let Some(seq) = r.seq {
+                anyhow::ensure!(
+                    worklist.get(seq).map_or(false, |k| *k == key),
+                    "run id {:?} recorded {} at worklist index {seq}, but this \
+                     invocation's worklist has {:?} there; shards of one run must \
+                     expand an identical selection",
+                    meta.run_id,
+                    key,
+                    worklist.get(seq).map(String::as_str).unwrap_or("<out of range>")
+                );
+            }
+            anyhow::ensure!(
+                !new_keys.iter().any(|k| *k == key),
+                "run id {:?} already contains {} — rerunning a shard would \
+                 double-record it; pick a fresh --run-id",
+                meta.run_id,
+                key
+            );
+        }
+        Ok(())
     }
 
     /// Load every record, in file (= chronological append) order.
@@ -155,6 +282,10 @@ mod tests {
 
     fn rec(run: &str, ts: u64, model: &str, secs: f64) -> RunRecord {
         RunRecord {
+            schema: crate::store::record::SCHEMA_VERSION,
+            seq: None,
+            jobs: None,
+            shard: None,
             run_id: run.into(),
             timestamp: ts,
             git_commit: "abc".into(),
@@ -236,6 +367,137 @@ mod tests {
         assert!(format!("{err:#}").contains("--record"), "{err:#}");
     }
 
+    fn run_result(model: &str) -> crate::coordinator::RunResult {
+        crate::coordinator::RunResult {
+            model: model.into(),
+            domain: "nlp".into(),
+            mode: crate::config::Mode::Infer,
+            compiler: crate::config::Compiler::Fused,
+            batch: 4,
+            iter_secs: 0.01,
+            repeats_secs: vec![0.01],
+            breakdown: crate::profiler::Breakdown {
+                active: 0.6,
+                movement: 0.3,
+                idle: 0.1,
+                total_secs: 0.01,
+            },
+            memory: crate::profiler::MemoryReport { host_peak: 1, device_total: 2 },
+            throughput: 400.0,
+        }
+    }
+
+    #[test]
+    fn record_indexed_stamps_global_worklist_order() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let archive = Archive::new(dir.path().join("r.jsonl"));
+        let meta = RunMeta {
+            run_id: "run-x".into(),
+            timestamp: 42,
+            git_commit: "g".into(),
+            host: "h".into(),
+            config_hash: "c".into(),
+            note: "".into(),
+            jobs: Some(2),
+            shard: Some("1/2".into()),
+        };
+        // Shard 1/2 of a 4-item worklist: global indices 1 and 3.
+        let written = archive
+            .record_indexed(&[(1, run_result("m1")), (3, run_result("m3"))], &meta)
+            .unwrap();
+        assert_eq!(written.len(), 2);
+        let records = archive.load().unwrap();
+        assert_eq!(records[0].seq, Some(1));
+        assert_eq!(records[1].seq, Some(3));
+        assert_eq!(records[0].jobs, Some(2));
+        assert_eq!(records[0].shard.as_deref(), Some("1/2"));
+    }
+
+    #[test]
+    fn record_scheduled_stamps_seq_only_for_parallel_runs() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let archive = Archive::new(dir.path().join("r.jsonl"));
+        let wl = vec![
+            "m0.infer.fused.b4".to_string(),
+            "m1.infer.fused.b4".to_string(),
+            "m2.infer.fused.b4".to_string(),
+        ];
+        let base = RunMeta {
+            run_id: "run-serial".into(),
+            timestamp: 42,
+            git_commit: "g".into(),
+            host: "h".into(),
+            config_hash: "c".into(),
+            note: "".into(),
+            jobs: None,
+            shard: None,
+        };
+        // Serial meta: no provenance, no seq — v1-shaped line + "v".
+        let (recs, meta) = archive
+            .record_scheduled(&[(0, run_result("m0"))], base.clone(), None, &wl)
+            .unwrap();
+        assert_eq!(meta.run_id, "run-serial");
+        assert_eq!(recs[0].seq, None);
+        assert_eq!(recs[0].jobs, None);
+
+        // Parallel meta + run-id override: seq stamped, id replaced.
+        let par = base.clone().with_parallelism(4, None);
+        let (recs, meta) = archive
+            .record_scheduled(&[(2, run_result("m2"))], par.clone(), Some("fanout"), &wl)
+            .unwrap();
+        assert_eq!(meta.run_id, "fanout");
+        assert_eq!(recs[0].seq, Some(2));
+        assert_eq!(recs[0].jobs, Some(4));
+        // Reusing an id from an unsharded invocation is always wrong.
+        let err = archive
+            .record_scheduled(&[(2, run_result("m2"))], par, Some("fanout"), &wl)
+            .unwrap_err();
+        assert!(format!("{err}").contains("only --shard invocations"), "{err}");
+    }
+
+    #[test]
+    fn run_id_reuse_guard_accepts_shards_and_rejects_conflicts() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let archive = Archive::new(dir.path().join("r.jsonl"));
+        let wl = vec!["m0.infer.fused.b4".to_string(), "m1.infer.fused.b4".to_string()];
+        let meta = RunMeta {
+            run_id: "merged".into(),
+            timestamp: 42,
+            git_commit: "g".into(),
+            host: "h".into(),
+            config_hash: "c".into(),
+            note: "".into(),
+            jobs: None,
+            shard: Some("0/2".into()),
+        };
+        // Empty archive: any id is fine.
+        archive.check_run_id_reuse(&meta, &wl[0..1], &wl).unwrap();
+        archive.record_indexed(&[(0, run_result("m0"))], &meta).unwrap();
+
+        // Second shard, disjoint keys, same config + worklist: accepted.
+        let shard1 = RunMeta { shard: Some("1/2".into()), ..meta.clone() };
+        archive.check_run_id_reuse(&shard1, &wl[1..2], &wl).unwrap();
+        // Same key again: double-record rejected.
+        let err = archive.check_run_id_reuse(&meta, &wl[0..1], &wl).unwrap_err();
+        assert!(format!("{err}").contains("already contains"), "{err}");
+        // Different protocol: rejected.
+        let other = RunMeta { config_hash: "zzz".into(), ..meta.clone() };
+        let err = archive.check_run_id_reuse(&other, &wl[1..2], &wl).unwrap_err();
+        assert!(format!("{err}").contains("identical protocol"), "{err}");
+        // Different shard split (0/3 after 0/2): rejected.
+        let resplit = RunMeta { shard: Some("0/3".into()), ..meta.clone() };
+        let err = archive.check_run_id_reuse(&resplit, &wl[1..2], &wl).unwrap_err();
+        assert!(format!("{err}").contains("same way"), "{err}");
+        // Unsharded invocation reusing the id: rejected.
+        let unsharded = RunMeta { shard: None, ..meta.clone() };
+        let err = archive.check_run_id_reuse(&unsharded, &wl[1..2], &wl).unwrap_err();
+        assert!(format!("{err}").contains("only --shard invocations"), "{err}");
+        // A different worklist at a recorded index: rejected.
+        let wl2 = vec!["zzz.infer.fused.b4".to_string(), "m1.infer.fused.b4".to_string()];
+        let err = archive.check_run_id_reuse(&shard1, &wl2[1..2], &wl2).unwrap_err();
+        assert!(format!("{err}").contains("identical selection"), "{err}");
+    }
+
     #[test]
     fn meta_capture_roundtrips_through_archive() {
         let dir = crate::util::TempDir::new().unwrap();
@@ -247,6 +509,8 @@ mod tests {
             host: "h".into(),
             config_hash: "c".into(),
             note: "baseline".into(),
+            jobs: None,
+            shard: None,
         };
         let mut r = rec("run-x", 42, "m", 0.01);
         r.note = meta.note.clone();

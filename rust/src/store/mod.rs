@@ -16,6 +16,20 @@
 //!
 //! The CLI's `cmp` / `rank` / `history` verbs and
 //! `BaselineStore::from_archive` are all views over this module.
+//!
+//! # Position in the results flow (runner → archive → gate)
+//!
+//! The [`crate::coordinator`] runner produces ordered
+//! [`RunResult`](crate::coordinator::RunResult)s; this module stamps
+//! them with provenance ([`RunMeta`] → [`RunRecord`]) and appends them
+//! here; [`crate::ci`] derives its gate baselines back out of the
+//! archive. Since schema v2 ([`record::SCHEMA_VERSION`]) each record
+//! can carry execution provenance — `seq` (global worklist index),
+//! `jobs`, `shard` — so parallel/sharded runs are auditable and a
+//! merged sharded run can be proven equal to a serial one (order by
+//! `seq`, compare bench keys). Records with equal `config_hash` are
+//! comparable regardless of how they were fanned out; `jobs`/`shard`
+//! never enter the hash.
 
 pub mod archive;
 pub mod query;
@@ -23,4 +37,4 @@ pub mod record;
 
 pub use archive::Archive;
 pub use query::{latest_per_key, median_iter_per_key, run_summaries, series, Filter, RunSummary};
-pub use record::{bench_key_of, config_hash, fmt_utc, RunMeta, RunRecord};
+pub use record::{bench_key_of, config_hash, fmt_utc, RunMeta, RunRecord, SCHEMA_VERSION};

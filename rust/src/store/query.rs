@@ -122,6 +122,10 @@ mod tests {
 
     fn rec(run: &str, ts: u64, model: &str, mode: &str, secs: f64) -> RunRecord {
         RunRecord {
+            schema: crate::store::record::SCHEMA_VERSION,
+            seq: None,
+            jobs: None,
+            shard: None,
             run_id: run.into(),
             timestamp: ts,
             git_commit: "abc".into(),

@@ -7,6 +7,16 @@ use crate::config::RunConfig;
 use crate::coordinator::RunResult;
 use crate::util::Json;
 
+/// Archive schema version written by this binary.
+///
+/// - **v1** (PR 1): the original field set, no `v` key on the line.
+/// - **v2**: adds optional execution provenance — `seq` (global
+///   worklist index), `jobs` (worker threads), `shard` (`"I/M"`) — so
+///   parallel/sharded runs record how they were produced. Decoding
+///   treats a missing `v` as 1 and all v2 fields as optional, so old
+///   archives parse unchanged.
+pub const SCHEMA_VERSION: usize = 2;
+
 /// The canonical benchmark-config key: `model.mode.compiler.bN`.
 ///
 /// Single source of truth — [`RunResult::bench_key`],
@@ -34,6 +44,11 @@ pub struct RunMeta {
     pub config_hash: String,
     /// Free-form label ("", "baseline", "nightly", ...).
     pub note: String,
+    /// Worker threads the run executed with (None on pre-scheduler
+    /// records and archive-only paths).
+    pub jobs: Option<usize>,
+    /// Shard this invocation ran (`"I/M"`), if the worklist was split.
+    pub shard: Option<String>,
 }
 
 impl RunMeta {
@@ -58,7 +73,35 @@ impl RunMeta {
             host: detect_host(),
             config_hash,
             note: note.to_string(),
+            jobs: None,
+            shard: None,
         }
+    }
+
+    /// Stamp execution provenance (worker count + shard) onto every
+    /// record this meta produces.
+    pub fn with_parallelism(mut self, jobs: usize, shard: Option<String>) -> RunMeta {
+        self.jobs = Some(jobs);
+        self.shard = shard;
+        self
+    }
+
+    /// Override the generated run id (multi-host shards of one logical
+    /// run pass the same id so the archive merges them into one run).
+    /// Ids must not collide with the `latest`/`latest~N` selector
+    /// grammar and must stay single-token for the CLI.
+    pub fn with_run_id(mut self, id: &str) -> Result<RunMeta> {
+        anyhow::ensure!(!id.is_empty(), "--run-id must not be empty");
+        anyhow::ensure!(
+            !id.starts_with("latest"),
+            "--run-id must not start with \"latest\" (reserved by run selectors)"
+        );
+        anyhow::ensure!(
+            id.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.')),
+            "--run-id {id:?} may only contain [A-Za-z0-9._-]"
+        );
+        self.run_id = id.to_string();
+        Ok(self)
     }
 }
 
@@ -119,12 +162,22 @@ fn detect_host() -> String {
 /// One benchmark config's metrics in one run — the archive's row type.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunRecord {
+    /// Schema version of the line this record was decoded from (or
+    /// [`SCHEMA_VERSION`] for freshly produced records).
+    pub schema: usize,
     pub run_id: String,
     pub timestamp: u64,
     pub git_commit: String,
     pub host: String,
     pub config_hash: String,
     pub note: String,
+    /// Global worklist index of this config within its run — the
+    /// reassembly key that lets sharded archives prove merge order.
+    pub seq: Option<usize>,
+    /// Worker threads the producing invocation ran with.
+    pub jobs: Option<usize>,
+    /// Shard (`"I/M"`) the producing invocation ran.
+    pub shard: Option<String>,
     pub model: String,
     pub domain: String,
     /// "infer" | "train".
@@ -150,12 +203,16 @@ impl RunRecord {
     /// Stamp a runner result with run provenance.
     pub fn from_result(r: &RunResult, meta: &RunMeta) -> RunRecord {
         RunRecord {
+            schema: SCHEMA_VERSION,
             run_id: meta.run_id.clone(),
             timestamp: meta.timestamp,
             git_commit: meta.git_commit.clone(),
             host: meta.host.clone(),
             config_hash: meta.config_hash.clone(),
             note: meta.note.clone(),
+            seq: None,
+            jobs: meta.jobs,
+            shard: meta.shard.clone(),
             model: r.model.clone(),
             domain: r.domain.clone(),
             mode: r.mode.as_str().to_string(),
@@ -172,13 +229,21 @@ impl RunRecord {
         }
     }
 
+    /// Builder: set the global worklist index (the archive's
+    /// `record_indexed` path stamps this per record).
+    pub fn with_seq(mut self, seq: usize) -> RunRecord {
+        self.seq = Some(seq);
+        self
+    }
+
     pub fn bench_key(&self) -> String {
         bench_key_of(&self.model, &self.mode, &self.compiler, self.batch)
     }
 
     /// Encode as a JSON object (one archive line, compact).
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
+            ("v", Json::num(self.schema as f64)),
             ("run_id", Json::str(&self.run_id)),
             ("ts", Json::num(self.timestamp as f64)),
             ("git", Json::str(&self.git_commit)),
@@ -201,19 +266,36 @@ impl RunRecord {
             ("idle", Json::num(self.idle)),
             ("host_bytes", Json::num(self.host_bytes as f64)),
             ("device_bytes", Json::num(self.device_bytes as f64)),
-        ])
+        ];
+        // v2 provenance: only written when present, so serial archive
+        // lines stay byte-compatible with what v1 readers expect.
+        if let Some(seq) = self.seq {
+            fields.push(("seq", Json::num(seq as f64)));
+        }
+        if let Some(jobs) = self.jobs {
+            fields.push(("jobs", Json::num(jobs as f64)));
+        }
+        if let Some(shard) = &self.shard {
+            fields.push(("shard", Json::str(shard)));
+        }
+        Json::obj(fields)
     }
 
     /// Decode from a parsed JSON object (unknown keys are ignored, so
     /// the schema can grow without invalidating old archives).
     pub fn decode(v: &Json) -> Result<RunRecord> {
         Ok(RunRecord {
+            // Pre-versioning lines (PR 1) carry no "v": schema 1.
+            schema: v.get("v").and_then(|x| x.as_usize()).unwrap_or(1),
             run_id: v.req_str("run_id")?.to_string(),
             timestamp: v.req_usize("ts")? as u64,
             git_commit: v.req_str("git")?.to_string(),
             host: v.req_str("host")?.to_string(),
             config_hash: v.req_str("cfg")?.to_string(),
             note: v.get("note").and_then(|n| n.as_str()).unwrap_or("").to_string(),
+            seq: v.get("seq").and_then(|x| x.as_usize()),
+            jobs: v.get("jobs").and_then(|x| x.as_usize()),
+            shard: v.get("shard").and_then(|x| x.as_str()).map(|s| s.to_string()),
             model: v.req_str("model")?.to_string(),
             domain: v.req_str("domain")?.to_string(),
             mode: v.req_str("mode")?.to_string(),
@@ -306,6 +388,8 @@ mod tests {
             host: "ci-host".into(),
             config_hash: "deadbeefdeadbeef".into(),
             note: "".into(),
+            jobs: None,
+            shard: None,
         }
     }
 
@@ -352,6 +436,49 @@ mod tests {
         // 2023-01-02 03:04:05 UTC.
         assert_eq!(fmt_utc(1_672_628_645), "2023-01-02 03:04:05");
         assert_eq!(compact_utc(1_672_628_645), "20230102T030405");
+    }
+
+    #[test]
+    fn v2_provenance_roundtrips_and_v1_lines_still_parse() {
+        let meta = sample_meta().with_parallelism(8, Some("1/2".into()));
+        let r = RunRecord::from_result(&sample_result(), &meta).with_seq(5);
+        assert_eq!(r.schema, SCHEMA_VERSION);
+        let line = r.to_json().to_json();
+        assert!(line.contains("\"v\":2"), "{line}");
+        assert!(line.contains("\"seq\":5"), "{line}");
+        assert!(line.contains("\"jobs\":8"), "{line}");
+        assert!(line.contains("\"shard\":\"1/2\""), "{line}");
+        let back = RunRecord::decode_line(&line).unwrap();
+        assert_eq!(back, r);
+
+        // A serial record omits the optional provenance keys entirely.
+        let serial = RunRecord::from_result(&sample_result(), &sample_meta());
+        let serial_line = serial.to_json().to_json();
+        assert!(!serial_line.contains("seq"), "{serial_line}");
+        assert!(!serial_line.contains("jobs"), "{serial_line}");
+        assert!(!serial_line.contains("shard"), "{serial_line}");
+
+        // A v1 line (no "v", none of the v2 keys) parses as schema 1.
+        // Keys serialize in sorted order, so "v" is the last field.
+        let v1 = serial_line.replace(",\"v\":2", "");
+        assert_ne!(v1, serial_line, "expected to strip the version key");
+        let old = RunRecord::decode_line(&v1).unwrap();
+        assert_eq!(old.schema, 1);
+        assert_eq!(old.seq, None);
+        assert_eq!(old.jobs, None);
+        assert_eq!(old.shard, None);
+        assert_eq!(old.bench_key(), serial.bench_key());
+    }
+
+    #[test]
+    fn run_id_override_is_validated() {
+        let meta = sample_meta().with_run_id("ci-shard-merge.2026").unwrap();
+        assert_eq!(meta.run_id, "ci-shard-merge.2026");
+        assert!(sample_meta().with_run_id("").is_err());
+        assert!(sample_meta().with_run_id("latest").is_err());
+        assert!(sample_meta().with_run_id("latest~1").is_err());
+        assert!(sample_meta().with_run_id("has space").is_err());
+        assert!(sample_meta().with_run_id("has/slash").is_err());
     }
 
     #[test]

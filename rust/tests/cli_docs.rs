@@ -1,0 +1,84 @@
+//! Drift guard: `docs/CLI.md` must document exactly the verbs the CLI
+//! dispatches — no missing sections, no stale ones, same order.
+//!
+//! The dispatch side of the contract is `cli::VERBS` (which the
+//! unknown-command check also walks, so a verb can't be dispatchable
+//! without being listed). The doc side is every `## `verb`` heading in
+//! `docs/CLI.md`.
+
+use std::path::PathBuf;
+
+fn cli_doc_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../docs/CLI.md")
+}
+
+/// Verb headings in document order: lines of the form ``## `verb` ``.
+fn documented_verbs(text: &str) -> Vec<String> {
+    let mut verbs = Vec::new();
+    for line in text.lines() {
+        let Some(rest) = line.strip_prefix("## `") else { continue };
+        let Some(verb) = rest.strip_suffix('`') else { continue };
+        verbs.push(verb.to_string());
+    }
+    verbs
+}
+
+#[test]
+fn cli_doc_covers_every_dispatched_verb_exactly() {
+    let path = cli_doc_path();
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+    let documented = documented_verbs(&text);
+    let dispatched: Vec<String> =
+        xbench::cli::VERBS.iter().map(|(name, _)| name.to_string()).collect();
+
+    let missing: Vec<&String> =
+        dispatched.iter().filter(|v| !documented.contains(*v)).collect();
+    let stale: Vec<&String> =
+        documented.iter().filter(|v| !dispatched.contains(*v)).collect();
+    assert!(
+        missing.is_empty() && stale.is_empty(),
+        "docs/CLI.md is out of sync with the cli::VERBS dispatch table.\n\
+         dispatched but undocumented: {missing:?}\n\
+         documented but not dispatched: {stale:?}\n\
+         (add/remove `## `verb`` sections in docs/CLI.md)"
+    );
+    assert_eq!(
+        documented, dispatched,
+        "docs/CLI.md sections must follow the dispatch table's order"
+    );
+}
+
+#[test]
+fn every_verb_section_shows_a_synopsis() {
+    let text = std::fs::read_to_string(cli_doc_path()).unwrap();
+    // Split the doc into verb sections; each must contain a fenced
+    // code block starting with `xbench <verb>` (the synopsis).
+    let mut current: Option<(String, String)> = None;
+    let mut sections: Vec<(String, String)> = Vec::new();
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("## `") {
+            if let Some(verb) = rest.strip_suffix('`') {
+                if let Some(done) = current.take() {
+                    sections.push(done);
+                }
+                current = Some((verb.to_string(), String::new()));
+                continue;
+            }
+        }
+        if let Some((_, body)) = current.as_mut() {
+            body.push_str(line);
+            body.push('\n');
+        }
+    }
+    if let Some(done) = current.take() {
+        sections.push(done);
+    }
+    assert_eq!(sections.len(), xbench::cli::VERBS.len());
+    for (verb, body) in &sections {
+        assert!(
+            body.contains(&format!("xbench {verb}")),
+            "docs/CLI.md section for `{verb}` lacks an `xbench {verb}` synopsis"
+        );
+    }
+}

@@ -1,0 +1,167 @@
+//! Integration: scheduler determinism over the synthetic model zoo.
+//!
+//! Fully hermetic — artifacts are synthesized into a temp dir
+//! (`suite::synth`), so this runs offline like everything else:
+//!
+//! - serial vs `--jobs 4` produce identically ordered results;
+//! - `--shard 0/2` + `--shard 1/2` recorded into one archive run merge
+//!   (by `seq`) to exactly the unsharded run's key sequence;
+//! - invalid shard specs error cleanly.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use xbench::config::{Mode, RunConfig};
+use xbench::coordinator::{run_partitioned, ExecOpts, Runner, ShardSpec};
+use xbench::runtime::{ArtifactStore, Device, Manifest};
+use xbench::store::{Archive, Filter, RunMeta};
+use xbench::suite::Suite;
+use xbench::util::TempDir;
+
+fn synth_store(dir: &Path) -> (ArtifactStore, Suite) {
+    xbench::suite::synth::write_synthetic_artifacts(dir, 20230102, false).unwrap();
+    let store = ArtifactStore::new(Rc::new(Device::cpu().unwrap()), dir);
+    let suite = Suite::new(Manifest::load(dir).unwrap());
+    (store, suite)
+}
+
+fn fast_cfg(dir: &Path) -> RunConfig {
+    RunConfig {
+        repeats: 1,
+        iterations: 1,
+        warmup: 0,
+        artifacts: dir.to_path_buf(),
+        ..Default::default()
+    }
+}
+
+/// The `run` verb's worklist expansion, for driving the scheduler at
+/// the library level.
+fn worklist<'a>(
+    suite: &'a Suite,
+    cfg: &RunConfig,
+) -> (Vec<&'a xbench::runtime::ModelEntry>, Vec<String>) {
+    let benches = suite.benches(&cfg.selection, Mode::Infer).unwrap();
+    let entries: Vec<&xbench::runtime::ModelEntry> =
+        benches.iter().map(|b| suite.model(&b.model).unwrap()).collect();
+    let labels: Vec<String> = benches.iter().map(|b| b.to_string()).collect();
+    (entries, labels)
+}
+
+#[test]
+fn parallel_run_matches_serial_keys_and_order() {
+    let dir = TempDir::new().unwrap();
+    let (store, suite) = synth_store(dir.path());
+    let cfg = fast_cfg(dir.path());
+    let (entries, labels) = worklist(&suite, &cfg);
+    assert!(entries.len() >= 4, "zoo too small to exercise parallelism");
+
+    let cfg_ref = &cfg;
+    let run = |opts: &ExecOpts| {
+        run_partitioned(opts, &store, &entries, &labels, "test", |st, entry| {
+            Runner::new(st, cfg_ref.clone()).run_model(entry)
+        })
+        .unwrap()
+    };
+    let serial = run(&ExecOpts::SERIAL);
+    let parallel = run(&ExecOpts { jobs: 4, ..ExecOpts::SERIAL });
+
+    assert!(serial.errors.is_empty(), "{:?}", serial.errors);
+    assert!(parallel.errors.is_empty(), "{:?}", parallel.errors);
+    let keyed = |o: &xbench::coordinator::SchedOutcome<xbench::coordinator::RunResult>| {
+        o.completed
+            .iter()
+            .map(|(seq, r)| (*seq, r.bench_key(), r.domain.clone()))
+            .collect::<Vec<_>>()
+    };
+    // Same configs, same global indices, same order — only the measured
+    // durations may differ.
+    assert_eq!(keyed(&serial), keyed(&parallel));
+    assert_eq!(serial.worklist_len, parallel.worklist_len);
+}
+
+#[test]
+fn sharded_archive_merge_equals_serial_run() {
+    let dir = TempDir::new().unwrap();
+    let (store, suite) = synth_store(dir.path());
+    let cfg = fast_cfg(dir.path());
+    let (entries, labels) = worklist(&suite, &cfg);
+    let archive = Archive::new(dir.path().join("runs.jsonl"));
+    let cfg_ref = &cfg;
+    let run = |opts: &ExecOpts| {
+        run_partitioned(opts, &store, &entries, &labels, "test", |st, entry| {
+            Runner::new(st, cfg_ref.clone()).run_model(entry)
+        })
+        .unwrap()
+    };
+
+    // Serial reference run.
+    let serial = run(&ExecOpts::SERIAL);
+    // The full worklist in seq order — what every shard must agree on.
+    let worklist: Vec<String> =
+        serial.completed.iter().map(|(_, r)| r.bench_key()).collect();
+    let serial_meta = RunMeta::capture(&cfg, "serial")
+        .with_parallelism(1, None)
+        .with_run_id("serial-ref")
+        .unwrap();
+    archive.record_indexed(&serial.completed, &serial_meta).unwrap();
+
+    // Two shards of one logical run, recorded under one run id.
+    for index in 0..2usize {
+        let shard = ShardSpec { index, total: 2 };
+        let opts = ExecOpts { jobs: 2, shard: Some(shard), fail_fast: false };
+        let out = run(&opts);
+        assert_eq!(out.worklist_len, entries.len());
+        assert_eq!(out.ran, out.completed.len());
+        assert!(out.completed.iter().all(|(seq, _)| shard.owns(*seq)));
+        let meta = RunMeta::capture(&cfg, "shard")
+            .with_parallelism(2, Some(shard.to_string()))
+            .with_run_id("merged")
+            .unwrap();
+        let keys: Vec<String> = out.completed.iter().map(|(_, r)| r.bench_key()).collect();
+        archive.check_run_id_reuse(&meta, &keys, &worklist).unwrap();
+        archive.record_indexed(&out.completed, &meta).unwrap();
+    }
+
+    // Merge by seq and compare to the serial run's key sequence.
+    let records = archive.load().unwrap();
+    let serial_keys: Vec<String> = Filter::for_run("serial-ref")
+        .apply(&records)
+        .iter()
+        .map(|r| r.bench_key())
+        .collect();
+    let mut merged: Vec<&xbench::store::RunRecord> =
+        Filter::for_run("merged").apply(&records);
+    merged.sort_by_key(|r| r.seq.expect("sharded records carry seq"));
+    let merged_keys: Vec<String> = merged.iter().map(|r| r.bench_key()).collect();
+    assert_eq!(merged_keys, serial_keys);
+    assert_eq!(merged.len(), entries.len());
+    // Provenance is stamped.
+    assert!(merged.iter().all(|r| r.jobs == Some(2)));
+    assert!(merged.iter().any(|r| r.shard.as_deref() == Some("0/2")));
+    assert!(merged.iter().any(|r| r.shard.as_deref() == Some("1/2")));
+
+    // Re-recording a shard under the same id is a loud error.
+    let again = RunMeta::capture(&cfg, "dup")
+        .with_parallelism(2, Some("0/2".into()))
+        .with_run_id("merged")
+        .unwrap();
+    let err = archive
+        .check_run_id_reuse(&again, &[serial_keys[0].clone()], &worklist)
+        .unwrap_err();
+    assert!(format!("{err}").contains("already contains"), "{err}");
+}
+
+#[test]
+fn invalid_shard_specs_error_cleanly() {
+    for bad in ["3/2", "0/0", "2/2", "a/b", "1", "1/", "/2", "-1/2"] {
+        let err = ShardSpec::parse(bad).unwrap_err();
+        assert!(format!("{err}").contains("shard"), "{bad}: {err}");
+    }
+    // And through the CLI flag surface.
+    let mut args = xbench::util::Args::parse(
+        ["run", "--shard", "5/4"].into_iter().map(String::from),
+    )
+    .unwrap();
+    assert!(ExecOpts::from_args(&mut args).is_err());
+}

@@ -50,6 +50,8 @@ fn meta(run: &str, ts: u64) -> RunMeta {
         host: "test-host".into(),
         config_hash: "cfg".into(),
         note: "".into(),
+        jobs: None,
+        shard: None,
     }
 }
 
