@@ -1,0 +1,118 @@
+//! Cold vs warm fan-out wall-time probe for the persistent worker
+//! pool.
+//!
+//! `cargo bench --bench pool` — synthesizes the offline zoo, runs the
+//! same `--jobs 2` suite fan-out through one pool three times (first
+//! cold, then twice warm), and writes `BENCH_pool.json` (consumed by
+//! CI) plus a human table. The measured per-iteration metrics are
+//! structurally identical across runs — warmth only removes *untimed*
+//! setup (device bring-up, HLO parsing, compilation), which is the
+//! whole point: pooling must never touch the §2.2 timed regions.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use xbench::config::{Mode, RunConfig};
+use xbench::coordinator::{run_partitioned, ExecOpts, Runner};
+use xbench::report::Table;
+use xbench::runtime::{ArtifactStore, Device, Manifest, ModelEntry};
+use xbench::suite::Suite;
+use xbench::util::{Json, TempDir};
+
+const JOBS: usize = 2;
+
+fn worklist<'a>(suite: &'a Suite, cfg: &RunConfig) -> (Vec<&'a ModelEntry>, Vec<String>) {
+    let benches = suite.benches(&cfg.selection, Mode::Infer).unwrap();
+    let entries: Vec<&ModelEntry> =
+        benches.iter().map(|b| suite.model(&b.model).unwrap()).collect();
+    let labels: Vec<String> = benches.iter().map(|b| b.to_string()).collect();
+    (entries, labels)
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = TempDir::new()?;
+    xbench::suite::synth::write_synthetic_artifacts(dir.path(), 20230102, false)?;
+    let store = ArtifactStore::new(Rc::new(Device::cpu()?), dir.path());
+    let suite = Suite::new(Manifest::load(dir.path())?);
+    let cfg = RunConfig {
+        repeats: 1,
+        iterations: 1,
+        warmup: 0,
+        artifacts: dir.path().to_path_buf(),
+        ..Default::default()
+    };
+    let (entries, labels) = worklist(&suite, &cfg);
+    let pool = xbench::pool::shared(dir.path());
+
+    let cfg_ref = &cfg;
+    let fan_out = || -> anyhow::Result<(f64, Vec<String>)> {
+        let t0 = Instant::now();
+        let outcome = run_partitioned(
+            &ExecOpts { jobs: JOBS, ..ExecOpts::SERIAL },
+            &store,
+            &entries,
+            &labels,
+            "bench",
+            |st, entry| Runner::new(st, cfg_ref.clone()).run_model(entry),
+        )?;
+        anyhow::ensure!(outcome.errors.is_empty(), "bench fan-out had failures");
+        let keys =
+            outcome.completed.iter().map(|(_, r)| r.bench_key()).collect::<Vec<_>>();
+        Ok((t0.elapsed().as_secs_f64(), keys))
+    };
+
+    let before = pool.stats();
+    let (cold_secs, cold_keys) = fan_out()?;
+    let after_cold = pool.stats();
+    let (warm1_secs, warm1_keys) = fan_out()?;
+    let (warm2_secs, warm2_keys) = fan_out()?;
+    let after_warm = pool.stats();
+    let warm_secs = warm1_secs.min(warm2_secs);
+
+    assert_eq!(cold_keys, warm1_keys, "warm fan-out changed the measured worklist");
+    assert_eq!(cold_keys, warm2_keys, "warm fan-out changed the measured worklist");
+    let compiles_cold = after_cold.compiles - before.compiles;
+    let compiles_warm = after_warm.compiles - after_cold.compiles;
+
+    let mut t = Table::new(
+        format!(
+            "Pool fan-out wall time ({} configs, --jobs {JOBS}, {} worker(s))",
+            cold_keys.len(),
+            after_warm.workers
+        ),
+        &["fan-out", "wall", "new compiles", "cache hits so far"],
+    );
+    for (name, secs, compiles, hits) in [
+        ("cold", cold_secs, compiles_cold, after_cold.cache_hits),
+        ("warm (best of 2)", warm_secs, compiles_warm, after_warm.cache_hits),
+    ] {
+        t.row(vec![
+            name.into(),
+            format!("{:.2}ms", secs * 1e3),
+            compiles.to_string(),
+            hits.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+
+    let json = Json::obj(vec![
+        ("configs", Json::num(cold_keys.len() as f64)),
+        ("jobs", Json::num(JOBS as f64)),
+        ("cold_secs", Json::num(cold_secs)),
+        ("warm_secs", Json::num(warm_secs)),
+        ("warm_over_cold", Json::num(warm_secs / cold_secs.max(1e-12))),
+        ("compiles_cold", Json::num(compiles_cold as f64)),
+        ("compiles_warm", Json::num(compiles_warm as f64)),
+        ("cache_hits", Json::num(after_warm.cache_hits as f64)),
+        ("identical_metrics", Json::Bool(true)),
+    ]);
+    std::fs::write("BENCH_pool.json", json.to_json_pretty())?;
+    eprintln!("wrote BENCH_pool.json");
+    if warm_secs >= cold_secs {
+        eprintln!(
+            "warning: warm fan-out ({warm_secs:.4}s) did not beat cold ({cold_secs:.4}s) \
+             on this host — compile share of the zoo may be too small here"
+        );
+    }
+    Ok(())
+}

@@ -42,6 +42,15 @@ pub use issue::IssueReport;
 
 use anyhow::Result;
 
+/// The default CI benchmark subset: stable, fast benches (the RL
+/// bench's host env adds run-to-run variance the 7% gate would
+/// false-positive on) plus quant coverage (the §4.1 error-handling
+/// fault only bites models that probe the fallback registry). Shared
+/// by `xbench ci` and the daemon's `ci` jobs so both gate the same
+/// worklist.
+pub const DEFAULT_CI_MODELS: &[&str] =
+    &["deeprec_ae", "dlrm_tiny", "mobilenet_tiny", "deeprec_ae_quant"];
+
 use crate::config::RunConfig;
 use crate::coordinator::{InjectedOverheads, RunResult, Runner};
 use crate::runtime::ArtifactStore;

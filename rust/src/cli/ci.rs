@@ -37,18 +37,11 @@ pub struct Opts {
 
 pub fn cmd(ctx: &Ctx, store: &ArtifactStore, mut cfg: RunConfig, opts: Opts) -> Result<()> {
     let suite = &ctx.suite;
-    // CI uses a small, fast subset when none specified.
+    // CI uses a small, fast subset when none specified (shared with
+    // the daemon's ci jobs: crate::ci::DEFAULT_CI_MODELS).
     if cfg.selection.models.is_empty() {
-        // Stable, fast benches (the RL bench's host env adds run-to-run
-        // variance the 7% gate would false-positive on).
-        cfg.selection.models = vec![
-            "deeprec_ae".into(),
-            "dlrm_tiny".into(),
-            "mobilenet_tiny".into(),
-            // Quant coverage: the §1.1 error-handling fault only bites
-            // models that probe the fallback registry.
-            "deeprec_ae_quant".into(),
-        ];
+        cfg.selection.models =
+            crate::ci::DEFAULT_CI_MODELS.iter().map(|s| s.to_string()).collect();
     }
     // Measurement protocol comes from the layered config (CLI default
     // 5/2/1) — forcing values here would silently discard a user's

@@ -10,7 +10,11 @@
 //! - **static** (`list`, `devices`, `coverage`, `compare-devices`,
 //!   `synth-artifacts`): need the manifest/artifacts but no device;
 //! - **executing** (`run`, `breakdown`, `compare-compiler`, `sweep`,
-//!   `optim`, `ci`, `train`): bring up the PJRT device and dispatch.
+//!   `optim`, `ci`, `train`): bring up the PJRT device and dispatch;
+//! - **service** (`serve`, `submit`, `queue`, `result`): the resident
+//!   benchmark daemon and its clients — `serve` owns its device on the
+//!   executor thread, the clients only speak localhost TCP
+//!   (`docs/SERVICE.md`).
 
 pub mod breakdown;
 pub mod ci;
@@ -21,9 +25,13 @@ pub mod devices;
 pub mod history;
 pub mod list;
 pub mod optim;
+pub mod queue;
 pub mod rank;
+pub mod result;
 pub mod run;
 pub mod runs;
+pub mod serve;
+pub mod submit;
 pub mod sweep;
 pub mod synth;
 pub mod train;
@@ -61,6 +69,10 @@ pub const VERBS: &[(&str, &str)] = &[
     ("cmp", "ranked speedup/regression diff of two recorded runs"),
     ("rank", "geometric-mean ranking per compiler.mode engine"),
     ("history", "one benchmark config across all recorded runs"),
+    ("serve", "run the resident benchmark daemon (job queue + warm worker pool)"),
+    ("submit", "enqueue a run/sweep/ci job on the daemon"),
+    ("queue", "daemon job queue status"),
+    ("result", "fetch a completed daemon job's results"),
 ];
 
 const USAGE: &str = "\
@@ -98,8 +110,19 @@ ARCHIVE QUERIES (read the --archive JSONL; no artifacts needed):
                     KEY is model.mode.compiler.bN (see `runs`/`cmp` output)
   Run selectors: latest, latest~N, a run id, or a unique id prefix.
 
+BENCHMARK SERVICE (resident daemon; see docs/SERVICE.md):
+  serve             run the daemon      [--port N] [--stop]
+  submit [VERB]     enqueue a job (VERB: run|sweep|ci; default run)
+                                        [--mode ..] [--compiler ..] [--batch N]
+                                        [--jobs N] [--note TEXT] [--run-id ID]
+                                        [--baseline RUN] [--port N]
+  queue             job queue status    [--port N]
+  result <JOB>      fetch job results   [--wait] [--timeout SECS] [--port N]
+
 EXECUTION FLAGS (run, sweep, ci):
-  --jobs N          fan the worklist out over N worker threads (default 1)
+  --jobs N          fan the worklist out over N persistent pool workers
+                    (default: all hardware threads; workers keep their
+                    device + compile cache warm across fan-outs)
   --shard I/M       run only shard I of M (deterministic round-robin split;
                     results merge in worklist order — see docs/METHODOLOGY.md)
   --fail-fast       run/sweep only: abort on the first failing config
@@ -141,6 +164,12 @@ pub fn emit_table(t: &Table, csv_dir: Option<&Path>, name: &str) -> Result<()> {
         t.write_csv(&dir.join(format!("{name}.csv")))?;
     }
     Ok(())
+}
+
+/// `--port` for the service verbs (default [`crate::service::DEFAULT_PORT`]).
+fn parse_port(args: &mut Args) -> Result<u16> {
+    let port = args.get_usize("port", crate::service::DEFAULT_PORT as usize)?;
+    u16::try_from(port).map_err(|_| anyhow::anyhow!("--port {port} out of range (1-65535)"))
 }
 
 #[cfg(test)]
@@ -276,6 +305,38 @@ pub fn main() -> Result<()> {
             let force = args.has("force");
             args.finish()?;
             synth::cmd(&artifacts, seed, force)
+        }
+        // -- benchmark service ------------------------------------------------
+        // Clients (`submit`/`queue`/`result`, `serve --stop`) only speak
+        // TCP; `serve` itself loads the manifest for its executor.
+        "serve" => {
+            let port = parse_port(&mut args)?;
+            if args.has("stop") {
+                args.finish()?;
+                crate::service::shutdown(port)?;
+                eprintln!("sent shutdown to the daemon on 127.0.0.1:{port}");
+                return Ok(());
+            }
+            args.finish()?;
+            let suite = Suite::new(Manifest::load(&artifacts)?);
+            serve::cmd(artifacts, archive, base_cfg, suite, port)
+        }
+        "submit" => {
+            let port = parse_port(&mut args)?;
+            submit::cmd(&mut args, &base_cfg, port)
+        }
+        "queue" => {
+            let port = parse_port(&mut args)?;
+            args.finish()?;
+            queue::cmd(port, csv_dir.as_deref())
+        }
+        "result" => {
+            let port = parse_port(&mut args)?;
+            let job = args.positional("job-id")?;
+            let wait = args.has("wait");
+            let timeout = args.get_u64("timeout", 0)?;
+            args.finish()?;
+            result::cmd(port, csv_dir.as_deref(), &job, wait, timeout)
         }
         sub => {
             // Reject typos before touching the manifest or device — on a

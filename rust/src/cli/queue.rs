@@ -1,0 +1,36 @@
+//! `xbench queue` — the daemon's job table (pending / running / done).
+
+use anyhow::Result;
+use std::path::Path;
+
+use crate::report::Table;
+use crate::service;
+use crate::store::fmt_utc;
+
+pub fn cmd(port: u16, csv_dir: Option<&Path>) -> Result<()> {
+    let jobs = service::queue_status(port)?;
+    let mut t = Table::new(
+        format!("Daemon job queue (127.0.0.1:{port}, {} job(s))", jobs.len()),
+        &["job", "verb", "status", "progress", "submitted", "run id / error"],
+    );
+    for j in &jobs {
+        let status = j.req_str("status")?.to_string();
+        let done = j.req_usize("done")?;
+        let total = j.req_usize("total")?;
+        let tail = j
+            .get("error")
+            .or_else(|| j.get("run_id"))
+            .and_then(|v| v.as_str())
+            .unwrap_or("")
+            .to_string();
+        t.row(vec![
+            j.req_str("id")?.to_string(),
+            j.req_str("verb")?.to_string(),
+            status,
+            if total > 0 { format!("{done}/{total}") } else { "-".into() },
+            fmt_utc(j.req_usize("submitted_ts")? as u64),
+            tail,
+        ]);
+    }
+    super::emit_table(&t, csv_dir, "queue")
+}

@@ -1,0 +1,85 @@
+//! `xbench result JOB` — fetch one daemon job's reassembled results.
+//!
+//! Prints the per-config result table (and, for gated ci jobs, the
+//! regression verdicts); `--wait` polls until the job settles. A job
+//! that is still pending/running (without `--wait`) or that failed
+//! exits non-zero so scripts can gate on it.
+
+use anyhow::Result;
+use std::path::Path;
+
+use crate::report::{fmt_secs, Table};
+use crate::service;
+
+pub fn cmd(
+    port: u16,
+    csv_dir: Option<&Path>,
+    job: &str,
+    wait: bool,
+    timeout_secs: u64,
+) -> Result<()> {
+    let (view, result) = service::fetch_result(port, job, wait, timeout_secs)?;
+    let status = view.req_str("status")?;
+    match status {
+        "failed" => anyhow::bail!(
+            "{job} failed: {}",
+            view.get("error").and_then(|e| e.as_str()).unwrap_or("unknown error")
+        ),
+        "done" => {}
+        other => anyhow::bail!(
+            "{job} is {other} ({}/{} configs done); re-run with --wait to block",
+            view.req_usize("done")?,
+            view.req_usize("total")?
+        ),
+    }
+    let result =
+        result.ok_or_else(|| anyhow::anyhow!("{job} is done but carries no result payload"))?;
+
+    let run_id = result.req_str("run_id")?;
+    let records = result.req_array("records")?;
+    let mut t = Table::new(
+        format!("Job {job} results ({} configs, run {run_id})", records.len()),
+        &["bench", "batch", "iter time", "throughput/s"],
+    );
+    for r in records {
+        t.row(vec![
+            r.req_str("key")?.to_string(),
+            r.req_usize("batch")?.to_string(),
+            fmt_secs(r.req_f64("iter_secs")?),
+            format!("{:.1}", r.req_f64("throughput")?),
+        ]);
+    }
+    super::emit_table(&t, csv_dir, "result")?;
+
+    if let Some(errors) = result.get("errors").and_then(|e| e.as_array()) {
+        for e in errors {
+            eprintln!(
+                "skip {}: {}",
+                e.req_str("label")?,
+                e.req_str("message")?
+            );
+        }
+    }
+    if let Some(regs) = result.get("regressions").and_then(|r| r.as_array()) {
+        let baseline = result
+            .get("baseline_run")
+            .and_then(|b| b.as_str())
+            .unwrap_or("?");
+        let mut rt = Table::new(
+            format!("Gate vs baseline {baseline} ({} regression(s))", regs.len()),
+            &["bench", "metric", "baseline", "measured", "ratio"],
+        );
+        for r in regs {
+            rt.row(vec![
+                r.req_str("bench")?.to_string(),
+                r.req_str("metric")?.to_string(),
+                format!("{:.4}", r.req_f64("baseline")?),
+                format!("{:.4}", r.req_f64("measured")?),
+                format!("{:.3}", r.req_f64("ratio")?),
+            ]);
+        }
+        super::emit_table(&rt, csv_dir, "result_gate")?;
+    }
+    eprintln!("recorded as {run_id}; query with `xbench cmp`/`rank`/`history`");
+    Ok(())
+}

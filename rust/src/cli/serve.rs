@@ -1,0 +1,28 @@
+//! `xbench serve` — run the resident benchmark daemon.
+//!
+//! Binds a localhost TCP socket and serves the JSON-lines job protocol
+//! (`docs/SERVICE.md`): `submit` enqueues `run`/`sweep`/`ci` jobs,
+//! `queue` reports status, `result` fetches reassembled results.
+//! Completed jobs append to the same [`crate::store::Archive`] the
+//! one-shot verbs record into, so `cmp`/`rank`/`history` query daemon
+//! output with zero new result formats. `xbench serve --stop` asks a
+//! running daemon to shut down.
+
+use anyhow::Result;
+use std::path::PathBuf;
+
+use crate::config::RunConfig;
+use crate::service::Daemon;
+use crate::store::Archive;
+use crate::suite::Suite;
+
+pub fn cmd(
+    artifacts: PathBuf,
+    archive: Archive,
+    base_cfg: RunConfig,
+    suite: Suite,
+    port: u16,
+) -> Result<()> {
+    let daemon = Daemon::bind(port, artifacts)?;
+    daemon.run(suite, archive, base_cfg)
+}

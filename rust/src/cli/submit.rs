@@ -1,0 +1,48 @@
+//! `xbench submit` — enqueue a job on the daemon and print its id.
+//!
+//! The job id goes to *stdout* (everything else to stderr) so scripts
+//! can capture it: `JOB=$(xbench submit --port N)`.
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::service::{self, JobSpec, JobVerb};
+use crate::util::Args;
+
+pub fn cmd(args: &mut Args, base_cfg: &RunConfig, port: u16) -> Result<()> {
+    let verb = args.positional_opt().unwrap_or_else(|| "run".into());
+    let spec = JobSpec {
+        verb: JobVerb::parse(&verb)?,
+        mode: args.get_str("mode", "infer")?,
+        compiler: args.get_str("compiler", "fused")?,
+        batch: match args.get_opt("batch")? {
+            Some(b) => Some(b.parse().map_err(|e| anyhow::anyhow!("--batch: {e}"))?),
+            None => None,
+        },
+        // Selection and measurement protocol come from the shared
+        // global flags (--models/--domain, --repeats/--iterations/
+        // --warmup): the submitter owns the job's config_hash, not
+        // whatever the daemon was started with.
+        models: base_cfg.selection.models.clone(),
+        domain: base_cfg.selection.domain.clone(),
+        repeats: base_cfg.repeats,
+        iterations: base_cfg.iterations,
+        warmup: base_cfg.warmup,
+        jobs: crate::coordinator::parse_jobs_flag(args)?,
+        note: args.get_str("note", "")?,
+        run_id: args.get_opt("run-id")?,
+        baseline: args.get_opt("baseline")?,
+    };
+    anyhow::ensure!(
+        spec.baseline.is_none() || spec.verb == JobVerb::Ci,
+        "--baseline only applies to ci jobs"
+    );
+    args.finish()?;
+    let id = service::submit(port, spec)?;
+    println!("{id}");
+    eprintln!(
+        "submitted {verb} job {id}; poll with `xbench queue --port {port}`, \
+         fetch with `xbench result {id} --port {port} --wait`"
+    );
+    Ok(())
+}

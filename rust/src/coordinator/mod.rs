@@ -16,8 +16,9 @@
 //!   onto;
 //! - [`sched`]: the parallel, shardable suite scheduler (`--jobs N`,
 //!   `--shard I/M`) — expands a selection into the full config worklist,
-//!   deterministically partitions it, fans it out over worker threads,
-//!   and reassembles results in worklist order.
+//!   deterministically partitions it, fans it out over the persistent
+//!   worker pool ([`crate::pool`] — devices and compile caches stay warm
+//!   across calls), and reassembles results in worklist order.
 //!
 //! Results flow *out* of this layer as [`RunResult`]s: the CLI renders
 //! them, [`crate::store`] stamps them into durable
@@ -39,6 +40,8 @@ pub use env::CartPoleSim;
 pub use guards::GuardSet;
 pub use hooks::InjectedOverheads;
 pub use runner::{planned_batch, planned_bench_key, RunResult, Runner};
-pub use sched::{run_partitioned, ExecOpts, SchedError, SchedOutcome, ShardSpec};
+pub use sched::{
+    default_jobs, parse_jobs_flag, run_partitioned, ExecOpts, SchedError, SchedOutcome, ShardSpec,
+};
 pub use sweep::{sweep_model, SweepResult};
 pub use train::{train_loop, TrainRun};

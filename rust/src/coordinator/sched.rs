@@ -18,28 +18,24 @@
 //!   downstream (tables, gating, archive recording) sees them, so a
 //!   parallel run's output is ordered identically to a serial run's.
 //!
-//! Each worker thread brings up its own device + [`ArtifactStore`]
-//! (the store is deliberately single-threaded — `Rc`/`RefCell`), so
-//! executables are compiled once per worker, not shared across threads.
-//! With `--jobs 1` no threads are spawned and the caller's store is
-//! used directly — byte-for-byte the old serial behavior.
-//!
-//! Cost note: workers live for one [`run_partitioned`] call, so a
-//! caller that fans out repeatedly (`ci` runs one build per nightly
-//! day) re-compiles each artifact per worker per call. That never
-//! skews *measurements* — compilation is excluded from the §2.2 timed
-//! protocol — but it is wall-time overhead on the real PJRT backend;
-//! a persistent worker pool is the natural follow-up once fleets get
-//! big enough to care (see ROADMAP).
+//! The parallel path is the *only* fan-out implementation in the crate
+//! and it runs on the persistent [`crate::pool`]: worker threads keep
+//! their device + [`ArtifactStore`] (the store is deliberately
+//! single-threaded — `Rc`/`RefCell`) alive across calls, so an artifact
+//! compiled in one fan-out is a compile-cache hit in every later one —
+//! repeated fan-outs (`ci` nightly days, daemon job streams) no longer
+//! rebuild workers per call. Warm caches never touch *measurements*:
+//! compilation is excluded from the §2.2 timed protocol, pooling only
+//! cuts untimed setup wall-time. With `--jobs 1` no pool is involved
+//! and the caller's store is used directly on the calling thread —
+//! byte-for-byte the old serial behavior.
 
 use anyhow::Result;
-use std::path::PathBuf;
-use std::rc::Rc;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc;
+use std::sync::Mutex;
 
 use crate::report::Progress;
-use crate::runtime::{ArtifactStore, Device};
+use crate::runtime::ArtifactStore;
 use crate::util::Args;
 
 /// One shard of a deterministically partitioned worklist: `--shard I/M`.
@@ -88,7 +84,8 @@ impl std::fmt::Display for ShardSpec {
 /// `--fail-fast`.
 #[derive(Debug, Clone, Default)]
 pub struct ExecOpts {
-    /// Worker threads (0 is normalized to 1; 1 = serial, no threads).
+    /// Pool workers to fan out over (0 is normalized to 1; 1 = serial
+    /// on the calling thread, no pool involved).
     pub jobs: usize,
     /// Worklist partition this invocation runs (None = all of it).
     pub shard: Option<ShardSpec>,
@@ -102,16 +99,41 @@ impl ExecOpts {
     pub const SERIAL: ExecOpts = ExecOpts { jobs: 1, shard: None, fail_fast: false };
 
     /// Parse `--jobs N`, `--shard I/M`, `--fail-fast` from a command
-    /// line (shared by the `run`, `sweep`, and `ci` verbs).
+    /// line (shared by the `run`, `sweep`, and `ci` verbs). An omitted
+    /// `--jobs` defaults to [`default_jobs`] — one worker per hardware
+    /// thread; pass `--jobs 1` explicitly for a serial run.
     pub fn from_args(args: &mut Args) -> Result<ExecOpts> {
-        let jobs = args.get_usize("jobs", 1)?;
-        anyhow::ensure!(jobs >= 1, "--jobs must be >= 1");
+        let jobs = parse_jobs_flag(args)?.unwrap_or_else(default_jobs);
         let shard = match args.get_opt("shard")? {
             Some(s) => Some(ShardSpec::parse(&s)?),
             None => None,
         };
         Ok(ExecOpts { jobs, shard, fail_fast: args.has("fail-fast") })
     }
+}
+
+/// Parse an optional `--jobs N` flag (`None` when omitted). Shared by
+/// [`ExecOpts::from_args`] and `xbench submit` so the validation and
+/// error wording cannot drift between the CLI and daemon paths.
+pub fn parse_jobs_flag(args: &mut Args) -> Result<Option<usize>> {
+    match args.get_opt("jobs")? {
+        Some(s) => {
+            let jobs: usize = s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--jobs: bad integer {s:?}: {e}"))?;
+            anyhow::ensure!(jobs >= 1, "--jobs must be >= 1");
+            Ok(Some(jobs))
+        }
+        None => Ok(None),
+    }
+}
+
+/// The `--jobs` default when the flag is omitted: all available
+/// hardware threads ([`run_partitioned`] caps at the worklist length,
+/// so small suites never over-spawn). Falls back to 1 when the OS
+/// cannot report parallelism.
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
 /// One failed worklist item (collect-errors policy).
@@ -140,22 +162,16 @@ pub struct SchedOutcome<T> {
     pub ran: usize,
 }
 
-enum Msg<T> {
-    Done(usize, std::result::Result<T, String>),
-    /// A worker could not bring up its device/store at all.
-    Fatal(String),
-}
-
 /// Execute `f` over every worklist item this shard owns, fanning out
-/// across `opts.jobs` worker threads, and reassemble results in
-/// worklist order.
+/// across `opts.jobs` persistent pool workers, and reassemble results
+/// in worklist order.
 ///
 /// `items` is the *full* worklist (sharding is applied here, so every
 /// shard computes the same global indices); `labels` names each item
 /// for progress lines and error messages (`labels.len() == items.len()`).
 /// `f` receives a per-worker [`ArtifactStore`] — the caller's `store`
-/// on the serial path, a worker-private one (same artifact dir) on the
-/// parallel path.
+/// on the serial path, a pool worker's *persistent* one (same artifact
+/// dir, warm across calls — see [`crate::pool`]) on the parallel path.
 pub fn run_partitioned<I, T, F>(
     opts: &ExecOpts,
     store: &ArtifactStore,
@@ -208,86 +224,49 @@ where
             }
         }
     } else {
+        // Parallel path: the persistent pool for this artifact dir.
+        // Workers keep their device + compile cache across calls, so a
+        // repeat fan-out over the same suite recompiles nothing.
+        let pool = crate::pool::shared(store.dir());
         let next = AtomicUsize::new(0);
         let stop = AtomicBool::new(false);
-        let artifacts: PathBuf = store.dir().to_path_buf();
-        let (tx, rx) = mpsc::channel::<Msg<T>>();
-        let mut fatal: Option<String> = None;
-
-        std::thread::scope(|scope| {
-            for w in 0..jobs {
-                let tx = tx.clone();
-                let work = &work;
-                let next = &next;
-                let stop = &stop;
-                let f = &f;
-                let artifacts = artifacts.clone();
-                scope.spawn(move || {
-                    // Per-worker device + store: compile-once-per-worker,
-                    // no shared mutable state across threads.
-                    let device = match Device::cpu() {
-                        Ok(d) => Rc::new(d),
-                        Err(e) => {
-                            let _ = tx.send(Msg::Fatal(format!(
-                                "worker {w}: creating device: {e:#}"
-                            )));
-                            return;
-                        }
-                    };
-                    let wstore = ArtifactStore::new(device, artifacts);
-                    loop {
-                        if stop.load(Ordering::Relaxed) {
-                            break;
-                        }
-                        // The shared queue: claiming an index is the
-                        // steal, so whichever worker is idle takes the
-                        // next item.
-                        let slot = next.fetch_add(1, Ordering::Relaxed);
-                        if slot >= work.len() {
-                            break;
-                        }
-                        let seq = work[slot];
-                        let res = f(&wstore, &items[seq]).map_err(|e| format!("{e:#}"));
-                        if tx.send(Msg::Done(seq, res)).is_err() {
-                            break;
-                        }
-                    }
-                });
+        // Results land here in completion order (short push under the
+        // lock); reassembly to worklist order happens below.
+        let sink: Mutex<(Vec<(usize, T)>, Vec<SchedError>)> =
+            Mutex::new((Vec::new(), Vec::new()));
+        pool.scoped_fanout(jobs, |wstore| loop {
+            if stop.load(Ordering::Relaxed) {
+                break;
             }
-            drop(tx);
-
-            // Coordinator: drain as results land (completion order),
-            // reassembly to worklist order happens after the scope.
-            for msg in rx {
-                match msg {
-                    Msg::Done(seq, Ok(t)) => {
-                        progress.tick(&labels[seq], "ok");
-                        completed.push((seq, t));
-                    }
-                    Msg::Done(seq, Err(message)) => {
-                        progress.tick(&labels[seq], "FAILED");
-                        if opts.fail_fast {
-                            stop.store(true, Ordering::Relaxed);
-                        }
-                        errors.push(SchedError {
-                            seq,
-                            label: labels[seq].clone(),
-                            message,
-                        });
-                    }
-                    Msg::Fatal(message) => {
+            // The shared queue: claiming an index is the steal, so
+            // whichever worker is idle takes the next item.
+            let slot = next.fetch_add(1, Ordering::Relaxed);
+            if slot >= work.len() {
+                break;
+            }
+            let seq = work[slot];
+            match f(wstore, &items[seq]) {
+                Ok(t) => {
+                    progress.tick(&labels[seq], "ok");
+                    sink.lock().unwrap().0.push((seq, t));
+                }
+                Err(e) => {
+                    progress.tick(&labels[seq], "FAILED");
+                    if opts.fail_fast {
                         stop.store(true, Ordering::Relaxed);
-                        if fatal.is_none() {
-                            fatal = Some(message);
-                        }
                     }
+                    sink.lock().unwrap().1.push(SchedError {
+                        seq,
+                        label: labels[seq].clone(),
+                        message: format!("{e:#}"),
+                    });
                 }
             }
-        });
-
-        if let Some(message) = fatal {
-            anyhow::bail!("{what}: {message}");
-        }
+        })
+        .map_err(|e| e.context(format!("{what}: pool fan-out")))?;
+        let (c, e) = sink.into_inner().unwrap();
+        completed = c;
+        errors = e;
     }
 
     // Reassemble: downstream consumers (tables, gate, archive) must see
@@ -313,7 +292,7 @@ mod tests {
 
     fn test_store() -> ArtifactStore {
         ArtifactStore::new(
-            Rc::new(Device::cpu().expect("sim device")),
+            std::rc::Rc::new(crate::runtime::Device::cpu().expect("sim device")),
             std::env::temp_dir(),
         )
     }
@@ -453,9 +432,11 @@ mod tests {
         assert!(opts.fail_fast);
         args.finish().unwrap();
 
+        // Omitted --jobs defaults to the machine's parallelism, not 1.
         let mut bare = Args::parse(["run".to_string()].into_iter()).unwrap();
         let opts = ExecOpts::from_args(&mut bare).unwrap();
-        assert_eq!(opts.jobs, 1);
+        assert_eq!(opts.jobs, default_jobs());
+        assert!(default_jobs() >= 1);
         assert!(opts.shard.is_none());
         assert!(!opts.fail_fast);
 

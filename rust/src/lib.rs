@@ -17,12 +17,13 @@
 //!
 //! ```text
 //! suite selection ──► coordinator (sched + runner) ──► RunResult
-//!                        │  --jobs N worker threads,
+//!                        │  --jobs N over the persistent pool,
 //!                        │  --shard I/M worklist slice,
 //!                        │  reassembled in worklist order
 //!                        ▼
 //!                     store (RunRecord → append-only JSONL archive)
 //!                        │  run --record / ci --record-baseline
+//!                        │  / daemon jobs (service)
 //!                        ▼
 //!                     ci (BaselineStore::from_archive → 7% Detector)
 //! ```
@@ -31,6 +32,11 @@
 //! - [`coordinator`] measures each config under the §2.2 protocol,
 //!   in parallel and/or sharded ([`coordinator::sched`]) with results
 //!   reassembled in worklist order;
+//! - [`pool`] keeps the fan-out workers — device + compile cache —
+//!   alive across calls, so repeated suites run warm;
+//! - [`service`] is the resident daemon (`xbench serve`): a job queue
+//!   over localhost TCP feeding the same machinery
+//!   (`submit`/`queue`/`result`);
 //! - [`store`] makes measurements durable and queryable
 //!   (`runs`/`cmp`/`rank`/`history`);
 //! - [`ci`] gates tonight's numbers against archive-derived baselines
@@ -50,9 +56,11 @@ pub mod devmodel;
 pub mod hlo;
 pub mod metrics;
 pub mod optim;
+pub mod pool;
 pub mod profiler;
 pub mod report;
 pub mod runtime;
+pub mod service;
 pub mod store;
 pub mod suite;
 

@@ -1,0 +1,430 @@
+//! The persistent worker pool: warm devices + compile caches across
+//! fan-outs.
+//!
+//! PR 2's scheduler ([`crate::coordinator::sched`]) fanned each call out
+//! over freshly spawned worker threads, each bringing up its own
+//! [`Device`] and [`ArtifactStore`] and tearing both down when the call
+//! returned. That never skewed *measurements* (compilation is excluded
+//! from the §2.2 timed protocol), but it made repeated fan-outs — `ci`
+//! nightlies, daemon job streams — pay full device bring-up and
+//! recompilation per call. This module keeps the workers alive:
+//!
+//! - [`WorkerPool`]: a set of resident worker threads. Each worker owns
+//!   its `Device` + `ArtifactStore` for the life of the pool, so an
+//!   artifact compiled in one fan-out is a cache hit in every later
+//!   fan-out that lands on the same worker.
+//! - [`WorkerPool::scoped_fanout`]: the one fan-out primitive. It
+//!   enqueues N copies of a work closure (which borrow the caller's
+//!   stack — worklists, result collectors) and blocks until every copy
+//!   has finished, so the borrows stay valid without `'static` bounds.
+//! - [`shared`]: the process-global registry, one pool per artifact
+//!   directory. `run`, `sweep`, `ci`, and the daemon all route through
+//!   it via `sched::run_partitioned`, which is what makes the warmth
+//!   transparent: callers keep the exact `run_partitioned` contract
+//!   (worklist-order reassembly, fail-fast vs collect-errors, shards).
+//!
+//! The `ArtifactStore` stays deliberately single-threaded (`Rc` /
+//! `RefCell`); it never crosses threads — each worker constructs its own
+//! on its own thread and keeps it there. Cross-thread traffic is only
+//! the boxed work closures and the [`PoolStats`] atomics.
+
+use anyhow::Result;
+use std::collections::{HashMap, VecDeque};
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use crate::runtime::{ArtifactStore, Device};
+
+/// A unit of pool work: runs once on some worker, with that worker's
+/// persistent store. Boxed tasks are `'static` from the queue's point
+/// of view; [`WorkerPool::scoped_fanout`] is the only producer and
+/// upholds the real (scoped) lifetime by blocking until completion.
+type Task = Box<dyn FnOnce(&ArtifactStore) + Send + 'static>;
+
+/// Cumulative counters over everything the pool has executed.
+///
+/// `cache_hits` / `compiles` aggregate the per-worker
+/// [`ArtifactStore`] counters after every task, so a warm second
+/// fan-out is directly observable: its `compiles` delta is zero while
+/// `cache_hits` grows (asserted by `tests/pool_warm.rs`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Worker threads currently alive.
+    pub workers: usize,
+    /// Work closures executed to completion.
+    pub tasks: usize,
+    /// Executable-cache hits across all workers' stores.
+    pub cache_hits: usize,
+    /// Artifacts compiled (cache misses) across all workers' stores.
+    pub compiles: usize,
+}
+
+#[derive(Default)]
+struct Queue {
+    tasks: VecDeque<Task>,
+}
+
+struct SharedState {
+    queue: Mutex<Queue>,
+    available: Condvar,
+    workers: AtomicUsize,
+    tasks_done: AtomicUsize,
+    cache_hits: AtomicUsize,
+    compiles: AtomicUsize,
+}
+
+/// Completion latch for one scoped fan-out: counts outstanding tasks
+/// and records whether any of them panicked.
+struct Latch {
+    state: Mutex<(usize, bool)>, // (outstanding, panicked)
+    done: Condvar,
+}
+
+impl Latch {
+    fn new(outstanding: usize) -> Latch {
+        Latch { state: Mutex::new((outstanding, false)), done: Condvar::new() }
+    }
+
+    fn complete(&self, panicked: bool) {
+        let mut s = self.state.lock().unwrap();
+        s.0 -= 1;
+        s.1 |= panicked;
+        if s.0 == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Block until every task has completed; returns true if any
+    /// panicked.
+    fn wait(&self) -> bool {
+        let mut s = self.state.lock().unwrap();
+        while s.0 > 0 {
+            s = self.done.wait(s).unwrap();
+        }
+        s.1
+    }
+}
+
+/// A resident pool of benchmark workers over one artifact directory.
+///
+/// Workers are spawned lazily ([`WorkerPool::ensure_workers`]) and live
+/// until the process exits; the pool never shrinks. Use [`shared`] to
+/// get the process-wide pool for an artifact directory — private pools
+/// (e.g. `benches/pool.rs` comparing cold vs warm) can be built with
+/// [`WorkerPool::new`].
+pub struct WorkerPool {
+    artifacts: PathBuf,
+    shared: Arc<SharedState>,
+    /// Serializes [`WorkerPool::warm`] calls: two overlapping
+    /// barrier-pinned fan-outs on one pool could each park some
+    /// workers on *their* barrier and starve the other's remaining
+    /// tasks forever.
+    warm_gate: Mutex<()>,
+}
+
+impl WorkerPool {
+    /// An empty pool over an artifact directory (no workers yet).
+    pub fn new(artifacts: impl Into<PathBuf>) -> WorkerPool {
+        WorkerPool {
+            artifacts: artifacts.into(),
+            warm_gate: Mutex::new(()),
+            shared: Arc::new(SharedState {
+                queue: Mutex::new(Queue::default()),
+                available: Condvar::new(),
+                workers: AtomicUsize::new(0),
+                tasks_done: AtomicUsize::new(0),
+                cache_hits: AtomicUsize::new(0),
+                compiles: AtomicUsize::new(0),
+            }),
+        }
+    }
+
+    /// The artifact directory this pool's workers compile from.
+    pub fn artifacts(&self) -> &Path {
+        &self.artifacts
+    }
+
+    /// Snapshot of the pool's cumulative counters.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            workers: self.shared.workers.load(Ordering::Relaxed),
+            tasks: self.shared.tasks_done.load(Ordering::Relaxed),
+            cache_hits: self.shared.cache_hits.load(Ordering::Relaxed),
+            compiles: self.shared.compiles.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Grow the pool to at least `n` workers. Each new worker brings up
+    /// its own device + store on its own thread; a worker that cannot
+    /// create its device fails this call (not a later fan-out).
+    pub fn ensure_workers(&self, n: usize) -> Result<()> {
+        loop {
+            let have = self.shared.workers.load(Ordering::SeqCst);
+            if have >= n {
+                return Ok(());
+            }
+            // Reserve the slot before spawning so concurrent callers
+            // don't over-spawn.
+            if self
+                .shared
+                .workers
+                .compare_exchange(have, have + 1, Ordering::SeqCst, Ordering::SeqCst)
+                .is_err()
+            {
+                continue;
+            }
+            let shared = self.shared.clone();
+            let artifacts = self.artifacts.clone();
+            let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
+            let worker_id = have;
+            let spawned = std::thread::Builder::new()
+                .name(format!("xbench-pool-{worker_id}"))
+                .spawn(move || worker_loop(shared, artifacts, ready_tx));
+            if let Err(e) = spawned {
+                self.shared.workers.fetch_sub(1, Ordering::SeqCst);
+                anyhow::bail!("spawning pool worker {worker_id}: {e}");
+            }
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    self.shared.workers.fetch_sub(1, Ordering::SeqCst);
+                    return Err(e.context(format!("pool worker {worker_id}: creating device")));
+                }
+                Err(_) => {
+                    self.shared.workers.fetch_sub(1, Ordering::SeqCst);
+                    anyhow::bail!("pool worker {worker_id} died during startup");
+                }
+            }
+        }
+    }
+
+    /// Fan `tasks` copies of `work` out over pool workers and block
+    /// until all of them have finished.
+    ///
+    /// `work` runs on worker threads with each worker's *persistent*
+    /// `ArtifactStore` — everything it captures must be `Sync` (it is
+    /// shared by reference across workers). The closure may borrow the
+    /// caller's stack: this call does not return until every copy has
+    /// completed, which is the invariant that makes the internal
+    /// lifetime erasure sound (see below). Panics inside `work` are
+    /// caught per task (workers survive) and surface here as one `Err`.
+    pub fn scoped_fanout(
+        &self,
+        tasks: usize,
+        work: impl Fn(&ArtifactStore) + Sync,
+    ) -> Result<()> {
+        if tasks == 0 {
+            return Ok(());
+        }
+        self.ensure_workers(tasks)?;
+        let latch = Arc::new(Latch::new(tasks));
+        // Shared by reference across all task copies; `&(dyn Fn + Sync)`
+        // is `Send`, so the boxed tasks stay `Send`.
+        let work: &(dyn Fn(&ArtifactStore) + Sync) = &work;
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for _ in 0..tasks {
+                let latch = latch.clone();
+                let task: Box<dyn FnOnce(&ArtifactStore) + Send + '_> =
+                    Box::new(move |store| {
+                        let panicked = std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(|| work(store)),
+                        )
+                        .is_err();
+                        latch.complete(panicked);
+                    });
+                // SAFETY: the queue's `Task` type requires `'static`,
+                // but this closure borrows caller-scoped data (the
+                // worklist, result collectors, `work` itself). The
+                // lifetime erasure is sound because this function does
+                // not return until `latch.wait()` has seen every
+                // enqueued copy complete (the latch is decremented even
+                // on panic, via the catch_unwind above), so no task —
+                // queued or running — can outlive the borrowed data.
+                let task: Task = unsafe { std::mem::transmute(task) };
+                q.tasks.push_back(task);
+            }
+            drop(q);
+            self.shared.available.notify_all();
+        }
+        let panicked = latch.wait();
+        anyhow::ensure!(
+            !panicked,
+            "a pool worker task panicked (see stderr for the panic payload)"
+        );
+        Ok(())
+    }
+}
+
+impl WorkerPool {
+    /// Precompile `rels` (manifest-relative artifact paths) on `jobs`
+    /// *distinct* workers, so a following `scoped_fanout(jobs, ..)`
+    /// hits a warm compile cache no matter how work-stealing
+    /// distributes the claims.
+    ///
+    /// The barrier pins one task copy per worker: a worker runs one
+    /// task at a time, so `jobs` copies blocked on the same barrier
+    /// must occupy `jobs` different workers before any of them
+    /// compiles. Compile failures are deliberately ignored here — a
+    /// broken artifact should fail (with context) in the fan-out that
+    /// actually measures it, not in a prefetch.
+    pub fn warm(&self, jobs: usize, rels: &[String]) -> Result<()> {
+        if jobs == 0 || rels.is_empty() {
+            return Ok(());
+        }
+        // One barrier group at a time: concurrent warm() calls would
+        // interleave their barrier tasks in the queue and could park
+        // every worker on a barrier that can no longer fill.
+        let _exclusive = self.warm_gate.lock().unwrap();
+        let barrier = std::sync::Barrier::new(jobs);
+        self.scoped_fanout(jobs, |store| {
+            barrier.wait();
+            for rel in rels {
+                let _ = store.get(rel);
+            }
+        })
+    }
+}
+
+/// One worker: persistent device + store, looping over queued tasks.
+fn worker_loop(
+    shared: Arc<SharedState>,
+    artifacts: PathBuf,
+    ready_tx: std::sync::mpsc::Sender<Result<()>>,
+) {
+    let device = match Device::cpu() {
+        Ok(d) => Rc::new(d),
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return;
+        }
+    };
+    let store = ArtifactStore::new(device, artifacts);
+    let _ = ready_tx.send(Ok(()));
+    // Per-worker counter snapshots: after each task, publish the deltas
+    // to the pool-wide atomics (the store itself must stay thread-local).
+    let mut seen_hits = 0usize;
+    let mut seen_compiles = 0usize;
+    loop {
+        let task = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.tasks.pop_front() {
+                    break t;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        task(&store);
+        let hits = store.cache_hits();
+        let compiles = store.len();
+        shared.cache_hits.fetch_add(hits - seen_hits, Ordering::Relaxed);
+        shared.compiles.fetch_add(compiles - seen_compiles, Ordering::Relaxed);
+        seen_hits = hits;
+        seen_compiles = compiles;
+        shared.tasks_done.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// The process-global pool registry: one [`WorkerPool`] per artifact
+/// directory (a worker's compile cache is keyed by manifest-relative
+/// paths, so pooling across *different* artifact dirs would alias
+/// unrelated executables).
+pub fn shared(artifacts: &Path) -> Arc<WorkerPool> {
+    static POOLS: OnceLock<Mutex<HashMap<PathBuf, Arc<WorkerPool>>>> = OnceLock::new();
+    let key = std::fs::canonicalize(artifacts).unwrap_or_else(|_| artifacts.to_path_buf());
+    let mut pools = POOLS.get_or_init(|| Mutex::new(HashMap::new())).lock().unwrap();
+    pools
+        .entry(key.clone())
+        .or_insert_with(|| Arc::new(WorkerPool::new(key)))
+        .clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fanout_runs_every_task_and_blocks_until_done() {
+        let pool = WorkerPool::new(std::env::temp_dir());
+        let counter = AtomicUsize::new(0);
+        pool.scoped_fanout(4, |_store| {
+            counter.fetch_add(1, Ordering::SeqCst);
+        })
+        .unwrap();
+        // scoped_fanout returned, so all 4 copies must have run.
+        assert_eq!(counter.load(Ordering::SeqCst), 4);
+        let stats = pool.stats();
+        assert_eq!(stats.tasks, 4);
+        assert!(stats.workers >= 1 && stats.workers <= 4, "{stats:?}");
+    }
+
+    #[test]
+    fn workers_persist_across_fanouts() {
+        let pool = WorkerPool::new(std::env::temp_dir());
+        pool.scoped_fanout(2, |_| {}).unwrap();
+        let w = pool.stats().workers;
+        pool.scoped_fanout(2, |_| {}).unwrap();
+        assert_eq!(pool.stats().workers, w, "second fan-out must reuse workers");
+        assert_eq!(pool.stats().tasks, 4);
+    }
+
+    #[test]
+    fn borrowed_state_is_visible_after_fanout() {
+        let pool = WorkerPool::new(std::env::temp_dir());
+        let items: Vec<usize> = (0..100).collect();
+        let next = AtomicUsize::new(0);
+        let out = Mutex::new(Vec::new());
+        pool.scoped_fanout(3, |_| loop {
+            let i = next.fetch_add(1, Ordering::SeqCst);
+            if i >= items.len() {
+                break;
+            }
+            out.lock().unwrap().push(items[i] * 2);
+        })
+        .unwrap();
+        let mut got = out.into_inner().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn task_panic_is_contained_and_reported() {
+        let pool = WorkerPool::new(std::env::temp_dir());
+        let err = pool
+            .scoped_fanout(2, |_| panic!("planted"))
+            .expect_err("panicking tasks must surface as Err");
+        assert!(format!("{err:#}").contains("panicked"), "{err:#}");
+        // The pool survives: workers caught the panic and keep serving.
+        let ok = AtomicUsize::new(0);
+        pool.scoped_fanout(2, |_| {
+            ok.fetch_add(1, Ordering::SeqCst);
+        })
+        .unwrap();
+        assert_eq!(ok.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn warm_ignores_missing_artifacts_and_returns() {
+        // Prefetch failures must not wedge the barrier or fail the
+        // call — a broken artifact should fail in the measuring
+        // fan-out, with context, not in warm().
+        let pool = WorkerPool::new(std::env::temp_dir());
+        pool.warm(2, &["definitely-missing.hlo.txt".to_string()]).unwrap();
+        assert_eq!(pool.stats().tasks, 2);
+        assert_eq!(pool.stats().compiles, 0);
+    }
+
+    #[test]
+    fn shared_registry_returns_one_pool_per_dir() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let a = shared(dir.path());
+        let b = shared(dir.path());
+        assert!(Arc::ptr_eq(&a, &b));
+        let other = crate::util::TempDir::new().unwrap();
+        let c = shared(other.path());
+        assert!(!Arc::ptr_eq(&a, &c));
+    }
+}

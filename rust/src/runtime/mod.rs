@@ -33,6 +33,7 @@ pub struct ArtifactStore {
     cache: RefCell<HashMap<String, Rc<Executable>>>,
     compile_times: RefCell<HashMap<String, Duration>>,
     compile_rss: RefCell<HashMap<String, usize>>,
+    cache_hits: std::cell::Cell<usize>,
 }
 
 impl ArtifactStore {
@@ -43,6 +44,7 @@ impl ArtifactStore {
             cache: RefCell::new(HashMap::new()),
             compile_times: RefCell::new(HashMap::new()),
             compile_rss: RefCell::new(HashMap::new()),
+            cache_hits: std::cell::Cell::new(0),
         }
     }
 
@@ -58,6 +60,7 @@ impl ArtifactStore {
     /// relative artifact path.
     pub fn get(&self, rel: &str) -> Result<Rc<Executable>> {
         if let Some(exe) = self.cache.borrow().get(rel) {
+            self.cache_hits.set(self.cache_hits.get() + 1);
             return Ok(exe.clone());
         }
         let t0 = std::time::Instant::now();
@@ -87,9 +90,18 @@ impl ArtifactStore {
         self.compile_rss.borrow().get(rel).copied().unwrap_or(0)
     }
 
-    /// Number of compiled executables held.
+    /// Number of compiled executables held (= compile-cache misses:
+    /// every held executable was compiled exactly once).
     pub fn len(&self) -> usize {
         self.cache.borrow().len()
+    }
+
+    /// Times [`ArtifactStore::get`] was served from the compile cache.
+    /// Warmth counter for the persistent worker pool
+    /// ([`crate::pool::PoolStats`]): a second fan-out over the same
+    /// suite should raise this without raising [`ArtifactStore::len`].
+    pub fn cache_hits(&self) -> usize {
+        self.cache_hits.get()
     }
 
     pub fn is_empty(&self) -> bool {

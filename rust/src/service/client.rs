@@ -1,0 +1,91 @@
+//! Client side of the service protocol: one connection per request.
+//!
+//! Every helper connects to `127.0.0.1:<port>`, writes one JSON line,
+//! reads one JSON line back, and translates `{"ok": false}` responses
+//! into `Err` — so the CLI verbs (`submit`/`queue`/`result`,
+//! `serve --stop`) never see protocol plumbing.
+
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use crate::util::Json;
+
+use super::protocol::{JobSpec, Request};
+
+/// Send one request, return the decoded `ok` response body.
+pub fn request(port: u16, req: &Request) -> Result<Json> {
+    let addr = SocketAddr::from(([127, 0, 0, 1], port));
+    let mut stream = TcpStream::connect_timeout(&addr, Duration::from_secs(3))
+        .with_context(|| {
+            format!("connecting to the xbench daemon at {addr} (is `xbench serve` running?)")
+        })?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(30)))?;
+    stream.write_all(req.to_json().to_json().as_bytes())?;
+    stream.write_all(b"\n")?;
+    stream.flush()?;
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line)?;
+    let response =
+        crate::util::json::parse(line.trim()).context("malformed daemon response")?;
+    match response.get("ok").and_then(|b| b.as_bool()) {
+        Some(true) => Ok(response),
+        _ => anyhow::bail!(
+            "daemon error: {}",
+            response.get("error").and_then(|e| e.as_str()).unwrap_or("unknown")
+        ),
+    }
+}
+
+/// Probe the daemon; returns the ping body (pid, version, artifacts).
+pub fn ping(port: u16) -> Result<Json> {
+    request(port, &Request::Ping)
+}
+
+/// Enqueue a job; returns its id.
+pub fn submit(port: u16, spec: JobSpec) -> Result<String> {
+    Ok(request(port, &Request::Submit(spec))?.req_str("job")?.to_string())
+}
+
+/// Snapshot of every job's status row.
+pub fn queue_status(port: u16) -> Result<Vec<Json>> {
+    Ok(request(port, &Request::Queue)?.req_array("jobs")?.to_vec())
+}
+
+/// Fetch one job: `(status row, result payload when done)`.
+///
+/// With `wait`, polls until the job leaves pending/running (or
+/// `timeout_secs` elapses; 0 = no limit). Each poll is its own
+/// connection, so a waiting client never ties up the daemon.
+pub fn fetch_result(
+    port: u16,
+    job: &str,
+    wait: bool,
+    timeout_secs: u64,
+) -> Result<(Json, Option<Json>)> {
+    let deadline = (timeout_secs > 0)
+        .then(|| std::time::Instant::now() + Duration::from_secs(timeout_secs));
+    loop {
+        let resp = request(port, &Request::Result { job: job.to_string() })?;
+        let view = resp.req("job")?.clone();
+        let status = view.req_str("status")?;
+        let settled = status == "done" || status == "failed";
+        if settled || !wait {
+            return Ok((view, resp.get("result").cloned()));
+        }
+        if let Some(d) = deadline {
+            anyhow::ensure!(
+                std::time::Instant::now() < d,
+                "timed out after {timeout_secs}s waiting for {job} (status: {status})"
+            );
+        }
+        std::thread::sleep(Duration::from_millis(300));
+    }
+}
+
+/// Ask the daemon to stop (finishes the running job, abandons pending).
+pub fn shutdown(port: u16) -> Result<()> {
+    request(port, &Request::Shutdown).map(|_| ())
+}

@@ -1,0 +1,336 @@
+//! The resident benchmark daemon behind `xbench serve`.
+//!
+//! Two threads:
+//!
+//! - the **accept loop** (caller's thread): a `TcpListener` bound to
+//!   localhost, handling one JSON-line request per connection. Every
+//!   op is a cheap queue-state read/write, so connections are served
+//!   inline — there is no per-connection thread to leak.
+//! - the **executor**: owns the persistent device + [`ArtifactStore`]
+//!   (single-threaded by design — it never crosses threads) plus the
+//!   loaded suite, and drains the job queue one job at a time through
+//!   [`super::exec::execute_job`]; parallel fan-out inside a job goes
+//!   through the warm [`crate::pool`]. One job at a time is a feature:
+//!   concurrent benchmark jobs would contend for cores and corrupt
+//!   each other's measurements.
+//!
+//! Shutdown (`{"op":"shutdown"}` / `xbench serve --stop`) finishes the
+//! running job, abandons pending ones (reported on stderr), and
+//! returns from [`Daemon::run`].
+
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::config::RunConfig;
+use crate::runtime::{ArtifactStore, Device};
+use crate::store::Archive;
+use crate::suite::Suite;
+use crate::util::Json;
+
+pub use super::exec::JobProgress;
+use super::exec::{execute_job, ExecEnv};
+use super::protocol::{err_response, ok_response, JobSpec, Request, PROTO_VERSION};
+use super::unix_now;
+
+/// Lifecycle of one job.
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Status {
+    Pending,
+    Running,
+    Done,
+    Failed(String),
+}
+
+impl Status {
+    fn as_str(&self) -> &'static str {
+        match self {
+            Status::Pending => "pending",
+            Status::Running => "running",
+            Status::Done => "done",
+            Status::Failed(_) => "failed",
+        }
+    }
+}
+
+/// One job's full state.
+struct JobRecord {
+    id: String,
+    spec: JobSpec,
+    status: Status,
+    submitted_ts: u64,
+    started_ts: Option<u64>,
+    finished_ts: Option<u64>,
+    progress: Arc<JobProgress>,
+    /// Result payload (set when done): run_id, records, errors, …
+    result: Option<Json>,
+}
+
+impl JobRecord {
+    /// The queue-status row for this job.
+    fn view(&self) -> Json {
+        let (done, total) = self.progress.snapshot();
+        let mut fields = vec![
+            ("id", Json::str(&self.id)),
+            ("verb", Json::str(self.spec.verb.as_str())),
+            ("status", Json::str(self.status.as_str())),
+            ("submitted_ts", Json::num(self.submitted_ts as f64)),
+            ("done", Json::num(done as f64)),
+            ("total", Json::num(total as f64)),
+        ];
+        if let Some(ts) = self.started_ts {
+            fields.push(("started_ts", Json::num(ts as f64)));
+        }
+        if let Some(ts) = self.finished_ts {
+            fields.push(("finished_ts", Json::num(ts as f64)));
+        }
+        if let Status::Failed(e) = &self.status {
+            fields.push(("error", Json::str(e)));
+        }
+        if let Some(run_id) = self.result.as_ref().and_then(|r| r.get("run_id")) {
+            fields.push(("run_id", run_id.clone()));
+        }
+        Json::obj(fields)
+    }
+}
+
+struct ServiceState {
+    jobs: Mutex<Vec<JobRecord>>,
+    /// Signals the executor: new pending job, or shutdown.
+    wake: Condvar,
+    shutdown: AtomicBool,
+    artifacts: PathBuf,
+}
+
+/// A bound (not yet running) daemon.
+pub struct Daemon {
+    listener: TcpListener,
+    state: Arc<ServiceState>,
+}
+
+impl Daemon {
+    /// Bind the service socket on localhost. `port` 0 picks an
+    /// ephemeral port (tests) — read it back with [`Daemon::port`].
+    pub fn bind(port: u16, artifacts: PathBuf) -> Result<Daemon> {
+        let listener = TcpListener::bind(("127.0.0.1", port))
+            .with_context(|| format!("binding 127.0.0.1:{port} (daemon already running?)"))?;
+        Ok(Daemon {
+            listener,
+            state: Arc::new(ServiceState {
+                jobs: Mutex::new(Vec::new()),
+                wake: Condvar::new(),
+                shutdown: AtomicBool::new(false),
+                artifacts,
+            }),
+        })
+    }
+
+    /// The port actually bound.
+    pub fn port(&self) -> u16 {
+        self.listener.local_addr().map(|a| a.port()).unwrap_or(0)
+    }
+
+    /// Run the service until a shutdown request: spawns the executor
+    /// (which brings up the persistent device — a failure there fails
+    /// this call, not a later job), then serves the accept loop on the
+    /// calling thread.
+    pub fn run(self, suite: Suite, archive: Archive, base_cfg: RunConfig) -> Result<()> {
+        let state = self.state.clone();
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
+        let executor = std::thread::Builder::new()
+            .name("xbench-executor".into())
+            .spawn(move || executor_loop(state, suite, archive, base_cfg, ready_tx))
+            .context("spawning executor thread")?;
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => return Err(e.context("executor: creating device")),
+            Err(_) => anyhow::bail!("executor thread died during startup"),
+        }
+
+        eprintln!(
+            "xbench daemon listening on 127.0.0.1:{} (artifacts {}, pid {})",
+            self.port(),
+            self.state.artifacts.display(),
+            std::process::id()
+        );
+        for stream in self.listener.incoming() {
+            match stream {
+                Ok(s) => {
+                    if let Err(e) = handle_connection(s, &self.state) {
+                        eprintln!("service: connection error: {e:#}");
+                    }
+                }
+                Err(e) => eprintln!("service: accept error: {e}"),
+            }
+            if self.state.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+        }
+
+        // Drain: the executor finishes its running job and exits.
+        self.state.wake.notify_all();
+        let abandoned = {
+            let jobs = self.state.jobs.lock().unwrap();
+            jobs.iter().filter(|j| j.status == Status::Pending).count()
+        };
+        if abandoned > 0 {
+            eprintln!("shutdown: abandoning {abandoned} pending job(s)");
+        }
+        eprintln!("shutdown: waiting for the running job (if any)…");
+        executor
+            .join()
+            .map_err(|_| anyhow::anyhow!("executor thread panicked"))?;
+        eprintln!("xbench daemon stopped");
+        Ok(())
+    }
+}
+
+/// The executor: persistent device + store + suite, one job at a time.
+fn executor_loop(
+    state: Arc<ServiceState>,
+    suite: Suite,
+    archive: Archive,
+    base_cfg: RunConfig,
+    ready_tx: std::sync::mpsc::Sender<Result<()>>,
+) {
+    let device = match Device::cpu() {
+        Ok(d) => Rc::new(d),
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return;
+        }
+    };
+    // The serial-path store persists across jobs — jobs with `jobs: 1`
+    // are exactly as warm as pooled ones.
+    let store = ArtifactStore::new(device, state.artifacts.clone());
+    let _ = ready_tx.send(Ok(()));
+
+    loop {
+        // Claim the oldest pending job (submission order = run order).
+        let claimed = {
+            let mut jobs = state.jobs.lock().unwrap();
+            loop {
+                if let Some(i) = jobs.iter().position(|j| j.status == Status::Pending) {
+                    jobs[i].status = Status::Running;
+                    jobs[i].started_ts = Some(unix_now());
+                    break Some((i, jobs[i].spec.clone(), jobs[i].progress.clone()));
+                }
+                if state.shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                jobs = state.wake.wait(jobs).unwrap();
+            }
+        };
+        let Some((index, spec, progress)) = claimed else { return };
+
+        let env = ExecEnv {
+            suite: &suite,
+            store: &store,
+            archive: &archive,
+            base_cfg: &base_cfg,
+        };
+        let outcome = execute_job(&env, &spec, &progress);
+        let mut jobs = state.jobs.lock().unwrap();
+        let job = &mut jobs[index];
+        job.finished_ts = Some(unix_now());
+        match outcome {
+            Ok(result) => {
+                eprintln!(
+                    "job {} done ({})",
+                    job.id,
+                    result
+                        .get("run_id")
+                        .and_then(|r| r.as_str())
+                        .unwrap_or("unrecorded")
+                );
+                job.result = Some(result);
+                job.status = Status::Done;
+            }
+            Err(e) => {
+                eprintln!("job {} FAILED: {e:#}", job.id);
+                job.status = Status::Failed(format!("{e:#}"));
+            }
+        }
+    }
+}
+
+/// Serve one connection: one request line, one response line.
+fn handle_connection(stream: TcpStream, state: &Arc<ServiceState>) -> Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(10)))?;
+    stream.set_write_timeout(Some(std::time::Duration::from_secs(10)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let response = match Request::decode_line(line.trim()) {
+        Ok(req) => handle_request(req, state),
+        Err(e) => err_response(format!("bad request: {e:#}")),
+    };
+    let mut stream = stream;
+    stream.write_all(response.to_json().as_bytes())?;
+    stream.write_all(b"\n")?;
+    stream.flush()?;
+    Ok(())
+}
+
+fn handle_request(req: Request, state: &Arc<ServiceState>) -> Json {
+    match req {
+        Request::Ping => ok_response(vec![
+            ("proto", Json::num(PROTO_VERSION as f64)),
+            ("pid", Json::num(std::process::id() as f64)),
+            ("version", Json::str(crate::version())),
+            ("artifacts", Json::str(state.artifacts.display().to_string())),
+        ]),
+        Request::Submit(spec) => {
+            if state.shutdown.load(Ordering::SeqCst) {
+                return err_response("daemon is shutting down");
+            }
+            let mut jobs = state.jobs.lock().unwrap();
+            let id = format!("job-{:04}", jobs.len() + 1);
+            jobs.push(JobRecord {
+                id: id.clone(),
+                spec,
+                status: Status::Pending,
+                submitted_ts: unix_now(),
+                started_ts: None,
+                finished_ts: None,
+                progress: Arc::new(JobProgress::default()),
+                result: None,
+            });
+            drop(jobs);
+            state.wake.notify_all();
+            ok_response(vec![("job", Json::str(id))])
+        }
+        Request::Queue => {
+            let jobs = state.jobs.lock().unwrap();
+            ok_response(vec![(
+                "jobs",
+                Json::Arr(jobs.iter().map(|j| j.view()).collect()),
+            )])
+        }
+        Request::Result { job } => {
+            let jobs = state.jobs.lock().unwrap();
+            match jobs.iter().find(|j| j.id == job) {
+                None => err_response(format!(
+                    "unknown job {job:?} ({} submitted so far)",
+                    jobs.len()
+                )),
+                Some(j) => {
+                    let mut fields = vec![("job", j.view())];
+                    if let Some(result) = &j.result {
+                        fields.push(("result", result.clone()));
+                    }
+                    ok_response(fields)
+                }
+            }
+        }
+        Request::Shutdown => {
+            state.shutdown.store(true, Ordering::SeqCst);
+            state.wake.notify_all();
+            ok_response(vec![])
+        }
+    }
+}

@@ -1,0 +1,312 @@
+//! Daemon job execution: the one-shot verbs' semantics, minus the
+//! terminal.
+//!
+//! Each job runs through exactly the machinery the CLI uses — worklist
+//! expansion via [`crate::suite`], fan-out via
+//! [`crate::coordinator::run_partitioned`] (and therefore the warm
+//! [`crate::pool`]), recording via [`Archive::record_scheduled`] — so a
+//! daemon-produced run is indistinguishable in the archive from a
+//! `xbench run --record`: same `RunRecord` schema, same bench keys,
+//! same run-id guard. The only differences are that results come back
+//! as a JSON payload instead of a rendered table, and per-item
+//! completions tick a [`JobProgress`] the queue endpoint can report.
+
+use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::ci::{BaselineStore, Detector};
+use crate::config::{BatchPolicy, Compiler, Mode, RunConfig};
+use crate::coordinator::{
+    default_jobs, planned_bench_key, run_partitioned, sweep_model, ExecOpts, RunResult, Runner,
+    SchedError,
+};
+use crate::runtime::{ArtifactStore, ModelEntry};
+use crate::store::{Archive, RunMeta, RunRecord};
+use crate::suite::Suite;
+use crate::util::Json;
+
+use super::protocol::{JobSpec, JobVerb};
+
+/// Live completion counter for one running job, shared between the
+/// executor (ticks) and the queue endpoint (reads).
+#[derive(Debug, Default)]
+pub struct JobProgress {
+    done: AtomicUsize,
+    total: AtomicUsize,
+}
+
+impl JobProgress {
+    /// Set the worklist size (called once the worklist is expanded).
+    pub fn begin(&self, total: usize) {
+        self.total.store(total, Ordering::Relaxed);
+        self.done.store(0, Ordering::Relaxed);
+    }
+
+    /// Count one finished item (success or failure).
+    pub fn tick(&self) {
+        self.done.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `(done, total)` right now.
+    pub fn snapshot(&self) -> (usize, usize) {
+        (self.done.load(Ordering::Relaxed), self.total.load(Ordering::Relaxed))
+    }
+}
+
+/// Everything the executor thread owns that jobs need: the loaded
+/// suite, the (persistent, warm) serial-path store, the shared archive,
+/// and the daemon's base configuration.
+pub struct ExecEnv<'a> {
+    pub suite: &'a Suite,
+    pub store: &'a ArtifactStore,
+    pub archive: &'a Archive,
+    pub base_cfg: &'a RunConfig,
+}
+
+/// Resolve a job spec into a full run configuration over the daemon's
+/// base config. The measurement protocol always comes from the spec
+/// (the submitter owns the `config_hash`).
+fn cfg_for(env: &ExecEnv, spec: &JobSpec) -> Result<RunConfig> {
+    let mut cfg = env.base_cfg.clone();
+    cfg.mode = Mode::parse(&spec.mode)?;
+    cfg.compiler = Compiler::parse(&spec.compiler)?;
+    cfg.batch = match spec.batch {
+        Some(b) => BatchPolicy::Fixed(b),
+        None => BatchPolicy::Default,
+    };
+    cfg.repeats = spec.repeats;
+    cfg.iterations = spec.iterations;
+    cfg.warmup = spec.warmup;
+    if !spec.models.is_empty() {
+        cfg.selection.models = spec.models.clone();
+    }
+    if let Some(d) = &spec.domain {
+        cfg.selection.domain = Some(d.clone());
+    }
+    if spec.verb == JobVerb::Ci && cfg.selection.models.is_empty() {
+        cfg.selection.models =
+            crate::ci::DEFAULT_CI_MODELS.iter().map(|s| s.to_string()).collect();
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Execute one job to completion. Returns the result payload stored on
+/// the job record and served by the `result` op: archive `run_id`,
+/// per-config `records`, per-item `errors`, and (ci with a baseline)
+/// `regressions`.
+pub fn execute_job(env: &ExecEnv, spec: &JobSpec, progress: &JobProgress) -> Result<Json> {
+    let cfg = cfg_for(env, spec)?;
+    let exec = ExecOpts {
+        jobs: spec.jobs.unwrap_or_else(default_jobs),
+        shard: None,
+        // A gate over partial measurements would pass silently, so ci
+        // keeps the one-shot verb's always-fail-fast policy.
+        fail_fast: spec.verb == JobVerb::Ci,
+    };
+    // Pre-flight any run-id override against the archive *before*
+    // measuring, mirroring cli/run.rs: a reserved or already-recorded
+    // id must fail the job in milliseconds, not after the suite has
+    // burned hours of wall time (record_scheduled re-checks at append).
+    if let Some(id) = &spec.run_id {
+        let planned = planned_worklist(env, &cfg, spec.verb)?;
+        let probe = RunMeta::capture(&cfg, "").with_run_id(id)?;
+        env.archive.check_run_id_reuse(&probe, &planned, &planned)?;
+    }
+    let (indexed, errors, worklist) = match spec.verb {
+        JobVerb::Run | JobVerb::Ci => measure_selection(env, &cfg, &exec, progress)?,
+        JobVerb::Sweep => measure_sweep(env, &cfg, &exec, progress)?,
+    };
+    anyhow::ensure!(
+        !indexed.is_empty(),
+        "no benchmark succeeded; nothing recorded"
+    );
+
+    let note = if spec.note.is_empty() {
+        match spec.verb {
+            JobVerb::Run => "daemon-run",
+            JobVerb::Sweep => "daemon-sweep",
+            JobVerb::Ci => "ci-baseline",
+        }
+    } else {
+        spec.note.as_str()
+    };
+    // Gate BEFORE recording: `baseline: "latest"` must resolve against
+    // the archive as it stood when the job ran, not against the run
+    // this job is about to append (a build gated against itself would
+    // always pass).
+    let regressions = match (&spec.verb, &spec.baseline) {
+        (JobVerb::Ci, Some(selector)) => {
+            let archived = env.archive.load()?;
+            let baseline_run = env.archive.resolve_run(&archived, selector)?;
+            let baselines = BaselineStore::from_records(&archived, &baseline_run)?;
+            let results: Vec<RunResult> =
+                indexed.iter().map(|(_, r)| r.clone()).collect();
+            let regs = Detector::default().detect(&baselines, &results);
+            Some((baseline_run, regs))
+        }
+        _ => None,
+    };
+
+    let mut meta = RunMeta::capture(&cfg, note);
+    if exec.jobs > 1 {
+        meta = meta.with_parallelism(exec.jobs, None);
+    }
+    let (records, meta) =
+        env.archive
+            .record_scheduled(&indexed, meta, spec.run_id.as_deref(), &worklist)?;
+
+    let mut fields = vec![
+        ("run_id", Json::str(&meta.run_id)),
+        ("records", Json::Arr(records.iter().map(record_row).collect())),
+        (
+            "errors",
+            Json::Arr(
+                errors
+                    .iter()
+                    .map(|e| {
+                        Json::obj(vec![
+                            ("label", Json::str(&e.label)),
+                            ("message", Json::str(&e.message)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ];
+    if let Some((baseline_run, regs)) = regressions {
+        fields.push(("baseline_run", Json::str(baseline_run)));
+        fields.push((
+            "regressions",
+            Json::Arr(
+                regs.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("bench", Json::str(&r.bench)),
+                            ("metric", Json::str(r.metric.to_string())),
+                            ("baseline", Json::num(r.baseline)),
+                            ("measured", Json::num(r.measured)),
+                            ("ratio", Json::num(r.ratio)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ));
+    }
+    Ok(Json::obj(fields))
+}
+
+/// The bench keys a job will record, in worklist (= `seq`) order,
+/// derived without running anything — what the pre-flight `run_id`
+/// reuse guard checks. Batch resolution is shared with the runner
+/// ([`planned_bench_key`]), so predicted keys cannot drift from
+/// measured ones; sweep jobs enumerate each model's ladder in
+/// `infer_batches` order, exactly as `sweep_model` measures it.
+fn planned_worklist(env: &ExecEnv, cfg: &RunConfig, verb: JobVerb) -> Result<Vec<String>> {
+    match verb {
+        JobVerb::Run | JobVerb::Ci => {
+            let benches = env.suite.benches(&cfg.selection, cfg.mode)?;
+            benches
+                .iter()
+                .map(|b| Ok(planned_bench_key(cfg, env.suite.model(&b.model)?)))
+                .collect()
+        }
+        JobVerb::Sweep => {
+            let mut keys = Vec::new();
+            for m in env.suite.select(&cfg.selection)? {
+                if !m.has_tag("sweep") {
+                    continue;
+                }
+                for b in m.infer_batches() {
+                    keys.push(crate::store::bench_key_of(
+                        &m.name,
+                        cfg.mode.as_str(),
+                        cfg.compiler.as_str(),
+                        b,
+                    ));
+                }
+            }
+            Ok(keys)
+        }
+    }
+}
+
+/// The `run`/`ci` measurement: one worklist item per benchmark config,
+/// exactly like `xbench run`.
+fn measure_selection(
+    env: &ExecEnv,
+    cfg: &RunConfig,
+    exec: &ExecOpts,
+    progress: &JobProgress,
+) -> Result<(Vec<(usize, RunResult)>, Vec<SchedError>, Vec<String>)> {
+    let benches = env.suite.benches(&cfg.selection, cfg.mode)?;
+    anyhow::ensure!(!benches.is_empty(), "selection matches no benchmarks");
+    let entries = benches
+        .iter()
+        .map(|b| env.suite.model(&b.model))
+        .collect::<Result<Vec<_>>>()?;
+    let labels: Vec<String> = benches.iter().map(|b| b.to_string()).collect();
+    let worklist: Vec<String> =
+        entries.iter().map(|e| planned_bench_key(cfg, e)).collect();
+    progress.begin(entries.len());
+
+    let outcome = run_partitioned(exec, env.store, &entries, &labels, "job", |st, entry| {
+        let r = Runner::new(st, cfg.clone()).run_model(entry);
+        progress.tick();
+        r
+    })?;
+    Ok((outcome.completed, outcome.errors, worklist))
+}
+
+/// The `sweep` measurement: one worklist item per sweep-tagged model,
+/// flattened to one record per ladder point (each point is a full
+/// [`RunResult`] at its own batch, so it archives like any other
+/// config).
+fn measure_sweep(
+    env: &ExecEnv,
+    cfg: &RunConfig,
+    exec: &ExecOpts,
+    progress: &JobProgress,
+) -> Result<(Vec<(usize, RunResult)>, Vec<SchedError>, Vec<String>)> {
+    anyhow::ensure!(cfg.mode == Mode::Infer, "sweep jobs are inference-only");
+    let models: Vec<&ModelEntry> = env
+        .suite
+        .select(&cfg.selection)?
+        .into_iter()
+        .filter(|m| m.has_tag("sweep"))
+        .collect();
+    anyhow::ensure!(!models.is_empty(), "selection matches no sweep-tagged models");
+    let labels: Vec<String> = models.iter().map(|m| m.name.clone()).collect();
+    progress.begin(models.len());
+
+    let outcome = run_partitioned(exec, env.store, &models, &labels, "job", |st, m| {
+        let runner = Runner::new(st, cfg.clone());
+        let r = sweep_model(&runner, m);
+        progress.tick();
+        r
+    })?;
+    // Ladder points flatten in worklist order, so `seq` stays a stable
+    // global index for the run-id reuse guard.
+    let mut indexed: Vec<(usize, RunResult)> = Vec::new();
+    for (_, sweep) in outcome.completed {
+        for p in sweep.points {
+            indexed.push((indexed.len(), p));
+        }
+    }
+    let worklist: Vec<String> = indexed.iter().map(|(_, r)| r.bench_key()).collect();
+    Ok((indexed, outcome.errors, worklist))
+}
+
+/// One result row of the job payload (a compact projection of the
+/// archived record; the archive keeps the full schema).
+fn record_row(r: &RunRecord) -> Json {
+    Json::obj(vec![
+        ("key", Json::str(r.bench_key())),
+        ("model", Json::str(&r.model)),
+        ("mode", Json::str(&r.mode)),
+        ("compiler", Json::str(&r.compiler)),
+        ("batch", Json::num(r.batch as f64)),
+        ("iter_secs", Json::num(r.iter_secs)),
+        ("throughput", Json::num(r.throughput)),
+    ])
+}

@@ -1,0 +1,40 @@
+//! The persistent benchmark service: job queue + daemon + client.
+//!
+//! The paper's second use case (§4.2) runs the benchmark continuously
+//! inside CI, where the dominant cost is not measurement but re-setup:
+//! every invocation re-creates devices and re-compiles every artifact.
+//! With the warm [`crate::pool`] underneath, this module turns `xbench`
+//! from a one-shot CLI into a resident service:
+//!
+//! - [`protocol`]: the JSON-lines request/response vocabulary spoken
+//!   over localhost TCP (std-only, `std::net`) — [`JobSpec`] describes
+//!   a `run`/`sweep`/`ci` job, [`Request`] the wire ops;
+//! - [`daemon`]: `xbench serve` — accept loop + a single executor
+//!   thread that owns the persistent device/store and drains the job
+//!   queue through the pool;
+//! - [`client`]: `xbench submit`/`queue`/`result` — one-line request,
+//!   one-line response, connection per call;
+//! - [`exec`]: job execution — the same worklist expansion, scheduler
+//!   contract, and archive recording as the one-shot verbs, so daemon
+//!   output is queryable by `cmp`/`rank`/`history` with zero new result
+//!   formats.
+//!
+//! Job lifecycle, wire protocol, and archive interaction are documented
+//! in `docs/SERVICE.md`.
+
+pub mod client;
+pub mod daemon;
+pub mod exec;
+pub mod protocol;
+
+pub use client::{fetch_result, ping, queue_status, request, shutdown, submit};
+pub use daemon::{Daemon, JobProgress};
+pub use protocol::{JobSpec, JobVerb, Request, DEFAULT_PORT};
+
+/// Unix seconds now (0 if the clock is before the epoch).
+pub(crate) fn unix_now() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}

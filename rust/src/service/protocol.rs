@@ -1,0 +1,341 @@
+//! The wire vocabulary of the benchmark service.
+//!
+//! Framing is JSON lines: a client connects to `127.0.0.1:<port>`,
+//! writes exactly one request object on one line, reads exactly one
+//! response object on one line, and closes. Requests carry an `"op"`
+//! key; responses always carry `"ok"` (`true`/`false`) and, on failure,
+//! an `"error"` string. Unknown keys are ignored on both sides so the
+//! protocol can grow without breaking old clients ([`PROTO_VERSION`]
+//! is reported by `ping` for diagnostics).
+
+use anyhow::{bail, Result};
+
+use crate::util::Json;
+
+/// Default daemon port (localhost only; override with `--port`).
+pub const DEFAULT_PORT: u16 = 7483;
+
+/// Wire-protocol version reported by `ping`.
+pub const PROTO_VERSION: usize = 1;
+
+/// What kind of work a job runs. Mirrors the one-shot verbs: `run`
+/// (benchmark the selection), `sweep` (batch ladder over sweep-tagged
+/// models), `ci` (measure the CI subset fail-fast, optionally gate it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobVerb {
+    Run,
+    Sweep,
+    Ci,
+}
+
+impl JobVerb {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobVerb::Run => "run",
+            JobVerb::Sweep => "sweep",
+            JobVerb::Ci => "ci",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<JobVerb> {
+        match s {
+            "run" => Ok(JobVerb::Run),
+            "sweep" => Ok(JobVerb::Sweep),
+            "ci" => Ok(JobVerb::Ci),
+            _ => bail!("unknown job verb {s:?} (run|sweep|ci)"),
+        }
+    }
+}
+
+/// One enqueued unit of benchmark work.
+///
+/// Selection and configuration mirror the one-shot CLI flags; the
+/// measurement protocol (`repeats`/`iterations`/`warmup`) is always
+/// explicit so a submitted job's `config_hash` is determined by the
+/// *submitter*, not by whatever the daemon happened to be started with.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub verb: JobVerb,
+    /// `infer` | `train` (run/ci; sweeps are inference-only).
+    pub mode: String,
+    /// `fused` | `eager`.
+    pub compiler: String,
+    /// Fixed inference batch (None = each model's default).
+    pub batch: Option<usize>,
+    /// Explicit model selection (empty = verb default: whole suite for
+    /// run/sweep, the CI subset for ci).
+    pub models: Vec<String>,
+    pub domain: Option<String>,
+    /// Measurement protocol — enters `config_hash`.
+    pub repeats: usize,
+    pub iterations: usize,
+    pub warmup: usize,
+    /// Worker fan-out for this job (None = all hardware threads).
+    pub jobs: Option<usize>,
+    /// Free-form archive note ("" = verb default).
+    pub note: String,
+    /// Archive run-id override (validated like `--run-id`).
+    pub run_id: Option<String>,
+    /// ci only: archive run selector to gate the measured build
+    /// against (regressions reported in the job result).
+    pub baseline: Option<String>,
+}
+
+impl JobSpec {
+    /// A `run` job over the whole suite with the CLI's fast protocol.
+    pub fn default_run() -> JobSpec {
+        JobSpec {
+            verb: JobVerb::Run,
+            mode: "infer".into(),
+            compiler: "fused".into(),
+            batch: None,
+            models: Vec::new(),
+            domain: None,
+            repeats: 5,
+            iterations: 2,
+            warmup: 1,
+            jobs: None,
+            note: String::new(),
+            run_id: None,
+            baseline: None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("verb", Json::str(self.verb.as_str())),
+            ("mode", Json::str(&self.mode)),
+            ("compiler", Json::str(&self.compiler)),
+            ("repeats", Json::num(self.repeats as f64)),
+            ("iterations", Json::num(self.iterations as f64)),
+            ("warmup", Json::num(self.warmup as f64)),
+            ("note", Json::str(&self.note)),
+        ];
+        if let Some(b) = self.batch {
+            fields.push(("batch", Json::num(b as f64)));
+        }
+        if !self.models.is_empty() {
+            fields.push((
+                "models",
+                Json::Arr(self.models.iter().map(|m| Json::str(m)).collect()),
+            ));
+        }
+        if let Some(d) = &self.domain {
+            fields.push(("domain", Json::str(d)));
+        }
+        if let Some(j) = self.jobs {
+            fields.push(("jobs", Json::num(j as f64)));
+        }
+        if let Some(id) = &self.run_id {
+            fields.push(("run_id", Json::str(id)));
+        }
+        if let Some(b) = &self.baseline {
+            fields.push(("baseline", Json::str(b)));
+        }
+        Json::obj(fields)
+    }
+
+    /// Absent keys take defaults; *present* keys must have the right
+    /// type. Silently defaulting a mistyped `"repeats": "9"` would
+    /// measure and archive under a different `config_hash` than the
+    /// submitter intended — the spec's whole contract is that the
+    /// submitter owns the protocol, so type errors are loud.
+    pub fn decode(v: &Json) -> Result<JobSpec> {
+        let str_of = |key: &str, default: &str| -> Result<String> {
+            match v.get(key) {
+                None => Ok(default.to_string()),
+                Some(x) => x
+                    .as_str()
+                    .map(String::from)
+                    .ok_or_else(|| anyhow::anyhow!("spec key {key:?} must be a string")),
+            }
+        };
+        let opt_str = |key: &str| -> Result<Option<String>> {
+            match v.get(key) {
+                None => Ok(None),
+                Some(x) => x
+                    .as_str()
+                    .map(|s| Some(s.to_string()))
+                    .ok_or_else(|| anyhow::anyhow!("spec key {key:?} must be a string")),
+            }
+        };
+        let usize_of = |key: &str, default: usize| -> Result<usize> {
+            match v.get(key) {
+                None => Ok(default),
+                Some(x) => x.as_usize().ok_or_else(|| {
+                    anyhow::anyhow!("spec key {key:?} must be a non-negative integer")
+                }),
+            }
+        };
+        let opt_usize = |key: &str| -> Result<Option<usize>> {
+            match v.get(key) {
+                None => Ok(None),
+                Some(x) => x.as_usize().map(Some).ok_or_else(|| {
+                    anyhow::anyhow!("spec key {key:?} must be a non-negative integer")
+                }),
+            }
+        };
+        let models = match v.get("models") {
+            None => Vec::new(),
+            Some(m) => m
+                .as_array()
+                .ok_or_else(|| anyhow::anyhow!("spec key \"models\" must be an array"))?
+                .iter()
+                .map(|x| {
+                    x.as_str().map(String::from).ok_or_else(|| {
+                        anyhow::anyhow!("spec key \"models\" must contain only strings")
+                    })
+                })
+                .collect::<Result<_>>()?,
+        };
+        Ok(JobSpec {
+            verb: JobVerb::parse(v.req_str("verb")?)?,
+            mode: str_of("mode", "infer")?,
+            compiler: str_of("compiler", "fused")?,
+            batch: opt_usize("batch")?,
+            models,
+            domain: opt_str("domain")?,
+            repeats: usize_of("repeats", 5)?,
+            iterations: usize_of("iterations", 2)?,
+            warmup: usize_of("warmup", 1)?,
+            jobs: opt_usize("jobs")?,
+            note: str_of("note", "")?,
+            run_id: opt_str("run_id")?,
+            baseline: opt_str("baseline")?,
+        })
+    }
+}
+
+/// One wire request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Liveness / identity probe.
+    Ping,
+    /// Enqueue a job; response carries its id.
+    Submit(JobSpec),
+    /// Snapshot of every job's status.
+    Queue,
+    /// Fetch one job's status + (when done) its results.
+    Result { job: String },
+    /// Stop the daemon: finish the running job, abandon pending ones.
+    Shutdown,
+}
+
+impl Request {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Ping => Json::obj(vec![("op", Json::str("ping"))]),
+            Request::Submit(spec) => {
+                Json::obj(vec![("op", Json::str("submit")), ("spec", spec.to_json())])
+            }
+            Request::Queue => Json::obj(vec![("op", Json::str("queue"))]),
+            Request::Result { job } => {
+                Json::obj(vec![("op", Json::str("result")), ("job", Json::str(job))])
+            }
+            Request::Shutdown => Json::obj(vec![("op", Json::str("shutdown"))]),
+        }
+    }
+
+    pub fn decode(v: &Json) -> Result<Request> {
+        match v.req_str("op")? {
+            "ping" => Ok(Request::Ping),
+            "submit" => Ok(Request::Submit(JobSpec::decode(v.req("spec")?)?)),
+            "queue" => Ok(Request::Queue),
+            "result" => Ok(Request::Result { job: v.req_str("job")?.to_string() }),
+            "shutdown" => Ok(Request::Shutdown),
+            other => bail!("unknown op {other:?} (ping|submit|queue|result|shutdown)"),
+        }
+    }
+
+    pub fn decode_line(line: &str) -> Result<Request> {
+        Self::decode(&crate::util::json::parse(line)?)
+    }
+}
+
+/// `{"ok": true, ...fields}`.
+pub fn ok_response(fields: Vec<(&str, Json)>) -> Json {
+    let mut all = vec![("ok", Json::Bool(true))];
+    all.extend(fields);
+    Json::obj(all)
+}
+
+/// `{"ok": false, "error": ...}`.
+pub fn err_response(error: impl std::fmt::Display) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(error.to_string())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_roundtrips_through_json() {
+        let mut spec = JobSpec::default_run();
+        spec.verb = JobVerb::Ci;
+        spec.batch = Some(8);
+        spec.models = vec!["gpt_tiny".into(), "dlrm_tiny".into()];
+        spec.domain = Some("nlp".into());
+        spec.jobs = Some(4);
+        spec.note = "nightly".into();
+        spec.run_id = Some("svc-1".into());
+        spec.baseline = Some("latest".into());
+        let line = spec.to_json().to_json();
+        assert!(!line.contains('\n'));
+        assert_eq!(JobSpec::decode(&crate::util::json::parse(&line).unwrap()).unwrap(), spec);
+    }
+
+    #[test]
+    fn minimal_spec_decodes_with_defaults() {
+        let spec = JobSpec::decode(&crate::util::json::parse(r#"{"verb":"run"}"#).unwrap())
+            .unwrap();
+        assert_eq!(spec, JobSpec::default_run());
+        assert!(JobSpec::decode(&crate::util::json::parse(r#"{"verb":"x"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn mistyped_spec_fields_are_rejected_not_defaulted() {
+        // A silently-defaulted protocol field would archive under a
+        // config_hash the submitter never asked for.
+        for bad in [
+            r#"{"verb":"run","repeats":"9"}"#,
+            r#"{"verb":"run","iterations":-1}"#,
+            r#"{"verb":"run","batch":1.5}"#,
+            r#"{"verb":"run","mode":7}"#,
+            r#"{"verb":"run","models":"gpt_tiny"}"#,
+            r#"{"verb":"run","models":[1,2]}"#,
+            r#"{"verb":"run","jobs":"all"}"#,
+        ] {
+            let v = crate::util::json::parse(bad).unwrap();
+            assert!(JobSpec::decode(&v).is_err(), "accepted malformed spec {bad}");
+        }
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        for req in [
+            Request::Ping,
+            Request::Submit(JobSpec::default_run()),
+            Request::Queue,
+            Request::Result { job: "job-0001".into() },
+            Request::Shutdown,
+        ] {
+            let line = req.to_json().to_json();
+            assert_eq!(Request::decode_line(&line).unwrap(), req);
+        }
+        assert!(Request::decode_line(r#"{"op":"nope"}"#).is_err());
+        assert!(Request::decode_line("not json").is_err());
+    }
+
+    #[test]
+    fn responses_carry_ok_and_error() {
+        let ok = ok_response(vec![("job", Json::str("job-0001"))]);
+        assert_eq!(ok.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(ok.req_str("job").unwrap(), "job-0001");
+        let err = err_response("boom");
+        assert_eq!(err.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(err.req_str("error").unwrap(), "boom");
+    }
+}

@@ -37,10 +37,18 @@ impl Archive {
 
     /// Append records (creates the file and parent directories on first
     /// use). One compact JSON object per line.
+    ///
+    /// Appends are serialized across *processes* by an advisory
+    /// file-lock sidecar ([`super::lock::FileLock`], `<archive>.lock`):
+    /// the daemon and ad-hoc CLI runs may write the same archive
+    /// concurrently, and a reader must never see interleaved partial
+    /// lines. The whole batch is one buffered `write_all` under the
+    /// lock, so any archive prefix stays a valid archive.
     pub fn append(&self, records: &[RunRecord]) -> Result<()> {
         if records.is_empty() {
             return Ok(());
         }
+        let _lock = super::lock::FileLock::acquire(&self.path)?;
         if let Some(parent) = self.path.parent() {
             if !parent.as_os_str().is_empty() {
                 std::fs::create_dir_all(parent)
@@ -344,6 +352,45 @@ mod tests {
         assert!(format!("{err}").contains("ambiguous"), "{err}");
         assert!(a.resolve_run(&records, "nope").is_err());
         assert!(a.resolve_run(&[], "latest").is_err());
+    }
+
+    #[test]
+    fn concurrent_appenders_never_interleave_lines() {
+        // The daemon and ad-hoc CLI runs share one archive file: under
+        // the advisory lock, racing appends must serialize into whole
+        // lines. load() fails loudly on a partial/interleaved line, so
+        // "parses cleanly with the right count" is the full assertion.
+        let dir = crate::util::TempDir::new().unwrap();
+        let path = dir.path().join("contended/runs.jsonl");
+        let writers = 8usize;
+        let batches = 25usize;
+        std::thread::scope(|scope| {
+            for w in 0..writers {
+                let path = path.clone();
+                scope.spawn(move || {
+                    let archive = Archive::new(path);
+                    for b in 0..batches {
+                        archive
+                            .append(&[
+                                rec(&format!("run-{w}"), b as u64, &format!("m{w}-{b}"), 0.01),
+                                rec(&format!("run-{w}"), b as u64, &format!("n{w}-{b}"), 0.02),
+                            ])
+                            .unwrap();
+                    }
+                });
+            }
+        });
+        let records = Archive::new(&path).load().unwrap();
+        assert_eq!(records.len(), writers * batches * 2);
+        for w in 0..writers {
+            let mine: Vec<_> =
+                records.iter().filter(|r| r.run_id == format!("run-{w}")).collect();
+            assert_eq!(mine.len(), batches * 2, "writer {w} lost records");
+        }
+        assert!(
+            !crate::store::lock::FileLock::lock_path(&path).exists(),
+            "lock sidecar must be released after the last append"
+        );
     }
 
     #[test]

@@ -1,0 +1,188 @@
+//! Advisory file lock for concurrent archive writers (std-only).
+//!
+//! The daemon and ad-hoc CLI runs can append to the same JSONL archive
+//! from different processes. A single `O_APPEND` write is *usually*
+//! atomic on local filesystems, but that is a platform accident, not a
+//! contract — so every [`crate::store::Archive`] append takes this
+//! lock first, making "no interleaved partial lines" a guarantee.
+//!
+//! The lock is a sidecar file (`<target>.lock`) created with
+//! `O_CREAT|O_EXCL` — the portable create-if-not-exists primitive —
+//! and removed on drop. Contenders spin with a small sleep. Two
+//! failure modes are handled explicitly:
+//!
+//! - **crashed holder**: a lock older than [`STALE_AFTER`] is broken
+//!   (benchmark appends take milliseconds; nothing legitimate holds
+//!   the lock for a minute);
+//! - **deadlock/bug**: acquisition gives up after [`ACQUIRE_TIMEOUT`]
+//!   with an error naming the lock file, instead of hanging a nightly
+//!   forever.
+
+use anyhow::{Context, Result};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant, SystemTime};
+
+/// Give up acquiring after this long (something is wrong, say so).
+pub const ACQUIRE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Break locks older than this (holder crashed without cleanup).
+pub const STALE_AFTER: Duration = Duration::from_secs(60);
+
+const RETRY_SLEEP: Duration = Duration::from_millis(2);
+
+/// A held advisory lock; released on drop.
+#[derive(Debug)]
+pub struct FileLock {
+    path: PathBuf,
+}
+
+impl FileLock {
+    /// The sidecar path guarding `target`.
+    pub fn lock_path(target: &Path) -> PathBuf {
+        let mut name = target.file_name().unwrap_or_default().to_os_string();
+        name.push(".lock");
+        target.with_file_name(name)
+    }
+
+    /// Acquire the lock guarding `target`, creating parent directories
+    /// as needed. Blocks (with retries) up to [`ACQUIRE_TIMEOUT`].
+    pub fn acquire(target: &Path) -> Result<FileLock> {
+        let path = Self::lock_path(target);
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
+        }
+        let deadline = Instant::now() + ACQUIRE_TIMEOUT;
+        loop {
+            match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut f) => {
+                    // Holder identity, for humans debugging a stuck lock.
+                    let _ = writeln!(f, "{}", std::process::id());
+                    return Ok(FileLock { path });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    if Self::is_stale(&path) {
+                        Self::break_stale(&path);
+                        continue;
+                    }
+                    if Instant::now() >= deadline {
+                        anyhow::bail!(
+                            "could not acquire archive lock {} within {:?}; if no other \
+                             xbench process is writing, delete the stale lock file",
+                            path.display(),
+                            ACQUIRE_TIMEOUT
+                        );
+                    }
+                    std::thread::sleep(RETRY_SLEEP);
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| format!("creating lock {}", path.display()))
+                }
+            }
+        }
+    }
+
+    fn is_stale(path: &Path) -> bool {
+        let Ok(meta) = std::fs::metadata(path) else { return false };
+        let Ok(modified) = meta.modified() else { return false };
+        SystemTime::now()
+            .duration_since(modified)
+            .map(|age| age > STALE_AFTER)
+            .unwrap_or(false)
+    }
+
+    /// Break a stale lock without racing other breakers: `remove_file`
+    /// directly would be a TOCTOU (a second breaker could delete a lock
+    /// a first breaker had already re-acquired fresh). Instead, rename
+    /// the stale file to a per-process name — rename is atomic, so
+    /// exactly one contender wins it and the path can never be deleted
+    /// twice. The winner re-checks the captive file's age: if it turns
+    /// out fresh (a new holder squeezed in between the staleness check
+    /// and the rename), the lock is handed back instead of destroyed.
+    fn break_stale(path: &Path) {
+        let mut name = path.file_name().unwrap_or_default().to_os_string();
+        name.push(format!(".stale.{}", std::process::id()));
+        let captive = path.with_file_name(name);
+        if std::fs::rename(path, &captive).is_ok() {
+            if Self::is_stale(&captive) {
+                let _ = std::fs::remove_file(&captive);
+            } else {
+                // We stole a live lock: give it back (the holder keeps
+                // working; we go back to waiting).
+                let _ = std::fs::rename(&captive, path);
+            }
+        }
+    }
+}
+
+impl Drop for FileLock {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn acquire_creates_and_drop_removes_the_sidecar() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let target = dir.path().join("runs.jsonl");
+        let lock_path = FileLock::lock_path(&target);
+        assert_eq!(lock_path, dir.path().join("runs.jsonl.lock"));
+        let lock = FileLock::acquire(&target).unwrap();
+        assert!(lock_path.exists());
+        drop(lock);
+        assert!(!lock_path.exists());
+    }
+
+    #[test]
+    fn lock_is_mutually_exclusive_across_threads() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let target = dir.path().join("runs.jsonl");
+        // A non-atomic counter guarded only by the file lock: lost
+        // updates would be visible as a short final count.
+        let in_section = AtomicUsize::new(0);
+        let max_seen = AtomicUsize::new(0);
+        let rounds = 20;
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    for _ in 0..rounds {
+                        let _lock = FileLock::acquire(&target).unwrap();
+                        let now = in_section.fetch_add(1, Ordering::SeqCst) + 1;
+                        max_seen.fetch_max(now, Ordering::SeqCst);
+                        std::thread::sleep(Duration::from_micros(200));
+                        in_section.fetch_sub(1, Ordering::SeqCst);
+                    }
+                });
+            }
+        });
+        assert_eq!(
+            max_seen.load(Ordering::SeqCst),
+            1,
+            "two threads were inside the locked section at once"
+        );
+    }
+
+    #[test]
+    fn stale_lock_is_broken() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let target = dir.path().join("runs.jsonl");
+        let lock_path = FileLock::lock_path(&target);
+        std::fs::write(&lock_path, "12345\n").unwrap();
+        // Backdate the lock file via mtime-insensitive check override:
+        // is_stale consults mtime, which we cannot set without unsafe
+        // platform calls — so verify the predicate directly on a fresh
+        // file (not stale) and exercise the acquire path separately.
+        assert!(!FileLock::is_stale(&lock_path), "fresh lock must not read as stale");
+        std::fs::remove_file(&lock_path).unwrap();
+        let lock = FileLock::acquire(&target).unwrap();
+        drop(lock);
+    }
+}

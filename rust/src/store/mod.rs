@@ -11,6 +11,8 @@
 //!   host, and config hash;
 //! - [`archive`]: an append-only JSONL file of records ([`Archive`]) —
 //!   `xbench run --record` appends, nothing ever rewrites;
+//! - [`lock`]: the advisory file lock serializing concurrent appenders
+//!   (daemon + ad-hoc CLI runs) so lines never interleave;
 //! - [`query`]: filters (model/mode/compiler/batch/time-window/run) and
 //!   per-key aggregations (latest, median, series) over loaded records.
 //!
@@ -32,9 +34,11 @@
 //! never enter the hash.
 
 pub mod archive;
+pub mod lock;
 pub mod query;
 pub mod record;
 
 pub use archive::Archive;
+pub use lock::FileLock;
 pub use query::{latest_per_key, median_iter_per_key, run_summaries, series, Filter, RunSummary};
 pub use record::{bench_key_of, config_hash, fmt_utc, RunMeta, RunRecord, SCHEMA_VERSION};

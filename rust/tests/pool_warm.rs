@@ -1,0 +1,147 @@
+//! Integration: persistent-pool determinism and warmth over the
+//! synthetic model zoo (fully hermetic — artifacts synthesized into a
+//! temp dir, like `sched_parallel.rs`).
+//!
+//! - a pooled run's ordering and bench keys are identical to a serial
+//!   run's (the `run_partitioned` contract survived the pool rewrite);
+//! - a second fan-out over the same suite hits the warm
+//!   `ArtifactStore` caches: zero new compiles, growing hit counters,
+//!   identical gated metrics (same keys, models, batches);
+//! - pool workers persist across fan-outs.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use xbench::config::{Mode, RunConfig};
+use xbench::coordinator::{run_partitioned, ExecOpts, Runner};
+use xbench::runtime::{ArtifactStore, Device, Manifest, ModelEntry};
+use xbench::suite::Suite;
+use xbench::util::TempDir;
+
+fn synth_store(dir: &Path) -> (ArtifactStore, Suite) {
+    xbench::suite::synth::write_synthetic_artifacts(dir, 20230102, false).unwrap();
+    let store = ArtifactStore::new(Rc::new(Device::cpu().unwrap()), dir);
+    let suite = Suite::new(Manifest::load(dir).unwrap());
+    (store, suite)
+}
+
+fn fast_cfg(dir: &Path) -> RunConfig {
+    RunConfig {
+        repeats: 1,
+        iterations: 1,
+        warmup: 0,
+        artifacts: dir.to_path_buf(),
+        ..Default::default()
+    }
+}
+
+fn worklist<'a>(suite: &'a Suite, cfg: &RunConfig) -> (Vec<&'a ModelEntry>, Vec<String>) {
+    let benches = suite.benches(&cfg.selection, Mode::Infer).unwrap();
+    let entries: Vec<&ModelEntry> =
+        benches.iter().map(|b| suite.model(&b.model).unwrap()).collect();
+    let labels: Vec<String> = benches.iter().map(|b| b.to_string()).collect();
+    (entries, labels)
+}
+
+/// Every artifact the zoo can compile (inference ladder + training).
+fn all_artifacts(suite: &Suite) -> Vec<String> {
+    let mut rels = Vec::new();
+    for m in suite.models() {
+        for b in m.infer_batches() {
+            if let Some(ie) = m.infer_at(b) {
+                rels.push(ie.artifact.clone());
+            }
+        }
+        if let Some(t) = &m.train {
+            rels.push(t.artifact.clone());
+        }
+    }
+    rels
+}
+
+#[test]
+fn pooled_run_matches_serial_ordering_and_keys() {
+    let dir = TempDir::new().unwrap();
+    let (store, suite) = synth_store(dir.path());
+    let cfg = fast_cfg(dir.path());
+    let (entries, labels) = worklist(&suite, &cfg);
+    assert!(entries.len() >= 4, "zoo too small to exercise the pool");
+
+    let cfg_ref = &cfg;
+    let run = |opts: &ExecOpts| {
+        run_partitioned(opts, &store, &entries, &labels, "pool-test", |st, entry| {
+            Runner::new(st, cfg_ref.clone()).run_model(entry)
+        })
+        .unwrap()
+    };
+    let serial = run(&ExecOpts::SERIAL);
+    let pooled = run(&ExecOpts { jobs: 4, ..ExecOpts::SERIAL });
+
+    let keys = |o: &xbench::coordinator::SchedOutcome<xbench::coordinator::RunResult>| {
+        o.completed
+            .iter()
+            .map(|(seq, r)| (*seq, r.bench_key()))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(keys(&serial), keys(&pooled), "pooled ordering must be serial-identical");
+    assert_eq!(serial.errors.len(), 0);
+    assert_eq!(pooled.errors.len(), 0);
+    assert_eq!(pooled.worklist_len, entries.len());
+}
+
+#[test]
+fn second_fanout_hits_warm_compile_caches() {
+    let dir = TempDir::new().unwrap();
+    let (store, suite) = synth_store(dir.path());
+    let cfg = fast_cfg(dir.path());
+    let (entries, labels) = worklist(&suite, &cfg);
+    let jobs = 2;
+
+    // Fully pre-warm both workers so claim distribution can't matter:
+    // after warm(), every worker holds every artifact.
+    let pool = xbench::pool::shared(dir.path());
+    pool.warm(jobs, &all_artifacts(&suite)).unwrap();
+    let warmed = pool.stats();
+    assert!(warmed.compiles > 0, "warm() must have compiled something");
+    assert_eq!(warmed.workers, jobs);
+
+    let cfg_ref = &cfg;
+    let run = || {
+        run_partitioned(
+            &ExecOpts { jobs, ..ExecOpts::SERIAL },
+            &store,
+            &entries,
+            &labels,
+            "warm-test",
+            |st, entry| Runner::new(st, cfg_ref.clone()).run_model(entry),
+        )
+        .unwrap()
+    };
+    let first = run();
+    let after_first = pool.stats();
+    assert_eq!(
+        after_first.compiles, warmed.compiles,
+        "a fan-out over pre-warmed workers must not recompile anything"
+    );
+    assert!(
+        after_first.cache_hits > warmed.cache_hits,
+        "the fan-out must be served from the warm caches"
+    );
+
+    let second = run();
+    let after_second = pool.stats();
+    assert_eq!(after_second.compiles, after_first.compiles);
+    assert!(after_second.cache_hits > after_first.cache_hits);
+    assert_eq!(after_second.workers, jobs, "workers persist across fan-outs");
+
+    // Identical gated metrics between submissions: same keys, models,
+    // batches, in the same worklist order (wall times differ run to
+    // run; identity is structural).
+    let shape = |o: &xbench::coordinator::SchedOutcome<xbench::coordinator::RunResult>| {
+        o.completed
+            .iter()
+            .map(|(seq, r)| (*seq, r.bench_key(), r.model.clone(), r.batch))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(shape(&first), shape(&second));
+}

@@ -1,0 +1,162 @@
+//! Integration: the benchmark service round trip, fully in-process and
+//! offline — bind a daemon on an ephemeral port, submit jobs over real
+//! localhost TCP, poll the queue, fetch results, and verify the run
+//! landed in the archive exactly like a one-shot `run --record` would.
+
+use std::path::Path;
+
+use xbench::config::RunConfig;
+use xbench::service::{self, Daemon, JobSpec, JobVerb};
+use xbench::store::Archive;
+use xbench::suite::Suite;
+use xbench::runtime::Manifest;
+use xbench::util::TempDir;
+
+fn fast_cfg(dir: &Path) -> RunConfig {
+    RunConfig {
+        repeats: 1,
+        iterations: 1,
+        warmup: 0,
+        artifacts: dir.to_path_buf(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn daemon_round_trip_submit_queue_result_archive() {
+    let dir = TempDir::new().unwrap();
+    xbench::suite::synth::write_synthetic_artifacts(dir.path(), 20230102, false).unwrap();
+    let suite = Suite::new(Manifest::load(dir.path()).unwrap());
+    let archive_path = dir.path().join("runs.jsonl");
+
+    let daemon = Daemon::bind(0, dir.path().to_path_buf()).unwrap();
+    let port = daemon.port();
+    assert_ne!(port, 0);
+    let base_cfg = fast_cfg(dir.path());
+    let archive = Archive::new(&archive_path);
+    let server = std::thread::spawn(move || daemon.run(suite, archive, base_cfg));
+
+    // Liveness probe (blocks until the accept loop serves it).
+    let pong = service::ping(port).unwrap();
+    assert_eq!(pong.get("pid").and_then(|p| p.as_usize()), Some(std::process::id() as usize));
+
+    // Submit a recorded run job under an explicit run id.
+    let mut spec = JobSpec::default_run();
+    spec.repeats = 1;
+    spec.iterations = 1;
+    spec.warmup = 0;
+    spec.jobs = Some(2);
+    spec.note = "e2e".into();
+    spec.run_id = Some("svc-e2e".into());
+    let id = service::submit(port, spec).unwrap();
+    assert_eq!(id, "job-0001");
+
+    // Wait for completion; the payload carries the archive run id and
+    // one row per benchmark config.
+    let (view, result) = service::fetch_result(port, &id, true, 300).unwrap();
+    assert_eq!(view.req_str("status").unwrap(), "done");
+    let result = result.expect("done job must carry a result payload");
+    assert_eq!(result.req_str("run_id").unwrap(), "svc-e2e");
+    let rows = result.req_array("records").unwrap().to_vec();
+    assert!(!rows.is_empty());
+    assert!(result.req_array("errors").unwrap().is_empty());
+
+    // Queue reflects the settled job with full progress.
+    let jobs = service::queue_status(port).unwrap();
+    assert_eq!(jobs.len(), 1);
+    assert_eq!(jobs[0].req_str("status").unwrap(), "done");
+    assert_eq!(jobs[0].req_str("run_id").unwrap(), "svc-e2e");
+    assert_eq!(
+        jobs[0].req_usize("done").unwrap(),
+        jobs[0].req_usize("total").unwrap()
+    );
+
+    // The archive got exactly the reported records, under the job's
+    // run id — zero new result formats, `cmp`/`rank`/`history` just
+    // work on daemon output.
+    let records = Archive::new(&archive_path).load().unwrap();
+    assert_eq!(records.len(), rows.len());
+    assert!(records.iter().all(|r| r.run_id == "svc-e2e"));
+    let archived_keys: Vec<String> = records.iter().map(|r| r.bench_key()).collect();
+    let reported_keys: Vec<String> =
+        rows.iter().map(|r| r.req_str("key").unwrap().to_string()).collect();
+    assert_eq!(archived_keys, reported_keys);
+
+    // A failing job settles as failed (unknown model), without taking
+    // the daemon down.
+    let mut bad = JobSpec::default_run();
+    bad.repeats = 1;
+    bad.iterations = 1;
+    bad.warmup = 0;
+    bad.models = vec!["no_such_model".into()];
+    let bad_id = service::submit(port, bad).unwrap();
+    let (bad_view, bad_result) = service::fetch_result(port, &bad_id, true, 300).unwrap();
+    assert_eq!(bad_view.req_str("status").unwrap(), "failed");
+    assert!(bad_view.req_str("error").unwrap().contains("no_such_model"));
+    assert!(bad_result.is_none());
+
+    // Unknown job ids error cleanly.
+    let err = service::fetch_result(port, "job-9999", false, 0).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown job"), "{err:#}");
+
+    // Clean shutdown: the daemon acknowledges, run() returns Ok, and
+    // the port stops answering.
+    service::shutdown(port).unwrap();
+    server.join().unwrap().unwrap();
+    assert!(service::ping(port).is_err());
+}
+
+#[test]
+fn second_submission_reuses_the_resident_executor() {
+    // Two identical jobs through one daemon: same worklist shape both
+    // times (the warm-cache counters themselves are asserted in
+    // pool_warm.rs; here we prove the *service* behaves identically on
+    // resubmission and keeps distinct archive run ids).
+    let dir = TempDir::new().unwrap();
+    xbench::suite::synth::write_synthetic_artifacts(dir.path(), 20230102, false).unwrap();
+    let suite = Suite::new(Manifest::load(dir.path()).unwrap());
+    let archive_path = dir.path().join("runs.jsonl");
+
+    let daemon = Daemon::bind(0, dir.path().to_path_buf()).unwrap();
+    let port = daemon.port();
+    let server = std::thread::spawn({
+        let base_cfg = fast_cfg(dir.path());
+        let archive = Archive::new(&archive_path);
+        move || daemon.run(suite, archive, base_cfg)
+    });
+
+    let submit_one = |models: Vec<String>| {
+        let mut spec = JobSpec::default_run();
+        spec.verb = JobVerb::Run;
+        spec.repeats = 1;
+        spec.iterations = 1;
+        spec.warmup = 0;
+        spec.models = models;
+        service::submit(port, spec).unwrap()
+    };
+    let a = submit_one(vec!["deeprec_ae".into(), "dlrm_tiny".into()]);
+    let b = submit_one(vec!["deeprec_ae".into(), "dlrm_tiny".into()]);
+    assert_ne!(a, b);
+    let (_, ra) = service::fetch_result(port, &a, true, 300).unwrap();
+    let (_, rb) = service::fetch_result(port, &b, true, 300).unwrap();
+    let (ra, rb) = (ra.unwrap(), rb.unwrap());
+    let keys = |r: &xbench::util::Json| {
+        r.req_array("records")
+            .unwrap()
+            .iter()
+            .map(|x| x.req_str("key").unwrap().to_string())
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(keys(&ra), keys(&rb), "resubmission must measure the identical worklist");
+    assert_ne!(
+        ra.req_str("run_id").unwrap(),
+        rb.req_str("run_id").unwrap(),
+        "each job records under its own run id"
+    );
+
+    let records = Archive::new(&archive_path).load().unwrap();
+    assert_eq!(records.len(), 4, "two jobs x two configs");
+
+    service::shutdown(port).unwrap();
+    server.join().unwrap().unwrap();
+}
