@@ -111,7 +111,9 @@ ARCHIVE QUERIES (read the --archive JSONL; no artifacts needed):
   Run selectors: latest, latest~N, a run id, or a unique id prefix.
 
 BENCHMARK SERVICE (resident daemon; see docs/SERVICE.md):
-  serve             run the daemon      [--port N] [--stop]
+  serve             run the daemon      [--port N] [--stop] [--fresh]
+                    (replays the queue.jsonl job journal on start;
+                     --fresh discards it instead)
   submit [VERB]     enqueue a job (VERB: run|sweep|ci; default run)
                                         [--mode ..] [--compiler ..] [--batch N]
                                         [--jobs N] [--note TEXT] [--run-id ID]
@@ -317,9 +319,10 @@ pub fn main() -> Result<()> {
                 eprintln!("sent shutdown to the daemon on 127.0.0.1:{port}");
                 return Ok(());
             }
+            let fresh = args.has("fresh");
             args.finish()?;
             let suite = Suite::new(Manifest::load(&artifacts)?);
-            serve::cmd(artifacts, archive, base_cfg, suite, port)
+            serve::cmd(artifacts, archive, base_cfg, suite, port, fresh)
         }
         "submit" => {
             let port = parse_port(&mut args)?;

@@ -1,9 +1,13 @@
 //! `xbench result JOB` — fetch one daemon job's reassembled results.
 //!
 //! Prints the per-config result table (and, for gated ci jobs, the
-//! regression verdicts); `--wait` polls until the job settles. A job
-//! that is still pending/running (without `--wait`) or that failed
-//! exits non-zero so scripts can gate on it.
+//! regression verdicts); `--wait` polls until the job settles. The
+//! exit code is the scriptable gate: non-zero when the job is still
+//! pending/running (without `--wait`), failed, was abandoned at
+//! daemon shutdown, **or settled `done` with gate regressions** — a
+//! gated ci job that regressed must fail the calling script exactly
+//! like `xbench ci` failing its nightly would, not exit 0 with a
+//! table nobody reads.
 
 use anyhow::Result;
 use std::path::Path;
@@ -24,6 +28,9 @@ pub fn cmd(
         "failed" => anyhow::bail!(
             "{job} failed: {}",
             view.get("error").and_then(|e| e.as_str()).unwrap_or("unknown error")
+        ),
+        "abandoned" => anyhow::bail!(
+            "{job} was abandoned at daemon shutdown before it ran; resubmit it"
         ),
         "done" => {}
         other => anyhow::bail!(
@@ -60,11 +67,13 @@ pub fn cmd(
             );
         }
     }
+    let mut gate: Option<(String, usize)> = None;
     if let Some(regs) = result.get("regressions").and_then(|r| r.as_array()) {
         let baseline = result
             .get("baseline_run")
             .and_then(|b| b.as_str())
-            .unwrap_or("?");
+            .unwrap_or("?")
+            .to_string();
         let mut rt = Table::new(
             format!("Gate vs baseline {baseline} ({} regression(s))", regs.len()),
             &["bench", "metric", "baseline", "measured", "ratio"],
@@ -79,7 +88,17 @@ pub fn cmd(
             ]);
         }
         super::emit_table(&rt, csv_dir, "result_gate")?;
+        gate = Some((baseline, regs.len()));
     }
     eprintln!("recorded as {run_id}; query with `xbench cmp`/`rank`/`history`");
+    // The documented "scripts can gate on it" contract: regressions
+    // exit non-zero (after the tables have been rendered), matching
+    // the gate semantics of `xbench ci`.
+    if let Some((baseline, n)) = gate {
+        anyhow::ensure!(
+            n == 0,
+            "{job}: {n} regression(s) vs baseline {baseline} — gate failed"
+        );
+    }
     Ok(())
 }

@@ -5,15 +5,22 @@
 //! `queue` reports status, `result` fetches reassembled results.
 //! Completed jobs append to the same [`crate::store::Archive`] the
 //! one-shot verbs record into, so `cmp`/`rank`/`history` query daemon
-//! output with zero new result formats. `xbench serve --stop` asks a
-//! running daemon to shut down.
+//! output with zero new result formats.
+//!
+//! The job queue is durable: transitions are journaled to
+//! `queue.jsonl` beside the archive and replayed at startup (crashed
+//! daemons resume their queue; settled jobs keep answering `result`).
+//! `--fresh` discards the journal instead of replaying it — inside
+//! [`Daemon::run`], after journal ownership is taken, so it can never
+//! delete a journal a live daemon is appending to.
+//! `xbench serve --stop` asks a running daemon to shut down.
 
 use anyhow::Result;
 use std::path::PathBuf;
 
 use crate::config::RunConfig;
 use crate::service::Daemon;
-use crate::store::Archive;
+use crate::store::{Archive, Journal};
 use crate::suite::Suite;
 
 pub fn cmd(
@@ -22,7 +29,10 @@ pub fn cmd(
     base_cfg: RunConfig,
     suite: Suite,
     port: u16,
+    fresh: bool,
 ) -> Result<()> {
-    let daemon = Daemon::bind(port, artifacts)?;
+    let journal = Journal::beside(archive.path());
+    let mut daemon = Daemon::bind(port, artifacts, journal)?;
+    daemon.set_fresh(fresh);
     daemon.run(suite, archive, base_cfg)
 }

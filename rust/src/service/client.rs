@@ -56,9 +56,11 @@ pub fn queue_status(port: u16) -> Result<Vec<Json>> {
 
 /// Fetch one job: `(status row, result payload when done)`.
 ///
-/// With `wait`, polls until the job leaves pending/running (or
-/// `timeout_secs` elapses; 0 = no limit). Each poll is its own
-/// connection, so a waiting client never ties up the daemon.
+/// With `wait`, polls until the job settles
+/// ([`super::protocol::is_settled`]: `done`/`failed`/`abandoned`; an
+/// `interrupted` job is still going to be retried, so waiting
+/// continues) or `timeout_secs` elapses (0 = no limit). Each poll is
+/// its own connection, so a waiting client never ties up the daemon.
 pub fn fetch_result(
     port: u16,
     job: &str,
@@ -71,7 +73,7 @@ pub fn fetch_result(
         let resp = request(port, &Request::Result { job: job.to_string() })?;
         let view = resp.req("job")?.clone();
         let status = view.req_str("status")?;
-        let settled = status == "done" || status == "failed";
+        let settled = super::protocol::is_settled(status);
         if settled || !wait {
             return Ok((view, resp.get("result").cloned()));
         }

@@ -1,11 +1,12 @@
 //! The resident benchmark daemon behind `xbench serve`.
 //!
-//! Two threads:
+//! Threads:
 //!
 //! - the **accept loop** (caller's thread): a `TcpListener` bound to
-//!   localhost, handling one JSON-line request per connection. Every
-//!   op is a cheap queue-state read/write, so connections are served
-//!   inline — there is no per-connection thread to leak.
+//!   localhost. Each connection is served on a short-lived handler
+//!   thread — a client that connects and never writes must not stall
+//!   `queue`/`result`/`serve --stop` for everyone else (requests are
+//!   cheap queue-state reads/writes; the threads live milliseconds).
 //! - the **executor**: owns the persistent device + [`ArtifactStore`]
 //!   (single-threaded by design — it never crosses threads) plus the
 //!   loaded suite, and drains the job queue one job at a time through
@@ -14,21 +15,36 @@
 //!   concurrent benchmark jobs would contend for cores and corrupt
 //!   each other's measurements.
 //!
+//! # Durability
+//!
+//! Queue state is journaled to `queue.jsonl`
+//! ([`crate::store::Journal`], one line per transition, same JSONL +
+//! file-lock discipline as the archive). A submission is journaled
+//! *before* the client is told "ok", so an acked job survives any
+//! crash. On startup [`Daemon::run`] replays the journal: settled jobs
+//! (`done`/`failed`/`abandoned`) are restored read-only so `queue` and
+//! `result` keep answering for them, pending jobs are re-queued, and a
+//! job that was mid-run is journaled `interrupted` and retried once
+//! (a second interruption fails it for good). Job ids are
+//! journal-monotonic: `job-NNNN` never collides across restarts.
+//! `serve --fresh` discards the journal instead of replaying it.
+//!
 //! Shutdown (`{"op":"shutdown"}` / `xbench serve --stop`) finishes the
-//! running job, abandons pending ones (reported on stderr), and
-//! returns from [`Daemon::run`].
+//! running job and journals every still-waiting job as `abandoned` —
+//! restarts report them instead of resurrecting them.
 
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::rc::Rc;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::config::RunConfig;
 use crate::runtime::{ArtifactStore, Device};
-use crate::store::Archive;
+use crate::store::journal::{self, JobEvent, ReplayState};
+use crate::store::{Archive, FileLock, Journal};
 use crate::suite::Suite;
 use crate::util::Json;
 
@@ -37,13 +53,26 @@ use super::exec::{execute_job, ExecEnv};
 use super::protocol::{err_response, ok_response, JobSpec, Request, PROTO_VERSION};
 use super::unix_now;
 
-/// Lifecycle of one job.
+/// How long a connection may sit silent before its handler stops
+/// waiting for the request line. Handlers run on their own threads, so
+/// a slow or silent client costs one lingering thread — never another
+/// client's latency — which is why this stays generous instead of
+/// guillotining a client that got descheduled mid-request.
+const READ_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(10);
+
+/// Lifecycle of one job (wire names in
+/// [`super::protocol::JOB_STATES`]).
 #[derive(Debug, Clone, PartialEq, Eq)]
 enum Status {
     Pending,
     Running,
+    /// Replayed from the journal after a crash mid-run; queued for its
+    /// one retry.
+    Interrupted,
     Done,
     Failed(String),
+    /// Still waiting when the daemon shut down (terminal).
+    Abandoned,
 }
 
 impl Status {
@@ -51,9 +80,16 @@ impl Status {
         match self {
             Status::Pending => "pending",
             Status::Running => "running",
+            Status::Interrupted => "interrupted",
             Status::Done => "done",
             Status::Failed(_) => "failed",
+            Status::Abandoned => "abandoned",
         }
+    }
+
+    /// Whether the executor may claim this job.
+    fn is_claimable(&self) -> bool {
+        matches!(self, Status::Pending | Status::Interrupted)
     }
 }
 
@@ -65,6 +101,8 @@ struct JobRecord {
     submitted_ts: u64,
     started_ts: Option<u64>,
     finished_ts: Option<u64>,
+    /// Crash interruptions survived so far (journal-replayed).
+    interruptions: usize,
     progress: Arc<JobProgress>,
     /// Result payload (set when done): run_id, records, errors, …
     result: Option<Json>,
@@ -88,6 +126,9 @@ impl JobRecord {
         if let Some(ts) = self.finished_ts {
             fields.push(("finished_ts", Json::num(ts as f64)));
         }
+        if self.interruptions > 0 {
+            fields.push(("interruptions", Json::num(self.interruptions as f64)));
+        }
         if let Status::Failed(e) = &self.status {
             fields.push(("error", Json::str(e)));
         }
@@ -104,20 +145,124 @@ struct ServiceState {
     wake: Condvar,
     shutdown: AtomicBool,
     artifacts: PathBuf,
+    /// The bound port (the shutdown handler nudges the accept loop by
+    /// connecting to it).
+    port: u16,
+    /// Durable queue journal; every transition is appended here.
+    journal: Journal,
+    /// Next job number — seeded past the journal's highest at startup,
+    /// so ids survive restarts. Mutated only under the `jobs` lock.
+    next_id: AtomicUsize,
+}
+
+impl ServiceState {
+    /// Journal one transition; journal I/O errors must not take the
+    /// queue down, so they are reported and swallowed.
+    fn journal_event(&self, ev: &JobEvent) {
+        if let Err(e) = self.journal.append(ev) {
+            eprintln!("service: journaling {} for {}: {e:#}", self.journal.path().display(), ev.job());
+        }
+    }
+}
+
+/// Exclusive ownership of one job journal for a daemon's lifetime.
+///
+/// `bind` only guards the *port* — two daemons started on different
+/// ports against one artifacts dir would both replay and append to the
+/// same `queue.jsonl`, interleaving transitions into sequences
+/// `replay` rejects (both would claim the same replayed job, and both
+/// would hand out colliding ids). This sidecar (`queue.jsonl.owner`,
+/// holding the owner's PID) refuses the second daemon loudly instead.
+/// A dead owner's file (SIGKILL) is reaped; removal on drop covers
+/// every clean exit path of [`Daemon::run`].
+struct JournalOwner {
+    path: PathBuf,
+}
+
+impl JournalOwner {
+    fn acquire(journal_path: &std::path::Path) -> Result<JournalOwner> {
+        let mut name = journal_path.file_name().unwrap_or_default().to_os_string();
+        name.push(".owner");
+        let path = journal_path.with_file_name(name);
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
+        }
+        loop {
+            match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut f) => {
+                    let _ = writeln!(f, "{}", std::process::id());
+                    return Ok(JournalOwner { path });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    // Reap only when the recorded owner is provably
+                    // gone (same policy as the append lock:
+                    // [`FileLock::holder_is_dead`]); anything uncertain
+                    // — live PID, unreadable file, no /proc — refuses.
+                    anyhow::ensure!(
+                        FileLock::holder_is_dead(&path),
+                        "another daemon (pid {}) owns journal {} — stop it first, or point \
+                         this daemon at a different --archive; if the owner is truly gone, \
+                         delete {}",
+                        std::fs::read_to_string(&path)
+                            .ok()
+                            .and_then(|t| t.lines().next().map(|l| l.trim().to_string()))
+                            .unwrap_or_else(|| "unknown".into()),
+                        journal_path.display(),
+                        path.display()
+                    );
+                    // Reap without racing other reapers: a bare
+                    // remove_file could delete a NEW owner's file
+                    // created between the check and the remove. Rename
+                    // is atomic — exactly one contender captures the
+                    // file — and the captive is re-checked: a live PID
+                    // means a new owner squeezed in, so it is handed
+                    // back (mirrors `FileLock::break_stale`).
+                    let mut reap = path.file_name().unwrap_or_default().to_os_string();
+                    reap.push(format!(".reap.{}", std::process::id()));
+                    let captive = path.with_file_name(reap);
+                    if std::fs::rename(&path, &captive).is_ok() {
+                        if FileLock::holder_is_dead(&captive) {
+                            let _ = std::fs::remove_file(&captive);
+                        } else {
+                            let _ = std::fs::rename(&captive, &path);
+                        }
+                    }
+                }
+                Err(e) => {
+                    return Err(e)
+                        .with_context(|| format!("creating owner file {}", path.display()))
+                }
+            }
+        }
+    }
+}
+
+impl Drop for JournalOwner {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
 }
 
 /// A bound (not yet running) daemon.
 pub struct Daemon {
     listener: TcpListener,
     state: Arc<ServiceState>,
+    /// Discard the journal instead of replaying it (`serve --fresh`).
+    fresh: bool,
 }
 
 impl Daemon {
     /// Bind the service socket on localhost. `port` 0 picks an
     /// ephemeral port (tests) — read it back with [`Daemon::port`].
-    pub fn bind(port: u16, artifacts: PathBuf) -> Result<Daemon> {
+    /// `journal` is the durable queue journal ([`Journal::beside`] the
+    /// archive for the CLI); [`Daemon::run`] replays it.
+    pub fn bind(port: u16, artifacts: PathBuf, journal: Journal) -> Result<Daemon> {
         let listener = TcpListener::bind(("127.0.0.1", port))
             .with_context(|| format!("binding 127.0.0.1:{port} (daemon already running?)"))?;
+        let bound = listener.local_addr().map(|a| a.port()).unwrap_or(0);
         Ok(Daemon {
             listener,
             state: Arc::new(ServiceState {
@@ -125,20 +270,50 @@ impl Daemon {
                 wake: Condvar::new(),
                 shutdown: AtomicBool::new(false),
                 artifacts,
+                port: bound,
+                journal,
+                next_id: AtomicUsize::new(1),
             }),
+            fresh: false,
         })
+    }
+
+    /// `serve --fresh`: discard the journal when [`Daemon::run`]
+    /// starts, instead of replaying it. The reset happens only *after*
+    /// journal ownership is acquired — a `--fresh` aimed at an
+    /// artifacts dir a live daemon is serving refuses loudly instead
+    /// of deleting the journal out from under it.
+    pub fn set_fresh(&mut self, fresh: bool) {
+        self.fresh = fresh;
     }
 
     /// The port actually bound.
     pub fn port(&self) -> u16 {
-        self.listener.local_addr().map(|a| a.port()).unwrap_or(0)
+        self.state.port
     }
 
-    /// Run the service until a shutdown request: spawns the executor
-    /// (which brings up the persistent device — a failure there fails
-    /// this call, not a later job), then serves the accept loop on the
-    /// calling thread.
+    /// Run the service until a shutdown request: takes exclusive
+    /// ownership of the journal ([`JournalOwner`] — a second daemon on
+    /// the same artifacts dir is refused), replays it (crash
+    /// recovery), spawns the executor (which brings up the persistent
+    /// device — a failure there fails this call, not a later job),
+    /// then serves the accept loop on the calling thread.
     pub fn run(self, suite: Suite, archive: Archive, base_cfg: RunConfig) -> Result<()> {
+        // Held until run() returns (any path): exactly one daemon may
+        // replay/append a given journal at a time. Acquired before the
+        // --fresh reset below, so --fresh can never destroy a journal
+        // a live daemon is appending to.
+        let _owner = JournalOwner::acquire(self.state.journal.path())?;
+        if self.fresh {
+            self.state.journal.reset()?;
+            eprintln!(
+                "--fresh: discarded job journal {}",
+                self.state.journal.path().display()
+            );
+        }
+        recover(&self.state)
+            .with_context(|| format!("replaying journal {}", self.state.journal.path().display()))?;
+
         let state = self.state.clone();
         let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
         let executor = std::thread::Builder::new()
@@ -151,35 +326,61 @@ impl Daemon {
             Err(_) => anyhow::bail!("executor thread died during startup"),
         }
 
+        let Daemon { listener, state, .. } = self;
         eprintln!(
-            "xbench daemon listening on 127.0.0.1:{} (artifacts {}, pid {})",
-            self.port(),
-            self.state.artifacts.display(),
+            "xbench daemon listening on 127.0.0.1:{} (artifacts {}, journal {}, pid {})",
+            state.port,
+            state.artifacts.display(),
+            state.journal.path().display(),
             std::process::id()
         );
-        for stream in self.listener.incoming() {
+        for stream in listener.incoming() {
             match stream {
                 Ok(s) => {
-                    if let Err(e) = handle_connection(s, &self.state) {
-                        eprintln!("service: connection error: {e:#}");
+                    let st = Arc::clone(&state);
+                    let spawned = std::thread::Builder::new()
+                        .name("xbench-conn".into())
+                        .spawn(move || {
+                            if let Err(e) = handle_connection(s, &st) {
+                                eprintln!("service: connection error: {e:#}");
+                            }
+                        });
+                    if let Err(e) = spawned {
+                        eprintln!("service: spawning connection handler: {e}");
                     }
                 }
                 Err(e) => eprintln!("service: accept error: {e}"),
             }
-            if self.state.shutdown.load(Ordering::SeqCst) {
+            if state.shutdown.load(Ordering::SeqCst) {
                 break;
             }
         }
+        // Stop answering the port immediately; drain below.
+        drop(listener);
 
-        // Drain: the executor finishes its running job and exits.
-        self.state.wake.notify_all();
-        let abandoned = {
-            let jobs = self.state.jobs.lock().unwrap();
-            jobs.iter().filter(|j| j.status == Status::Pending).count()
-        };
-        if abandoned > 0 {
-            eprintln!("shutdown: abandoning {abandoned} pending job(s)");
+        // Drain: journal still-waiting jobs as abandoned (so a restart
+        // reports them instead of resurrecting them), then let the
+        // executor finish its running job and exit.
+        {
+            let mut jobs = state.jobs.lock().unwrap();
+            let mut abandoned = 0usize;
+            for j in jobs.iter_mut() {
+                if j.status.is_claimable() {
+                    let ts = unix_now();
+                    j.status = Status::Abandoned;
+                    j.finished_ts = Some(ts);
+                    state.journal_event(&JobEvent::Abandoned { job: j.id.clone(), ts });
+                    abandoned += 1;
+                }
+            }
+            if abandoned > 0 {
+                eprintln!(
+                    "shutdown: abandoning {abandoned} pending job(s) \
+                     (journaled; `queue`/`result` still answer for them after restart)"
+                );
+            }
         }
+        state.wake.notify_all();
         eprintln!("shutdown: waiting for the running job (if any)…");
         executor
             .join()
@@ -187,6 +388,101 @@ impl Daemon {
         eprintln!("xbench daemon stopped");
         Ok(())
     }
+}
+
+/// Replay the journal into the job table: settled jobs restore
+/// read-only, pending ones re-queue, and a job that was mid-run gets
+/// journaled `interrupted` and one retry (a second interruption is
+/// journaled `failed`).
+fn recover(state: &ServiceState) -> Result<()> {
+    let events = state.journal.load()?;
+    let replay = journal::replay(&events)?;
+    state.next_id.store(replay.next_job_number, Ordering::SeqCst);
+    if replay.jobs.is_empty() {
+        return Ok(());
+    }
+    let mut jobs = state.jobs.lock().unwrap();
+    let (mut restored, mut requeued) = (0usize, 0usize);
+    for rj in replay.jobs {
+        let spec = JobSpec::decode(&rj.spec)
+            .with_context(|| format!("decoding journaled spec of {}", rj.id))?;
+        let progress = Arc::new(JobProgress::default());
+        let mut interruptions = rj.interruptions;
+        let mut finished_ts = rj.finished_ts;
+        let status = match rj.state {
+            ReplayState::Pending => {
+                requeued += 1;
+                Status::Pending
+            }
+            ReplayState::Interrupted => {
+                requeued += 1;
+                Status::Interrupted
+            }
+            ReplayState::Running if rj.interruptions == 0 => {
+                // Crashed mid-run: journal the interruption, retry once.
+                state.journal.append(&JobEvent::Interrupted {
+                    job: rj.id.clone(),
+                    ts: unix_now(),
+                })?;
+                interruptions += 1;
+                requeued += 1;
+                Status::Interrupted
+            }
+            ReplayState::Running => {
+                // Crashed mid-retry: a job that takes the daemon down
+                // twice is not run a third time.
+                let error = format!(
+                    "interrupted by a daemon crash {} times; giving up after one retry",
+                    rj.interruptions + 1
+                );
+                let ts = unix_now();
+                state.journal.append(&JobEvent::Failed {
+                    job: rj.id.clone(),
+                    ts,
+                    error: error.clone(),
+                })?;
+                finished_ts = Some(ts);
+                restored += 1;
+                Status::Failed(error)
+            }
+            ReplayState::Done => {
+                let n = rj
+                    .result
+                    .as_ref()
+                    .and_then(|r| r.get("records"))
+                    .and_then(|r| r.as_array())
+                    .map(|a| a.len())
+                    .unwrap_or(0);
+                progress.restore(n, n);
+                restored += 1;
+                Status::Done
+            }
+            ReplayState::Failed => {
+                restored += 1;
+                Status::Failed(rj.error.unwrap_or_else(|| "unknown error".into()))
+            }
+            ReplayState::Abandoned => {
+                restored += 1;
+                Status::Abandoned
+            }
+        };
+        jobs.push(JobRecord {
+            id: rj.id,
+            spec,
+            status,
+            submitted_ts: rj.submitted_ts,
+            started_ts: rj.started_ts,
+            finished_ts,
+            interruptions,
+            progress,
+            result: rj.result,
+        });
+    }
+    eprintln!(
+        "journal {}: restored {restored} settled job(s), re-queued {requeued}",
+        state.journal.path().display()
+    );
+    Ok(())
 }
 
 /// The executor: persistent device + store + suite, one job at a time.
@@ -210,17 +506,26 @@ fn executor_loop(
     let _ = ready_tx.send(Ok(()));
 
     loop {
-        // Claim the oldest pending job (submission order = run order).
+        // Claim the oldest claimable job (submission order = run
+        // order; a replayed interrupted job keeps its original slot).
+        // Shutdown is checked *before* claiming so pending jobs are
+        // abandoned, not drained, once a shutdown is requested.
         let claimed = {
             let mut jobs = state.jobs.lock().unwrap();
             loop {
-                if let Some(i) = jobs.iter().position(|j| j.status == Status::Pending) {
-                    jobs[i].status = Status::Running;
-                    jobs[i].started_ts = Some(unix_now());
-                    break Some((i, jobs[i].spec.clone(), jobs[i].progress.clone()));
-                }
                 if state.shutdown.load(Ordering::SeqCst) {
                     break None;
+                }
+                if let Some(i) = jobs.iter().position(|j| j.status.is_claimable()) {
+                    let retry = jobs[i].status == Status::Interrupted;
+                    let ts = unix_now();
+                    jobs[i].status = Status::Running;
+                    jobs[i].started_ts = Some(ts);
+                    state.journal_event(&JobEvent::Started { job: jobs[i].id.clone(), ts });
+                    if retry {
+                        eprintln!("job {} retrying after crash interruption", jobs[i].id);
+                    }
+                    break Some((i, jobs[i].spec.clone(), jobs[i].progress.clone()));
                 }
                 jobs = state.wake.wait(jobs).unwrap();
             }
@@ -236,7 +541,8 @@ fn executor_loop(
         let outcome = execute_job(&env, &spec, &progress);
         let mut jobs = state.jobs.lock().unwrap();
         let job = &mut jobs[index];
-        job.finished_ts = Some(unix_now());
+        let ts = unix_now();
+        job.finished_ts = Some(ts);
         match outcome {
             Ok(result) => {
                 eprintln!(
@@ -247,32 +553,70 @@ fn executor_loop(
                         .and_then(|r| r.as_str())
                         .unwrap_or("unrecorded")
                 );
+                state.journal_event(&JobEvent::Done {
+                    job: job.id.clone(),
+                    ts,
+                    result: result.clone(),
+                });
                 job.result = Some(result);
                 job.status = Status::Done;
             }
             Err(e) => {
-                eprintln!("job {} FAILED: {e:#}", job.id);
-                job.status = Status::Failed(format!("{e:#}"));
+                let error = format!("{e:#}");
+                eprintln!("job {} FAILED: {error}", job.id);
+                state.journal_event(&JobEvent::Failed { job: job.id.clone(), ts, error: error.clone() });
+                job.status = Status::Failed(error);
             }
         }
     }
 }
 
-/// Serve one connection: one request line, one response line.
+/// Serve one connection: one request line, one response line. A client
+/// that closes without writing (or just sits silent past
+/// [`READ_TIMEOUT`]) is dropped quietly — its handler thread must not
+/// become anyone else's problem.
 fn handle_connection(stream: TcpStream, state: &Arc<ServiceState>) -> Result<()> {
-    stream.set_read_timeout(Some(std::time::Duration::from_secs(10)))?;
+    stream.set_read_timeout(Some(READ_TIMEOUT))?;
     stream.set_write_timeout(Some(std::time::Duration::from_secs(10)))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut line = String::new();
-    reader.read_line(&mut line)?;
-    let response = match Request::decode_line(line.trim()) {
+    match reader.read_line(&mut line) {
+        Ok(0) => return Ok(()), // closed without a request
+        Ok(_) => {}
+        Err(e)
+            if matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            ) =>
+        {
+            return Ok(()); // silent client timed out
+        }
+        Err(e) => return Err(e.into()),
+    }
+    if line.trim().is_empty() {
+        return Ok(());
+    }
+    let decoded = Request::decode_line(line.trim());
+    let is_shutdown = matches!(decoded, Ok(Request::Shutdown));
+    let response = match decoded {
         Ok(req) => handle_request(req, state),
         Err(e) => err_response(format!("bad request: {e:#}")),
     };
     let mut stream = stream;
-    stream.write_all(response.to_json().as_bytes())?;
-    stream.write_all(b"\n")?;
-    stream.flush()?;
+    let written = stream
+        .write_all(response.to_json().as_bytes())
+        .and_then(|()| stream.write_all(b"\n"))
+        .and_then(|()| stream.flush());
+    if is_shutdown {
+        // Only after the ack is on the wire: nudge the accept loop out
+        // of its blocking accept so it notices the shutdown flag.
+        // Nudging before the flush would race the daemon's exit
+        // against the client still reading its response — but the
+        // nudge must happen even if that write failed, or a vanished
+        // `--stop` client would leave the accept loop blocked forever.
+        let _ = TcpStream::connect(("127.0.0.1", state.port));
+    }
+    written?;
     Ok(())
 }
 
@@ -285,18 +629,33 @@ fn handle_request(req: Request, state: &Arc<ServiceState>) -> Json {
             ("artifacts", Json::str(state.artifacts.display().to_string())),
         ]),
         Request::Submit(spec) => {
+            // Check-and-push atomically under the jobs lock: shutdown
+            // also flips the flag under this lock, so a submit can
+            // never be acked after shutdown began (it would be
+            // silently abandoned).
+            let mut jobs = state.jobs.lock().unwrap();
             if state.shutdown.load(Ordering::SeqCst) {
                 return err_response("daemon is shutting down");
             }
-            let mut jobs = state.jobs.lock().unwrap();
-            let id = format!("job-{:04}", jobs.len() + 1);
+            let id = journal::job_id(state.next_id.fetch_add(1, Ordering::SeqCst));
+            let ts = unix_now();
+            // Journal before acking: an acked submission must survive
+            // a crash, so a journal failure here rejects the job.
+            if let Err(e) = state.journal.append(&JobEvent::Submitted {
+                job: id.clone(),
+                ts,
+                spec: spec.to_json(),
+            }) {
+                return err_response(format!("journaling submission: {e:#}"));
+            }
             jobs.push(JobRecord {
                 id: id.clone(),
                 spec,
                 status: Status::Pending,
-                submitted_ts: unix_now(),
+                submitted_ts: ts,
                 started_ts: None,
                 finished_ts: None,
+                interruptions: 0,
                 progress: Arc::new(JobProgress::default()),
                 result: None,
             });
@@ -328,9 +687,112 @@ fn handle_request(req: Request, state: &Arc<ServiceState>) -> Json {
             }
         }
         Request::Shutdown => {
-            state.shutdown.store(true, Ordering::SeqCst);
+            // Flag flipped under the jobs lock — see the Submit arm.
+            // (The accept-loop nudge happens in handle_connection,
+            // after this response reaches the client.)
+            {
+                let _jobs = state.jobs.lock().unwrap();
+                state.shutdown.store(true, Ordering::SeqCst);
+            }
             state.wake.notify_all();
             ok_response(vec![])
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+
+    fn bound_state(dir: &std::path::Path) -> (Daemon, Arc<ServiceState>) {
+        let journal = Journal::beside(&dir.join("runs.jsonl"));
+        let daemon = Daemon::bind(0, dir.to_path_buf(), journal).unwrap();
+        let state = daemon.state.clone();
+        (daemon, state)
+    }
+
+    #[test]
+    fn submit_is_rejected_atomically_after_shutdown() {
+        let dir = TempDir::new().unwrap();
+        let (_daemon, state) = bound_state(dir.path());
+
+        // Pre-shutdown: accepted, journaled before the ack.
+        let resp = handle_request(Request::Submit(JobSpec::default_run()), &state);
+        assert_eq!(resp.get("ok").and_then(|b| b.as_bool()), Some(true));
+        assert_eq!(resp.req_str("job").unwrap(), "job-0001");
+        let journaled = state.journal.load().unwrap();
+        assert_eq!(journaled.len(), 1);
+        assert_eq!(journaled[0].job(), "job-0001");
+
+        // Shutdown flips the flag under the jobs lock…
+        let resp = handle_request(Request::Shutdown, &state);
+        assert_eq!(resp.get("ok").and_then(|b| b.as_bool()), Some(true));
+
+        // …so a later submit is refused, not silently abandoned.
+        let resp = handle_request(Request::Submit(JobSpec::default_run()), &state);
+        assert_eq!(resp.get("ok").and_then(|b| b.as_bool()), Some(false));
+        assert!(resp.req_str("error").unwrap().contains("shutting down"));
+        assert_eq!(state.jobs.lock().unwrap().len(), 1, "refused submit must not enqueue");
+        assert_eq!(state.journal.load().unwrap().len(), 1, "refused submit must not journal");
+    }
+
+    #[test]
+    fn recover_seeds_monotonic_ids_and_restores_settled_jobs() {
+        let dir = TempDir::new().unwrap();
+        let (_daemon, state) = bound_state(dir.path());
+        let spec = JobSpec::default_run().to_json();
+        let result =
+            crate::util::json::parse(r#"{"run_id":"r1","records":[{"key":"a"},{"key":"b"}]}"#)
+                .unwrap();
+        for ev in [
+            JobEvent::Submitted { job: "job-0001".into(), ts: 1, spec: spec.clone() },
+            JobEvent::Started { job: "job-0001".into(), ts: 2 },
+            JobEvent::Done { job: "job-0001".into(), ts: 3, result },
+            JobEvent::Submitted { job: "job-0002".into(), ts: 4, spec: spec.clone() },
+        ] {
+            state.journal.append(&ev).unwrap();
+        }
+        recover(&state).unwrap();
+        {
+            let jobs = state.jobs.lock().unwrap();
+            assert_eq!(jobs.len(), 2);
+            assert_eq!(jobs[0].status, Status::Done);
+            assert_eq!(jobs[0].progress.snapshot(), (2, 2), "restored progress reads n/n");
+            assert_eq!(jobs[1].status, Status::Pending);
+        }
+        // The next accepted submission continues the numbering.
+        let resp = handle_request(Request::Submit(JobSpec::default_run()), &state);
+        assert_eq!(resp.req_str("job").unwrap(), "job-0003");
+    }
+
+    #[test]
+    fn recover_retries_interrupted_once_then_gives_up() {
+        let dir = TempDir::new().unwrap();
+        let (_daemon, state) = bound_state(dir.path());
+        let spec = JobSpec::default_run().to_json();
+        // job-0001 died mid-run; job-0002 died mid-*retry*.
+        for ev in [
+            JobEvent::Submitted { job: "job-0001".into(), ts: 1, spec: spec.clone() },
+            JobEvent::Started { job: "job-0001".into(), ts: 2 },
+            JobEvent::Submitted { job: "job-0002".into(), ts: 3, spec: spec.clone() },
+            JobEvent::Started { job: "job-0002".into(), ts: 4 },
+            JobEvent::Interrupted { job: "job-0002".into(), ts: 5 },
+            JobEvent::Started { job: "job-0002".into(), ts: 6 },
+        ] {
+            state.journal.append(&ev).unwrap();
+        }
+        recover(&state).unwrap();
+        let jobs = state.jobs.lock().unwrap();
+        assert_eq!(jobs[0].status, Status::Interrupted, "first crash → one retry");
+        assert_eq!(jobs[0].interruptions, 1);
+        match &jobs[1].status {
+            Status::Failed(e) => assert!(e.contains("giving up"), "{e}"),
+            other => panic!("second crash must fail the job, got {other:?}"),
+        }
+        // Both verdicts were journaled, so the *next* restart agrees.
+        let replayed = journal::replay(&state.journal.load().unwrap()).unwrap();
+        assert_eq!(replayed.jobs[0].state, ReplayState::Interrupted);
+        assert_eq!(replayed.jobs[1].state, ReplayState::Failed);
     }
 }

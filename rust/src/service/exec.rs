@@ -51,6 +51,14 @@ impl JobProgress {
     pub fn snapshot(&self) -> (usize, usize) {
         (self.done.load(Ordering::Relaxed), self.total.load(Ordering::Relaxed))
     }
+
+    /// Restore a replayed job's counters (journal recovery): a job
+    /// restored `done` has no live executor to tick it, but its queue
+    /// row should still read `n/n` like an uninterrupted run's.
+    pub fn restore(&self, done: usize, total: usize) {
+        self.done.store(done, Ordering::Relaxed);
+        self.total.store(total, Ordering::Relaxed);
+    }
 }
 
 /// Everything the executor thread owns that jobs need: the loaded

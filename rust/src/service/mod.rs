@@ -11,7 +11,9 @@
 //!   a `run`/`sweep`/`ci` job, [`Request`] the wire ops;
 //! - [`daemon`]: `xbench serve` — accept loop + a single executor
 //!   thread that owns the persistent device/store and drains the job
-//!   queue through the pool;
+//!   queue through the pool; the queue is durable (one journal line
+//!   per job transition, [`crate::store::Journal`]) and replayed on
+//!   startup, so a crash loses at most the in-flight measurement;
 //! - [`client`]: `xbench submit`/`queue`/`result` — one-line request,
 //!   one-line response, connection per call;
 //! - [`exec`]: job execution — the same worklist expansion, scheduler

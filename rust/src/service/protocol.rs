@@ -16,7 +16,32 @@ use crate::util::Json;
 pub const DEFAULT_PORT: u16 = 7483;
 
 /// Wire-protocol version reported by `ping`.
-pub const PROTO_VERSION: usize = 1;
+///
+/// - **v1** (PR 3): `ping`/`submit`/`queue`/`result`/`shutdown`.
+/// - **v2**: job status rows gain the `interrupted` (re-queued after a
+///   daemon crash mid-run; will be retried once) and `abandoned`
+///   (still waiting when the daemon shut down) states, plus an
+///   `interruptions` count when non-zero. Old clients that only
+///   switch on `done`/`failed` keep working: both new states are
+///   reported through the same `status` key.
+pub const PROTO_VERSION: usize = 2;
+
+/// Every `status` a job status row can carry, in lifecycle order.
+///
+/// `pending → running → done | failed` is the crash-free path.
+/// `interrupted` is a replayed `running` job re-queued for its one
+/// retry; `abandoned` is a `pending`/`interrupted` job drained at
+/// shutdown. `done`, `failed`, and `abandoned` are terminal
+/// ([`is_settled`]).
+pub const JOB_STATES: &[&str] =
+    &["pending", "running", "interrupted", "done", "failed", "abandoned"];
+
+/// Whether a status row's `status` is terminal — the job will never
+/// run again, so waiting clients should stop polling. `interrupted` is
+/// *not* settled: the daemon retries it once.
+pub fn is_settled(status: &str) -> bool {
+    matches!(status, "done" | "failed" | "abandoned")
+}
 
 /// What kind of work a job runs. Mirrors the one-shot verbs: `run`
 /// (benchmark the selection), `sweep` (batch ladder over sweep-tagged
@@ -327,6 +352,18 @@ mod tests {
         }
         assert!(Request::decode_line(r#"{"op":"nope"}"#).is_err());
         assert!(Request::decode_line("not json").is_err());
+    }
+
+    #[test]
+    fn job_states_and_settlement_agree() {
+        let mut sorted: Vec<&str> = JOB_STATES.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), JOB_STATES.len(), "duplicate job state");
+        let settled: Vec<&str> =
+            JOB_STATES.iter().copied().filter(|&s| is_settled(s)).collect();
+        assert_eq!(settled, vec!["done", "failed", "abandoned"]);
+        assert!(!is_settled("interrupted"), "interrupted jobs are retried, not settled");
     }
 
     #[test]

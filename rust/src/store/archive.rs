@@ -6,7 +6,6 @@
 //! valid archive. Malformed lines fail loudly with their line number.
 
 use anyhow::{bail, Context, Result};
-use std::io::Write as _;
 use std::path::{Path, PathBuf};
 
 use super::record::RunRecord;
@@ -43,30 +42,19 @@ impl Archive {
     /// the daemon and ad-hoc CLI runs may write the same archive
     /// concurrently, and a reader must never see interleaved partial
     /// lines. The whole batch is one buffered `write_all` under the
-    /// lock, so any archive prefix stays a valid archive.
+    /// lock (via the shared [`super::append_jsonl`] discipline, which
+    /// also truncates a torn final line left by a crashed writer), so
+    /// any archive prefix stays a valid archive.
     pub fn append(&self, records: &[RunRecord]) -> Result<()> {
         if records.is_empty() {
             return Ok(());
         }
-        let _lock = super::lock::FileLock::acquire(&self.path)?;
-        if let Some(parent) = self.path.parent() {
-            if !parent.as_os_str().is_empty() {
-                std::fs::create_dir_all(parent)
-                    .with_context(|| format!("creating {}", parent.display()))?;
-            }
-        }
-        let mut f = std::fs::OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(&self.path)
-            .with_context(|| format!("opening archive {}", self.path.display()))?;
         let mut buf = String::new();
         for r in records {
             buf.push_str(&r.to_json().to_json());
             buf.push('\n');
         }
-        f.write_all(buf.as_bytes())
-            .with_context(|| format!("appending to {}", self.path.display()))
+        super::append_jsonl(&self.path, buf.as_bytes())
     }
 
     /// Stamp scheduler output with run provenance and append it: each
@@ -391,6 +379,46 @@ mod tests {
             !crate::store::lock::FileLock::lock_path(&path).exists(),
             "lock sidecar must be released after the last append"
         );
+    }
+
+    #[test]
+    fn append_after_a_crashed_writer_heals_the_torn_tail() {
+        // A writer SIGKILLed mid-append can leave a partial final line;
+        // the next append (same shared discipline as the job journal)
+        // must truncate it so the archive stays fully parseable instead
+        // of welding a new record onto the torn bytes.
+        let dir = crate::util::TempDir::new().unwrap();
+        let path = dir.path().join("r.jsonl");
+        let archive = Archive::new(&path);
+        archive.append(&[rec("run-a", 1, "m", 0.01)]).unwrap();
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("{\"v\":2,\"run_id\":\"torn"); // no trailing newline
+        std::fs::write(&path, text).unwrap();
+        archive.append(&[rec("run-b", 2, "m", 0.02)]).unwrap();
+        let records = archive.load().unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(records[0].run_id, "run-a");
+        assert_eq!(records[1].run_id, "run-b");
+    }
+
+    #[test]
+    fn append_preserves_a_complete_final_record_missing_its_newline() {
+        // A hand edit or import can strip the final newline while the
+        // last record itself is complete and valid — load() parses it
+        // today, so the torn-tail healing must terminate it, never
+        // truncate it.
+        let dir = crate::util::TempDir::new().unwrap();
+        let path = dir.path().join("r.jsonl");
+        let archive = Archive::new(&path);
+        archive.append(&[rec("run-a", 1, "m", 0.01)]).unwrap();
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.pop(), Some('\n'));
+        std::fs::write(&path, text).unwrap();
+        archive.append(&[rec("run-b", 2, "m", 0.02)]).unwrap();
+        let records = archive.load().unwrap();
+        assert_eq!(records.len(), 2, "the unterminated record must survive the append");
+        assert_eq!(records[0].run_id, "run-a");
+        assert_eq!(records[1].run_id, "run-b");
     }
 
     #[test]

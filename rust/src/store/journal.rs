@@ -1,0 +1,487 @@
+//! Durable job journal for the benchmark daemon (`queue.jsonl`).
+//!
+//! The archive is the durable record of *results*; this journal is the
+//! durable record of *queue state*. `xbench serve` appends one JSON
+//! line per job transition — `submitted` / `started` / `done` /
+//! `failed` / `interrupted` / `abandoned` — using exactly the
+//! [`RunRecord`](super::record::RunRecord) JSONL discipline: append-only,
+//! one compact object per line, serialized across processes by the
+//! [`FileLock`](super::lock::FileLock) sidecar, any prefix of the file
+//! a valid journal.
+//!
+//! On startup the daemon [`replay`]s the journal:
+//!
+//! - jobs whose last transition is terminal (`done`/`failed`/
+//!   `abandoned`) are restored read-only, so `queue` and `result` keep
+//!   answering for them across restarts;
+//! - jobs that were `pending` at crash time are re-queued as-is;
+//! - jobs that were `running` at crash time come back as
+//!   [`ReplayState::Running`]; the daemon journals an `interrupted`
+//!   transition and retries them **once** (a second interruption turns
+//!   into `failed` — a job that kills the daemon twice should not be
+//!   run a third time).
+//!
+//! The `done` line embeds the job's full result payload, so a restored
+//! job's `result` response is byte-for-byte what the live daemon would
+//! have served. Job numbering is journal-monotonic: the next id is
+//! always one past the highest ever journaled, so `job-NNNN` never
+//! collides across restarts.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::util::Json;
+
+/// Journal file name, created beside the archive (`queue.jsonl`).
+pub const JOURNAL_FILE: &str = "queue.jsonl";
+
+/// One job transition, as journaled on one line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobEvent {
+    /// Job accepted into the queue (spec embedded, so replay can re-run
+    /// it). Journaled *before* the submitter is told "ok".
+    Submitted { job: String, ts: u64, spec: Json },
+    /// The executor claimed the job.
+    Started { job: String, ts: u64 },
+    /// Job finished; the full result payload is embedded so `result`
+    /// answers across restarts.
+    Done { job: String, ts: u64, result: Json },
+    /// Job errored (or was given up after repeated interruption).
+    Failed { job: String, ts: u64, error: String },
+    /// The daemon found the job mid-run at startup (crashed while
+    /// running) and re-queued it for one retry.
+    Interrupted { job: String, ts: u64 },
+    /// Shutdown drained the queue with this job still waiting.
+    Abandoned { job: String, ts: u64 },
+}
+
+impl JobEvent {
+    /// The job this transition belongs to.
+    pub fn job(&self) -> &str {
+        match self {
+            JobEvent::Submitted { job, .. }
+            | JobEvent::Started { job, .. }
+            | JobEvent::Done { job, .. }
+            | JobEvent::Failed { job, .. }
+            | JobEvent::Interrupted { job, .. }
+            | JobEvent::Abandoned { job, .. } => job,
+        }
+    }
+
+    fn ev_name(&self) -> &'static str {
+        match self {
+            JobEvent::Submitted { .. } => "submitted",
+            JobEvent::Started { .. } => "started",
+            JobEvent::Done { .. } => "done",
+            JobEvent::Failed { .. } => "failed",
+            JobEvent::Interrupted { .. } => "interrupted",
+            JobEvent::Abandoned { .. } => "abandoned",
+        }
+    }
+
+    /// Encode as one compact journal line (no newline).
+    pub fn to_json(&self) -> Json {
+        let (job, ts) = match self {
+            JobEvent::Submitted { job, ts, .. }
+            | JobEvent::Started { job, ts }
+            | JobEvent::Done { job, ts, .. }
+            | JobEvent::Failed { job, ts, .. }
+            | JobEvent::Interrupted { job, ts }
+            | JobEvent::Abandoned { job, ts } => (job, *ts),
+        };
+        let mut fields = vec![
+            ("ev", Json::str(self.ev_name())),
+            ("job", Json::str(job)),
+            ("ts", Json::num(ts as f64)),
+        ];
+        match self {
+            JobEvent::Submitted { spec, .. } => fields.push(("spec", spec.clone())),
+            JobEvent::Done { result, .. } => fields.push(("result", result.clone())),
+            JobEvent::Failed { error, .. } => fields.push(("error", Json::str(error))),
+            _ => {}
+        }
+        Json::obj(fields)
+    }
+
+    /// Decode one journal line.
+    pub fn decode_line(line: &str) -> Result<JobEvent> {
+        let v = crate::util::json::parse(line)?;
+        let job = v.req_str("job")?.to_string();
+        let ts = v.req_usize("ts")? as u64;
+        Ok(match v.req_str("ev")? {
+            "submitted" => JobEvent::Submitted { job, ts, spec: v.req("spec")?.clone() },
+            "started" => JobEvent::Started { job, ts },
+            "done" => JobEvent::Done { job, ts, result: v.req("result")?.clone() },
+            "failed" => {
+                JobEvent::Failed { job, ts, error: v.req_str("error")?.to_string() }
+            }
+            "interrupted" => JobEvent::Interrupted { job, ts },
+            "abandoned" => JobEvent::Abandoned { job, ts },
+            other => bail!("unknown journal event {other:?}"),
+        })
+    }
+}
+
+/// Handle to a daemon job journal (which may not exist yet).
+#[derive(Debug, Clone)]
+pub struct Journal {
+    path: PathBuf,
+}
+
+impl Journal {
+    pub fn new(path: impl Into<PathBuf>) -> Journal {
+        Journal { path: path.into() }
+    }
+
+    /// The journal that guards the queue feeding `archive_path`:
+    /// `queue.jsonl` in the same directory.
+    pub fn beside(archive_path: &Path) -> Journal {
+        Journal { path: archive_path.with_file_name(JOURNAL_FILE) }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Discard the journal (`serve --fresh`): the next daemon starts
+    /// with an empty queue and job numbering restarts from 1.
+    pub fn reset(&self) -> Result<()> {
+        match std::fs::remove_file(&self.path) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => {
+                Err(e).with_context(|| format!("removing journal {}", self.path.display()))
+            }
+        }
+    }
+
+    /// Append one transition (creates the file and parent directories
+    /// on first use). Uses the shared [`super::append_jsonl`]
+    /// discipline: the same advisory lock sidecar as
+    /// [`super::Archive::append`], plus torn-tail healing — appending
+    /// after a crash mid-append must not weld the new line onto the
+    /// partial bytes (that would turn a recoverable tail into mid-file
+    /// corruption that fails every later replay).
+    pub fn append(&self, ev: &JobEvent) -> Result<()> {
+        let mut line = ev.to_json().to_json();
+        line.push('\n');
+        super::append_jsonl(&self.path, line.as_bytes())
+    }
+
+    /// Load every journaled transition in append order. A missing file
+    /// is an empty journal. A torn *final* line (the daemon died
+    /// mid-append) is dropped with a warning; a malformed line anywhere
+    /// else is corruption and fails loudly with its line number.
+    pub fn load(&self) -> Result<Vec<JobEvent>> {
+        let text = match std::fs::read_to_string(&self.path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+            Err(e) => {
+                return Err(e)
+                    .with_context(|| format!("reading journal {}", self.path.display()))
+            }
+        };
+        let lines: Vec<&str> =
+            text.lines().filter(|l| !l.trim().is_empty()).collect();
+        let mut events = Vec::with_capacity(lines.len());
+        for (i, line) in lines.iter().enumerate() {
+            match JobEvent::decode_line(line) {
+                Ok(ev) => events.push(ev),
+                Err(e) if i + 1 == lines.len() => {
+                    // A crash mid-append can only tear the last line.
+                    eprintln!(
+                        "journal {}: dropping torn final line: {e:#}",
+                        self.path.display()
+                    );
+                }
+                Err(e) => {
+                    return Err(e)
+                        .with_context(|| format!("{}:{}", self.path.display(), i + 1))
+                }
+            }
+        }
+        Ok(events)
+    }
+}
+
+/// Lifecycle a replayed job was left in (the last journaled
+/// transition). `Running` means the daemon died mid-job: the caller
+/// decides between retry (first interruption) and giving up.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplayState {
+    Pending,
+    Running,
+    Interrupted,
+    Done,
+    Failed,
+    Abandoned,
+}
+
+/// One job reconstructed from the journal, in submission order.
+#[derive(Debug, Clone)]
+pub struct ReplayedJob {
+    pub id: String,
+    /// The submitted spec, verbatim (decode with `JobSpec::decode`).
+    pub spec: Json,
+    pub state: ReplayState,
+    pub submitted_ts: u64,
+    pub started_ts: Option<u64>,
+    pub finished_ts: Option<u64>,
+    /// Result payload of a `done` job.
+    pub result: Option<Json>,
+    /// Error string of a `failed` job.
+    pub error: Option<String>,
+    /// How many `interrupted` transitions the job has accumulated.
+    pub interruptions: usize,
+}
+
+/// A folded journal: every job's final state plus the next free job
+/// number.
+#[derive(Debug)]
+pub struct Replay {
+    /// Jobs in submission order.
+    pub jobs: Vec<ReplayedJob>,
+    /// One past the highest job number ever journaled (1 when empty) —
+    /// ids stay monotonic across restarts.
+    pub next_job_number: usize,
+}
+
+/// Format job number `n` as the wire id (`job-0001`, …).
+pub fn job_id(n: usize) -> String {
+    format!("job-{n:04}")
+}
+
+/// Parse a wire id back to its number (`None` for foreign ids).
+pub fn job_number(id: &str) -> Option<usize> {
+    id.strip_prefix("job-")?.parse().ok()
+}
+
+/// Fold journaled transitions into per-job final states. Transition
+/// order is validated (an event for a never-submitted job, a duplicate
+/// submission, or a transition after a terminal state is corruption and
+/// fails loudly).
+pub fn replay(events: &[JobEvent]) -> Result<Replay> {
+    let mut jobs: Vec<ReplayedJob> = Vec::new();
+    // id → index into `jobs`, so replay stays linear in journal length
+    // (a long-lived daemon accumulates thousands of events).
+    let mut by_id: std::collections::HashMap<String, usize> = std::collections::HashMap::new();
+    let mut next = 1usize;
+    for ev in events {
+        let id = ev.job();
+        if let JobEvent::Submitted { job, ts, spec } = ev {
+            anyhow::ensure!(
+                !by_id.contains_key(job.as_str()),
+                "journal corrupt: {job} submitted twice"
+            );
+            if let Some(n) = job_number(job) {
+                next = next.max(n + 1);
+            }
+            by_id.insert(job.clone(), jobs.len());
+            jobs.push(ReplayedJob {
+                id: job.clone(),
+                spec: spec.clone(),
+                state: ReplayState::Pending,
+                submitted_ts: *ts,
+                started_ts: None,
+                finished_ts: None,
+                result: None,
+                error: None,
+                interruptions: 0,
+            });
+            continue;
+        }
+        let index = *by_id
+            .get(id)
+            .with_context(|| format!("journal corrupt: transition for unsubmitted {id}"))?;
+        let job = &mut jobs[index];
+        anyhow::ensure!(
+            !matches!(
+                job.state,
+                ReplayState::Done | ReplayState::Failed | ReplayState::Abandoned
+            ),
+            "journal corrupt: transition after terminal state for {id}"
+        );
+        match ev {
+            JobEvent::Submitted { .. } => unreachable!("handled above"),
+            JobEvent::Started { ts, .. } => {
+                job.state = ReplayState::Running;
+                job.started_ts = Some(*ts);
+            }
+            JobEvent::Interrupted { .. } => {
+                job.state = ReplayState::Interrupted;
+                job.interruptions += 1;
+            }
+            JobEvent::Done { ts, result, .. } => {
+                job.state = ReplayState::Done;
+                job.finished_ts = Some(*ts);
+                job.result = Some(result.clone());
+            }
+            JobEvent::Failed { ts, error, .. } => {
+                job.state = ReplayState::Failed;
+                job.finished_ts = Some(*ts);
+                job.error = Some(error.clone());
+            }
+            JobEvent::Abandoned { ts, .. } => {
+                job.state = ReplayState::Abandoned;
+                job.finished_ts = Some(*ts);
+            }
+        }
+    }
+    Ok(Replay { jobs, next_job_number: next })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Json {
+        crate::util::json::parse(r#"{"verb":"run","repeats":1}"#).unwrap()
+    }
+
+    fn submitted(n: usize, ts: u64) -> JobEvent {
+        JobEvent::Submitted { job: job_id(n), ts, spec: spec() }
+    }
+
+    #[test]
+    fn events_roundtrip_through_journal_lines() {
+        let evs = vec![
+            submitted(1, 10),
+            JobEvent::Started { job: job_id(1), ts: 11 },
+            JobEvent::Done {
+                job: job_id(1),
+                ts: 12,
+                result: crate::util::json::parse(r#"{"run_id":"r1","records":[]}"#).unwrap(),
+            },
+            JobEvent::Failed { job: job_id(2), ts: 13, error: "boom".into() },
+            JobEvent::Interrupted { job: job_id(3), ts: 14 },
+            JobEvent::Abandoned { job: job_id(4), ts: 15 },
+        ];
+        for ev in evs {
+            let line = ev.to_json().to_json();
+            assert!(!line.contains('\n'));
+            assert_eq!(JobEvent::decode_line(&line).unwrap(), ev);
+        }
+        assert!(JobEvent::decode_line(r#"{"ev":"nope","job":"j","ts":1}"#).is_err());
+    }
+
+    #[test]
+    fn append_load_roundtrips_and_missing_journal_is_empty() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let journal = Journal::beside(&dir.path().join("runs.jsonl"));
+        assert_eq!(journal.path(), dir.path().join(JOURNAL_FILE));
+        assert!(journal.load().unwrap().is_empty());
+        journal.append(&submitted(1, 10)).unwrap();
+        journal.append(&JobEvent::Started { job: job_id(1), ts: 11 }).unwrap();
+        let evs = journal.load().unwrap();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0], submitted(1, 10));
+        assert!(
+            !crate::store::lock::FileLock::lock_path(journal.path()).exists(),
+            "lock sidecar must be released after append"
+        );
+        journal.reset().unwrap();
+        assert!(journal.load().unwrap().is_empty());
+        journal.reset().unwrap(); // resetting a missing journal is fine
+    }
+
+    #[test]
+    fn torn_final_line_is_dropped_but_mid_file_corruption_is_loud() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let journal = Journal::new(dir.path().join(JOURNAL_FILE));
+        journal.append(&submitted(1, 10)).unwrap();
+        let whole = std::fs::read_to_string(journal.path()).unwrap();
+        // A crash mid-append tears the last line: replay survives it.
+        std::fs::write(journal.path(), format!("{whole}{{\"ev\":\"sta")).unwrap();
+        let evs = journal.load().unwrap();
+        assert_eq!(evs.len(), 1);
+        // The same garbage mid-file is corruption, not a crash artifact.
+        std::fs::write(journal.path(), format!("{{\"ev\":\"sta\n{whole}")).unwrap();
+        let err = journal.load().unwrap_err();
+        assert!(format!("{err:#}").contains(":1"), "{err:#}");
+    }
+
+    #[test]
+    fn append_heals_a_torn_tail_instead_of_welding_onto_it() {
+        // A crash mid-append leaves a torn final line. load() tolerates
+        // it once — but a later append must TRUNCATE it, not weld the
+        // next event onto the partial bytes: that would create a
+        // malformed line in the *middle* of the file, and the restart
+        // after next would refuse to start at all.
+        let dir = crate::util::TempDir::new().unwrap();
+        let journal = Journal::new(dir.path().join(JOURNAL_FILE));
+        journal.append(&submitted(1, 10)).unwrap();
+        let whole = std::fs::read_to_string(journal.path()).unwrap();
+        std::fs::write(journal.path(), format!("{whole}{{\"ev\":\"sta")).unwrap();
+        journal.append(&JobEvent::Started { job: job_id(1), ts: 11 }).unwrap();
+        let evs = journal.load().unwrap();
+        assert_eq!(evs.len(), 2, "torn tail must be gone, both real events intact");
+        assert_eq!(evs[1], JobEvent::Started { job: job_id(1), ts: 11 });
+        // The whole file is clean — a replay (the next restart) agrees.
+        let replayed = replay(&evs).unwrap();
+        assert_eq!(replayed.jobs[0].state, ReplayState::Running);
+    }
+
+    #[test]
+    fn replay_folds_transitions_to_final_states() {
+        let result =
+            crate::util::json::parse(r#"{"run_id":"r1","records":[{"key":"k"}]}"#).unwrap();
+        let events = vec![
+            submitted(1, 10),
+            JobEvent::Started { job: job_id(1), ts: 11 },
+            JobEvent::Done { job: job_id(1), ts: 12, result: result.clone() },
+            submitted(2, 13),
+            JobEvent::Started { job: job_id(2), ts: 14 },
+            JobEvent::Failed { job: job_id(2), ts: 15, error: "boom".into() },
+            submitted(3, 16),
+            JobEvent::Started { job: job_id(3), ts: 17 }, // died running
+            submitted(4, 18),                             // died pending
+            submitted(5, 19),
+            JobEvent::Abandoned { job: job_id(5), ts: 20 },
+            submitted(6, 21),
+            JobEvent::Started { job: job_id(6), ts: 22 },
+            JobEvent::Interrupted { job: job_id(6), ts: 23 },
+            JobEvent::Started { job: job_id(6), ts: 24 }, // died in the retry
+        ];
+        let replay = replay(&events).unwrap();
+        assert_eq!(replay.next_job_number, 7);
+        let by_id = |n: usize| replay.jobs.iter().find(|j| j.id == job_id(n)).unwrap();
+        assert_eq!(by_id(1).state, ReplayState::Done);
+        assert_eq!(by_id(1).result, Some(result));
+        assert_eq!(by_id(1).finished_ts, Some(12));
+        assert_eq!(by_id(2).state, ReplayState::Failed);
+        assert_eq!(by_id(2).error.as_deref(), Some("boom"));
+        assert_eq!(by_id(3).state, ReplayState::Running);
+        assert_eq!(by_id(3).interruptions, 0);
+        assert_eq!(by_id(4).state, ReplayState::Pending);
+        assert_eq!(by_id(5).state, ReplayState::Abandoned);
+        assert_eq!(by_id(6).state, ReplayState::Running);
+        assert_eq!(by_id(6).interruptions, 1);
+        // Submission order is preserved.
+        let ids: Vec<&str> = replay.jobs.iter().map(|j| j.id.as_str()).collect();
+        assert_eq!(ids, (1..=6).map(job_id).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn replay_ids_stay_monotonic_over_gaps_and_empty_journals() {
+        assert_eq!(replay(&[]).unwrap().next_job_number, 1);
+        let replayed = replay(&[submitted(41, 1)]).unwrap();
+        assert_eq!(replayed.next_job_number, 42);
+        assert_eq!(job_number(&job_id(41)), Some(41));
+        assert_eq!(job_number("weird"), None);
+    }
+
+    #[test]
+    fn replay_rejects_corrupt_transition_order() {
+        let err = replay(&[JobEvent::Started { job: job_id(1), ts: 1 }]).unwrap_err();
+        assert!(format!("{err:#}").contains("unsubmitted"), "{err:#}");
+        let err = replay(&[submitted(1, 1), submitted(1, 2)]).unwrap_err();
+        assert!(format!("{err}").contains("twice"), "{err}");
+        let err = replay(&[
+            submitted(1, 1),
+            JobEvent::Abandoned { job: job_id(1), ts: 2 },
+            JobEvent::Started { job: job_id(1), ts: 3 },
+        ])
+        .unwrap_err();
+        assert!(format!("{err}").contains("terminal"), "{err}");
+    }
+}

@@ -13,7 +13,10 @@
 //!
 //! - **crashed holder**: a lock older than [`STALE_AFTER`] is broken
 //!   (benchmark appends take milliseconds; nothing legitimate holds
-//!   the lock for a minute);
+//!   the lock for a minute). On Linux there is a fast path: the lock
+//!   records its holder's PID, so a lock whose holder process no
+//!   longer exists is broken immediately — a SIGKILLed daemon must
+//!   not stall its own restart for a minute;
 //! - **deadlock/bug**: acquisition gives up after [`ACQUIRE_TIMEOUT`]
 //!   with an error naming the lock file, instead of hanging a nightly
 //!   forever.
@@ -48,6 +51,14 @@ impl FileLock {
     /// Acquire the lock guarding `target`, creating parent directories
     /// as needed. Blocks (with retries) up to [`ACQUIRE_TIMEOUT`].
     pub fn acquire(target: &Path) -> Result<FileLock> {
+        Self::acquire_with(target, STALE_AFTER)
+    }
+
+    /// [`FileLock::acquire`] with an injectable staleness threshold.
+    /// Production callers use the [`STALE_AFTER`] default; tests inject
+    /// a tiny threshold to exercise the stale-break path without
+    /// backdating file mtimes (which std cannot do).
+    pub fn acquire_with(target: &Path, stale_after: Duration) -> Result<FileLock> {
         let path = Self::lock_path(target);
         if let Some(parent) = path.parent() {
             if !parent.as_os_str().is_empty() {
@@ -64,8 +75,8 @@ impl FileLock {
                     return Ok(FileLock { path });
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
-                    if Self::is_stale(&path) {
-                        Self::break_stale(&path);
+                    if Self::is_stale(&path, stale_after) || Self::holder_is_dead(&path) {
+                        Self::break_stale(&path, stale_after);
                         continue;
                     }
                     if Instant::now() >= deadline {
@@ -85,13 +96,35 @@ impl FileLock {
         }
     }
 
-    fn is_stale(path: &Path) -> bool {
+    fn is_stale(path: &Path, stale_after: Duration) -> bool {
         let Ok(meta) = std::fs::metadata(path) else { return false };
         let Ok(modified) = meta.modified() else { return false };
         SystemTime::now()
             .duration_since(modified)
-            .map(|age| age > STALE_AFTER)
+            .map(|age| age > stale_after)
             .unwrap_or(false)
+    }
+
+    /// Linux fast path for crashed holders: the lock file records its
+    /// holder's PID, so a lock whose holder is gone is orphaned no
+    /// matter how fresh its mtime (a SIGKILLed daemon must not stall
+    /// its own restart behind [`STALE_AFTER`]). Conservative
+    /// everywhere it cannot be sure: our own PID, an unreadable file,
+    /// a recycled PID, or a platform without `/proc` all fall back to
+    /// the mtime rule. `pub(crate)` because the daemon's journal-owner
+    /// sidecar applies the same "is the recorded holder dead" policy —
+    /// one implementation, so the two can never drift.
+    pub(crate) fn holder_is_dead(path: &Path) -> bool {
+        let Ok(text) = std::fs::read_to_string(path) else { return false };
+        let Some(pid) = text.lines().next().and_then(|l| l.trim().parse::<u32>().ok())
+        else {
+            return false;
+        };
+        if pid == std::process::id() {
+            return false;
+        }
+        let proc_root = Path::new("/proc");
+        proc_root.is_dir() && !proc_root.join(pid.to_string()).exists()
     }
 
     /// Break a stale lock without racing other breakers: `remove_file`
@@ -102,12 +135,12 @@ impl FileLock {
     /// twice. The winner re-checks the captive file's age: if it turns
     /// out fresh (a new holder squeezed in between the staleness check
     /// and the rename), the lock is handed back instead of destroyed.
-    fn break_stale(path: &Path) {
+    fn break_stale(path: &Path, stale_after: Duration) {
         let mut name = path.file_name().unwrap_or_default().to_os_string();
         name.push(format!(".stale.{}", std::process::id()));
         let captive = path.with_file_name(name);
         if std::fs::rename(path, &captive).is_ok() {
-            if Self::is_stale(&captive) {
+            if Self::is_stale(&captive, stale_after) || Self::holder_is_dead(&captive) {
                 let _ = std::fs::remove_file(&captive);
             } else {
                 // We stole a live lock: give it back (the holder keeps
@@ -171,18 +204,82 @@ mod tests {
     }
 
     #[test]
-    fn stale_lock_is_broken() {
+    fn stale_lock_is_broken_through_the_acquire_path() {
+        // std cannot backdate an mtime, so instead of faking an old
+        // lock we inject a zero staleness threshold: the planted lock
+        // (a crashed holder's leftover) reads as stale the moment it
+        // has any measurable age, and acquire_with must break it and
+        // win — instead of timing out.
         let dir = crate::util::TempDir::new().unwrap();
         let target = dir.path().join("runs.jsonl");
         let lock_path = FileLock::lock_path(&target);
         std::fs::write(&lock_path, "12345\n").unwrap();
-        // Backdate the lock file via mtime-insensitive check override:
-        // is_stale consults mtime, which we cannot set without unsafe
-        // platform calls — so verify the predicate directly on a fresh
-        // file (not stale) and exercise the acquire path separately.
-        assert!(!FileLock::is_stale(&lock_path), "fresh lock must not read as stale");
-        std::fs::remove_file(&lock_path).unwrap();
-        let lock = FileLock::acquire(&target).unwrap();
+        assert!(
+            !FileLock::is_stale(&lock_path, STALE_AFTER),
+            "fresh lock must not read as stale at the production threshold"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(FileLock::is_stale(&lock_path, Duration::ZERO));
+        let lock = FileLock::acquire_with(&target, Duration::ZERO).unwrap();
+        assert!(lock_path.exists(), "breaker must hold a fresh lock after the break");
         drop(lock);
+        assert!(!lock_path.exists());
+        // No captive .stale.<pid> leftovers from the break.
+        let leftovers: Vec<_> = std::fs::read_dir(dir.path())
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".stale."))
+            .collect();
+        assert!(leftovers.is_empty(), "stale captive not cleaned up: {leftovers:?}");
+    }
+
+    #[test]
+    fn breaker_hands_back_a_lock_that_turns_out_fresh() {
+        // The TOCTOU guard inside break_stale: after winning the
+        // rename, the breaker re-checks and must hand back a lock that
+        // is *not* past the threshold and whose holder is alive (a new
+        // holder squeezed in between the staleness check and the
+        // rename). A huge threshold plus our own — live — PID
+        // reproduces exactly that re-check outcome.
+        let dir = crate::util::TempDir::new().unwrap();
+        let target = dir.path().join("runs.jsonl");
+        let lock_path = FileLock::lock_path(&target);
+        let holder = format!("{}\n", std::process::id());
+        std::fs::write(&lock_path, &holder).unwrap();
+        FileLock::break_stale(&lock_path, Duration::from_secs(3600));
+        assert!(
+            lock_path.exists(),
+            "a fresh live-holder lock must be handed back, not destroyed"
+        );
+        let captive: Vec<_> = std::fs::read_dir(dir.path())
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".stale."))
+            .collect();
+        assert!(captive.is_empty(), "hand-back must not leave a captive: {captive:?}");
+        assert_eq!(std::fs::read_to_string(&lock_path).unwrap(), holder);
+    }
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn dead_holder_lock_is_broken_immediately() {
+        // A SIGKILLed daemon can leave a *fresh* lock behind; its
+        // restart must not stall behind STALE_AFTER. PID 999999999 is
+        // beyond any Linux pid_max, so the recorded holder is
+        // certainly gone — acquire at the production threshold must
+        // break the lock at once instead of timing out.
+        let dir = crate::util::TempDir::new().unwrap();
+        let target = dir.path().join("runs.jsonl");
+        let lock_path = FileLock::lock_path(&target);
+        std::fs::write(&lock_path, "999999999\n").unwrap();
+        let t0 = Instant::now();
+        let lock = FileLock::acquire(&target).unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "dead-holder lock took {:?} to break",
+            t0.elapsed()
+        );
+        drop(lock);
+        assert!(!lock_path.exists());
     }
 }

@@ -13,6 +13,9 @@
 //!   `xbench run --record` appends, nothing ever rewrites;
 //! - [`lock`]: the advisory file lock serializing concurrent appenders
 //!   (daemon + ad-hoc CLI runs) so lines never interleave;
+//! - [`journal`]: the daemon's durable job journal (`queue.jsonl`) —
+//!   one line per job transition in the same JSONL discipline, so
+//!   `xbench serve` replays its queue after a crash or restart;
 //! - [`query`]: filters (model/mode/compiler/batch/time-window/run) and
 //!   per-key aggregations (latest, median, series) over loaded records.
 //!
@@ -34,11 +37,100 @@
 //! never enter the hash.
 
 pub mod archive;
+pub mod journal;
 pub mod lock;
 pub mod query;
 pub mod record;
 
 pub use archive::Archive;
+pub use journal::{JobEvent, Journal};
 pub use lock::FileLock;
 pub use query::{latest_per_key, median_iter_per_key, run_summaries, series, Filter, RunSummary};
 pub use record::{bench_key_of, config_hash, fmt_utc, RunMeta, RunRecord, SCHEMA_VERSION};
+
+use anyhow::{Context as _, Result};
+use std::io::Write as _;
+use std::path::Path;
+
+/// Append pre-serialized JSONL bytes to `path` under the advisory file
+/// lock, creating parent directories on first use. The one append
+/// implementation the run archive and the daemon job journal share, so
+/// the locking discipline and crash hygiene cannot diverge.
+///
+/// Crash hygiene: a writer SIGKILLed mid-`write` can leave a torn
+/// final line. Welding new lines onto those bytes would turn a
+/// recoverable tail (readers drop or reject only the last line) into
+/// *mid-file* corruption that fails every later load — so the torn
+/// tail is truncated first. Any live writer would be holding the lock,
+/// so a torn tail observed here is certainly a crash artifact, and its
+/// bytes are an incomplete record by definition.
+pub(crate) fn append_jsonl(path: &Path, buf: &[u8]) -> Result<()> {
+    let _lock = FileLock::acquire(path)?;
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+    }
+    heal_torn_tail(path)?;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    f.write_all(buf).with_context(|| format!("appending to {}", path.display()))
+}
+
+/// Repair an unterminated final line (no trailing newline) before an
+/// append. Must be called under the file lock. The common case — file
+/// absent, empty, or ending in `\n` — costs two seeks and one byte.
+///
+/// Two very different things can leave such a tail, told apart by
+/// parsing it: a *partial* record from a crashed writer (invalid JSON
+/// — truncated, the bytes are garbage by definition), or a *complete*
+/// record whose newline was stripped by a hand edit or an import
+/// (valid JSON — `load` parses it today, so destroying it would be
+/// silent data loss; it gets its newline appended instead).
+fn heal_torn_tail(path: &Path) -> Result<()> {
+    use std::io::{Read as _, Seek as _, SeekFrom};
+    let mut f = match std::fs::OpenOptions::new().read(true).write(true).open(path) {
+        Ok(f) => f,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(()),
+        Err(e) => return Err(e).with_context(|| format!("opening {}", path.display())),
+    };
+    let len = f.seek(SeekFrom::End(0))?;
+    if len == 0 {
+        return Ok(());
+    }
+    f.seek(SeekFrom::End(-1))?;
+    let mut last = [0u8; 1];
+    f.read_exact(&mut last)?;
+    if last[0] == b'\n' {
+        return Ok(());
+    }
+    f.seek(SeekFrom::Start(0))?;
+    let mut bytes = Vec::with_capacity(len as usize);
+    f.read_to_end(&mut bytes)?;
+    let keep = bytes
+        .iter()
+        .rposition(|&b| b == b'\n')
+        .map(|p| p as u64 + 1)
+        .unwrap_or(0);
+    let tail_is_complete_record = std::str::from_utf8(&bytes[keep as usize..])
+        .ok()
+        .map_or(false, |s| crate::util::json::parse(s.trim()).is_ok());
+    if tail_is_complete_record {
+        f.seek(SeekFrom::End(0))?;
+        return f
+            .write_all(b"\n")
+            .with_context(|| format!("terminating the final line of {}", path.display()));
+    }
+    f.set_len(keep)
+        .with_context(|| format!("truncating torn final line in {}", path.display()))?;
+    eprintln!(
+        "{}: truncated a torn final line ({} bytes) left by a crashed writer",
+        path.display(),
+        len - keep
+    );
+    Ok(())
+}

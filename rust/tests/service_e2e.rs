@@ -7,7 +7,7 @@ use std::path::Path;
 
 use xbench::config::RunConfig;
 use xbench::service::{self, Daemon, JobSpec, JobVerb};
-use xbench::store::Archive;
+use xbench::store::{Archive, Journal};
 use xbench::suite::Suite;
 use xbench::runtime::Manifest;
 use xbench::util::TempDir;
@@ -29,7 +29,8 @@ fn daemon_round_trip_submit_queue_result_archive() {
     let suite = Suite::new(Manifest::load(dir.path()).unwrap());
     let archive_path = dir.path().join("runs.jsonl");
 
-    let daemon = Daemon::bind(0, dir.path().to_path_buf()).unwrap();
+    let daemon =
+        Daemon::bind(0, dir.path().to_path_buf(), Journal::beside(&archive_path)).unwrap();
     let port = daemon.port();
     assert_ne!(port, 0);
     let base_cfg = fast_cfg(dir.path());
@@ -117,7 +118,8 @@ fn second_submission_reuses_the_resident_executor() {
     let suite = Suite::new(Manifest::load(dir.path()).unwrap());
     let archive_path = dir.path().join("runs.jsonl");
 
-    let daemon = Daemon::bind(0, dir.path().to_path_buf()).unwrap();
+    let daemon =
+        Daemon::bind(0, dir.path().to_path_buf(), Journal::beside(&archive_path)).unwrap();
     let port = daemon.port();
     let server = std::thread::spawn({
         let base_cfg = fast_cfg(dir.path());
@@ -156,6 +158,123 @@ fn second_submission_reuses_the_resident_executor() {
 
     let records = Archive::new(&archive_path).load().unwrap();
     assert_eq!(records.len(), 4, "two jobs x two configs");
+
+    service::shutdown(port).unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn silent_client_does_not_block_other_requests() {
+    // Regression test for accept-loop head-of-line blocking: a client
+    // that connects and never writes used to stall the (inline)
+    // connection handler for the full read timeout, freezing
+    // queue/result/serve --stop for every other client.
+    let dir = TempDir::new().unwrap();
+    xbench::suite::synth::write_synthetic_artifacts(dir.path(), 20230102, false).unwrap();
+    let suite = Suite::new(Manifest::load(dir.path()).unwrap());
+    let archive_path = dir.path().join("runs.jsonl");
+    let daemon =
+        Daemon::bind(0, dir.path().to_path_buf(), Journal::beside(&archive_path)).unwrap();
+    let port = daemon.port();
+    let server = std::thread::spawn({
+        let base_cfg = fast_cfg(dir.path());
+        let archive = Archive::new(&archive_path);
+        move || daemon.run(suite, archive, base_cfg)
+    });
+    service::ping(port).unwrap(); // accept loop is live
+
+    let silent = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+    let t0 = std::time::Instant::now();
+    let jobs = service::queue_status(port).unwrap();
+    let elapsed = t0.elapsed();
+    assert!(jobs.is_empty());
+    assert!(
+        elapsed < std::time::Duration::from_secs(2),
+        "queue answered in {elapsed:?} behind a silent client (must be ~instant)"
+    );
+    drop(silent);
+
+    service::shutdown(port).unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn gated_ci_job_regressions_fail_the_result_exit_code() {
+    let dir = TempDir::new().unwrap();
+    xbench::suite::synth::write_synthetic_artifacts(dir.path(), 20230102, false).unwrap();
+    let suite = Suite::new(Manifest::load(dir.path()).unwrap());
+    let archive_path = dir.path().join("runs.jsonl");
+    let daemon =
+        Daemon::bind(0, dir.path().to_path_buf(), Journal::beside(&archive_path)).unwrap();
+    let port = daemon.port();
+    let server = std::thread::spawn({
+        let base_cfg = fast_cfg(dir.path());
+        let archive = Archive::new(&archive_path);
+        move || daemon.run(suite, archive, base_cfg)
+    });
+
+    // Seed the archive with a real measured run of the gated model.
+    let mut seed = JobSpec::default_run();
+    seed.repeats = 1;
+    seed.iterations = 1;
+    seed.warmup = 0;
+    seed.models = vec!["deeprec_ae".into()];
+    seed.run_id = Some("seed".into());
+    let id = service::submit(port, seed).unwrap();
+    let (view, _) = service::fetch_result(port, &id, true, 300).unwrap();
+    assert_eq!(view.req_str("status").unwrap(), "done");
+
+    // Plant synthetic baselines around it: "fastbase" is 1000x faster
+    // than anything this machine measures (guaranteed regressions),
+    // "slowbase" 1000x slower (guaranteed clean gate). Memory fields
+    // stay identical so only the time gate can fire.
+    let archive = Archive::new(&archive_path);
+    let records = archive.load().unwrap();
+    let mut planted = Vec::new();
+    for r in records.iter().filter(|r| r.run_id == "seed") {
+        let mut f = r.clone();
+        f.run_id = "fastbase".into();
+        f.iter_secs /= 1000.0;
+        f.repeats_secs = f.repeats_secs.iter().map(|s| s / 1000.0).collect();
+        f.throughput *= 1000.0;
+        planted.push(f);
+        let mut s = r.clone();
+        s.run_id = "slowbase".into();
+        s.iter_secs *= 1000.0;
+        s.repeats_secs = s.repeats_secs.iter().map(|x| x * 1000.0).collect();
+        s.throughput /= 1000.0;
+        planted.push(s);
+    }
+    assert!(!planted.is_empty());
+    archive.append(&planted).unwrap();
+
+    let gated = |baseline: &str| {
+        let mut spec = JobSpec::default_run();
+        spec.verb = JobVerb::Ci;
+        spec.repeats = 1;
+        spec.iterations = 1;
+        spec.warmup = 0;
+        spec.models = vec!["deeprec_ae".into()];
+        spec.baseline = Some(baseline.into());
+        service::submit(port, spec).unwrap()
+    };
+
+    // A regressing gate: the job settles `done` with a non-empty
+    // regressions payload, and `xbench result` exits non-zero (after
+    // rendering) so scripts can gate on it.
+    let bad = gated("fastbase");
+    let (view, result) = service::fetch_result(port, &bad, true, 300).unwrap();
+    assert_eq!(view.req_str("status").unwrap(), "done");
+    assert!(!result.unwrap().req_array("regressions").unwrap().is_empty());
+    let err = xbench::cli::result::cmd(port, None, &bad, false, 0).unwrap_err();
+    assert!(format!("{err:#}").contains("gate failed"), "{err:#}");
+
+    // A clean gate still exits zero.
+    let good = gated("slowbase");
+    let (view, result) = service::fetch_result(port, &good, true, 300).unwrap();
+    assert_eq!(view.req_str("status").unwrap(), "done");
+    assert!(result.unwrap().req_array("regressions").unwrap().is_empty());
+    xbench::cli::result::cmd(port, None, &good, true, 300).unwrap();
 
     service::shutdown(port).unwrap();
     server.join().unwrap().unwrap();

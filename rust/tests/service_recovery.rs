@@ -1,0 +1,298 @@
+//! Crash-safe queue recovery: the daemon's durable job journal
+//! (`queue.jsonl`) must survive a SIGKILL and a restart — jobs keep
+//! their ids, settled jobs keep answering `result`, interrupted jobs
+//! retry exactly once, and shutdown abandonment is journaled so a
+//! restart reports it instead of resurrecting the job.
+
+use std::io::BufRead as _;
+use std::path::Path;
+use std::process::{Child, Command, Stdio};
+
+use xbench::config::RunConfig;
+use xbench::service::{self, Daemon, JobSpec};
+use xbench::store::journal::JobEvent;
+use xbench::store::{Archive, Journal};
+use xbench::suite::Suite;
+use xbench::runtime::Manifest;
+use xbench::util::TempDir;
+
+fn fast_cfg(dir: &Path) -> RunConfig {
+    RunConfig {
+        repeats: 1,
+        iterations: 1,
+        warmup: 0,
+        artifacts: dir.to_path_buf(),
+        ..Default::default()
+    }
+}
+
+fn fast_spec(models: &[&str]) -> JobSpec {
+    let mut spec = JobSpec::default_run();
+    spec.repeats = 1;
+    spec.iterations = 1;
+    spec.warmup = 0;
+    spec.models = models.iter().map(|m| m.to_string()).collect();
+    spec
+}
+
+/// Spawn the real `xbench serve` binary on an ephemeral port and parse
+/// the bound port from its startup banner. Stderr keeps draining on a
+/// background thread so the daemon can never block on a full pipe.
+fn spawn_daemon(arts: &Path) -> (Child, u16) {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_xbench"))
+        .args(["serve", "--port", "0", "--artifacts"])
+        .arg(arts)
+        .stdout(Stdio::null())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawning xbench serve");
+    let stderr = child.stderr.take().unwrap();
+    let mut reader = std::io::BufReader::new(stderr);
+    let mut port = None;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line).unwrap_or(0) == 0 {
+            break; // daemon died before listening
+        }
+        if let Some(rest) = line.split("listening on 127.0.0.1:").nth(1) {
+            port = rest.split_whitespace().next().and_then(|p| p.parse::<u16>().ok());
+            break;
+        }
+    }
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        while reader.read_line(&mut sink).map(|n| n > 0).unwrap_or(false) {
+            sink.clear();
+        }
+    });
+    let port = port.unwrap_or_else(|| {
+        let _ = child.kill();
+        panic!("daemon did not report a bound port");
+    });
+    (child, port)
+}
+
+#[test]
+fn sigkill_restart_resumes_the_queue_and_answers_for_old_jobs() {
+    let dir = TempDir::new().unwrap();
+    xbench::suite::synth::write_synthetic_artifacts(dir.path(), 20230102, false).unwrap();
+    let (mut child, port) = spawn_daemon(dir.path());
+
+    // Job 1 completes before the crash.
+    let j1 = service::submit(port, fast_spec(&["deeprec_ae"])).unwrap();
+    assert_eq!(j1, "job-0001");
+    let (view, result) = service::fetch_result(port, &j1, true, 300).unwrap();
+    assert_eq!(view.req_str("status").unwrap(), "done");
+    let run1 = result.unwrap().req_str("run_id").unwrap().to_string();
+
+    // Jobs 2–3 are acked (journaled) and then the daemon is SIGKILLed —
+    // no drain, no abandonment, exactly a crash.
+    let j2 = service::submit(port, fast_spec(&["dlrm_tiny"])).unwrap();
+    let j3 = service::submit(port, fast_spec(&["deeprec_ae"])).unwrap();
+    child.kill().unwrap();
+    child.wait().unwrap();
+
+    // Restart against the same artifacts dir: the journal replays.
+    let (mut child2, port2) = spawn_daemon(dir.path());
+    let jobs = service::queue_status(port2).unwrap();
+    let ids: Vec<String> =
+        jobs.iter().map(|j| j.req_str("id").unwrap().to_string()).collect();
+    assert_eq!(ids, vec!["job-0001", "job-0002", "job-0003"]);
+
+    // The pre-restart job answers read-only with its original payload.
+    let (v1, r1) = service::fetch_result(port2, &j1, false, 0).unwrap();
+    assert_eq!(v1.req_str("status").unwrap(), "done");
+    assert_eq!(
+        v1.req_usize("done").unwrap(),
+        v1.req_usize("total").unwrap(),
+        "restored progress must read n/n like an uninterrupted run"
+    );
+    assert_eq!(r1.expect("restored result payload").req_str("run_id").unwrap(), run1);
+
+    // Jobs 2–3 (pending or interrupted at crash time) run to completion,
+    // and their archive records are shaped like any uninterrupted run's.
+    let archive = Archive::new(dir.path().join("runs.jsonl"));
+    for j in [&j2, &j3] {
+        let (view, result) = service::fetch_result(port2, j, true, 300).unwrap();
+        assert_eq!(view.req_str("status").unwrap(), "done", "{j}");
+        let payload = result.expect("completed job payload");
+        let run_id = payload.req_str("run_id").unwrap();
+        let records = archive.load().unwrap();
+        let mine: Vec<_> = records.iter().filter(|r| r.run_id == run_id).collect();
+        assert_eq!(
+            mine.len(),
+            payload.req_array("records").unwrap().len(),
+            "{j}: archived records must match the reported payload"
+        );
+        assert!(mine.iter().all(|r| r.schema == xbench::store::SCHEMA_VERSION));
+    }
+
+    // Ids stay journal-monotonic across the restart.
+    let j4 = service::submit(port2, fast_spec(&["deeprec_ae"])).unwrap();
+    assert_eq!(j4, "job-0004");
+
+    service::shutdown(port2).unwrap();
+    let status = child2.wait().unwrap();
+    assert!(status.success(), "daemon exited {status:?}");
+}
+
+#[test]
+fn handwritten_journal_replays_retry_once_then_give_up() {
+    // Deterministic version of the crash matrix: job-0001 died mid-run
+    // (one retry → completes), job-0002 died mid-*retry* (gives up →
+    // failed without running a third time).
+    let dir = TempDir::new().unwrap();
+    xbench::suite::synth::write_synthetic_artifacts(dir.path(), 20230102, false).unwrap();
+    let archive_path = dir.path().join("runs.jsonl");
+    let journal = Journal::beside(&archive_path);
+    let spec = fast_spec(&["deeprec_ae"]).to_json();
+    for ev in [
+        JobEvent::Submitted { job: "job-0001".into(), ts: 1, spec: spec.clone() },
+        JobEvent::Started { job: "job-0001".into(), ts: 2 },
+        JobEvent::Submitted { job: "job-0002".into(), ts: 3, spec: spec.clone() },
+        JobEvent::Started { job: "job-0002".into(), ts: 4 },
+        JobEvent::Interrupted { job: "job-0002".into(), ts: 5 },
+        JobEvent::Started { job: "job-0002".into(), ts: 6 },
+    ] {
+        journal.append(&ev).unwrap();
+    }
+
+    let daemon = Daemon::bind(0, dir.path().to_path_buf(), journal).unwrap();
+    let port = daemon.port();
+    let suite = Suite::new(Manifest::load(dir.path()).unwrap());
+    let server = std::thread::spawn({
+        let archive = Archive::new(&archive_path);
+        let cfg = fast_cfg(dir.path());
+        move || daemon.run(suite, archive, cfg)
+    });
+
+    let (v1, r1) = service::fetch_result(port, "job-0001", true, 300).unwrap();
+    assert_eq!(v1.req_str("status").unwrap(), "done");
+    assert_eq!(
+        v1.req_usize("interruptions").unwrap(),
+        1,
+        "the survived interruption must be visible in the status row"
+    );
+    assert!(r1.is_some(), "retried job must carry a result payload");
+
+    let (v2, r2) = service::fetch_result(port, "job-0002", false, 0).unwrap();
+    assert_eq!(v2.req_str("status").unwrap(), "failed");
+    assert!(v2.req_str("error").unwrap().contains("giving up"), "{v2:?}");
+    assert!(r2.is_none());
+
+    service::shutdown(port).unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn second_daemon_on_the_same_journal_is_refused() {
+    // Two daemons replaying and appending one queue.jsonl would
+    // interleave transitions into sequences replay() rejects; the
+    // owner sidecar must refuse the second daemon at startup.
+    let dir = TempDir::new().unwrap();
+    xbench::suite::synth::write_synthetic_artifacts(dir.path(), 20230102, false).unwrap();
+    let archive_path = dir.path().join("runs.jsonl");
+
+    let daemon =
+        Daemon::bind(0, dir.path().to_path_buf(), Journal::beside(&archive_path)).unwrap();
+    let port = daemon.port();
+    let suite = Suite::new(Manifest::load(dir.path()).unwrap());
+    let server = std::thread::spawn({
+        let archive = Archive::new(&archive_path);
+        let cfg = fast_cfg(dir.path());
+        move || daemon.run(suite, archive, cfg)
+    });
+    service::ping(port).unwrap(); // daemon 1 owns the journal now
+    let j1 = service::submit(port, fast_spec(&["deeprec_ae"])).unwrap();
+
+    // A second daemon — even a --fresh one — must be refused before it
+    // can touch the journal (--fresh resets only after taking
+    // ownership; otherwise it would delete a live daemon's journal).
+    let mut daemon2 =
+        Daemon::bind(0, dir.path().to_path_buf(), Journal::beside(&archive_path)).unwrap();
+    daemon2.set_fresh(true);
+    let suite2 = Suite::new(Manifest::load(dir.path()).unwrap());
+    let err = daemon2
+        .run(suite2, Archive::new(&archive_path), fast_cfg(dir.path()))
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("owns journal"), "{err:#}");
+    let journal = Journal::beside(&archive_path);
+    assert!(
+        !journal.load().unwrap().is_empty(),
+        "the refused --fresh daemon must not have touched the journal"
+    );
+
+    // Daemon 1 was never disturbed: its job still completes.
+    let (v1, _) = service::fetch_result(port, &j1, true, 300).unwrap();
+    assert_eq!(v1.req_str("status").unwrap(), "done");
+
+    service::shutdown(port).unwrap();
+    server.join().unwrap().unwrap();
+    // Clean shutdown released ownership; a fresh daemon may start.
+    assert!(
+        !dir.path().join("queue.jsonl.owner").exists(),
+        "owner sidecar must be removed on clean shutdown"
+    );
+}
+
+#[test]
+fn shutdown_journals_abandonment_and_restart_reports_it() {
+    let dir = TempDir::new().unwrap();
+    xbench::suite::synth::write_synthetic_artifacts(dir.path(), 20230102, false).unwrap();
+    let archive_path = dir.path().join("runs.jsonl");
+
+    let daemon =
+        Daemon::bind(0, dir.path().to_path_buf(), Journal::beside(&archive_path)).unwrap();
+    let port = daemon.port();
+    let suite = Suite::new(Manifest::load(dir.path()).unwrap());
+    let server = std::thread::spawn({
+        let archive = Archive::new(&archive_path);
+        let cfg = fast_cfg(dir.path());
+        move || daemon.run(suite, archive, cfg)
+    });
+
+    // Job 1 (the whole suite) keeps the executor busy; job 2 is still
+    // pending when shutdown lands, so it must be journaled abandoned.
+    let j1 = service::submit(port, fast_spec(&[])).unwrap();
+    // Wait for the executor to claim job 1, so shutdown can only ever
+    // abandon job 2.
+    for _ in 0..500 {
+        let jobs = service::queue_status(port).unwrap();
+        if jobs[0].req_str("status").unwrap() != "pending" {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    let j2 = service::submit(port, fast_spec(&["deeprec_ae"])).unwrap();
+    service::shutdown(port).unwrap();
+    server.join().unwrap().unwrap();
+
+    // Restart (in-process) on the same journal: the finished job and
+    // the abandoned verdict are both restored, not resurrected.
+    let daemon =
+        Daemon::bind(0, dir.path().to_path_buf(), Journal::beside(&archive_path)).unwrap();
+    let port = daemon.port();
+    let suite = Suite::new(Manifest::load(dir.path()).unwrap());
+    let server = std::thread::spawn({
+        let archive = Archive::new(&archive_path);
+        let cfg = fast_cfg(dir.path());
+        move || daemon.run(suite, archive, cfg)
+    });
+
+    let (v1, _) = service::fetch_result(port, &j1, true, 300).unwrap();
+    assert_eq!(v1.req_str("status").unwrap(), "done", "shutdown finishes the running job");
+    let (v2, r2) = service::fetch_result(port, &j2, true, 300).unwrap();
+    assert_eq!(v2.req_str("status").unwrap(), "abandoned");
+    assert!(r2.is_none());
+    // The CLI surfaces abandonment as a non-zero exit for scripts.
+    let err = xbench::cli::result::cmd(port, None, &j2, false, 0).unwrap_err();
+    assert!(format!("{err:#}").contains("abandoned"), "{err:#}");
+
+    // Numbering continues past the abandoned job.
+    let j3 = service::submit(port, fast_spec(&["deeprec_ae"])).unwrap();
+    assert_eq!(j3, "job-0003");
+
+    service::shutdown(port).unwrap();
+    server.join().unwrap().unwrap();
+}
