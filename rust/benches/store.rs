@@ -1,84 +1,102 @@
 //! Archive read/query throughput probe.
 //!
-//! `cargo bench --bench store` — generates a synthetic multi-run
-//! archive, measures append / load / filter / aggregate throughput, and
-//! writes `BENCH_store.json` (machine-readable, consumed by CI) plus a
-//! human table on stdout.
+//! `cargo bench --bench store` — two sections, both written to
+//! `BENCH_store.json` (machine-readable, consumed by CI) plus human
+//! tables on stdout:
+//!
+//! 1. **Throughput** over a synthetic multi-run archive: append / load
+//!    / filter / aggregate records-per-second (the legacy fields).
+//! 2. **Point-query ladder** at 1k / 10k / 100k records: a single-run
+//!    query via the full load-then-filter path vs the sidecar index
+//!    ([`xbench::store::index`]) — cold (index rebuilt from scratch)
+//!    and warm (sidecar reused). The `speedup` field is the
+//!    full-scan/indexed wall-time ratio; the index exists to make this
+//!    ≥10x at the 100k scale and growing with the archive.
 
 use std::time::Instant;
 
-use xbench::report::Table;
-use xbench::store::{latest_per_key, run_summaries, Archive, Filter, RunMeta, RunRecord};
+use xbench::store::{index, latest_per_key, run_summaries, synth, Archive, Filter, RunRecord};
 use xbench::util::{Json, TempDir};
 
-const RUNS: usize = 50;
-const MODELS: usize = 40;
-const MODES: [&str; 2] = ["infer", "train"];
-const COMPILERS: [&str; 2] = ["fused", "eager"];
-
-fn synth_records() -> Vec<Vec<RunRecord>> {
-    let mut out = Vec::with_capacity(RUNS);
-    for run in 0..RUNS {
-        let meta = RunMeta {
-            run_id: format!("run-{run:04}"),
-            timestamp: 1_700_000_000 + run as u64 * 86_400,
-            git_commit: format!("{run:07x}"),
-            host: "bench-host".into(),
-            config_hash: "cafebabecafebabe".into(),
-            note: "".into(),
-            jobs: None,
-            shard: None,
-        };
-        let mut records = Vec::with_capacity(MODELS * MODES.len() * COMPILERS.len());
-        for m in 0..MODELS {
-            for (mi, mode) in MODES.iter().enumerate() {
-                for (ci, compiler) in COMPILERS.iter().enumerate() {
-                    let secs = 0.001 * (1.0 + m as f64) * (1.0 + mi as f64) * (1.0 + ci as f64);
-                    records.push(RunRecord {
-                        schema: 2,
-                        seq: None,
-                        jobs: None,
-                        shard: None,
-                        run_id: meta.run_id.clone(),
-                        timestamp: meta.timestamp,
-                        git_commit: meta.git_commit.clone(),
-                        host: meta.host.clone(),
-                        config_hash: meta.config_hash.clone(),
-                        note: meta.note.clone(),
-                        model: format!("model_{m:03}"),
-                        domain: "nlp".into(),
-                        mode: mode.to_string(),
-                        compiler: compiler.to_string(),
-                        batch: 4,
-                        iter_secs: secs,
-                        repeats_secs: vec![secs; 5],
-                        throughput: 4.0 / secs,
-                        active: 0.6,
-                        movement: 0.3,
-                        idle: 0.1,
-                        host_bytes: 4096,
-                        device_bytes: 8192,
-                    });
-                }
-            }
-        }
-        out.push(records);
-    }
-    out
-}
+/// Records per synthetic run (40 models × infer/train × fused/eager).
+const PER_RUN: usize = 160;
+const SCALES: [usize; 3] = [1_000, 10_000, 100_000];
 
 fn main() -> anyhow::Result<()> {
     let dir = TempDir::new()?;
     let archive = Archive::new(dir.path().join("runs.jsonl"));
-    let runs = synth_records();
-    let total: usize = runs.iter().map(|r| r.len()).sum();
+    let idx = index::sidecar_path(archive.path());
 
-    let t0 = Instant::now();
-    for records in &runs {
-        archive.append(records)?;
+    // -- point-query ladder --------------------------------------------------
+    // The archive grows cumulatively (1k → 10k → 100k); at each scale
+    // a single run (PER_RUN records) is point-queried both ways and
+    // the outputs are asserted identical.
+    let mut ladder = Vec::new();
+    let mut ladder_rows = Vec::new();
+    let mut appended = 0usize;
+    let mut append_secs = 0.0f64;
+    for scale in SCALES {
+        while appended < scale {
+            let batch = synth::synth_run("run", appended / PER_RUN, PER_RUN, 1_700_000_000);
+            let t = Instant::now();
+            archive.append(&batch)?;
+            append_secs += t.elapsed().as_secs_f64();
+            appended += batch.len();
+        }
+        let target = format!("run-{:05}", (appended / PER_RUN) / 2); // a mid-archive run
+        let filter = Filter::for_run(&target);
+
+        // Full scan: parse every line, keep one run.
+        let t = Instant::now();
+        let records = archive.load()?;
+        let full: Vec<RunRecord> =
+            filter.apply(&records).into_iter().cloned().collect();
+        let full_scan_secs = t.elapsed().as_secs_f64();
+        assert_eq!(full.len(), PER_RUN);
+        drop(records);
+
+        // Cold indexed: sidecar absent, the query pays the rebuild.
+        let _ = std::fs::remove_file(&idx);
+        let t = Instant::now();
+        let cold = archive.scan(&filter)?;
+        let cold_index_secs = t.elapsed().as_secs_f64();
+        assert_eq!(cold, full, "indexed scan must be identical to load+filter");
+
+        // Warm indexed: sidecar reused — the steady state of a nightly
+        // archive queried many times between appends.
+        let t = Instant::now();
+        let warm = archive.scan(&filter)?;
+        let indexed_secs = t.elapsed().as_secs_f64();
+        assert_eq!(warm, full);
+
+        let speedup = full_scan_secs / indexed_secs.max(1e-9);
+        ladder_rows.push(vec![
+            appended.to_string(),
+            format!("{:.2}ms", full_scan_secs * 1e3),
+            format!("{:.2}ms", cold_index_secs * 1e3),
+            format!("{:.2}ms", indexed_secs * 1e3),
+            format!("{speedup:.1}x"),
+        ]);
+        ladder.push(Json::obj(vec![
+            ("records", Json::num(appended as f64)),
+            ("full_scan_ms", Json::num(full_scan_secs * 1e3)),
+            ("cold_index_ms", Json::num(cold_index_secs * 1e3)),
+            ("indexed_ms", Json::num(indexed_secs * 1e3)),
+            ("speedup", Json::num(speedup)),
+        ]));
     }
-    let append_secs = t0.elapsed().as_secs_f64();
+    let total = appended;
 
+    let mut lt = xbench::report::Table::new(
+        format!("Single-run point query, full scan vs sidecar index ({PER_RUN}-record runs)"),
+        &["records", "full scan", "indexed (cold)", "indexed (warm)", "speedup"],
+    );
+    for row in ladder_rows {
+        lt.row(row);
+    }
+    print!("{}", lt.render());
+
+    // -- legacy throughput section (final scale) -----------------------------
     let t1 = Instant::now();
     let records = archive.load()?;
     let load_secs = t1.elapsed().as_secs_f64();
@@ -92,23 +110,27 @@ fn main() -> anyhow::Result<()> {
     }
     .apply(&records);
     let filter_secs = t2.elapsed().as_secs_f64();
-    assert_eq!(filtered.len(), RUNS * COMPILERS.len());
+    assert!(!filtered.is_empty());
 
     let t3 = Instant::now();
     let latest = latest_per_key(records.iter());
     let aggregate_secs = t3.elapsed().as_secs_f64();
-    assert_eq!(latest.len(), MODELS * MODES.len() * COMPILERS.len());
+    assert_eq!(latest.len(), PER_RUN);
 
     let t4 = Instant::now();
     let summaries = run_summaries(&records);
     let summarize_secs = t4.elapsed().as_secs_f64();
-    assert_eq!(summaries.len(), RUNS);
+    assert_eq!(summaries.len(), total / PER_RUN);
 
     let bytes = std::fs::metadata(archive.path())?.len();
     let rps = |secs: f64| total as f64 / secs.max(1e-9);
 
-    let mut t = Table::new(
-        format!("Archive throughput ({total} records, {RUNS} runs, {} KiB)", bytes / 1024),
+    let mut t = xbench::report::Table::new(
+        format!(
+            "Archive throughput ({total} records, {} runs, {} KiB)",
+            total / PER_RUN,
+            bytes / 1024
+        ),
         &["operation", "wall", "records/s"],
     );
     for (name, secs) in [
@@ -128,13 +150,14 @@ fn main() -> anyhow::Result<()> {
 
     let json = Json::obj(vec![
         ("records", Json::num(total as f64)),
-        ("runs", Json::num(RUNS as f64)),
+        ("runs", Json::num((total / PER_RUN) as f64)),
         ("archive_bytes", Json::num(bytes as f64)),
         ("append_records_per_sec", Json::num(rps(append_secs))),
         ("load_records_per_sec", Json::num(rps(load_secs))),
         ("filter_records_per_sec", Json::num(rps(filter_secs))),
         ("latest_per_key_records_per_sec", Json::num(rps(aggregate_secs))),
         ("run_summaries_records_per_sec", Json::num(rps(summarize_secs))),
+        ("point_query", Json::Arr(ladder)),
     ]);
     std::fs::write("BENCH_store.json", json.to_json_pretty())?;
     eprintln!("wrote BENCH_store.json");

@@ -122,8 +122,10 @@ impl BaselineStore {
     /// baseline after a clean `xbench run --record` — no baseline JSON
     /// to curate or go stale.
     pub fn from_archive(archive: &crate::store::Archive, selector: &str) -> Result<Self> {
-        let records = archive.load()?;
-        let run_id = archive.resolve_run(&records, selector)?;
+        // Point query: resolve off the index, then scan only the
+        // selected run's records instead of loading the archive.
+        let run_id = archive.resolve(selector)?;
+        let records = archive.scan(&crate::store::Filter::for_run(&run_id))?;
         Self::from_records(&records, &run_id)
     }
 

@@ -60,10 +60,13 @@ pub fn cmd(ctx: &Ctx, store: &ArtifactStore, mut cfg: RunConfig, opts: Opts) -> 
 
     let baselines = match &opts.baseline_from_archive {
         Some(selector) => {
-            // One archive read serves baseline derivation and the
-            // protocol/coverage sanity checks below.
-            let records = ctx.archive.load()?;
-            let run_id = ctx.archive.resolve_run(&records, selector)?;
+            // One indexed point query serves baseline derivation and
+            // the protocol/coverage sanity checks below — only the
+            // selected run's records are parsed, however large the
+            // nightly archive has grown.
+            let run_id = ctx.archive.resolve(selector)?;
+            let records =
+                ctx.archive.scan(&crate::store::Filter::for_run(&run_id))?;
             let baselines = BaselineStore::from_records(&records, &run_id)?;
             eprintln!(
                 "baselines: {} entries from archive run {run_id} ({})",
@@ -74,7 +77,7 @@ pub fn cmd(ctx: &Ctx, store: &ArtifactStore, mut cfg: RunConfig, opts: Opts) -> 
             // nightly share the measurement protocol (same contract
             // `cmp` warns about).
             let want = crate::store::config_hash(&cfg);
-            if let Some(r) = records.iter().find(|r| r.run_id == run_id) {
+            if let Some(r) = records.first() {
                 if r.config_hash != want {
                     eprintln!(
                         "warning: archive run {run_id} was measured under config {} but this \

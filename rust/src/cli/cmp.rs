@@ -7,7 +7,7 @@ use std::path::Path;
 
 use crate::metrics;
 use crate::report::{fmt_ratio, fmt_secs, Table};
-use crate::store::{fmt_utc, latest_per_key, run_summaries, Archive, Filter, RunRecord};
+use crate::store::{fmt_utc, latest_per_key, Archive, Filter, RunRecord};
 
 use super::emit_table;
 
@@ -18,12 +18,13 @@ pub fn cmd(
     run_b: &str,
     threshold: f64,
 ) -> Result<()> {
-    let records = archive.load()?;
-    let a_id = archive.resolve_run(&records, run_a)?;
-    let b_id = archive.resolve_run(&records, run_b)?;
+    // Two point queries, not a full load: selectors resolve off the
+    // sidecar index and only the two compared runs' records are parsed.
+    let a_id = archive.resolve(run_a)?;
+    let b_id = archive.resolve(run_b)?;
     anyhow::ensure!(a_id != b_id, "both selectors resolve to {a_id}");
 
-    for s in run_summaries(&records) {
+    for s in archive.summaries()? {
         if s.run_id == a_id || s.run_id == b_id {
             let tag = if s.run_id == a_id { "A" } else { "B" };
             eprintln!(
@@ -37,8 +38,10 @@ pub fn cmd(
         }
     }
 
-    let a = latest_per_key(Filter::for_run(&a_id).apply(&records).into_iter());
-    let b = latest_per_key(Filter::for_run(&b_id).apply(&records).into_iter());
+    let a_records = archive.scan(&Filter::for_run(&a_id))?;
+    let b_records = archive.scan(&Filter::for_run(&b_id))?;
+    let a = latest_per_key(a_records.iter());
+    let b = latest_per_key(b_records.iter());
     warn_config_drift(&a, &b);
 
     // Join on bench key; rank worst regression first (rebar's cmp order).

@@ -8,17 +8,18 @@ use std::path::Path;
 use crate::ci::DEFAULT_THRESHOLD;
 use crate::metrics;
 use crate::report::{fmt_bytes, fmt_secs, Table};
-use crate::store::{fmt_utc, median_iter_per_key, series, Archive};
+use crate::store::{fmt_utc, median_iter_per_key, Archive, Filter, RunRecord};
 
 use super::emit_table;
 
 pub fn cmd(archive: &Archive, csv_dir: Option<&Path>, bench_key: &str, limit: usize) -> Result<()> {
-    let records = archive.load()?;
-    let mut s = series(&records, bench_key);
+    // Point query: only this bench key's records are parsed (the
+    // sidecar index skips every other line); archive order = series
+    // order, exactly what `store::query::series` returns over a load.
+    let series: Vec<RunRecord> = archive.scan(&Filter::for_key(bench_key))?;
+    let mut s: Vec<&RunRecord> = series.iter().collect();
     if s.is_empty() {
-        let mut keys: Vec<String> = records.iter().map(|r| r.bench_key()).collect();
-        keys.sort();
-        keys.dedup();
+        let keys = archive.distinct_keys()?;
         let model = bench_key.split('.').next().unwrap_or(bench_key);
         let near: Vec<&String> =
             keys.iter().filter(|k| k.starts_with(model)).take(8).collect();

@@ -4,9 +4,10 @@
 //! file so the dispatch stays navigable as the surface grows. Commands
 //! split into three groups:
 //!
-//! - **archive-only** (`cmp`, `rank`, `history`, `runs`): query the
-//!   persistent [`crate::store`] archive — no artifacts, manifest, or
-//!   device needed, so they work on a bare checkout;
+//! - **archive-only** (`cmp`, `rank`, `history`, `runs`,
+//!   `synth-archive`): query (or synthesize) the persistent
+//!   [`crate::store`] archive — no artifacts, manifest, or device
+//!   needed, so they work on a bare checkout;
 //! - **static** (`list`, `devices`, `coverage`, `compare-devices`,
 //!   `synth-artifacts`): need the manifest/artifacts but no device;
 //! - **executing** (`run`, `breakdown`, `compare-compiler`, `sweep`,
@@ -34,6 +35,7 @@ pub mod serve;
 pub mod submit;
 pub mod sweep;
 pub mod synth;
+pub mod synth_archive;
 pub mod train;
 
 use anyhow::Result;
@@ -69,6 +71,7 @@ pub const VERBS: &[(&str, &str)] = &[
     ("cmp", "ranked speedup/regression diff of two recorded runs"),
     ("rank", "geometric-mean ranking per compiler.mode engine"),
     ("history", "one benchmark config across all recorded runs"),
+    ("synth-archive", "write a deterministic synthetic archive at scale"),
     ("serve", "run the resident benchmark daemon (job queue + warm worker pool)"),
     ("submit", "enqueue a run/sweep/ci job on the daemon"),
     ("queue", "daemon job queue status"),
@@ -108,12 +111,21 @@ ARCHIVE QUERIES (read the --archive JSONL; no artifacts needed):
                     (default: latest record per config across all runs)
   history <KEY>     one benchmark config across all runs [--limit N]
                     KEY is model.mode.compiler.bN (see `runs`/`cmp` output)
+  synth-archive     write a synthetic archive at scale (query/perf testing)
+                                          [--records N] [--runs M] [--prefix P]
+                                          [--start-ts SECS] [--append]
   Run selectors: latest, latest~N, a run id, or a unique id prefix.
+  Queries stream through the sidecar index (<archive>.idx), rebuilt
+  silently whenever it is missing or stale; XBENCH_NO_INDEX=1 forces
+  the full-scan path (byte-identical output).
 
 BENCHMARK SERVICE (resident daemon; see docs/SERVICE.md):
   serve             run the daemon      [--port N] [--stop] [--fresh]
+                                        [--retain-days N]
                     (replays the queue.jsonl job journal on start;
-                     --fresh discards it instead)
+                     --fresh discards it instead; clean shutdown
+                     compacts it, dropping settled jobs older than
+                     --retain-days [default 14])
   submit [VERB]     enqueue a job (VERB: run|sweep|ci; default run)
                                         [--mode ..] [--compiler ..] [--batch N]
                                         [--jobs N] [--note TEXT] [--run-id ID]
@@ -308,6 +320,15 @@ pub fn main() -> Result<()> {
             args.finish()?;
             synth::cmd(&artifacts, seed, force)
         }
+        "synth-archive" => {
+            let records = args.get_usize("records", 50_000)?;
+            let runs = args.get_usize("runs", 500)?;
+            let start_ts = args.get_u64("start-ts", 1_700_000_000)?;
+            let prefix = args.get_str("prefix", "run")?;
+            let append = args.has("append");
+            args.finish()?;
+            synth_archive::cmd(&archive, records, runs, start_ts, &prefix, append)
+        }
         // -- benchmark service ------------------------------------------------
         // Clients (`submit`/`queue`/`result`, `serve --stop`) only speak
         // TCP; `serve` itself loads the manifest for its executor.
@@ -320,9 +341,15 @@ pub fn main() -> Result<()> {
                 return Ok(());
             }
             let fresh = args.has("fresh");
+            let retain_days = args.get_f64("retain-days", 14.0)?;
+            anyhow::ensure!(
+                retain_days >= 0.0 && retain_days.is_finite(),
+                "--retain-days must be a non-negative number of days"
+            );
             args.finish()?;
             let suite = Suite::new(Manifest::load(&artifacts)?);
-            serve::cmd(artifacts, archive, base_cfg, suite, port, fresh)
+            let retain_secs = (retain_days * 86_400.0) as u64;
+            serve::cmd(artifacts, archive, base_cfg, suite, port, fresh, retain_secs)
         }
         "submit" => {
             let port = parse_port(&mut args)?;

@@ -19,12 +19,18 @@ use crate::store::{latest_per_key, Archive, Filter, RunRecord};
 use super::emit_table;
 
 pub fn cmd(archive: &Archive, csv_dir: Option<&Path>, run_sel: &str) -> Result<()> {
-    let records = archive.load()?;
+    // Indexed: "all" decides the per-key winners on index entries and
+    // parses exactly one record per bench key; a run selector scans
+    // only that run's records. Either way the full archive is never
+    // loaded.
+    let records: Vec<RunRecord>;
     let (scope, latest): (String, BTreeMap<String, &RunRecord>) = if run_sel == "all" {
+        records = archive.latest_records(&Filter::default())?;
         ("all runs".to_string(), latest_per_key(records.iter()))
     } else {
-        let run_id = archive.resolve_run(&records, run_sel)?;
-        let map = latest_per_key(Filter::for_run(&run_id).apply(&records).into_iter());
+        let run_id = archive.resolve(run_sel)?;
+        records = archive.scan(&Filter::for_run(&run_id))?;
+        let map = latest_per_key(records.iter());
         (format!("run {run_id}"), map)
     };
 

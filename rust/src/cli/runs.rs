@@ -4,13 +4,14 @@ use anyhow::Result;
 use std::path::Path;
 
 use crate::report::Table;
-use crate::store::{fmt_utc, run_summaries, Archive};
+use crate::store::{fmt_utc, Archive};
 
 use super::emit_table;
 
 pub fn cmd(archive: &Archive, csv_dir: Option<&Path>) -> Result<()> {
-    let records = archive.load()?;
-    let summaries = run_summaries(&records);
+    // Indexed: one parsed record per run (the identity line), counts
+    // straight off the sidecar — O(runs), not O(records).
+    let summaries = archive.summaries()?;
     let mut t = Table::new(
         format!("Recorded runs ({})", archive.path().display()),
         &["run", "when (UTC)", "commit", "host", "note", "records"],
@@ -26,6 +27,7 @@ pub fn cmd(archive: &Archive, csv_dir: Option<&Path>) -> Result<()> {
         ]);
     }
     emit_table(&t, csv_dir, "runs")?;
-    println!("{} runs, {} records", summaries.len(), records.len());
+    let records: usize = summaries.iter().map(|s| s.records).sum();
+    println!("{} runs, {} records", summaries.len(), records);
     Ok(())
 }

@@ -10,9 +10,13 @@
 //! The job queue is durable: transitions are journaled to
 //! `queue.jsonl` beside the archive and replayed at startup (crashed
 //! daemons resume their queue; settled jobs keep answering `result`).
-//! `--fresh` discards the journal instead of replaying it — inside
-//! [`Daemon::run`], after journal ownership is taken, so it can never
-//! delete a journal a live daemon is appending to.
+//! `--fresh` discards the journal (and the `results.jsonl` payload
+//! spill) instead of replaying it — inside [`Daemon::run`], after
+//! journal ownership is taken, so it can never delete a journal a live
+//! daemon is appending to. A clean shutdown compacts the journal:
+//! settled jobs fold to summary lines, payloads spill to
+//! `results.jsonl`, and settled jobs older than `--retain-days`
+//! (default 14; 0 drops every settled job) are dropped.
 //! `xbench serve --stop` asks a running daemon to shut down.
 
 use anyhow::Result;
@@ -30,9 +34,11 @@ pub fn cmd(
     suite: Suite,
     port: u16,
     fresh: bool,
+    retain_secs: u64,
 ) -> Result<()> {
     let journal = Journal::beside(archive.path());
     let mut daemon = Daemon::bind(port, artifacts, journal)?;
     daemon.set_fresh(fresh);
+    daemon.set_retention_secs(retain_secs);
     daemon.run(suite, archive, base_cfg)
 }

@@ -1,0 +1,51 @@
+//! `xbench synth-archive` — write a deterministic synthetic archive at
+//! scale.
+//!
+//! The query paths (`runs`/`cmp`/`rank`/`history`, the sidecar index)
+//! are built for archives that accumulate one suite run per day
+//! forever; exercising them at that scale with real measurements would
+//! take hours. This verb synthesizes the same shape in milliseconds —
+//! the CI `query-at-scale` job uses it to prove indexed and full-scan
+//! query output byte-identical over ~50k records. Records go through
+//! the ordinary [`Archive::append`] path (locked, torn-tail-healed),
+//! so the result is indistinguishable from a real archive to every
+//! reader.
+
+use anyhow::Result;
+
+use crate::store::{synth, Archive};
+
+pub fn cmd(
+    archive: &Archive,
+    records: usize,
+    runs: usize,
+    start_ts: u64,
+    prefix: &str,
+    append: bool,
+) -> Result<()> {
+    anyhow::ensure!(records > 0 && runs > 0, "--records and --runs must be positive");
+    anyhow::ensure!(
+        append || !archive.exists(),
+        "refusing to mix synthetic records into existing {} (pass a fresh --archive \
+         path, or --append to extend it deliberately)",
+        archive.path().display()
+    );
+    let per_run = (records + runs - 1) / runs;
+    let mut written = 0usize;
+    let mut runs_written = 0usize;
+    for run in 0..runs {
+        let mut batch = synth::synth_run(prefix, run, per_run, start_ts);
+        batch.truncate(records - written);
+        if batch.is_empty() {
+            break;
+        }
+        written += batch.len();
+        runs_written += 1;
+        archive.append(&batch)?;
+    }
+    println!(
+        "synthesized {written} records across {runs_written} runs into {}",
+        archive.path().display()
+    );
+    Ok(())
+}

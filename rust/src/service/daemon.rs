@@ -31,7 +31,14 @@
 //!
 //! Shutdown (`{"op":"shutdown"}` / `xbench serve --stop`) finishes the
 //! running job and journals every still-waiting job as `abandoned` —
-//! restarts report them instead of resurrecting them.
+//! restarts report them instead of resurrecting them. A clean shutdown
+//! then **compacts** the journal ([`crate::store::Journal::compact`]):
+//! settled jobs fold to one summary line each, result payloads spill
+//! to the offset-indexed `results.jsonl`, and settled jobs older than
+//! the retention window (`--retain-days`, default 14) are dropped.
+//! Recovery restores settled jobs as (status, offset) only — the
+//! `result` op reads spilled payloads back on demand, so neither the
+//! journal nor recovery memory grows with history.
 
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
@@ -43,7 +50,7 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use crate::config::RunConfig;
 use crate::runtime::{ArtifactStore, Device};
-use crate::store::journal::{self, JobEvent, ReplayState};
+use crate::store::journal::{self, JobEvent, ReplayState, ResultSpill, DEFAULT_RETAIN_SECS};
 use crate::store::{Archive, FileLock, Journal};
 use crate::suite::Suite;
 use crate::util::Json;
@@ -104,8 +111,17 @@ struct JobRecord {
     /// Crash interruptions survived so far (journal-replayed).
     interruptions: usize,
     progress: Arc<JobProgress>,
-    /// Result payload (set when done): run_id, records, errors, …
+    /// Result payload of a job that finished in *this* daemon's
+    /// lifetime. Replayed jobs keep `None` here — their payload stays
+    /// on disk, addressed by [`JobRecord::result_at`].
     result: Option<Json>,
+    /// Byte range of the spilled payload in `results.jsonl` (journal
+    /// compaction or recovery spilling): read back on demand by the
+    /// `result` op, so recovery never materializes every historical
+    /// payload in memory.
+    result_at: Option<(u64, u64)>,
+    /// Archive run id for the queue view when the payload is on disk.
+    run_id: Option<String>,
 }
 
 impl JobRecord {
@@ -134,6 +150,8 @@ impl JobRecord {
         }
         if let Some(run_id) = self.result.as_ref().and_then(|r| r.get("run_id")) {
             fields.push(("run_id", run_id.clone()));
+        } else if let Some(run_id) = &self.run_id {
+            fields.push(("run_id", Json::str(run_id)));
         }
         Json::obj(fields)
     }
@@ -150,6 +168,9 @@ struct ServiceState {
     port: u16,
     /// Durable queue journal; every transition is appended here.
     journal: Journal,
+    /// Result-payload spill (`results.jsonl`): compacted/recovered
+    /// jobs' payloads live here, read back by offset on demand.
+    spill: ResultSpill,
     /// Next job number — seeded past the journal's highest at startup,
     /// so ids survive restarts. Mutated only under the `jobs` lock.
     next_id: AtomicUsize,
@@ -252,6 +273,9 @@ pub struct Daemon {
     state: Arc<ServiceState>,
     /// Discard the journal instead of replaying it (`serve --fresh`).
     fresh: bool,
+    /// Retention window for settled jobs at the clean-shutdown journal
+    /// compaction (`serve --retain-days`).
+    retain_secs: u64,
 }
 
 impl Daemon {
@@ -263,6 +287,7 @@ impl Daemon {
         let listener = TcpListener::bind(("127.0.0.1", port))
             .with_context(|| format!("binding 127.0.0.1:{port} (daemon already running?)"))?;
         let bound = listener.local_addr().map(|a| a.port()).unwrap_or(0);
+        let spill = ResultSpill::beside(journal.path());
         Ok(Daemon {
             listener,
             state: Arc::new(ServiceState {
@@ -272,10 +297,19 @@ impl Daemon {
                 artifacts,
                 port: bound,
                 journal,
+                spill,
                 next_id: AtomicUsize::new(1),
             }),
             fresh: false,
+            retain_secs: DEFAULT_RETAIN_SECS,
         })
+    }
+
+    /// Override the settled-job retention window applied by the
+    /// clean-shutdown journal compaction (`serve --retain-days`; 0
+    /// drops every settled job at shutdown).
+    pub fn set_retention_secs(&mut self, secs: u64) {
+        self.retain_secs = secs;
     }
 
     /// `serve --fresh`: discard the journal when [`Daemon::run`]
@@ -306,6 +340,7 @@ impl Daemon {
         let _owner = JournalOwner::acquire(self.state.journal.path())?;
         if self.fresh {
             self.state.journal.reset()?;
+            self.state.spill.reset()?;
             eprintln!(
                 "--fresh: discarded job journal {}",
                 self.state.journal.path().display()
@@ -326,7 +361,7 @@ impl Daemon {
             Err(_) => anyhow::bail!("executor thread died during startup"),
         }
 
-        let Daemon { listener, state, .. } = self;
+        let Daemon { listener, state, retain_secs, .. } = self;
         eprintln!(
             "xbench daemon listening on 127.0.0.1:{} (artifacts {}, journal {}, pid {})",
             state.port,
@@ -385,6 +420,26 @@ impl Daemon {
         executor
             .join()
             .map_err(|_| anyhow::anyhow!("executor thread panicked"))?;
+        // Clean shutdown owns the journal exclusively and nothing is
+        // appending anymore: fold every settled job to a summary line,
+        // spill payloads to results.jsonl, drop jobs past retention.
+        // Compaction failure must not fail the shutdown — the
+        // uncompacted journal replays fine.
+        match state.journal.compact(&state.spill, unix_now(), retain_secs) {
+            Ok(stats) => eprintln!(
+                "compacted journal {}: {} settled job(s) folded, {} dropped past retention, \
+                 {} -> {} bytes",
+                state.journal.path().display(),
+                stats.settled,
+                stats.dropped,
+                stats.bytes_before,
+                stats.bytes_after
+            ),
+            Err(e) => eprintln!(
+                "compacting journal {}: {e:#}",
+                state.journal.path().display()
+            ),
+        }
         eprintln!("xbench daemon stopped");
         Ok(())
     }
@@ -403,12 +458,20 @@ fn recover(state: &ServiceState) -> Result<()> {
     }
     let mut jobs = state.jobs.lock().unwrap();
     let (mut restored, mut requeued) = (0usize, 0usize);
-    for rj in replay.jobs {
+    for mut rj in replay.jobs {
         let spec = JobSpec::decode(&rj.spec)
             .with_context(|| format!("decoding journaled spec of {}", rj.id))?;
         let progress = Arc::new(JobProgress::default());
         let mut interruptions = rj.interruptions;
         let mut finished_ts = rj.finished_ts;
+        // Settled jobs restore as (status, offset) only: the payload
+        // stays on disk (`results.jsonl`) and the `result` op reads it
+        // back on demand, so a long journal never materializes every
+        // historical result in memory.
+        let mut result: Option<Json> = None;
+        let mut result_at = rj.result_at;
+        let mut run_id = rj.run_id.clone();
+        let mut records = rj.records;
         let status = match rj.state {
             ReplayState::Pending => {
                 requeued += 1;
@@ -446,14 +509,32 @@ fn recover(state: &ServiceState) -> Result<()> {
                 Status::Failed(error)
             }
             ReplayState::Done => {
-                let n = rj
-                    .result
-                    .as_ref()
-                    .and_then(|r| r.get("records"))
-                    .and_then(|r| r.as_array())
-                    .map(|a| a.len())
-                    .unwrap_or(0);
-                progress.restore(n, n);
+                // An uncompacted `done` line still embeds its payload:
+                // spill it now and keep only the offset. If the spill
+                // write fails the payload stays in memory — degraded,
+                // never lost.
+                if let Some(payload) = rj.result.take() {
+                    run_id = payload
+                        .get("run_id")
+                        .and_then(|r| r.as_str())
+                        .map(String::from);
+                    records = payload
+                        .get("records")
+                        .and_then(|r| r.as_array())
+                        .map_or(0, |a| a.len());
+                    match state.spill.append(&rj.id, &payload) {
+                        Ok(at) => result_at = Some(at),
+                        Err(e) => {
+                            eprintln!(
+                                "journal recovery: spilling result of {}: {e:#} \
+                                 (keeping it in memory)",
+                                rj.id
+                            );
+                            result = Some(payload);
+                        }
+                    }
+                }
+                progress.restore(records, records);
                 restored += 1;
                 Status::Done
             }
@@ -475,7 +556,9 @@ fn recover(state: &ServiceState) -> Result<()> {
             finished_ts,
             interruptions,
             progress,
-            result: rj.result,
+            result,
+            result_at,
+            run_id,
         });
     }
     eprintln!(
@@ -658,6 +741,8 @@ fn handle_request(req: Request, state: &Arc<ServiceState>) -> Json {
                 interruptions: 0,
                 progress: Arc::new(JobProgress::default()),
                 result: None,
+                result_at: None,
+                run_id: None,
             });
             drop(jobs);
             state.wake.notify_all();
@@ -681,6 +766,17 @@ fn handle_request(req: Request, state: &Arc<ServiceState>) -> Json {
                     let mut fields = vec![("job", j.view())];
                     if let Some(result) = &j.result {
                         fields.push(("result", result.clone()));
+                    } else if let Some((off, len)) = j.result_at {
+                        // Spilled payload: read on demand by offset.
+                        match state.spill.read(&j.id, off, len) {
+                            Ok(result) => fields.push(("result", result)),
+                            Err(e) => {
+                                return err_response(format!(
+                                    "reading spilled result of {}: {e:#}",
+                                    j.id
+                                ))
+                            }
+                        }
                     }
                     ok_response(fields)
                 }
@@ -764,6 +860,88 @@ mod tests {
         // The next accepted submission continues the numbering.
         let resp = handle_request(Request::Submit(JobSpec::default_run()), &state);
         assert_eq!(resp.req_str("job").unwrap(), "job-0003");
+    }
+
+    #[test]
+    fn recover_restores_compacted_jobs_lazily_and_serves_spilled_results() {
+        let dir = TempDir::new().unwrap();
+        let (_daemon, state) = bound_state(dir.path());
+        let result = crate::util::json::parse(
+            r#"{"run_id":"run-z","records":[{"key":"a"},{"key":"b"},{"key":"c"}]}"#,
+        )
+        .unwrap();
+        // A compacted journal: the payload lives in the spill file,
+        // the journal line only points at it.
+        let at = state.spill.append("job-0001", &result).unwrap();
+        state
+            .journal
+            .append(&JobEvent::Settled {
+                job: "job-0001".into(),
+                ts: 20,
+                state: crate::store::journal::SettledState::Done,
+                spec: JobSpec::default_run().to_json(),
+                submitted_ts: 10,
+                started_ts: Some(11),
+                interruptions: 0,
+                error: None,
+                run_id: Some("run-z".into()),
+                records: 3,
+                result_at: Some(at),
+            })
+            .unwrap();
+        recover(&state).unwrap();
+        {
+            let jobs = state.jobs.lock().unwrap();
+            assert_eq!(jobs[0].status, Status::Done);
+            assert!(jobs[0].result.is_none(), "payload must stay on disk");
+            assert_eq!(jobs[0].result_at, Some(at));
+            assert_eq!(jobs[0].progress.snapshot(), (3, 3));
+            let view = jobs[0].view();
+            assert_eq!(view.req_str("run_id").unwrap(), "run-z");
+            assert_eq!(view.req_str("verb").unwrap(), "run");
+        }
+        // The result op reads the payload back on demand.
+        let resp = handle_request(Request::Result { job: "job-0001".into() }, &state);
+        assert_eq!(resp.get("ok").and_then(|b| b.as_bool()), Some(true));
+        assert_eq!(resp.req("result").unwrap(), &result);
+        // A vanished spill degrades to a loud error, never a panic or
+        // someone else's payload.
+        state.spill.reset().unwrap();
+        let resp = handle_request(Request::Result { job: "job-0001".into() }, &state);
+        assert_eq!(resp.get("ok").and_then(|b| b.as_bool()), Some(false));
+        assert!(resp.req_str("error").unwrap().contains("job-0001"), "{resp:?}");
+    }
+
+    #[test]
+    fn recover_spills_uncompacted_done_payloads_to_disk() {
+        let dir = TempDir::new().unwrap();
+        let (_daemon, state) = bound_state(dir.path());
+        let result =
+            crate::util::json::parse(r#"{"run_id":"r1","records":[{"key":"k"}]}"#).unwrap();
+        for ev in [
+            JobEvent::Submitted {
+                job: "job-0001".into(),
+                ts: 1,
+                spec: JobSpec::default_run().to_json(),
+            },
+            JobEvent::Started { job: "job-0001".into(), ts: 2 },
+            JobEvent::Done { job: "job-0001".into(), ts: 3, result: result.clone() },
+        ] {
+            state.journal.append(&ev).unwrap();
+        }
+        recover(&state).unwrap();
+        {
+            let jobs = state.jobs.lock().unwrap();
+            assert!(
+                jobs[0].result.is_none(),
+                "recovery must keep (status, offset), not the payload"
+            );
+            assert!(jobs[0].result_at.is_some());
+            assert_eq!(jobs[0].run_id.as_deref(), Some("r1"));
+            assert_eq!(jobs[0].progress.snapshot(), (1, 1));
+        }
+        let resp = handle_request(Request::Result { job: "job-0001".into() }, &state);
+        assert_eq!(resp.req("result").unwrap(), &result);
     }
 
     #[test]

@@ -54,7 +54,10 @@ impl JobProgress {
 
     /// Restore a replayed job's counters (journal recovery): a job
     /// restored `done` has no live executor to tick it, but its queue
-    /// row should still read `n/n` like an uninterrupted run's.
+    /// row should still read `n/n` like an uninterrupted run's. The
+    /// count comes from the job's journaled summary (or is extracted
+    /// once while its payload is spilled to disk) — restoring never
+    /// requires holding the payload in memory.
     pub fn restore(&self, done: usize, total: usize) {
         self.done.store(done, Ordering::Relaxed);
         self.total.store(total, Ordering::Relaxed);
@@ -145,8 +148,11 @@ pub fn execute_job(env: &ExecEnv, spec: &JobSpec, progress: &JobProgress) -> Res
     // always pass).
     let regressions = match (&spec.verb, &spec.baseline) {
         (JobVerb::Ci, Some(selector)) => {
-            let archived = env.archive.load()?;
-            let baseline_run = env.archive.resolve_run(&archived, selector)?;
+            // Point query via the sidecar index: only the baseline
+            // run's records are parsed, not the whole archive.
+            let baseline_run = env.archive.resolve(selector)?;
+            let archived =
+                env.archive.scan(&crate::store::Filter::for_run(&baseline_run))?;
             let baselines = BaselineStore::from_records(&archived, &baseline_run)?;
             let results: Vec<RunResult> =
                 indexed.iter().map(|(_, r)| r.clone()).collect();

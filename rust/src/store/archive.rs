@@ -8,6 +8,7 @@
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 
+use super::query::{Filter, RunSummary};
 use super::record::RunRecord;
 
 /// Shard total `M` out of an `"I/M"` provenance string.
@@ -142,9 +143,9 @@ impl Archive {
         if !self.exists() {
             return Ok(());
         }
-        let records = self.load()?;
-        let existing: Vec<&RunRecord> =
-            records.iter().filter(|r| r.run_id == meta.run_id).collect();
+        // Point query: only this run's records matter, so push the
+        // filter into the scan instead of loading the whole archive.
+        let existing = self.scan(&Filter::for_run(&meta.run_id))?;
         if existing.is_empty() {
             return Ok(());
         }
@@ -216,6 +217,76 @@ impl Archive {
         Ok(records)
     }
 
+    /// Stream only the records matching `filter`, in archive order,
+    /// through the sidecar index ([`super::index`]): non-matching
+    /// lines are never parsed, so a point query over an unbounded
+    /// nightly archive costs O(matching), not O(archive). The index is
+    /// a cache, never an authority — when it is missing, stale, torn,
+    /// version-mismatched, or disagrees with the archive bytes, this
+    /// silently falls back to the full [`Archive::load`]-then-filter
+    /// path, so results (and corrupt-archive errors) are identical
+    /// either way. `XBENCH_NO_INDEX=1` forces the fallback.
+    pub fn scan(&self, filter: &Filter) -> Result<Vec<RunRecord>> {
+        match super::index::scan(&self.path, filter) {
+            Ok(records) => Ok(records),
+            Err(_) => {
+                Ok(filter.apply(&self.load()?).into_iter().cloned().collect())
+            }
+        }
+    }
+
+    /// Run summaries in first-appearance order, parsing one record per
+    /// run (identity fields) — the indexed twin of
+    /// [`super::query::run_summaries`] over [`Archive::load`].
+    pub fn summaries(&self) -> Result<Vec<RunSummary>> {
+        match super::index::summaries(&self.path) {
+            Ok(s) => Ok(s),
+            Err(_) => Ok(super::query::run_summaries(&self.load()?)),
+        }
+    }
+
+    /// The latest record per bench key among records matching
+    /// `filter` — the winners of [`super::query::latest_per_key`],
+    /// decided on index entries so only one record per key is parsed.
+    /// Order is unspecified; callers re-key by bench key.
+    pub fn latest_records(&self, filter: &Filter) -> Result<Vec<RunRecord>> {
+        match super::index::latest(&self.path, filter) {
+            Ok(r) => Ok(r),
+            Err(_) => {
+                let records = self.load()?;
+                Ok(super::query::latest_per_key(filter.apply(&records).into_iter())
+                    .into_values()
+                    .cloned()
+                    .collect())
+            }
+        }
+    }
+
+    /// Sorted distinct bench keys, straight off the index.
+    pub fn distinct_keys(&self) -> Result<Vec<String>> {
+        match super::index::distinct_keys(&self.path) {
+            Ok(k) => Ok(k),
+            Err(_) => {
+                let mut keys: Vec<String> =
+                    self.load()?.iter().map(|r| r.bench_key()).collect();
+                keys.sort();
+                keys.dedup();
+                Ok(keys)
+            }
+        }
+    }
+
+    /// Resolve a run selector (`latest`, `latest~N`, id, unique id
+    /// prefix) without loading the archive: the run order comes off
+    /// the index.
+    pub fn resolve(&self, selector: &str) -> Result<String> {
+        let order = match super::index::run_order(&self.path) {
+            Ok(o) => o,
+            Err(_) => Self::run_order(&self.load()?),
+        };
+        self.resolve_in(&order, selector)
+    }
+
     /// Distinct run ids, in first-appearance (chronological) order —
     /// one view over [`crate::store::query::run_summaries`] so listing
     /// and selector resolution can never disagree.
@@ -229,7 +300,13 @@ impl Archive {
     /// Resolve a run selector against loaded records:
     /// `latest`, `latest~N`, an exact run id, or a unique id prefix.
     pub fn resolve_run(&self, records: &[RunRecord], selector: &str) -> Result<String> {
-        let order = Self::run_order(records);
+        self.resolve_in(&Self::run_order(records), selector)
+    }
+
+    /// The selector grammar over a run-id order list ([`Archive::resolve`]
+    /// and [`Archive::resolve_run`] share it, so the indexed and loaded
+    /// paths can never disagree).
+    fn resolve_in(&self, order: &[String], selector: &str) -> Result<String> {
         if order.is_empty() {
             bail!(
                 "archive {} has no runs (record one with `xbench run --record`)",

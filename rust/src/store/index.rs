@@ -1,0 +1,571 @@
+//! The archive's crash-safe sidecar index (`<archive>.idx`): byte
+//! offsets for every record, so queries seek and parse only matching
+//! lines instead of slurping the whole archive.
+//!
+//! # Why
+//!
+//! The archive grows by one full suite run per day forever (the CI use
+//! case), yet most queries touch a sliver of it — one run (`cmp`,
+//! `--baseline-from-archive`), one bench key (`history`), one record
+//! per key (`rank`). Loading and JSON-parsing every line to answer a
+//! point query is O(archive); with the sidecar it is O(matching).
+//!
+//! # Format
+//!
+//! One header line (JSON: version + a fingerprint of the archive's
+//! first bytes), then one tab-separated entry per record, in archive
+//! order:
+//!
+//! ```text
+//! {"xbench_idx":1,"head_len":4096,"head_hash":"00f3…"}
+//! 0\t412\t1700000000\trun-00000\tmodel_000.infer.fused.b4
+//! 413\t415\t1700000000\trun-00000\tmodel_000.train.fused.b4
+//! ```
+//!
+//! Each entry carries everything a [`Filter`] tests — byte offset,
+//! line length, timestamp, run id, bench key — so filtering happens on
+//! entries and only the winners are seeked and decoded.
+//!
+//! # Trust model: the index is a cache, never an authority
+//!
+//! Readers maintain the sidecar (under the archive's
+//! [`FileLock`], the same lock appends take, so maintenance can never
+//! interleave with a writer):
+//!
+//! - **missing / version-mismatched / unparseable** sidecar → silent
+//!   full rebuild;
+//! - **stale** (archive grew since the last entry — e.g. a CLI append
+//!   raced this reader): the appended tail alone is scanned and folded
+//!   in, then persisted;
+//! - **epoch mismatch** (the fingerprinted archive prefix changed —
+//!   the file was rewritten, not appended) → silent full rebuild;
+//! - **torn final entry** (crashed writer): dropped, sidecar rewritten;
+//! - every decoded record is verified against its entry (run id,
+//!   timestamp, bench key) — any disagreement makes the caller fall
+//!   back to the full [`Archive::load`](super::Archive::load) path.
+//!
+//! [`super::Archive::scan`] wraps all of this: on *any* index error it
+//! falls back to load-then-filter, so indexed and full-scan results
+//! (and error messages for corrupt archives) are identical. Setting
+//! `XBENCH_NO_INDEX=1` disables the sidecar entirely — the CI
+//! `query-at-scale` job uses it to prove byte-identical output.
+//!
+//! Indexing never touches timed regions: it costs query-side I/O only
+//! (see docs/METHODOLOGY.md).
+
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::io::{Read as _, Seek as _, SeekFrom};
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use super::lock::FileLock;
+use super::query::{Filter, RunSummary};
+use super::record::{fnv1a, RunRecord};
+
+/// Sidecar format version (the header's `xbench_idx` value).
+pub const INDEX_VERSION: usize = 1;
+
+/// How many leading archive bytes the header fingerprints. Append-only
+/// archives never change their prefix, so a hash mismatch means the
+/// file was rewritten and every stored offset is garbage.
+const HEAD_FINGERPRINT: usize = 4096;
+
+/// The sidecar path for `archive` (`runs.jsonl` → `runs.jsonl.idx`).
+pub fn sidecar_path(archive: &Path) -> PathBuf {
+    let mut name = archive.file_name().unwrap_or_default().to_os_string();
+    name.push(".idx");
+    archive.with_file_name(name)
+}
+
+/// `XBENCH_NO_INDEX=1` forces every query down the full-scan path.
+fn disabled() -> bool {
+    std::env::var_os("XBENCH_NO_INDEX").map_or(false, |v| v != "0")
+}
+
+/// One indexed archive line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Entry {
+    /// Byte offset of the line in the archive.
+    pub off: u64,
+    /// Line length in bytes (excluding the newline).
+    pub len: u32,
+    pub ts: u64,
+    pub run: String,
+    pub key: String,
+}
+
+impl Entry {
+    fn encode_into(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        let _ = writeln!(out, "{}\t{}\t{}\t{}\t{}", self.off, self.len, self.ts, self.run, self.key);
+    }
+
+    fn parse(line: &str) -> Option<Entry> {
+        let mut it = line.splitn(5, '\t');
+        let off = it.next()?.parse().ok()?;
+        let len = it.next()?.parse().ok()?;
+        let ts = it.next()?.parse().ok()?;
+        let run = it.next()?.to_string();
+        let key = it.next()?.to_string();
+        if run.is_empty() || key.is_empty() {
+            return None;
+        }
+        Some(Entry { off, len, ts, run, key })
+    }
+
+    /// Whether this entry's record would pass `f` — the index-side twin
+    /// of [`Filter::matches`]. The bench key is split from the right
+    /// (`model.mode.compiler.bN`), so model names may contain dots.
+    fn matches(&self, f: &Filter) -> bool {
+        let mut it = self.key.rsplitn(4, '.');
+        let batch = it.next().unwrap_or("");
+        let compiler = it.next().unwrap_or("");
+        let mode = it.next().unwrap_or("");
+        let model = it.next().unwrap_or("");
+        f.run_id.as_deref().map_or(true, |id| self.run == id)
+            && f.bench_key.as_deref().map_or(true, |k| self.key == k)
+            && (f.models.is_empty() || f.models.iter().any(|m| m == model))
+            && f.mode.as_deref().map_or(true, |m| mode == m)
+            && f.compiler.as_deref().map_or(true, |c| compiler == c)
+            && f.batch.map_or(true, |b| {
+                batch.strip_prefix('b').and_then(|s| s.parse::<usize>().ok()) == Some(b)
+            })
+            && f.since.map_or(true, |t| self.ts >= t)
+            && f.until.map_or(true, |t| self.ts <= t)
+    }
+}
+
+/// The sidecar's view of the archive right now: persisted + freshly
+/// folded entries, plus (at most one) complete-but-unterminated final
+/// record. That tail is decoded eagerly and never persisted — a later
+/// append will terminate it (see [`super::append_jsonl`]'s healing),
+/// and half-written bytes must never be trusted by offset.
+struct View {
+    entries: Vec<Entry>,
+    tail: Option<(Entry, RunRecord)>,
+}
+
+impl View {
+    /// Entries in archive order, the in-memory tail last.
+    fn iter(&self) -> impl Iterator<Item = &Entry> {
+        self.entries.iter().chain(self.tail.iter().map(|(e, _)| e))
+    }
+}
+
+/// A sidecar successfully loaded from disk (not yet validated against
+/// the archive's current length).
+struct Loaded {
+    entries: Vec<Entry>,
+    /// Archive bytes covered: one past the last entry's newline.
+    covered: u64,
+    /// The sidecar needs rewriting even if no new records appeared
+    /// (a torn final entry line was dropped).
+    dirty: bool,
+}
+
+/// Parse and fingerprint-check the sidecar. Any anomaly → `None`
+/// (silent full rebuild); only a *torn final line* is tolerated, by
+/// dropping it.
+fn load_sidecar(sidecar: &Path, archive: &Path) -> Option<Loaded> {
+    let text = std::fs::read_to_string(sidecar).ok()?;
+    let mut lines: Vec<&str> = text.lines().collect();
+    let mut dirty = false;
+    if !text.ends_with('\n') {
+        // A half-written final line can still parse as a (wrong)
+        // shorter entry, so it is untrustworthy even when it parses.
+        lines.pop();
+        dirty = true;
+    }
+    let mut it = lines.into_iter();
+    let header = crate::util::json::parse(it.next()?).ok()?;
+    if header.get("xbench_idx").and_then(|v| v.as_usize()) != Some(INDEX_VERSION) {
+        return None;
+    }
+    let head_len = header.get("head_len").and_then(|v| v.as_usize())?;
+    let head_hash = header.get("head_hash").and_then(|v| v.as_str())?;
+    // Epoch check: the fingerprinted prefix must still be there byte
+    // for byte (append-only ⇒ immutable prefix; a rewrite voids every
+    // offset).
+    let mut head = Vec::with_capacity(head_len);
+    std::fs::File::open(archive)
+        .ok()?
+        .take(head_len as u64)
+        .read_to_end(&mut head)
+        .ok()?;
+    if head.len() != head_len || format!("{:016x}", fnv1a(&head)) != head_hash {
+        return None;
+    }
+    let mut entries = Vec::new();
+    let mut covered = 0u64;
+    for line in it {
+        let e = Entry::parse(line)?;
+        if e.off < covered {
+            return None; // offsets must be monotonic
+        }
+        covered = e.off + e.len as u64 + 1;
+        entries.push(e);
+    }
+    Some(Loaded { entries, covered, dirty })
+}
+
+/// Scan archive lines from byte `base` to EOF into entries. Decode
+/// errors bubble up — the caller falls back to [`super::Archive::load`]
+/// so corrupt archives fail with load's own (line-numbered) error.
+fn scan_from(archive: &Path, base: u64) -> Result<(Vec<Entry>, Option<(Entry, RunRecord)>)> {
+    let mut f = std::fs::File::open(archive)
+        .with_context(|| format!("opening {}", archive.display()))?;
+    f.seek(SeekFrom::Start(base))?;
+    let mut bytes = Vec::new();
+    f.read_to_end(&mut bytes)?;
+    let mut entries = Vec::new();
+    let mut tail = None;
+    let mut pos = 0usize;
+    while pos < bytes.len() {
+        let (line_len, terminated) = match bytes[pos..].iter().position(|&b| b == b'\n') {
+            Some(i) => (i, true),
+            None => (bytes.len() - pos, false),
+        };
+        let line = std::str::from_utf8(&bytes[pos..pos + line_len])
+            .with_context(|| format!("{}: non-utf8 line", archive.display()))?;
+        if !line.trim().is_empty() {
+            let rec = RunRecord::decode_line(line)?;
+            let entry = Entry {
+                off: base + pos as u64,
+                len: line_len as u32,
+                ts: rec.timestamp,
+                run: rec.run_id.clone(),
+                key: rec.bench_key(),
+            };
+            if terminated {
+                entries.push(entry);
+            } else {
+                tail = Some((entry, rec));
+            }
+        }
+        pos += line_len + 1; // past the newline (or EOF)
+    }
+    Ok((entries, tail))
+}
+
+/// Rewrite the sidecar from `entries` — atomically (temp + rename) and
+/// under the archive's append lock, so maintenance serializes with
+/// writers and other readers. Best-effort at call sites: a failed
+/// persist only costs the next query a re-fold.
+fn persist(archive: &Path, sidecar: &Path, entries: &[Entry]) -> Result<()> {
+    let _lock = FileLock::acquire(archive)?;
+    let mut head = Vec::with_capacity(HEAD_FINGERPRINT);
+    std::fs::File::open(archive)?
+        .take(HEAD_FINGERPRINT as u64)
+        .read_to_end(&mut head)?;
+    let mut out = String::with_capacity(64 + entries.len() * 64);
+    out.push_str(&format!(
+        "{{\"xbench_idx\":{INDEX_VERSION},\"head_len\":{},\"head_hash\":\"{:016x}\"}}\n",
+        head.len(),
+        fnv1a(&head)
+    ));
+    for e in entries {
+        e.encode_into(&mut out);
+    }
+    let mut tmp_name = sidecar.file_name().unwrap_or_default().to_os_string();
+    tmp_name.push(format!(".tmp.{}", std::process::id()));
+    let tmp = sidecar.with_file_name(tmp_name);
+    std::fs::write(&tmp, out.as_bytes())
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, sidecar)
+        .with_context(|| format!("renaming {} into place", sidecar.display()))
+}
+
+thread_local! {
+    /// One parsed view per thread, keyed by (archive path, archive
+    /// len, sidecar len): a single CLI command queries the same archive
+    /// several times (`cmp` = resolve ×2 + summaries + scan ×2), and
+    /// re-parsing the whole sidecar each time would repeat the
+    /// O(entries) work. Append-only archives make the two lengths a
+    /// sufficient freshness key — and even a pathological stale hit
+    /// (same-length rewrite) only reaches records the per-read
+    /// verification rejects, falling back to the full scan.
+    static VIEW_CACHE: RefCell<Option<(PathBuf, u64, u64, Rc<View>)>> = RefCell::new(None);
+}
+
+/// Load the current view: reuse the sidecar's valid prefix, fold in
+/// any archive bytes appended since, rebuild from scratch when the
+/// sidecar can't be trusted, and persist whatever changed.
+fn view(archive: &Path) -> Result<Rc<View>> {
+    if disabled() {
+        bail!("sidecar index disabled (XBENCH_NO_INDEX)");
+    }
+    let archive_len = std::fs::metadata(archive)
+        .with_context(|| format!("reading archive {}", archive.display()))?
+        .len();
+    let sidecar = sidecar_path(archive);
+    let sidecar_len = std::fs::metadata(&sidecar).map(|m| m.len()).unwrap_or(0);
+    let cached = VIEW_CACHE.with(|c| {
+        c.borrow().as_ref().and_then(|(path, alen, slen, v)| {
+            (path.as_path() == archive && *alen == archive_len && *slen == sidecar_len)
+                .then(|| v.clone())
+        })
+    });
+    if let Some(v) = cached {
+        return Ok(v);
+    }
+    let (mut entries, covered, mut changed) = match load_sidecar(&sidecar, archive) {
+        Some(loaded) if loaded.covered <= archive_len => {
+            (loaded.entries, loaded.covered, loaded.dirty)
+        }
+        // Missing, corrupt, version-mismatched, fingerprint-mismatched,
+        // or covering more bytes than exist (truncated/rewritten
+        // archive): rebuild from byte 0.
+        _ => (Vec::new(), 0, true),
+    };
+    let tail = if covered < archive_len {
+        let (new_entries, tail) = scan_from(archive, covered)?;
+        changed = changed || !new_entries.is_empty();
+        entries.extend(new_entries);
+        tail
+    } else {
+        None
+    };
+    if changed {
+        if let Err(e) = persist(archive, &sidecar, &entries) {
+            eprintln!("note: could not persist index {}: {e:#}", sidecar.display());
+        }
+    }
+    let view = Rc::new(View { entries, tail });
+    // Re-stat after a possible persist, so the cache key matches the
+    // sidecar now on disk.
+    let sidecar_len = std::fs::metadata(&sidecar).map(|m| m.len()).unwrap_or(0);
+    VIEW_CACHE.with(|c| {
+        *c.borrow_mut() =
+            Some((archive.to_path_buf(), archive_len, sidecar_len, view.clone()));
+    });
+    Ok(view)
+}
+
+/// Seek-and-decode reader for indexed archive lines. Every record is
+/// verified against its entry; a mismatch means the index lied and the
+/// caller must fall back to the full scan.
+struct LineReader {
+    file: std::fs::File,
+}
+
+impl LineReader {
+    fn open(archive: &Path) -> Result<LineReader> {
+        Ok(LineReader {
+            file: std::fs::File::open(archive)
+                .with_context(|| format!("opening {}", archive.display()))?,
+        })
+    }
+
+    fn record(&mut self, e: &Entry) -> Result<RunRecord> {
+        self.file.seek(SeekFrom::Start(e.off))?;
+        let mut buf = vec![0u8; e.len as usize];
+        self.file.read_exact(&mut buf)?;
+        let line = std::str::from_utf8(&buf)?;
+        let r = RunRecord::decode_line(line)?;
+        anyhow::ensure!(
+            r.run_id == e.run && r.timestamp == e.ts && r.bench_key() == e.key,
+            "index entry at byte {} disagrees with the archive line",
+            e.off
+        );
+        Ok(r)
+    }
+}
+
+/// Records matching `filter`, archive order, parsing only matches.
+pub fn scan(archive: &Path, filter: &Filter) -> Result<Vec<RunRecord>> {
+    let view = view(archive)?;
+    let mut reader = LineReader::open(archive)?;
+    let mut out = Vec::new();
+    for e in &view.entries {
+        if e.matches(filter) {
+            out.push(reader.record(e)?);
+        }
+    }
+    if let Some((e, rec)) = &view.tail {
+        if e.matches(filter) {
+            out.push(rec.clone());
+        }
+    }
+    Ok(out)
+}
+
+/// The latest record per bench key among records matching `filter` —
+/// the winners of [`super::query::latest_per_key`], decided on index
+/// entries (archive order breaks timestamp ties) so only one record
+/// per key is ever parsed.
+pub fn latest(archive: &Path, filter: &Filter) -> Result<Vec<RunRecord>> {
+    let view = view(archive)?;
+    let mut best: BTreeMap<&str, &Entry> = BTreeMap::new();
+    for e in view.iter() {
+        if !e.matches(filter) {
+            continue;
+        }
+        let replace = best.get(e.key.as_str()).map_or(true, |prev| prev.ts <= e.ts);
+        if replace {
+            best.insert(e.key.as_str(), e);
+        }
+    }
+    let mut reader = LineReader::open(archive)?;
+    let mut out = Vec::with_capacity(best.len());
+    for e in best.into_values() {
+        match &view.tail {
+            Some((te, rec)) if te.off == e.off => out.push(rec.clone()),
+            _ => out.push(reader.record(e)?),
+        }
+    }
+    Ok(out)
+}
+
+/// Distinct run ids in first-appearance (chronological) order, without
+/// parsing a single record.
+pub fn run_order(archive: &Path) -> Result<Vec<String>> {
+    let view = view(archive)?;
+    let mut seen: std::collections::BTreeSet<&str> = std::collections::BTreeSet::new();
+    let mut order: Vec<String> = Vec::new();
+    for e in view.iter() {
+        if seen.insert(e.run.as_str()) {
+            order.push(e.run.clone());
+        }
+    }
+    Ok(order)
+}
+
+/// Run summaries (first-appearance order), parsing exactly one record
+/// per run — the head record carries the identity fields, the index
+/// carries the count.
+pub fn summaries(archive: &Path) -> Result<Vec<RunSummary>> {
+    let view = view(archive)?;
+    let mut order: Vec<(&Entry, usize)> = Vec::new();
+    let mut by_run: BTreeMap<&str, usize> = BTreeMap::new();
+    for e in view.iter() {
+        match by_run.get(e.run.as_str()) {
+            Some(&i) => order[i].1 += 1,
+            None => {
+                by_run.insert(e.run.as_str(), order.len());
+                order.push((e, 1));
+            }
+        }
+    }
+    let mut reader = LineReader::open(archive)?;
+    let mut out = Vec::with_capacity(order.len());
+    for (head, records) in order {
+        let r = match &view.tail {
+            Some((te, rec)) if te.off == head.off => rec.clone(),
+            _ => reader.record(head)?,
+        };
+        out.push(RunSummary {
+            run_id: r.run_id,
+            timestamp: r.timestamp,
+            git_commit: r.git_commit,
+            host: r.host,
+            note: r.note,
+            records,
+        });
+    }
+    Ok(out)
+}
+
+/// Sorted distinct bench keys, straight off the index.
+pub fn distinct_keys(archive: &Path) -> Result<Vec<String>> {
+    let view = view(archive)?;
+    let mut keys: Vec<String> = view.iter().map(|e| e.key.clone()).collect();
+    keys.sort();
+    keys.dedup();
+    Ok(keys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entries_roundtrip_and_reject_garbage() {
+        let e = Entry {
+            off: 123,
+            len: 456,
+            ts: 1_700_000_000,
+            run: "run-0001".into(),
+            key: "gpt_tiny.infer.fused.b4".into(),
+        };
+        let mut line = String::new();
+        e.encode_into(&mut line);
+        assert_eq!(Entry::parse(line.trim_end()), Some(e));
+        assert_eq!(Entry::parse(""), None);
+        assert_eq!(Entry::parse("1\t2\t3"), None);
+        assert_eq!(Entry::parse("x\t2\t3\trun\tkey"), None);
+        assert_eq!(Entry::parse("1\t2\t3\t\tkey"), None);
+    }
+
+    #[test]
+    fn entry_filter_matches_record_filter() {
+        let rec = |model: &str, mode: &str, compiler: &str, batch: usize, run: &str, ts: u64| {
+            RunRecord {
+                schema: crate::store::record::SCHEMA_VERSION,
+                seq: None,
+                jobs: None,
+                shard: None,
+                run_id: run.into(),
+                timestamp: ts,
+                git_commit: "g".into(),
+                host: "h".into(),
+                config_hash: "c".into(),
+                note: "".into(),
+                model: model.into(),
+                domain: "nlp".into(),
+                mode: mode.into(),
+                compiler: compiler.into(),
+                batch,
+                iter_secs: 0.01,
+                repeats_secs: vec![0.01],
+                throughput: 400.0,
+                active: 0.6,
+                movement: 0.3,
+                idle: 0.1,
+                host_bytes: 1,
+                device_bytes: 2,
+            }
+        };
+        let records = vec![
+            rec("gpt", "infer", "fused", 4, "run-a", 100),
+            rec("gpt", "train", "eager", 8, "run-b", 200),
+            // A model name with a dot must split correctly from the right.
+            rec("net.v2", "infer", "fused", 4, "run-b", 200),
+        ];
+        let filters = vec![
+            Filter::default(),
+            Filter::for_run("run-b"),
+            Filter::for_key("gpt.train.eager.b8"),
+            Filter { models: vec!["net.v2".into()], ..Default::default() },
+            Filter { mode: Some("infer".into()), ..Default::default() },
+            Filter { compiler: Some("eager".into()), ..Default::default() },
+            Filter { batch: Some(8), ..Default::default() },
+            Filter { since: Some(150), ..Default::default() },
+            Filter { until: Some(150), ..Default::default() },
+            Filter {
+                models: vec!["gpt".into()],
+                mode: Some("infer".into()),
+                batch: Some(4),
+                ..Default::default()
+            },
+        ];
+        for r in &records {
+            let e = Entry {
+                off: 0,
+                len: 0,
+                ts: r.timestamp,
+                run: r.run_id.clone(),
+                key: r.bench_key(),
+            };
+            for f in &filters {
+                assert_eq!(
+                    e.matches(f),
+                    f.matches(r),
+                    "entry/record filter disagreement for {} under {f:?}",
+                    r.bench_key()
+                );
+            }
+        }
+    }
+}

@@ -26,14 +26,37 @@
 //! have served. Job numbering is journal-monotonic: the next id is
 //! always one past the highest ever journaled, so `job-NNNN` never
 //! collides across restarts.
+//!
+//! # Compaction (clean shutdown)
+//!
+//! Left alone, the journal grows without bound: every `done` line
+//! embeds its full result payload, and recovery would materialize
+//! every job ever journaled. [`Journal::compact`] — run by the daemon
+//! on clean shutdown — rewrites the journal with each settled job
+//! folded to a single [`JobEvent::Settled`] summary line; `done`
+//! payloads move to the offset-indexed spill file ([`ResultSpill`],
+//! `results.jsonl`), referenced by byte range, so `xbench result`
+//! still answers read-only across restarts while recovery keeps only
+//! (status, offset) per job. Settled jobs older than the retention
+//! window are dropped outright; a leading [`JobEvent::Compacted`]
+//! marker preserves monotonic job numbering across the drop.
 
 use anyhow::{bail, Context, Result};
+use std::io::{Read as _, Seek as _, SeekFrom, Write as _};
 use std::path::{Path, PathBuf};
 
 use crate::util::Json;
 
 /// Journal file name, created beside the archive (`queue.jsonl`).
 pub const JOURNAL_FILE: &str = "queue.jsonl";
+
+/// Spill file holding compacted jobs' result payloads, beside the
+/// journal (`results.jsonl`).
+pub const RESULTS_FILE: &str = "results.jsonl";
+
+/// Default retention for settled jobs at compaction (14 days): old
+/// enough that nightly automation has long since read its verdicts.
+pub const DEFAULT_RETAIN_SECS: u64 = 14 * 86_400;
 
 /// One job transition, as journaled on one line.
 #[derive(Debug, Clone, PartialEq)]
@@ -53,6 +76,63 @@ pub enum JobEvent {
     Interrupted { job: String, ts: u64 },
     /// Shutdown drained the queue with this job still waiting.
     Abandoned { job: String, ts: u64 },
+    /// One settled job folded to a single line by [`Journal::compact`]:
+    /// its whole transition history replaced by the outcome, the
+    /// result payload (if any) spilled to [`ResultSpill`] and
+    /// referenced by byte range. `ts` is the finish time.
+    Settled {
+        job: String,
+        ts: u64,
+        state: SettledState,
+        /// The submitted spec, verbatim — `queue` still reports the
+        /// verb, and a summary must survive further compactions.
+        spec: Json,
+        submitted_ts: u64,
+        started_ts: Option<u64>,
+        interruptions: usize,
+        /// Error string of a failed job.
+        error: Option<String>,
+        /// Archive run id of a done job (also inside the payload; kept
+        /// here so the queue view never needs the payload).
+        run_id: Option<String>,
+        /// Result-row count of a done job (restores `n/n` progress
+        /// without the payload).
+        records: usize,
+        /// `(offset, len)` of the payload line in `results.jsonl`.
+        result_at: Option<(u64, u64)>,
+    },
+    /// Compaction marker (first line of a compacted journal): `next`
+    /// preserves monotonic job numbering even when every numbered job
+    /// was dropped past retention. Its `job` field is the literal
+    /// `"journal"` — it belongs to no job.
+    Compacted { job: String, ts: u64, next: usize, dropped: usize },
+}
+
+/// Terminal outcome recorded on a [`JobEvent::Settled`] line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SettledState {
+    Done,
+    Failed,
+    Abandoned,
+}
+
+impl SettledState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SettledState::Done => "done",
+            SettledState::Failed => "failed",
+            SettledState::Abandoned => "abandoned",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<SettledState> {
+        match s {
+            "done" => Ok(SettledState::Done),
+            "failed" => Ok(SettledState::Failed),
+            "abandoned" => Ok(SettledState::Abandoned),
+            other => bail!("unknown settled state {other:?} (done|failed|abandoned)"),
+        }
+    }
 }
 
 impl JobEvent {
@@ -64,7 +144,9 @@ impl JobEvent {
             | JobEvent::Done { job, .. }
             | JobEvent::Failed { job, .. }
             | JobEvent::Interrupted { job, .. }
-            | JobEvent::Abandoned { job, .. } => job,
+            | JobEvent::Abandoned { job, .. }
+            | JobEvent::Settled { job, .. }
+            | JobEvent::Compacted { job, .. } => job,
         }
     }
 
@@ -76,6 +158,8 @@ impl JobEvent {
             JobEvent::Failed { .. } => "failed",
             JobEvent::Interrupted { .. } => "interrupted",
             JobEvent::Abandoned { .. } => "abandoned",
+            JobEvent::Settled { .. } => "settled",
+            JobEvent::Compacted { .. } => "compacted",
         }
     }
 
@@ -87,7 +171,9 @@ impl JobEvent {
             | JobEvent::Done { job, ts, .. }
             | JobEvent::Failed { job, ts, .. }
             | JobEvent::Interrupted { job, ts }
-            | JobEvent::Abandoned { job, ts } => (job, *ts),
+            | JobEvent::Abandoned { job, ts }
+            | JobEvent::Settled { job, ts, .. }
+            | JobEvent::Compacted { job, ts, .. } => (job, *ts),
         };
         let mut fields = vec![
             ("ev", Json::str(self.ev_name())),
@@ -98,6 +184,47 @@ impl JobEvent {
             JobEvent::Submitted { spec, .. } => fields.push(("spec", spec.clone())),
             JobEvent::Done { result, .. } => fields.push(("result", result.clone())),
             JobEvent::Failed { error, .. } => fields.push(("error", Json::str(error))),
+            JobEvent::Settled {
+                state,
+                spec,
+                submitted_ts,
+                started_ts,
+                interruptions,
+                error,
+                run_id,
+                records,
+                result_at,
+                ..
+            } => {
+                fields.push(("state", Json::str(state.as_str())));
+                fields.push(("spec", spec.clone()));
+                fields.push(("submitted_ts", Json::num(*submitted_ts as f64)));
+                if let Some(t) = started_ts {
+                    fields.push(("started_ts", Json::num(*t as f64)));
+                }
+                if *interruptions > 0 {
+                    fields.push(("interruptions", Json::num(*interruptions as f64)));
+                }
+                if let Some(e) = error {
+                    fields.push(("error", Json::str(e)));
+                }
+                if let Some(r) = run_id {
+                    fields.push(("run_id", Json::str(r)));
+                }
+                if *records > 0 {
+                    fields.push(("records", Json::num(*records as f64)));
+                }
+                if let Some((off, len)) = result_at {
+                    fields.push(("result_off", Json::num(*off as f64)));
+                    fields.push(("result_len", Json::num(*len as f64)));
+                }
+            }
+            JobEvent::Compacted { next, dropped, .. } => {
+                fields.push(("next", Json::num(*next as f64)));
+                if *dropped > 0 {
+                    fields.push(("dropped", Json::num(*dropped as f64)));
+                }
+            }
             _ => {}
         }
         Json::obj(fields)
@@ -117,6 +244,31 @@ impl JobEvent {
             }
             "interrupted" => JobEvent::Interrupted { job, ts },
             "abandoned" => JobEvent::Abandoned { job, ts },
+            "settled" => JobEvent::Settled {
+                job,
+                ts,
+                state: SettledState::parse(v.req_str("state")?)?,
+                spec: v.req("spec")?.clone(),
+                submitted_ts: v.req_usize("submitted_ts")? as u64,
+                started_ts: v.get("started_ts").and_then(|x| x.as_usize()).map(|t| t as u64),
+                interruptions: v.get("interruptions").and_then(|x| x.as_usize()).unwrap_or(0),
+                error: v.get("error").and_then(|x| x.as_str()).map(String::from),
+                run_id: v.get("run_id").and_then(|x| x.as_str()).map(String::from),
+                records: v.get("records").and_then(|x| x.as_usize()).unwrap_or(0),
+                result_at: match (
+                    v.get("result_off").and_then(|x| x.as_usize()),
+                    v.get("result_len").and_then(|x| x.as_usize()),
+                ) {
+                    (Some(off), Some(len)) => Some((off as u64, len as u64)),
+                    _ => None,
+                },
+            },
+            "compacted" => JobEvent::Compacted {
+                job,
+                ts,
+                next: v.req_usize("next")?,
+                dropped: v.get("dropped").and_then(|x| x.as_usize()).unwrap_or(0),
+            },
             other => bail!("unknown journal event {other:?}"),
         })
     }
@@ -202,6 +354,274 @@ impl Journal {
         }
         Ok(events)
     }
+
+    /// Rewrite the journal with every settled job folded to one
+    /// [`JobEvent::Settled`] summary line (see the module docs).
+    /// `done` payloads move into a freshly written `spill` generation
+    /// (already-spilled payloads are copied across by offset); settled
+    /// jobs whose terminal transition is older than `retain_secs` are
+    /// dropped, and a leading [`JobEvent::Compacted`] marker keeps job
+    /// numbering monotonic across the drop. Jobs still
+    /// pending/running/interrupted keep their full transition history
+    /// verbatim (grouped per job, submission order preserved).
+    ///
+    /// Both files are rewritten to temporaries and renamed into place,
+    /// spill first — a crash between the two renames leaves the old
+    /// journal pointing into the new spill, which [`ResultSpill::read`]
+    /// detects by verifying the embedded job id (the payload reads as
+    /// unavailable, never as another job's result).
+    ///
+    /// Call only while holding journal ownership (the daemon's clean
+    /// shutdown path): a concurrent appender could journal transitions
+    /// the fold would silently discard.
+    pub fn compact(&self, spill: &ResultSpill, now: u64, retain_secs: u64) -> Result<CompactStats> {
+        let events = self.load()?;
+        let bytes_before = std::fs::metadata(&self.path).map(|m| m.len()).unwrap_or(0);
+        if events.is_empty() {
+            return Ok(CompactStats { settled: 0, dropped: 0, bytes_before, bytes_after: bytes_before });
+        }
+        let replayed = replay(&events)?;
+
+        // Live (non-settled) jobs carry their original events over
+        // verbatim, grouped per job.
+        let mut live: std::collections::HashMap<&str, Vec<&JobEvent>> =
+            std::collections::HashMap::new();
+        for job in &replayed.jobs {
+            if !matches!(
+                job.state,
+                ReplayState::Done | ReplayState::Failed | ReplayState::Abandoned
+            ) {
+                live.insert(job.id.as_str(), Vec::new());
+            }
+        }
+        for ev in &events {
+            if let Some(evs) = live.get_mut(ev.job()) {
+                evs.push(ev);
+            }
+        }
+
+        let tmp_of = |path: &Path| {
+            let mut name = path.file_name().unwrap_or_default().to_os_string();
+            name.push(format!(".tmp.{}", std::process::id()));
+            path.with_file_name(name)
+        };
+        let spill_tmp = tmp_of(spill.path());
+        let mut spill_f = std::fs::File::create(&spill_tmp)
+            .with_context(|| format!("creating {}", spill_tmp.display()))?;
+        let mut spill_off = 0u64;
+
+        let cutoff = now.saturating_sub(retain_secs);
+        let (mut settled, mut dropped) = (0usize, 0usize);
+        let mut body = String::new();
+        for job in &replayed.jobs {
+            let state = match job.state {
+                ReplayState::Done => SettledState::Done,
+                ReplayState::Failed => SettledState::Failed,
+                ReplayState::Abandoned => SettledState::Abandoned,
+                _ => {
+                    for ev in live.get(job.id.as_str()).into_iter().flatten() {
+                        body.push_str(&ev.to_json().to_json());
+                        body.push('\n');
+                    }
+                    continue;
+                }
+            };
+            let finished = job.finished_ts.unwrap_or(job.submitted_ts);
+            if finished < cutoff {
+                dropped += 1;
+                continue;
+            }
+            settled += 1;
+            // Migrate the payload into the new spill generation:
+            // embedded in the journal (uncompacted `done`) or copied
+            // from the previous generation by offset.
+            let payload_line = if let Some(result) = &job.result {
+                Some(ResultSpill::encode(&job.id, result))
+            } else if let Some((off, len)) = job.result_at {
+                match spill.read_line(&job.id, off, len) {
+                    Ok(mut line) => {
+                        line.push('\n');
+                        Some(line)
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "compact: payload of {} is unreadable, dropping it: {e:#}",
+                            job.id
+                        );
+                        None
+                    }
+                }
+            } else {
+                None
+            };
+            let (run_id, records) = match &job.result {
+                Some(result) => (
+                    result.get("run_id").and_then(|r| r.as_str()).map(String::from),
+                    result
+                        .get("records")
+                        .and_then(|r| r.as_array())
+                        .map_or(0, |a| a.len()),
+                ),
+                None => (job.run_id.clone(), job.records),
+            };
+            let result_at = match payload_line {
+                Some(line) => {
+                    spill_f
+                        .write_all(line.as_bytes())
+                        .with_context(|| format!("writing {}", spill_tmp.display()))?;
+                    let at = (spill_off, line.len() as u64 - 1);
+                    spill_off += line.len() as u64;
+                    Some(at)
+                }
+                None => None,
+            };
+            let ev = JobEvent::Settled {
+                job: job.id.clone(),
+                ts: finished,
+                state,
+                spec: job.spec.clone(),
+                submitted_ts: job.submitted_ts,
+                started_ts: job.started_ts,
+                interruptions: job.interruptions,
+                error: job.error.clone(),
+                run_id,
+                records,
+                result_at,
+            };
+            body.push_str(&ev.to_json().to_json());
+            body.push('\n');
+        }
+
+        let marker = JobEvent::Compacted {
+            job: "journal".into(),
+            ts: now,
+            next: replayed.next_job_number,
+            dropped,
+        };
+        let mut out = marker.to_json().to_json();
+        out.push('\n');
+        out.push_str(&body);
+        // Both temp files are fsynced before the renames: a rename can
+        // reach disk before its target's data does, and a post-crash
+        // journal with lost bytes would be silent queue-history loss.
+        let journal_tmp = tmp_of(&self.path);
+        let mut journal_f = std::fs::File::create(&journal_tmp)
+            .with_context(|| format!("creating {}", journal_tmp.display()))?;
+        journal_f
+            .write_all(out.as_bytes())
+            .with_context(|| format!("writing {}", journal_tmp.display()))?;
+        journal_f
+            .sync_all()
+            .with_context(|| format!("syncing {}", journal_tmp.display()))?;
+        drop(journal_f);
+        spill_f
+            .sync_all()
+            .with_context(|| format!("syncing {}", spill_tmp.display()))?;
+        drop(spill_f);
+        std::fs::rename(&spill_tmp, spill.path())
+            .with_context(|| format!("renaming {} into place", spill.path().display()))?;
+        std::fs::rename(&journal_tmp, &self.path)
+            .with_context(|| format!("renaming {} into place", self.path.display()))?;
+        let bytes_after = std::fs::metadata(&self.path).map(|m| m.len()).unwrap_or(0);
+        Ok(CompactStats { settled, dropped, bytes_before, bytes_after })
+    }
+}
+
+/// The offset-indexed result-payload spill file (`results.jsonl`
+/// beside the journal): one `{"job":…,"result":…}` object per line,
+/// written when a `done` payload leaves the journal (compaction, or
+/// recovery spilling an uncompacted payload) and read back by the
+/// `(offset, len)` journaled on the job's `settled` line — a seek, not
+/// a scan. Appends go through the shared [`super::append_jsonl_at`]
+/// discipline (file lock + torn-tail healing).
+#[derive(Debug, Clone)]
+pub struct ResultSpill {
+    path: PathBuf,
+}
+
+impl ResultSpill {
+    pub fn new(path: impl Into<PathBuf>) -> ResultSpill {
+        ResultSpill { path: path.into() }
+    }
+
+    /// The spill beside `journal_path` (`results.jsonl`).
+    pub fn beside(journal_path: &Path) -> ResultSpill {
+        ResultSpill { path: journal_path.with_file_name(RESULTS_FILE) }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Discard the spill (`serve --fresh`, alongside [`Journal::reset`]).
+    pub fn reset(&self) -> Result<()> {
+        match std::fs::remove_file(&self.path) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => {
+                Err(e).with_context(|| format!("removing spill {}", self.path.display()))
+            }
+        }
+    }
+
+    fn encode(job: &str, result: &Json) -> String {
+        let mut line =
+            Json::obj(vec![("job", Json::str(job)), ("result", result.clone())]).to_json();
+        line.push('\n');
+        line
+    }
+
+    /// Append one payload; returns the `(offset, len)` to journal
+    /// (`len` excludes the newline).
+    pub fn append(&self, job: &str, result: &Json) -> Result<(u64, u64)> {
+        let line = Self::encode(job, result);
+        let off = super::append_jsonl_at(&self.path, line.as_bytes())?;
+        Ok((off, line.len() as u64 - 1))
+    }
+
+    /// Read one payload back by offset. The job id embedded on the
+    /// line is verified, so a stale offset (a crash between
+    /// compaction's two renames, a hand-edited file) errors instead of
+    /// serving some other job's payload.
+    pub fn read(&self, job: &str, off: u64, len: u64) -> Result<Json> {
+        let line = self.read_line(job, off, len)?;
+        let v = crate::util::json::parse(&line)?;
+        Ok(v.req("result")?.clone())
+    }
+
+    /// The verified raw payload line (no newline) — compaction copies
+    /// lines between spill generations without re-encoding them.
+    fn read_line(&self, job: &str, off: u64, len: u64) -> Result<String> {
+        let mut f = std::fs::File::open(&self.path)
+            .with_context(|| format!("opening spill {}", self.path.display()))?;
+        f.seek(SeekFrom::Start(off))?;
+        let mut buf = vec![0u8; len as usize];
+        f.read_exact(&mut buf).with_context(|| {
+            format!("reading {len} bytes at {off} of {}", self.path.display())
+        })?;
+        let line = String::from_utf8(buf)
+            .with_context(|| format!("spill {}: non-utf8 payload line", self.path.display()))?;
+        let v = crate::util::json::parse(&line)
+            .with_context(|| format!("parsing payload at byte {off} of {}", self.path.display()))?;
+        anyhow::ensure!(
+            v.get("job").and_then(|j| j.as_str()) == Some(job),
+            "payload at byte {off} of {} belongs to {:?}, not {job}",
+            self.path.display(),
+            v.get("job").and_then(|j| j.as_str()).unwrap_or("<none>")
+        );
+        Ok(line)
+    }
+}
+
+/// What one [`Journal::compact`] pass did.
+#[derive(Debug, Clone, Copy)]
+pub struct CompactStats {
+    /// Settled jobs folded to summary lines.
+    pub settled: usize,
+    /// Settled jobs dropped past the retention window.
+    pub dropped: usize,
+    pub bytes_before: u64,
+    pub bytes_after: u64,
 }
 
 /// Lifecycle a replayed job was left in (the last journaled
@@ -227,12 +647,21 @@ pub struct ReplayedJob {
     pub submitted_ts: u64,
     pub started_ts: Option<u64>,
     pub finished_ts: Option<u64>,
-    /// Result payload of a `done` job.
+    /// Result payload of a `done` job whose journal line still embeds
+    /// it (pre-compaction). Compacted jobs carry [`Self::result_at`]
+    /// instead — the payload stays on disk.
     pub result: Option<Json>,
     /// Error string of a `failed` job.
     pub error: Option<String>,
     /// How many `interrupted` transitions the job has accumulated.
     pub interruptions: usize,
+    /// Archive run id of a compacted done job (queue views need it
+    /// without touching the payload).
+    pub run_id: Option<String>,
+    /// Result-row count of a compacted done job (`n/n` progress).
+    pub records: usize,
+    /// Byte range of the spilled payload in [`ResultSpill`].
+    pub result_at: Option<(u64, u64)>,
 }
 
 /// A folded journal: every job's final state plus the next free job
@@ -268,6 +697,11 @@ pub fn replay(events: &[JobEvent]) -> Result<Replay> {
     let mut next = 1usize;
     for ev in events {
         let id = ev.job();
+        if let JobEvent::Compacted { next: n, .. } = ev {
+            // Numbering floor left by a compaction that dropped jobs.
+            next = next.max(*n);
+            continue;
+        }
         if let JobEvent::Submitted { job, ts, spec } = ev {
             anyhow::ensure!(
                 !by_id.contains_key(job.as_str()),
@@ -287,6 +721,51 @@ pub fn replay(events: &[JobEvent]) -> Result<Replay> {
                 result: None,
                 error: None,
                 interruptions: 0,
+                run_id: None,
+                records: 0,
+                result_at: None,
+            });
+            continue;
+        }
+        if let JobEvent::Settled {
+            job,
+            ts,
+            state,
+            spec,
+            submitted_ts,
+            started_ts,
+            interruptions,
+            error,
+            run_id,
+            records,
+            result_at,
+        } = ev
+        {
+            anyhow::ensure!(
+                !by_id.contains_key(job.as_str()),
+                "journal corrupt: {job} submitted twice"
+            );
+            if let Some(n) = job_number(job) {
+                next = next.max(n + 1);
+            }
+            by_id.insert(job.clone(), jobs.len());
+            jobs.push(ReplayedJob {
+                id: job.clone(),
+                spec: spec.clone(),
+                state: match state {
+                    SettledState::Done => ReplayState::Done,
+                    SettledState::Failed => ReplayState::Failed,
+                    SettledState::Abandoned => ReplayState::Abandoned,
+                },
+                submitted_ts: *submitted_ts,
+                started_ts: *started_ts,
+                finished_ts: Some(*ts),
+                result: None,
+                error: error.clone(),
+                interruptions: *interruptions,
+                run_id: run_id.clone(),
+                records: *records,
+                result_at: *result_at,
             });
             continue;
         }
@@ -302,7 +781,9 @@ pub fn replay(events: &[JobEvent]) -> Result<Replay> {
             "journal corrupt: transition after terminal state for {id}"
         );
         match ev {
-            JobEvent::Submitted { .. } => unreachable!("handled above"),
+            JobEvent::Submitted { .. }
+            | JobEvent::Settled { .. }
+            | JobEvent::Compacted { .. } => unreachable!("handled above"),
             JobEvent::Started { ts, .. } => {
                 job.state = ReplayState::Running;
                 job.started_ts = Some(*ts);
@@ -468,6 +949,234 @@ mod tests {
         assert_eq!(replayed.next_job_number, 42);
         assert_eq!(job_number(&job_id(41)), Some(41));
         assert_eq!(job_number("weird"), None);
+    }
+
+    #[test]
+    fn settled_and_compacted_events_roundtrip() {
+        let full = JobEvent::Settled {
+            job: job_id(7),
+            ts: 30,
+            state: SettledState::Done,
+            spec: spec(),
+            submitted_ts: 10,
+            started_ts: Some(11),
+            interruptions: 1,
+            error: None,
+            run_id: Some("run-x".into()),
+            records: 3,
+            result_at: Some((128, 512)),
+        };
+        let minimal = JobEvent::Settled {
+            job: job_id(8),
+            ts: 31,
+            state: SettledState::Abandoned,
+            spec: spec(),
+            submitted_ts: 12,
+            started_ts: None,
+            interruptions: 0,
+            error: None,
+            run_id: None,
+            records: 0,
+            result_at: None,
+        };
+        let failed = JobEvent::Settled {
+            job: job_id(9),
+            ts: 32,
+            state: SettledState::Failed,
+            spec: spec(),
+            submitted_ts: 13,
+            started_ts: Some(14),
+            interruptions: 0,
+            error: Some("boom".into()),
+            run_id: None,
+            records: 0,
+            result_at: None,
+        };
+        let marker =
+            JobEvent::Compacted { job: "journal".into(), ts: 33, next: 42, dropped: 5 };
+        for ev in [full, minimal, failed, marker] {
+            let line = ev.to_json().to_json();
+            assert!(!line.contains('\n'));
+            assert_eq!(JobEvent::decode_line(&line).unwrap(), ev);
+        }
+        assert!(SettledState::parse("pending").is_err());
+    }
+
+    #[test]
+    fn replay_restores_settled_lines_and_honors_the_numbering_floor() {
+        let events = vec![
+            JobEvent::Compacted { job: "journal".into(), ts: 50, next: 40, dropped: 39 },
+            JobEvent::Settled {
+                job: job_id(40),
+                ts: 45,
+                state: SettledState::Done,
+                spec: spec(),
+                submitted_ts: 41,
+                started_ts: Some(42),
+                interruptions: 0,
+                error: None,
+                run_id: Some("r1".into()),
+                records: 2,
+                result_at: Some((0, 99)),
+            },
+            submitted(41, 51), // journaled after the compaction
+        ];
+        let replayed = replay(&events).unwrap();
+        assert_eq!(replayed.next_job_number, 42);
+        assert_eq!(replayed.jobs.len(), 2);
+        let done = &replayed.jobs[0];
+        assert_eq!(done.state, ReplayState::Done);
+        assert_eq!(done.result, None, "compacted jobs must not materialize payloads");
+        assert_eq!(done.result_at, Some((0, 99)));
+        assert_eq!(done.run_id.as_deref(), Some("r1"));
+        assert_eq!(done.records, 2);
+        // A numbering floor alone (everything dropped) still holds.
+        let replayed = replay(&[JobEvent::Compacted {
+            job: "journal".into(),
+            ts: 50,
+            next: 40,
+            dropped: 39,
+        }])
+        .unwrap();
+        assert!(replayed.jobs.is_empty());
+        assert_eq!(replayed.next_job_number, 40);
+        // A transition after a settled line is corruption.
+        let err = replay(&[
+            JobEvent::Settled {
+                job: job_id(1),
+                ts: 5,
+                state: SettledState::Failed,
+                spec: spec(),
+                submitted_ts: 1,
+                started_ts: None,
+                interruptions: 0,
+                error: Some("x".into()),
+                run_id: None,
+                records: 0,
+                result_at: None,
+            },
+            JobEvent::Started { job: job_id(1), ts: 6 },
+        ])
+        .unwrap_err();
+        assert!(format!("{err}").contains("terminal"), "{err}");
+    }
+
+    #[test]
+    fn spill_roundtrips_and_rejects_foreign_offsets() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let spill = ResultSpill::beside(&dir.path().join(JOURNAL_FILE));
+        let r1 = crate::util::json::parse(r#"{"run_id":"r1","records":[{"key":"a"}]}"#).unwrap();
+        let r2 = crate::util::json::parse(r#"{"run_id":"r2","records":[]}"#).unwrap();
+        let (o1, l1) = spill.append("job-0001", &r1).unwrap();
+        let (o2, l2) = spill.append("job-0002", &r2).unwrap();
+        assert_eq!(o1, 0);
+        assert!(o2 > o1);
+        assert_eq!(spill.read("job-0001", o1, l1).unwrap(), r1);
+        assert_eq!(spill.read("job-0002", o2, l2).unwrap(), r2);
+        // The wrong job id at a valid offset must refuse, not serve.
+        let err = spill.read("job-0002", o1, l1).unwrap_err();
+        assert!(format!("{err}").contains("belongs to"), "{err}");
+        // Garbage offsets error instead of panicking.
+        assert!(spill.read("job-0001", o2 + 1000, 10).is_err());
+        spill.reset().unwrap();
+        assert!(spill.read("job-0001", o1, l1).is_err());
+        spill.reset().unwrap(); // resetting a missing spill is fine
+    }
+
+    /// End-to-end compaction: settled histories fold to one line each,
+    /// payloads spill, retention drops old jobs, live jobs carry over
+    /// verbatim, and a second compaction (the next clean shutdown) is
+    /// stable — including the payload copy between spill generations.
+    #[test]
+    fn compact_folds_settles_spills_and_drops_past_retention() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let journal = Journal::new(dir.path().join(JOURNAL_FILE));
+        let spill = ResultSpill::beside(journal.path());
+        let result =
+            crate::util::json::parse(r#"{"run_id":"r1","records":[{"key":"a"},{"key":"b"}]}"#)
+                .unwrap();
+        for ev in [
+            // job 1: done long ago (past retention).
+            submitted(1, 100),
+            JobEvent::Started { job: job_id(1), ts: 101 },
+            JobEvent::Done { job: job_id(1), ts: 102, result: result.clone() },
+            // job 2: done recently.
+            submitted(2, 900),
+            JobEvent::Started { job: job_id(2), ts: 901 },
+            JobEvent::Done { job: job_id(2), ts: 910, result: result.clone() },
+            // job 3: failed recently.
+            submitted(3, 920),
+            JobEvent::Started { job: job_id(3), ts: 921 },
+            JobEvent::Failed { job: job_id(3), ts: 930, error: "boom".into() },
+            // job 4: still pending (a crash, not a clean shutdown,
+            // preceded this compaction) — history preserved verbatim.
+            submitted(4, 940),
+        ] {
+            journal.append(&ev).unwrap();
+        }
+
+        // now=1000, retention=200: job 1 (finished 102) drops.
+        let stats = journal.compact(&spill, 1000, 200).unwrap();
+        assert_eq!(stats.settled, 2);
+        assert_eq!(stats.dropped, 1);
+        assert!(stats.bytes_after < stats.bytes_before, "{stats:?}");
+
+        let replayed = replay(&journal.load().unwrap()).unwrap();
+        assert_eq!(
+            replayed.next_job_number, 5,
+            "dropping job 1 must not reset numbering"
+        );
+        let ids: Vec<String> = replayed.jobs.iter().map(|j| j.id.clone()).collect();
+        assert_eq!(ids, vec![job_id(2), job_id(3), job_id(4)]);
+        let j2 = &replayed.jobs[0];
+        assert_eq!(j2.state, ReplayState::Done);
+        assert_eq!(j2.result, None);
+        assert_eq!(j2.run_id.as_deref(), Some("r1"));
+        assert_eq!(j2.records, 2);
+        let (off, len) = j2.result_at.expect("payload spilled");
+        assert_eq!(spill.read(&job_id(2), off, len).unwrap(), result);
+        assert_eq!(replayed.jobs[1].state, ReplayState::Failed);
+        assert_eq!(replayed.jobs[1].error.as_deref(), Some("boom"));
+        assert_eq!(replayed.jobs[2].state, ReplayState::Pending);
+        assert_eq!(replayed.jobs[2].submitted_ts, 940);
+
+        // The journal itself shrank to summaries: no embedded payloads.
+        let text = std::fs::read_to_string(journal.path()).unwrap();
+        assert!(!text.contains("\"ev\":\"done\""), "{text}");
+        assert!(text.contains("\"ev\":\"settled\""));
+        assert!(text.lines().next().unwrap().contains("\"ev\":\"compacted\""));
+
+        // Second compaction (job 4 now abandoned): stable, and the
+        // already-spilled payload is copied into the new generation.
+        journal.append(&JobEvent::Abandoned { job: job_id(4), ts: 1100 }).unwrap();
+        let stats = journal.compact(&spill, 1200, 400).unwrap();
+        assert_eq!(stats.settled, 3);
+        assert_eq!(stats.dropped, 0);
+        let replayed = replay(&journal.load().unwrap()).unwrap();
+        assert_eq!(replayed.next_job_number, 5);
+        let j2 = &replayed.jobs[0];
+        let (off, len) = j2.result_at.expect("payload survives recompaction");
+        assert_eq!(spill.read(&job_id(2), off, len).unwrap(), result);
+        assert_eq!(replayed.jobs[2].state, ReplayState::Abandoned);
+
+        // Retention 0 at the next shutdown: everything settled drops,
+        // the numbering floor alone remains.
+        let stats = journal.compact(&spill, 1300, 0).unwrap();
+        assert_eq!(stats.settled, 0);
+        assert_eq!(stats.dropped, 3);
+        let replayed = replay(&journal.load().unwrap()).unwrap();
+        assert!(replayed.jobs.is_empty());
+        assert_eq!(replayed.next_job_number, 5);
+    }
+
+    #[test]
+    fn compact_on_an_empty_or_missing_journal_is_a_no_op() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let journal = Journal::new(dir.path().join(JOURNAL_FILE));
+        let spill = ResultSpill::beside(journal.path());
+        let stats = journal.compact(&spill, 1000, 200).unwrap();
+        assert_eq!(stats.settled + stats.dropped, 0);
+        assert!(!journal.path().exists(), "no-op compaction must not create files");
     }
 
     #[test]

@@ -13,11 +13,19 @@
 //!   `xbench run --record` appends, nothing ever rewrites;
 //! - [`lock`]: the advisory file lock serializing concurrent appenders
 //!   (daemon + ad-hoc CLI runs) so lines never interleave;
+//! - [`index`]: the crash-safe sidecar index (`<archive>.idx`) mapping
+//!   run ids, bench keys, and timestamps to byte offsets, so
+//!   [`Archive::scan`] parses only matching lines (O(matching), not
+//!   O(archive)) — silently rebuilt whenever it can't be trusted;
 //! - [`journal`]: the daemon's durable job journal (`queue.jsonl`) —
 //!   one line per job transition in the same JSONL discipline, so
-//!   `xbench serve` replays its queue after a crash or restart;
+//!   `xbench serve` replays its queue after a crash or restart —
+//!   compacted on clean shutdown (settled jobs fold to summary lines,
+//!   result payloads spill to the offset-indexed `results.jsonl`);
 //! - [`query`]: filters (model/mode/compiler/batch/time-window/run) and
-//!   per-key aggregations (latest, median, series) over loaded records.
+//!   per-key aggregations (latest, median, series) over loaded records;
+//! - [`synth`]: deterministic synthetic archives at scale, for the
+//!   query benchmarks and the CI `query-at-scale` job.
 //!
 //! The CLI's `cmp` / `rank` / `history` verbs and
 //! `BaselineStore::from_archive` are all views over this module.
@@ -37,13 +45,15 @@
 //! never enter the hash.
 
 pub mod archive;
+pub mod index;
 pub mod journal;
 pub mod lock;
 pub mod query;
 pub mod record;
+pub mod synth;
 
 pub use archive::Archive;
-pub use journal::{JobEvent, Journal};
+pub use journal::{JobEvent, Journal, ResultSpill};
 pub use lock::FileLock;
 pub use query::{latest_per_key, median_iter_per_key, run_summaries, series, Filter, RunSummary};
 pub use record::{bench_key_of, config_hash, fmt_utc, RunMeta, RunRecord, SCHEMA_VERSION};
@@ -65,6 +75,15 @@ use std::path::Path;
 /// so a torn tail observed here is certainly a crash artifact, and its
 /// bytes are an incomplete record by definition.
 pub(crate) fn append_jsonl(path: &Path, buf: &[u8]) -> Result<()> {
+    append_jsonl_at(path, buf).map(|_| ())
+}
+
+/// [`append_jsonl`], reporting the byte offset the batch landed at.
+/// The daemon's result-spill file ([`journal::ResultSpill`]) journals
+/// that offset so spilled payloads can be re-read by a seek instead of
+/// a scan.
+pub(crate) fn append_jsonl_at(path: &Path, buf: &[u8]) -> Result<u64> {
+    use std::io::Seek as _;
     let _lock = FileLock::acquire(path)?;
     if let Some(parent) = path.parent() {
         if !parent.as_os_str().is_empty() {
@@ -78,7 +97,10 @@ pub(crate) fn append_jsonl(path: &Path, buf: &[u8]) -> Result<()> {
         .append(true)
         .open(path)
         .with_context(|| format!("opening {}", path.display()))?;
-    f.write_all(buf).with_context(|| format!("appending to {}", path.display()))
+    let off = f.seek(std::io::SeekFrom::End(0))?;
+    f.write_all(buf)
+        .with_context(|| format!("appending to {}", path.display()))?;
+    Ok(off)
 }
 
 /// Repair an unterminated final line (no trailing newline) before an

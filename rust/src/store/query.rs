@@ -8,9 +8,16 @@ use crate::metrics;
 use super::record::RunRecord;
 
 /// A conjunctive record filter; `None`/empty fields match everything.
+///
+/// Every field is decidable from a sidecar index entry alone
+/// (`run_id`, bench key, timestamp — see [`crate::store::index`]), so
+/// [`crate::store::Archive::scan`] can skip non-matching archive lines
+/// without parsing them.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Filter {
     pub run_id: Option<String>,
+    /// Exact bench key (`model.mode.compiler.bN`); `None` = all.
+    pub bench_key: Option<String>,
     /// Explicit model names; empty = all.
     pub models: Vec<String>,
     pub mode: Option<String>,
@@ -26,8 +33,14 @@ impl Filter {
         Filter { run_id: Some(run_id.into()), ..Default::default() }
     }
 
+    /// All records of one benchmark config (`history`'s selection).
+    pub fn for_key(bench_key: impl Into<String>) -> Filter {
+        Filter { bench_key: Some(bench_key.into()), ..Default::default() }
+    }
+
     pub fn matches(&self, r: &RunRecord) -> bool {
         self.run_id.as_deref().map_or(true, |id| r.run_id == id)
+            && self.bench_key.as_deref().map_or(true, |k| r.bench_key() == k)
             && (self.models.is_empty() || self.models.iter().any(|m| m == &r.model))
             && self.mode.as_deref().map_or(true, |m| r.mode == m)
             && self.compiler.as_deref().map_or(true, |c| r.compiler == c)
@@ -175,6 +188,10 @@ mod tests {
         assert_eq!(f.apply(&records).len(), 3);
         let f = Filter::for_run("run-b");
         assert_eq!(f.apply(&records).len(), 2);
+        let f = Filter::for_key("gpt.infer.fused.b4");
+        assert_eq!(f.apply(&records).len(), 2);
+        let f = Filter::for_key("gpt.infer.fused.b8");
+        assert!(f.apply(&records).is_empty());
         assert_eq!(Filter::default().apply(&records).len(), 5);
         let f = Filter { batch: Some(8), ..Default::default() };
         assert!(f.apply(&records).is_empty());

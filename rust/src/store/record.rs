@@ -120,7 +120,7 @@ pub fn config_hash(cfg: &RunConfig) -> String {
     format!("{:016x}", fnv1a(canon.as_bytes()))
 }
 
-fn fnv1a(bytes: &[u8]) -> u64 {
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for &b in bytes {
         h ^= b as u64;

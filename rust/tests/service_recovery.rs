@@ -186,6 +186,88 @@ fn handwritten_journal_replays_retry_once_then_give_up() {
 }
 
 #[test]
+fn clean_shutdown_compacts_the_journal_and_results_survive_restart() {
+    let dir = TempDir::new().unwrap();
+    xbench::suite::synth::write_synthetic_artifacts(dir.path(), 20230102, false).unwrap();
+    let archive_path = dir.path().join("runs.jsonl");
+    let start_in_process = |retain: Option<u64>| {
+        let mut daemon =
+            Daemon::bind(0, dir.path().to_path_buf(), Journal::beside(&archive_path)).unwrap();
+        if let Some(secs) = retain {
+            daemon.set_retention_secs(secs);
+        }
+        let port = daemon.port();
+        let suite = Suite::new(Manifest::load(dir.path()).unwrap());
+        let server = std::thread::spawn({
+            let archive = Archive::new(&archive_path);
+            let cfg = fast_cfg(dir.path());
+            move || daemon.run(suite, archive, cfg)
+        });
+        (port, server)
+    };
+
+    // Daemon 1: run one job, shut down cleanly.
+    let (port, server) = start_in_process(None);
+    let j1 = service::submit(port, fast_spec(&["deeprec_ae"])).unwrap();
+    let (_, before) = service::fetch_result(port, &j1, true, 300).unwrap();
+    let before = before.expect("completed job payload");
+    service::shutdown(port).unwrap();
+    server.join().unwrap().unwrap();
+
+    // Clean shutdown compacted: one summary line per settled job, the
+    // payload spilled to results.jsonl, nothing embedded anymore.
+    let text = std::fs::read_to_string(dir.path().join("queue.jsonl")).unwrap();
+    assert!(
+        text.lines().next().unwrap().contains("\"ev\":\"compacted\""),
+        "compacted journal must lead with the marker: {text}"
+    );
+    assert!(text.contains("\"ev\":\"settled\""), "{text}");
+    assert!(
+        !text.contains("\"ev\":\"done\""),
+        "payloads must have left the journal: {text}"
+    );
+    assert!(dir.path().join("results.jsonl").exists());
+
+    // Daemon 2: the compacted job answers `result` byte-identically,
+    // progress reads n/n, and numbering continues.
+    let (port, server) = start_in_process(None);
+    let (v, after) = service::fetch_result(port, &j1, false, 0).unwrap();
+    assert_eq!(v.req_str("status").unwrap(), "done");
+    assert_eq!(v.req_usize("done").unwrap(), v.req_usize("total").unwrap());
+    assert_eq!(after.expect("restored payload"), before);
+    let j2 = service::submit(port, fast_spec(&["deeprec_ae"])).unwrap();
+    assert_eq!(j2, "job-0002");
+    let (v2, _) = service::fetch_result(port, &j2, true, 300).unwrap();
+    assert_eq!(v2.req_str("status").unwrap(), "done");
+    service::shutdown(port).unwrap();
+    server.join().unwrap().unwrap();
+
+    // Daemon 3 with --retain-days 0 semantics: its clean shutdown
+    // drops every settled job but keeps the numbering floor.
+    let (port, server) = start_in_process(Some(0));
+    service::ping(port).unwrap();
+    service::shutdown(port).unwrap();
+    server.join().unwrap().unwrap();
+    let events = Journal::beside(&archive_path).load().unwrap();
+    let replayed = xbench::store::journal::replay(&events).unwrap();
+    assert!(replayed.jobs.is_empty(), "zero retention must drop all settled jobs");
+    assert_eq!(replayed.next_job_number, 3, "numbering floor survives the drop");
+
+    // Daemon 4: old ids are gone, new ids continue monotonically.
+    let (port, server) = start_in_process(None);
+    let err = service::fetch_result(port, &j1, false, 0).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("unknown job"),
+        "dropped job must answer 'unknown', got: {err:#}"
+    );
+    let j3 = service::submit(port, fast_spec(&["deeprec_ae"])).unwrap();
+    assert_eq!(j3, "job-0003");
+    let _ = service::fetch_result(port, &j3, true, 300).unwrap();
+    service::shutdown(port).unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
 fn second_daemon_on_the_same_journal_is_refused() {
     // Two daemons replaying and appending one queue.jsonl would
     // interleave transitions into sequences replay() rejects; the

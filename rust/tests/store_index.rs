@@ -1,0 +1,268 @@
+//! The sidecar index is a cache, never an authority: whatever state
+//! the `.idx` file is in — missing, stale behind concurrent appends,
+//! torn mid-write, version-bumped, pointing at a rewritten archive —
+//! every indexed query must return exactly what the full
+//! load-then-filter path returns, rebuilding the sidecar silently
+//! along the way.
+
+use xbench::store::{
+    index, latest_per_key, run_summaries, Archive, Filter, RunRecord, SCHEMA_VERSION,
+};
+use xbench::util::TempDir;
+
+fn rec(run: &str, ts: u64, model: &str, mode: &str, secs: f64) -> RunRecord {
+    RunRecord {
+        schema: SCHEMA_VERSION,
+        seq: None,
+        jobs: None,
+        shard: None,
+        run_id: run.into(),
+        timestamp: ts,
+        git_commit: format!("c-{run}"),
+        host: "h".into(),
+        config_hash: "cfg".into(),
+        note: format!("note-{run}"),
+        model: model.into(),
+        domain: "nlp".into(),
+        mode: mode.into(),
+        compiler: "fused".into(),
+        batch: 4,
+        iter_secs: secs,
+        repeats_secs: vec![secs, secs * 1.1],
+        throughput: 4.0 / secs,
+        active: 0.6,
+        movement: 0.3,
+        idle: 0.1,
+        host_bytes: 100,
+        device_bytes: 200,
+    }
+}
+
+fn seed_archive(dir: &TempDir) -> Archive {
+    let archive = Archive::new(dir.path().join("runs.jsonl"));
+    archive
+        .append(&[
+            rec("run-a", 100, "gpt", "infer", 0.010),
+            rec("run-a", 100, "gpt", "train", 0.050),
+            rec("run-a", 100, "dlrm", "infer", 0.020),
+        ])
+        .unwrap();
+    archive
+        .append(&[
+            rec("run-b", 200, "gpt", "infer", 0.012),
+            rec("run-b", 200, "dlrm", "infer", 0.018),
+        ])
+        .unwrap();
+    archive.append(&[rec("run-c", 300, "gpt", "infer", 0.011)]).unwrap();
+    archive
+}
+
+fn probe_filters() -> Vec<Filter> {
+    vec![
+        Filter::default(),
+        Filter::for_run("run-b"),
+        Filter::for_run("absent"),
+        Filter::for_key("gpt.infer.fused.b4"),
+        Filter { models: vec!["dlrm".into()], ..Default::default() },
+        Filter { mode: Some("train".into()), ..Default::default() },
+        Filter { since: Some(150), until: Some(250), ..Default::default() },
+        Filter { batch: Some(8), ..Default::default() },
+    ]
+}
+
+/// Every query surface must agree with the pure load-path reference.
+fn assert_index_agrees_with_full_scan(archive: &Archive) {
+    let records = archive.load().unwrap();
+    for f in probe_filters() {
+        let indexed = archive.scan(&f).unwrap();
+        let full: Vec<RunRecord> = f.apply(&records).into_iter().cloned().collect();
+        assert_eq!(indexed, full, "scan disagrees with load+filter under {f:?}");
+    }
+    assert_eq!(archive.summaries().unwrap(), run_summaries(&records));
+    {
+        let mut indexed = archive.latest_records(&Filter::default()).unwrap();
+        indexed.sort_by(|a, b| a.bench_key().cmp(&b.bench_key()));
+        let full: Vec<RunRecord> =
+            latest_per_key(records.iter()).into_values().cloned().collect();
+        assert_eq!(indexed, full, "latest_records disagrees with latest_per_key");
+    }
+    let mut keys: Vec<String> = records.iter().map(|r| r.bench_key()).collect();
+    keys.sort();
+    keys.dedup();
+    assert_eq!(archive.distinct_keys().unwrap(), keys);
+    for sel in ["latest", "latest~1", "run-a", "run-"] {
+        let indexed = archive.resolve(sel).map_err(|e| format!("{e:#}"));
+        let loaded = archive.resolve_run(&records, sel).map_err(|e| format!("{e:#}"));
+        assert_eq!(indexed, loaded, "resolve disagrees for {sel:?}");
+    }
+}
+
+fn idx_path(archive: &Archive) -> std::path::PathBuf {
+    index::sidecar_path(archive.path())
+}
+
+#[test]
+fn indexed_queries_match_full_scan_and_build_the_sidecar() {
+    let dir = TempDir::new().unwrap();
+    let archive = seed_archive(&dir);
+    assert!(!idx_path(&archive).exists());
+    assert_index_agrees_with_full_scan(&archive);
+    assert!(idx_path(&archive).exists(), "first scan must persist the sidecar");
+    // Second pass reuses the persisted sidecar (same answers).
+    assert_index_agrees_with_full_scan(&archive);
+}
+
+#[test]
+fn concurrent_append_while_a_reader_holds_a_stale_index() {
+    let dir = TempDir::new().unwrap();
+    let archive = seed_archive(&dir);
+    // Reader builds the sidecar…
+    let before = archive.scan(&Filter::default()).unwrap();
+    assert_eq!(before.len(), 6);
+    let stale_idx = std::fs::read_to_string(idx_path(&archive)).unwrap();
+    // …then another process appends (its own Archive handle, exactly
+    // what a racing CLI `run --record` does)…
+    Archive::new(archive.path())
+        .append(&[rec("run-d", 400, "gpt", "infer", 0.013)])
+        .unwrap();
+    // …and the sidecar on disk still describes the shorter archive.
+    assert_eq!(std::fs::read_to_string(idx_path(&archive)).unwrap(), stale_idx);
+    // The next indexed query folds the appended tail in, refreshes the
+    // sidecar, and agrees with the full scan everywhere.
+    let after = archive.scan(&Filter::default()).unwrap();
+    assert_eq!(after.len(), 7);
+    assert_eq!(after[6].run_id, "run-d");
+    assert_ne!(std::fs::read_to_string(idx_path(&archive)).unwrap(), stale_idx);
+    assert_index_agrees_with_full_scan(&archive);
+}
+
+#[test]
+fn torn_index_tail_is_dropped_and_rebuilt() {
+    let dir = TempDir::new().unwrap();
+    let archive = seed_archive(&dir);
+    archive.scan(&Filter::default()).unwrap();
+    // A crashed writer tears the sidecar's final line (no newline; the
+    // half-written entry even parses as a plausible shorter one).
+    let mut idx = std::fs::read_to_string(idx_path(&archive)).unwrap();
+    assert!(idx.ends_with('\n'));
+    idx.truncate(idx.len() - 20);
+    std::fs::write(idx_path(&archive), &idx).unwrap();
+    assert_index_agrees_with_full_scan(&archive);
+    // The rebuild healed the sidecar back to a terminated file.
+    assert!(std::fs::read_to_string(idx_path(&archive)).unwrap().ends_with('\n'));
+}
+
+#[test]
+fn version_mismatched_index_is_rebuilt_silently() {
+    let dir = TempDir::new().unwrap();
+    let archive = seed_archive(&dir);
+    archive.scan(&Filter::default()).unwrap();
+    let idx = std::fs::read_to_string(idx_path(&archive)).unwrap();
+    std::fs::write(
+        idx_path(&archive),
+        idx.replacen("{\"xbench_idx\":1,", "{\"xbench_idx\":999,", 1),
+    )
+    .unwrap();
+    assert_index_agrees_with_full_scan(&archive);
+    assert!(
+        std::fs::read_to_string(idx_path(&archive)).unwrap().starts_with("{\"xbench_idx\":1,"),
+        "rebuild must write the current version back"
+    );
+}
+
+#[test]
+fn garbage_index_is_rebuilt_silently() {
+    let dir = TempDir::new().unwrap();
+    let archive = seed_archive(&dir);
+    std::fs::write(idx_path(&archive), "total garbage\nnot an index\n").unwrap();
+    assert_index_agrees_with_full_scan(&archive);
+}
+
+#[test]
+fn epoch_mismatch_rewritten_archive_invalidates_the_index() {
+    let dir = TempDir::new().unwrap();
+    let archive = seed_archive(&dir);
+    archive.scan(&Filter::default()).unwrap();
+    let idx = std::fs::read_to_string(idx_path(&archive)).unwrap();
+    // The archive is *rewritten* (not appended): same shape, different
+    // contents — every stored offset is now garbage. The header's
+    // fingerprint of the leading bytes must catch it.
+    let other = Archive::new(dir.path().join("other.jsonl"));
+    other
+        .append(&[
+            rec("run-x", 900, "bert", "infer", 0.030),
+            rec("run-y", 950, "bert", "train", 0.060),
+        ])
+        .unwrap();
+    std::fs::copy(other.path(), archive.path()).unwrap();
+    std::fs::write(idx_path(&archive), idx).unwrap(); // stale sidecar survives the rewrite
+    let scanned = archive.scan(&Filter::default()).unwrap();
+    assert_eq!(scanned.len(), 2);
+    assert_eq!(scanned[0].run_id, "run-x");
+    assert_index_agrees_with_full_scan(&archive);
+}
+
+#[test]
+fn truncated_archive_shorter_than_covered_bytes_is_rebuilt() {
+    let dir = TempDir::new().unwrap();
+    let archive = seed_archive(&dir);
+    archive.scan(&Filter::default()).unwrap();
+    // Truncate the archive to its first line only; the sidecar now
+    // covers more bytes than exist.
+    let text = std::fs::read_to_string(archive.path()).unwrap();
+    let first = text.lines().next().unwrap();
+    std::fs::write(archive.path(), format!("{first}\n")).unwrap();
+    let scanned = archive.scan(&Filter::default()).unwrap();
+    assert_eq!(scanned.len(), 1);
+    assert_index_agrees_with_full_scan(&archive);
+}
+
+#[test]
+fn unterminated_but_complete_final_record_is_served_not_persisted() {
+    let dir = TempDir::new().unwrap();
+    let archive = seed_archive(&dir);
+    // Strip the final newline: load() still parses the record, so the
+    // indexed path must serve it too — but never trust it by offset.
+    let mut text = std::fs::read_to_string(archive.path()).unwrap();
+    assert_eq!(text.pop(), Some('\n'));
+    std::fs::write(archive.path(), &text).unwrap();
+    assert_index_agrees_with_full_scan(&archive);
+    let idx = std::fs::read_to_string(idx_path(&archive)).unwrap();
+    assert_eq!(
+        idx.lines().count(),
+        1 + 5,
+        "the unterminated record must stay out of the persisted sidecar"
+    );
+    // Once a later append terminates it, it gets indexed like any line.
+    archive.append(&[rec("run-e", 500, "gpt", "infer", 0.014)]).unwrap();
+    assert_index_agrees_with_full_scan(&archive);
+    let idx = std::fs::read_to_string(idx_path(&archive)).unwrap();
+    assert_eq!(idx.lines().count(), 1 + 7);
+}
+
+#[test]
+fn corrupt_archive_fails_identically_with_and_without_the_index() {
+    let dir = TempDir::new().unwrap();
+    let archive = seed_archive(&dir);
+    archive.scan(&Filter::default()).unwrap(); // build the sidecar
+    let mut text = std::fs::read_to_string(archive.path()).unwrap();
+    text.push_str("{ not json\n");
+    std::fs::write(archive.path(), text).unwrap();
+    let indexed_err = format!("{:#}", archive.scan(&Filter::default()).unwrap_err());
+    let load_err = format!("{:#}", archive.load().unwrap_err());
+    assert_eq!(indexed_err, load_err, "corrupt archives must fail identically");
+    assert!(indexed_err.contains(":7"), "{indexed_err}");
+}
+
+#[test]
+fn missing_archive_errors_mention_record_flag_through_scan() {
+    let dir = TempDir::new().unwrap();
+    let archive = Archive::new(dir.path().join("none.jsonl"));
+    let err = format!("{:#}", archive.scan(&Filter::default()).unwrap_err());
+    assert!(err.contains("--record"), "{err}");
+    let err = format!("{:#}", archive.resolve("latest").unwrap_err());
+    assert!(err.contains("--record"), "{err}");
+}
+
+// `XBENCH_NO_INDEX` behavior lives in tests/store_index_noindex.rs:
+// env mutation is process-global, so it gets a test binary to itself.

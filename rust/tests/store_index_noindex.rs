@@ -1,0 +1,57 @@
+//! `XBENCH_NO_INDEX=1` must force every query down the full-scan path
+//! without ever touching the sidecar. This is the only test in this
+//! binary on purpose: env mutation is process-global, and the other
+//! index tests (tests/store_index.rs) must never observe it.
+
+use xbench::store::{index, Archive, Filter, RunRecord, SCHEMA_VERSION};
+use xbench::util::TempDir;
+
+fn rec(run: &str, ts: u64, model: &str) -> RunRecord {
+    RunRecord {
+        schema: SCHEMA_VERSION,
+        seq: None,
+        jobs: None,
+        shard: None,
+        run_id: run.into(),
+        timestamp: ts,
+        git_commit: "abc".into(),
+        host: "h".into(),
+        config_hash: "cfg".into(),
+        note: "".into(),
+        model: model.into(),
+        domain: "nlp".into(),
+        mode: "infer".into(),
+        compiler: "fused".into(),
+        batch: 4,
+        iter_secs: 0.01,
+        repeats_secs: vec![0.01],
+        throughput: 400.0,
+        active: 0.6,
+        movement: 0.3,
+        idle: 0.1,
+        host_bytes: 100,
+        device_bytes: 200,
+    }
+}
+
+#[test]
+fn no_index_env_var_forces_the_full_scan_path() {
+    let dir = TempDir::new().unwrap();
+    let archive = Archive::new(dir.path().join("runs.jsonl"));
+    archive
+        .append(&[rec("run-a", 100, "gpt"), rec("run-b", 200, "gpt")])
+        .unwrap();
+    std::env::set_var("XBENCH_NO_INDEX", "1");
+    let scanned = archive.scan(&Filter::for_run("run-b")).unwrap();
+    assert_eq!(scanned.len(), 1);
+    assert_eq!(archive.resolve("latest").unwrap(), "run-b");
+    assert_eq!(archive.summaries().unwrap().len(), 2);
+    assert!(
+        !index::sidecar_path(archive.path()).exists(),
+        "XBENCH_NO_INDEX must not build a sidecar"
+    );
+    // Flipped off, the same handle starts indexing again.
+    std::env::set_var("XBENCH_NO_INDEX", "0");
+    assert_eq!(archive.scan(&Filter::for_run("run-b")).unwrap().len(), 1);
+    assert!(index::sidecar_path(archive.path()).exists());
+}
