@@ -12,10 +12,13 @@
 //!   `synth-artifacts`): need the manifest/artifacts but no device;
 //! - **executing** (`run`, `breakdown`, `compare-compiler`, `sweep`,
 //!   `optim`, `ci`, `train`): bring up the PJRT device and dispatch;
-//! - **service** (`serve`, `submit`, `queue`, `result`): the resident
-//!   benchmark daemon and its clients — `serve` owns its device on the
-//!   executor thread, the clients only speak localhost TCP
-//!   (`docs/SERVICE.md`).
+//! - **service** (`serve`, `submit`, `queue`, `result`, `stats`): the
+//!   resident benchmark daemon and its clients — `serve` owns its
+//!   device on the executor thread, the clients only speak localhost
+//!   TCP (`docs/SERVICE.md`);
+//! - **observability** (`trace`, plus `run --trace`): the flight
+//!   recorder — record a run's structured spans, export them as a
+//!   Chrome trace (`docs/METHODOLOGY.md`).
 
 pub mod breakdown;
 pub mod ci;
@@ -32,10 +35,12 @@ pub mod result;
 pub mod run;
 pub mod runs;
 pub mod serve;
+pub mod stats;
 pub mod submit;
 pub mod sweep;
 pub mod synth;
 pub mod synth_archive;
+pub mod trace;
 pub mod train;
 
 use anyhow::Result;
@@ -76,6 +81,8 @@ pub const VERBS: &[(&str, &str)] = &[
     ("submit", "enqueue a run/sweep/ci job on the daemon"),
     ("queue", "daemon job queue status"),
     ("result", "fetch a completed daemon job's results"),
+    ("stats", "daemon health counters and latency quantiles"),
+    ("trace", "flight recorder: record a traced run / export a Chrome trace"),
 ];
 
 const USAGE: &str = "\
@@ -89,6 +96,10 @@ COMMANDS (paper exhibit in parens):
   run               run benchmarks        [--mode infer|train] [--compiler fused|eager] [--batch N]
                                           [--record] [--note TEXT] [--run-id ID]
                                           [--jobs N] [--shard I/M] [--fail-fast]
+                                          [--trace]   (record flight-recorder spans)
+  trace run [..]    `run` with the flight recorder on (same flags as run)
+  trace export <T>  spans of trace T as Chrome trace JSON  [--out FILE]
+                    (loadable in chrome://tracing / ui.perfetto.dev)
   breakdown         time decomposition    (Fig 1/2 + Table 2)  [--mode infer|train]
   compare-compiler  fused vs eager        (Fig 3/4)
   devices           device profiles       (Table 3)
@@ -131,7 +142,10 @@ BENCHMARK SERVICE (resident daemon; see docs/SERVICE.md):
                                         [--jobs N] [--note TEXT] [--run-id ID]
                                         [--baseline RUN] [--port N]
   queue             job queue status    [--port N]
+                    (shows per-job queue-wait and exec latency once started)
   result <JOB>      fetch job results   [--wait] [--timeout SECS] [--port N]
+  stats             daemon health counters & latency quantiles
+                                        [--prom] [--port N]
 
 EXECUTION FLAGS (run, sweep, ci):
   --jobs N          fan the worklist out over N persistent pool workers
@@ -184,6 +198,43 @@ pub fn emit_table(t: &Table, csv_dir: Option<&Path>, name: &str) -> Result<()> {
 fn parse_port(args: &mut Args) -> Result<u16> {
     let port = args.get_usize("port", crate::service::DEFAULT_PORT as usize)?;
     u16::try_from(port).map_err(|_| anyhow::anyhow!("--port {port} out of range (1-65535)"))
+}
+
+/// The `run` verb's flags, shared by `run` and `trace run` so the two
+/// spellings can never drift apart.
+struct RunArgs {
+    cfg: RunConfig,
+    exec: crate::coordinator::ExecOpts,
+    record: bool,
+    note: String,
+    run_id: Option<String>,
+}
+
+fn parse_run_args(base: &RunConfig, args: &mut Args) -> Result<RunArgs> {
+    let mut cfg = base.clone();
+    cfg.mode = Mode::parse(&args.get_str("mode", "infer")?)?;
+    cfg.compiler = Compiler::parse(&args.get_str("compiler", "fused")?)?;
+    if let Some(b) = args.get_opt("batch")? {
+        cfg.batch = BatchPolicy::Fixed(b.parse()?);
+    }
+    let exec = crate::coordinator::ExecOpts::from_args(args)?;
+    let record = args.has("record");
+    let note = args.get_str("note", "")?;
+    let run_id = args.get_opt("run-id")?;
+    anyhow::ensure!(
+        run_id.is_none() || record,
+        "--run-id only applies when recording (--record)"
+    );
+    Ok(RunArgs { cfg, exec, record, note, run_id })
+}
+
+/// Trace id for a traced run: reuse `--run-id` when given (so `trace
+/// export <run-id>` works off the id the archive records under), else
+/// a timestamped id unique enough for a local spans.jsonl.
+fn trace_id_for(run_id: Option<&str>) -> String {
+    run_id.map(str::to_string).unwrap_or_else(|| {
+        format!("trace-{}-{}", crate::service::unix_now(), std::process::id())
+    })
 }
 
 #[cfg(test)]
@@ -368,6 +419,50 @@ pub fn main() -> Result<()> {
             args.finish()?;
             result::cmd(port, csv_dir.as_deref(), &job, wait, timeout)
         }
+        "stats" => {
+            let port = parse_port(&mut args)?;
+            let prom = args.has("prom");
+            args.finish()?;
+            stats::cmd(port, csv_dir.as_deref(), prom)
+        }
+        // -- flight recorder --------------------------------------------------
+        // `trace export` is archive-adjacent (reads spans.jsonl beside
+        // it, no device); `trace run` brings up the device like `run`.
+        "trace" => {
+            let action = args.positional("trace-action")?;
+            match action.as_str() {
+                "export" => {
+                    let trace_id = args.positional("trace-id")?;
+                    let out = args.get_opt("out")?.map(PathBuf::from);
+                    args.finish()?;
+                    trace::cmd_export(&archive, &trace_id, out.as_deref())
+                }
+                "run" => {
+                    let ra = parse_run_args(&base_cfg, &mut args)?;
+                    args.finish()?;
+                    let suite = Suite::new(Manifest::load(&artifacts)?);
+                    let ctx = Ctx { artifacts, csv_dir, archive, suite, base_cfg };
+                    let device = Rc::new(Device::cpu()?);
+                    eprintln!("platform: {}", device.platform());
+                    let store = ArtifactStore::new(device, ctx.artifacts.clone());
+                    let trace_id = trace_id_for(ra.run_id.as_deref());
+                    trace::with_recorder(&ctx.archive, &trace_id, || {
+                        run::cmd(
+                            &ctx,
+                            &store,
+                            ra.cfg,
+                            &ra.exec,
+                            ra.record,
+                            &ra.note,
+                            ra.run_id.as_deref(),
+                        )
+                    })
+                }
+                other => anyhow::bail!(
+                    "unknown trace action {other:?} (expected: run, export)"
+                ),
+            }
+        }
         sub => {
             // Reject typos before touching the manifest or device — on a
             // bare checkout an unknown verb should say "unknown command",
@@ -406,22 +501,26 @@ pub fn main() -> Result<()> {
                     let store = ArtifactStore::new(device, ctx.artifacts.clone());
                     match sub {
                         "run" => {
-                            let mut cfg = ctx.base_cfg.clone();
-                            cfg.mode = Mode::parse(&args.get_str("mode", "infer")?)?;
-                            cfg.compiler = Compiler::parse(&args.get_str("compiler", "fused")?)?;
-                            if let Some(b) = args.get_opt("batch")? {
-                                cfg.batch = BatchPolicy::Fixed(b.parse()?);
-                            }
-                            let exec = crate::coordinator::ExecOpts::from_args(&mut args)?;
-                            let record = args.has("record");
-                            let note = args.get_str("note", "")?;
-                            let run_id = args.get_opt("run-id")?;
-                            anyhow::ensure!(
-                                run_id.is_none() || record,
-                                "--run-id only applies when recording (--record)"
-                            );
+                            let ra = parse_run_args(&ctx.base_cfg, &mut args)?;
+                            let traced = args.has("trace");
                             args.finish()?;
-                            run::cmd(&ctx, &store, cfg, &exec, record, &note, run_id.as_deref())
+                            let go = || {
+                                run::cmd(
+                                    &ctx,
+                                    &store,
+                                    ra.cfg.clone(),
+                                    &ra.exec,
+                                    ra.record,
+                                    &ra.note,
+                                    ra.run_id.as_deref(),
+                                )
+                            };
+                            if traced {
+                                let trace_id = trace_id_for(ra.run_id.as_deref());
+                                trace::with_recorder(&ctx.archive, &trace_id, go)
+                            } else {
+                                go()
+                            }
                         }
                         "breakdown" => {
                             let mut cfg = ctx.base_cfg.clone();

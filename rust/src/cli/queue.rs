@@ -3,20 +3,41 @@
 use anyhow::Result;
 use std::path::Path;
 
-use crate::report::Table;
+use crate::report::{fmt_secs, Table};
 use crate::service;
 use crate::store::fmt_utc;
+use crate::util::Json;
+
+/// `(queue-wait, exec)` durations derived from a job view's journal
+/// timestamps (`submitted_ts`/`started_ts`/`finished_ts`, unix seconds
+/// — 1 s resolution; the daemon's `stats` quantiles are µs-accurate).
+/// A phase that hasn't happened yet renders as `-`.
+pub(crate) fn latency_cells(job: &Json) -> Result<(String, String)> {
+    let submitted = job.req_usize("submitted_ts")? as u64;
+    let ts = |key: &str| job.get(key).and_then(|v| v.as_usize()).map(|v| v as u64);
+    let (started, finished) = (ts("started_ts"), ts("finished_ts"));
+    let wait = match started {
+        Some(s) => fmt_secs(s.saturating_sub(submitted) as f64),
+        None => "-".into(),
+    };
+    let exec = match (started, finished) {
+        (Some(s), Some(f)) => fmt_secs(f.saturating_sub(s) as f64),
+        _ => "-".into(),
+    };
+    Ok((wait, exec))
+}
 
 pub fn cmd(port: u16, csv_dir: Option<&Path>) -> Result<()> {
     let jobs = service::queue_status(port)?;
     let mut t = Table::new(
         format!("Daemon job queue (127.0.0.1:{port}, {} job(s))", jobs.len()),
-        &["job", "verb", "status", "progress", "submitted", "run id / error"],
+        &["job", "verb", "status", "progress", "submitted", "wait", "exec", "run id / error"],
     );
     for j in &jobs {
         let status = j.req_str("status")?.to_string();
         let done = j.req_usize("done")?;
         let total = j.req_usize("total")?;
+        let (wait, exec) = latency_cells(j)?;
         let tail = j
             .get("error")
             .or_else(|| j.get("run_id"))
@@ -29,6 +50,8 @@ pub fn cmd(port: u16, csv_dir: Option<&Path>) -> Result<()> {
             status,
             if total > 0 { format!("{done}/{total}") } else { "-".into() },
             fmt_utc(j.req_usize("submitted_ts")? as u64),
+            wait,
+            exec,
             tail,
         ]);
     }

@@ -90,6 +90,10 @@ pub fn cmd(
         super::emit_table(&rt, csv_dir, "result_gate")?;
         gate = Some((baseline, regs.len()));
     }
+    // Per-job latency from the journal timestamps, so "why was this
+    // slow" separates time-in-queue from time-measuring at a glance.
+    let (queue_wait, exec_time) = super::queue::latency_cells(&view)?;
+    eprintln!("latency: {queue_wait} queued, {exec_time} executing");
     eprintln!("recorded as {run_id}; query with `xbench cmp`/`rank`/`history`");
     // The documented "scripts can gate on it" contract: regressions
     // exit non-zero (after the tables have been rendered), matching

@@ -1,0 +1,46 @@
+//! `xbench stats` — the daemon's health counters as a table or, with
+//! `--prom`, in Prometheus text exposition format for scraping.
+//!
+//! One `stats` protocol request, one flat numeric payload
+//! ([`crate::service::daemon`]'s `stats_snapshot`): job counts by
+//! state, queue-wait / exec latency quantiles, executor busy fraction,
+//! pool and store counters. The payload is a single snapshot taken
+//! under the daemon's jobs lock, so `jobs_submitted` always equals the
+//! sum of the per-state counts — scripts can assert on it.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+use crate::report::Table;
+use crate::service;
+use crate::util::Json;
+
+pub fn cmd(port: u16, csv_dir: Option<&Path>, prom: bool) -> Result<()> {
+    let stats = service::stats(port)?;
+    let obj = stats.as_object().context("daemon stats payload is not an object")?;
+    // Every stats field is numeric by construction; a non-number here
+    // is a protocol break worth surfacing, not skipping.
+    let mut pairs: Vec<(String, f64)> = Vec::with_capacity(obj.len());
+    for (key, value) in obj {
+        let v = value
+            .as_f64()
+            .with_context(|| format!("stats field {key:?} is not a number"))?;
+        pairs.push((key.clone(), v));
+    }
+
+    if prom {
+        print!("{}", crate::obs::metrics::render_prom(&pairs));
+        return Ok(());
+    }
+
+    let mut t = Table::new(
+        format!("Daemon stats (127.0.0.1:{port})"),
+        &["metric", "value"],
+    );
+    for (key, value) in &pairs {
+        // Json::num renders integers without a trailing ".0" and keeps
+        // fractional values compact — same rule the wire format uses.
+        t.row(vec![key.clone(), Json::num(*value).to_json()]);
+    }
+    super::emit_table(&t, csv_dir, "stats")
+}

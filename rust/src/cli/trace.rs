@@ -1,0 +1,80 @@
+//! `xbench trace` — the flight recorder's CLI surface.
+//!
+//! Two actions:
+//!
+//! - `trace run [run flags]` — an ordinary `xbench run` with the
+//!   [`crate::obs::span`] recorder enabled: every queue-wait, claim,
+//!   compile, warmup, measure, transfer, and store append becomes a
+//!   span, appended as JSONL to `spans.jsonl` beside the archive.
+//!   Measured numbers are unaffected — spans are captured strictly
+//!   outside the timed regions (see `docs/METHODOLOGY.md`).
+//! - `trace export <TRACE> [--out FILE]` — convert one trace's spans
+//!   into a Chrome trace-event file (`chrome://tracing`, Perfetto),
+//!   one track per recording thread.
+//!
+//! `xbench run --trace` is the same recorder under the one-shot verb —
+//! `trace run` exists so "re-run this with tracing" is one word, not a
+//! flag buried in the run reference.
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::store::Archive;
+
+/// Run `f` with the span recorder on, then flush everything captured
+/// (this thread + the shared buffer the pool workers drained into) to
+/// the JSONL sink beside the archive. The recorder is disabled again
+/// even when `f` fails, but spans captured up to the failure are kept —
+/// a trace of a crashing run is exactly when you want the flight
+/// recorder's tape.
+pub fn with_recorder<T>(
+    archive: &Archive,
+    trace_id: &str,
+    f: impl FnOnce() -> Result<T>,
+) -> Result<T> {
+    let sink = crate::obs::span::sink_beside(archive.path());
+    crate::obs::span::enable(trace_id, Some(&sink));
+    let out = f();
+    crate::obs::span::flush_thread();
+    let flushed = crate::obs::span::flush_to_sink();
+    crate::obs::span::disable();
+    let (path, n) = flushed?;
+    if let Some(path) = path {
+        eprintln!(
+            "trace {trace_id}: {n} span(s) appended to {}; export with \
+             `xbench trace export {trace_id}`",
+            path.display()
+        );
+    }
+    out
+}
+
+/// `xbench trace export TRACE [--out FILE]`.
+pub fn cmd_export(archive: &Archive, trace_id: &str, out: Option<&Path>) -> Result<()> {
+    let sink = crate::obs::span::sink_beside(archive.path());
+    anyhow::ensure!(
+        sink.exists(),
+        "no span sink at {} — record one first with `xbench trace run` \
+         or `xbench run --trace`",
+        sink.display()
+    );
+    let spans = crate::obs::span::load_sink(&sink, trace_id)?;
+    anyhow::ensure!(
+        !spans.is_empty(),
+        "no spans recorded under trace id {trace_id:?} in {} \
+         (`xbench trace run` prints the id it records under)",
+        sink.display()
+    );
+    let trace = crate::obs::chrome::trace_json(&spans);
+    let out: PathBuf =
+        out.map(Path::to_path_buf).unwrap_or_else(|| PathBuf::from(format!("{trace_id}.trace.json")));
+    std::fs::write(&out, trace.to_json())
+        .with_context(|| format!("writing {}", out.display()))?;
+    eprintln!(
+        "exported {} span(s) of trace {trace_id} to {} \
+         (load in chrome://tracing or ui.perfetto.dev)",
+        spans.len(),
+        out.display()
+    );
+    Ok(())
+}

@@ -264,7 +264,20 @@ impl<'a> Runner<'a> {
         let infer = entry
             .infer_at(batch)
             .ok_or_else(|| anyhow::anyhow!("{}: no artifact at batch {batch}", entry.name))?;
+        let key = crate::store::bench_key_of(
+            &entry.name,
+            self.cfg.mode.as_str(),
+            Compiler::Fused.as_str(),
+            batch,
+        );
+        let compile_t0 = std::time::Instant::now();
         let exe = self.store.get(&infer.artifact)?;
+        crate::obs::span::record(
+            crate::obs::SpanKind::Compile,
+            &key,
+            compile_t0,
+            std::time::Instant::now(),
+        );
         let device = self.store.device();
 
         // Resident state: parameters uploaded once, untimed (prefetched —
@@ -284,11 +297,20 @@ impl<'a> Runner<'a> {
         let mut rl_env = is_rl.then(|| CartPoleSim::new(batch));
         let mut leaked: Vec<xla::PjRtBuffer> = Vec::new();
 
+        let span_on = crate::obs::span::is_enabled();
         let mut repeats: Vec<(f64, Timeline)> = Vec::new();
         for rep in 0..self.cfg.repeats {
+            // Span boundaries are captured between iterations — never
+            // inside a timed phase (iter_secs sums Timeline phases, so
+            // these clock reads cannot leak into reported numbers).
+            let rep_t0 = std::time::Instant::now();
+            let mut measure_from = rep_t0;
             let mut tl = Timeline::new();
             for iter in 0..self.cfg.warmup + self.cfg.iterations {
                 let measured = iter >= self.cfg.warmup;
+                if span_on && iter == self.cfg.warmup {
+                    measure_from = std::time::Instant::now();
+                }
                 let mut iter_tl = Timeline::new();
                 let stream = (rep * 1000 + iter) as u64;
 
@@ -343,6 +365,17 @@ impl<'a> Runner<'a> {
                     tl.extend(&iter_tl);
                 }
             }
+            if span_on {
+                let rep_end = std::time::Instant::now();
+                if self.cfg.warmup > 0 {
+                    crate::obs::span::record(
+                        crate::obs::SpanKind::Warmup, &key, rep_t0, measure_from,
+                    );
+                }
+                crate::obs::span::record(
+                    crate::obs::SpanKind::Measure, &key, measure_from, rep_end,
+                );
+            }
             let iter_secs = tl.total().as_secs_f64() / self.cfg.iterations as f64;
             repeats.push((iter_secs, tl));
         }
@@ -364,7 +397,20 @@ impl<'a> Runner<'a> {
             .as_ref()
             .ok_or_else(|| anyhow::anyhow!("{} is inference-only", entry.name))?;
         let batch = train.batch;
+        let key = crate::store::bench_key_of(
+            &entry.name,
+            self.cfg.mode.as_str(),
+            Compiler::Fused.as_str(),
+            batch,
+        );
+        let compile_t0 = std::time::Instant::now();
         let exe = self.store.get(&train.artifact)?;
+        crate::obs::span::record(
+            crate::obs::SpanKind::Compile,
+            &key,
+            compile_t0,
+            std::time::Instant::now(),
+        );
         let device = self.store.device();
 
         let param_lits = params::load_params(self.store.dir(), entry)?;
@@ -379,11 +425,19 @@ impl<'a> Runner<'a> {
         let mut rl_env = is_rl.then(|| CartPoleSim::new(batch));
         let mut leaked: Vec<xla::PjRtBuffer> = Vec::new();
 
+        let span_on = crate::obs::span::is_enabled();
         let mut repeats: Vec<(f64, Timeline)> = Vec::new();
         for rep in 0..self.cfg.repeats {
+            // Same contract as the inference loop: clock reads for
+            // spans happen between iterations, outside timed phases.
+            let rep_t0 = std::time::Instant::now();
+            let mut measure_from = rep_t0;
             let mut tl = Timeline::new();
             for iter in 0..self.cfg.warmup + self.cfg.iterations {
                 let measured = iter >= self.cfg.warmup;
+                if span_on && iter == self.cfg.warmup {
+                    measure_from = std::time::Instant::now();
+                }
                 let mut iter_tl = Timeline::new();
                 let stream = (rep * 1000 + iter) as u64;
 
@@ -433,6 +487,17 @@ impl<'a> Runner<'a> {
                     tl.extend(&iter_tl);
                 }
             }
+            if span_on {
+                let rep_end = std::time::Instant::now();
+                if self.cfg.warmup > 0 {
+                    crate::obs::span::record(
+                        crate::obs::SpanKind::Warmup, &key, rep_t0, measure_from,
+                    );
+                }
+                crate::obs::span::record(
+                    crate::obs::SpanKind::Measure, &key, measure_from, rep_end,
+                );
+            }
             let iter_secs = tl.total().as_secs_f64() / self.cfg.iterations as f64;
             repeats.push((iter_secs, tl));
         }
@@ -460,6 +525,32 @@ impl<'a> Runner<'a> {
         let secs: Vec<f64> = repeats.iter().map(|(s, _)| *s).collect();
         let mid = metrics::median_run_index(&secs);
         let (iter_secs, ref tl) = repeats[mid];
+        if crate::obs::span::is_enabled() {
+            // Fold the median run's Timeline phases into h2d/d2h/host
+            // spans, post-hoc: the phases were timed by the protocol
+            // itself, so replaying them as spans (laid out end-to-end,
+            // ending now) adds zero cost inside the measured regions.
+            let bench_key = crate::store::bench_key_of(
+                &entry.name,
+                self.cfg.mode.as_str(),
+                compiler.as_str(),
+                batch,
+            );
+            let total_us = tl.total().as_micros() as u64;
+            let mut at = crate::obs::span::now_us().saturating_sub(total_us);
+            for p in &tl.phases {
+                let dur = p.elapsed.as_micros() as u64;
+                let kind = match p.kind {
+                    PhaseKind::H2D => crate::obs::SpanKind::H2d,
+                    PhaseKind::D2H => crate::obs::SpanKind::D2h,
+                    PhaseKind::Host => crate::obs::SpanKind::Host,
+                    PhaseKind::Compute => crate::obs::SpanKind::Measure,
+                };
+                let label = format!("{bench_key}:{}", p.label);
+                crate::obs::span::record_manual(kind, &label, at, dur);
+                at += dur;
+            }
+        }
         Ok(RunResult {
             model: entry.name.clone(),
             domain: entry.domain.clone(),

@@ -128,6 +128,24 @@ pub fn parse_jobs_flag(args: &mut Args) -> Result<Option<usize>> {
     }
 }
 
+/// Run one worklist item under a `pool_task` span (label = the item's
+/// label) when tracing is on. The instants are captured outside `f` —
+/// span recording cost can never land inside the measured item.
+fn traced_item<T>(label: &str, f: impl FnOnce() -> Result<T>) -> Result<T> {
+    if !crate::obs::span::is_enabled() {
+        return f();
+    }
+    let t0 = std::time::Instant::now();
+    let out = f();
+    crate::obs::span::record(
+        crate::obs::SpanKind::PoolTask,
+        label,
+        t0,
+        std::time::Instant::now(),
+    );
+    out
+}
+
 /// The `--jobs` default when the flag is omitted: all available
 /// hardware threads ([`run_partitioned`] caps at the worklist length,
 /// so small suites never over-spawn). Falls back to 1 when the OS
@@ -205,7 +223,7 @@ where
     if jobs <= 1 {
         // Serial path: caller's store, caller's thread, worklist order.
         for &seq in &work {
-            match f(store, &items[seq]) {
+            match traced_item(&labels[seq], || f(store, &items[seq])) {
                 Ok(t) => {
                     progress.tick(&labels[seq], "ok");
                     completed.push((seq, t));
@@ -245,7 +263,7 @@ where
                 break;
             }
             let seq = work[slot];
-            match f(wstore, &items[seq]) {
+            match traced_item(&labels[seq], || f(wstore, &items[seq])) {
                 Ok(t) => {
                     progress.tick(&labels[seq], "ok");
                     sink.lock().unwrap().0.push((seq, t));

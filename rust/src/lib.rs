@@ -55,6 +55,7 @@ pub mod coordinator;
 pub mod devmodel;
 pub mod hlo;
 pub mod metrics;
+pub mod obs;
 pub mod optim;
 pub mod pool;
 pub mod profiler;

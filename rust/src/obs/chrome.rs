@@ -1,0 +1,90 @@
+//! Chrome trace-event exporter.
+//!
+//! Folds recorded spans into the Trace Event Format consumed by
+//! Perfetto and `chrome://tracing`: a JSON object with a
+//! `traceEvents` array of begin (`ph: "B"`) / end (`ph: "E"`) pairs,
+//! one per span, grouped onto tracks by recording thread id. Thread
+//! metadata events (`ph: "M"`, `thread_name`) label each track with
+//! the recording thread's name (`xbench-pool-0`, the daemon executor,
+//! …), so a trace opens with human-readable lanes.
+
+use crate::util::Json;
+
+use super::span::SpanRec;
+
+/// Build the trace-event JSON document for a set of spans.
+///
+/// Every span becomes exactly one `B`/`E` pair on its thread's track
+/// (timestamps in microseconds, as the format requires), so the event
+/// stream is balanced by construction and nests correctly when spans
+/// contain one another.
+pub fn trace_json(spans: &[SpanRec]) -> Json {
+    let mut events: Vec<Json> = Vec::with_capacity(spans.len() * 2 + 8);
+
+    // One thread_name metadata event per distinct track.
+    let mut named: Vec<u64> = Vec::new();
+    for s in spans {
+        if named.contains(&s.tid) {
+            continue;
+        }
+        named.push(s.tid);
+        events.push(Json::obj(vec![
+            ("ph", Json::str("M")),
+            ("name", Json::str("thread_name")),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(s.tid as f64)),
+            ("args", Json::obj(vec![("name", Json::str(&s.thread))])),
+        ]));
+    }
+
+    // Emit B events in start order and interleave each span's E at the
+    // right timestamp: within a track, trace viewers require balanced,
+    // properly nested begin/end. Sorting all B/E boundaries by time
+    // (ends before begins on ties, deeper spans closing first) gives
+    // exactly that for the tree-shaped spans the recorder produces.
+    #[derive(Clone)]
+    struct Edge<'a> {
+        ts: u64,
+        // 0 = end, 1 = begin at equal timestamps; ends must close first.
+        begin: bool,
+        span: &'a SpanRec,
+    }
+    let mut edges: Vec<Edge> = Vec::with_capacity(spans.len() * 2);
+    for s in spans {
+        edges.push(Edge { ts: s.start_us, begin: true, span: s });
+        edges.push(Edge { ts: s.start_us + s.dur_us, begin: false, span: s });
+    }
+    edges.sort_by(|a, b| {
+        a.ts.cmp(&b.ts)
+            .then(a.begin.cmp(&b.begin)) // ends close before begins open
+            .then_with(|| {
+                if a.begin {
+                    b.span.dur_us.cmp(&a.span.dur_us) // outer opens first
+                } else {
+                    a.span.dur_us.cmp(&b.span.dur_us) // inner closes first
+                }
+            })
+    });
+    for e in edges {
+        let mut fields = vec![
+            ("ph", Json::str(if e.begin { "B" } else { "E" })),
+            ("name", Json::str(&e.span.label)),
+            ("cat", Json::str(e.span.kind.as_str())),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(e.span.tid as f64)),
+            ("ts", Json::num(e.ts as f64)),
+        ];
+        if e.begin {
+            fields.push((
+                "args",
+                Json::obj(vec![("trace", Json::str(&e.span.trace))]),
+            ));
+        }
+        events.push(Json::obj(fields));
+    }
+
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}

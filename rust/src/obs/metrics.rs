@@ -1,0 +1,124 @@
+//! Always-on process metrics: monotonic counters, an executor busy
+//! clock, and streaming latency sketches.
+//!
+//! Everything here is a relaxed atomic — instrumented sites pay one
+//! `fetch_add` and never block, so the registry can stay on even when
+//! tracing is off. Latency quantiles come from a log₂-bucketed
+//! [`Sketch`] (64 counters keyed by the bit length of the sample in
+//! microseconds): deterministic, lock-free, and bounded-memory, at the
+//! cost of ≤ 2× relative error on the reported quantile — plenty for
+//! "is queue wait seconds or milliseconds" dashboard questions.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Streaming quantile sketch over `u64` microsecond samples.
+///
+/// Bucket `i` counts samples whose bit length is `i` — i.e. values in
+/// `[2^(i-1), 2^i)` (bucket 0 counts zeros). A quantile query walks
+/// the cumulative histogram and reports the upper bound of the bucket
+/// the rank lands in.
+#[derive(Debug)]
+pub struct Sketch {
+    buckets: [AtomicU64; 64],
+}
+
+impl Default for Sketch {
+    fn default() -> Self {
+        Sketch { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+}
+
+impl Sketch {
+    fn bucket_of(us: u64) -> usize {
+        (64 - us.leading_zeros()) as usize
+    }
+
+    pub fn record_us(&self, us: u64) {
+        let i = Self::bucket_of(us).min(63);
+        self.buckets[i].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// The upper bound (µs) of the bucket holding quantile `q` in
+    /// `[0, 1]`; 0 when the sketch is empty.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return if i == 0 { 0 } else { 1u64 << i };
+            }
+        }
+        1u64 << 63
+    }
+}
+
+/// The process metrics registry. One global instance per process —
+/// cheap enough to leave on unconditionally.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Durable journal appends (every fsync'd event line).
+    pub journal_appends: AtomicU64,
+    /// Journal compactions (startup, shutdown, or `--fresh` resets).
+    pub journal_compactions: AtomicU64,
+    /// Archive record appends.
+    pub archive_appends: AtomicU64,
+    /// Microseconds the daemon executor spent running jobs.
+    pub busy_us: AtomicU64,
+    /// Queue-wait latency per claimed job (submit → claim).
+    pub queue_wait: Sketch,
+    /// Execution latency per settled job (claim → done/failed).
+    pub exec: Sketch,
+}
+
+impl Metrics {
+    pub fn incr(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_busy_us(&self, us: u64) {
+        self.busy_us.fetch_add(us, Ordering::Relaxed);
+    }
+}
+
+/// The global registry plus the instant it came alive (for uptime /
+/// busy-fraction math).
+pub fn global() -> &'static Metrics {
+    static METRICS: OnceLock<Metrics> = OnceLock::new();
+    METRICS.get_or_init(Metrics::default)
+}
+
+pub fn started() -> Instant {
+    static STARTED: OnceLock<Instant> = OnceLock::new();
+    *STARTED.get_or_init(Instant::now)
+}
+
+/// Fraction of process uptime the executor spent running jobs.
+pub fn busy_fraction() -> f64 {
+    let up = started().elapsed().as_micros() as f64;
+    if up <= 0.0 {
+        return 0.0;
+    }
+    (global().busy_us.load(Ordering::Relaxed) as f64 / up).min(1.0)
+}
+
+/// Render `(key, value)` pairs in the Prometheus text exposition
+/// format (`xbench_<key> <value>`, untyped), one metric per line.
+pub fn render_prom(pairs: &[(String, f64)]) -> String {
+    let mut out = String::new();
+    for (key, value) in pairs {
+        out.push_str(&format!("xbench_{key} {}\n", crate::util::json::Value::num(*value).to_json()));
+    }
+    out
+}

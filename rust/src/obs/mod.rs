@@ -1,0 +1,24 @@
+//! Flight recorder: structured trace spans, process metrics, and
+//! Chrome-trace export.
+//!
+//! Three cooperating pieces:
+//!
+//! - [`span`] — a process-wide span recorder. Instrumented sites call
+//!   [`span::record`] with monotonic begin/end instants; spans buffer
+//!   in a thread-local vector (no lock on the hot path) and drain to a
+//!   JSONL sink beside the archive. Recording is a no-op unless
+//!   tracing was explicitly enabled, and capture always happens
+//!   *outside* timed regions — the same contract archive indexing
+//!   follows: observability must never perturb what it observes.
+//! - [`metrics`] — an always-on registry of monotonic counters and
+//!   streaming log₂-bucket latency sketches (p50/p99 without storing
+//!   samples). The daemon snapshots it for the `stats` protocol op.
+//! - [`chrome`] — folds recorded spans into the Chrome trace-event
+//!   JSON format (`trace.json`) loadable in Perfetto or
+//!   `chrome://tracing`, one track per recording thread.
+
+pub mod chrome;
+pub mod metrics;
+pub mod span;
+
+pub use span::{SpanKind, SpanRec};

@@ -1,0 +1,334 @@
+//! Process-wide span recorder.
+//!
+//! Spans are `(kind, label, thread, start_us, dur_us)` intervals on a
+//! single process-wide monotonic clock (microseconds since the first
+//! observation in the process). The hot path — [`record`] — touches
+//! only an atomic load and a thread-local `Vec` push: no locks, no
+//! allocation beyond the label string, and nothing at all when tracing
+//! is disabled. Buffers drain to a shared list on [`flush_thread`] /
+//! [`drain`], and [`flush_to_sink`] appends the collected spans to a
+//! JSONL file beside the archive (one object per line, same durability
+//! idiom as every other store file).
+//!
+//! Instrumented sites must capture their `Instant`s *outside* the
+//! region they time — begin before the measured work, end after it —
+//! so enabling tracing can never change what the benchmark measures.
+
+use std::cell::RefCell;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use crate::util::Json;
+
+/// What a span measured. The taxonomy is closed on purpose: every
+/// consumer (Chrome export, per-kind rollups) can match exhaustively.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    /// Job sat in the daemon queue between submit and claim.
+    QueueWait,
+    /// Executor claimed a job (journal write + state flip).
+    Claim,
+    /// Artifact lookup/compile (pool cache miss does real work here).
+    Compile,
+    /// Warmup iterations of one bench config.
+    Warmup,
+    /// Measured iterations of one bench config.
+    Measure,
+    /// Host-to-device transfer phase (folded from `profiler::Timeline`).
+    H2d,
+    /// Device-to-host transfer phase (folded from `profiler::Timeline`).
+    D2h,
+    /// Host-side compute phase (folded from `profiler::Timeline`).
+    Host,
+    /// One unit of work on a warm-pool worker thread.
+    PoolTask,
+    /// Durable journal append (fsync'd).
+    JournalAppend,
+    /// Archive record append.
+    ArchiveRecord,
+}
+
+impl SpanKind {
+    pub const ALL: [SpanKind; 11] = [
+        SpanKind::QueueWait,
+        SpanKind::Claim,
+        SpanKind::Compile,
+        SpanKind::Warmup,
+        SpanKind::Measure,
+        SpanKind::H2d,
+        SpanKind::D2h,
+        SpanKind::Host,
+        SpanKind::PoolTask,
+        SpanKind::JournalAppend,
+        SpanKind::ArchiveRecord,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SpanKind::QueueWait => "queue_wait",
+            SpanKind::Claim => "claim",
+            SpanKind::Compile => "compile",
+            SpanKind::Warmup => "warmup",
+            SpanKind::Measure => "measure",
+            SpanKind::H2d => "h2d",
+            SpanKind::D2h => "d2h",
+            SpanKind::Host => "host",
+            SpanKind::PoolTask => "pool_task",
+            SpanKind::JournalAppend => "journal_append",
+            SpanKind::ArchiveRecord => "archive_record",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<SpanKind> {
+        for k in SpanKind::ALL {
+            if k.as_str() == s {
+                return Ok(k);
+            }
+        }
+        bail!("unknown span kind {s:?}");
+    }
+}
+
+/// One recorded span, stamped with the trace id it belongs to.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanRec {
+    pub trace: String,
+    pub kind: SpanKind,
+    pub label: String,
+    pub tid: u64,
+    pub thread: String,
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+impl SpanRec {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("trace", Json::str(&self.trace)),
+            ("kind", Json::str(self.kind.as_str())),
+            ("label", Json::str(&self.label)),
+            ("tid", Json::num(self.tid as f64)),
+            ("thread", Json::str(&self.thread)),
+            ("start_us", Json::num(self.start_us as f64)),
+            ("dur_us", Json::num(self.dur_us as f64)),
+        ])
+    }
+
+    pub fn decode(v: &Json) -> Result<SpanRec> {
+        Ok(SpanRec {
+            trace: v.req_str("trace")?.to_string(),
+            kind: SpanKind::parse(v.req_str("kind")?)?,
+            label: v.req_str("label")?.to_string(),
+            tid: v.req_usize("tid")? as u64,
+            thread: v.req_str("thread")?.to_string(),
+            start_us: v.req_usize("start_us")? as u64,
+            dur_us: v.req_usize("dur_us")? as u64,
+        })
+    }
+}
+
+/// A span before it is stamped with the trace id. `gen` ties it to the
+/// enable() generation that was live when it was recorded, so a buffer
+/// that never flushed before `disable()` cannot leak stale spans into
+/// the next trace.
+#[derive(Debug, Clone)]
+struct RawSpan {
+    generation: u64,
+    kind: SpanKind,
+    label: String,
+    tid: u64,
+    thread: String,
+    start_us: u64,
+    dur_us: u64,
+}
+
+struct Shared {
+    trace_id: String,
+    sink: Option<PathBuf>,
+    drained: Vec<RawSpan>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static GENERATION: AtomicU64 = AtomicU64::new(0);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+fn shared() -> &'static Mutex<Shared> {
+    static SHARED: OnceLock<Mutex<Shared>> = OnceLock::new();
+    SHARED.get_or_init(|| {
+        Mutex::new(Shared { trace_id: String::new(), sink: None, drained: Vec::new() })
+    })
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+thread_local! {
+    static LOCAL: RefCell<Vec<RawSpan>> = const { RefCell::new(Vec::new()) };
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Flush the local buffer to the shared list once it crosses this many
+/// spans, bounding per-thread memory without a lock per record.
+const LOCAL_FLUSH_HIGH_WATER: usize = 8192;
+
+/// Is span recording live? Instrumented sites with any setup cost
+/// (formatting a label, reading a clock twice) should gate on this.
+#[inline]
+pub fn is_enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Microseconds since the process span epoch (monotonic).
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// Turn recording on for a new trace. Clears anything drained from a
+/// previous trace; spans recorded from now on carry `trace_id` and
+/// flush to `sink` (a JSONL file) on [`flush_to_sink`].
+pub fn enable(trace_id: &str, sink: Option<&Path>) {
+    let mut sh = shared().lock().unwrap();
+    sh.trace_id = trace_id.to_string();
+    sh.sink = sink.map(Path::to_path_buf);
+    sh.drained.clear();
+    GENERATION.fetch_add(1, Ordering::SeqCst);
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Turn recording off. Buffered spans stay retrievable via [`drain`].
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Record a span that ran from `start` to `end`. No-op when disabled.
+/// Call *after* the region completes — both instants must already be
+/// in the past, so recording cost can never land inside the region.
+pub fn record(kind: SpanKind, label: &str, start: Instant, end: Instant) {
+    if !is_enabled() {
+        return;
+    }
+    let ep = epoch();
+    let start_us = start.saturating_duration_since(ep).as_micros() as u64;
+    let dur_us = end.saturating_duration_since(start).as_micros() as u64;
+    push(kind, label, start_us, dur_us);
+}
+
+/// Record a span from explicit epoch-relative microseconds — for spans
+/// reconstructed after the fact (queue waits derived from journal
+/// timestamps, Timeline phases folded post-run). No-op when disabled.
+pub fn record_manual(kind: SpanKind, label: &str, start_us: u64, dur_us: u64) {
+    if !is_enabled() {
+        return;
+    }
+    push(kind, label, start_us, dur_us);
+}
+
+fn push(kind: SpanKind, label: &str, start_us: u64, dur_us: u64) {
+    let tid = TID.with(|t| *t);
+    let thread = std::thread::current().name().unwrap_or("unnamed").to_string();
+    let raw = RawSpan {
+        generation: GENERATION.load(Ordering::Relaxed),
+        kind,
+        label: label.to_string(),
+        tid,
+        thread,
+        start_us,
+        dur_us,
+    };
+    let overflow = LOCAL.with(|buf| {
+        let mut buf = buf.borrow_mut();
+        buf.push(raw);
+        buf.len() >= LOCAL_FLUSH_HIGH_WATER
+    });
+    if overflow {
+        flush_thread();
+    }
+}
+
+/// Move this thread's buffered spans to the shared list. Worker
+/// threads call this before parking/exiting so [`drain`] sees their
+/// spans; cheap no-op when the buffer is empty.
+pub fn flush_thread() {
+    let spans = LOCAL.with(|buf| std::mem::take(&mut *buf.borrow_mut()));
+    if spans.is_empty() {
+        return;
+    }
+    let mut sh = shared().lock().unwrap();
+    let generation = GENERATION.load(Ordering::Relaxed);
+    sh.drained.extend(spans.into_iter().filter(|s| s.generation == generation));
+}
+
+/// Take every span collected so far (this thread's buffer plus all
+/// flushed ones), stamped with the current trace id, ordered by start.
+pub fn drain() -> Vec<SpanRec> {
+    flush_thread();
+    let mut sh = shared().lock().unwrap();
+    let trace = sh.trace_id.clone();
+    let mut out: Vec<SpanRec> = std::mem::take(&mut sh.drained)
+        .into_iter()
+        .map(|r| SpanRec {
+            trace: trace.clone(),
+            kind: r.kind,
+            label: r.label,
+            tid: r.tid,
+            thread: r.thread,
+            start_us: r.start_us,
+            dur_us: r.dur_us,
+        })
+        .collect();
+    out.sort_by_key(|s| (s.start_us, s.tid));
+    out
+}
+
+/// Drain and append every collected span to the configured sink file.
+/// Returns the sink path and how many spans were written (0 with no
+/// sink configured — the spans are dropped, matching `--trace`-less
+/// runs where nothing was recorded anyway).
+pub fn flush_to_sink() -> Result<(Option<PathBuf>, usize)> {
+    let sink = shared().lock().unwrap().sink.clone();
+    let spans = drain();
+    let Some(path) = sink else { return Ok((None, 0)) };
+    if spans.is_empty() {
+        return Ok((Some(path), 0));
+    }
+    let mut buf = String::new();
+    for s in &spans {
+        buf.push_str(&s.to_json().to_json());
+        buf.push('\n');
+    }
+    crate::store::append_jsonl(&path, buf.as_bytes())
+        .with_context(|| format!("appending spans to {}", path.display()))?;
+    Ok((Some(path), spans.len()))
+}
+
+/// Load every span of one trace id back from a sink file.
+pub fn load_sink(path: &Path, trace_id: &str) -> Result<Vec<SpanRec>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading span sink {}", path.display()))?;
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = crate::util::json::parse(line)
+            .with_context(|| format!("{}:{}: bad span line", path.display(), i + 1))?;
+        let rec = SpanRec::decode(&v)
+            .with_context(|| format!("{}:{}: bad span record", path.display(), i + 1))?;
+        if rec.trace == trace_id {
+            out.push(rec);
+        }
+    }
+    out.sort_by_key(|s| (s.start_us, s.tid));
+    Ok(out)
+}
+
+/// Conventional sink path: `spans.jsonl` beside the archive.
+pub fn sink_beside(archive_path: &Path) -> PathBuf {
+    archive_path.with_file_name("spans.jsonl")
+}

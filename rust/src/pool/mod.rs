@@ -318,6 +318,10 @@ fn worker_loop(
             }
         };
         task(&store);
+        // Worker buffers drain here — after the task, outside anything
+        // it timed — so a traced fan-out never waits on a worker that
+        // parked with spans still buffered.
+        crate::obs::span::flush_thread();
         let hits = store.cache_hits();
         let compiles = store.len();
         shared.cache_hits.fetch_add(hits - seen_hits, Ordering::Relaxed);

@@ -87,6 +87,11 @@ pub fn fetch_result(
     }
 }
 
+/// Snapshot of the daemon's health counters (the `stats` op payload).
+pub fn stats(port: u16) -> Result<Json> {
+    Ok(request(port, &Request::Stats)?.req("stats")?.clone())
+}
+
 /// Ask the daemon to stop (finishes the running job, abandons pending).
 pub fn shutdown(port: u16) -> Result<()> {
     request(port, &Request::Shutdown).map(|_| ())

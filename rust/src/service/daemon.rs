@@ -106,6 +106,11 @@ struct JobRecord {
     spec: JobSpec,
     status: Status,
     submitted_ts: u64,
+    /// Monotonic submit instant for jobs submitted to *this* daemon —
+    /// queue-wait latency at claim time gets microsecond resolution
+    /// instead of the journal's whole-second timestamps. Replayed jobs
+    /// keep `None` and fall back to the journal clock.
+    submitted_at: Option<std::time::Instant>,
     started_ts: Option<u64>,
     finished_ts: Option<u64>,
     /// Crash interruptions survived so far (journal-replayed).
@@ -333,6 +338,9 @@ impl Daemon {
     /// device — a failure there fails this call, not a later job),
     /// then serves the accept loop on the calling thread.
     pub fn run(self, suite: Suite, archive: Archive, base_cfg: RunConfig) -> Result<()> {
+        // Pin the metrics uptime clock to daemon startup, not to the
+        // first stats request.
+        crate::obs::metrics::started();
         // Held until run() returns (any path): exactly one daemon may
         // replay/append a given journal at a time. Acquired before the
         // --fresh reset below, so --fresh can never destroy a journal
@@ -345,6 +353,28 @@ impl Daemon {
                 "--fresh: discarded job journal {}",
                 self.state.journal.path().display()
             );
+        } else if self.state.journal.path().exists() {
+            // Crash-time compaction: a daemon that only ever dies by
+            // SIGKILL never reaches the clean-shutdown compaction, so
+            // its journal would grow without bound. Ownership is held
+            // and nothing is appending yet, so compacting here is as
+            // safe as at shutdown — and equally optional: a failure
+            // replays the uncompacted journal below.
+            match self.state.journal.compact(&self.state.spill, unix_now(), self.retain_secs) {
+                Ok(stats) => eprintln!(
+                    "startup-compacted journal {}: {} settled job(s) folded, {} dropped, \
+                     {} -> {} bytes",
+                    self.state.journal.path().display(),
+                    stats.settled,
+                    stats.dropped,
+                    stats.bytes_before,
+                    stats.bytes_after
+                ),
+                Err(e) => eprintln!(
+                    "startup-compacting journal {}: {e:#}",
+                    self.state.journal.path().display()
+                ),
+            }
         }
         recover(&self.state)
             .with_context(|| format!("replaying journal {}", self.state.journal.path().display()))?;
@@ -552,6 +582,7 @@ fn recover(state: &ServiceState) -> Result<()> {
             spec,
             status,
             submitted_ts: rj.submitted_ts,
+            submitted_at: None,
             started_ts: rj.started_ts,
             finished_ts,
             interruptions,
@@ -600,11 +631,37 @@ fn executor_loop(
                     break None;
                 }
                 if let Some(i) = jobs.iter().position(|j| j.status.is_claimable()) {
+                    let claim_t0 = std::time::Instant::now();
                     let retry = jobs[i].status == Status::Interrupted;
                     let ts = unix_now();
+                    // Queue wait = submit → claim. Jobs submitted to
+                    // this daemon carry a monotonic instant; replayed
+                    // ones fall back to the journal's second clock.
+                    let wait_us = jobs[i]
+                        .submitted_at
+                        .map(|t| t.elapsed().as_micros() as u64)
+                        .unwrap_or_else(|| {
+                            ts.saturating_sub(jobs[i].submitted_ts) * 1_000_000
+                        });
                     jobs[i].status = Status::Running;
                     jobs[i].started_ts = Some(ts);
                     state.journal_event(&JobEvent::Started { job: jobs[i].id.clone(), ts });
+                    crate::obs::metrics::global().queue_wait.record_us(wait_us);
+                    if crate::obs::span::is_enabled() {
+                        let end_us = crate::obs::span::now_us();
+                        crate::obs::span::record_manual(
+                            crate::obs::SpanKind::QueueWait,
+                            &jobs[i].id,
+                            end_us.saturating_sub(wait_us),
+                            wait_us,
+                        );
+                        crate::obs::span::record(
+                            crate::obs::SpanKind::Claim,
+                            &jobs[i].id,
+                            claim_t0,
+                            std::time::Instant::now(),
+                        );
+                    }
                     if retry {
                         eprintln!("job {} retrying after crash interruption", jobs[i].id);
                     }
@@ -621,7 +678,17 @@ fn executor_loop(
             archive: &archive,
             base_cfg: &base_cfg,
         };
+        let exec_t0 = std::time::Instant::now();
         let outcome = execute_job(&env, &spec, &progress);
+        let exec_us = exec_t0.elapsed().as_micros() as u64;
+        {
+            let m = crate::obs::metrics::global();
+            m.exec.record_us(exec_us);
+            m.add_busy_us(exec_us);
+        }
+        // Executor-thread spans drain outside any job, so the next
+        // job's queue wait is never inflated by span bookkeeping.
+        crate::obs::span::flush_thread();
         let mut jobs = state.jobs.lock().unwrap();
         let job = &mut jobs[index];
         let ts = unix_now();
@@ -736,6 +803,7 @@ fn handle_request(req: Request, state: &Arc<ServiceState>) -> Json {
                 spec,
                 status: Status::Pending,
                 submitted_ts: ts,
+                submitted_at: Some(std::time::Instant::now()),
                 started_ts: None,
                 finished_ts: None,
                 interruptions: 0,
@@ -782,6 +850,7 @@ fn handle_request(req: Request, state: &Arc<ServiceState>) -> Json {
                 }
             }
         }
+        Request::Stats => ok_response(vec![("stats", stats_snapshot(state))]),
         Request::Shutdown => {
             // Flag flipped under the jobs lock — see the Submit arm.
             // (The accept-loop nudge happens in handle_connection,
@@ -794,6 +863,63 @@ fn handle_request(req: Request, state: &Arc<ServiceState>) -> Json {
             ok_response(vec![])
         }
     }
+}
+
+/// Assemble the `stats` op payload: job counters from the (journaled,
+/// restart-surviving) job table, latency quantiles and I/O counters
+/// from [`crate::obs::metrics`], pool counters from the shared
+/// [`crate::pool`] registry. Counters are consistent by construction —
+/// `jobs_submitted` equals the sum of the per-state counts, because
+/// both come from one snapshot under the jobs lock.
+fn stats_snapshot(state: &Arc<ServiceState>) -> Json {
+    let (mut pending, mut running, mut interrupted) = (0u64, 0u64, 0u64);
+    let (mut done, mut failed, mut abandoned) = (0u64, 0u64, 0u64);
+    let mut interruptions = 0u64;
+    let submitted = {
+        let jobs = state.jobs.lock().unwrap();
+        for j in jobs.iter() {
+            interruptions += j.interruptions as u64;
+            match j.status {
+                Status::Pending => pending += 1,
+                Status::Running => running += 1,
+                Status::Interrupted => interrupted += 1,
+                Status::Done => done += 1,
+                Status::Failed(_) => failed += 1,
+                Status::Abandoned => abandoned += 1,
+            }
+        }
+        jobs.len() as u64
+    };
+    let m = crate::obs::metrics::global();
+    let load = |c: &std::sync::atomic::AtomicU64| c.load(Ordering::Relaxed) as f64;
+    let pool = crate::pool::shared(&state.artifacts).stats();
+    let journal_bytes =
+        std::fs::metadata(state.journal.path()).map(|md| md.len()).unwrap_or(0);
+    Json::obj(vec![
+        ("jobs_submitted", Json::num(submitted as f64)),
+        ("jobs_pending", Json::num(pending as f64)),
+        ("jobs_running", Json::num(running as f64)),
+        ("jobs_interrupted", Json::num(interrupted as f64)),
+        ("jobs_done", Json::num(done as f64)),
+        ("jobs_failed", Json::num(failed as f64)),
+        ("jobs_abandoned", Json::num(abandoned as f64)),
+        ("job_interruptions_total", Json::num(interruptions as f64)),
+        ("queue_depth", Json::num((pending + interrupted) as f64)),
+        ("queue_wait_p50_s", Json::num(m.queue_wait.quantile_us(0.50) as f64 / 1e6)),
+        ("queue_wait_p99_s", Json::num(m.queue_wait.quantile_us(0.99) as f64 / 1e6)),
+        ("exec_p50_s", Json::num(m.exec.quantile_us(0.50) as f64 / 1e6)),
+        ("exec_p99_s", Json::num(m.exec.quantile_us(0.99) as f64 / 1e6)),
+        ("executor_busy_fraction", Json::num(crate::obs::metrics::busy_fraction())),
+        ("uptime_s", Json::num(crate::obs::metrics::started().elapsed().as_secs_f64())),
+        ("pool_workers", Json::num(pool.workers as f64)),
+        ("pool_tasks", Json::num(pool.tasks as f64)),
+        ("pool_cache_hits", Json::num(pool.cache_hits as f64)),
+        ("pool_compiles", Json::num(pool.compiles as f64)),
+        ("journal_bytes", Json::num(journal_bytes as f64)),
+        ("journal_appends", Json::num(load(&m.journal_appends))),
+        ("journal_compactions", Json::num(load(&m.journal_compactions))),
+        ("archive_appends", Json::num(load(&m.archive_appends))),
+    ])
 }
 
 #[cfg(test)]

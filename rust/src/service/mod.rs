@@ -29,7 +29,7 @@ pub mod daemon;
 pub mod exec;
 pub mod protocol;
 
-pub use client::{fetch_result, ping, queue_status, request, shutdown, submit};
+pub use client::{fetch_result, ping, queue_status, request, shutdown, stats, submit};
 pub use daemon::{Daemon, JobProgress};
 pub use protocol::{JobSpec, JobVerb, Request, DEFAULT_PORT};
 

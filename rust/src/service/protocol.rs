@@ -24,7 +24,11 @@ pub const DEFAULT_PORT: u16 = 7483;
 ///   `interruptions` count when non-zero. Old clients that only
 ///   switch on `done`/`failed` keep working: both new states are
 ///   reported through the same `status` key.
-pub const PROTO_VERSION: usize = 2;
+/// - **v3**: new `stats` op — a read-only snapshot of daemon health
+///   (job counters, queue depth, latency quantiles, pool/journal/
+///   archive counters) under a single `stats` response key. Old
+///   daemons answer it with `unknown op`, which clients surface as-is.
+pub const PROTO_VERSION: usize = 3;
 
 /// Every `status` a job status row can carry, in lifecycle order.
 ///
@@ -242,6 +246,8 @@ pub enum Request {
     Queue,
     /// Fetch one job's status + (when done) its results.
     Result { job: String },
+    /// Snapshot of daemon health counters and latency quantiles.
+    Stats,
     /// Stop the daemon: finish the running job, abandon pending ones.
     Shutdown,
 }
@@ -257,6 +263,7 @@ impl Request {
             Request::Result { job } => {
                 Json::obj(vec![("op", Json::str("result")), ("job", Json::str(job))])
             }
+            Request::Stats => Json::obj(vec![("op", Json::str("stats"))]),
             Request::Shutdown => Json::obj(vec![("op", Json::str("shutdown"))]),
         }
     }
@@ -267,8 +274,9 @@ impl Request {
             "submit" => Ok(Request::Submit(JobSpec::decode(v.req("spec")?)?)),
             "queue" => Ok(Request::Queue),
             "result" => Ok(Request::Result { job: v.req_str("job")?.to_string() }),
+            "stats" => Ok(Request::Stats),
             "shutdown" => Ok(Request::Shutdown),
-            other => bail!("unknown op {other:?} (ping|submit|queue|result|shutdown)"),
+            other => bail!("unknown op {other:?} (ping|submit|queue|result|stats|shutdown)"),
         }
     }
 
@@ -345,6 +353,7 @@ mod tests {
             Request::Submit(JobSpec::default_run()),
             Request::Queue,
             Request::Result { job: "job-0001".into() },
+            Request::Stats,
             Request::Shutdown,
         ] {
             let line = req.to_json().to_json();

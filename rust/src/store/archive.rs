@@ -50,12 +50,23 @@ impl Archive {
         if records.is_empty() {
             return Ok(());
         }
+        let t0 = std::time::Instant::now();
         let mut buf = String::new();
         for r in records {
             buf.push_str(&r.to_json().to_json());
             buf.push('\n');
         }
-        super::append_jsonl(&self.path, buf.as_bytes())
+        let out = super::append_jsonl(&self.path, buf.as_bytes());
+        let m = crate::obs::metrics::global();
+        m.archive_appends
+            .fetch_add(records.len() as u64, std::sync::atomic::Ordering::Relaxed);
+        crate::obs::span::record(
+            crate::obs::SpanKind::ArchiveRecord,
+            &records[0].run_id,
+            t0,
+            std::time::Instant::now(),
+        );
+        out
     }
 
     /// Stamp scheduler output with run provenance and append it: each

@@ -315,9 +315,19 @@ impl Journal {
     /// partial bytes (that would turn a recoverable tail into mid-file
     /// corruption that fails every later replay).
     pub fn append(&self, ev: &JobEvent) -> Result<()> {
+        let t0 = std::time::Instant::now();
         let mut line = ev.to_json().to_json();
         line.push('\n');
-        super::append_jsonl(&self.path, line.as_bytes())
+        let out = super::append_jsonl(&self.path, line.as_bytes());
+        let m = crate::obs::metrics::global();
+        crate::obs::metrics::Metrics::incr(&m.journal_appends);
+        crate::obs::span::record(
+            crate::obs::SpanKind::JournalAppend,
+            ev.job(),
+            t0,
+            std::time::Instant::now(),
+        );
+        out
     }
 
     /// Load every journaled transition in append order. A missing file
@@ -523,6 +533,8 @@ impl Journal {
         std::fs::rename(&journal_tmp, &self.path)
             .with_context(|| format!("renaming {} into place", self.path.display()))?;
         let bytes_after = std::fs::metadata(&self.path).map(|m| m.len()).unwrap_or(0);
+        let m = crate::obs::metrics::global();
+        crate::obs::metrics::Metrics::incr(&m.journal_compactions);
         Ok(CompactStats { settled, dropped, bytes_before, bytes_after })
     }
 }

@@ -1,0 +1,273 @@
+//! Integration: the flight recorder — span capture around a real
+//! benchmark run, Chrome trace export, and the supporting pure pieces
+//! (quantile sketch, span JSONL roundtrip, trace-event nesting).
+//!
+//! The span recorder is process-global, so everything that enables it
+//! lives in ONE test (`flight_recorder_end_to_end`); the other tests
+//! here only touch their own local state and can run in parallel.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use xbench::config::{Mode, RunConfig};
+use xbench::coordinator::{planned_bench_key, run_partitioned, ExecOpts, Runner};
+use xbench::obs::chrome;
+use xbench::obs::metrics::Sketch;
+use xbench::obs::span::{self, SpanKind, SpanRec};
+use xbench::runtime::{ArtifactStore, Device, Manifest};
+use xbench::store::{Archive, RunMeta};
+use xbench::suite::Suite;
+use xbench::util::{Json, TempDir};
+
+fn fast_cfg(dir: &Path) -> RunConfig {
+    RunConfig {
+        repeats: 1,
+        iterations: 1,
+        warmup: 1, // traced runs must produce warmup spans
+        artifacts: dir.to_path_buf(),
+        ..Default::default()
+    }
+}
+
+/// Per-tid begin/end balance walk over a Chrome `traceEvents` array:
+/// every `E` must close an open `B` on its track, and every track must
+/// end fully closed.
+fn assert_balanced(events: &[Json]) {
+    let mut open: std::collections::BTreeMap<u64, i64> = Default::default();
+    for e in events {
+        let ph = e.req_str("ph").unwrap();
+        if ph == "M" {
+            continue;
+        }
+        let tid = e.req_usize("tid").unwrap() as u64;
+        let depth = open.entry(tid).or_insert(0);
+        match ph {
+            "B" => *depth += 1,
+            "E" => {
+                *depth -= 1;
+                assert!(*depth >= 0, "E without a matching open B on tid {tid}");
+            }
+            other => panic!("unexpected event phase {other:?}"),
+        }
+    }
+    for (tid, depth) in open {
+        assert_eq!(depth, 0, "tid {tid} ends with {depth} unclosed span(s)");
+    }
+}
+
+#[test]
+fn flight_recorder_end_to_end() {
+    let dir = TempDir::new().unwrap();
+    xbench::suite::synth::write_synthetic_artifacts(dir.path(), 20230102, false).unwrap();
+    let store = ArtifactStore::new(Rc::new(Device::cpu().unwrap()), dir.path());
+    let suite = Suite::new(Manifest::load(dir.path()).unwrap());
+    let cfg = fast_cfg(dir.path());
+
+    let benches = suite.benches(&cfg.selection, Mode::Infer).unwrap();
+    let entries: Vec<&xbench::runtime::ModelEntry> =
+        benches.iter().map(|b| suite.model(&b.model).unwrap()).collect();
+    let labels: Vec<String> = benches.iter().map(|b| b.to_string()).collect();
+    let worklist_keys: Vec<String> =
+        entries.iter().map(|e| planned_bench_key(&cfg, e)).collect();
+    assert!(entries.len() >= 2, "zoo too small for a meaningful trace");
+
+    let cfg_ref = &cfg;
+    let run = || {
+        run_partitioned(&ExecOpts::SERIAL, &store, &entries, &labels, "obs", |st, entry| {
+            Runner::new(st, cfg_ref.clone()).run_model(entry)
+        })
+        .unwrap()
+    };
+
+    // Untraced reference run (recorder off — the default).
+    assert!(!span::is_enabled());
+    let untraced = run();
+    assert!(untraced.errors.is_empty(), "{:?}", untraced.errors);
+
+    // Traced run into a JSONL sink.
+    let sink = span::sink_beside(&dir.path().join("runs.jsonl"));
+    span::enable("obs-e2e", Some(&sink));
+    let traced = run();
+    let (written_to, written) = span::flush_to_sink().unwrap();
+    span::disable();
+    assert!(traced.errors.is_empty(), "{:?}", traced.errors);
+    assert_eq!(written_to.as_deref(), Some(sink.as_path()));
+    assert!(written > 0, "a traced run must record spans");
+
+    // Parity: tracing must not change WHAT was measured — same keys in
+    // the same order, and records archived from the traced run carry
+    // exactly the same JSON shape as untraced ones.
+    let keys = |o: &xbench::coordinator::SchedOutcome<xbench::coordinator::RunResult>| {
+        o.completed.iter().map(|(seq, r)| (*seq, r.bench_key())).collect::<Vec<_>>()
+    };
+    assert_eq!(keys(&untraced), keys(&traced));
+
+    let record_shapes = |name: &str,
+                         outcome: &xbench::coordinator::SchedOutcome<
+        xbench::coordinator::RunResult,
+    >| {
+        let archive = Archive::new(dir.path().join(format!("{name}.jsonl")));
+        let meta = RunMeta::capture(&cfg, name);
+        let (records, _) = archive
+            .record_scheduled(&outcome.completed, meta, None, &worklist_keys)
+            .unwrap();
+        records
+            .iter()
+            .map(|r| {
+                let json = r.to_json();
+                let fields: Vec<String> =
+                    json.as_object().unwrap().keys().cloned().collect();
+                (r.bench_key(), fields)
+            })
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(
+        record_shapes("untraced", &untraced),
+        record_shapes("traced", &traced),
+        "traced RunRecords must be shape-identical to untraced ones"
+    );
+
+    // The sink holds ≥ one compile, warmup, and measure span per bench
+    // key, plus a pool_task span per worklist item.
+    let spans = span::load_sink(&sink, "obs-e2e").unwrap();
+    assert_eq!(spans.len(), written);
+    for key in &worklist_keys {
+        for kind in [SpanKind::Compile, SpanKind::Warmup, SpanKind::Measure] {
+            assert!(
+                spans.iter().any(|s| s.kind == kind && s.label == *key),
+                "missing {} span for {key}",
+                kind.as_str()
+            );
+        }
+    }
+    let tasks = spans.iter().filter(|s| s.kind == SpanKind::PoolTask).count();
+    assert!(tasks >= entries.len(), "{tasks} pool_task spans < {} items", entries.len());
+    // Timeline folding produced transfer/host phase spans labeled
+    // `key:phase` under at least one key.
+    assert!(
+        spans.iter().any(|s| matches!(s.kind, SpanKind::H2d | SpanKind::D2h | SpanKind::Host)),
+        "no folded Timeline phase spans in the trace"
+    );
+
+    // Chrome export: parses back as JSON, balanced per track, one
+    // thread_name metadata event per distinct tid, B/E counts equal.
+    let trace = chrome::trace_json(&spans);
+    let reparsed = xbench::util::json::parse(&trace.to_json()).unwrap();
+    assert_eq!(reparsed.req_str("displayTimeUnit").unwrap(), "ms");
+    let events = reparsed.req_array("traceEvents").unwrap().to_vec();
+    let phase = |p: &str| {
+        events.iter().filter(|e| e.req_str("ph").unwrap() == p).count()
+    };
+    assert_eq!(phase("B"), spans.len());
+    assert_eq!(phase("E"), spans.len());
+    let mut tids: Vec<u64> = spans.iter().map(|s| s.tid).collect();
+    tids.sort_unstable();
+    tids.dedup();
+    assert_eq!(phase("M"), tids.len(), "one thread_name event per track");
+    assert_balanced(&events);
+
+    // A second enable() starts a clean generation: nothing from the
+    // first trace leaks into the next drain.
+    span::enable("obs-second", None);
+    span::disable();
+    assert!(span::drain().is_empty(), "stale spans leaked across enable() cycles");
+}
+
+#[test]
+fn sketch_quantiles_are_log2_upper_bounds() {
+    let s = Sketch::default();
+    assert_eq!(s.count(), 0);
+    assert_eq!(s.quantile_us(0.5), 0, "empty sketch reports 0");
+
+    // 1000µs has bit length 10 → bucket upper bound 1024.
+    for _ in 0..10 {
+        s.record_us(1000);
+    }
+    assert_eq!(s.count(), 10);
+    assert_eq!(s.quantile_us(0.5), 1024);
+    assert_eq!(s.quantile_us(1.0), 1024);
+
+    // A heavy tail moves only the top quantiles.
+    let s = Sketch::default();
+    for _ in 0..100 {
+        s.record_us(10); // bit length 4 → 16
+    }
+    s.record_us(1_000_000); // bit length 20 → 1048576
+    assert_eq!(s.quantile_us(0.5), 16);
+    assert_eq!(s.quantile_us(0.99), 16, "one outlier in 101 is past p99");
+    assert_eq!(s.quantile_us(1.0), 1 << 20);
+
+    // Zeros land in bucket 0 and report 0.
+    let s = Sketch::default();
+    s.record_us(0);
+    assert_eq!(s.quantile_us(1.0), 0);
+    // The top bucket saturates instead of overflowing.
+    s.record_us(u64::MAX);
+    assert_eq!(s.count(), 2);
+}
+
+#[test]
+fn span_record_roundtrips_through_jsonl() {
+    let rec = SpanRec {
+        trace: "t-1".into(),
+        kind: SpanKind::Measure,
+        label: "gpt_tiny.infer.fused.b4".into(),
+        tid: 3,
+        thread: "xbench-pool-2".into(),
+        start_us: 12345,
+        dur_us: 678,
+    };
+    let line = rec.to_json().to_json();
+    let back = SpanRec::decode(&xbench::util::json::parse(&line).unwrap()).unwrap();
+    assert_eq!(back, rec);
+
+    // Every kind survives the wire name roundtrip.
+    for kind in SpanKind::ALL {
+        assert_eq!(SpanKind::parse(kind.as_str()).unwrap(), kind);
+    }
+    assert!(SpanKind::parse("no_such_kind").is_err());
+}
+
+#[test]
+fn chrome_export_nests_same_timestamp_spans_outer_first() {
+    let mk = |label: &str, tid: u64, start_us: u64, dur_us: u64| SpanRec {
+        trace: "t".into(),
+        kind: SpanKind::Measure,
+        label: label.into(),
+        tid,
+        thread: format!("thread-{tid}"),
+        start_us,
+        dur_us,
+    };
+    // outer and inner both begin at t=0 on tid 1; `next` begins exactly
+    // when inner ends; tid 2 holds an unrelated span.
+    let spans = vec![
+        mk("outer", 1, 0, 100),
+        mk("inner", 1, 0, 40),
+        mk("next", 1, 40, 20),
+        mk("other", 2, 10, 5),
+    ];
+    let trace = chrome::trace_json(&spans);
+    let events = trace.req_array("traceEvents").unwrap().to_vec();
+    let tid1: Vec<(String, String)> = events
+        .iter()
+        .filter(|e| {
+            e.req_str("ph").unwrap() != "M" && e.req_usize("tid").unwrap() == 1
+        })
+        .map(|e| {
+            (e.req_str("ph").unwrap().to_string(), e.req_str("name").unwrap().to_string())
+        })
+        .collect();
+    assert_eq!(
+        tid1,
+        vec![
+            ("B".into(), "outer".into()), // longer span opens first on the tie
+            ("B".into(), "inner".into()),
+            ("E".into(), "inner".into()), // ties: ends close before begins open
+            ("B".into(), "next".into()),
+            ("E".into(), "next".into()),
+            ("E".into(), "outer".into()),
+        ]
+    );
+    assert_balanced(&events);
+}

@@ -199,6 +199,110 @@ fn silent_client_does_not_block_other_requests() {
 }
 
 #[test]
+fn stats_counters_stay_consistent_under_a_submit_storm() {
+    // The `stats` op's contract: the payload is one snapshot taken
+    // under the jobs lock, so `jobs_submitted` partitions exactly into
+    // the per-state counts at EVERY instant — including mid-storm with
+    // jobs racing from pending to running to settled — and the counters
+    // only ever move forward.
+    let dir = TempDir::new().unwrap();
+    xbench::suite::synth::write_synthetic_artifacts(dir.path(), 20230102, false).unwrap();
+    let suite = Suite::new(Manifest::load(dir.path()).unwrap());
+    let archive_path = dir.path().join("runs.jsonl");
+    let daemon =
+        Daemon::bind(0, dir.path().to_path_buf(), Journal::beside(&archive_path)).unwrap();
+    let port = daemon.port();
+    let server = std::thread::spawn({
+        let base_cfg = fast_cfg(dir.path());
+        let archive = Archive::new(&archive_path);
+        move || daemon.run(suite, archive, base_cfg)
+    });
+    service::ping(port).unwrap();
+
+    // 4 concurrent submitters x 2 jobs each; half the specs name an
+    // unknown model so the storm settles into a done/failed mix.
+    let mut submitters = Vec::new();
+    for t in 0..4usize {
+        submitters.push(std::thread::spawn(move || {
+            let mut ids = Vec::new();
+            for k in 0..2usize {
+                let mut spec = JobSpec::default_run();
+                spec.repeats = 1;
+                spec.iterations = 1;
+                spec.warmup = 0;
+                spec.models = if (t + k) % 2 == 0 {
+                    vec!["deeprec_ae".into()]
+                } else {
+                    vec!["no_such_model".into()]
+                };
+                ids.push(service::submit(port, spec).unwrap());
+            }
+            ids
+        }));
+    }
+    let ids: Vec<String> =
+        submitters.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    assert_eq!(ids.len(), 8);
+
+    let consistent = |s: &xbench::util::Json| {
+        let g = |k: &str| s.req_usize(k).unwrap();
+        assert_eq!(
+            g("jobs_submitted"),
+            g("jobs_pending")
+                + g("jobs_running")
+                + g("jobs_interrupted")
+                + g("jobs_done")
+                + g("jobs_failed")
+                + g("jobs_abandoned"),
+            "state counts must partition jobs_submitted: {}",
+            s.to_json()
+        );
+        assert_eq!(
+            g("queue_depth"),
+            g("jobs_pending") + g("jobs_interrupted"),
+            "queue_depth must be the claimable set: {}",
+            s.to_json()
+        );
+    };
+
+    // Mid-storm snapshot: all 8 acked submissions are visible (submit
+    // journals before acking), in whatever state mix the race landed.
+    let mid = service::stats(port).unwrap();
+    consistent(&mid);
+    assert_eq!(mid.req_usize("jobs_submitted").unwrap(), 8);
+
+    for id in &ids {
+        let (view, _) = service::fetch_result(port, id, true, 300).unwrap();
+        let status = view.req_str("status").unwrap();
+        assert!(status == "done" || status == "failed", "{id}: {status}");
+    }
+
+    // Settled snapshot: monotonic vs the mid-storm one, fully drained.
+    let end = service::stats(port).unwrap();
+    consistent(&end);
+    assert_eq!(end.req_usize("jobs_submitted").unwrap(), 8);
+    assert_eq!(end.req_usize("jobs_done").unwrap(), 4);
+    assert_eq!(end.req_usize("jobs_failed").unwrap(), 4);
+    assert_eq!(end.req_usize("jobs_pending").unwrap(), 0);
+    assert_eq!(end.req_usize("jobs_running").unwrap(), 0);
+    assert_eq!(end.req_usize("queue_depth").unwrap(), 0);
+    assert!(
+        end.req_usize("jobs_done").unwrap() >= mid.req_usize("jobs_done").unwrap(),
+        "done count went backwards"
+    );
+    // Latency quantiles come from process-global sketches (other tests
+    // in this binary feed them too), so only sanity is asserted here.
+    assert!(end.req_f64("queue_wait_p99_s").unwrap() >= 0.0);
+    assert!(end.req_f64("exec_p99_s").unwrap() >= 0.0);
+    assert!(end.req_f64("uptime_s").unwrap() >= 0.0);
+    let busy = end.req_f64("executor_busy_fraction").unwrap();
+    assert!((0.0..=1.0).contains(&busy), "busy fraction {busy} out of [0,1]");
+
+    service::shutdown(port).unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
 fn gated_ci_job_regressions_fail_the_result_exit_code() {
     let dir = TempDir::new().unwrap();
     xbench::suite::synth::write_synthetic_artifacts(dir.path(), 20230102, false).unwrap();

@@ -268,6 +268,58 @@ fn clean_shutdown_compacts_the_journal_and_results_survive_restart() {
 }
 
 #[test]
+fn sigkill_then_restart_compacts_the_journal_at_startup() {
+    // A SIGKILLed daemon never runs its shutdown compaction, so the
+    // journal it leaves behind still embeds full done payloads. The
+    // crash-time pass at the NEXT startup (after taking journal
+    // ownership, before replay) must fold it — a daemon that only ever
+    // crashes would otherwise grow queue.jsonl without bound.
+    let dir = TempDir::new().unwrap();
+    xbench::suite::synth::write_synthetic_artifacts(dir.path(), 20230102, false).unwrap();
+    let (mut child, port) = spawn_daemon(dir.path());
+
+    let j1 = service::submit(port, fast_spec(&["deeprec_ae"])).unwrap();
+    let (view, before) = service::fetch_result(port, &j1, true, 300).unwrap();
+    assert_eq!(view.req_str("status").unwrap(), "done");
+    let before = before.expect("completed job payload");
+    child.kill().unwrap();
+    child.wait().unwrap();
+    let text = std::fs::read_to_string(dir.path().join("queue.jsonl")).unwrap();
+    assert!(
+        text.contains("\"ev\":\"done\""),
+        "the crash must leave the payload embedded (no shutdown drain ran): {text}"
+    );
+
+    // Restart: the banner prints only after startup compaction and
+    // replay, so once the port is known the journal is in final form.
+    let (mut child2, port2) = spawn_daemon(dir.path());
+    let text = std::fs::read_to_string(dir.path().join("queue.jsonl")).unwrap();
+    assert!(
+        text.lines().next().unwrap().contains("\"ev\":\"compacted\""),
+        "startup compaction must lead with the marker: {text}"
+    );
+    assert!(text.contains("\"ev\":\"settled\""), "{text}");
+    assert!(
+        !text.contains("\"ev\":\"done\""),
+        "startup compaction must spill payloads out of the journal: {text}"
+    );
+    assert!(dir.path().join("results.jsonl").exists());
+
+    // Round trip: the compacted job answers byte-identically and
+    // numbering continues past it.
+    let (v, after) = service::fetch_result(port2, &j1, false, 0).unwrap();
+    assert_eq!(v.req_str("status").unwrap(), "done");
+    assert_eq!(v.req_usize("done").unwrap(), v.req_usize("total").unwrap());
+    assert_eq!(after.expect("restored payload"), before);
+    let j2 = service::submit(port2, fast_spec(&["deeprec_ae"])).unwrap();
+    assert_eq!(j2, "job-0002");
+
+    service::shutdown(port2).unwrap();
+    let status = child2.wait().unwrap();
+    assert!(status.success(), "daemon exited {status:?}");
+}
+
+#[test]
 fn second_daemon_on_the_same_journal_is_refused() {
     // Two daemons replaying and appending one queue.jsonl would
     // interleave transitions into sequences replay() rejects; the
