@@ -1,0 +1,188 @@
+//! Statistical-gate cost probe.
+//!
+//! `cargo bench --bench stat` — what the noise-aware verdict machinery
+//! (ISSUE 7) costs per decision, written to `BENCH_stat.json`
+//! (machine-readable, uploaded by CI) plus human tables on stdout:
+//!
+//! 1. **Bootstrap ladder** at 16 / 64 / 256 / 1024 samples: MAD outlier
+//!    rejection + percentile-bootstrap 95% CI for the median at the
+//!    gate's production resample count (1000). The per-verdict wall
+//!    time bounds what `ci --gate stat` adds per gated bench key.
+//! 2. **Full verdict path**: [`xbench::ci::sample_interval`] end to end
+//!    (name-seeded RNG → rejection → bootstrap) at the runner's default
+//!    sample count, in verdicts/second.
+//! 3. **Change-point ladder** at 100 / 1000 / 4000 runs of history:
+//!    exact optimal partitioning is O(n²) in segment candidates — this
+//!    pins where `xbench drift` stops being interactive.
+//!
+//! Determinism is asserted throughout (same seed ⇒ bit-identical
+//! intervals and segmentations), so the bench doubles as a release-mode
+//! check of the gate's byte-identical-verdicts contract.
+
+use std::time::Instant;
+
+use xbench::ci::{sample_interval, DEFAULT_STAT_SEED};
+use xbench::stat::{
+    bootstrap_median_ci, change_points, reject_outliers, DEFAULT_CONFIDENCE, DEFAULT_MAD_K,
+    DEFAULT_PENALTY, DEFAULT_RESAMPLES,
+};
+use xbench::util::{Json, Rng};
+
+const SAMPLE_SCALES: [usize; 4] = [16, 64, 256, 1024];
+const SERIES_SCALES: [usize; 3] = [100, 1_000, 4_000];
+/// Iterations per timed cell — enough to dominate clock granularity.
+const REPS: usize = 50;
+
+/// Noisy timing-like samples: ~10ms with ±20% deterministic spread and
+/// a sprinkle of far outliers (preempted iterations) for MAD to reject.
+fn noisy_samples(n: usize, rng: &mut Rng) -> Vec<f64> {
+    (0..n)
+        .map(|i| {
+            let base = 0.010 * (1.0 + 0.2 * (rng.uniform_f32() as f64 - 0.5));
+            if i % 97 == 96 {
+                base * 8.0 // planted outlier
+            } else {
+                base
+            }
+        })
+        .collect()
+}
+
+/// A drifting history: step at n/3, slow ramp from 2n/3, jitter on top.
+fn drifting_series(n: usize) -> Vec<f64> {
+    (0..n)
+        .map(|i| {
+            let base = if i < n / 3 {
+                0.010
+            } else if i < 2 * n / 3 {
+                0.013
+            } else {
+                0.013 + (i - 2 * n / 3) as f64 * 0.00002
+            };
+            base + 0.00005 * ((i * 7) % 5) as f64
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    // -- bootstrap ladder ------------------------------------------------------
+    let mut ladder = Vec::new();
+    let mut lt = xbench::report::Table::new(
+        format!("Outlier rejection + bootstrap 95% CI ({DEFAULT_RESAMPLES} resamples)"),
+        &["samples", "kept", "reject", "bootstrap", "per verdict"],
+    );
+    for n in SAMPLE_SCALES {
+        let mut rng = Rng::seed_from_u64(n as u64 ^ 0x5747);
+        let samples = noisy_samples(n, &mut rng);
+        let seed = rng.next_u64();
+
+        let t = Instant::now();
+        let mut kept = Vec::new();
+        for _ in 0..REPS {
+            kept = reject_outliers(&samples, DEFAULT_MAD_K);
+        }
+        let reject_secs = t.elapsed().as_secs_f64() / REPS as f64;
+        assert!(!kept.is_empty() && kept.len() <= samples.len());
+
+        let t = Instant::now();
+        let mut ci = bootstrap_median_ci(&kept, DEFAULT_RESAMPLES, DEFAULT_CONFIDENCE, seed);
+        for _ in 1..REPS {
+            let again = bootstrap_median_ci(&kept, DEFAULT_RESAMPLES, DEFAULT_CONFIDENCE, seed);
+            // Bit-exact: the determinism contract, checked in release mode.
+            assert_eq!(again, ci, "same seed must give an identical interval");
+            ci = again;
+        }
+        let boot_secs = t.elapsed().as_secs_f64() / REPS as f64;
+        assert!(ci.lo <= ci.point && ci.point <= ci.hi);
+
+        lt.row(vec![
+            n.to_string(),
+            kept.len().to_string(),
+            format!("{:.1}µs", reject_secs * 1e6),
+            format!("{:.1}µs", boot_secs * 1e6),
+            format!("{:.1}µs", (reject_secs + boot_secs) * 1e6),
+        ]);
+        ladder.push(Json::obj(vec![
+            ("samples", Json::num(n as f64)),
+            ("kept", Json::num(kept.len() as f64)),
+            ("reject_us", Json::num(reject_secs * 1e6)),
+            ("bootstrap_us", Json::num(boot_secs * 1e6)),
+            ("verdict_us", Json::num((reject_secs + boot_secs) * 1e6)),
+        ]));
+    }
+    print!("{}", lt.render());
+
+    // -- full verdict path (what one gated bench key costs the nightly) --------
+    // Runner default: repeats 5 × iterations 2 = 10 samples per record.
+    let mut rng = Rng::seed_from_u64(0xCA11);
+    let nightly = noisy_samples(10, &mut rng);
+    let t = Instant::now();
+    let mut first = None;
+    for _ in 0..REPS {
+        let ci = sample_interval(
+            "gpt_tiny.infer.fused.b4",
+            DEFAULT_STAT_SEED,
+            1,
+            &nightly,
+            DEFAULT_RESAMPLES,
+            DEFAULT_CONFIDENCE,
+        )
+        .expect("10 samples is enough for the stat gate");
+        match &first {
+            None => first = Some(ci),
+            Some(f) => assert_eq!(&ci, f, "verdict path must be seed-deterministic"),
+        }
+    }
+    let verdict_secs = t.elapsed().as_secs_f64() / REPS as f64;
+    let verdicts_per_sec = 1.0 / verdict_secs.max(1e-9);
+    println!(
+        "full stat verdict (10 samples, {DEFAULT_RESAMPLES} resamples): {:.1}µs \
+         ({verdicts_per_sec:.0} verdicts/s)\n",
+        verdict_secs * 1e6
+    );
+
+    // -- change-point ladder ----------------------------------------------------
+    let mut cp_ladder = Vec::new();
+    let mut ct = xbench::report::Table::new(
+        format!("Change-point detection (penalty {DEFAULT_PENALTY})"),
+        &["runs", "change points", "wall"],
+    );
+    for n in SERIES_SCALES {
+        let series = drifting_series(n);
+        let reps = if n >= 4_000 { 3 } else { 10 };
+        let t = Instant::now();
+        let mut cps = Vec::new();
+        for _ in 0..reps {
+            cps = change_points(&series, DEFAULT_PENALTY);
+        }
+        let secs = t.elapsed().as_secs_f64() / reps as f64;
+        // The planted step must be found, and re-running must agree.
+        assert!(cps.iter().any(|c| c.index == n / 3), "step at n/3 missed");
+        assert_eq!(change_points(&series, DEFAULT_PENALTY), cps);
+
+        ct.row(vec![
+            n.to_string(),
+            cps.len().to_string(),
+            format!("{:.2}ms", secs * 1e3),
+        ]);
+        cp_ladder.push(Json::obj(vec![
+            ("runs", Json::num(n as f64)),
+            ("change_points", Json::num(cps.len() as f64)),
+            ("wall_ms", Json::num(secs * 1e3)),
+        ]));
+    }
+    print!("{}", ct.render());
+
+    let json = Json::obj(vec![
+        ("resamples", Json::num(DEFAULT_RESAMPLES as f64)),
+        ("confidence", Json::num(DEFAULT_CONFIDENCE)),
+        ("bootstrap_ladder", Json::Arr(ladder)),
+        ("verdict_us", Json::num(verdict_secs * 1e6)),
+        ("verdicts_per_sec", Json::num(verdicts_per_sec)),
+        ("changepoint_penalty", Json::num(DEFAULT_PENALTY)),
+        ("changepoint_ladder", Json::Arr(cp_ladder)),
+    ]);
+    std::fs::write("BENCH_stat.json", json.to_json_pretty())?;
+    eprintln!("wrote BENCH_stat.json");
+    Ok(())
+}

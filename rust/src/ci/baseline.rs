@@ -13,11 +13,15 @@ use std::path::Path;
 use crate::coordinator::RunResult;
 
 /// The gated metrics of one benchmark config.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct BaselineEntry {
     pub iter_secs: f64,
     pub host_bytes: usize,
     pub device_bytes: usize,
+    /// Raw per-iteration samples from the baseline run (schema-v3
+    /// archives). Empty for pre-v3 baselines — the stat gate then
+    /// falls back to the point rule on `iter_secs`.
+    pub samples: Vec<f64>,
 }
 
 impl From<&RunResult> for BaselineEntry {
@@ -26,6 +30,7 @@ impl From<&RunResult> for BaselineEntry {
             iter_secs: r.iter_secs,
             host_bytes: r.memory.host_peak,
             device_bytes: r.memory.device_total,
+            samples: r.samples.clone(),
         }
     }
 }
@@ -72,11 +77,20 @@ impl BaselineStore {
                 .map(|(k, e)| {
                     (
                         k.clone(),
-                        Json::obj(vec![
-                            ("iter_secs", Json::num(e.iter_secs)),
-                            ("host_bytes", Json::num(e.host_bytes as f64)),
-                            ("device_bytes", Json::num(e.device_bytes as f64)),
-                        ]),
+                        {
+                            let mut fields = vec![
+                                ("iter_secs", Json::num(e.iter_secs)),
+                                ("host_bytes", Json::num(e.host_bytes as f64)),
+                                ("device_bytes", Json::num(e.device_bytes as f64)),
+                            ];
+                            if !e.samples.is_empty() {
+                                fields.push((
+                                    "samples",
+                                    Json::Arr(e.samples.iter().map(|&s| Json::num(s)).collect()),
+                                ));
+                            }
+                            Json::obj(fields)
+                        },
                     )
                 })
                 .collect(),
@@ -94,6 +108,13 @@ impl BaselineStore {
                     iter_secs: e.req_f64("iter_secs")?,
                     host_bytes: e.req_usize("host_bytes")?,
                     device_bytes: e.req_usize("device_bytes")?,
+                    samples: match e.get("samples").and_then(|s| s.as_array()) {
+                        Some(arr) => arr
+                            .iter()
+                            .map(|s| s.as_f64().context("samples element"))
+                            .collect::<Result<_>>()?,
+                        None => Vec::new(),
+                    },
                 },
             );
         }
@@ -141,6 +162,7 @@ impl BaselineStore {
                     iter_secs: r.iter_secs,
                     host_bytes: r.host_bytes,
                     device_bytes: r.device_bytes,
+                    samples: r.samples.clone(),
                 },
             );
         }
@@ -164,6 +186,7 @@ mod tests {
             batch: 4,
             iter_secs: secs,
             repeats_secs: vec![secs],
+            samples: vec![secs * 1.01, secs, secs * 0.99, secs, secs * 1.02],
             breakdown: Breakdown { active: 1.0, movement: 0.0, idle: 0.0, total_secs: secs },
             memory: MemoryReport { host_peak: 100, device_total: 200 },
             throughput: 4.0 / secs,

@@ -4,14 +4,66 @@
 //! execution time and memory usage. If at least one TorchBench benchmark
 //! exceeds the thresholds, PyTorch CI automatically submits a GitHub
 //! issue" — this module is that gate.
-
+//!
+//! Two gate modes ([`GateMode`], `xbench ci --gate point|stat`):
+//!
+//! - **point** (the paper's rule, default): a metric regresses when
+//!   `measured > baseline × 1.07` on the point estimates.
+//! - **stat**: execution time regresses only when the candidate's
+//!   bootstrap confidence interval lies *wholly above* the baseline's
+//!   interval scaled by the threshold
+//!   (`candidate.lo > baseline.hi × 1.07` — exclusive, like the point
+//!   boundary). Both sample sets are MAD-outlier-rejected first
+//!   ([`crate::stat`]). This needs per-iteration samples on both sides
+//!   (schema v3); whenever either side lacks them — old archives,
+//!   memory metrics, tiny sample counts — the verdict falls back to the
+//!   point gate on the aggregate, so `--gate stat` is always safe to
+//!   pass. Verdicts are deterministic: bootstrap seeds derive from
+//!   (bench key, [`Detector::seed`]) only.
 
 use crate::coordinator::RunResult;
+use crate::util::rng::Rng;
 
-use super::baseline::{bench_key, BaselineStore};
+use super::baseline::{bench_key, BaselineEntry, BaselineStore};
 
 /// The paper's default gate.
 pub const DEFAULT_THRESHOLD: f64 = 0.07;
+
+/// Fixed default seed for the stat gate's bootstrap (see
+/// `docs/METHODOLOGY.md` §Statistical gating for the seed policy).
+pub const DEFAULT_STAT_SEED: u64 = 0x42_5eed;
+
+/// Fewer samples than this and a bootstrap interval is meaningless —
+/// the stat gate falls back to the point rule below it.
+pub const MIN_STAT_SAMPLES: usize = 4;
+
+/// How a [`Detector`] decides execution-time verdicts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum GateMode {
+    /// Point estimates compared at the raw threshold (paper §4.2.1).
+    #[default]
+    Point,
+    /// Bootstrap-CI overlap on per-iteration samples, falling back to
+    /// the point rule when samples are missing.
+    Stat,
+}
+
+impl GateMode {
+    pub fn parse(s: &str) -> anyhow::Result<GateMode> {
+        match s {
+            "point" => Ok(GateMode::Point),
+            "stat" => Ok(GateMode::Stat),
+            other => anyhow::bail!("unknown gate {other:?} (expected \"point\" or \"stat\")"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            GateMode::Point => "point",
+            GateMode::Stat => "stat",
+        }
+    }
+}
 
 /// Which gated metric regressed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -40,23 +92,55 @@ pub struct Regression {
     pub measured: f64,
     /// measured / baseline.
     pub ratio: f64,
+    /// Baseline bootstrap CI `(lo, hi)` when the stat gate decided this
+    /// verdict (`None` for point-gate verdicts).
+    pub baseline_ci: Option<(f64, f64)>,
+    /// Candidate bootstrap CI `(lo, hi)` when the stat gate decided.
+    pub measured_ci: Option<(f64, f64)>,
 }
 
-/// The detector: threshold + baseline store.
+/// The detector: threshold, gate mode, and bootstrap parameters.
 #[derive(Debug, Clone)]
 pub struct Detector {
     pub threshold: f64,
+    /// Execution-time verdict rule (memory is always point-gated — no
+    /// per-iteration memory samples exist).
+    pub gate: GateMode,
+    /// Base seed for the bootstrap; mixed with each bench key so two
+    /// keys never share a resample stream. Same archive + same seed ⇒
+    /// byte-identical verdicts.
+    pub seed: u64,
+    pub resamples: usize,
+    pub confidence: f64,
 }
 
 impl Default for Detector {
     fn default() -> Self {
-        Detector { threshold: DEFAULT_THRESHOLD }
+        Detector {
+            threshold: DEFAULT_THRESHOLD,
+            gate: GateMode::Point,
+            seed: DEFAULT_STAT_SEED,
+            resamples: crate::stat::DEFAULT_RESAMPLES,
+            confidence: crate::stat::DEFAULT_CONFIDENCE,
+        }
     }
 }
 
 impl Detector {
     pub fn new(threshold: f64) -> Self {
-        Detector { threshold }
+        Detector { threshold, ..Detector::default() }
+    }
+
+    /// Select the execution-time verdict rule.
+    pub fn with_gate(mut self, gate: GateMode) -> Self {
+        self.gate = gate;
+        self
+    }
+
+    /// Override the bootstrap base seed (stat gate only).
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
     }
 
     fn check(
@@ -78,8 +162,50 @@ impl Detector {
                 baseline,
                 measured,
                 ratio,
+                baseline_ci: None,
+                measured_ci: None,
             });
         }
+    }
+
+    /// Stat verdict for execution time: outlier-reject both sample
+    /// sets, bootstrap a median CI for each, and flag a regression only
+    /// when the candidate interval clears the scaled baseline interval
+    /// entirely — noise wide enough to overlap the baseline can never
+    /// page, while a real shift with tight intervals is caught even
+    /// under the threshold the aggregates happen to show. Returns false
+    /// when either side lacks usable samples (caller falls back to the
+    /// point rule).
+    fn check_stat(
+        &self,
+        bench: &str,
+        base: &BaselineEntry,
+        r: &RunResult,
+        out: &mut Vec<Regression>,
+    ) -> bool {
+        let (Some(bci), Some(cci)) = (
+            sample_interval(bench, self.seed, 0, &base.samples, self.resamples, self.confidence),
+            sample_interval(bench, self.seed, 1, &r.samples, self.resamples, self.confidence),
+        ) else {
+            return false;
+        };
+        if bci.hi <= 0.0 {
+            return true;
+        }
+        // Exclusive, like the point boundary: a candidate interval that
+        // *touches* baseline.hi × (1 + threshold) still passes.
+        if cci.lo > bci.hi * (1.0 + self.threshold) {
+            out.push(Regression {
+                bench: bench.to_string(),
+                metric: Metric::ExecutionTime,
+                baseline: bci.point,
+                measured: cci.point,
+                ratio: cci.point / bci.point,
+                baseline_ci: Some((bci.lo, bci.hi)),
+                measured_ci: Some((cci.lo, cci.hi)),
+            });
+        }
+        true
     }
 
     /// Gate one nightly result against the baseline store.
@@ -88,7 +214,13 @@ impl Detector {
         for r in results {
             let key = bench_key(r);
             let Some(b) = baselines.get(&key) else { continue };
-            self.check(&key, Metric::ExecutionTime, b.iter_secs, r.iter_secs, &mut out);
+            let handled =
+                self.gate == GateMode::Stat && self.check_stat(&key, b, r, &mut out);
+            if !handled {
+                // The aggregate stays the gated fallback: pre-v3
+                // baselines and sample-less results keep the paper rule.
+                self.check(&key, Metric::ExecutionTime, b.iter_secs, r.iter_secs, &mut out);
+            }
             self.check(
                 &key,
                 Metric::HostMemory,
@@ -108,6 +240,34 @@ impl Detector {
     }
 }
 
+/// One side's gate interval: MAD-outlier-reject, then a bootstrap
+/// median CI, seeded from the per-key stream (`stream` 0 = baseline,
+/// 1 = candidate — the two draws [`Detector::detect`] makes, in
+/// order). `None` below [`MIN_STAT_SAMPLES`]. `cmp`/`history` render
+/// bounds through this, so what they display is exactly what the gate
+/// decides on.
+pub fn sample_interval(
+    bench: &str,
+    seed: u64,
+    stream: usize,
+    samples: &[f64],
+    resamples: usize,
+    confidence: f64,
+) -> Option<crate::stat::Ci> {
+    if samples.len() < MIN_STAT_SAMPLES {
+        return None;
+    }
+    let kept = crate::stat::reject_outliers(samples, crate::stat::DEFAULT_MAD_K);
+    // Per-key seeds from the crate's FNV scheme: deterministic, and no
+    // two bench keys (or sides) share a resample stream.
+    let mut seeds = Rng::seed_from_name(bench, seed);
+    let mut s = seeds.next_u64();
+    for _ in 0..stream {
+        s = seeds.next_u64();
+    }
+    Some(crate::stat::bootstrap_median_ci(&kept, resamples, confidence, s))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -123,10 +283,15 @@ mod tests {
             batch: 4,
             iter_secs: secs,
             repeats_secs: vec![secs],
+            samples: Vec::new(),
             breakdown: Breakdown { active: 1.0, movement: 0.0, idle: 0.0, total_secs: secs },
             memory: MemoryReport { host_peak: host, device_total: dev },
             throughput: 4.0 / secs,
         }
+    }
+
+    fn result_with_samples(secs: f64, samples: Vec<f64>) -> RunResult {
+        RunResult { samples, ..result(secs, 1000, 2000) }
     }
 
     fn baselines() -> BaselineStore {
@@ -173,5 +338,81 @@ mod tests {
         let d = Detector::new(0.5);
         assert!(d.detect(&baselines(), &[result(1.4, 1000, 2000)]).is_empty());
         assert_eq!(d.detect(&baselines(), &[result(1.6, 1000, 2000)]).len(), 1);
+    }
+
+    #[test]
+    fn stat_gate_flags_disjoint_intervals_with_ci_bounds() {
+        // Constant samples ⇒ degenerate intervals: verdicts are exact
+        // regardless of the bootstrap seed.
+        let mut s = BaselineStore::new();
+        s.record(&result_with_samples(1.0, vec![1.0; 8]));
+        let d = Detector::default().with_gate(GateMode::Stat);
+        let regs = d.detect(&s, &[result_with_samples(1.2, vec![1.2; 8])]);
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].metric, Metric::ExecutionTime);
+        assert_eq!(regs[0].baseline_ci, Some((1.0, 1.0)));
+        assert_eq!(regs[0].measured_ci, Some((1.2, 1.2)));
+        assert!((regs[0].ratio - 1.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stat_gate_ignores_point_blip_when_intervals_overlap() {
+        // The aggregate (median run) jumped 20% but the iteration
+        // distributions are the same — the point gate pages, the stat
+        // gate does not.
+        let spread: Vec<f64> = (0..16).map(|i| 0.7 + 0.04 * i as f64).collect();
+        let mut s = BaselineStore::new();
+        s.record(&result_with_samples(1.0, spread.clone()));
+        let nightly = result_with_samples(1.2, spread);
+        assert_eq!(Detector::default().detect(&s, &[nightly.clone()]).len(), 1);
+        let stat = Detector::default().with_gate(GateMode::Stat);
+        assert!(stat.detect(&s, &[nightly]).is_empty());
+    }
+
+    #[test]
+    fn stat_gate_falls_back_to_point_without_samples() {
+        // Baseline has samples, candidate does not (or vice versa):
+        // the aggregate rule applies unchanged.
+        let mut s = BaselineStore::new();
+        s.record(&result_with_samples(1.0, vec![1.0; 8]));
+        let d = Detector::default().with_gate(GateMode::Stat);
+        let regs = d.detect(&s, &[result(1.12, 1000, 2000)]);
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].baseline_ci, None, "fallback must be the point verdict");
+
+        // Too few samples on either side also falls back.
+        let regs = d.detect(&s, &[result_with_samples(1.12, vec![1.12; 3])]);
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].baseline_ci, None);
+    }
+
+    #[test]
+    fn stat_gate_memory_metrics_stay_point_gated() {
+        let mut s = BaselineStore::new();
+        s.record(&result_with_samples(1.0, vec![1.0; 8]));
+        let d = Detector::default().with_gate(GateMode::Stat);
+        let mut nightly = result_with_samples(1.0, vec![1.0; 8]);
+        nightly.memory.host_peak = 1200;
+        let regs = d.detect(&s, &[nightly]);
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].metric, Metric::HostMemory);
+    }
+
+    #[test]
+    fn stat_gate_verdicts_are_seed_deterministic() {
+        let noisy: Vec<f64> = (0..24).map(|i| 1.0 + 0.03 * ((i * 7) % 11) as f64).collect();
+        let shifted: Vec<f64> = noisy.iter().map(|x| x * 1.4).collect();
+        let mut s = BaselineStore::new();
+        s.record(&result_with_samples(1.0, noisy));
+        let nightly = result_with_samples(1.4, shifted);
+        let verdict = |seed: u64| {
+            let d = Detector::default().with_gate(GateMode::Stat).with_seed(seed);
+            d.detect(&s, &[nightly.clone()])
+                .iter()
+                .map(|r| (r.bench.clone(), r.baseline_ci, r.measured_ci))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(verdict(7), verdict(7), "same seed must reproduce bounds exactly");
+        assert_eq!(verdict(7).len(), 1, "a 40% shift with 3% jitter must page");
     }
 }

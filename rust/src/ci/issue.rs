@@ -57,6 +57,15 @@ impl IssueReport {
                 r.bench, r.metric, r.baseline, r.measured, r.ratio
             ));
         }
+        // Stat-gate verdicts carry the intervals that decided them.
+        for r in &self.regressions {
+            if let (Some((blo, bhi)), Some((clo, chi))) = (r.baseline_ci, r.measured_ci) {
+                out.push_str(&format!(
+                    "\n`{}`: baseline 95% CI [{:.6}, {:.6}] vs measured [{:.6}, {:.6}] (disjoint past the threshold).\n",
+                    r.bench, blo, bhi, clo, chi
+                ));
+            }
+        }
         match &self.culprit {
             Some(c) => out.push_str(&format!(
                 "\nBisection identified commit `{}` (\"{}\", submitted {:02}:{:02}) in {} benchmark runs.\n",
@@ -86,6 +95,8 @@ mod tests {
                 baseline: 1.0,
                 measured: 1.5,
                 ratio: 1.5,
+                baseline_ci: None,
+                measured_ci: None,
             }],
             culprit: Some(Commit {
                 id: "deadbeef".into(),
@@ -110,6 +121,18 @@ mod tests {
         assert!(md.contains("| gpt_tiny.infer.fused.b4 |"));
         assert!(md.contains("14:07"));
         assert!(md.contains("8 benchmark runs"));
+    }
+
+    #[test]
+    fn stat_verdicts_render_their_intervals() {
+        let mut r = report();
+        r.regressions[0].baseline_ci = Some((0.98, 1.02));
+        r.regressions[0].measured_ci = Some((1.45, 1.55));
+        let md = r.to_markdown();
+        assert!(md.contains("baseline 95% CI [0.980000, 1.020000]"), "{md}");
+        assert!(md.contains("measured [1.450000, 1.550000]"), "{md}");
+        // Point verdicts stay interval-free.
+        assert!(!report().to_markdown().contains("CI ["));
     }
 
     #[test]

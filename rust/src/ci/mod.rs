@@ -36,7 +36,10 @@ pub mod issue;
 pub use baseline::{bench_key, BaselineEntry, BaselineStore};
 pub use bisect::{bisect_first_bad, bisect_first_bad_opts, BisectOutcome};
 pub use commits::{Commit, Day};
-pub use detector::{Detector, Metric, Regression, DEFAULT_THRESHOLD};
+pub use detector::{
+    sample_interval, Detector, GateMode, Metric, Regression, DEFAULT_STAT_SEED,
+    DEFAULT_THRESHOLD, MIN_STAT_SAMPLES,
+};
 pub use faults::FaultKind;
 pub use issue::IssueReport;
 
@@ -84,6 +87,13 @@ impl<'a> CiPipeline<'a> {
     /// Fan builds out across workers / restrict to one shard.
     pub fn with_exec(mut self, exec: crate::coordinator::ExecOpts) -> Self {
         self.exec = exec;
+        self
+    }
+
+    /// Replace the gate (`xbench ci --gate stat` builds a stat
+    /// [`Detector`]; daemon `ci` jobs inherit theirs from the job spec).
+    pub fn with_detector(mut self, detector: Detector) -> Self {
+        self.detector = detector;
         self
     }
 

@@ -6,7 +6,7 @@
 
 use anyhow::Result;
 
-use crate::ci::{BaselineStore, CiPipeline, Day, FaultKind};
+use crate::ci::{BaselineStore, CiPipeline, Day, Detector, FaultKind, GateMode};
 use crate::config::RunConfig;
 use crate::coordinator::{ExecOpts, InjectedOverheads};
 use crate::report::Table;
@@ -33,6 +33,13 @@ pub struct Opts {
     /// Run-id override for `--record-baseline`, so shards of one
     /// logical baseline run land under a single archive run id.
     pub run_id: Option<String>,
+    /// Execution-time verdict rule: the paper's point gate, or the
+    /// bootstrap-CI stat gate over per-iteration samples (which falls
+    /// back to point wherever samples are missing).
+    pub gate: GateMode,
+    /// Bootstrap base seed for `--gate stat` (same archive + same seed
+    /// ⇒ byte-identical verdicts).
+    pub stat_seed: u64,
 }
 
 pub fn cmd(ctx: &Ctx, store: &ArtifactStore, mut cfg: RunConfig, opts: Opts) -> Result<()> {
@@ -47,7 +54,9 @@ pub fn cmd(ctx: &Ctx, store: &ArtifactStore, mut cfg: RunConfig, opts: Opts) -> 
     // 5/2/1) — forcing values here would silently discard a user's
     // --repeats/--iterations/--warmup and stamp the recorded baseline
     // with a config_hash they never asked for.
-    let pipeline = CiPipeline::new(store, suite, cfg.clone()).with_exec(opts.exec.clone());
+    let pipeline = CiPipeline::new(store, suite, cfg.clone())
+        .with_exec(opts.exec.clone())
+        .with_detector(Detector::default().with_gate(opts.gate).with_seed(opts.stat_seed));
     anyhow::ensure!(
         !(opts.record_baseline && opts.baseline_from_archive.is_some()),
         "--record-baseline and --baseline-from-archive are mutually exclusive: \
@@ -219,7 +228,7 @@ fn run_days(
     days: Vec<(String, Vec<FaultKind>)>,
 ) -> Result<()> {
     let mut t = Table::new(
-        "CI nightly gate (paper §4.2, Table 4)",
+        format!("CI nightly gate (paper §4.2, Table 4; {} gate)", opts.gate.as_str()),
         &["day", "planted PR", "detected", "bisected to", "runs", "resolution"],
     );
     for (date, faults) in days {

@@ -54,6 +54,7 @@ pub fn cmd(
         let ratio = (rb.iter_secs / ra.iter_secs.max(1e-12)).max(1e-12);
         time_ratios.push(ratio);
         let gate = gate_cell(ra, rb, threshold);
+        let ci = ci_cell(key, &ra.samples, &rb.samples);
         // Summary counts are time-only (the gate cell still flags
         // memory trips per row) so the geomean line never reports a
         // phantom time regression for a memory-only change.
@@ -71,6 +72,7 @@ pub fn cmd(
                 format!("{ratio:.3}"),
                 format!("{:+.1}%", (ratio - 1.0) * 100.0),
                 gate,
+                ci,
             ],
         ));
     }
@@ -81,7 +83,7 @@ pub fn cmd(
             "Run comparison: B vs A (time ratio B/A; gate {:.0}%)",
             threshold * 100.0
         ),
-        &["bench", "A time", "B time", "ratio", "Δ", "gate"],
+        &["bench", "A time", "B time", "ratio", "Δ", "gate", "95% CI A→B"],
     );
     for (_, cells) in rows {
         t.row(cells);
@@ -107,6 +109,28 @@ pub fn cmd(
         println!("no shared benchmark configs between {a_id} and {b_id}");
     }
     Ok(())
+}
+
+/// Bootstrap intervals for the two sides of one bench key, when both
+/// runs recorded per-iteration samples (schema v3). Seeded exactly like
+/// the stat gate ([`crate::ci::sample_interval`]): what this column
+/// shows is what `ci --gate stat` would decide on.
+fn ci_cell(key: &str, a: &[f64], b: &[f64]) -> String {
+    use crate::ci::{sample_interval, DEFAULT_STAT_SEED};
+    use crate::stat::{DEFAULT_CONFIDENCE, DEFAULT_RESAMPLES};
+    match (
+        sample_interval(key, DEFAULT_STAT_SEED, 0, a, DEFAULT_RESAMPLES, DEFAULT_CONFIDENCE),
+        sample_interval(key, DEFAULT_STAT_SEED, 1, b, DEFAULT_RESAMPLES, DEFAULT_CONFIDENCE),
+    ) {
+        (Some(ca), Some(cb)) => format!(
+            "[{}, {}] → [{}, {}]",
+            fmt_secs(ca.lo),
+            fmt_secs(ca.hi),
+            fmt_secs(cb.lo),
+            fmt_secs(cb.hi)
+        ),
+        _ => "-".into(),
+    }
 }
 
 /// Which gated metrics (§4.2.1: time + CPU/GPU memory) moved past the

@@ -1,0 +1,66 @@
+//! `xbench drift <bench-key>` — offline change-point detection over one
+//! benchmark config's full archive history.
+//!
+//! `history` shows the raw trajectory; this verb segments it: exact
+//! optimal partitioning over the per-run `iter_secs` series
+//! ([`crate::stat::change_points`]) finds the runs where the level
+//! actually shifted — a planted step pins to the exact run, a slow
+//! drift is split where the fitted levels separate, and run-to-run
+//! noise below the penalty stays silent. Works on any archive (the
+//! aggregate exists in every schema version) and is fully
+//! deterministic: same archive + same penalty, same output.
+
+use anyhow::Result;
+use std::path::Path;
+
+use crate::report::{fmt_secs, Table};
+use crate::store::{fmt_utc, Archive, Filter, RunRecord};
+
+use super::emit_table;
+
+pub fn cmd(archive: &Archive, csv_dir: Option<&Path>, bench_key: &str, penalty: f64) -> Result<()> {
+    anyhow::ensure!(
+        penalty > 0.0 && penalty.is_finite(),
+        "--penalty must be a positive number (default {})",
+        crate::stat::DEFAULT_PENALTY
+    );
+    // Point query like `history`: archive order = chronological series.
+    let series: Vec<RunRecord> = archive.scan(&Filter::for_key(bench_key))?;
+    anyhow::ensure!(
+        !series.is_empty(),
+        "no records for bench key {bench_key:?} in {} (see `xbench runs` for \
+         recorded runs, `xbench history` for key spelling)",
+        archive.path().display()
+    );
+
+    let secs: Vec<f64> = series.iter().map(|r| r.iter_secs).collect();
+    let cps = crate::stat::change_points(&secs, penalty);
+
+    let mut t = Table::new(
+        format!("Change points of {bench_key} ({} runs, penalty {penalty})", series.len()),
+        &["run", "when (UTC)", "run #", "level before", "level after", "Δ", "kind"],
+    );
+    for cp in &cps {
+        let r = &series[cp.index];
+        t.row(vec![
+            r.run_id.clone(),
+            fmt_utc(r.timestamp),
+            cp.index.to_string(),
+            fmt_secs(cp.before),
+            fmt_secs(cp.after),
+            format!("{:+.1}%", (cp.ratio() - 1.0) * 100.0),
+            if cp.ratio() > 1.0 { "regression" } else { "improvement" }.into(),
+        ]);
+    }
+    emit_table(&t, csv_dir, &format!("drift_{}", super::history::sanitize(bench_key)))?;
+
+    if cps.is_empty() {
+        println!(
+            "no change points over {} runs (one stable segment at this penalty)",
+            series.len()
+        );
+    } else {
+        println!("{} change point(s) over {} runs", cps.len(), series.len());
+    }
+    Ok(())
+}

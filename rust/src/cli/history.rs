@@ -54,7 +54,10 @@ pub fn cmd(archive: &Archive, csv_dir: Option<&Path>, bench_key: &str, limit: us
     }
     let mut t = Table::new(
         format!("History of {bench_key} (oldest first)"),
-        &["run", "when (UTC)", "commit", "iter time", "Δ prev", "vs first", "host mem", "gate"],
+        &[
+            "run", "when (UTC)", "commit", "iter time", "95% CI", "Δ prev", "vs first",
+            "host mem", "gate",
+        ],
     );
     let mut prev: Option<f64> = None;
     for r in &s {
@@ -70,11 +73,25 @@ pub fn cmd(archive: &Archive, csv_dir: Option<&Path>, bench_key: &str, limit: us
             Some(p) if p > 0.0 && r.iter_secs / p < 1.0 / (1.0 + DEFAULT_THRESHOLD) => "improved",
             _ => "-",
         };
+        // Bootstrap interval when the record carries per-iteration
+        // samples (schema v3), seeded exactly like the stat gate's
+        // candidate side — displayed bounds match gate bounds.
+        let ci = crate::ci::sample_interval(
+            bench_key,
+            crate::ci::DEFAULT_STAT_SEED,
+            1,
+            &r.samples,
+            crate::stat::DEFAULT_RESAMPLES,
+            crate::stat::DEFAULT_CONFIDENCE,
+        )
+        .map(|c| format!("[{}, {}]", fmt_secs(c.lo), fmt_secs(c.hi)))
+        .unwrap_or_else(|| "-".into());
         t.row(vec![
             r.run_id.clone(),
             fmt_utc(r.timestamp),
             r.git_commit.clone(),
             fmt_secs(r.iter_secs),
+            ci,
             d_prev,
             format!("{:.3}x", r.iter_secs / first.max(1e-12)),
             fmt_bytes(r.host_bytes),
@@ -100,7 +117,7 @@ pub fn cmd(archive: &Archive, csv_dir: Option<&Path>, bench_key: &str, limit: us
     Ok(())
 }
 
-fn sanitize(key: &str) -> String {
+pub(super) fn sanitize(key: &str) -> String {
     key.chars()
         .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
         .collect()

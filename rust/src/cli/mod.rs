@@ -26,6 +26,7 @@ pub mod cmp;
 pub mod compare_compiler;
 pub mod coverage;
 pub mod devices;
+pub mod drift;
 pub mod history;
 pub mod list;
 pub mod optim;
@@ -76,6 +77,7 @@ pub const VERBS: &[(&str, &str)] = &[
     ("cmp", "ranked speedup/regression diff of two recorded runs"),
     ("rank", "geometric-mean ranking per compiler.mode engine"),
     ("history", "one benchmark config across all recorded runs"),
+    ("drift", "change-point detection over one benchmark's archive history"),
     ("synth-archive", "write a deterministic synthetic archive at scale"),
     ("serve", "run the resident benchmark daemon (job queue + warm worker pool)"),
     ("submit", "enqueue a run/sweep/ci job on the daemon"),
@@ -111,6 +113,9 @@ COMMANDS (paper exhibit in parens):
                                           [--replay-history] [--record-baseline] [--run-id ID]
                                           [--baseline-from-archive [RUN]]
                                           [--jobs N] [--shard I/M]
+                                          [--gate point|stat] [--stat-seed S]
+                                          (stat: bootstrap-CI verdicts over
+                                          per-iteration samples; docs/METHODOLOGY.md)
   train             E2E training loop     [--model NAME] [--steps N] [--log-every N]
   synth-artifacts   generate the offline synthetic artifact set [--seed S] [--force]
 
@@ -122,9 +127,13 @@ ARCHIVE QUERIES (read the --archive JSONL; no artifacts needed):
                     (default: latest record per config across all runs)
   history <KEY>     one benchmark config across all runs [--limit N]
                     KEY is model.mode.compiler.bN (see `runs`/`cmp` output)
+  drift <KEY>       change-point detection over one benchmark's history
+                                          [--penalty F]
   synth-archive     write a synthetic archive at scale (query/perf testing)
                                           [--records N] [--runs M] [--prefix P]
                                           [--start-ts SECS] [--append]
+                                          [--samples N]  (per-iteration samples
+                                          on every record — schema v3)
   Run selectors: latest, latest~N, a run id, or a unique id prefix.
   Queries stream through the sidecar index (<archive>.idx), rebuilt
   silently whenever it is missing or stale; XBENCH_NO_INDEX=1 forces
@@ -140,7 +149,7 @@ BENCHMARK SERVICE (resident daemon; see docs/SERVICE.md):
   submit [VERB]     enqueue a job (VERB: run|sweep|ci; default run)
                                         [--mode ..] [--compiler ..] [--batch N]
                                         [--jobs N] [--note TEXT] [--run-id ID]
-                                        [--baseline RUN] [--port N]
+                                        [--baseline RUN] [--gate point|stat] [--port N]
   queue             job queue status    [--port N]
                     (shows per-job queue-wait and exec latency once started)
   result <JOB>      fetch job results   [--wait] [--timeout SECS] [--port N]
@@ -333,11 +342,11 @@ pub fn main() -> Result<()> {
     // them — reject instead of pretending to restrict. Only the actual
     // CLI flags count: a shared xbench.toml with a selection section
     // must not break archive queries.
-    if matches!(args.subcommand.as_str(), "runs" | "cmp" | "rank" | "history") {
+    if matches!(args.subcommand.as_str(), "runs" | "cmp" | "rank" | "history" | "drift") {
         anyhow::ensure!(
             !selection_flags_given,
             "--models/--domain don't apply to archive queries; \
-             cmp/rank/history operate on recorded bench keys and run selectors"
+             cmp/rank/history/drift operate on recorded bench keys and run selectors"
         );
     }
 
@@ -365,6 +374,12 @@ pub fn main() -> Result<()> {
             args.finish()?;
             history::cmd(&archive, csv_dir.as_deref(), &key, limit)
         }
+        "drift" => {
+            let key = args.positional("bench-key")?;
+            let penalty = args.get_f64("penalty", crate::stat::DEFAULT_PENALTY)?;
+            args.finish()?;
+            drift::cmd(&archive, csv_dir.as_deref(), &key, penalty)
+        }
         "synth-artifacts" => {
             let seed = args.get_u64("seed", 20230102)?;
             let force = args.has("force");
@@ -377,8 +392,9 @@ pub fn main() -> Result<()> {
             let start_ts = args.get_u64("start-ts", 1_700_000_000)?;
             let prefix = args.get_str("prefix", "run")?;
             let append = args.has("append");
+            let samples = args.get_usize("samples", 0)?;
             args.finish()?;
-            synth_archive::cmd(&archive, records, runs, start_ts, &prefix, append)
+            synth_archive::cmd(&archive, records, runs, start_ts, &prefix, append, samples)
         }
         // -- benchmark service ------------------------------------------------
         // Clients (`submit`/`queue`/`result`, `serve --stop`) only speak
@@ -570,6 +586,11 @@ pub fn main() -> Result<()> {
                                     }
                                 },
                                 seed: args.get_u64("seed", 20230102)?,
+                                gate: crate::ci::GateMode::parse(
+                                    &args.get_str("gate", "point")?,
+                                )?,
+                                stat_seed: args
+                                    .get_u64("stat-seed", crate::ci::DEFAULT_STAT_SEED)?,
                                 replay_history: args.has("replay-history"),
                                 record_baseline: args.has("record-baseline"),
                                 baseline_from_archive: {

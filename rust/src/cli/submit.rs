@@ -32,11 +32,20 @@ pub fn cmd(args: &mut Args, base_cfg: &RunConfig, port: u16) -> Result<()> {
         note: args.get_str("note", "")?,
         run_id: args.get_opt("run-id")?,
         baseline: args.get_opt("baseline")?,
+        gate: args.get_opt("gate")?,
     };
     anyhow::ensure!(
         spec.baseline.is_none() || spec.verb == JobVerb::Ci,
         "--baseline only applies to ci jobs"
     );
+    anyhow::ensure!(
+        spec.gate.is_none() || spec.verb == JobVerb::Ci,
+        "--gate only applies to ci jobs"
+    );
+    // Reject a bad gate at submit time, not when the job finally runs.
+    if let Some(g) = &spec.gate {
+        crate::ci::GateMode::parse(g)?;
+    }
     args.finish()?;
     let id = service::submit(port, spec)?;
     println!("{id}");

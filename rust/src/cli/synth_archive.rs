@@ -22,6 +22,7 @@ pub fn cmd(
     start_ts: u64,
     prefix: &str,
     append: bool,
+    samples: usize,
 ) -> Result<()> {
     anyhow::ensure!(records > 0 && runs > 0, "--records and --runs must be positive");
     anyhow::ensure!(
@@ -34,7 +35,10 @@ pub fn cmd(
     let mut written = 0usize;
     let mut runs_written = 0usize;
     for run in 0..runs {
-        let mut batch = synth::synth_run(prefix, run, per_run, start_ts);
+        // --samples N stamps N deterministic per-iteration timings on
+        // every record (schema v3) so the stat gate and `drift` can be
+        // exercised without real measurement; 0 keeps v3-less records.
+        let mut batch = synth::synth_run_samples(prefix, run, per_run, start_ts, samples);
         batch.truncate(records - written);
         if batch.is_empty() {
             break;

@@ -66,6 +66,7 @@ pub fn run_eager_infer(runner: &Runner, entry: &ModelEntry) -> Result<RunResult>
     });
 
     let mut repeats: Vec<(f64, Timeline)> = Vec::new();
+    let mut samples: Vec<f64> = Vec::new();
     let mut peak_act_bytes = 0usize;
     for rep in 0..runner.cfg.repeats {
         let mut tl = Timeline::new();
@@ -158,6 +159,7 @@ pub fn run_eager_infer(runner: &Runner, entry: &ModelEntry) -> Result<RunResult>
             drop(act_keepalive);
             if measured {
                 tl.extend(&iter_tl);
+                samples.push(iter_tl.total().as_secs_f64());
             }
         }
         let iter_secs = tl.total().as_secs_f64() / runner.cfg.iterations as f64;
@@ -182,5 +184,5 @@ pub fn run_eager_infer(runner: &Runner, entry: &ModelEntry) -> Result<RunResult>
         device_total: entry.param_bytes() + max_stage_arena + peak_act_bytes,
     };
     let _ = metrics::median(&repeats.iter().map(|(s, _)| *s).collect::<Vec<_>>());
-    runner.finish(entry, batch, Compiler::Eager, repeats, memory)
+    runner.finish(entry, batch, Compiler::Eager, repeats, samples, memory)
 }

@@ -32,6 +32,12 @@ pub struct RunResult {
     pub iter_secs: f64,
     /// Per-repeat per-iteration wall seconds (for noise/CV analysis).
     pub repeats_secs: Vec<f64>,
+    /// Raw per-iteration wall seconds, every measured iteration of every
+    /// repeat in execution order (`repeats × iterations` entries) — the
+    /// sample set the statistical gate bootstraps. Each entry is a
+    /// `Timeline::total()` the protocol already measured; collecting
+    /// them adds no clock reads inside timed regions.
+    pub samples: Vec<f64>,
     /// Phase breakdown of the median run.
     pub breakdown: Breakdown,
     pub memory: MemoryReport,
@@ -299,6 +305,7 @@ impl<'a> Runner<'a> {
 
         let span_on = crate::obs::span::is_enabled();
         let mut repeats: Vec<(f64, Timeline)> = Vec::new();
+        let mut samples: Vec<f64> = Vec::new();
         for rep in 0..self.cfg.repeats {
             // Span boundaries are captured between iterations — never
             // inside a timed phase (iter_secs sums Timeline phases, so
@@ -363,6 +370,9 @@ impl<'a> Runner<'a> {
                 }
                 if measured {
                     tl.extend(&iter_tl);
+                    // The iteration's own Timeline is already summed —
+                    // recording it as a raw sample is free.
+                    samples.push(iter_tl.total().as_secs_f64());
                 }
             }
             if span_on {
@@ -385,7 +395,7 @@ impl<'a> Runner<'a> {
             .unwrap_or(0);
         let device_total = entry.param_bytes() + arena
             + leaked.len() * arena.min(1 << 20); // leaked output buffers
-        self.finish(entry, batch, Compiler::Fused, repeats, MemoryReport {
+        self.finish(entry, batch, Compiler::Fused, repeats, samples, MemoryReport {
             host_peak: host_mem.peak(),
             device_total,
         })
@@ -427,6 +437,7 @@ impl<'a> Runner<'a> {
 
         let span_on = crate::obs::span::is_enabled();
         let mut repeats: Vec<(f64, Timeline)> = Vec::new();
+        let mut samples: Vec<f64> = Vec::new();
         for rep in 0..self.cfg.repeats {
             // Same contract as the inference loop: clock reads for
             // spans happen between iterations, outside timed phases.
@@ -485,6 +496,7 @@ impl<'a> Runner<'a> {
                 }
                 if measured {
                     tl.extend(&iter_tl);
+                    samples.push(iter_tl.total().as_secs_f64());
                 }
             }
             if span_on {
@@ -507,19 +519,22 @@ impl<'a> Runner<'a> {
             .unwrap_or(0);
         let device_total =
             entry.param_bytes() * 2 + arena + leaked.len() * (entry.param_bytes());
-        self.finish(entry, batch, Compiler::Fused, repeats, MemoryReport {
+        self.finish(entry, batch, Compiler::Fused, repeats, samples, MemoryReport {
             host_peak: host_mem.peak(),
             device_total,
         })
     }
 
     /// Shared epilogue: median-run selection + result assembly.
+    /// `samples` are the raw per-iteration wall seconds of every
+    /// measured iteration (all repeats, execution order).
     pub(super) fn finish(
         &self,
         entry: &ModelEntry,
         batch: usize,
         compiler: Compiler,
         repeats: Vec<(f64, Timeline)>,
+        samples: Vec<f64>,
         memory: MemoryReport,
     ) -> Result<RunResult> {
         let secs: Vec<f64> = repeats.iter().map(|(s, _)| *s).collect();
@@ -559,6 +574,7 @@ impl<'a> Runner<'a> {
             batch,
             iter_secs,
             repeats_secs: secs,
+            samples,
             breakdown: tl.breakdown(),
             memory,
             throughput: batch as f64 / iter_secs,

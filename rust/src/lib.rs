@@ -62,6 +62,7 @@ pub mod profiler;
 pub mod report;
 pub mod runtime;
 pub mod service;
+pub mod stat;
 pub mod store;
 pub mod suite;
 

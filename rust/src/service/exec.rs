@@ -14,7 +14,7 @@
 use anyhow::Result;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use crate::ci::{BaselineStore, Detector};
+use crate::ci::{BaselineStore, Detector, GateMode};
 use crate::config::{BatchPolicy, Compiler, Mode, RunConfig};
 use crate::coordinator::{
     default_jobs, planned_bench_key, run_partitioned, sweep_model, ExecOpts, RunResult, Runner,
@@ -156,7 +156,13 @@ pub fn execute_job(env: &ExecEnv, spec: &JobSpec, progress: &JobProgress) -> Res
             let baselines = BaselineStore::from_records(&archived, &baseline_run)?;
             let results: Vec<RunResult> =
                 indexed.iter().map(|(_, r)| r.clone()).collect();
-            let regs = Detector::default().detect(&baselines, &results);
+            // Daemon ci jobs inherit the gate from the spec (default
+            // point), same verdict rule as `xbench ci --gate`.
+            let gate = match &spec.gate {
+                Some(g) => GateMode::parse(g)?,
+                None => GateMode::Point,
+            };
+            let regs = Detector::default().with_gate(gate).detect(&baselines, &results);
             Some((baseline_run, regs))
         }
         _ => None,
@@ -195,13 +201,28 @@ pub fn execute_job(env: &ExecEnv, spec: &JobSpec, progress: &JobProgress) -> Res
             Json::Arr(
                 regs.iter()
                     .map(|r| {
-                        Json::obj(vec![
+                        let mut row = vec![
                             ("bench", Json::str(&r.bench)),
                             ("metric", Json::str(r.metric.to_string())),
                             ("baseline", Json::num(r.baseline)),
                             ("measured", Json::num(r.measured)),
                             ("ratio", Json::num(r.ratio)),
-                        ])
+                        ];
+                        // Stat-gate verdicts carry the deciding
+                        // intervals; old clients ignore the keys.
+                        if let Some((lo, hi)) = r.baseline_ci {
+                            row.push((
+                                "baseline_ci",
+                                Json::Arr(vec![Json::num(lo), Json::num(hi)]),
+                            ));
+                        }
+                        if let Some((lo, hi)) = r.measured_ci {
+                            row.push((
+                                "measured_ci",
+                                Json::Arr(vec![Json::num(lo), Json::num(hi)]),
+                            ));
+                        }
+                        Json::obj(row)
                     })
                     .collect(),
             ),

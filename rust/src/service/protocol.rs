@@ -108,6 +108,10 @@ pub struct JobSpec {
     /// ci only: archive run selector to gate the measured build
     /// against (regressions reported in the job result).
     pub baseline: Option<String>,
+    /// ci only: execution-time verdict rule, `"point"` | `"stat"`
+    /// (None = point). Parsed into a [`crate::ci::GateMode`] at
+    /// execution; old daemons ignore the key and gate point-wise.
+    pub gate: Option<String>,
 }
 
 impl JobSpec {
@@ -127,6 +131,7 @@ impl JobSpec {
             note: String::new(),
             run_id: None,
             baseline: None,
+            gate: None,
         }
     }
 
@@ -160,6 +165,9 @@ impl JobSpec {
         }
         if let Some(b) = &self.baseline {
             fields.push(("baseline", Json::str(b)));
+        }
+        if let Some(g) = &self.gate {
+            fields.push(("gate", Json::str(g)));
         }
         Json::obj(fields)
     }
@@ -231,6 +239,7 @@ impl JobSpec {
             note: str_of("note", "")?,
             run_id: opt_str("run_id")?,
             baseline: opt_str("baseline")?,
+            gate: opt_str("gate")?,
         })
     }
 }
@@ -315,6 +324,7 @@ mod tests {
         spec.note = "nightly".into();
         spec.run_id = Some("svc-1".into());
         spec.baseline = Some("latest".into());
+        spec.gate = Some("stat".into());
         let line = spec.to_json().to_json();
         assert!(!line.contains('\n'));
         assert_eq!(JobSpec::decode(&crate::util::json::parse(&line).unwrap()).unwrap(), spec);

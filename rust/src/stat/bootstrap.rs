@@ -1,0 +1,119 @@
+//! Percentile-bootstrap confidence interval for the sample median.
+//!
+//! The stat gate needs an interval, not a point: "is tonight slower?"
+//! becomes "do the two intervals overlap once the threshold is applied?".
+//! The bootstrap makes no distributional assumption — benchmark timings
+//! are skewed and multi-modal (scheduler noise, cache states), so a
+//! normal-theory interval would be wrong exactly when it matters.
+//!
+//! Determinism contract: the resampling RNG is the crate's SplitMix64,
+//! seeded by the caller. Identical `(samples, resamples, confidence,
+//! seed)` ⇒ identical interval, bit for bit — the property the CI
+//! acceptance check relies on (same archive + seed → byte-identical
+//! verdicts).
+
+use crate::util::rng::Rng;
+
+use super::percentile_sorted;
+
+/// Bootstrap resample count used by the gate. 1000 resamples put the
+/// Monte-Carlo error on a 95% bound well under the 7% gate threshold
+/// for the sample sizes CI produces (repeats × iterations ≈ 10).
+pub const DEFAULT_RESAMPLES: usize = 1000;
+
+/// Two-sided confidence level used by the gate.
+pub const DEFAULT_CONFIDENCE: f64 = 0.95;
+
+/// A bootstrap confidence interval for the median.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Ci {
+    /// Lower bound (percentile `(1-confidence)/2` of resampled medians).
+    pub lo: f64,
+    /// Upper bound (percentile `1-(1-confidence)/2`).
+    pub hi: f64,
+    /// The plain sample median — the point estimate the interval brackets.
+    pub point: f64,
+    /// Sample size the interval was computed from.
+    pub n: usize,
+}
+
+impl Ci {
+    /// Interval width — shrinks as the sample grows.
+    pub fn width(&self) -> f64 {
+        self.hi - self.lo
+    }
+}
+
+/// Percentile-bootstrap CI for the median of `samples`.
+///
+/// Draws `resamples` bootstrap resamples (with replacement, size n) using
+/// a SplitMix64 seeded with `seed`, takes the median of each, and reads
+/// the interval off the percentiles of those medians. Panics on an empty
+/// sample, `resamples == 0`, or `confidence` outside `(0, 1)`.
+pub fn bootstrap_median_ci(samples: &[f64], resamples: usize, confidence: f64, seed: u64) -> Ci {
+    assert!(!samples.is_empty(), "bootstrap of empty sample");
+    assert!(resamples > 0, "bootstrap needs at least one resample");
+    assert!(
+        confidence > 0.0 && confidence < 1.0,
+        "confidence {confidence} outside (0, 1)"
+    );
+    let n = samples.len();
+    let point = crate::metrics::median(samples);
+    if n == 1 {
+        // Degenerate by definition; skip the RNG so the draw stream is
+        // never consumed for an interval that cannot vary.
+        return Ci { lo: point, hi: point, point, n };
+    }
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut medians = Vec::with_capacity(resamples);
+    let mut scratch = vec![0.0f64; n];
+    for _ in 0..resamples {
+        for slot in scratch.iter_mut() {
+            *slot = samples[rng.gen_range(n as u64) as usize];
+        }
+        medians.push(crate::metrics::median(&scratch));
+    }
+    medians.sort_by(|a, b| a.partial_cmp(b).expect("NaN in bootstrap medians"));
+    let alpha = (1.0 - confidence) / 2.0;
+    Ci {
+        lo: percentile_sorted(&medians, alpha * 100.0),
+        hi: percentile_sorted(&medians, (1.0 - alpha) * 100.0),
+        point,
+        n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_seed_identical_interval() {
+        let s: Vec<f64> = (0..20).map(|i| 1.0 + 0.01 * (i % 7) as f64).collect();
+        let a = bootstrap_median_ci(&s, 200, 0.95, 42);
+        let b = bootstrap_median_ci(&s, 200, 0.95, 42);
+        assert_eq!(a, b);
+        let c = bootstrap_median_ci(&s, 200, 0.95, 43);
+        assert!(a.lo != c.lo || a.hi != c.hi, "different seed should perturb the interval");
+    }
+
+    #[test]
+    fn constant_sample_gives_degenerate_interval() {
+        let ci = bootstrap_median_ci(&[2.5; 9], 100, 0.95, 1);
+        assert_eq!((ci.lo, ci.hi, ci.point), (2.5, 2.5, 2.5));
+    }
+
+    #[test]
+    fn single_sample_is_degenerate_and_deterministic() {
+        let ci = bootstrap_median_ci(&[3.0], 100, 0.95, 7);
+        assert_eq!((ci.lo, ci.hi, ci.point, ci.n), (3.0, 3.0, 3.0, 1));
+    }
+
+    #[test]
+    fn interval_brackets_the_point() {
+        let s: Vec<f64> = (0..50).map(|i| 10.0 + (i % 11) as f64 * 0.3).collect();
+        let ci = bootstrap_median_ci(&s, 500, 0.95, 9);
+        assert!(ci.lo <= ci.point && ci.point <= ci.hi, "{ci:?}");
+        assert!(ci.width() > 0.0);
+    }
+}

@@ -1,0 +1,199 @@
+//! Offline change-point detection over an archive history series.
+//!
+//! The per-run gate compares tonight against one baseline; a regression
+//! spread over several PRs (three +3% steps, say) never trips it. Run
+//! over the full per-key history (`xbench drift`), change-point
+//! detection recovers where the *level* of the series moved.
+//!
+//! Algorithm: exact optimal partitioning (the unpruned form of PELT)
+//! under a piecewise-constant-mean model with squared-error segment
+//! cost and a BIC-style per-segment penalty `β = penalty · σ̂² · ln n`.
+//! The noise scale σ̂ is estimated robustly from the median absolute
+//! successive difference — level *shifts* contribute to only a few
+//! differences, so the estimate tracks within-segment noise, not the
+//! signal being detected. O(n²) in the series length: archive history
+//! series are hundreds of points, so exactness is cheap and the result
+//! is trivially deterministic (no RNG anywhere).
+
+/// Penalty multiplier on `σ̂² · ln n` per extra segment. The BIC value
+/// for this model is 2; the default is deliberately stiffer so that a
+/// noisy-but-flat history stays unflagged (a false page costs more than
+/// a one-run-late detection).
+pub const DEFAULT_PENALTY: f64 = 8.0;
+
+/// One detected shift: the series' mean level changes at `index`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChangePoint {
+    /// First index of the new regime (`series[index]` is the first
+    /// point after the shift); always in `1..series.len()`.
+    pub index: usize,
+    /// Mean of the segment ending at `index`.
+    pub before: f64,
+    /// Mean of the segment starting at `index`.
+    pub after: f64,
+}
+
+impl ChangePoint {
+    /// `after / before` — > 1 is a slowdown when the series is a timing.
+    pub fn ratio(&self) -> f64 {
+        self.after / self.before
+    }
+}
+
+/// Detect mean-level shifts in `series`. Returns change points in
+/// increasing index order; empty when the series is too short (< 8
+/// points) or no split pays its penalty. `penalty` scales the
+/// per-segment cost (see [`DEFAULT_PENALTY`]); larger ⇒ fewer, larger
+/// detections.
+pub fn change_points(series: &[f64], penalty: f64) -> Vec<ChangePoint> {
+    assert!(penalty > 0.0, "penalty must be positive, got {penalty}");
+    let n = series.len();
+    if n < 8 {
+        return Vec::new();
+    }
+
+    // Prefix sums: segment SSE in O(1).
+    let mut s = vec![0.0f64; n + 1];
+    let mut sq = vec![0.0f64; n + 1];
+    for (i, &x) in series.iter().enumerate() {
+        s[i + 1] = s[i] + x;
+        sq[i + 1] = sq[i] + x * x;
+    }
+    // SSE of series[a..b] around its own mean.
+    let sse = |a: usize, b: usize| -> f64 {
+        let len = (b - a) as f64;
+        let sum = s[b] - s[a];
+        // Clamp: catastrophic cancellation can go slightly negative.
+        (sq[b] - sq[a] - sum * sum / len).max(0.0)
+    };
+
+    // Robust noise scale from successive differences. A shift at one
+    // index perturbs one difference; the median ignores it.
+    let mut diffs: Vec<f64> = series.windows(2).map(|w| (w[1] - w[0]).abs()).collect();
+    diffs.sort_by(|a, b| a.partial_cmp(b).expect("NaN in series"));
+    let mad_diff = diffs[diffs.len() / 2];
+    // diff of two iid noise terms has sd σ√2; MAD→σ is 1/0.6745.
+    let mut sigma = mad_diff / (0.6745 * std::f64::consts::SQRT_2);
+    if sigma == 0.0 {
+        // Noise-free series (synthetic fixtures): floor the scale at a
+        // relative epsilon so flat segments cost exactly their (zero)
+        // SSE and any real step still dwarfs the penalty.
+        let level = s[n].abs() / n as f64;
+        sigma = level.max(f64::MIN_POSITIVE) * 1e-6;
+    }
+    let beta = penalty * sigma * sigma * (n as f64).ln();
+
+    // Optimal partitioning: f[t] = best cost of series[0..t];
+    // prev[t] = start of the last segment in that optimum.
+    let min_seg = 2; // a single point is never its own regime
+    let mut f = vec![f64::INFINITY; n + 1];
+    let mut prev = vec![0usize; n + 1];
+    f[0] = -beta;
+    for t in min_seg..=n {
+        for sstart in 0..=(t - min_seg) {
+            if sstart != 0 && sstart < min_seg {
+                continue; // first segment also respects min length
+            }
+            if f[sstart].is_infinite() {
+                continue;
+            }
+            let cost = f[sstart] + sse(sstart, t) + beta;
+            // Strict < keeps the earliest split on exact ties — stable,
+            // deterministic output.
+            if cost < f[t] {
+                f[t] = cost;
+                prev[t] = sstart;
+            }
+        }
+    }
+
+    // Backtrack the optimal segmentation.
+    let mut bounds = Vec::new(); // interior boundaries
+    let mut t = n;
+    while t > 0 {
+        let sstart = prev[t];
+        if sstart > 0 {
+            bounds.push(sstart);
+        }
+        t = sstart;
+    }
+    bounds.reverse();
+
+    let mut segs = Vec::with_capacity(bounds.len() + 1);
+    let mut start = 0;
+    for &b in bounds.iter().chain(std::iter::once(&n)) {
+        segs.push((start, b));
+        start = b;
+    }
+    bounds
+        .iter()
+        .enumerate()
+        .map(|(i, &b)| {
+            let (pa, pb) = segs[i];
+            let (na, nb) = segs[i + 1];
+            ChangePoint {
+                index: b,
+                before: (s[pb] - s[pa]) / (pb - pa) as f64,
+                after: (s[nb] - s[na]) / (nb - na) as f64,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_series_has_no_change_points() {
+        let flat: Vec<f64> = (0..40).map(|i| 10.0 + 0.01 * ((i * 7) % 5) as f64).collect();
+        assert_eq!(change_points(&flat, DEFAULT_PENALTY), Vec::new());
+    }
+
+    #[test]
+    fn single_step_detected_at_exact_index() {
+        let series: Vec<f64> = (0..60)
+            .map(|i| {
+                let base = if i < 30 { 10.0 } else { 13.0 };
+                base + 0.02 * ((i * 7) % 5) as f64 // deterministic jitter
+            })
+            .collect();
+        let cps = change_points(&series, DEFAULT_PENALTY);
+        assert_eq!(cps.len(), 1, "{cps:?}");
+        assert_eq!(cps[0].index, 30);
+        assert!(cps[0].ratio() > 1.25 && cps[0].ratio() < 1.35);
+    }
+
+    #[test]
+    fn short_series_returns_empty() {
+        assert_eq!(change_points(&[1.0, 9.0, 1.0], DEFAULT_PENALTY), Vec::new());
+        assert_eq!(change_points(&[], DEFAULT_PENALTY), Vec::new());
+    }
+
+    #[test]
+    fn constant_series_is_silent_even_with_zero_noise() {
+        let series = vec![5.0; 32];
+        assert_eq!(change_points(&series, DEFAULT_PENALTY), Vec::new());
+    }
+
+    #[test]
+    fn two_steps_both_found_in_order() {
+        let series: Vec<f64> = (0..90)
+            .map(|i| {
+                let base = if i < 30 {
+                    10.0
+                } else if i < 60 {
+                    12.0
+                } else {
+                    15.0
+                };
+                base + 0.02 * ((i * 11) % 7) as f64
+            })
+            .collect();
+        let idx: Vec<usize> = change_points(&series, DEFAULT_PENALTY)
+            .iter()
+            .map(|c| c.index)
+            .collect();
+        assert_eq!(idx, vec![30, 60]);
+    }
+}

@@ -1,0 +1,107 @@
+//! Noise-aware statistics for the regression gate (ROADMAP: statistical
+//! gating + change-point detection).
+//!
+//! The 7% point gate compares two *point estimates*; at production scale
+//! (thousands of configs × noisy hosts) run-to-run variance routinely
+//! exceeds the effect size being gated. This module supplies the
+//! primitives the `stat` gate is built from:
+//!
+//! - [`percentile`] / [`median`] — linear-interpolated order statistics;
+//! - [`bootstrap::bootstrap_median_ci`] — percentile-bootstrap confidence
+//!   interval for the median, driven by the crate's seeded SplitMix64
+//!   ([`crate::util::rng::Rng`]) so identical seed ⇒ identical interval;
+//! - [`outlier::reject_outliers`] — MAD-based rejection, iterated to a
+//!   fixed point so the operation is idempotent and order-invariant;
+//! - [`changepoint::change_points`] — offline change-point detection
+//!   (optimal partitioning, squared-error cost, BIC-style penalty) over a
+//!   per-key archive history series, so a slow multi-PR drift is caught
+//!   even when no single step trips the per-run gate.
+//!
+//! Everything here is pure math over already-measured samples: nothing
+//! in this module reads a clock or touches a timed region (the same
+//! invariant the archive index and the flight recorder hold; see
+//! `docs/METHODOLOGY.md` §Statistical gating).
+
+pub mod bootstrap;
+pub mod changepoint;
+pub mod outlier;
+
+pub use bootstrap::{bootstrap_median_ci, Ci, DEFAULT_CONFIDENCE, DEFAULT_RESAMPLES};
+pub use changepoint::{change_points, ChangePoint, DEFAULT_PENALTY};
+pub use outlier::{reject_outliers, DEFAULT_MAD_K};
+
+/// Linear-interpolated percentile of a sample, `p` in `[0, 100]`.
+///
+/// Uses the `(n-1)·p/100` rank convention (NumPy's default): `p = 50`
+/// on an even-length sample averages the two middle values, matching
+/// [`crate::metrics::median`]. Panics on an empty sample or `p`
+/// outside `[0, 100]` — callers gate on sample presence first.
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    assert!(!samples.is_empty(), "percentile of empty sample");
+    assert!((0.0..=100.0).contains(&p), "percentile {p} outside [0, 100]");
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+    percentile_sorted(&v, p)
+}
+
+/// [`percentile`] over an already-sorted sample (no copy, no sort).
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty sample");
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Median as the 50th percentile (equals [`crate::metrics::median`]).
+pub fn median(samples: &[f64]) -> f64 {
+    percentile(samples, 50.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_endpoints_and_interpolation() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 4.0);
+        assert_eq!(percentile(&v, 50.0), 2.5);
+        // rank = 0.25 * 3 = 0.75 → 1.0 + 0.75 * (2.0 - 1.0)
+        assert!((percentile(&v, 25.0) - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_is_sort_invariant() {
+        let a = [5.0, 1.0, 3.0, 2.0, 4.0];
+        let b = [1.0, 2.0, 3.0, 4.0, 5.0];
+        for p in [0.0, 10.0, 37.5, 50.0, 90.0, 100.0] {
+            assert_eq!(percentile(&a, p), percentile(&b, p));
+        }
+    }
+
+    #[test]
+    fn median_matches_metrics_median() {
+        for v in [vec![3.0, 1.0, 2.0], vec![4.0, 1.0, 2.0, 3.0], vec![5.0]] {
+            assert_eq!(median(&v), crate::metrics::median(&v));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn percentile_rejects_empty() {
+        percentile(&[], 50.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn percentile_rejects_out_of_range_p() {
+        percentile(&[1.0], 101.0);
+    }
+}

@@ -1,0 +1,115 @@
+//! MAD-based outlier rejection for per-iteration timing samples.
+//!
+//! One preempted iteration can stretch a sample by 10× and drag any
+//! mean-based statistic with it. The median absolute deviation is the
+//! standard robust scale (50% breakdown point): a sample is rejected
+//! when its distance from the median exceeds `k` robust standard
+//! deviations (MAD × 1.4826 ≈ σ under normality).
+//!
+//! The filter is iterated to a fixed point, which buys two properties
+//! the gate's tests pin down:
+//!
+//! - **idempotent** — `reject(reject(x)) == reject(x)` (a fixed point of
+//!   one pass is a fixed point of the whole iteration);
+//! - **order-invariant** — median and MAD depend only on the multiset,
+//!   so the surviving multiset does too (survivors keep input order).
+
+use crate::metrics::median;
+
+/// Rejection threshold in robust standard deviations. 3.5 is the
+/// classic Iglewicz–Hoaglin cut for the modified z-score: wide enough
+/// to keep genuine scheduler jitter, tight enough to drop a preempted
+/// iteration.
+pub const DEFAULT_MAD_K: f64 = 3.5;
+
+/// MAD → σ consistency constant for a normal distribution.
+const MAD_SCALE: f64 = 1.4826;
+
+/// Drop samples farther than `k` robust standard deviations from the
+/// median, iterating until no sample moves. Returns survivors in input
+/// order. The median itself always survives a pass, so the result is
+/// never empty for non-empty input. A zero-MAD sample (over half the
+/// values identical) falls back to the mean absolute deviation; if that
+/// is also zero the sample is uniform and nothing is rejected.
+pub fn reject_outliers(samples: &[f64], k: f64) -> Vec<f64> {
+    assert!(k > 0.0, "rejection threshold must be positive, got {k}");
+    let mut kept: Vec<f64> = samples.to_vec();
+    loop {
+        if kept.len() < 3 {
+            // Two points cannot outvote each other; stop.
+            return kept;
+        }
+        let m = median(&kept);
+        let devs: Vec<f64> = kept.iter().map(|x| (x - m).abs()).collect();
+        let mad = median(&devs);
+        let scale = if mad > 0.0 {
+            mad * MAD_SCALE
+        } else {
+            // Majority of samples sit exactly on the median: fall back to
+            // the mean absolute deviation so a lone far point still reads
+            // as far.
+            devs.iter().sum::<f64>() / devs.len() as f64
+        };
+        if scale == 0.0 {
+            return kept; // uniform sample — nothing to reject
+        }
+        let next: Vec<f64> = kept
+            .iter()
+            .copied()
+            .filter(|x| (x - m).abs() <= k * scale)
+            .collect();
+        if next.len() == kept.len() {
+            return kept;
+        }
+        kept = next;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drops_the_preempted_iteration() {
+        let mut s = vec![1.0, 1.01, 0.99, 1.02, 0.98, 1.0, 1.01];
+        s.push(9.0); // the preemption
+        let kept = reject_outliers(&s, DEFAULT_MAD_K);
+        assert_eq!(kept.len(), 7);
+        assert!(kept.iter().all(|&x| x < 2.0));
+    }
+
+    #[test]
+    fn clean_sample_unchanged() {
+        let s = vec![1.0, 1.01, 0.99, 1.02, 0.98];
+        assert_eq!(reject_outliers(&s, DEFAULT_MAD_K), s);
+    }
+
+    #[test]
+    fn zero_mad_falls_back_and_still_rejects() {
+        // Median and MAD are 0-deviation (majority identical); the mean
+        // absolute deviation fallback still isolates the far point.
+        let s = vec![1.0, 1.0, 1.0, 1.0, 1.0, 100.0];
+        let kept = reject_outliers(&s, DEFAULT_MAD_K);
+        assert_eq!(kept, vec![1.0; 5]);
+    }
+
+    #[test]
+    fn uniform_sample_is_identity() {
+        let s = vec![2.0; 8];
+        assert_eq!(reject_outliers(&s, DEFAULT_MAD_K), s);
+    }
+
+    #[test]
+    fn idempotent_on_a_mixed_sample() {
+        let s = vec![1.0, 1.1, 0.9, 1.05, 5.0, 0.95, 1.02, 4.8];
+        let once = reject_outliers(&s, DEFAULT_MAD_K);
+        let twice = reject_outliers(&once, DEFAULT_MAD_K);
+        assert_eq!(once, twice);
+    }
+
+    #[test]
+    fn tiny_samples_pass_through() {
+        assert_eq!(reject_outliers(&[], DEFAULT_MAD_K), Vec::<f64>::new());
+        assert_eq!(reject_outliers(&[1.0, 99.0], DEFAULT_MAD_K), vec![1.0, 99.0]);
+    }
+}

@@ -389,6 +389,7 @@ mod tests {
             idle: 0.1,
             host_bytes: 100,
             device_bytes: 200,
+            samples: Vec::new(),
         }
     }
 
@@ -539,6 +540,7 @@ mod tests {
             batch: 4,
             iter_secs: 0.01,
             repeats_secs: vec![0.01],
+            samples: vec![0.01, 0.011, 0.009, 0.0105],
             breakdown: crate::profiler::Breakdown {
                 active: 0.6,
                 movement: 0.3,

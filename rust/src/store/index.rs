@@ -525,6 +525,7 @@ mod tests {
                 idle: 0.1,
                 host_bytes: 1,
                 device_bytes: 2,
+                samples: Vec::new(),
             }
         };
         let records = vec![

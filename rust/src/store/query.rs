@@ -158,6 +158,7 @@ mod tests {
             idle: 0.1,
             host_bytes: 100,
             device_bytes: 200,
+            samples: Vec::new(),
         }
     }
 

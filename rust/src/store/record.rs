@@ -15,7 +15,14 @@ use crate::util::Json;
 ///   parallel/sharded runs record how they were produced. Decoding
 ///   treats a missing `v` as 1 and all v2 fields as optional, so old
 ///   archives parse unchanged.
-pub const SCHEMA_VERSION: usize = 2;
+/// - **v3**: adds optional per-iteration `samples` (raw measured
+///   iteration wall seconds, all repeats) feeding the statistical gate
+///   (`ci --gate stat`) and `drift`. Optional like the v2 fields: v1/v2
+///   lines decode unchanged, and re-encoding a decoded v1/v2 line
+///   reproduces it byte for byte (no `samples` key, and no `v` key for
+///   v1). The aggregate `iter_secs` remains the gated fallback whenever
+///   a record carries no samples.
+pub const SCHEMA_VERSION: usize = 3;
 
 /// The canonical benchmark-config key: `model.mode.compiler.bN`.
 ///
@@ -189,6 +196,10 @@ pub struct RunRecord {
     pub iter_secs: f64,
     /// Per-repeat seconds (noise/CV analysis across history).
     pub repeats_secs: Vec<f64>,
+    /// Raw per-iteration wall seconds across all repeats (schema v3) —
+    /// what the bootstrap-CI gate resamples. Empty = not recorded
+    /// (pre-v3 lines); the point gate on `iter_secs` then applies.
+    pub samples: Vec<f64>,
     pub throughput: f64,
     /// Fig 1/2 breakdown fractions of the median run.
     pub active: f64,
@@ -220,6 +231,7 @@ impl RunRecord {
             batch: r.batch,
             iter_secs: r.iter_secs,
             repeats_secs: r.repeats_secs.clone(),
+            samples: r.samples.clone(),
             throughput: r.throughput,
             active: r.breakdown.active,
             movement: r.breakdown.movement,
@@ -241,9 +253,14 @@ impl RunRecord {
     }
 
     /// Encode as a JSON object (one archive line, compact).
+    ///
+    /// Optional fields are only written when present and `v` only when
+    /// the schema is versioned (≥ 2), so decoding any archive line and
+    /// re-encoding it reproduces the original bytes — the compat
+    /// contract `tests/store_archive.rs` pins against the v1/v2
+    /// fixture.
     pub fn to_json(&self) -> Json {
         let mut fields = vec![
-            ("v", Json::num(self.schema as f64)),
             ("run_id", Json::str(&self.run_id)),
             ("ts", Json::num(self.timestamp as f64)),
             ("git", Json::str(&self.git_commit)),
@@ -267,6 +284,10 @@ impl RunRecord {
             ("host_bytes", Json::num(self.host_bytes as f64)),
             ("device_bytes", Json::num(self.device_bytes as f64)),
         ];
+        // Pre-versioning (v1) lines carry no "v" key at all.
+        if self.schema >= 2 {
+            fields.push(("v", Json::num(self.schema as f64)));
+        }
         // v2 provenance: only written when present, so serial archive
         // lines stay byte-compatible with what v1 readers expect.
         if let Some(seq) = self.seq {
@@ -277,6 +298,13 @@ impl RunRecord {
         }
         if let Some(shard) = &self.shard {
             fields.push(("shard", Json::str(shard)));
+        }
+        // v3: raw iteration samples, only when recorded.
+        if !self.samples.is_empty() {
+            fields.push((
+                "samples",
+                Json::Arr(self.samples.iter().map(|&s| Json::num(s)).collect()),
+            ));
         }
         Json::obj(fields)
     }
@@ -307,6 +335,13 @@ impl RunRecord {
                 .iter()
                 .map(|s| s.as_f64().context("repeats_secs element"))
                 .collect::<Result<_>>()?,
+            samples: match v.get("samples").and_then(|s| s.as_array()) {
+                Some(arr) => arr
+                    .iter()
+                    .map(|s| s.as_f64().context("samples element"))
+                    .collect::<Result<_>>()?,
+                None => Vec::new(),
+            },
             throughput: v.req_f64("throughput")?,
             active: v.req_f64("active")?,
             movement: v.req_f64("movement")?,
@@ -374,6 +409,7 @@ mod tests {
             batch: 4,
             iter_secs: 0.01,
             repeats_secs: vec![0.011, 0.01, 0.012],
+            samples: vec![0.011, 0.0105, 0.01, 0.0095, 0.012, 0.0118],
             breakdown: Breakdown { active: 0.7, movement: 0.2, idle: 0.1, total_secs: 0.01 },
             memory: MemoryReport { host_peak: 1000, device_total: 2000 },
             throughput: 400.0,
@@ -444,7 +480,7 @@ mod tests {
         let r = RunRecord::from_result(&sample_result(), &meta).with_seq(5);
         assert_eq!(r.schema, SCHEMA_VERSION);
         let line = r.to_json().to_json();
-        assert!(line.contains("\"v\":2"), "{line}");
+        assert!(line.contains("\"v\":3"), "{line}");
         assert!(line.contains("\"seq\":5"), "{line}");
         assert!(line.contains("\"jobs\":8"), "{line}");
         assert!(line.contains("\"shard\":\"1/2\""), "{line}");
@@ -458,16 +494,44 @@ mod tests {
         assert!(!serial_line.contains("jobs"), "{serial_line}");
         assert!(!serial_line.contains("shard"), "{serial_line}");
 
-        // A v1 line (no "v", none of the v2 keys) parses as schema 1.
-        // Keys serialize in sorted order, so "v" is the last field.
-        let v1 = serial_line.replace(",\"v\":2", "");
+        // A v1 line (no "v", none of the v2/v3 keys) parses as schema 1
+        // and re-encodes to the same bytes. Keys serialize in sorted
+        // order, so "v" is the last field and "samples" has its own key.
+        let v1 = serial_line
+            .replace(",\"v\":3", "")
+            .replace(&format!(",\"samples\":{}", samples_json(&serial.samples)), "");
         assert_ne!(v1, serial_line, "expected to strip the version key");
+        assert!(!v1.contains("samples"), "{v1}");
         let old = RunRecord::decode_line(&v1).unwrap();
         assert_eq!(old.schema, 1);
         assert_eq!(old.seq, None);
         assert_eq!(old.jobs, None);
         assert_eq!(old.shard, None);
+        assert!(old.samples.is_empty());
         assert_eq!(old.bench_key(), serial.bench_key());
+        assert_eq!(old.to_json().to_json(), v1, "v1 decode→encode must be byte-identical");
+    }
+
+    fn samples_json(samples: &[f64]) -> String {
+        Json::Arr(samples.iter().map(|&s| Json::num(s)).collect()).to_json()
+    }
+
+    #[test]
+    fn v3_samples_roundtrip_and_empty_samples_omit_the_key() {
+        let r = RunRecord::from_result(&sample_result(), &sample_meta());
+        let line = r.to_json().to_json();
+        assert!(line.contains("\"samples\":[0.011,"), "{line}");
+        let back = RunRecord::decode_line(&line).unwrap();
+        assert_eq!(back.samples, r.samples);
+
+        let mut bare = sample_result();
+        bare.samples.clear();
+        let no_samples = RunRecord::from_result(&bare, &sample_meta());
+        let bare_line = no_samples.to_json().to_json();
+        assert!(!bare_line.contains("samples"), "{bare_line}");
+        let back = RunRecord::decode_line(&bare_line).unwrap();
+        assert!(back.samples.is_empty());
+        assert_eq!(back.to_json().to_json(), bare_line);
     }
 
     #[test]

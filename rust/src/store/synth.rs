@@ -48,9 +48,32 @@ pub fn synth_run(prefix: &str, run: usize, per_run: usize, start_ts: u64) -> Vec
                 idle: 0.1,
                 host_bytes: 4096 + i,
                 device_bytes: 8192 + i,
+                samples: Vec::new(),
             }
         })
         .collect()
+}
+
+/// [`synth_run`] plus `samples` per-iteration timings on every record
+/// (`xbench synth-archive --samples N`) — schema-v3 archives for
+/// exercising the stat gate and `drift` without real measurement.
+/// Jitter is a fixed ±5% pattern around each record's `iter_secs`,
+/// deterministic in (record index, sample index); `samples == 0`
+/// degenerates to [`synth_run`] exactly.
+pub fn synth_run_samples(
+    prefix: &str,
+    run: usize,
+    per_run: usize,
+    start_ts: u64,
+    samples: usize,
+) -> Vec<RunRecord> {
+    let mut records = synth_run(prefix, run, per_run, start_ts);
+    for (i, r) in records.iter_mut().enumerate() {
+        r.samples = (0..samples)
+            .map(|j| r.iter_secs * (1.0 + 0.01 * (((i * 13 + j * 7) % 11) as f64 - 5.0)))
+            .collect();
+    }
+    records
 }
 
 #[cfg(test)]
@@ -70,5 +93,24 @@ mod tests {
         }
         // The four engines appear, sharing model keys across them.
         assert!(a.iter().any(|r| r.mode == "train" && r.compiler == "eager"));
+    }
+
+    #[test]
+    fn sampled_synthesis_is_deterministic_and_decodable() {
+        let a = synth_run_samples("run", 1, 8, 1_700_000_000, 6);
+        assert_eq!(a, synth_run_samples("run", 1, 8, 1_700_000_000, 6));
+        for r in &a {
+            assert_eq!(r.samples.len(), 6);
+            assert!(r.samples.iter().all(|&s| s > 0.0));
+            // Jitter actually varies (the stat gate needs spread)…
+            assert!(r.samples.iter().any(|&s| s != r.samples[0]));
+            // …and stays within the documented ±5% envelope.
+            assert!(r.samples.iter().all(|&s| (s / r.iter_secs - 1.0).abs() <= 0.05 + 1e-12));
+            let line = r.to_json().to_json();
+            assert_eq!(&RunRecord::decode_line(&line).unwrap(), r);
+        }
+        // samples == 0 is byte-compatible with the unsampled synth.
+        let plain = synth_run_samples("run", 1, 8, 1_700_000_000, 0);
+        assert_eq!(plain, synth_run("run", 1, 8, 1_700_000_000));
     }
 }

@@ -1,0 +1,131 @@
+//! Golden change-point fixture (ISSUE 7 satellite): an 80-run archive
+//! of one bench key with a planted step and a planted slow drift, and
+//! the exact segmentation `xbench drift` must report for it.
+//!
+//! The series in `tests/data/drift_archive.jsonl` is fully synthetic
+//! and deterministic:
+//!
+//! - runs 0..30   — flat at 0.010 s (the clean prefix),
+//! - run  30      — a planted step to 0.013 s (~+30%),
+//! - runs 30..55  — flat at the new level,
+//! - runs 55..80  — a slow linear drift of +0.00012 s per run,
+//!
+//! all with a small deterministic jitter (`0.00005 * ((i*7) % 5)`) so
+//! the detector has realistic run-to-run noise to calibrate its
+//! penalty against. Detection is exact optimal partitioning with no
+//! randomness, so the full change-point list is pinned byte-for-byte
+//! here: if the cost function, penalty scaling, or σ̂ estimate changes,
+//! this test moves and the change must be deliberate.
+
+use std::path::Path;
+
+use xbench::stat::{change_points, DEFAULT_PENALTY};
+use xbench::store::{Archive, Filter};
+use xbench::util::TempDir;
+
+const FIXTURE: &str = "tests/data/drift_archive.jsonl";
+const KEY: &str = "gpt_tiny.infer.fused.b4";
+
+/// Copy the checked-in fixture into `dir` and open it as an archive —
+/// reads build a sidecar index beside the archive, which must land in
+/// the temp dir, never in the source tree.
+fn fixture_archive(dir: &TempDir) -> Archive {
+    assert!(
+        Path::new(FIXTURE).exists(),
+        "drift archive fixture missing (run tests from the crate root)"
+    );
+    let copy = dir.path().join("drift_archive.jsonl");
+    std::fs::copy(FIXTURE, &copy).unwrap();
+    Archive::new(copy)
+}
+
+fn series() -> Vec<f64> {
+    let dir = TempDir::new().unwrap();
+    let records = fixture_archive(&dir).scan(&Filter::for_key(KEY)).unwrap();
+    assert_eq!(records.len(), 80, "fixture must hold all 80 runs of {KEY}");
+    // Archive order is chronological — exactly what `drift` segments.
+    records.iter().map(|r| r.iter_secs).collect()
+}
+
+#[test]
+fn planted_step_is_pinned_to_the_exact_run() {
+    let cps = change_points(&series(), DEFAULT_PENALTY);
+    let first = cps.first().expect("the planted step must be detected");
+    assert_eq!(first.index, 30, "step planted at run 30 must pin exactly");
+    // ~0.010 → ~0.013: a ≈ +30% regression.
+    assert!(
+        first.before > 0.0095 && first.before < 0.0105,
+        "level before the step should sit at the flat prefix: {}",
+        first.before
+    );
+    assert!(
+        (first.ratio() - 1.3).abs() < 0.05,
+        "step magnitude should be ≈ 1.3×, got {}",
+        first.ratio()
+    );
+}
+
+#[test]
+fn flat_prefix_has_no_false_positives() {
+    // No change point anywhere in the clean 0..30 prefix, at the
+    // default penalty and at a twice-as-eager one.
+    for penalty in [DEFAULT_PENALTY, DEFAULT_PENALTY / 2.0] {
+        for cp in change_points(&series(), penalty) {
+            assert!(
+                cp.index >= 30,
+                "false positive at run {} (penalty {penalty})",
+                cp.index
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_segmentation_is_pinned() {
+    // The exact partition at the default penalty: the step at 30, then
+    // the slow drift split into rising plateaus from run 55 onward.
+    // Detection is deterministic, so this is a golden value, not a
+    // tolerance check.
+    let cps = change_points(&series(), DEFAULT_PENALTY);
+    let indices: Vec<usize> = cps.iter().map(|c| c.index).collect();
+    assert_eq!(indices, vec![30, 57, 62, 66, 71, 76]);
+    // Every drift-region split is a (small) regression: fitted levels
+    // must be strictly increasing through the ramp.
+    for cp in &cps {
+        assert!(
+            cp.after > cp.before,
+            "run {}: drift fixture only moves upward ({} -> {})",
+            cp.index,
+            cp.before,
+            cp.after
+        );
+    }
+    // A stiffer penalty coarsens the drift segmentation but must keep
+    // the planted step pinned at run 30.
+    let stiff: Vec<usize> =
+        change_points(&series(), 2.0 * DEFAULT_PENALTY).iter().map(|c| c.index).collect();
+    assert_eq!(stiff, vec![30, 59, 66, 72]);
+}
+
+#[test]
+fn drift_verb_runs_over_the_golden_fixture() {
+    // End-to-end through the CLI layer: table renders, CSV lands, and
+    // the command is deterministic across invocations.
+    let dir = TempDir::new().unwrap();
+    let archive = fixture_archive(&dir);
+    xbench::cli::drift::cmd(&archive, Some(dir.path()), KEY, DEFAULT_PENALTY).unwrap();
+    let csv = dir.path().join("drift_gpt_tiny_infer_fused_b4.csv");
+    let first = std::fs::read_to_string(&csv).unwrap();
+    assert_eq!(first.lines().count(), 1 + 6, "header + six change points: {first}");
+    assert!(first.contains("drift-030"), "{first}");
+    // Byte-identical on a second run (the CI noise-gate job relies on
+    // this to diff two invocations).
+    xbench::cli::drift::cmd(&archive, Some(dir.path()), KEY, DEFAULT_PENALTY).unwrap();
+    assert_eq!(std::fs::read_to_string(&csv).unwrap(), first);
+
+    // Unknown keys and bad penalties fail loudly instead of printing
+    // an empty segmentation.
+    assert!(xbench::cli::drift::cmd(&archive, None, "nope.infer.fused.b4", 8.0).is_err());
+    assert!(xbench::cli::drift::cmd(&archive, None, KEY, 0.0).is_err());
+    assert!(xbench::cli::drift::cmd(&archive, None, KEY, f64::NAN).is_err());
+}

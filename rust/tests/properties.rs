@@ -147,6 +147,7 @@ fn prop_detector_fires_iff_over_threshold() {
         batch: 1,
         iter_secs: secs,
         repeats_secs: vec![secs],
+        samples: Vec::new(),
         breakdown: Breakdown { active: 1.0, movement: 0.0, idle: 0.0, total_secs: secs },
         memory: MemoryReport { host_peak: 1, device_total: 1 },
         throughput: 1.0 / secs,

@@ -8,7 +8,7 @@
 
 use std::path::Path;
 
-use xbench::ci::{BaselineStore, Detector, Metric};
+use xbench::ci::{BaselineStore, Detector, GateMode, Metric};
 use xbench::config::{Compiler, Mode};
 use xbench::coordinator::RunResult;
 use xbench::profiler::{Breakdown, MemoryReport};
@@ -36,6 +36,7 @@ fn result(model: &str, secs: f64) -> RunResult {
         batch: 4,
         iter_secs: secs,
         repeats_secs: vec![secs],
+        samples: Vec::new(),
         breakdown: Breakdown { active: 0.6, movement: 0.3, idle: 0.1, total_secs: secs },
         memory: MemoryReport { host_peak: 4096, device_total: 8192 },
         throughput: 4.0 / secs,
@@ -218,6 +219,122 @@ fn seven_percent_gate_boundary_is_exclusive() {
     assert!(regs[0].ratio > 1.07);
     // Just under → clean.
     assert!(d.detect(&baselines, &[result("deeprec_ae", 1.0699999)]).is_empty());
+}
+
+fn result_with_samples(model: &str, secs: f64, samples: Vec<f64>) -> RunResult {
+    RunResult { samples, ..result(model, secs) }
+}
+
+/// Seed an archive with one baseline run carrying the given samples
+/// and return the derived [`BaselineStore`].
+fn baselines_with_samples(dir: &TempDir, samples: Vec<f64>) -> BaselineStore {
+    let archive = Archive::new(dir.path().join("runs.jsonl"));
+    archive
+        .append(&[RunRecord::from_result(
+            &result_with_samples("deeprec_ae", 1.0, samples),
+            &meta("run-base", 10),
+        )])
+        .unwrap();
+    BaselineStore::from_archive(&archive, "latest").unwrap()
+}
+
+#[test]
+fn stat_gate_boundary_is_exclusive_on_ci_disjointness() {
+    // Constant samples collapse the bootstrap to a degenerate CI
+    // ([x, x] for every seed), making the CI-overlap boundary as
+    // bit-exact as the point gate's ratio boundary above.
+    let dir = TempDir::new().unwrap();
+    let baselines = baselines_with_samples(&dir, vec![1.0; 8]);
+    let d = Detector::default().with_gate(GateMode::Stat);
+    // Candidate CI [1.07, 1.07] exactly touches baseline-hi × 1.07:
+    // disjointness is exclusive, so no regression.
+    let touching = result_with_samples("deeprec_ae", 1.07, vec![1.07; 8]);
+    assert!(d.detect(&baselines, &[touching]).is_empty());
+    // One step past the gate: CIs disjoint beyond the threshold.
+    let past = result_with_samples("deeprec_ae", 1.0700001, vec![1.0700001; 8]);
+    let regs = d.detect(&baselines, &[past]);
+    assert_eq!(regs.len(), 1);
+    assert_eq!(regs[0].metric, Metric::ExecutionTime);
+    // The verdict carries both intervals for the issue report.
+    assert_eq!(regs[0].baseline_ci, Some((1.0, 1.0)));
+    assert_eq!(regs[0].measured_ci, Some((1.0700001, 1.0700001)));
+    // Just under → clean.
+    let under = result_with_samples("deeprec_ae", 1.0699999, vec![1.0699999; 8]);
+    assert!(d.detect(&baselines, &[under]).is_empty());
+}
+
+#[test]
+fn noisy_aggregate_blip_point_flags_but_stat_ignores() {
+    // A high-variance run whose median aggregate blipped +20% (a one-off
+    // stall in the median repeat) while the raw iteration samples stayed
+    // inside the baseline's spread. The point gate can only see the
+    // aggregate and files a regression; the stat gate sees overlapping
+    // CIs and stays quiet. Sample values are chosen so overlap is
+    // guaranteed for every bootstrap seed: each CI lies within its
+    // sample min/max, candidate max (0.96) < baseline min × 1.07.
+    let dir = TempDir::new().unwrap();
+    let base_samples: Vec<f64> =
+        (0..16).map(|i| 0.9 + 0.2 * ((i * 7) % 11) as f64 / 10.0).collect();
+    let baselines = baselines_with_samples(&dir, base_samples);
+    let cand_samples: Vec<f64> =
+        (0..16).map(|i| 0.90 + 0.06 * ((i * 5) % 7) as f64 / 6.0).collect();
+    let candidate = result_with_samples("deeprec_ae", 1.2, cand_samples);
+
+    let point = Detector::default();
+    assert_eq!(point.detect(&baselines, &[candidate.clone()]).len(), 1);
+    let stat = Detector::default().with_gate(GateMode::Stat);
+    assert!(stat.detect(&baselines, &[candidate]).is_empty());
+
+    // Memory is never CI-gated: a device-memory regression fires under
+    // both gates regardless of timing samples.
+    let mut mem_blow = result_with_samples("deeprec_ae", 1.0, vec![1.0; 8]);
+    mem_blow.memory.device_total = 8192 * 2;
+    assert_eq!(stat.detect(&baselines, &[mem_blow]).len(), 1);
+}
+
+#[test]
+fn stat_gate_falls_back_to_point_gate_without_samples() {
+    // Pre-v3 archive lines carry no samples: the stat gate must degrade
+    // to the point gate, not wave regressions through.
+    let dir = TempDir::new().unwrap();
+    let baselines = baselines_with_samples(&dir, Vec::new());
+    let stat = Detector::default().with_gate(GateMode::Stat);
+    let regs = stat.detect(&baselines, &[result("deeprec_ae", 1.2)]);
+    assert_eq!(regs.len(), 1);
+    assert_eq!(regs[0].baseline_ci, None, "fallback verdicts carry no intervals");
+    assert!(stat.detect(&baselines, &[result("deeprec_ae", 1.05)]).is_empty());
+}
+
+// -- schema compatibility over the checked-in v1/v2 fixture -------------------
+
+#[test]
+fn v1_and_v2_fixture_lines_reencode_byte_identically() {
+    let path = "tests/data/compat_archive.jsonl";
+    let text = std::fs::read_to_string(path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 2, "fixture holds one v1 and one v2 line");
+    for &line in &lines {
+        let r = RunRecord::decode_line(line).unwrap();
+        assert_eq!(
+            r.to_json().to_json(),
+            line,
+            "decode→encode must reproduce the archived bytes exactly"
+        );
+    }
+    let v1 = RunRecord::decode_line(lines[0]).unwrap();
+    assert_eq!(v1.schema, 1);
+    assert_eq!((v1.seq, v1.jobs, v1.shard.as_deref()), (None, None, None));
+    assert!(v1.samples.is_empty(), "v1 lines predate samples");
+    let v2 = RunRecord::decode_line(lines[1]).unwrap();
+    assert_eq!(v2.schema, 2);
+    assert_eq!((v2.seq, v2.jobs, v2.shard.as_deref()), (Some(7), Some(4), Some("1/2")));
+    assert!(v2.samples.is_empty());
+    // The whole fixture also loads through the archive reader, and both
+    // records join the same query plane as v3 records.
+    let records = Archive::new(path).load().unwrap();
+    assert_eq!(records.len(), 2);
+    assert_eq!(records[0].bench_key(), "dlrm_tiny.infer.fused.b8");
+    assert_eq!(records[1].bench_key(), "dlrm_tiny.train.eager.b8");
 }
 
 #[test]

@@ -35,6 +35,7 @@ fn rec(run: &str, ts: u64, model: &str, mode: &str, secs: f64) -> RunRecord {
         idle: 0.1,
         host_bytes: 100,
         device_bytes: 200,
+        samples: Vec::new(),
     }
 }
 

@@ -31,6 +31,7 @@ fn rec(run: &str, ts: u64, model: &str) -> RunRecord {
         idle: 0.1,
         host_bytes: 100,
         device_bytes: 200,
+        samples: Vec::new(),
     }
 }
 
