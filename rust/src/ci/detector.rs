@@ -268,6 +268,74 @@ pub fn sample_interval(
     Some(crate::stat::bootstrap_median_ci(&kept, resamples, confidence, s))
 }
 
+/// A gate-equivalent three-way verdict for one bench key: the decision
+/// `cmp`, `history`, and every `report_out` renderer displays. Renderers
+/// never recompute this (see `docs/METHODOLOGY.md` §Reporting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    Regressed,
+    Improved,
+    Stable,
+}
+
+impl Verdict {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Verdict::Regressed => "regressed",
+            Verdict::Improved => "improved",
+            Verdict::Stable => "stable",
+        }
+    }
+}
+
+/// Decide a verdict exactly the way [`Detector`] does, for display.
+///
+/// When both sides carry usable samples the interval rule applies
+/// (via [`sample_interval`], streams 0/1 like the gate): regressed iff
+/// the candidate interval lies wholly above the threshold-scaled
+/// baseline interval, improved by the mirrored rule. Otherwise the
+/// point rule on the aggregates, same exclusive boundary as
+/// [`Detector::check`].
+#[allow(clippy::too_many_arguments)]
+pub fn render_verdict(
+    bench: &str,
+    threshold: f64,
+    seed: u64,
+    resamples: usize,
+    confidence: f64,
+    baseline: f64,
+    baseline_samples: &[f64],
+    measured: f64,
+    measured_samples: &[f64],
+) -> Verdict {
+    if let (Some(bci), Some(cci)) = (
+        sample_interval(bench, seed, 0, baseline_samples, resamples, confidence),
+        sample_interval(bench, seed, 1, measured_samples, resamples, confidence),
+    ) {
+        if bci.hi <= 0.0 {
+            return Verdict::Stable;
+        }
+        if cci.lo > bci.hi * (1.0 + threshold) {
+            return Verdict::Regressed;
+        }
+        if cci.hi < bci.lo / (1.0 + threshold) {
+            return Verdict::Improved;
+        }
+        return Verdict::Stable;
+    }
+    if baseline <= 0.0 {
+        return Verdict::Stable;
+    }
+    let ratio = measured / baseline;
+    if ratio > 1.0 + threshold {
+        Verdict::Regressed
+    } else if ratio < 1.0 / (1.0 + threshold) {
+        Verdict::Improved
+    } else {
+        Verdict::Stable
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

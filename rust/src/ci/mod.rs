@@ -37,8 +37,8 @@ pub use baseline::{bench_key, BaselineEntry, BaselineStore};
 pub use bisect::{bisect_first_bad, bisect_first_bad_opts, BisectOutcome};
 pub use commits::{Commit, Day};
 pub use detector::{
-    sample_interval, Detector, GateMode, Metric, Regression, DEFAULT_STAT_SEED,
-    DEFAULT_THRESHOLD, MIN_STAT_SAMPLES,
+    render_verdict, sample_interval, Detector, GateMode, Metric, Regression, Verdict,
+    DEFAULT_STAT_SEED, DEFAULT_THRESHOLD, MIN_STAT_SAMPLES,
 };
 pub use faults::FaultKind;
 pub use issue::IssueReport;

@@ -32,6 +32,7 @@ pub mod list;
 pub mod optim;
 pub mod queue;
 pub mod rank;
+pub mod report;
 pub mod result;
 pub mod run;
 pub mod runs;
@@ -78,6 +79,7 @@ pub const VERBS: &[(&str, &str)] = &[
     ("rank", "geometric-mean ranking per compiler.mode engine"),
     ("history", "one benchmark config across all recorded runs"),
     ("drift", "change-point detection over one benchmark's archive history"),
+    ("report", "render the archive as md/csv/latex/dat or an HTML trend dashboard"),
     ("synth-archive", "write a deterministic synthetic archive at scale"),
     ("serve", "run the resident benchmark daemon (job queue + warm worker pool)"),
     ("submit", "enqueue a run/sweep/ci job on the daemon"),
@@ -100,7 +102,7 @@ COMMANDS (paper exhibit in parens):
                                           [--jobs N] [--shard I/M] [--fail-fast]
                                           [--trace]   (record flight-recorder spans)
   trace run [..]    `run` with the flight recorder on (same flags as run)
-  trace export <T>  spans of trace T as Chrome trace JSON  [--out FILE]
+  trace export <T>  spans of trace T as Chrome trace JSON  [--out FILE|-]
                     (loadable in chrome://tracing / ui.perfetto.dev)
   breakdown         time decomposition    (Fig 1/2 + Table 2)  [--mode infer|train]
   compare-compiler  fused vs eager        (Fig 3/4)
@@ -129,6 +131,14 @@ ARCHIVE QUERIES (read the --archive JSONL; no artifacts needed):
                     KEY is model.mode.compiler.bN (see `runs`/`cmp` output)
   drift <KEY>       change-point detection over one benchmark's history
                                           [--penalty F]
+  report            multi-format report over the whole archive
+                                          [--format md|csv|latex|dat|html]
+                                          [--out DIR] [--html DIR]
+                                          [--baseline RUN --candidate RUN]
+                                          [--matrix-runs N] [--threshold F]
+                                          [--penalty F] [--stat-seed S]
+                                          [--from PORT|HOST:PORT]  (fetch from a
+                                          live daemon + fold in its health stats)
   synth-archive     write a synthetic archive at scale (query/perf testing)
                                           [--records N] [--runs M] [--prefix P]
                                           [--start-ts SECS] [--append]
@@ -342,11 +352,14 @@ pub fn main() -> Result<()> {
     // them — reject instead of pretending to restrict. Only the actual
     // CLI flags count: a shared xbench.toml with a selection section
     // must not break archive queries.
-    if matches!(args.subcommand.as_str(), "runs" | "cmp" | "rank" | "history" | "drift") {
+    if matches!(
+        args.subcommand.as_str(),
+        "runs" | "cmp" | "rank" | "history" | "drift" | "report"
+    ) {
         anyhow::ensure!(
             !selection_flags_given,
             "--models/--domain don't apply to archive queries; \
-             cmp/rank/history/drift operate on recorded bench keys and run selectors"
+             cmp/rank/history/drift/report operate on recorded bench keys and run selectors"
         );
     }
 
@@ -380,6 +393,7 @@ pub fn main() -> Result<()> {
             args.finish()?;
             drift::cmd(&archive, csv_dir.as_deref(), &key, penalty)
         }
+        "report" => report::cmd(&archive, &mut args),
         "synth-artifacts" => {
             let seed = args.get_u64("seed", 20230102)?;
             let force = args.has("force");

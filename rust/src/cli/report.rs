@@ -1,0 +1,164 @@
+//! `xbench report` — multi-format reports and the HTML trend dashboard.
+//!
+//! Archive-only: needs no manifest and no device. Rendering lives in
+//! [`crate::report_out`]; this module is flag parsing, output routing
+//! (stdout / `--out DIR` / `--html DIR`), and the `--from` path that
+//! fetches an identical bundle from a live daemon (`report` op) and
+//! folds the daemon's health counters into the dashboard.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::report_out::{self, ReportBundle, ReportOptions};
+use crate::store::Archive;
+use crate::util::Args;
+
+/// `--format` vocabulary, mapped to the bundle field and the `--out`
+/// filename. One row per artifact keeps the three spellings in lockstep.
+const FORMATS: &[(&str, fn(&ReportBundle) -> &str, &str)] = &[
+    ("md", |b| &b.md, "report.md"),
+    ("csv", |b| &b.csv, "report.csv"),
+    ("latex", |b| &b.latex, "report.tex"),
+    ("dat", |b| &b.dat, "report.dat"),
+    ("html", |b| &b.html, "index.html"),
+];
+
+fn format_of(name: &str) -> Result<fn(&ReportBundle) -> &str> {
+    FORMATS
+        .iter()
+        .find(|(n, _, _)| *n == name)
+        .map(|(_, f, _)| *f)
+        .ok_or_else(|| anyhow::anyhow!("unknown --format {name:?} (md|csv|latex|dat|html)"))
+}
+
+pub fn cmd(archive: &Archive, args: &mut Args) -> Result<()> {
+    let format = args.get_str("format", "md")?;
+    let out_dir = args.get_opt("out")?.map(PathBuf::from);
+    let html_dir = args.get_opt("html")?.map(PathBuf::from);
+    let from = args.get_opt("from")?;
+
+    let mut opts = ReportOptions::default();
+    let mut customized = false;
+    if let Some(v) = args.get_opt("matrix-runs")? {
+        opts.matrix_runs = v.parse().map_err(|e| anyhow::anyhow!("--matrix-runs: {e}"))?;
+        customized = true;
+    }
+    if let Some(v) = args.get_opt("threshold")? {
+        opts.threshold = v.parse().map_err(|e| anyhow::anyhow!("--threshold: {e}"))?;
+        customized = true;
+    }
+    if let Some(v) = args.get_opt("penalty")? {
+        opts.penalty = v.parse().map_err(|e| anyhow::anyhow!("--penalty: {e}"))?;
+        customized = true;
+    }
+    if let Some(v) = args.get_opt("stat-seed")? {
+        opts.seed = v.parse().map_err(|e| anyhow::anyhow!("--stat-seed: {e}"))?;
+        customized = true;
+    }
+    opts.baseline = args.get_opt("baseline")?;
+    opts.candidate = args.get_opt("candidate")?;
+    customized |= opts.baseline.is_some() || opts.candidate.is_some();
+    args.finish()?;
+
+    // Resolve the format up front so `--format htlm --out dir` fails
+    // before any rendering, even though --out writes every format.
+    let pick = format_of(&format)?;
+
+    let (bundle, daemon_stats) = match &from {
+        Some(addr) => {
+            // The daemon always renders with the defaults — that is
+            // what makes its bundle byte-identical to a local default
+            // render. Refuse option flags instead of ignoring them.
+            anyhow::ensure!(
+                !customized,
+                "--from fetches the daemon's default-options report; drop the report \
+                 option flags or render locally against the same archive"
+            );
+            let resp = crate::service::report_from(addr)
+                .with_context(|| format!("fetching report from daemon at {addr}"))?;
+            let bundle = ReportBundle::decode(resp.req("report")?)
+                .context("malformed report payload from daemon")?;
+            (bundle, resp.get("stats").cloned())
+        }
+        None => (report_out::bundle(archive, &opts)?, None),
+    };
+
+    let mut wrote = false;
+    if let Some(dir) = &html_dir {
+        // The dashboard file: health panel folded in when the bundle
+        // came from a daemon (its stats rode alongside the report).
+        let page = match &daemon_stats {
+            Some(stats) => report_out::html::fold_health(&bundle.html, stats),
+            None => bundle.html.clone(),
+        };
+        write_artifact(dir, "index.html", &page)?;
+        wrote = true;
+    }
+    if let Some(dir) = &out_dir {
+        for (_, field, filename) in FORMATS.iter().filter(|(n, _, _)| *n != "html") {
+            write_artifact(dir, filename, field(&bundle))?;
+        }
+        wrote = true;
+    }
+    if !wrote {
+        // Stdout path: always the raw bundle artifact — even for html
+        // with --from — so byte-comparing daemon vs local output works.
+        print!("{}", pick(&bundle));
+    }
+    Ok(())
+}
+
+fn write_artifact(dir: &Path, filename: &str, content: &str) -> Result<()> {
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    let path = dir.join(filename);
+    std::fs::write(&path, content).with_context(|| format!("writing {}", path.display()))?;
+    eprintln!("wrote {} ({} bytes)", path.display(), content.len());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_vocabulary_is_closed_and_filenames_distinct() {
+        for (name, _, _) in FORMATS {
+            assert!(format_of(name).is_ok());
+        }
+        assert!(format_of("htlm").is_err());
+        let mut files: Vec<&str> = FORMATS.iter().map(|(_, _, f)| *f).collect();
+        files.sort_unstable();
+        files.dedup();
+        assert_eq!(files.len(), FORMATS.len());
+    }
+
+    #[test]
+    fn from_with_custom_options_is_refused() {
+        let archive = Archive::new(PathBuf::from("/nonexistent/runs.jsonl"));
+        let mut args = Args::parse(
+            ["report", "--from", "7483", "--threshold", "0.2"]
+                .into_iter()
+                .map(String::from),
+        )
+        .unwrap();
+        let err = cmd(&archive, &mut args).unwrap_err().to_string();
+        assert!(err.contains("default-options"), "{err}");
+    }
+
+    #[test]
+    fn half_a_selector_pair_is_rejected_before_rendering() {
+        // model::build enforces the pairing; the CLI must surface it
+        // even though --baseline alone parses fine.
+        let dir = crate::util::TempDir::new().unwrap();
+        let archive = Archive::new(dir.path().join("runs.jsonl"));
+        archive
+            .append(&crate::store::synth::synth_run("r", 0, 4, 1_700_000_000))
+            .unwrap();
+        let mut args = Args::parse(
+            ["report", "--baseline", "latest"].into_iter().map(String::from),
+        )
+        .unwrap();
+        let err = cmd(&archive, &mut args).unwrap_err().to_string();
+        assert!(err.contains("together"), "{err}");
+    }
+}

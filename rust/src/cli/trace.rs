@@ -66,6 +66,13 @@ pub fn cmd_export(archive: &Archive, trace_id: &str, out: Option<&Path>) -> Resu
         sink.display()
     );
     let trace = crate::obs::chrome::trace_json(&spans);
+    // `--out -` streams to stdout for piping (`… | gzip`, `… | jq`);
+    // diagnostics stay on stderr so the pipe carries pure JSON.
+    if out == Some(Path::new("-")) {
+        println!("{}", trace.to_json());
+        eprintln!("exported {} span(s) of trace {trace_id} to stdout", spans.len());
+        return Ok(());
+    }
     let out: PathBuf =
         out.map(Path::to_path_buf).unwrap_or_else(|| PathBuf::from(format!("{trace_id}.trace.json")));
     std::fs::write(&out, trace.to_json())

@@ -60,6 +60,7 @@ pub mod optim;
 pub mod pool;
 pub mod profiler;
 pub mod report;
+pub mod report_out;
 pub mod runtime;
 pub mod service;
 pub mod stat;

@@ -113,11 +113,50 @@ pub fn busy_fraction() -> f64 {
     (global().busy_us.load(Ordering::Relaxed) as f64 / up).min(1.0)
 }
 
+/// `# HELP` text per stats key. Keys missing here (a new counter, an
+/// older/newer daemon) still render with a generic line — the help
+/// table documents, it never filters.
+const PROM_HELP: &[(&str, &str)] = &[
+    ("jobs_submitted", "Jobs ever submitted to this daemon (journal-restored included)."),
+    ("jobs_pending", "Jobs waiting in the queue."),
+    ("jobs_running", "Jobs currently executing."),
+    ("jobs_interrupted", "Jobs re-queued after a daemon crash, awaiting their one retry."),
+    ("jobs_done", "Jobs completed successfully."),
+    ("jobs_failed", "Jobs that errored (including a second interruption)."),
+    ("jobs_abandoned", "Jobs drained unrun at daemon shutdown."),
+    ("job_interruptions_total", "Total crash interruptions across all jobs."),
+    ("queue_depth", "Claimable jobs (pending + interrupted)."),
+    ("queue_wait_p50_s", "Median submit-to-claim latency in seconds (log2 sketch, <=2x error)."),
+    ("queue_wait_p99_s", "p99 submit-to-claim latency in seconds (log2 sketch, <=2x error)."),
+    ("exec_p50_s", "Median claim-to-settled latency in seconds (log2 sketch, <=2x error)."),
+    ("exec_p99_s", "p99 claim-to-settled latency in seconds (log2 sketch, <=2x error)."),
+    ("executor_busy_fraction", "Fraction of uptime the executor spent running jobs."),
+    ("uptime_s", "Seconds since the daemon started."),
+    ("pool_workers", "Persistent pool workers alive."),
+    ("pool_tasks", "Tasks the pool has executed."),
+    ("pool_cache_hits", "Pool compile-cache hits."),
+    ("pool_compiles", "Pool compilations performed."),
+    ("journal_bytes", "Size of the job journal on disk."),
+    ("journal_appends", "Journal event lines appended."),
+    ("journal_compactions", "Journal compactions performed."),
+    ("archive_appends", "Run records appended to the archive."),
+];
+
 /// Render `(key, value)` pairs in the Prometheus text exposition
-/// format (`xbench_<key> <value>`, untyped), one metric per line.
+/// format: `# HELP` / `# TYPE` (everything here is a gauge — counters
+/// included, since a restart-compacted daemon may restate them lower)
+/// then `xbench_<key> <value>`, in input order. The value lines are
+/// exactly the pre-HELP format, so line-oriented scrapers keep working.
 pub fn render_prom(pairs: &[(String, f64)]) -> String {
     let mut out = String::new();
     for (key, value) in pairs {
+        let help = PROM_HELP
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, h)| *h)
+            .unwrap_or("xbench daemon stats field.");
+        out.push_str(&format!("# HELP xbench_{key} {help}\n"));
+        out.push_str(&format!("# TYPE xbench_{key} gauge\n"));
         out.push_str(&format!("xbench_{key} {}\n", crate::util::json::Value::num(*value).to_json()));
     }
     out

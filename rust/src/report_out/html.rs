@@ -1,0 +1,398 @@
+//! The static HTML trend dashboard: one self-contained file.
+//!
+//! No scripts, no external assets, no web fonts — inline CSS and
+//! inline SVG sparklines only, so the artifact renders identically
+//! from a file:// URL, an artifact store, or an air-gapped machine,
+//! and the page bytes are a pure function of the archive bytes.
+//!
+//! A daemon-served report additionally carries live `stats` counters;
+//! those are volatile (uptime, latency sketches), so the rendered page
+//! keeps a [`HEALTH_PLACEHOLDER`] comment and the *client* folds the
+//! health panel in ([`fold_health`]) — the rendered bundle itself stays
+//! byte-identical whether it was produced locally or by the daemon.
+
+use std::fmt::Write as _;
+
+use crate::report::{fmt_pct, fmt_ratio, fmt_secs};
+use crate::store::fmt_utc;
+use crate::util::Json;
+
+use super::model::{ReportModel, TrendRow};
+use super::ReportOptions;
+
+/// Marker the service-health panel replaces when a dashboard is pulled
+/// from a live daemon (`xbench report --from`).
+pub const HEALTH_PLACEHOLDER: &str = "<!--xbench-health-->";
+
+const SPARK_W: f64 = 240.0;
+const SPARK_H: f64 = 48.0;
+const SPARK_PAD: f64 = 3.0;
+/// Downsample cap: at most this many polyline points per sparkline
+/// (the newest point is always kept), so a 50k-record archive renders
+/// a bounded-size page.
+const SPARK_POINTS: usize = 240;
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '&' => out.push_str("&amp;"),
+            '<' => out.push_str("&lt;"),
+            '>' => out.push_str("&gt;"),
+            '"' => out.push_str("&quot;"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+fn badge(v: crate::ci::Verdict) -> String {
+    format!("<span class=\"badge {0}\">{0}</span>", v.as_str())
+}
+
+const STYLE: &str = "\
+body{font-family:ui-sans-serif,system-ui,sans-serif;margin:2rem auto;max-width:72rem;\
+padding:0 1rem;color:#1a1a24;background:#fafafc}
+h1{margin-bottom:.2rem}
+h2{margin-top:2rem;border-bottom:1px solid #d8d8e0;padding-bottom:.3rem}
+.sub{color:#667}
+table{border-collapse:collapse;margin:.6rem 0;font-size:.9rem}
+th,td{border:1px solid #d8d8e0;padding:.25rem .6rem;text-align:left}
+th{background:#eef0f4}
+td.num,th.num{text-align:right;font-variant-numeric:tabular-nums}
+.badge{display:inline-block;padding:.05rem .45rem;border-radius:.6rem;font-size:.78rem}
+.badge.regressed{background:#fbe3e3;color:#a01616}
+.badge.improved{background:#e0f4e4;color:#176a2b}
+.badge.stable{background:#e8eaf0;color:#555}
+.cards{display:flex;flex-wrap:wrap;gap:.8rem}
+.card{border:1px solid #d8d8e0;border-radius:.5rem;padding:.6rem .8rem;background:#fff}
+.card .key{font-family:ui-monospace,monospace;font-size:.82rem}
+.card .meta{color:#667;font-size:.78rem;margin:.2rem 0}
+svg.spark{display:block}
+.spark polyline{fill:none;stroke:#3556b0;stroke-width:1.5}
+.spark line.cp{stroke:#c03030;stroke-width:1;stroke-dasharray:2 2}
+.spark circle{fill:#3556b0}
+";
+
+/// Render the dashboard page.
+pub fn render(model: &ReportModel, opts: &ReportOptions) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "<!DOCTYPE html>");
+    let _ = writeln!(out, "<html lang=\"en\"><head><meta charset=\"utf-8\">");
+    let _ = writeln!(out, "<title>xbench report</title>");
+    let _ = writeln!(out, "<style>{STYLE}</style></head><body>");
+    let _ = writeln!(out, "<h1>xbench report</h1>");
+    let (reg, imp): (usize, usize) = model.trends.iter().fold((0, 0), |(r, i), t| {
+        match t.verdict {
+            crate::ci::Verdict::Regressed => (r + 1, i),
+            crate::ci::Verdict::Improved => (r, i + 1),
+            crate::ci::Verdict::Stable => (r, i),
+        }
+    });
+    let _ = writeln!(
+        out,
+        "<p class=\"sub\">{} run(s) · {} benchmark config(s) · {} record(s) · \
+         latest step: {} {}</p>",
+        model.runs.len(),
+        model.trends.len(),
+        model.total_records,
+        format_args!("<span class=\"badge regressed\">{reg} regressed</span>"),
+        format_args!("<span class=\"badge improved\">{imp} improved</span>"),
+    );
+    let _ = writeln!(out, "{HEALTH_PLACEHOLDER}");
+
+    matrix_section(&mut out, model);
+    cmp_section(&mut out, model, opts);
+    runs_section(&mut out, model);
+    trends_section(&mut out, model);
+
+    let _ = writeln!(out, "</body></html>");
+    out
+}
+
+fn matrix_section(out: &mut String, model: &ReportModel) {
+    let m = &model.matrix;
+    let _ = writeln!(
+        out,
+        "<h2>Geomean time-ratio matrix</h2>\
+         <p class=\"sub\">column ÷ row over shared configs, last {} run(s)</p>",
+        m.run_ids.len()
+    );
+    let _ = writeln!(out, "<table><tr><th>÷</th>");
+    for id in &m.run_ids {
+        let _ = write!(out, "<th>{}</th>", esc(id));
+    }
+    let _ = writeln!(out, "</tr>");
+    for (i, id) in m.run_ids.iter().enumerate() {
+        let _ = write!(out, "<tr><th>{}</th>", esc(id));
+        for cell in &m.cells[i] {
+            match cell {
+                Some((ratio, shared)) => {
+                    let _ = write!(
+                        out,
+                        "<td class=\"num\" title=\"{shared} shared config(s)\">{}</td>",
+                        fmt_ratio(*ratio)
+                    );
+                }
+                None => {
+                    let _ = write!(out, "<td class=\"num\">-</td>");
+                }
+            }
+        }
+        let _ = writeln!(out, "</tr>");
+    }
+    let _ = writeln!(out, "</table>");
+}
+
+fn cmp_section(out: &mut String, model: &ReportModel, opts: &ReportOptions) {
+    let Some(cmp) = &model.cmp else { return };
+    let _ = writeln!(
+        out,
+        "<h2>Comparison: {} vs {}</h2>\
+         <p class=\"sub\">threshold {:.0}%; verdicts from the stat gate \
+         (intervals when samples exist, point rule otherwise)</p>",
+        esc(&cmp.cand_id),
+        esc(&cmp.base_id),
+        opts.threshold * 100.0
+    );
+    let _ = writeln!(
+        out,
+        "<table><tr><th>bench</th><th class=\"num\">base</th><th class=\"num\">cand</th>\
+         <th class=\"num\">ratio</th><th>verdict</th><th>95% CI base → cand</th></tr>"
+    );
+    for r in &cmp.rows {
+        let ci = match (r.base_ci, r.cand_ci) {
+            (Some((alo, ahi)), Some((blo, bhi))) => format!(
+                "[{}, {}] → [{}, {}]",
+                fmt_secs(alo),
+                fmt_secs(ahi),
+                fmt_secs(blo),
+                fmt_secs(bhi)
+            ),
+            _ => "-".into(),
+        };
+        let _ = writeln!(
+            out,
+            "<tr><td class=\"key\">{}</td><td class=\"num\">{}</td>\
+             <td class=\"num\">{}</td><td class=\"num\">{:.3}</td><td>{}</td><td>{}</td></tr>",
+            esc(&r.key),
+            fmt_secs(r.base_secs),
+            fmt_secs(r.cand_secs),
+            r.ratio,
+            badge(r.verdict),
+            ci
+        );
+    }
+    let _ = writeln!(out, "</table>");
+    if let Some(g) = cmp.geomean {
+        let _ = writeln!(
+            out,
+            "<p>geomean time ratio: <strong>{}</strong> over {} shared config(s) \
+             ({} regressed, {} improved)</p>",
+            fmt_ratio(g),
+            cmp.rows.len(),
+            cmp.regressed,
+            cmp.improved
+        );
+    }
+}
+
+fn runs_section(out: &mut String, model: &ReportModel) {
+    let _ = writeln!(out, "<h2>Runs</h2>");
+    let _ = writeln!(
+        out,
+        "<table><tr><th>run</th><th>when (UTC)</th><th>commit</th><th>host</th>\
+         <th class=\"num\">records</th><th>note</th></tr>"
+    );
+    for s in &model.runs {
+        let _ = writeln!(
+            out,
+            "<tr><td>{}</td><td>{}</td><td>{}</td><td>{}</td>\
+             <td class=\"num\">{}</td><td>{}</td></tr>",
+            esc(&s.run_id),
+            fmt_utc(s.timestamp),
+            esc(&s.git_commit),
+            esc(&s.host),
+            s.records,
+            esc(&s.note)
+        );
+    }
+    let _ = writeln!(out, "</table>");
+}
+
+fn trends_section(out: &mut String, model: &ReportModel) {
+    let _ = writeln!(
+        out,
+        "<h2>Trends</h2><p class=\"sub\">full archive history per config; \
+         dashed marks are change-points; badge = newest vs previous run</p>"
+    );
+    let _ = writeln!(out, "<div class=\"cards\">");
+    for t in &model.trends {
+        let last = &t.points[t.points.len() - 1];
+        let ci = match t.last_ci {
+            Some((lo, hi)) => format!(" · 95% CI [{}, {}]", fmt_secs(lo), fmt_secs(hi)),
+            None => String::new(),
+        };
+        let _ = writeln!(
+            out,
+            "<div class=\"card\"><div class=\"key\">{}</div>\
+             <div class=\"meta\">{} run(s) · last {}{} · {} change-point(s)</div>\
+             {}{}</div>",
+            esc(&t.key),
+            t.points.len(),
+            fmt_secs(last.secs),
+            ci,
+            t.change_points.len(),
+            badge(t.verdict),
+            sparkline(t)
+        );
+    }
+    let _ = writeln!(out, "</div>");
+}
+
+/// Inline SVG sparkline over one config's history, change-points as
+/// dashed vertical lines, newest point dotted. Downsampled with a
+/// deterministic stride to at most [`SPARK_POINTS`] points.
+fn sparkline(t: &TrendRow) -> String {
+    let n = t.points.len();
+    let (min, max) = t.points.iter().fold((f64::INFINITY, f64::NEG_INFINITY), |(lo, hi), p| {
+        (lo.min(p.secs), hi.max(p.secs))
+    });
+    let span = max - min;
+    let x = |i: usize| -> f64 {
+        if n <= 1 {
+            SPARK_W / 2.0
+        } else {
+            SPARK_PAD + i as f64 / (n - 1) as f64 * (SPARK_W - 2.0 * SPARK_PAD)
+        }
+    };
+    let y = |v: f64| -> f64 {
+        if span <= 0.0 {
+            SPARK_H / 2.0
+        } else {
+            SPARK_H - SPARK_PAD - (v - min) / span * (SPARK_H - 2.0 * SPARK_PAD)
+        }
+    };
+    let stride = n.div_ceil(SPARK_POINTS).max(1);
+    let mut pts: Vec<String> = Vec::new();
+    let mut i = 0;
+    while i < n {
+        pts.push(format!("{:.1},{:.1}", x(i), y(t.points[i].secs)));
+        i += stride;
+    }
+    if (n - 1) % stride != 0 {
+        pts.push(format!("{:.1},{:.1}", x(n - 1), y(t.points[n - 1].secs)));
+    }
+    let mut svg = format!(
+        "<svg class=\"spark\" width=\"{SPARK_W}\" height=\"{SPARK_H}\" \
+         viewBox=\"0 0 {SPARK_W} {SPARK_H}\" role=\"img\" aria-label=\"trend of {}\">",
+        esc(&t.key)
+    );
+    for (idx, _) in &t.change_points {
+        let _ = write!(
+            svg,
+            "<line class=\"cp\" x1=\"{0:.1}\" y1=\"{SPARK_PAD}\" x2=\"{0:.1}\" \
+             y2=\"{1:.1}\"/>",
+            x(*idx),
+            SPARK_H - SPARK_PAD
+        );
+    }
+    let _ = write!(svg, "<polyline points=\"{}\"/>", pts.join(" "));
+    let _ = write!(
+        svg,
+        "<circle cx=\"{:.1}\" cy=\"{:.1}\" r=\"2\"/>",
+        x(n - 1),
+        y(t.points[n - 1].secs)
+    );
+    svg.push_str("</svg>");
+    svg
+}
+
+/// Render the daemon `stats` payload as a service-health panel.
+pub fn health_panel(stats: &Json) -> String {
+    let num = |key: &str| stats.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let secs = |key: &str| fmt_secs(num(key));
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "<h2>Service health</h2><p class=\"sub\">live counters from the daemon's \
+         <code>stats</code> op at fetch time (not part of the deterministic report)</p>"
+    );
+    let _ = writeln!(out, "<table><tr><th>metric</th><th class=\"num\">value</th></tr>");
+    let rows: Vec<(&str, String)> = vec![
+        ("jobs submitted", format!("{}", num("jobs_submitted"))),
+        ("jobs done / failed", format!("{} / {}", num("jobs_done"), num("jobs_failed"))),
+        ("queue depth", format!("{}", num("queue_depth"))),
+        ("queue wait p50 / p99", format!("{} / {}", secs("queue_wait_p50_s"), secs("queue_wait_p99_s"))),
+        ("exec p50 / p99", format!("{} / {}", secs("exec_p50_s"), secs("exec_p99_s"))),
+        ("executor busy fraction", fmt_pct(num("executor_busy_fraction"))),
+        ("uptime", secs("uptime_s")),
+        ("pool workers / tasks", format!("{} / {}", num("pool_workers"), num("pool_tasks"))),
+        ("archive appends", format!("{}", num("archive_appends"))),
+    ];
+    for (name, value) in rows {
+        let _ = writeln!(out, "<tr><td>{name}</td><td class=\"num\">{value}</td></tr>");
+    }
+    let _ = writeln!(out, "</table>");
+    out
+}
+
+/// Fold a live health panel into a rendered page (replaces the
+/// placeholder; a page without one is returned unchanged).
+pub fn fold_health(page: &str, stats: &Json) -> String {
+    page.replacen(HEALTH_PLACEHOLDER, &health_panel(stats), 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ci::Verdict;
+    use crate::report_out::model::TrendPoint;
+
+    fn trend(n: usize) -> TrendRow {
+        TrendRow {
+            key: "gpt.infer.fused.b4".into(),
+            points: (0..n)
+                .map(|i| TrendPoint {
+                    run_id: format!("run-{i:05}"),
+                    timestamp: 1_700_000_000 + i as u64,
+                    secs: 0.001 + (i % 7) as f64 * 1e-5,
+                })
+                .collect(),
+            last_ci: Some((0.0009, 0.0011)),
+            change_points: vec![(2, 1.3)],
+            verdict: Verdict::Stable,
+        }
+    }
+
+    #[test]
+    fn sparkline_is_bounded_and_keeps_the_newest_point() {
+        let svg = sparkline(&trend(5000));
+        let polyline = svg.split("points=\"").nth(1).unwrap();
+        let n_pts = polyline.split('"').next().unwrap().split(' ').count();
+        assert!(n_pts <= SPARK_POINTS + 1, "{n_pts} points rendered");
+        assert!(svg.contains("<circle"), "newest-point marker missing");
+        assert!(svg.contains("class=\"cp\""), "change-point marker missing");
+        // Single-point series still renders without NaNs.
+        let one = sparkline(&trend(1));
+        assert!(!one.contains("NaN"), "{one}");
+    }
+
+    #[test]
+    fn health_panel_folds_into_the_placeholder() {
+        let page = format!("<body>{HEALTH_PLACEHOLDER}</body>");
+        let stats = crate::util::json::parse(
+            r#"{"jobs_submitted":3,"jobs_done":2,"jobs_failed":1,"queue_depth":0,
+                "queue_wait_p50_s":0.002,"queue_wait_p99_s":0.004,"exec_p50_s":0.5,
+                "exec_p99_s":1.0,"executor_busy_fraction":0.25,"uptime_s":12.0,
+                "pool_workers":4,"pool_tasks":9,"archive_appends":6}"#,
+        )
+        .unwrap();
+        let folded = fold_health(&page, &stats);
+        assert!(!folded.contains(HEALTH_PLACEHOLDER));
+        assert!(folded.contains("Service health"));
+        assert!(folded.contains("25.0%"));
+        // No placeholder → unchanged.
+        assert_eq!(fold_health("<body></body>", &stats), "<body></body>");
+    }
+}

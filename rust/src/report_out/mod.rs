@@ -1,0 +1,143 @@
+//! `xbench report` — multi-format renderers over the indexed archive.
+//!
+//! One [`model::ReportModel`] is built from a single indexed
+//! [`crate::store::Archive::scan`] and rendered into five artifacts
+//! (bencher's `table`/`latex`/`dat` subcommands are the exemplar; the
+//! geomean comparison matrix follows rebar's report):
+//!
+//! - **markdown** — human-readable summary for PRs and chat;
+//! - **CSV** — sectioned flat tables for spreadsheets;
+//! - **LaTeX** — paper-ready `tabular` blocks;
+//! - **gnuplot `.dat`** — one index per bench key for plotting;
+//! - **HTML** — a self-contained static trend dashboard (inline SVG
+//!   sparklines, change-point markers, stat-gate badges; no external
+//!   assets, no scripts).
+//!
+//! Statistics discipline (`docs/METHODOLOGY.md` §Reporting): every
+//! interval comes from [`crate::ci::sample_interval`], every verdict
+//! from [`crate::ci::render_verdict`], and every change-point from
+//! [`crate::stat::change_points`]. Renderers format those numbers;
+//! they never recompute them — what a report shows is exactly what the
+//! gate decided on.
+//!
+//! Determinism: rendering reads no clock and no RNG beyond the seeded
+//! bootstrap streams, so the same archive bytes and options produce
+//! byte-identical artifacts — with or without the sidecar index, and
+//! whether rendered locally or by a daemon (`report` protocol op).
+
+use anyhow::Result;
+
+use crate::store::Archive;
+use crate::util::Json;
+
+pub mod html;
+pub mod model;
+pub mod text;
+
+pub use model::ReportModel;
+
+/// Knobs for one report. [`Default`] mirrors the stat gate's defaults;
+/// the daemon's `report` op always renders with the defaults so a
+/// daemon-fetched bundle is byte-identical to a local default render.
+#[derive(Debug, Clone)]
+pub struct ReportOptions {
+    /// How many of the newest runs enter the geomean comparison matrix.
+    pub matrix_runs: usize,
+    /// Change-point detection penalty ([`crate::stat::change_points`]).
+    pub penalty: f64,
+    /// Gate threshold (exclusive, like [`crate::ci::Detector`]).
+    pub threshold: f64,
+    /// Bootstrap base seed ([`crate::ci::sample_interval`]).
+    pub seed: u64,
+    pub resamples: usize,
+    pub confidence: f64,
+    /// Comparison baseline run selector; default: second-newest run.
+    pub baseline: Option<String>,
+    /// Comparison candidate run selector; default: newest run.
+    pub candidate: Option<String>,
+}
+
+impl Default for ReportOptions {
+    fn default() -> Self {
+        ReportOptions {
+            matrix_runs: 8,
+            penalty: crate::stat::DEFAULT_PENALTY,
+            threshold: crate::ci::DEFAULT_THRESHOLD,
+            seed: crate::ci::DEFAULT_STAT_SEED,
+            resamples: crate::stat::DEFAULT_RESAMPLES,
+            confidence: crate::stat::DEFAULT_CONFIDENCE,
+            baseline: None,
+            candidate: None,
+        }
+    }
+}
+
+/// All five rendered artifacts of one report. This is also the wire
+/// shape of the daemon's `report` op (PROTO_VERSION 4).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReportBundle {
+    pub md: String,
+    pub csv: String,
+    pub latex: String,
+    pub dat: String,
+    pub html: String,
+}
+
+impl ReportBundle {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("md", Json::str(&self.md)),
+            ("csv", Json::str(&self.csv)),
+            ("latex", Json::str(&self.latex)),
+            ("dat", Json::str(&self.dat)),
+            ("html", Json::str(&self.html)),
+        ])
+    }
+
+    pub fn decode(json: &Json) -> Result<ReportBundle> {
+        Ok(ReportBundle {
+            md: json.req_str("md")?.to_string(),
+            csv: json.req_str("csv")?.to_string(),
+            latex: json.req_str("latex")?.to_string(),
+            dat: json.req_str("dat")?.to_string(),
+            html: json.req_str("html")?.to_string(),
+        })
+    }
+}
+
+/// Build the model from one indexed scan and render every format.
+pub fn bundle(archive: &Archive, opts: &ReportOptions) -> Result<ReportBundle> {
+    let model = model::build(archive, opts)?;
+    Ok(render(&model, opts))
+}
+
+/// Render an already-built model into all five formats.
+pub fn render(model: &ReportModel, opts: &ReportOptions) -> ReportBundle {
+    ReportBundle {
+        md: text::render_md(model, opts),
+        csv: text::render_csv(model, opts),
+        latex: text::render_latex(model, opts),
+        dat: text::render_dat(model),
+        html: html::render(model, opts),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bundle_roundtrips_through_json() {
+        let b = ReportBundle {
+            md: "# report\nwith \"quotes\"".into(),
+            csv: "a,b\n1,2\n".into(),
+            latex: "\\begin{tabular}".into(),
+            dat: "# key\n0 1 0.5\n".into(),
+            html: "<!DOCTYPE html><p>ok</p>".into(),
+        };
+        let back =
+            ReportBundle::decode(&crate::util::json::parse(&b.to_json().to_json()).unwrap())
+                .unwrap();
+        assert_eq!(back, b);
+    }
+}

@@ -1,0 +1,434 @@
+//! The aggregated data model behind every report renderer.
+//!
+//! Built from **one** [`Archive::scan`] (the indexed read path — a
+//! 50k-record archive costs one streamed pass), then aggregated into
+//! the four views humans consume: run inventory, geomean comparison
+//! matrix, latest-pair comparison, engine ranking, and per-config
+//! trends. Every statistic is delegated to `ci`/`stat` (see the module
+//! docs of [`super`]); this file only *joins* records.
+
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+use crate::ci::{render_verdict, sample_interval, Verdict};
+use crate::metrics;
+use crate::stat::change_points;
+use crate::store::{latest_per_key, run_summaries, Archive, Filter, RunRecord, RunSummary};
+
+use super::ReportOptions;
+
+/// Geomean time-ratio comparison matrix over the newest runs
+/// (rebar-style): `cells[i][j]` is the geomean of
+/// `secs(run_j) / secs(run_i)` over the configs both runs measured
+/// (positive times only), with the shared-config count; `None` when
+/// the runs share nothing. The diagonal is exactly 1.
+#[derive(Debug)]
+pub struct Matrix {
+    pub run_ids: Vec<String>,
+    pub cells: Vec<Vec<Option<(f64, usize)>>>,
+}
+
+/// One shared bench key of the baseline/candidate comparison.
+#[derive(Debug)]
+pub struct CmpRow {
+    pub key: String,
+    pub base_secs: f64,
+    pub cand_secs: f64,
+    /// `cand / base` on the aggregates (floored like `cmp`).
+    pub ratio: f64,
+    /// The stat gate's decision ([`render_verdict`]): interval rule
+    /// when both sides carry samples, point rule otherwise.
+    pub verdict: Verdict,
+    pub base_ci: Option<(f64, f64)>,
+    pub cand_ci: Option<(f64, f64)>,
+}
+
+/// The baseline→candidate comparison (defaults: the two newest runs).
+#[derive(Debug)]
+pub struct CmpView {
+    pub base_id: String,
+    pub cand_id: String,
+    /// Worst regression first (ratio descending, key breaking ties).
+    pub rows: Vec<CmpRow>,
+    /// Geomean of the row ratios; `None` without shared configs.
+    pub geomean: Option<f64>,
+    pub regressed: usize,
+    pub improved: usize,
+}
+
+/// One engine's ranking line (engine = `compiler.mode`, mirroring
+/// `xbench rank`): geomean slowdown vs the per-bench best, ascending.
+#[derive(Debug)]
+pub struct RankRow {
+    pub engine: String,
+    pub geomean_slowdown: f64,
+    pub wins: usize,
+    pub benches: usize,
+}
+
+/// One recorded measurement in a config's history.
+#[derive(Debug)]
+pub struct TrendPoint {
+    pub run_id: String,
+    pub timestamp: u64,
+    pub secs: f64,
+}
+
+/// One bench key's full archive history.
+#[derive(Debug)]
+pub struct TrendRow {
+    pub key: String,
+    /// Archive (chronological) order.
+    pub points: Vec<TrendPoint>,
+    /// Bootstrap CI of the newest record's samples (gate candidate
+    /// stream), when it carries ≥ 4 samples.
+    pub last_ci: Option<(f64, f64)>,
+    /// `(first index of the new regime, after/before level ratio)`
+    /// from [`change_points`] over the full series.
+    pub change_points: Vec<(usize, f64)>,
+    /// Newest vs previous record, decided by the stat gate's rule.
+    pub verdict: Verdict,
+}
+
+/// Everything the renderers consume.
+#[derive(Debug)]
+pub struct ReportModel {
+    /// First-appearance (chronological) order.
+    pub runs: Vec<RunSummary>,
+    pub total_records: usize,
+    pub matrix: Matrix,
+    /// `None` when the archive holds fewer than two runs and no
+    /// explicit baseline/candidate pair was given.
+    pub cmp: Option<CmpView>,
+    pub rank: Vec<RankRow>,
+    /// Sorted by bench key.
+    pub trends: Vec<TrendRow>,
+}
+
+/// Build the model from one indexed archive scan.
+pub fn build(archive: &Archive, opts: &ReportOptions) -> Result<ReportModel> {
+    anyhow::ensure!(
+        archive.exists(),
+        "no archive at {} (record a run with `xbench run --record`, or \
+         synthesize one with `xbench synth-archive`)",
+        archive.path().display()
+    );
+    let records = archive.scan(&Filter::default())?;
+    anyhow::ensure!(!records.is_empty(), "archive {} is empty", archive.path().display());
+    let runs = run_summaries(&records);
+    let matrix = build_matrix(&records, &runs, opts.matrix_runs);
+    let cmp = build_cmp(archive, &records, &runs, opts)?;
+    let rank = build_rank(&records);
+    let trends = build_trends(&records, opts);
+    Ok(ReportModel { total_records: records.len(), runs, matrix, cmp, rank, trends })
+}
+
+/// The newest record of every bench key one run measured.
+fn run_latest<'a>(records: &'a [RunRecord], run_id: &str) -> BTreeMap<String, &'a RunRecord> {
+    latest_per_key(records.iter().filter(|r| r.run_id == run_id))
+}
+
+fn build_matrix(records: &[RunRecord], runs: &[RunSummary], matrix_runs: usize) -> Matrix {
+    let n = matrix_runs.max(1).min(runs.len());
+    let run_ids: Vec<String> =
+        runs[runs.len() - n..].iter().map(|s| s.run_id.clone()).collect();
+    let maps: Vec<BTreeMap<String, &RunRecord>> =
+        run_ids.iter().map(|id| run_latest(records, id)).collect();
+    let cells = maps
+        .iter()
+        .map(|row| {
+            maps.iter()
+                .map(|col| {
+                    let ratios: Vec<f64> = row
+                        .iter()
+                        .filter_map(|(key, ra)| {
+                            let rb = col.get(key)?;
+                            (ra.iter_secs > 0.0 && rb.iter_secs > 0.0)
+                                .then(|| rb.iter_secs / ra.iter_secs)
+                        })
+                        .collect();
+                    (!ratios.is_empty()).then(|| (metrics::geomean(&ratios), ratios.len()))
+                })
+                .collect()
+        })
+        .collect();
+    Matrix { run_ids, cells }
+}
+
+fn build_cmp(
+    archive: &Archive,
+    records: &[RunRecord],
+    runs: &[RunSummary],
+    opts: &ReportOptions,
+) -> Result<Option<CmpView>> {
+    let (base_id, cand_id) = match (&opts.baseline, &opts.candidate) {
+        (Some(b), Some(c)) => {
+            (archive.resolve_run(records, b)?, archive.resolve_run(records, c)?)
+        }
+        (None, None) => {
+            if runs.len() < 2 {
+                return Ok(None);
+            }
+            (runs[runs.len() - 2].run_id.clone(), runs[runs.len() - 1].run_id.clone())
+        }
+        _ => anyhow::bail!("--baseline and --candidate must be given together"),
+    };
+    anyhow::ensure!(base_id != cand_id, "baseline and candidate both resolve to {base_id}");
+    let base = run_latest(records, &base_id);
+    let cand = run_latest(records, &cand_id);
+    let mut rows: Vec<CmpRow> = Vec::new();
+    let (mut regressed, mut improved) = (0usize, 0usize);
+    for (key, ra) in &base {
+        let Some(rb) = cand.get(key) else { continue };
+        let ratio = (rb.iter_secs / ra.iter_secs.max(1e-12)).max(1e-12);
+        let verdict = render_verdict(
+            key,
+            opts.threshold,
+            opts.seed,
+            opts.resamples,
+            opts.confidence,
+            ra.iter_secs,
+            &ra.samples,
+            rb.iter_secs,
+            &rb.samples,
+        );
+        match verdict {
+            Verdict::Regressed => regressed += 1,
+            Verdict::Improved => improved += 1,
+            Verdict::Stable => {}
+        }
+        let interval = |stream: usize, samples: &[f64]| {
+            sample_interval(key, opts.seed, stream, samples, opts.resamples, opts.confidence)
+                .map(|c| (c.lo, c.hi))
+        };
+        rows.push(CmpRow {
+            key: key.clone(),
+            base_secs: ra.iter_secs,
+            cand_secs: rb.iter_secs,
+            ratio,
+            verdict,
+            base_ci: interval(0, &ra.samples),
+            cand_ci: interval(1, &rb.samples),
+        });
+    }
+    rows.sort_by(|x, y| {
+        y.ratio
+            .partial_cmp(&x.ratio)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| x.key.cmp(&y.key))
+    });
+    let ratios: Vec<f64> = rows.iter().map(|r| r.ratio).collect();
+    let geomean = (!ratios.is_empty()).then(|| metrics::geomean(&ratios));
+    Ok(Some(CmpView { base_id, cand_id, rows, geomean, regressed, improved }))
+}
+
+fn build_rank(records: &[RunRecord]) -> Vec<RankRow> {
+    // bench = model.bN, engine = compiler.mode — the `rank` verb's
+    // grid over the newest record per config across all runs.
+    let latest = latest_per_key(records.iter());
+    let mut grid: BTreeMap<String, BTreeMap<String, f64>> = BTreeMap::new();
+    for r in latest.values() {
+        grid.entry(format!("{}.b{}", r.model, r.batch))
+            .or_default()
+            .insert(format!("{}.{}", r.compiler, r.mode), r.iter_secs);
+    }
+    let mut slowdowns: BTreeMap<String, (Vec<f64>, usize)> = BTreeMap::new();
+    for engines in grid.values() {
+        let best = engines
+            .values()
+            .cloned()
+            .fold(f64::INFINITY, f64::min)
+            .max(1e-12);
+        for (engine, secs) in engines {
+            let slow = (secs / best).max(1.0);
+            let e = slowdowns.entry(engine.clone()).or_default();
+            e.0.push(slow);
+            if slow <= 1.0 + 1e-9 {
+                e.1 += 1;
+            }
+        }
+    }
+    let mut rows: Vec<RankRow> = slowdowns
+        .into_iter()
+        .map(|(engine, (slows, wins))| RankRow {
+            engine,
+            geomean_slowdown: metrics::geomean(&slows),
+            wins,
+            benches: slows.len(),
+        })
+        .collect();
+    rows.sort_by(|x, y| {
+        x.geomean_slowdown
+            .partial_cmp(&y.geomean_slowdown)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| x.engine.cmp(&y.engine))
+    });
+    rows
+}
+
+fn build_trends(records: &[RunRecord], opts: &ReportOptions) -> Vec<TrendRow> {
+    let mut by_key: BTreeMap<String, Vec<&RunRecord>> = BTreeMap::new();
+    for r in records {
+        by_key.entry(r.bench_key()).or_default().push(r);
+    }
+    by_key
+        .into_iter()
+        .map(|(key, series)| {
+            let secs: Vec<f64> = series.iter().map(|r| r.iter_secs).collect();
+            let cps = change_points(&secs, opts.penalty)
+                .into_iter()
+                .map(|cp| (cp.index, cp.ratio()))
+                .collect();
+            let last = series[series.len() - 1];
+            let last_ci = sample_interval(
+                &key,
+                opts.seed,
+                1,
+                &last.samples,
+                opts.resamples,
+                opts.confidence,
+            )
+            .map(|c| (c.lo, c.hi));
+            let verdict = if series.len() >= 2 {
+                let prev = series[series.len() - 2];
+                render_verdict(
+                    &key,
+                    opts.threshold,
+                    opts.seed,
+                    opts.resamples,
+                    opts.confidence,
+                    prev.iter_secs,
+                    &prev.samples,
+                    last.iter_secs,
+                    &last.samples,
+                )
+            } else {
+                Verdict::Stable
+            };
+            TrendRow {
+                key,
+                points: series
+                    .iter()
+                    .map(|r| TrendPoint {
+                        run_id: r.run_id.clone(),
+                        timestamp: r.timestamp,
+                        secs: r.iter_secs,
+                    })
+                    .collect(),
+                last_ci,
+                change_points: cps,
+                verdict,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+
+    fn rec(run: &str, ts: u64, model: &str, secs: f64) -> RunRecord {
+        RunRecord {
+            schema: crate::store::SCHEMA_VERSION,
+            seq: None,
+            jobs: None,
+            shard: None,
+            run_id: run.into(),
+            timestamp: ts,
+            git_commit: "abc".into(),
+            host: "h".into(),
+            config_hash: "cfg".into(),
+            note: "".into(),
+            model: model.into(),
+            domain: "nlp".into(),
+            mode: "infer".into(),
+            compiler: "fused".into(),
+            batch: 4,
+            iter_secs: secs,
+            repeats_secs: vec![secs],
+            throughput: 4.0 / secs,
+            active: 0.6,
+            movement: 0.3,
+            idle: 0.1,
+            host_bytes: 100,
+            device_bytes: 200,
+            samples: (0..6).map(|i| secs * (1.0 + i as f64 * 1e-3)).collect(),
+        }
+    }
+
+    /// A tiny deterministic archive: two runs, two configs, the second
+    /// run regresses one config hard enough for the gate.
+    fn seeded_archive(dir: &std::path::Path) -> Archive {
+        let archive = Archive::new(dir.join("runs.jsonl"));
+        let mut records = Vec::new();
+        for (run, ts, gpt, dlrm) in
+            [("run-a", 100u64, 0.010f64, 0.020f64), ("run-b", 200, 0.015, 0.019)]
+        {
+            for (model, secs) in [("gpt", gpt), ("dlrm", dlrm)] {
+                records.push(rec(run, ts, model, secs));
+            }
+        }
+        archive.append(&records).unwrap();
+        archive
+    }
+
+    #[test]
+    fn model_joins_runs_matrix_cmp_and_trends() {
+        let dir = TempDir::new().unwrap();
+        let archive = seeded_archive(dir.path());
+        let m = build(&archive, &ReportOptions::default()).unwrap();
+        assert_eq!(m.runs.len(), 2);
+        assert_eq!(m.total_records, 4);
+
+        // Matrix: diagonal exactly 1, off-diagonal = geomean over the
+        // 2 shared configs.
+        assert_eq!(m.matrix.run_ids, vec!["run-a", "run-b"]);
+        let (diag, shared) = m.matrix.cells[0][0].unwrap();
+        assert!((diag - 1.0).abs() < 1e-12);
+        assert_eq!(shared, 2);
+        let (ab, _) = m.matrix.cells[0][1].unwrap();
+        let expect = ((0.015 / 0.010) * (0.019 / 0.020)).sqrt();
+        assert!((ab - expect).abs() < 1e-9, "{ab} vs {expect}");
+
+        // Cmp defaults to the two newest runs, worst ratio first.
+        let cmp = m.cmp.as_ref().unwrap();
+        assert_eq!((cmp.base_id.as_str(), cmp.cand_id.as_str()), ("run-a", "run-b"));
+        assert_eq!(cmp.rows[0].key, "gpt.infer.fused.b4");
+        assert_eq!(cmp.rows[0].verdict, Verdict::Regressed);
+        assert_eq!(cmp.regressed, 1);
+        assert!(cmp.geomean.unwrap() > 1.0);
+
+        // Trends: one row per config, sorted, with a CI on the newest
+        // record (6 samples ≥ MIN_STAT_SAMPLES) and a gate verdict.
+        assert_eq!(m.trends.len(), 2);
+        assert_eq!(m.trends[0].key, "dlrm.infer.fused.b4");
+        assert!(m.trends[1].last_ci.is_some());
+        assert_eq!(m.trends[1].verdict, Verdict::Regressed);
+        // 2-point series: below the change-point minimum, none reported.
+        assert!(m.trends[0].change_points.is_empty());
+
+        // Rank: one engine here, winning every bench.
+        assert_eq!(m.rank.len(), 1);
+        assert_eq!(m.rank[0].engine, "fused.infer");
+        assert_eq!(m.rank[0].wins, 2);
+    }
+
+    #[test]
+    fn explicit_selector_pair_is_resolved_and_half_pairs_rejected() {
+        let dir = TempDir::new().unwrap();
+        let archive = seeded_archive(dir.path());
+        let opts = ReportOptions {
+            baseline: Some("latest".into()),
+            candidate: Some("latest~1".into()),
+            ..Default::default()
+        };
+        let m = build(&archive, &opts).unwrap();
+        let cmp = m.cmp.unwrap();
+        assert_eq!((cmp.base_id.as_str(), cmp.cand_id.as_str()), ("run-b", "run-a"));
+
+        let half = ReportOptions { baseline: Some("latest".into()), ..Default::default() };
+        let err = build(&archive, &half).unwrap_err().to_string();
+        assert!(err.contains("together"), "{err}");
+    }
+}

@@ -1,0 +1,485 @@
+//! The text renderers: markdown, sectioned CSV, LaTeX, gnuplot `.dat`.
+//!
+//! All four are pure functions of the [`ReportModel`] — no clock, no
+//! RNG, no environment — so rendering is byte-deterministic. Raw
+//! numeric columns (CSV/`.dat`) use Rust's shortest-roundtrip `f64`
+//! display, so the emitted value re-parses to exactly the number the
+//! gate decided on; human columns reuse the `report` formatters
+//! (`fmt_secs`/`fmt_ratio`) the terminal tables already use.
+
+use std::fmt::Write as _;
+
+use crate::report::{fmt_ratio, fmt_secs};
+use crate::store::fmt_utc;
+
+use super::model::{CmpView, Matrix, ReportModel, TrendRow};
+use super::ReportOptions;
+
+fn pct(ratio: f64) -> String {
+    format!("{:+.1}%", (ratio - 1.0) * 100.0)
+}
+
+fn ci_text(ci: Option<(f64, f64)>) -> String {
+    match ci {
+        Some((lo, hi)) => format!("[{}, {}]", fmt_secs(lo), fmt_secs(hi)),
+        None => "-".into(),
+    }
+}
+
+fn changepoint_text(cps: &[(usize, f64)]) -> String {
+    if cps.is_empty() {
+        return "-".into();
+    }
+    let marks: Vec<String> =
+        cps.iter().map(|(idx, ratio)| format!("@{idx} ×{ratio:.2}")).collect();
+    format!("{} ({})", cps.len(), marks.join(", "))
+}
+
+fn trend_delta(t: &TrendRow) -> String {
+    let first = t.points[0].secs;
+    if first <= 0.0 {
+        return "-".into();
+    }
+    pct(t.points[t.points.len() - 1].secs / first)
+}
+
+// ---------------------------------------------------------------- markdown
+
+pub fn render_md(model: &ReportModel, opts: &ReportOptions) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "# xbench report");
+    let _ = writeln!(out);
+    let _ = writeln!(
+        out,
+        "{} run(s) · {} benchmark config(s) · {} record(s)",
+        model.runs.len(),
+        model.trends.len(),
+        model.total_records
+    );
+    let _ = writeln!(out);
+
+    let _ = writeln!(out, "## Runs");
+    let _ = writeln!(out);
+    let _ = writeln!(out, "| run | when (UTC) | commit | host | records | note |");
+    let _ = writeln!(out, "|---|---|---|---|---:|---|");
+    for s in &model.runs {
+        let _ = writeln!(
+            out,
+            "| {} | {} | {} | {} | {} | {} |",
+            md_cell(&s.run_id),
+            fmt_utc(s.timestamp),
+            md_cell(&s.git_commit),
+            md_cell(&s.host),
+            s.records,
+            md_cell(&s.note)
+        );
+    }
+    let _ = writeln!(out);
+
+    let _ = writeln!(
+        out,
+        "## Geomean time-ratio matrix (column ÷ row, last {} run(s))",
+        model.matrix.run_ids.len()
+    );
+    let _ = writeln!(out);
+    md_matrix(&mut out, &model.matrix);
+    let _ = writeln!(out);
+
+    if let Some(cmp) = &model.cmp {
+        let _ = writeln!(
+            out,
+            "## Comparison: {} vs {} (threshold {:.0}%)",
+            md_cell(&cmp.cand_id),
+            md_cell(&cmp.base_id),
+            opts.threshold * 100.0
+        );
+        let _ = writeln!(out);
+        let _ = writeln!(
+            out,
+            "| bench | base | cand | ratio | Δ | verdict | 95% CI base | 95% CI cand |"
+        );
+        let _ = writeln!(out, "|---|---:|---:|---:|---:|---|---|---|");
+        for r in &cmp.rows {
+            let _ = writeln!(
+                out,
+                "| {} | {} | {} | {:.3} | {} | {} | {} | {} |",
+                md_cell(&r.key),
+                fmt_secs(r.base_secs),
+                fmt_secs(r.cand_secs),
+                r.ratio,
+                pct(r.ratio),
+                r.verdict.as_str(),
+                ci_text(r.base_ci),
+                ci_text(r.cand_ci)
+            );
+        }
+        let _ = writeln!(out);
+        if let Some(g) = cmp.geomean {
+            let _ = writeln!(
+                out,
+                "geomean time ratio {}/{}: {} over {} shared config(s) \
+                 ({} regressed, {} improved)",
+                md_cell(&cmp.cand_id),
+                md_cell(&cmp.base_id),
+                fmt_ratio(g),
+                cmp.rows.len(),
+                cmp.regressed,
+                cmp.improved
+            );
+        } else {
+            let _ = writeln!(out, "no shared benchmark configs between the compared runs");
+        }
+        let _ = writeln!(out);
+    }
+
+    let _ = writeln!(out, "## Engine ranking (geomean slowdown vs best, lower is better)");
+    let _ = writeln!(out);
+    let _ = writeln!(out, "| engine | geomean slowdown | wins | benches |");
+    let _ = writeln!(out, "|---|---:|---:|---:|");
+    for r in &model.rank {
+        let _ = writeln!(
+            out,
+            "| {} | {:.3} | {} | {} |",
+            md_cell(&r.engine),
+            r.geomean_slowdown,
+            r.wins,
+            r.benches
+        );
+    }
+    let _ = writeln!(out);
+
+    let _ = writeln!(out, "## Trends (full archive history per config)");
+    let _ = writeln!(out);
+    let _ = writeln!(
+        out,
+        "| bench | runs | first | last | Δ | 95% CI (last) | change-points | verdict |"
+    );
+    let _ = writeln!(out, "|---|---:|---:|---:|---:|---|---|---|");
+    for t in &model.trends {
+        let _ = writeln!(
+            out,
+            "| {} | {} | {} | {} | {} | {} | {} | {} |",
+            md_cell(&t.key),
+            t.points.len(),
+            fmt_secs(t.points[0].secs),
+            fmt_secs(t.points[t.points.len() - 1].secs),
+            trend_delta(t),
+            ci_text(t.last_ci),
+            changepoint_text(&t.change_points),
+            t.verdict.as_str()
+        );
+    }
+    out
+}
+
+fn md_cell(s: &str) -> String {
+    s.replace('|', "\\|").replace('\n', " ")
+}
+
+fn md_matrix(out: &mut String, m: &Matrix) {
+    let _ = write!(out, "| ÷ |");
+    for id in &m.run_ids {
+        let _ = write!(out, " {} |", md_cell(id));
+    }
+    let _ = writeln!(out);
+    let _ = write!(out, "|---|");
+    for _ in &m.run_ids {
+        let _ = write!(out, "---:|");
+    }
+    let _ = writeln!(out);
+    for (i, id) in m.run_ids.iter().enumerate() {
+        let _ = write!(out, "| {} |", md_cell(id));
+        for cell in &m.cells[i] {
+            match cell {
+                Some((ratio, _)) => {
+                    let _ = write!(out, " {} |", fmt_ratio(*ratio));
+                }
+                None => {
+                    let _ = write!(out, " - |");
+                }
+            }
+        }
+        let _ = writeln!(out);
+    }
+}
+
+// --------------------------------------------------------------------- csv
+
+fn csv_cell(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+fn csv_ci(ci: Option<(f64, f64)>) -> String {
+    match ci {
+        Some((lo, hi)) => format!("{lo},{hi}"),
+        None => ",".into(),
+    }
+}
+
+pub fn render_csv(model: &ReportModel, opts: &ReportOptions) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "# xbench report");
+
+    let _ = writeln!(out, "# section: runs");
+    let _ = writeln!(out, "run,when_utc,commit,host,records,note");
+    for s in &model.runs {
+        let _ = writeln!(
+            out,
+            "{},{},{},{},{},{}",
+            csv_cell(&s.run_id),
+            fmt_utc(s.timestamp),
+            csv_cell(&s.git_commit),
+            csv_cell(&s.host),
+            s.records,
+            csv_cell(&s.note)
+        );
+    }
+
+    let _ = writeln!(out, "# section: matrix (geomean time ratio, column / row)");
+    let _ = write!(out, "run");
+    for id in &model.matrix.run_ids {
+        let _ = write!(out, ",{}", csv_cell(id));
+    }
+    let _ = writeln!(out);
+    for (i, id) in model.matrix.run_ids.iter().enumerate() {
+        let _ = write!(out, "{}", csv_cell(id));
+        for cell in &model.matrix.cells[i] {
+            match cell {
+                Some((ratio, _)) => {
+                    let _ = write!(out, ",{ratio}");
+                }
+                None => out.push(','),
+            }
+        }
+        let _ = writeln!(out);
+    }
+
+    if let Some(cmp) = &model.cmp {
+        let _ = writeln!(
+            out,
+            "# section: cmp baseline={} candidate={} threshold={}",
+            cmp.base_id, cmp.cand_id, opts.threshold
+        );
+        let _ = writeln!(
+            out,
+            "bench,base_secs,cand_secs,ratio,verdict,base_ci_lo,base_ci_hi,cand_ci_lo,cand_ci_hi"
+        );
+        for r in &cmp.rows {
+            let _ = writeln!(
+                out,
+                "{},{},{},{},{},{},{}",
+                csv_cell(&r.key),
+                r.base_secs,
+                r.cand_secs,
+                r.ratio,
+                r.verdict.as_str(),
+                csv_ci(r.base_ci),
+                csv_ci(r.cand_ci)
+            );
+        }
+    }
+
+    let _ = writeln!(out, "# section: rank");
+    let _ = writeln!(out, "engine,geomean_slowdown,wins,benches");
+    for r in &model.rank {
+        let _ = writeln!(
+            out,
+            "{},{},{},{}",
+            csv_cell(&r.engine),
+            r.geomean_slowdown,
+            r.wins,
+            r.benches
+        );
+    }
+
+    let _ = writeln!(out, "# section: trends");
+    let _ = writeln!(
+        out,
+        "bench,runs,first_secs,last_secs,ci_lo,ci_hi,change_points,verdict"
+    );
+    for t in &model.trends {
+        let _ = writeln!(
+            out,
+            "{},{},{},{},{},{},{}",
+            csv_cell(&t.key),
+            t.points.len(),
+            t.points[0].secs,
+            t.points[t.points.len() - 1].secs,
+            csv_ci(t.last_ci),
+            t.change_points.len(),
+            t.verdict.as_str()
+        );
+    }
+    out
+}
+
+// ------------------------------------------------------------------- latex
+
+fn tex(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\textbackslash{}"),
+            '&' | '%' | '$' | '#' | '_' | '{' | '}' => {
+                out.push('\\');
+                out.push(c);
+            }
+            '~' => out.push_str("\\textasciitilde{}"),
+            '^' => out.push_str("\\textasciicircum{}"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+pub fn render_latex(model: &ReportModel, opts: &ReportOptions) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "% xbench report (generated; do not edit)");
+    let _ = writeln!(out, "\\section*{{xbench report}}");
+    let _ = writeln!(
+        out,
+        "% {} run(s), {} config(s), {} record(s)",
+        model.runs.len(),
+        model.trends.len(),
+        model.total_records
+    );
+
+    let _ = writeln!(out, "\\subsection*{{Geomean time-ratio matrix}}");
+    let cols = "l".to_string() + &"r".repeat(model.matrix.run_ids.len());
+    let _ = writeln!(out, "\\begin{{tabular}}{{{cols}}}");
+    let header: Vec<String> =
+        model.matrix.run_ids.iter().map(|id| tex(id)).collect();
+    let _ = writeln!(out, "$\\div$ & {} \\\\ \\hline", header.join(" & "));
+    for (i, id) in model.matrix.run_ids.iter().enumerate() {
+        let cells: Vec<String> = model.matrix.cells[i]
+            .iter()
+            .map(|c| match c {
+                Some((ratio, _)) => format!("{ratio:.3}"),
+                None => "--".into(),
+            })
+            .collect();
+        let _ = writeln!(out, "{} & {} \\\\", tex(id), cells.join(" & "));
+    }
+    let _ = writeln!(out, "\\end{{tabular}}");
+
+    if let Some(cmp) = &model.cmp {
+        let _ = writeln!(
+            out,
+            "\\subsection*{{Comparison: {} vs {} (threshold {:.0}\\%)}}",
+            tex(&cmp.cand_id),
+            tex(&cmp.base_id),
+            opts.threshold * 100.0
+        );
+        let _ = writeln!(out, "\\begin{{tabular}}{{lrrrl}}");
+        let _ = writeln!(out, "bench & base & cand & ratio & verdict \\\\ \\hline");
+        for r in &cmp.rows {
+            let _ = writeln!(
+                out,
+                "{} & {} & {} & {:.3} & {} \\\\",
+                tex(&r.key),
+                tex(&fmt_secs(r.base_secs)),
+                tex(&fmt_secs(r.cand_secs)),
+                r.ratio,
+                r.verdict.as_str()
+            );
+        }
+        let _ = writeln!(out, "\\end{{tabular}}");
+        if let Some(g) = cmp.geomean {
+            let _ = writeln!(
+                out,
+                "\\par geomean time ratio: {} over {} shared config(s).",
+                tex(&fmt_ratio(g)),
+                cmp.rows.len()
+            );
+        }
+    }
+
+    let _ = writeln!(out, "\\subsection*{{Engine ranking}}");
+    let _ = writeln!(out, "\\begin{{tabular}}{{lrrr}}");
+    let _ = writeln!(out, "engine & geomean slowdown & wins & benches \\\\ \\hline");
+    for r in &model.rank {
+        let _ = writeln!(
+            out,
+            "{} & {:.3} & {} & {} \\\\",
+            tex(&r.engine),
+            r.geomean_slowdown,
+            r.wins,
+            r.benches
+        );
+    }
+    let _ = writeln!(out, "\\end{{tabular}}");
+
+    let _ = writeln!(out, "\\subsection*{{Trends}}");
+    let _ = writeln!(out, "\\begin{{tabular}}{{lrrrll}}");
+    let _ = writeln!(
+        out,
+        "bench & runs & first & last & change-points & verdict \\\\ \\hline"
+    );
+    for t in &model.trends {
+        let _ = writeln!(
+            out,
+            "{} & {} & {} & {} & {} & {} \\\\",
+            tex(&t.key),
+            t.points.len(),
+            tex(&fmt_secs(t.points[0].secs)),
+            tex(&fmt_secs(t.points[t.points.len() - 1].secs)),
+            tex(&changepoint_text(&t.change_points)),
+            t.verdict.as_str()
+        );
+    }
+    let _ = writeln!(out, "\\end{{tabular}}");
+    out
+}
+
+// --------------------------------------------------------------------- dat
+
+/// Gnuplot data: one index (block) per bench key, two blank lines
+/// between blocks (`plot 'report.dat' index N using 1:3`). Change
+/// points are annotated as comments inside their block.
+pub fn render_dat(model: &ReportModel) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "# xbench report — one gnuplot index per bench key");
+    let _ = writeln!(out, "# columns: point_index unix_ts iter_secs");
+    for (n, t) in model.trends.iter().enumerate() {
+        if n > 0 {
+            out.push('\n');
+            out.push('\n');
+        }
+        let _ = writeln!(out, "# bench {}", t.key);
+        for (idx, ratio) in &t.change_points {
+            let _ = writeln!(out, "# changepoint idx={idx} ratio={ratio:.4}");
+        }
+        for (i, p) in t.points.iter().enumerate() {
+            let _ = writeln!(out, "{} {} {}", i, p.timestamp, p.secs);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_cells_escape_and_latex_escapes_specials() {
+        assert_eq!(csv_cell("plain"), "plain");
+        assert_eq!(csv_cell("a,b"), "\"a,b\"");
+        assert_eq!(csv_cell("say \"hi\""), "\"say \"\"hi\"\"\"");
+        assert_eq!(tex("model_001.b4"), "model\\_001.b4");
+        assert_eq!(tex("50%"), "50\\%");
+        assert_eq!(tex("a&b"), "a\\&b");
+    }
+
+    #[test]
+    fn changepoint_cell_renders_positions_and_ratios() {
+        assert_eq!(changepoint_text(&[]), "-");
+        assert_eq!(
+            changepoint_text(&[(12, 1.314), (40, 0.95)]),
+            "2 (@12 ×1.31, @40 ×0.95)"
+        );
+    }
+}

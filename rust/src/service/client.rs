@@ -7,7 +7,7 @@
 
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
-use std::net::{SocketAddr, TcpStream};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
 use crate::util::Json;
@@ -16,7 +16,25 @@ use super::protocol::{JobSpec, Request};
 
 /// Send one request, return the decoded `ok` response body.
 pub fn request(port: u16, req: &Request) -> Result<Json> {
-    let addr = SocketAddr::from(([127, 0, 0, 1], port));
+    request_at(SocketAddr::from(([127, 0, 0, 1], port)), req)
+}
+
+/// [`request`] against an explicit address: a bare port means the
+/// local daemon, anything else resolves as `HOST:PORT` (for a daemon
+/// on another box, e.g. `xbench report --from ci-runner:7483`).
+pub fn request_addr(addr: &str, req: &Request) -> Result<Json> {
+    if let Ok(port) = addr.parse::<u16>() {
+        return request(port, req);
+    }
+    let resolved = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving daemon address {addr:?} (want PORT or HOST:PORT)"))?
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("daemon address {addr:?} resolved to nothing"))?;
+    request_at(resolved, req)
+}
+
+fn request_at(addr: SocketAddr, req: &Request) -> Result<Json> {
     let mut stream = TcpStream::connect_timeout(&addr, Duration::from_secs(3))
         .with_context(|| {
             format!("connecting to the xbench daemon at {addr} (is `xbench serve` running?)")
@@ -90,6 +108,13 @@ pub fn fetch_result(
 /// Snapshot of the daemon's health counters (the `stats` op payload).
 pub fn stats(port: u16) -> Result<Json> {
     Ok(request(port, &Request::Stats)?.req("stats")?.clone())
+}
+
+/// Fetch a rendered report from a daemon (`report` op, proto v4).
+/// Returns the whole ok-response: `report` (the five artifacts) and
+/// `stats` (health counters for the client-folded dashboard panel).
+pub fn report_from(addr: &str) -> Result<Json> {
+    request_addr(addr, &Request::Report)
 }
 
 /// Ask the daemon to stop (finishes the running job, abandons pending).

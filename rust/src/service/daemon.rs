@@ -179,6 +179,11 @@ struct ServiceState {
     /// Next job number — seeded past the journal's highest at startup,
     /// so ids survive restarts. Mutated only under the `jobs` lock.
     next_id: AtomicUsize,
+    /// Archive served by the `report` op. Seeded at bind with the
+    /// conventional `<artifacts>/runs.jsonl`; [`Daemon::run`] overwrites
+    /// it with the actual archive's path (`--archive`) before the
+    /// archive itself moves into the executor.
+    archive_path: Mutex<PathBuf>,
 }
 
 impl ServiceState {
@@ -299,6 +304,7 @@ impl Daemon {
                 jobs: Mutex::new(Vec::new()),
                 wake: Condvar::new(),
                 shutdown: AtomicBool::new(false),
+                archive_path: Mutex::new(artifacts.join("runs.jsonl")),
                 artifacts,
                 port: bound,
                 journal,
@@ -378,6 +384,9 @@ impl Daemon {
         }
         recover(&self.state)
             .with_context(|| format!("replaying journal {}", self.state.journal.path().display()))?;
+        // The archive is about to move into the executor; remember its
+        // path so the `report` op can open a read-only view of it.
+        *self.state.archive_path.lock().unwrap() = archive.path().to_path_buf();
 
         let state = self.state.clone();
         let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
@@ -851,6 +860,22 @@ fn handle_request(req: Request, state: &Arc<ServiceState>) -> Json {
             }
         }
         Request::Stats => ok_response(vec![("stats", stats_snapshot(state))]),
+        Request::Report => {
+            // Read-only view of the executor's archive: appends are
+            // single-line atomic and scans tolerate a concurrent
+            // append, so no coordination with the executor is needed.
+            // Always the *default* options — the payload must be
+            // byte-identical to a local default `xbench report`.
+            let archive = Archive::new(state.archive_path.lock().unwrap().clone());
+            match crate::report_out::bundle(&archive, &crate::report_out::ReportOptions::default())
+            {
+                Ok(bundle) => ok_response(vec![
+                    ("report", bundle.to_json()),
+                    ("stats", stats_snapshot(state)),
+                ]),
+                Err(e) => err_response(format!("rendering report: {e:#}")),
+            }
+        }
         Request::Shutdown => {
             // Flag flipped under the jobs lock — see the Submit arm.
             // (The accept-loop nudge happens in handle_connection,
@@ -932,6 +957,37 @@ mod tests {
         let daemon = Daemon::bind(0, dir.to_path_buf(), journal).unwrap();
         let state = daemon.state.clone();
         (daemon, state)
+    }
+
+    #[test]
+    fn report_op_renders_the_archive_with_default_options() {
+        let dir = TempDir::new().unwrap();
+        let (_daemon, state) = bound_state(dir.path());
+
+        // No archive yet: a loud error, not an empty report.
+        let resp = handle_request(Request::Report, &state);
+        assert_eq!(resp.get("ok").and_then(|b| b.as_bool()), Some(false));
+        assert!(resp.req_str("error").unwrap().contains("rendering report"));
+
+        // Seed the archive the daemon would serve and ask again: the
+        // payload must match a local default render byte for byte.
+        let archive = Archive::new(dir.path().join("runs.jsonl"));
+        let mut records = crate::store::synth::synth_run_samples("svc", 0, 4, 1_700_000_000, 6);
+        records.extend(crate::store::synth::synth_run_samples("svc", 1, 4, 1_700_000_000, 6));
+        archive.append(&records).unwrap();
+        let resp = handle_request(Request::Report, &state);
+        assert_eq!(resp.get("ok").and_then(|b| b.as_bool()), Some(true));
+        let got =
+            crate::report_out::ReportBundle::decode(resp.req("report").unwrap()).unwrap();
+        let local = crate::report_out::bundle(
+            &archive,
+            &crate::report_out::ReportOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(got, local, "daemon report drifted from the local default render");
+        // The health counters ride alongside, never inside, the bundle.
+        assert!(resp.req("stats").unwrap().get("uptime_s").is_some());
+        assert!(got.html.contains(crate::report_out::html::HEALTH_PLACEHOLDER));
     }
 
     #[test]

@@ -29,7 +29,10 @@ pub mod daemon;
 pub mod exec;
 pub mod protocol;
 
-pub use client::{fetch_result, ping, queue_status, request, shutdown, stats, submit};
+pub use client::{
+    fetch_result, ping, queue_status, report_from, request, request_addr, shutdown, stats,
+    submit,
+};
 pub use daemon::{Daemon, JobProgress};
 pub use protocol::{JobSpec, JobVerb, Request, DEFAULT_PORT};
 

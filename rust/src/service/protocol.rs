@@ -28,7 +28,13 @@ pub const DEFAULT_PORT: u16 = 7483;
 ///   (job counters, queue depth, latency quantiles, pool/journal/
 ///   archive counters) under a single `stats` response key. Old
 ///   daemons answer it with `unknown op`, which clients surface as-is.
-pub const PROTO_VERSION: usize = 3;
+/// - **v4**: new `report` op — render the daemon's archive with the
+///   default report options and return all five artifacts
+///   (md/csv/latex/dat/html) under a `report` key plus a `stats`
+///   snapshot for the client-side service-health panel. The op takes
+///   no options, so the `report` payload is byte-identical to a local
+///   `xbench report` over the same archive bytes.
+pub const PROTO_VERSION: usize = 4;
 
 /// Every `status` a job status row can carry, in lifecycle order.
 ///
@@ -257,6 +263,9 @@ pub enum Request {
     Result { job: String },
     /// Snapshot of daemon health counters and latency quantiles.
     Stats,
+    /// Render the daemon's archive with the default report options;
+    /// response: `report` (all five artifacts) + `stats` (health).
+    Report,
     /// Stop the daemon: finish the running job, abandon pending ones.
     Shutdown,
 }
@@ -273,6 +282,7 @@ impl Request {
                 Json::obj(vec![("op", Json::str("result")), ("job", Json::str(job))])
             }
             Request::Stats => Json::obj(vec![("op", Json::str("stats"))]),
+            Request::Report => Json::obj(vec![("op", Json::str("report"))]),
             Request::Shutdown => Json::obj(vec![("op", Json::str("shutdown"))]),
         }
     }
@@ -284,8 +294,11 @@ impl Request {
             "queue" => Ok(Request::Queue),
             "result" => Ok(Request::Result { job: v.req_str("job")?.to_string() }),
             "stats" => Ok(Request::Stats),
+            "report" => Ok(Request::Report),
             "shutdown" => Ok(Request::Shutdown),
-            other => bail!("unknown op {other:?} (ping|submit|queue|result|stats|shutdown)"),
+            other => {
+                bail!("unknown op {other:?} (ping|submit|queue|result|stats|report|shutdown)")
+            }
         }
     }
 
@@ -364,6 +377,7 @@ mod tests {
             Request::Queue,
             Request::Result { job: "job-0001".into() },
             Request::Stats,
+            Request::Report,
             Request::Shutdown,
         ] {
             let line = req.to_json().to_json();

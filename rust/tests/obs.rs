@@ -228,6 +228,121 @@ fn span_record_roundtrips_through_jsonl() {
     assert!(SpanKind::parse("no_such_kind").is_err());
 }
 
+/// Golden-format pin for `xbench stats --prom`: metric names, HELP and
+/// TYPE lines, and value rendering are a scrape contract — a renamed
+/// metric breaks dashboards silently, so any change must show up here
+/// as a deliberate fixture edit.
+#[test]
+fn stats_prom_rendering_is_pinned() {
+    // Keys in BTreeMap (sorted) order — exactly how `xbench stats`
+    // iterates the daemon's stats object before rendering.
+    let pairs: Vec<(String, f64)> = [
+        ("archive_appends", 6.0),
+        ("exec_p50_s", 0.524288),
+        ("exec_p99_s", 2.097152),
+        ("executor_busy_fraction", 0.25),
+        ("job_interruptions_total", 1.0),
+        ("jobs_abandoned", 0.0),
+        ("jobs_done", 2.0),
+        ("jobs_failed", 1.0),
+        ("jobs_interrupted", 0.0),
+        ("jobs_pending", 0.0),
+        ("jobs_running", 0.0),
+        ("jobs_submitted", 3.0),
+        ("journal_appends", 9.0),
+        ("journal_bytes", 2048.0),
+        ("journal_compactions", 1.0),
+        ("pool_cache_hits", 5.0),
+        ("pool_compiles", 4.0),
+        ("pool_tasks", 9.0),
+        ("pool_workers", 4.0),
+        ("queue_depth", 0.0),
+        ("queue_wait_p50_s", 0.000128),
+        ("queue_wait_p99_s", 0.262144),
+        ("uptime_s", 12.5),
+    ]
+    .into_iter()
+    .map(|(k, v)| (k.to_string(), v))
+    .collect();
+    let rendered = xbench::obs::metrics::render_prom(&pairs);
+    let golden = include_str!("data/stats_prom.golden");
+    assert_eq!(
+        rendered, golden,
+        "`stats --prom` output drifted from tests/data/stats_prom.golden — \
+         if the change is intentional, update the fixture"
+    );
+    // Shape invariants scrapers rely on, independent of the fixture.
+    for line in rendered.lines() {
+        assert!(
+            line.starts_with("# HELP xbench_")
+                || line.starts_with("# TYPE xbench_")
+                || line.starts_with("xbench_"),
+            "unexpected prom line {line:?}"
+        );
+    }
+    // An unknown key still renders (generic HELP) — forward compatible.
+    let extra = xbench::obs::metrics::render_prom(&[("brand_new".into(), 7.0)]);
+    assert!(extra.contains("# HELP xbench_brand_new "));
+    assert!(extra.contains("\nxbench_brand_new 7\n"));
+}
+
+/// `trace export --out -` streams the Chrome trace to stdout (for
+/// piping) instead of creating a file literally named `-`.
+#[test]
+fn trace_export_out_dash_writes_to_stdout() {
+    let dir = TempDir::new().unwrap();
+    // Hand-written sink: the recorder is process-global and owned by
+    // flight_recorder_end_to_end, so this test fabricates the JSONL
+    // directly from SpanRec's own wire encoding.
+    let archive_path = dir.path().join("runs.jsonl");
+    let sink = span::sink_beside(&archive_path);
+    let mk = |kind: SpanKind, label: &str, start_us: u64, dur_us: u64| SpanRec {
+        trace: "t-stdout".into(),
+        kind,
+        label: label.into(),
+        tid: 1,
+        thread: "main".into(),
+        start_us,
+        dur_us,
+    };
+    let lines: String = [
+        mk(SpanKind::Compile, "gpt_tiny.infer.fused.b4", 0, 500),
+        mk(SpanKind::Measure, "gpt_tiny.infer.fused.b4", 500, 900),
+    ]
+    .iter()
+    .map(|s| s.to_json().to_json() + "\n")
+    .collect();
+    std::fs::write(&sink, lines).unwrap();
+
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_xbench"))
+        .current_dir(dir.path())
+        .args([
+            "trace",
+            "export",
+            "t-stdout",
+            "--archive",
+            archive_path.to_str().unwrap(),
+            "--out",
+            "-",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8(out.stdout).unwrap();
+    let trace = xbench::util::json::parse(stdout.trim()).unwrap();
+    assert_eq!(trace.req_str("displayTimeUnit").unwrap(), "ms");
+    let events = trace.req_array("traceEvents").unwrap().to_vec();
+    assert_balanced(&events);
+    // 2 spans → 2 B + 2 E + 1 thread_name metadata event.
+    assert_eq!(events.len(), 5);
+    assert!(
+        !dir.path().join("-").exists(),
+        "--out - must stream to stdout, not create a file named \"-\""
+    );
+    // Diagnostics go to stderr, keeping the stdout pipe pure JSON.
+    assert!(String::from_utf8_lossy(&out.stderr).contains("stdout"));
+}
+
 #[test]
 fn chrome_export_nests_same_timestamp_spans_outer_first() {
     let mk = |label: &str, tid: u64, start_us: u64, dur_us: u64| SpanRec {

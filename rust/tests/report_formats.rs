@@ -1,0 +1,105 @@
+//! Integration: `report_out` rendering over a sampled synthetic
+//! archive — byte-determinism across reruns, self-containment of the
+//! HTML dashboard, and the content contracts the CI job greps for
+//! (geomean matrix, CI columns, stat-gate verdicts).
+
+use xbench::report_out::{self, ReportBundle, ReportOptions};
+use xbench::store::{synth, Archive};
+use xbench::util::TempDir;
+
+/// A small multi-run archive with per-iteration samples, so the
+/// bootstrap-CI and verdict paths all engage.
+fn sampled_archive(dir: &std::path::Path) -> Archive {
+    let archive = Archive::new(dir.join("runs.jsonl"));
+    let mut records = Vec::new();
+    for run in 0..12 {
+        records.extend(synth::synth_run_samples("fmt", run, 8, 1_700_000_000, 6));
+    }
+    archive.append(&records).unwrap();
+    archive
+}
+
+fn render(archive: &Archive) -> ReportBundle {
+    report_out::bundle(archive, &ReportOptions::default()).unwrap()
+}
+
+#[test]
+fn every_format_is_byte_identical_across_reruns() {
+    let dir = TempDir::new().unwrap();
+    let archive = sampled_archive(dir.path());
+    let first = render(&archive);
+    // Second render on the same handle (warm index), third on a fresh
+    // handle (cold index rebuild) — all three must agree byte for byte.
+    let second = render(&archive);
+    let third = render(&Archive::new(dir.path().join("runs.jsonl")));
+    assert_eq!(first, second, "rerun changed report bytes");
+    assert_eq!(first, third, "fresh archive handle changed report bytes");
+}
+
+#[test]
+fn html_dashboard_is_self_contained() {
+    let dir = TempDir::new().unwrap();
+    let html = render(&sampled_archive(dir.path())).html;
+    assert!(html.starts_with("<!DOCTYPE html>"));
+    // No network fetches, no scripts: the file must render from a
+    // file:// URL on an air-gapped machine.
+    for banned in ["http://", "https://", "<script", "<link", "@import", "src="] {
+        assert!(!html.contains(banned), "dashboard is not self-contained: found {banned:?}");
+    }
+    // Inline SVG sparklines and stat-gate badges are present.
+    assert!(html.contains("<svg"), "no inline sparklines");
+    assert!(html.contains("class=\"badge"), "no verdict badges");
+    assert!(html.contains("Geomean time-ratio matrix"));
+    assert!(
+        html.contains(report_out::html::HEALTH_PLACEHOLDER),
+        "local render must keep the daemon-health placeholder"
+    );
+}
+
+#[test]
+fn text_formats_carry_the_stat_gate_numbers() {
+    let dir = TempDir::new().unwrap();
+    let b = render(&sampled_archive(dir.path()));
+
+    // Markdown: the rebar-style geomean matrix and CI columns.
+    assert!(b.md.starts_with("# xbench report"));
+    assert!(b.md.contains("## Geomean time-ratio matrix"));
+    assert!(b.md.contains("95% CI"));
+    assert!(b.md.contains("geomean time ratio"));
+
+    // CSV: sectioned, with machine-readable CI bounds per cmp row.
+    assert!(b.csv.contains("# section: matrix"));
+    assert!(b.csv.contains("base_ci_lo,base_ci_hi,cand_ci_lo,cand_ci_hi"));
+    assert!(b.csv.contains("# section: trends"));
+
+    // LaTeX: tabulars only, and the escaper left no raw underscores
+    // outside math (bench keys are full of them).
+    assert!(b.latex.contains("\\begin{tabular}"));
+    assert!(b.latex.contains("\\_"), "bench-key underscores must be escaped");
+
+    // gnuplot dat: one indexed block per bench key with changepoint
+    // comments where detected.
+    assert!(b.dat.contains("# bench "));
+    assert!(b.dat.contains("# columns: point_index unix_ts iter_secs"));
+
+    // The synth archive drifts ~0.1% per run — well inside the 7%
+    // gate — so every rendered verdict is "stable", in both formats.
+    assert!(b.md.contains("stable"), "no verdicts rendered in markdown");
+    assert!(b.csv.contains(",stable,"), "no verdict column in csv");
+    assert!(!b.csv.contains(",regressed,"), "synth drift misread as a regression");
+}
+
+#[test]
+fn out_dir_artifacts_match_the_bundle_fields() {
+    // The CLI writes bundle fields verbatim; pin that mapping here so
+    // `xbench report --out` can be byte-compared against `--format`
+    // stdout in CI.
+    let dir = TempDir::new().unwrap();
+    let archive = sampled_archive(dir.path());
+    let b = render(&archive);
+    let roundtripped = ReportBundle::decode(
+        &xbench::util::json::parse(&b.to_json().to_json()).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(roundtripped, b, "wire roundtrip altered report bytes");
+}

@@ -1,0 +1,34 @@
+//! `XBENCH_NO_INDEX=1` must not change a single rendered report byte:
+//! the renderers sit on `Archive::scan`, whose indexed and full-scan
+//! paths are output-identical by contract. One test, own binary — env
+//! mutation is process-global and must never leak into the other
+//! report/index tests.
+
+use xbench::report_out::{self, ReportOptions};
+use xbench::store::{index, synth, Archive};
+use xbench::util::TempDir;
+
+#[test]
+fn reports_are_byte_identical_without_the_sidecar_index() {
+    let dir = TempDir::new().unwrap();
+    let archive = Archive::new(dir.path().join("runs.jsonl"));
+    let mut records = Vec::new();
+    for run in 0..10 {
+        records.extend(synth::synth_run_samples("nix", run, 6, 1_700_000_000, 6));
+    }
+    archive.append(&records).unwrap();
+
+    // Indexed render first (builds the sidecar as a side effect).
+    let indexed = report_out::bundle(&archive, &ReportOptions::default()).unwrap();
+    assert!(index::sidecar_path(archive.path()).exists());
+
+    // Full-scan render: same bytes, sidecar untouched.
+    std::env::set_var("XBENCH_NO_INDEX", "1");
+    let scanned = report_out::bundle(&archive, &ReportOptions::default()).unwrap();
+    std::env::set_var("XBENCH_NO_INDEX", "0");
+    assert_eq!(indexed.md, scanned.md, "markdown drifted under XBENCH_NO_INDEX");
+    assert_eq!(indexed.csv, scanned.csv, "csv drifted under XBENCH_NO_INDEX");
+    assert_eq!(indexed.latex, scanned.latex, "latex drifted under XBENCH_NO_INDEX");
+    assert_eq!(indexed.dat, scanned.dat, "dat drifted under XBENCH_NO_INDEX");
+    assert_eq!(indexed.html, scanned.html, "html drifted under XBENCH_NO_INDEX");
+}
