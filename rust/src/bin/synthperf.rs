@@ -30,11 +30,13 @@ fn main() {
         bound: 0,
     };
     let iters = 2000u64;
+    // xbench-lint: allow(clock-discipline, ad-hoc synth-input micro-bench binary, not the measurement protocol)
     let t0 = Instant::now();
     for i in 0..iters {
         std::hint::black_box(old_synth(&spec, i));
     }
     let old = t0.elapsed();
+    // xbench-lint: allow(clock-discipline, ad-hoc synth-input micro-bench binary, not the measurement protocol)
     let t1 = Instant::now();
     for i in 0..iters {
         std::hint::black_box(inputs::synth_literal(&spec, i).unwrap());

@@ -125,6 +125,7 @@ impl BaselineStore {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
         }
+        // xbench-lint: allow(single-recording-path, CI baseline store snapshot, not a results file — the archive stays the only results path)
         std::fs::write(path, self.to_json().to_json_pretty())
             .with_context(|| format!("writing baseline {}", path.display()))
     }

@@ -1,0 +1,71 @@
+//! `xbench lint` — run the measurement-integrity lint over the crate's
+//! own source tree (see [`crate::lint`] and `docs/LINT.md`).
+//!
+//! Exit status is the contract: 0 when clean, 1 when any finding
+//! survives, so CI can gate on it directly. Output is deterministic
+//! byte-for-byte in both formats.
+
+use crate::util::cli::Args;
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+pub fn cmd(args: &mut Args) -> Result<()> {
+    if args.has("list-rules") {
+        args.finish()?;
+        for (id, desc) in crate::lint::rules::RULES {
+            println!("{id}: {desc}");
+        }
+        return Ok(());
+    }
+
+    let src = match args.get_opt("src")? {
+        Some(p) => PathBuf::from(p),
+        None => autodetect_src()?,
+    };
+    let docs = match args.get_opt("docs")? {
+        Some(p) => PathBuf::from(p),
+        None => autodetect_docs(&src),
+    };
+    let rules = args.get_many("rule");
+    let format = args.get_str("format", "text")?;
+    args.finish()?;
+
+    let opts = crate::lint::Options { src, docs, rules };
+    let findings = crate::lint::run(&opts)?;
+
+    match format.as_str() {
+        "text" => print!("{}", crate::lint::render_text(&findings)),
+        "json" => print!("{}", crate::lint::render_json(&findings)),
+        other => bail!("unknown --format {other:?} (text|json)"),
+    }
+    if findings.is_empty() {
+        eprintln!("lint: clean ({} source tree)", opts.src.display());
+        Ok(())
+    } else {
+        eprintln!("lint: {} finding(s)", findings.len());
+        std::process::exit(1);
+    }
+}
+
+/// Find the crate source tree from common working directories: the
+/// repo root (`rust/src`) or the crate dir (`src`).
+fn autodetect_src() -> Result<PathBuf> {
+    for cand in ["rust/src", "src"] {
+        let p = PathBuf::from(cand);
+        if p.join("lib.rs").is_file() {
+            return Ok(p);
+        }
+    }
+    bail!("cannot find the crate source tree (looked for rust/src and src); pass --src DIR")
+}
+
+/// `docs/` sits next to `rust/` in this repo: derive it from the src
+/// root so both autodetected layouts work.
+fn autodetect_docs(src: &PathBuf) -> PathBuf {
+    for cand in [src.join("../../docs"), src.join("../docs"), PathBuf::from("docs")] {
+        if cand.join("CLI.md").is_file() {
+            return cand;
+        }
+    }
+    PathBuf::from("docs")
+}

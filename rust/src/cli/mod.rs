@@ -28,6 +28,7 @@ pub mod coverage;
 pub mod devices;
 pub mod drift;
 pub mod history;
+pub mod lint;
 pub mod list;
 pub mod optim;
 pub mod queue;
@@ -87,6 +88,7 @@ pub const VERBS: &[(&str, &str)] = &[
     ("result", "fetch a completed daemon job's results"),
     ("stats", "daemon health counters and latency quantiles"),
     ("trace", "flight recorder: record a traced run / export a Chrome trace"),
+    ("lint", "measurement-integrity lint over the crate's own source"),
 ];
 
 const USAGE: &str = "\
@@ -165,6 +167,12 @@ BENCHMARK SERVICE (resident daemon; see docs/SERVICE.md):
   result <JOB>      fetch job results   [--wait] [--timeout SECS] [--port N]
   stats             daemon health counters & latency quantiles
                                         [--prom] [--port N]
+
+SOURCE HYGIENE (no artifacts, no archive; see docs/LINT.md):
+  lint              measurement-integrity lint over the crate source
+                                        [--src DIR] [--docs DIR] [--rule R]..
+                                        [--format text|json] [--list-rules]
+                    (exit 1 on any finding; METHODOLOGY invariants as rules)
 
 EXECUTION FLAGS (run, sweep, ci):
   --jobs N          fan the worklist out over N persistent pool workers
@@ -493,6 +501,8 @@ pub fn main() -> Result<()> {
                 ),
             }
         }
+        // Source hygiene: reads the crate's own source tree, nothing else.
+        "lint" => lint::cmd(&mut args),
         sub => {
             // Reject typos before touching the manifest or device — on a
             // bare checkout an unknown verb should say "unknown command",

@@ -111,6 +111,7 @@ pub fn cmd(archive: &Archive, args: &mut Args) -> Result<()> {
 fn write_artifact(dir: &Path, filename: &str, content: &str) -> Result<()> {
     std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
     let path = dir.join(filename);
+    // xbench-lint: allow(single-recording-path, report bundle artifacts rendered from the archive, not measurement records)
     std::fs::write(&path, content).with_context(|| format!("writing {}", path.display()))?;
     eprintln!("wrote {} ({} bytes)", path.display(), content.len());
     Ok(())

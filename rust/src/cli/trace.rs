@@ -75,6 +75,7 @@ pub fn cmd_export(archive: &Archive, trace_id: &str, out: Option<&Path>) -> Resu
     }
     let out: PathBuf =
         out.map(Path::to_path_buf).unwrap_or_else(|| PathBuf::from(format!("{trace_id}.trace.json")));
+    // xbench-lint: allow(single-recording-path, Chrome-trace export artifact rendered from recorded spans, not a measurement record)
     std::fs::write(&out, trace.to_json())
         .with_context(|| format!("writing {}", out.display()))?;
     eprintln!(

@@ -135,12 +135,14 @@ fn traced_item<T>(label: &str, f: impl FnOnce() -> Result<T>) -> Result<T> {
     if !crate::obs::span::is_enabled() {
         return f();
     }
+    // xbench-lint: allow(clock-discipline, pool-task span bracket — fan-out bookkeeping wrapped around the item, never inside its timed phases)
     let t0 = std::time::Instant::now();
     let out = f();
     crate::obs::span::record(
         crate::obs::SpanKind::PoolTask,
         label,
         t0,
+        // xbench-lint: allow(clock-discipline, pool-task span bracket — fan-out bookkeeping wrapped around the item, never inside its timed phases)
         std::time::Instant::now(),
     );
     out

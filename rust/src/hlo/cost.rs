@@ -10,7 +10,7 @@
 //! bound. Transcendentals count 1 FLOP/element like other elementwise
 //! ops — a uniform undercount that cancels in the cross-device ratios.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use super::parser::{Computation, HloModule, Instruction, Shape};
 
@@ -63,7 +63,7 @@ pub struct CostSummary {
 
 /// Analyze a parsed module.
 pub fn analyze(module: &HloModule) -> CostSummary {
-    let mut an = Analyzer { module, memo: HashMap::new() };
+    let mut an = Analyzer { module, memo: BTreeMap::new() };
     let mut total = CompCost::default();
     if let Some(entry) = module.entry_computation() {
         total = an.computation_cost(entry);
@@ -122,7 +122,7 @@ struct CompCost {
 
 struct Analyzer<'a> {
     module: &'a HloModule,
-    memo: HashMap<String, CompCost>,
+    memo: BTreeMap<String, CompCost>,
 }
 
 impl<'a> Analyzer<'a> {

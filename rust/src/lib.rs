@@ -54,6 +54,7 @@ pub mod util;
 pub mod coordinator;
 pub mod devmodel;
 pub mod hlo;
+pub mod lint;
 pub mod metrics;
 pub mod obs;
 pub mod optim;

@@ -1,0 +1,215 @@
+//! docs-drift: the CLI surface, the USAGE screen, and `docs/CLI.md`
+//! must describe the same verb set in the same order.
+//!
+//! This absorbs (and extends) the `tests/cli_docs.rs` drift check as a
+//! lint rule: the dispatch table `cli::VERBS` is the source of truth;
+//! every entry needs a USAGE line and a `` ## `verb` `` section in
+//! `docs/CLI.md` containing an `xbench <verb>` synopsis; stale or
+//! out-of-order sections are findings.
+//!
+//! Findings anchored in source point into `cli/mod.rs`; findings about
+//! the markdown itself carry the fixed label `docs/CLI.md` (the rule
+//! reads exactly one markdown file, addressed via `--docs`).
+
+use super::pragma::Directives;
+use super::rules::DOCS;
+use super::scan::{Kind, Tok};
+use super::Finding;
+use std::path::Path;
+
+/// Label used for findings anchored in the markdown file.
+const DOC_LABEL: &str = "docs/CLI.md";
+
+/// Run the rule. `rel` is the path of the scanned dispatch file
+/// (`cli/mod.rs`), `toks` its token stream, `docs_dir` the directory
+/// holding `CLI.md`. Silently does nothing when the file has no VERBS
+/// table (fixture trees without a CLI are legal).
+pub fn check(
+    rel: &str,
+    toks: &[Tok],
+    dirs: &Directives,
+    docs_dir: &Path,
+    findings: &mut Vec<Finding>,
+) {
+    let verbs = parse_verbs(toks);
+    if verbs.is_empty() {
+        return;
+    }
+    let usage = parse_const_str(toks, "USAGE");
+
+    let mut emit = |file: &str, line: u32, col: u32, message: String| {
+        // Source-anchored findings honor allow pragmas like any rule;
+        // markdown findings cannot carry pragmas.
+        if file == rel && dirs.suppresses(DOCS, line) {
+            return;
+        }
+        findings.push(Finding { file: file.to_string(), line, col, rule: DOCS, message });
+    };
+
+    match &usage {
+        None => {
+            let (l, c) = verbs[0].pos;
+            emit(rel, l, c, "no USAGE screen found alongside the VERBS table".to_string());
+        }
+        Some(u) => {
+            for v in &verbs {
+                let present = u.lines().any(|l| l.trim_start().starts_with(v.name.as_str()));
+                if !present {
+                    let (l, c) = v.pos;
+                    emit(rel, l, c, format!("verb `{}` has no USAGE line", v.name));
+                }
+            }
+        }
+    }
+
+    let doc_path = docs_dir.join("CLI.md");
+    let doc_text = match std::fs::read_to_string(&doc_path) {
+        Ok(t) => t,
+        Err(_) => {
+            let (l, c) = verbs[0].pos;
+            emit(
+                rel,
+                l,
+                c,
+                format!("docs/CLI.md not found under {} — {} verbs undocumented",
+                    docs_dir.display(), verbs.len()),
+            );
+            return;
+        }
+    };
+
+    let sections = parse_sections(&doc_text);
+
+    for v in &verbs {
+        match sections.iter().find(|s| s.name == v.name) {
+            None => {
+                let (l, c) = v.pos;
+                emit(rel, l, c, format!("verb `{}` has no docs/CLI.md section", v.name));
+            }
+            Some(s) => {
+                if !s.body.contains(&format!("xbench {}", v.name)) {
+                    emit(
+                        DOC_LABEL,
+                        s.line,
+                        1,
+                        format!("section `{}` lacks an `xbench {}` synopsis", v.name, v.name),
+                    );
+                }
+            }
+        }
+    }
+    for s in &sections {
+        if !verbs.iter().any(|v| v.name == s.name) {
+            emit(
+                DOC_LABEL,
+                s.line,
+                1,
+                format!("section documents `{}`, which is not a dispatched verb", s.name),
+            );
+        }
+    }
+
+    // Order: the documented verbs (restricted to dispatched ones) must
+    // appear in dispatch order — one finding at the first mismatch.
+    let documented: Vec<&Section> = sections
+        .iter()
+        .filter(|s| verbs.iter().any(|v| v.name == s.name))
+        .collect();
+    let expected: Vec<&Verb> = verbs
+        .iter()
+        .filter(|v| sections.iter().any(|s| s.name == v.name))
+        .collect();
+    for (s, v) in documented.iter().zip(&expected) {
+        if s.name != v.name {
+            emit(
+                DOC_LABEL,
+                s.line,
+                1,
+                format!(
+                    "sections out of dispatch order: expected `{}`, found `{}`",
+                    v.name, s.name
+                ),
+            );
+            break;
+        }
+    }
+}
+
+struct Verb {
+    name: String,
+    pos: (u32, u32),
+}
+
+/// Extract the verb names (with source positions) from the `VERBS`
+/// const: every string literal between `VERBS ... =` and the closing
+/// `;`, taken pairwise as (name, description).
+fn parse_verbs(toks: &[Tok]) -> Vec<Verb> {
+    let Some(start) = toks
+        .iter()
+        .position(|t| t.kind == Kind::Ident && t.text == "VERBS" && !t.in_test)
+    else {
+        return Vec::new();
+    };
+    let Some(eq) = toks[start..].iter().position(|t| t.kind == Kind::Punct && t.text == "=")
+    else {
+        return Vec::new();
+    };
+    let mut verbs = Vec::new();
+    let mut want_name = true;
+    for t in &toks[start + eq..] {
+        if t.kind == Kind::Punct && t.text == ";" {
+            break;
+        }
+        if t.kind == Kind::Str {
+            if want_name {
+                verbs.push(Verb { name: t.text.clone(), pos: (t.line, t.col) });
+            }
+            want_name = !want_name;
+        }
+    }
+    verbs
+}
+
+/// Decoded value of `const <name>: &str = "...";`.
+fn parse_const_str(toks: &[Tok], name: &str) -> Option<String> {
+    let start = toks
+        .iter()
+        .position(|t| t.kind == Kind::Ident && t.text == name && !t.in_test)?;
+    toks[start..]
+        .iter()
+        .take_while(|t| !(t.kind == Kind::Punct && t.text == ";"))
+        .find(|t| t.kind == Kind::Str)
+        .map(|t| t.text.clone())
+}
+
+struct Section {
+    name: String,
+    line: u32,
+    body: String,
+}
+
+/// Split `CLI.md` into `` ## `verb` `` sections (1-based heading line,
+/// body up to the next heading).
+fn parse_sections(text: &str) -> Vec<Section> {
+    let mut sections: Vec<Section> = Vec::new();
+    for (idx, line) in text.lines().enumerate() {
+        if let Some(name) = line
+            .strip_prefix("## `")
+            .and_then(|r| r.strip_suffix('`'))
+        {
+            sections.push(Section {
+                name: name.to_string(),
+                line: idx as u32 + 1,
+                body: String::new(),
+            });
+        } else if line.starts_with("## ") {
+            // Non-verb heading ends the previous section.
+            sections.push(Section { name: String::new(), line: idx as u32 + 1, body: String::new() });
+        } else if let Some(cur) = sections.last_mut() {
+            cur.body.push_str(line);
+            cur.body.push('\n');
+        }
+    }
+    sections.retain(|s| !s.name.is_empty());
+    sections
+}

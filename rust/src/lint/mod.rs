@@ -1,0 +1,246 @@
+//! Measurement-integrity lint: machine-checks the `docs/METHODOLOGY.md`
+//! invariants over the crate's own source.
+//!
+//! The benchmark's trustworthiness rests on guarantees the type system
+//! cannot see — timed regions stay free of IO/printing/span recording,
+//! clocks are read only by the measurement protocol, results have one
+//! recording path, renders are byte-deterministic, the daemon never
+//! panics on a request. `xbench lint` turns each of those conventions
+//! into a checkable rule (see [`rules::RULES`]) over a hand-rolled
+//! token-level scanner ([`scan`]) — no rustc plugin, no new
+//! dependencies, consistent with the vendored-only policy.
+//!
+//! Escape hatch: `// xbench-lint: allow(<rule>, <reason>)` on or above
+//! the offending line, with a mandatory reason; unused or reasonless
+//! pragmas are themselves findings ([`rules::PRAGMA`]). The full rule
+//! catalog, pragma syntax, and allowlist policy live in `docs/LINT.md`.
+//!
+//! Diagnostics are rustc-style `file:line:col: rule: message`, sorted
+//! by (file, line, col, rule) so output is byte-identical across runs;
+//! `--format json` emits the same findings as one compact JSON object
+//! for CI byte-comparison.
+
+pub mod docs;
+pub mod pragma;
+pub mod rules;
+pub mod scan;
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One diagnostic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Forward-slash path relative to the source root (or the fixed
+    /// label `docs/CLI.md` for markdown-anchored docs-drift findings).
+    pub file: String,
+    pub line: u32,
+    pub col: u32,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// Lint configuration.
+pub struct Options {
+    /// Root of the Rust source tree to scan (every `*.rs` below it).
+    pub src: PathBuf,
+    /// Directory holding `CLI.md` for the docs-drift rule.
+    pub docs: PathBuf,
+    /// Rule ids to run; empty = all rules.
+    pub rules: Vec<String>,
+}
+
+/// Run the lint pass. Findings come back sorted and deterministic;
+/// an empty vec means the tree is clean.
+pub fn run(opts: &Options) -> Result<Vec<Finding>> {
+    for r in &opts.rules {
+        if !rules::RULES.iter().any(|(id, _)| id == r) {
+            bail!("unknown rule `{r}` (see `xbench lint --list-rules`)");
+        }
+    }
+    let selected = |id: &str| opts.rules.is_empty() || opts.rules.iter().any(|r| r == id);
+
+    let mut files = Vec::new();
+    walk(&opts.src, &opts.src, &mut files)
+        .with_context(|| format!("scanning source tree {}", opts.src.display()))?;
+    files.sort();
+
+    let mut findings = Vec::new();
+    for rel in &files {
+        let mut path = opts.src.clone();
+        for part in rel.split('/') {
+            path.push(part);
+        }
+        let src =
+            std::fs::read_to_string(&path).with_context(|| format!("reading {}", path.display()))?;
+        let toks = scan::scan(&src);
+        let dirs = pragma::collect(&toks);
+        let ctx = rules::FileCtx { rel, toks: &toks, dirs: &dirs };
+        rules::check_file(&ctx, &selected, &mut findings);
+        if selected(rules::DOCS) && rel == "cli/mod.rs" {
+            docs::check(rel, &toks, &dirs, &opts.docs, &mut findings);
+        }
+        if selected(rules::PRAGMA) {
+            // Last per file: every other rule has marked its pragmas used.
+            rules::pragma_hygiene(&ctx, &selected, &mut findings);
+        }
+    }
+
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.col, a.rule, a.message.as_str())
+            .cmp(&(b.file.as_str(), b.line, b.col, b.rule, b.message.as_str()))
+    });
+    Ok(findings)
+}
+
+fn walk(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading {}", dir.display()))?
+        .map(|e| e.map(|e| e.path()))
+        .collect::<std::io::Result<_>>()?;
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk(root, &p, out)?;
+        } else if p.extension().map_or(false, |e| e == "rs") {
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(&p)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+/// Rustc-style text render: one `file:line:col: rule: message` per
+/// line. Empty string when clean.
+pub fn render_text(findings: &[Finding]) -> String {
+    let mut out = String::new();
+    for f in findings {
+        out.push_str(&format!("{}:{}:{}: {}: {}\n", f.file, f.line, f.col, f.rule, f.message));
+    }
+    out
+}
+
+/// Compact JSON render: `{"count":N,"findings":[...]}`, keys sorted
+/// (BTreeMap), byte-identical across runs. Trailing newline included.
+pub fn render_json(findings: &[Finding]) -> String {
+    use crate::util::json::Value;
+    let items: Vec<Value> = findings
+        .iter()
+        .map(|f| {
+            Value::obj(vec![
+                ("file", Value::str(f.file.as_str())),
+                ("line", Value::num(f.line as f64)),
+                ("col", Value::num(f.col as f64)),
+                ("rule", Value::str(f.rule)),
+                ("message", Value::str(f.message.as_str())),
+            ])
+        })
+        .collect();
+    let doc = Value::obj(vec![
+        ("count", Value::num(findings.len() as f64)),
+        ("findings", Value::Arr(items)),
+    ]);
+    let mut s = doc.to_json();
+    s.push('\n');
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_str(rel: &str, src: &str) -> Vec<Finding> {
+        let toks = scan::scan(src);
+        let dirs = pragma::collect(&toks);
+        let ctx = rules::FileCtx { rel, toks: &toks, dirs: &dirs };
+        let mut findings = Vec::new();
+        let all = |_: &str| true;
+        rules::check_file(&ctx, &all, &mut findings);
+        rules::pragma_hygiene(&ctx, &all, &mut findings);
+        findings
+    }
+
+    #[test]
+    fn clock_rule_fires_and_pragma_suppresses() {
+        let f = lint_str("store/lock.rs", "fn f() { let t = Instant::now(); }");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, rules::CLOCK);
+        assert_eq!(f[0].line, 1);
+
+        let f = lint_str(
+            "store/lock.rs",
+            "// xbench-lint: allow(clock-discipline, backoff deadline)\nfn f() { let t = Instant::now(); }",
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn clock_rule_respects_allowlist_and_tests() {
+        assert!(lint_str("obs/span.rs", "fn f() { Instant::now(); }").is_empty());
+        assert!(lint_str(
+            "store/lock.rs",
+            "#[cfg(test)]\nmod tests { fn f() { Instant::now(); } }"
+        )
+        .is_empty());
+    }
+
+    #[test]
+    fn unused_pragma_is_a_finding() {
+        let f = lint_str("store/lock.rs", "// xbench-lint: allow(clock-discipline, stale)\nfn f() {}");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, rules::PRAGMA);
+        assert!(f[0].message.contains("suppresses nothing"));
+    }
+
+    #[test]
+    fn recording_rule_scopes_to_store() {
+        assert!(lint_str("store/archive.rs", "fn f() { fs::write(p, b); }").is_empty());
+        let f = lint_str("report/mod.rs", "fn f() { fs::write(p, b); }");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, rules::RECORD);
+    }
+
+    #[test]
+    fn panic_rule_ignores_unwrap_or_else() {
+        let f = lint_str("service/daemon.rs", "fn f() { m.lock().unwrap_or_else(g); }");
+        assert!(f.is_empty(), "{f:?}");
+        let f = lint_str("service/daemon.rs", "fn f() { m.lock().unwrap(); }");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, rules::PANIC);
+    }
+
+    #[test]
+    fn region_rule_requires_markers_in_runner() {
+        let f = lint_str("coordinator/runner.rs", "fn f() {}");
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("timed-region begin/end"));
+    }
+
+    #[test]
+    fn region_rule_bans_io_inside() {
+        let src = "// xbench-lint: timed-region begin\n\
+                   fn f() { println!(\"x\"); crate::obs::span::record(); }\n\
+                   // xbench-lint: timed-region end\n";
+        let f = lint_str("coordinator/eager.rs", src);
+        let rules_hit: Vec<&str> = f.iter().map(|x| x.rule).collect();
+        assert_eq!(rules_hit, vec![rules::REGION, rules::REGION]);
+    }
+
+    #[test]
+    fn render_is_deterministic() {
+        let f = lint_str("report_out/html.rs", "use std::collections::HashMap;\nfn f() {}");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, rules::RENDER);
+        let a = render_text(&f);
+        let b = render_text(&f);
+        assert_eq!(a, b);
+        assert_eq!(a, "report_out/html.rs:1:23: deterministic-render: HashMap in a render path — iteration order reaches rendered bytes; use BTreeMap/BTreeSet or sort explicitly\n");
+        assert!(render_json(&f).starts_with("{\"count\":1,"));
+    }
+}

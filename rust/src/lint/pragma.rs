@@ -1,0 +1,225 @@
+//! `// xbench-lint:` directive parsing.
+//!
+//! Two directive families live in line comments:
+//!
+//! - `// xbench-lint: allow(<rule>, <reason>)` — suppress findings of
+//!   `<rule>` on the pragma's own line and the line immediately below.
+//!   The reason is mandatory and free-form; an allow that suppresses
+//!   nothing is itself a finding (pragma-hygiene), so the allowlist
+//!   cannot rot.
+//! - `// xbench-lint: timed-region begin` / `... end` — bracket a
+//!   measure loop; the timed-region-hygiene rule polices everything
+//!   between a begin/end pair.
+//!
+//! Anything else after `xbench-lint:` is malformed and reported.
+
+use super::scan::{Kind, Tok};
+
+/// A parsed `allow(rule, reason)` pragma.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    pub rule: String,
+    pub reason: String,
+    pub line: u32,
+    pub col: u32,
+    /// Set by the rule engine when this pragma suppresses a finding.
+    pub used: std::cell::Cell<bool>,
+}
+
+/// A timed-region marker comment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MarkerKind {
+    Begin,
+    End,
+}
+
+#[derive(Debug, Clone)]
+pub struct Marker {
+    pub kind: MarkerKind,
+    pub line: u32,
+    pub col: u32,
+}
+
+/// A directive that did not parse; reported by pragma-hygiene.
+#[derive(Debug, Clone)]
+pub struct Malformed {
+    pub line: u32,
+    pub col: u32,
+    pub what: String,
+}
+
+#[derive(Debug, Default)]
+pub struct Directives {
+    pub allows: Vec<Allow>,
+    pub markers: Vec<Marker>,
+    pub malformed: Vec<Malformed>,
+}
+
+/// Extract all directives from a file's token stream. Directives in
+/// test code are ignored entirely (rules do not fire there, so a
+/// pragma there could only ever be dead weight).
+pub fn collect(toks: &[Tok]) -> Directives {
+    let mut out = Directives::default();
+    for t in toks {
+        if t.kind != Kind::LineComment || t.in_test {
+            continue;
+        }
+        let body = t.text.trim_start_matches('/').trim();
+        let Some(rest) = body.strip_prefix("xbench-lint:") else {
+            continue;
+        };
+        let rest = rest.trim();
+        if let Some(inner) = rest.strip_prefix("allow") {
+            let inner = inner.trim();
+            let parsed = inner
+                .strip_prefix('(')
+                .and_then(|s| s.strip_suffix(')'))
+                .and_then(|s| s.split_once(','));
+            match parsed {
+                Some((rule, reason)) => out.allows.push(Allow {
+                    rule: rule.trim().to_string(),
+                    reason: reason.trim().to_string(),
+                    line: t.line,
+                    col: t.col,
+                    used: std::cell::Cell::new(false),
+                }),
+                None => {
+                    // `allow(rule)` without a reason, or unbalanced parens.
+                    let what = match inner.strip_prefix('(').and_then(|s| s.strip_suffix(')')) {
+                        Some(rule) => format!("allow({}) has no reason", rule.trim()),
+                        None => format!("unparseable directive `{rest}`"),
+                    };
+                    out.malformed.push(Malformed { line: t.line, col: t.col, what });
+                }
+            }
+        } else if rest == "timed-region begin" {
+            out.markers.push(Marker { kind: MarkerKind::Begin, line: t.line, col: t.col });
+        } else if rest == "timed-region end" {
+            out.markers.push(Marker { kind: MarkerKind::End, line: t.line, col: t.col });
+        } else {
+            out.malformed.push(Malformed {
+                line: t.line,
+                col: t.col,
+                what: format!("unparseable directive `{rest}`"),
+            });
+        }
+    }
+    out
+}
+
+impl Directives {
+    /// Is a finding of `rule` at `line` suppressed? A pragma covers its
+    /// own line and the next one (so it can sit above the offending
+    /// statement or trail it on the same line). Marks the pragma used.
+    pub fn suppresses(&self, rule: &str, line: u32) -> bool {
+        let mut hit = false;
+        for a in &self.allows {
+            if a.rule == rule && (a.line == line || a.line + 1 == line) {
+                a.used.set(true);
+                hit = true;
+            }
+        }
+        hit
+    }
+
+    /// Timed regions as (begin_line, end_line) pairs, plus unbalanced-
+    /// marker problems as strings with a position.
+    pub fn regions(&self) -> (Vec<(u32, u32)>, Vec<Malformed>) {
+        let mut regions = Vec::new();
+        let mut problems = Vec::new();
+        let mut open: Option<&Marker> = None;
+        for m in &self.markers {
+            match (m.kind, open) {
+                (MarkerKind::Begin, None) => open = Some(m),
+                (MarkerKind::Begin, Some(prev)) => {
+                    problems.push(Malformed {
+                        line: m.line,
+                        col: m.col,
+                        what: format!(
+                            "timed-region begin while the region from line {} is still open",
+                            prev.line
+                        ),
+                    });
+                }
+                (MarkerKind::End, Some(b)) => {
+                    regions.push((b.line, m.line));
+                    open = None;
+                }
+                (MarkerKind::End, None) => {
+                    problems.push(Malformed {
+                        line: m.line,
+                        col: m.col,
+                        what: "timed-region end without a matching begin".to_string(),
+                    });
+                }
+            }
+        }
+        if let Some(b) = open {
+            problems.push(Malformed {
+                line: b.line,
+                col: b.col,
+                what: "timed-region begin never closed".to_string(),
+            });
+        }
+        (regions, problems)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::scan::scan;
+
+    #[test]
+    fn parses_allow_with_reason() {
+        let toks = scan("// xbench-lint: allow(clock-discipline, lock backoff deadline)\nlet x = 1;");
+        let d = collect(&toks);
+        assert_eq!(d.allows.len(), 1);
+        assert_eq!(d.allows[0].rule, "clock-discipline");
+        assert_eq!(d.allows[0].reason, "lock backoff deadline");
+        assert!(d.malformed.is_empty());
+    }
+
+    #[test]
+    fn missing_reason_is_malformed() {
+        let toks = scan("// xbench-lint: allow(clock-discipline)\n");
+        let d = collect(&toks);
+        assert!(d.allows.is_empty());
+        assert_eq!(d.malformed.len(), 1);
+        assert!(d.malformed[0].what.contains("no reason"));
+    }
+
+    #[test]
+    fn suppression_covers_same_and_next_line() {
+        let toks = scan("// xbench-lint: allow(r, why)\nlet a = 1;\nlet b = 2;");
+        let d = collect(&toks);
+        assert!(d.suppresses("r", 1));
+        assert!(d.suppresses("r", 2));
+        assert!(!d.suppresses("r", 3));
+        assert!(!d.suppresses("other", 2));
+        assert!(d.allows[0].used.get());
+    }
+
+    #[test]
+    fn regions_pair_up() {
+        let src = "// xbench-lint: timed-region begin\nwork();\n// xbench-lint: timed-region end\n";
+        let (regions, problems) = collect(&scan(src)).regions();
+        assert_eq!(regions, vec![(1, 3)]);
+        assert!(problems.is_empty());
+    }
+
+    #[test]
+    fn unbalanced_markers_reported() {
+        let src = "// xbench-lint: timed-region end\n// xbench-lint: timed-region begin\n";
+        let (regions, problems) = collect(&scan(src)).regions();
+        assert!(regions.is_empty());
+        assert_eq!(problems.len(), 2);
+    }
+
+    #[test]
+    fn unknown_directive_is_malformed() {
+        let toks = scan("// xbench-lint: deny(everything)\n");
+        let d = collect(&toks);
+        assert_eq!(d.malformed.len(), 1);
+    }
+}

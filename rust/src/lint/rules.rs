@@ -1,0 +1,372 @@
+//! The measurement-integrity rules.
+//!
+//! Each rule is a token-shape match over one file, scoped by path and
+//! gated on `in_test` (test code is never linted) and on `allow`
+//! pragmas (see [`crate::lint::pragma`]). Rule ids are stable — they
+//! appear in diagnostics, pragmas, `--rule` filters, and
+//! `docs/LINT.md` — so renaming one is a breaking change.
+
+use super::pragma::Directives;
+use super::scan::{Kind, Tok};
+use super::Finding;
+
+pub const CLOCK: &str = "clock-discipline";
+pub const REGION: &str = "timed-region-hygiene";
+pub const RECORD: &str = "single-recording-path";
+pub const RENDER: &str = "deterministic-render";
+pub const PANIC: &str = "no-panic-in-daemon";
+pub const DOCS: &str = "docs-drift";
+pub const PRAGMA: &str = "pragma-hygiene";
+
+/// Rule catalog: (id, one-line description) — `--list-rules` output
+/// and the docs/LINT.md source of truth.
+pub const RULES: &[(&str, &str)] = &[
+    (CLOCK, "Instant::now/SystemTime::now only at allowlisted sites or under a reasoned pragma"),
+    (REGION, "timed-region markers in coordinator/runner.rs; no IO/printing/spans/extra clocks inside"),
+    (RECORD, "append_jsonl/OpenOptions/File::create/fs::write only under store/"),
+    (RENDER, "no HashMap/HashSet in render paths (report_out/, obs/chrome.rs, cli/)"),
+    (PANIC, "no .unwrap()/.expect( in service/ outside #[cfg(test)]"),
+    (DOCS, "every cli::VERBS entry has a USAGE line and a docs/CLI.md section, in order"),
+    (PRAGMA, "pragmas must parse, name a known rule, carry a reason, and suppress something"),
+];
+
+/// Files where raw clock reads are the point: the measurement
+/// protocol's own timers and the observability clock. Everything else
+/// needs a pragma. `coordinator/runner.rs` is here because its clock
+/// reads are policed by the finer-grained timed-region-hygiene rule
+/// instead (loop-boundary reads are legal there, mid-region ones are
+/// not — a file-level allowlist cannot express that).
+const CLOCK_ALLOWED: &[&str] = &[
+    "coordinator/runner.rs",
+    "obs/metrics.rs",
+    "obs/span.rs",
+    "profiler/timeline.rs",
+    "runtime/client.rs",
+    "service/mod.rs",
+];
+
+/// True when `rel` is scanned by the deterministic-render rule: these
+/// modules produce user-visible or persisted byte streams whose order
+/// must not depend on hash seeds.
+fn render_scope(rel: &str) -> bool {
+    rel.starts_with("report_out/") || rel.starts_with("cli/") || rel == "obs/chrome.rs"
+}
+
+pub struct FileCtx<'a> {
+    /// Forward-slash path relative to the source root, e.g.
+    /// `service/daemon.rs`.
+    pub rel: &'a str,
+    pub toks: &'a [Tok],
+    pub dirs: &'a Directives,
+}
+
+/// Run every selected token rule over one file.
+pub fn check_file(
+    ctx: &FileCtx,
+    selected: &dyn Fn(&str) -> bool,
+    findings: &mut Vec<Finding>,
+) {
+    // Comments carry directives, not code: rules match on code tokens.
+    let code: Vec<&Tok> = ctx
+        .toks
+        .iter()
+        .filter(|t| t.kind != Kind::LineComment && t.kind != Kind::BlockComment)
+        .collect();
+
+    if selected(CLOCK) {
+        clock_discipline(ctx, &code, findings);
+    }
+    if selected(REGION) {
+        timed_region_hygiene(ctx, &code, findings);
+    }
+    if selected(RECORD) {
+        single_recording_path(ctx, &code, findings);
+    }
+    if selected(RENDER) {
+        deterministic_render(ctx, &code, findings);
+    }
+    if selected(PANIC) {
+        no_panic_in_daemon(ctx, &code, findings);
+    }
+}
+
+/// Emit a finding unless an allow pragma covers it.
+fn emit(ctx: &FileCtx, findings: &mut Vec<Finding>, rule: &'static str, t: &Tok, message: String) {
+    if ctx.dirs.suppresses(rule, t.line) {
+        return;
+    }
+    findings.push(Finding {
+        file: ctx.rel.to_string(),
+        line: t.line,
+        col: t.col,
+        rule,
+        message,
+    });
+}
+
+/// `Instant::now` / `SystemTime::now` path at code position `i`?
+fn is_clock_read(code: &[&Tok], i: usize) -> bool {
+    let t = code[i];
+    t.kind == Kind::Ident
+        && (t.text == "Instant" || t.text == "SystemTime")
+        && matches!(code.get(i + 1), Some(n) if n.text == "::")
+        && matches!(code.get(i + 2), Some(n) if n.text == "now")
+}
+
+fn clock_discipline(ctx: &FileCtx, code: &[&Tok], findings: &mut Vec<Finding>) {
+    if CLOCK_ALLOWED.contains(&ctx.rel) {
+        return;
+    }
+    for i in 0..code.len() {
+        let t = code[i];
+        if t.in_test || !is_clock_read(code, i) {
+            continue;
+        }
+        emit(
+            ctx,
+            findings,
+            CLOCK,
+            t,
+            format!(
+                "raw {}::now() outside the clock allowlist; time through the measurement \
+                 protocol or add `// xbench-lint: allow(clock-discipline, <reason>)`",
+                t.text
+            ),
+        );
+    }
+}
+
+fn timed_region_hygiene(ctx: &FileCtx, code: &[&Tok], findings: &mut Vec<Finding>) {
+    let (regions, problems) = ctx.dirs.regions();
+
+    // The §2.2 measure loops live in coordinator/runner.rs; deleting
+    // the markers must not silently disable the rule.
+    if ctx.rel == "coordinator/runner.rs" && regions.is_empty() && problems.is_empty() {
+        findings.push(Finding {
+            file: ctx.rel.to_string(),
+            line: 1,
+            col: 1,
+            rule: REGION,
+            message: "no `// xbench-lint: timed-region begin/end` markers around the \
+                      measure loops in this file"
+                .to_string(),
+        });
+    }
+    for p in problems {
+        findings.push(Finding {
+            file: ctx.rel.to_string(),
+            line: p.line,
+            col: p.col,
+            rule: REGION,
+            message: p.what,
+        });
+    }
+
+    let in_region =
+        |line: u32| regions.iter().any(|&(b, e)| b < line && line < e);
+
+    for i in 0..code.len() {
+        let t = code[i];
+        if t.in_test || !in_region(t.line) {
+            continue;
+        }
+        if is_clock_read(code, i) {
+            emit(
+                ctx,
+                findings,
+                REGION,
+                t,
+                format!(
+                    "{}::now() inside a timed region; only the loop-boundary reads may \
+                     touch the clock (pragma them)",
+                    t.text
+                ),
+            );
+        } else if t.kind == Kind::Ident
+            && t.text == "span"
+            && matches!(code.get(i + 1), Some(n) if n.text == "::")
+        {
+            emit(
+                ctx,
+                findings,
+                REGION,
+                t,
+                "span recording inside a timed region; stamp spans around the region, \
+                 not inside it"
+                    .to_string(),
+            );
+        } else if t.kind == Kind::Ident
+            && matches!(t.text.as_str(), "println" | "print" | "eprintln" | "eprint" | "dbg")
+            && matches!(code.get(i + 1), Some(n) if n.text == "!")
+        {
+            emit(
+                ctx,
+                findings,
+                REGION,
+                t,
+                format!("{}! inside a timed region perturbs the measurement", t.text),
+            );
+        } else if t.kind == Kind::Ident
+            && (t.text == "append_jsonl"
+                || t.text == "OpenOptions"
+                || t.text == "read_to_string"
+                || t.text == "write_all"
+                || ((t.text == "fs" || t.text == "File")
+                    && matches!(code.get(i + 1), Some(n) if n.text == "::")))
+        {
+            emit(
+                ctx,
+                findings,
+                REGION,
+                t,
+                format!("file IO (`{}`) inside a timed region", t.text),
+            );
+        }
+    }
+}
+
+fn single_recording_path(ctx: &FileCtx, code: &[&Tok], findings: &mut Vec<Finding>) {
+    if ctx.rel.starts_with("store/") {
+        return;
+    }
+    for i in 0..code.len() {
+        let t = code[i];
+        if t.in_test || t.kind != Kind::Ident {
+            continue;
+        }
+        let what: Option<&str> = if t.text == "append_jsonl" {
+            Some("append_jsonl")
+        } else if t.text == "OpenOptions" {
+            Some("OpenOptions")
+        } else if t.text == "File"
+            && matches!(code.get(i + 1), Some(n) if n.text == "::")
+            && matches!(code.get(i + 2), Some(n) if n.text == "create")
+        {
+            Some("File::create")
+        } else if t.text == "fs"
+            && matches!(code.get(i + 1), Some(n) if n.text == "::")
+            && matches!(code.get(i + 2), Some(n) if n.text == "write")
+        {
+            Some("fs::write")
+        } else {
+            None
+        };
+        if let Some(what) = what {
+            emit(
+                ctx,
+                findings,
+                RECORD,
+                t,
+                format!(
+                    "`{what}` outside store/ — results persistence has a single \
+                     recording path; route through the store layer or pragma why \
+                     this write is not a measurement record"
+                ),
+            );
+        }
+    }
+}
+
+fn deterministic_render(ctx: &FileCtx, code: &[&Tok], findings: &mut Vec<Finding>) {
+    if !render_scope(ctx.rel) {
+        return;
+    }
+    for &t in code {
+        if t.in_test || t.kind != Kind::Ident {
+            continue;
+        }
+        if t.text == "HashMap" || t.text == "HashSet" {
+            emit(
+                ctx,
+                findings,
+                RENDER,
+                t,
+                format!(
+                    "{} in a render path — iteration order reaches rendered bytes; \
+                     use BTreeMap/BTreeSet or sort explicitly",
+                    t.text
+                ),
+            );
+        }
+    }
+}
+
+fn no_panic_in_daemon(ctx: &FileCtx, code: &[&Tok], findings: &mut Vec<Finding>) {
+    if !ctx.rel.starts_with("service/") {
+        return;
+    }
+    for i in 0..code.len() {
+        let t = code[i];
+        if t.in_test || t.kind != Kind::Ident || i == 0 || code[i - 1].text != "." {
+            continue;
+        }
+        let bad = (t.text == "unwrap"
+            && matches!(code.get(i + 1), Some(n) if n.text == "(")
+            && matches!(code.get(i + 2), Some(n) if n.text == ")"))
+            || (t.text == "expect"
+                && matches!(code.get(i + 1), Some(n) if n.text == "("));
+        if bad {
+            emit(
+                ctx,
+                findings,
+                PANIC,
+                t,
+                format!(
+                    ".{}(...) in daemon code — a panicking handler thread drops the \
+                     client connection silently; return an error response or recover",
+                    t.text
+                ),
+            );
+        }
+    }
+}
+
+/// Pragma hygiene for one file: run after every other rule so `used`
+/// flags are final. `selected_rule` reports whether a given rule id ran
+/// this invocation — an allow for a rule that did not run is not
+/// flagged as unused (it had no chance to fire).
+pub fn pragma_hygiene(
+    ctx: &FileCtx,
+    selected_rule: &dyn Fn(&str) -> bool,
+    findings: &mut Vec<Finding>,
+) {
+    for m in &ctx.dirs.malformed {
+        findings.push(Finding {
+            file: ctx.rel.to_string(),
+            line: m.line,
+            col: m.col,
+            rule: PRAGMA,
+            message: m.what.clone(),
+        });
+    }
+    for a in &ctx.dirs.allows {
+        if !RULES.iter().any(|(id, _)| *id == a.rule) {
+            findings.push(Finding {
+                file: ctx.rel.to_string(),
+                line: a.line,
+                col: a.col,
+                rule: PRAGMA,
+                message: format!("allow({}) names an unknown rule", a.rule),
+            });
+        } else if a.reason.is_empty() {
+            findings.push(Finding {
+                file: ctx.rel.to_string(),
+                line: a.line,
+                col: a.col,
+                rule: PRAGMA,
+                message: format!("allow({}) has an empty reason", a.rule),
+            });
+        } else if selected_rule(&a.rule) && !a.used.get() {
+            findings.push(Finding {
+                file: ctx.rel.to_string(),
+                line: a.line,
+                col: a.col,
+                rule: PRAGMA,
+                message: format!(
+                    "allow({}) suppresses nothing — the violation is gone; remove the pragma",
+                    a.rule
+                ),
+            });
+        }
+    }
+}

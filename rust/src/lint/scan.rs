@@ -1,0 +1,501 @@
+//! Token-level Rust scanner for the lint pass.
+//!
+//! A deliberately small, dependency-free lexer: it distinguishes
+//! identifiers, punctuation, comments, and literals — enough for the
+//! measurement-integrity rules (which match identifier/path shapes and
+//! read pragma comments) without parsing Rust. Every token carries its
+//! 1-based line/column and an `in_test` flag marking code under a
+//! `#[cfg(test)]` / `#[test]` attribute, which all rules skip.
+
+/// Lexical class of a [`Tok`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// Identifier or keyword (`Instant`, `fn`, `unwrap`, ...).
+    Ident,
+    /// Punctuation. Multi-char `::` is one token; everything else is
+    /// a single character.
+    Punct,
+    /// `// ...` comment; `text` is the full comment without the
+    /// trailing newline (pragmas are parsed from these).
+    LineComment,
+    /// `/* ... */` comment (nesting handled).
+    BlockComment,
+    /// String literal (plain, raw, byte, raw-byte); `text` is the
+    /// *decoded* value so rules can inspect e.g. the USAGE screen.
+    Str,
+    /// Character or byte literal.
+    Char,
+    /// Lifetime (`'a`) — distinguished from char literals.
+    Lifetime,
+    /// Numeric literal.
+    Num,
+}
+
+/// One scanned token with its source position.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    /// 1-based source line.
+    pub line: u32,
+    /// 1-based byte column within the line.
+    pub col: u32,
+    /// True if this token sits inside a `#[cfg(test)]` / `#[test]`
+    /// item — rules must not fire on test code.
+    pub in_test: bool,
+}
+
+/// Scan `src` into tokens. Never fails: unrecognized bytes become
+/// single-character punctuation, and unterminated literals/comments
+/// end at EOF (the lint pass must degrade gracefully on fixture code).
+pub fn scan(src: &str) -> Vec<Tok> {
+    let b = src.as_bytes();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let mut col = 1u32;
+
+    macro_rules! bump {
+        () => {{
+            if b[i] == b'\n' {
+                line += 1;
+                col = 1;
+            } else {
+                col += 1;
+            }
+            i += 1;
+        }};
+    }
+
+    while i < b.len() {
+        let c = b[i];
+        let (tl, tc) = (line, col);
+        if c.is_ascii_whitespace() {
+            bump!();
+        } else if c == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+            let start = i;
+            while i < b.len() && b[i] != b'\n' {
+                bump!();
+            }
+            toks.push(tok(Kind::LineComment, &src[start..i], tl, tc));
+        } else if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+            let start = i;
+            let mut depth = 0usize;
+            while i < b.len() {
+                if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                    depth += 1;
+                    bump!();
+                    bump!();
+                } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                    depth -= 1;
+                    bump!();
+                    bump!();
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    bump!();
+                }
+            }
+            toks.push(tok(Kind::BlockComment, &src[start..i], tl, tc));
+        } else if c == b'r' && i + 1 < b.len() && (b[i + 1] == b'"' || b[i + 1] == b'#') {
+            // Raw string r"..." / r#"..."# (or an ident starting with r).
+            match scan_raw(b, i + 1) {
+                Some((val, end)) => {
+                    while i < end {
+                        bump!();
+                    }
+                    toks.push(tok(Kind::Str, &val, tl, tc));
+                }
+                None => scan_ident(b, &mut i, &mut line, &mut col, &mut toks, tl, tc),
+            }
+        } else if c == b'b' && i + 1 < b.len() && b[i + 1] == b'"' {
+            let (val, end) = scan_quoted(b, i + 1);
+            while i < end {
+                bump!();
+            }
+            toks.push(tok(Kind::Str, &val, tl, tc));
+        } else if c == b'b'
+            && i + 2 < b.len()
+            && b[i + 1] == b'r'
+            && (b[i + 2] == b'"' || b[i + 2] == b'#')
+        {
+            match scan_raw(b, i + 2) {
+                Some((val, end)) => {
+                    while i < end {
+                        bump!();
+                    }
+                    toks.push(tok(Kind::Str, &val, tl, tc));
+                }
+                None => scan_ident(b, &mut i, &mut line, &mut col, &mut toks, tl, tc),
+            }
+        } else if c == b'b' && i + 1 < b.len() && b[i + 1] == b'\'' {
+            bump!(); // consume b; the char-literal arm handles the rest
+            let end = char_literal_end(b, i);
+            let end = if end == usize::MAX { b.len() } else { end };
+            while i < end {
+                bump!();
+            }
+            toks.push(tok(Kind::Char, "", tl, tc));
+        } else if c == b'_' || c.is_ascii_alphabetic() {
+            scan_ident(b, &mut i, &mut line, &mut col, &mut toks, tl, tc);
+        } else if c == b'"' {
+            let (val, end) = scan_quoted(b, i);
+            while i < end {
+                bump!();
+            }
+            toks.push(tok(Kind::Str, &val, tl, tc));
+        } else if c == b'\'' {
+            // Lifetime ('a not followed by ') vs char literal ('a').
+            let is_lifetime = i + 1 < b.len()
+                && (b[i + 1] == b'_' || b[i + 1].is_ascii_alphabetic())
+                && char_literal_end(b, i) == usize::MAX;
+            if is_lifetime {
+                let start = i;
+                bump!();
+                while i < b.len() && (b[i] == b'_' || b[i].is_ascii_alphanumeric()) {
+                    bump!();
+                }
+                toks.push(tok(Kind::Lifetime, &src[start..i], tl, tc));
+            } else {
+                let end = char_literal_end(b, i);
+                let end = if end == usize::MAX { b.len() } else { end };
+                while i < end {
+                    bump!();
+                }
+                toks.push(tok(Kind::Char, "", tl, tc));
+            }
+        } else if c.is_ascii_digit() {
+            let start = i;
+            while i < b.len()
+                && (b[i].is_ascii_alphanumeric() || b[i] == b'_' || b[i] == b'.')
+            {
+                // `0..n` range: the dot belongs to the range, not the number.
+                if b[i] == b'.' && i + 1 < b.len() && b[i + 1] == b'.' {
+                    break;
+                }
+                bump!();
+            }
+            toks.push(tok(Kind::Num, &src[start..i], tl, tc));
+        } else if c == b':' && i + 1 < b.len() && b[i + 1] == b':' {
+            bump!();
+            bump!();
+            toks.push(tok(Kind::Punct, "::", tl, tc));
+        } else {
+            bump!();
+            let text = String::from_utf8_lossy(&b[i - 1..i]).into_owned();
+            toks.push(Tok { kind: Kind::Punct, text, line: tl, col: tc, in_test: false });
+        }
+    }
+
+    mark_tests(&mut toks);
+    toks
+}
+
+fn tok(kind: Kind, text: &str, line: u32, col: u32) -> Tok {
+    Tok { kind, text: text.to_string(), line, col, in_test: false }
+}
+
+fn scan_ident(
+    b: &[u8],
+    i: &mut usize,
+    line: &mut u32,
+    col: &mut u32,
+    toks: &mut Vec<Tok>,
+    tl: u32,
+    tc: u32,
+) {
+    let start = *i;
+    while *i < b.len() && (b[*i] == b'_' || b[*i].is_ascii_alphanumeric()) {
+        *col += 1;
+        *i += 1;
+    }
+    let text = std::str::from_utf8(&b[start..*i]).unwrap_or_default();
+    toks.push(tok(Kind::Ident, text, tl, tc));
+    let _ = line;
+}
+
+/// Decode a plain `"..."` string starting at the opening quote.
+/// Returns (decoded value, index one past the closing quote). Bytes
+/// accumulate raw (preserving multi-byte UTF-8) and are decoded once.
+fn scan_quoted(b: &[u8], quote: usize) -> (String, usize) {
+    let mut val: Vec<u8> = Vec::new();
+    let mut j = quote + 1;
+    while j < b.len() {
+        match b[j] {
+            b'"' => return (String::from_utf8_lossy(&val).into_owned(), j + 1),
+            b'\\' if j + 1 < b.len() => {
+                j += 1;
+                match b[j] {
+                    b'n' => val.push(b'\n'),
+                    b't' => val.push(b'\t'),
+                    b'r' => val.push(b'\r'),
+                    b'0' => val.push(0),
+                    b'\\' => val.push(b'\\'),
+                    b'"' => val.push(b'"'),
+                    b'\'' => val.push(b'\''),
+                    b'u' => {
+                        // \u{XXXX}
+                        let mut k = j + 1;
+                        let mut hex = String::new();
+                        if k < b.len() && b[k] == b'{' {
+                            k += 1;
+                            while k < b.len() && b[k] != b'}' {
+                                hex.push(b[k] as char);
+                                k += 1;
+                            }
+                        }
+                        if let Ok(n) = u32::from_str_radix(&hex, 16) {
+                            if let Some(ch) = char::from_u32(n) {
+                                let mut buf = [0u8; 4];
+                                val.extend_from_slice(ch.encode_utf8(&mut buf).as_bytes());
+                            }
+                        }
+                        j = k;
+                    }
+                    b'\n' => {
+                        // Line-continuation: skip following whitespace.
+                        let mut k = j + 1;
+                        while k < b.len() && b[k].is_ascii_whitespace() {
+                            k += 1;
+                        }
+                        j = k - 1;
+                    }
+                    other => val.push(other),
+                }
+                j += 1;
+            }
+            other => {
+                val.push(other);
+                j += 1;
+            }
+        }
+    }
+    (String::from_utf8_lossy(&val).into_owned(), b.len())
+}
+
+/// Try to scan a raw string whose `#`/`"` run starts at `j` (just past
+/// the `r` / `br` prefix). Returns (value, end index) or None if this
+/// is not actually a raw string (e.g. the ident `r#try`).
+fn scan_raw(b: &[u8], j: usize) -> Option<(String, usize)> {
+    let mut hashes = 0usize;
+    let mut k = j;
+    while k < b.len() && b[k] == b'#' {
+        hashes += 1;
+        k += 1;
+    }
+    if k >= b.len() || b[k] != b'"' {
+        return None; // raw identifier like r#match
+    }
+    k += 1;
+    let start = k;
+    while k < b.len() {
+        if b[k] == b'"' {
+            let mut h = 0usize;
+            while h < hashes && k + 1 + h < b.len() && b[k + 1 + h] == b'#' {
+                h += 1;
+            }
+            if h == hashes {
+                let val = std::str::from_utf8(&b[start..k]).unwrap_or_default();
+                return Some((val.to_string(), k + 1 + hashes));
+            }
+        }
+        k += 1;
+    }
+    Some((String::from_utf8_lossy(&b[start..]).into_owned(), b.len()))
+}
+
+/// End index (one past closing `'`) of a char literal starting at the
+/// `'` at `i`, or `usize::MAX` if it does not close like one (then it
+/// is a lifetime).
+fn char_literal_end(b: &[u8], i: usize) -> usize {
+    let mut j = i + 1;
+    if j < b.len() && b[j] == b'\\' {
+        j += 1;
+        if j < b.len() && b[j] == b'u' && j + 1 < b.len() && b[j + 1] == b'{' {
+            while j < b.len() && b[j] != b'}' {
+                j += 1;
+            }
+        }
+        j += 1;
+    } else if j < b.len() {
+        j += 1;
+    }
+    if j < b.len() && b[j] == b'\'' {
+        j + 1
+    } else {
+        usize::MAX
+    }
+}
+
+/// Mark every token under a `#[cfg(test)]` / `#[test]` attribute's item
+/// as test code. Token-level approximation: after such an attribute,
+/// everything up to (and including) the matching close brace of the
+/// next `{` is test-only; an attribute followed by `;` before any `{`
+/// (out-of-line module) marks nothing.
+fn mark_tests(toks: &mut [Tok]) {
+    let mut i = 0usize;
+    while i < toks.len() {
+        if toks[i].kind == Kind::Punct
+            && toks[i].text == "#"
+            && i + 1 < toks.len()
+            && toks[i + 1].text == "["
+        {
+            // Find the matching `]` of the attribute.
+            let mut depth = 0usize;
+            let mut j = i + 1;
+            while j < toks.len() {
+                if toks[j].kind == Kind::Punct && toks[j].text == "[" {
+                    depth += 1;
+                } else if toks[j].kind == Kind::Punct && toks[j].text == "]" {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                j += 1;
+            }
+            let attr = &toks[i + 2..j.min(toks.len())];
+            // `#[test]` / `#[cfg(test)]` / `#[cfg(all(test, ..))]` gate
+            // test code; `#[cfg(not(test))]` gates *production* code and
+            // must not be skipped.
+            let is_test_attr = match attr.first() {
+                Some(t) if t.text == "test" => true,
+                Some(t) if t.text == "cfg" => {
+                    attr.iter().any(|t| t.kind == Kind::Ident && t.text == "test")
+                        && !attr.iter().any(|t| t.kind == Kind::Ident && t.text == "not")
+                }
+                _ => false,
+            };
+            if is_test_attr {
+                // Skip further attributes, find the item's `{` (or `;`).
+                let mut k = j + 1;
+                while k < toks.len() {
+                    let t = &toks[k];
+                    if t.kind == Kind::Punct && (t.text == "{" || t.text == ";") {
+                        break;
+                    }
+                    k += 1;
+                }
+                if k < toks.len() && toks[k].text == "{" {
+                    let mut braces = 0usize;
+                    let mut m = k;
+                    while m < toks.len() {
+                        if toks[m].kind == Kind::Punct && toks[m].text == "{" {
+                            braces += 1;
+                        } else if toks[m].kind == Kind::Punct && toks[m].text == "}" {
+                            braces -= 1;
+                            if braces == 0 {
+                                break;
+                            }
+                        }
+                        m += 1;
+                    }
+                    for t in &mut toks[i..=m.min(toks.len() - 1)] {
+                        t.in_test = true;
+                    }
+                    i = m + 1;
+                    continue;
+                }
+            }
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        scan(src)
+            .into_iter()
+            .filter(|t| t.kind == Kind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn basic_idents_and_paths() {
+        let toks = scan("let t0 = std::time::Instant::now();");
+        let path: Vec<&str> = toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(
+            path,
+            vec!["let", "t0", "=", "std", "::", "time", "::", "Instant", "::", "now", "(", ")", ";"]
+        );
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[0].col, 1);
+        assert_eq!(toks[1].col, 5);
+    }
+
+    #[test]
+    fn strings_do_not_leak_idents() {
+        assert_eq!(idents("let s = \"Instant::now()\";"), vec!["let", "s"]);
+        assert_eq!(idents("let s = r#\"HashMap \"quoted\" body\"#;"), vec!["let", "s"]);
+    }
+
+    #[test]
+    fn string_value_is_decoded() {
+        let toks = scan(r#"const U: &str = "a\nb";"#);
+        let s = toks.iter().find(|t| t.kind == Kind::Str).unwrap();
+        assert_eq!(s.text, "a\nb");
+    }
+
+    #[test]
+    fn lifetimes_are_not_chars() {
+        let toks = scan("fn f<'a>(x: &'a str) -> char { 'x' }");
+        assert_eq!(toks.iter().filter(|t| t.kind == Kind::Lifetime).count(), 2);
+        assert_eq!(toks.iter().filter(|t| t.kind == Kind::Char).count(), 1);
+    }
+
+    #[test]
+    fn comments_are_tokens() {
+        let toks = scan("// xbench-lint: allow(r, why)\nfn f() {} /* block */");
+        assert_eq!(toks[0].kind, Kind::LineComment);
+        assert!(toks[0].text.contains("xbench-lint"));
+        assert_eq!(toks.last().unwrap().kind, Kind::BlockComment);
+    }
+
+    #[test]
+    fn cfg_test_blocks_are_marked() {
+        let src = "fn live() { x.unwrap(); }\n\
+                   #[cfg(test)]\nmod tests {\n    fn t() { y.unwrap(); }\n}\n\
+                   fn live2() { z.unwrap(); }";
+        let toks = scan(src);
+        let unwraps: Vec<bool> = toks
+            .iter()
+            .filter(|t| t.text == "unwrap")
+            .map(|t| t.in_test)
+            .collect();
+        assert_eq!(unwraps, vec![false, true, false]);
+    }
+
+    #[test]
+    fn test_attr_marks_single_fn() {
+        let src = "#[test]\nfn t() { a.unwrap(); }\nfn live() { b.unwrap(); }";
+        let toks = scan(src);
+        let unwraps: Vec<bool> = toks
+            .iter()
+            .filter(|t| t.text == "unwrap")
+            .map(|t| t.in_test)
+            .collect();
+        assert_eq!(unwraps, vec![true, false]);
+    }
+
+    #[test]
+    fn stacked_attrs_before_test_block() {
+        let src = "#[cfg(test)]\n#[allow(dead_code)]\nmod tests { fn t() { a.unwrap(); } }";
+        let toks = scan(src);
+        assert!(toks.iter().find(|t| t.text == "unwrap").unwrap().in_test);
+    }
+
+    #[test]
+    fn numbers_and_ranges() {
+        let toks = scan("for i in 0..10 { let x = 1.5e3; }");
+        let nums: Vec<String> =
+            toks.iter().filter(|t| t.kind == Kind::Num).map(|t| t.text.clone()).collect();
+        assert_eq!(nums, vec!["0", "10", "1.5e3"]);
+    }
+}

@@ -301,6 +301,7 @@ pub fn flush_to_sink() -> Result<(Option<PathBuf>, usize)> {
         buf.push_str(&s.to_json().to_json());
         buf.push('\n');
     }
+    // xbench-lint: allow(single-recording-path, flight-recorder spans reuse the store's locked JSONL appender; spans.jsonl is observability, not results)
     crate::store::append_jsonl(&path, buf.as_bytes())
         .with_context(|| format!("appending spans to {}", path.display()))?;
     Ok((Some(path), spans.len()))

@@ -115,6 +115,7 @@ pub fn error_handling_study(
     // Fixed build: the probes still happen, but errors are static (we
     // time the lite probe loop explicitly so the work is comparable).
     let lite_runner = Runner::new(store, cfg);
+    // xbench-lint: allow(clock-discipline, case-study self-timing (Fig 6) — explicit A/B probe loop, not the suite protocol)
     let t0 = Instant::now();
     for i in 0..probes_per_dispatch {
         std::hint::black_box(error_handling::lite_probe(i));

@@ -52,6 +52,7 @@ pub fn run(store: &ArtifactStore, entry: &ModelEntry, iters: usize) -> Result<Of
     let mut tl = Timeline::new();
     let mut offload = Duration::ZERO;
     for i in 0..iters {
+        // xbench-lint: allow(clock-discipline, case-study self-timing (Fig 6) — explicit A/B schedule comparison, not the suite protocol)
         let t0 = Instant::now();
         let lits = inputs::synth_inputs(&infer.inputs, i as u64)?;
         let mut bufs = Vec::with_capacity(param_lits.len() + lits.len());
@@ -74,6 +75,7 @@ pub fn run(store: &ArtifactStore, entry: &ModelEntry, iters: usize) -> Result<Of
     // Resident mode: weights uploaded once (the fix).
     let mut resident = Duration::ZERO;
     for i in 0..iters {
+        // xbench-lint: allow(clock-discipline, case-study self-timing (Fig 6) — explicit A/B schedule comparison, not the suite protocol)
         let t0 = Instant::now();
         let lits = inputs::synth_inputs(&infer.inputs, i as u64)?;
         let mut bufs = Vec::with_capacity(lits.len());

@@ -80,6 +80,7 @@ pub fn run(device: &Device, n: usize, iters: usize) -> Result<RsqrtResult> {
     // Schedule A: per call — upload scalar, rsqrt kernel, fetch, scale.
     let mut dev_scalar = Duration::ZERO;
     for _ in 0..iters {
+        // xbench-lint: allow(clock-discipline, case-study self-timing (Fig 6) — explicit A/B schedule comparison, not the suite protocol)
         let t0 = Instant::now();
         let s_lit = xla::Literal::scalar(attention_head_size);
         let s_buf = device.upload(&s_lit)?.value;
@@ -97,6 +98,7 @@ pub fn run(device: &Device, n: usize, iters: usize) -> Result<RsqrtResult> {
     // Schedule B: host rsqrt + one kernel.
     let mut host_scalar = Duration::ZERO;
     for _ in 0..iters {
+        // xbench-lint: allow(clock-discipline, case-study self-timing (Fig 6) — explicit A/B schedule comparison, not the suite protocol)
         let t0 = Instant::now();
         let inv = 1.0f32 / attention_head_size.sqrt(); // numpy.sqrt analogue
         let inv_lit = xla::Literal::scalar(inv); // must outlive s_buf (upload contract)

@@ -102,6 +102,7 @@ pub fn run(device: &Device, entry: &ModelEntry, iters: usize) -> Result<ZeroGrad
     let mut serial = Duration::ZERO;
     let mut foreach = Duration::ZERO;
     for _ in 0..iters {
+        // xbench-lint: allow(clock-discipline, case-study self-timing (Fig 6) — explicit A/B schedule comparison, not the suite protocol)
         let t0 = Instant::now();
         for (exe, g) in serial_exes.iter().zip(&grads) {
             let out = exe.run_buffers(&[g])?;
@@ -109,6 +110,7 @@ pub fn run(device: &Device, entry: &ModelEntry, iters: usize) -> Result<ZeroGrad
         }
         serial += t0.elapsed();
 
+        // xbench-lint: allow(clock-discipline, case-study self-timing (Fig 6) — explicit A/B schedule comparison, not the suite protocol)
         let t1 = Instant::now();
         let out = foreach_exe.run_buffers(&grads.iter().collect::<Vec<_>>())?;
         std::hint::black_box(crate::runtime::fetch_tuple(&out.value)?);

@@ -29,7 +29,7 @@
 //! the boxed work closures and the [`PoolStats`] atomics.
 
 use anyhow::Result;
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -337,9 +337,9 @@ fn worker_loop(
 /// paths, so pooling across *different* artifact dirs would alias
 /// unrelated executables).
 pub fn shared(artifacts: &Path) -> Arc<WorkerPool> {
-    static POOLS: OnceLock<Mutex<HashMap<PathBuf, Arc<WorkerPool>>>> = OnceLock::new();
+    static POOLS: OnceLock<Mutex<BTreeMap<PathBuf, Arc<WorkerPool>>>> = OnceLock::new();
     let key = std::fs::canonicalize(artifacts).unwrap_or_else(|_| artifacts.to_path_buf());
-    let mut pools = POOLS.get_or_init(|| Mutex::new(HashMap::new())).lock().unwrap();
+    let mut pools = POOLS.get_or_init(|| Mutex::new(BTreeMap::new())).lock().unwrap();
     pools
         .entry(key.clone())
         .or_insert_with(|| Arc::new(WorkerPool::new(key)))

@@ -81,6 +81,7 @@ impl Table {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
         }
+        // xbench-lint: allow(single-recording-path, optional --csv-dir table twin, a render artifact — the archive stays the only results path)
         let mut f = std::fs::File::create(path)
             .with_context(|| format!("creating {}", path.display()))?;
         writeln!(f, "{}", self.headers.join(","))?;

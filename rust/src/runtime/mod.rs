@@ -16,7 +16,7 @@ pub use manifest::{Dtype, InputSpec, Manifest, ModelEntry, ParamSpec};
 
 use anyhow::Result;
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 use std::time::Duration;
@@ -30,9 +30,9 @@ use std::time::Duration;
 pub struct ArtifactStore {
     device: Rc<Device>,
     dir: PathBuf,
-    cache: RefCell<HashMap<String, Rc<Executable>>>,
-    compile_times: RefCell<HashMap<String, Duration>>,
-    compile_rss: RefCell<HashMap<String, usize>>,
+    cache: RefCell<BTreeMap<String, Rc<Executable>>>,
+    compile_times: RefCell<BTreeMap<String, Duration>>,
+    compile_rss: RefCell<BTreeMap<String, usize>>,
     cache_hits: std::cell::Cell<usize>,
 }
 
@@ -41,9 +41,9 @@ impl ArtifactStore {
         ArtifactStore {
             device,
             dir: artifact_dir.into(),
-            cache: RefCell::new(HashMap::new()),
-            compile_times: RefCell::new(HashMap::new()),
-            compile_rss: RefCell::new(HashMap::new()),
+            cache: RefCell::new(BTreeMap::new()),
+            compile_times: RefCell::new(BTreeMap::new()),
+            compile_rss: RefCell::new(BTreeMap::new()),
             cache_hits: std::cell::Cell::new(0),
         }
     }
@@ -63,6 +63,7 @@ impl ArtifactStore {
             self.cache_hits.set(self.cache_hits.get() + 1);
             return Ok(exe.clone());
         }
+        // xbench-lint: allow(clock-discipline, cold-compile wall time for the §3.2 JIT-overhead exhibit — compilation is excluded from benchmark timings)
         let t0 = std::time::Instant::now();
         let rss0 = crate::profiler::memory::current_rss_bytes();
         let exe = Rc::new(self.device.compile_hlo_file(&self.dir.join(rel))?);

@@ -86,6 +86,7 @@ pub fn fetch_result(
     timeout_secs: u64,
 ) -> Result<(Json, Option<Json>)> {
     let deadline = (timeout_secs > 0)
+        // xbench-lint: allow(clock-discipline, client-side --wait deadline, nowhere near a timed region)
         .then(|| std::time::Instant::now() + Duration::from_secs(timeout_secs));
     loop {
         let resp = request(port, &Request::Result { job: job.to_string() })?;
@@ -97,6 +98,7 @@ pub fn fetch_result(
         }
         if let Some(d) = deadline {
             anyhow::ensure!(
+                // xbench-lint: allow(clock-discipline, client-side --wait deadline, nowhere near a timed region)
                 std::time::Instant::now() < d,
                 "timed out after {timeout_secs}s waiting for {job} (status: {status})"
             );

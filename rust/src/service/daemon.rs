@@ -194,6 +194,29 @@ impl ServiceState {
             eprintln!("service: journaling {} for {}: {e:#}", self.journal.path().display(), ev.job());
         }
     }
+
+    /// The jobs table, poison-tolerant. A panic under this lock (e.g.
+    /// a handler thread dying mid-update) must not cascade: every job
+    /// transition is journaled before it is visible, so the table is
+    /// never in a state recovery can't reconstruct — recovering the
+    /// guard is strictly better than poisoning every later request.
+    fn lock_jobs(&self) -> std::sync::MutexGuard<'_, Vec<JobRecord>> {
+        self.jobs.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Condvar wait with the same poison recovery as [`Self::lock_jobs`].
+    fn wait_wake<'a>(
+        &self,
+        guard: std::sync::MutexGuard<'a, Vec<JobRecord>>,
+    ) -> std::sync::MutexGuard<'a, Vec<JobRecord>> {
+        self.wake.wait(guard).unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// The report-op archive path, poison-tolerant (plain data, no
+    /// invariants to lose).
+    fn lock_archive_path(&self) -> std::sync::MutexGuard<'_, PathBuf> {
+        self.archive_path.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
 }
 
 /// Exclusive ownership of one job journal for a daemon's lifetime.
@@ -222,6 +245,7 @@ impl JournalOwner {
             }
         }
         loop {
+            // xbench-lint: allow(single-recording-path, pid-ownership sidecar, not a results file — same create_new discipline as store::FileLock)
             match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
                 Ok(mut f) => {
                     let _ = writeln!(f, "{}", std::process::id());
@@ -386,7 +410,7 @@ impl Daemon {
             .with_context(|| format!("replaying journal {}", self.state.journal.path().display()))?;
         // The archive is about to move into the executor; remember its
         // path so the `report` op can open a read-only view of it.
-        *self.state.archive_path.lock().unwrap() = archive.path().to_path_buf();
+        *self.state.lock_archive_path() = archive.path().to_path_buf();
 
         let state = self.state.clone();
         let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
@@ -436,7 +460,7 @@ impl Daemon {
         // reports them instead of resurrecting them), then let the
         // executor finish its running job and exit.
         {
-            let mut jobs = state.jobs.lock().unwrap();
+            let mut jobs = state.lock_jobs();
             let mut abandoned = 0usize;
             for j in jobs.iter_mut() {
                 if j.status.is_claimable() {
@@ -495,7 +519,7 @@ fn recover(state: &ServiceState) -> Result<()> {
     if replay.jobs.is_empty() {
         return Ok(());
     }
-    let mut jobs = state.jobs.lock().unwrap();
+    let mut jobs = state.lock_jobs();
     let (mut restored, mut requeued) = (0usize, 0usize);
     for mut rj in replay.jobs {
         let spec = JobSpec::decode(&rj.spec)
@@ -634,12 +658,13 @@ fn executor_loop(
         // Shutdown is checked *before* claiming so pending jobs are
         // abandoned, not drained, once a shutdown is requested.
         let claimed = {
-            let mut jobs = state.jobs.lock().unwrap();
+            let mut jobs = state.lock_jobs();
             loop {
                 if state.shutdown.load(Ordering::SeqCst) {
                     break None;
                 }
                 if let Some(i) = jobs.iter().position(|j| j.status.is_claimable()) {
+                    // xbench-lint: allow(clock-discipline, claim-span bracket — queue bookkeeping, never inside a timed region)
                     let claim_t0 = std::time::Instant::now();
                     let retry = jobs[i].status == Status::Interrupted;
                     let ts = unix_now();
@@ -668,6 +693,7 @@ fn executor_loop(
                             crate::obs::SpanKind::Claim,
                             &jobs[i].id,
                             claim_t0,
+                            // xbench-lint: allow(clock-discipline, claim-span end stamp — queue bookkeeping, never inside a timed region)
                             std::time::Instant::now(),
                         );
                     }
@@ -676,7 +702,7 @@ fn executor_loop(
                     }
                     break Some((i, jobs[i].spec.clone(), jobs[i].progress.clone()));
                 }
-                jobs = state.wake.wait(jobs).unwrap();
+                jobs = state.wait_wake(jobs);
             }
         };
         let Some((index, spec, progress)) = claimed else { return };
@@ -687,6 +713,7 @@ fn executor_loop(
             archive: &archive,
             base_cfg: &base_cfg,
         };
+        // xbench-lint: allow(clock-discipline, whole-job exec latency for the stats sketch — wraps the job, never inside its timed regions)
         let exec_t0 = std::time::Instant::now();
         let outcome = execute_job(&env, &spec, &progress);
         let exec_us = exec_t0.elapsed().as_micros() as u64;
@@ -698,7 +725,7 @@ fn executor_loop(
         // Executor-thread spans drain outside any job, so the next
         // job's queue wait is never inflated by span bookkeeping.
         crate::obs::span::flush_thread();
-        let mut jobs = state.jobs.lock().unwrap();
+        let mut jobs = state.lock_jobs();
         let job = &mut jobs[index];
         let ts = unix_now();
         job.finished_ts = Some(ts);
@@ -758,7 +785,23 @@ fn handle_connection(stream: TcpStream, state: &Arc<ServiceState>) -> Result<()>
     let decoded = Request::decode_line(line.trim());
     let is_shutdown = matches!(decoded, Ok(Request::Shutdown));
     let response = match decoded {
-        Ok(req) => handle_request(req, state),
+        // A bug in a handler must come back as an error response, not
+        // a silently dropped connection: catch the panic at the
+        // request boundary. The shared state stays usable afterwards —
+        // job-table locks recover from poisoning (see
+        // [`ServiceState::lock_jobs`]) and every transition is
+        // journaled before it is acked.
+        Ok(req) => {
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| handle_request(req, state)))
+                .unwrap_or_else(|p| {
+                    let msg = p
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| p.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "unknown panic".to_string());
+                    err_response(format!("internal error: request handler panicked: {msg}"))
+                })
+        }
         Err(e) => err_response(format!("bad request: {e:#}")),
     };
     let mut stream = stream;
@@ -792,7 +835,7 @@ fn handle_request(req: Request, state: &Arc<ServiceState>) -> Json {
             // also flips the flag under this lock, so a submit can
             // never be acked after shutdown began (it would be
             // silently abandoned).
-            let mut jobs = state.jobs.lock().unwrap();
+            let mut jobs = state.lock_jobs();
             if state.shutdown.load(Ordering::SeqCst) {
                 return err_response("daemon is shutting down");
             }
@@ -812,6 +855,7 @@ fn handle_request(req: Request, state: &Arc<ServiceState>) -> Json {
                 spec,
                 status: Status::Pending,
                 submitted_ts: ts,
+                // xbench-lint: allow(clock-discipline, queue-wait latency anchor — microsecond submit instant, never inside a timed region)
                 submitted_at: Some(std::time::Instant::now()),
                 started_ts: None,
                 finished_ts: None,
@@ -826,14 +870,14 @@ fn handle_request(req: Request, state: &Arc<ServiceState>) -> Json {
             ok_response(vec![("job", Json::str(id))])
         }
         Request::Queue => {
-            let jobs = state.jobs.lock().unwrap();
+            let jobs = state.lock_jobs();
             ok_response(vec![(
                 "jobs",
                 Json::Arr(jobs.iter().map(|j| j.view()).collect()),
             )])
         }
         Request::Result { job } => {
-            let jobs = state.jobs.lock().unwrap();
+            let jobs = state.lock_jobs();
             match jobs.iter().find(|j| j.id == job) {
                 None => err_response(format!(
                     "unknown job {job:?} ({} submitted so far)",
@@ -866,7 +910,7 @@ fn handle_request(req: Request, state: &Arc<ServiceState>) -> Json {
             // append, so no coordination with the executor is needed.
             // Always the *default* options — the payload must be
             // byte-identical to a local default `xbench report`.
-            let archive = Archive::new(state.archive_path.lock().unwrap().clone());
+            let archive = Archive::new(state.lock_archive_path().clone());
             match crate::report_out::bundle(&archive, &crate::report_out::ReportOptions::default())
             {
                 Ok(bundle) => ok_response(vec![
@@ -881,7 +925,7 @@ fn handle_request(req: Request, state: &Arc<ServiceState>) -> Json {
             // (The accept-loop nudge happens in handle_connection,
             // after this response reaches the client.)
             {
-                let _jobs = state.jobs.lock().unwrap();
+                let _jobs = state.lock_jobs();
                 state.shutdown.store(true, Ordering::SeqCst);
             }
             state.wake.notify_all();
@@ -901,7 +945,7 @@ fn stats_snapshot(state: &Arc<ServiceState>) -> Json {
     let (mut done, mut failed, mut abandoned) = (0u64, 0u64, 0u64);
     let mut interruptions = 0u64;
     let submitted = {
-        let jobs = state.jobs.lock().unwrap();
+        let jobs = state.lock_jobs();
         for j in jobs.iter() {
             interruptions += j.interruptions as u64;
             match j.status {
@@ -1033,7 +1077,7 @@ mod tests {
         }
         recover(&state).unwrap();
         {
-            let jobs = state.jobs.lock().unwrap();
+            let jobs = state.lock_jobs();
             assert_eq!(jobs.len(), 2);
             assert_eq!(jobs[0].status, Status::Done);
             assert_eq!(jobs[0].progress.snapshot(), (2, 2), "restored progress reads n/n");
@@ -1073,7 +1117,7 @@ mod tests {
             .unwrap();
         recover(&state).unwrap();
         {
-            let jobs = state.jobs.lock().unwrap();
+            let jobs = state.lock_jobs();
             assert_eq!(jobs[0].status, Status::Done);
             assert!(jobs[0].result.is_none(), "payload must stay on disk");
             assert_eq!(jobs[0].result_at, Some(at));
@@ -1113,7 +1157,7 @@ mod tests {
         }
         recover(&state).unwrap();
         {
-            let jobs = state.jobs.lock().unwrap();
+            let jobs = state.lock_jobs();
             assert!(
                 jobs[0].result.is_none(),
                 "recovery must keep (status, offset), not the payload"
@@ -1143,7 +1187,7 @@ mod tests {
             state.journal.append(&ev).unwrap();
         }
         recover(&state).unwrap();
-        let jobs = state.jobs.lock().unwrap();
+        let jobs = state.lock_jobs();
         assert_eq!(jobs[0].status, Status::Interrupted, "first crash → one retry");
         assert_eq!(jobs[0].interruptions, 1);
         match &jobs[1].status {

@@ -50,6 +50,7 @@ impl Archive {
         if records.is_empty() {
             return Ok(());
         }
+        // xbench-lint: allow(clock-discipline, archive-append span bracket — indexing/persistence time, stamped outside timed regions)
         let t0 = std::time::Instant::now();
         let mut buf = String::new();
         for r in records {
@@ -64,6 +65,7 @@ impl Archive {
             crate::obs::SpanKind::ArchiveRecord,
             &records[0].run_id,
             t0,
+            // xbench-lint: allow(clock-discipline, archive-append span bracket — indexing/persistence time, stamped outside timed regions)
             std::time::Instant::now(),
         );
         out

@@ -315,6 +315,7 @@ impl Journal {
     /// partial bytes (that would turn a recoverable tail into mid-file
     /// corruption that fails every later replay).
     pub fn append(&self, ev: &JobEvent) -> Result<()> {
+        // xbench-lint: allow(clock-discipline, journal-append span bracket — queue persistence time, stamped outside timed regions)
         let t0 = std::time::Instant::now();
         let mut line = ev.to_json().to_json();
         line.push('\n');
@@ -325,6 +326,7 @@ impl Journal {
             crate::obs::SpanKind::JournalAppend,
             ev.job(),
             t0,
+            // xbench-lint: allow(clock-discipline, journal-append span bracket — queue persistence time, stamped outside timed regions)
             std::time::Instant::now(),
         );
         out
@@ -394,8 +396,8 @@ impl Journal {
 
         // Live (non-settled) jobs carry their original events over
         // verbatim, grouped per job.
-        let mut live: std::collections::HashMap<&str, Vec<&JobEvent>> =
-            std::collections::HashMap::new();
+        let mut live: std::collections::BTreeMap<&str, Vec<&JobEvent>> =
+            std::collections::BTreeMap::new();
         for job in &replayed.jobs {
             if !matches!(
                 job.state,
@@ -705,7 +707,7 @@ pub fn replay(events: &[JobEvent]) -> Result<Replay> {
     let mut jobs: Vec<ReplayedJob> = Vec::new();
     // id → index into `jobs`, so replay stays linear in journal length
     // (a long-lived daemon accumulates thousands of events).
-    let mut by_id: std::collections::HashMap<String, usize> = std::collections::HashMap::new();
+    let mut by_id: std::collections::BTreeMap<String, usize> = std::collections::BTreeMap::new();
     let mut next = 1usize;
     for ev in events {
         let id = ev.job();

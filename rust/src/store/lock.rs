@@ -66,6 +66,7 @@ impl FileLock {
                     .with_context(|| format!("creating {}", parent.display()))?;
             }
         }
+        // xbench-lint: allow(clock-discipline, lock acquisition deadline/staleness clock — storage plumbing, not measurement)
         let deadline = Instant::now() + ACQUIRE_TIMEOUT;
         loop {
             match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
@@ -79,6 +80,7 @@ impl FileLock {
                         Self::break_stale(&path, stale_after);
                         continue;
                     }
+                    // xbench-lint: allow(clock-discipline, lock acquisition deadline/staleness clock — storage plumbing, not measurement)
                     if Instant::now() >= deadline {
                         anyhow::bail!(
                             "could not acquire archive lock {} within {:?}; if no other \
@@ -99,6 +101,7 @@ impl FileLock {
     fn is_stale(path: &Path, stale_after: Duration) -> bool {
         let Ok(meta) = std::fs::metadata(path) else { return false };
         let Ok(modified) = meta.modified() else { return false };
+        // xbench-lint: allow(clock-discipline, lock acquisition deadline/staleness clock — storage plumbing, not measurement)
         SystemTime::now()
             .duration_since(modified)
             .map(|age| age > stale_after)

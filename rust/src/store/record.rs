@@ -61,10 +61,12 @@ pub struct RunMeta {
 impl RunMeta {
     /// Capture provenance for a run starting now.
     pub fn capture(cfg: &RunConfig, note: &str) -> RunMeta {
+        // xbench-lint: allow(clock-discipline, run provenance wall-clock timestamp, recorded once per run outside any timed region)
         let timestamp = std::time::SystemTime::now()
             .duration_since(std::time::UNIX_EPOCH)
             .map(|d| d.as_secs())
             .unwrap_or(0);
+        // xbench-lint: allow(clock-discipline, run provenance wall-clock timestamp, recorded once per run outside any timed region)
         let nanos = std::time::SystemTime::now()
             .duration_since(std::time::UNIX_EPOCH)
             .map(|d| d.subsec_nanos() as u64)

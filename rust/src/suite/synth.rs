@@ -176,6 +176,7 @@ pub fn write_synthetic_artifacts(dir: &Path, seed: u64, force: bool) -> Result<S
         ("param_seed", Json::num(seed as f64)),
         ("models", Json::Arr(models_json)),
     ]);
+    // xbench-lint: allow(single-recording-path, synthetic artifact/manifest generation (HLO text, params, manifest.json), not results)
     std::fs::write(&manifest_path, manifest.to_json_pretty())
         .with_context(|| format!("writing {}", manifest_path.display()))?;
     files += 1;
@@ -196,6 +197,7 @@ fn emit_model(dir: &Path, spec: &Spec, seed: u64, files: &mut usize) -> Result<J
         let mut data = vec![0f32; n];
         rng.fill_normal_f32(&mut data);
         let bytes: Vec<u8> = data.iter().flat_map(|v| (v * 0.05).to_le_bytes()).collect();
+        // xbench-lint: allow(single-recording-path, synthetic artifact/manifest generation (HLO text, params, manifest.json), not results)
         std::fs::write(&path, &bytes).with_context(|| format!("writing {}", path.display()))?;
         *files += 1;
         params_json.push(Json::obj(vec![
@@ -209,6 +211,7 @@ fn emit_model(dir: &Path, spec: &Spec, seed: u64, files: &mut usize) -> Result<J
     let mut infer_map = std::collections::BTreeMap::new();
     for &b in spec.batches {
         let rel = format!("{}.infer.b{b}.hlo.txt", spec.name);
+        // xbench-lint: allow(single-recording-path, synthetic artifact/manifest generation (HLO text, params, manifest.json), not results)
         std::fs::write(dir.join(&rel), infer_hlo(spec, b))?;
         *files += 1;
         infer_map.insert(
@@ -224,6 +227,7 @@ fn emit_model(dir: &Path, spec: &Spec, seed: u64, files: &mut usize) -> Result<J
     let train_json = match spec.train_batch {
         Some(b) => {
             let rel = format!("{}.train.b{b}.hlo.txt", spec.name);
+            // xbench-lint: allow(single-recording-path, synthetic artifact/manifest generation (HLO text, params, manifest.json), not results)
             std::fs::write(dir.join(&rel), train_hlo(spec, b))?;
             *files += 1;
             Json::obj(vec![
@@ -243,6 +247,7 @@ fn emit_model(dir: &Path, spec: &Spec, seed: u64, files: &mut usize) -> Result<J
         let mut in_feat = spec.in_feat;
         for (i, dims) in spec.weights.iter().enumerate() {
             let rel = format!("{}.stage{i:02}.b{b}.hlo.txt", spec.name);
+            // xbench-lint: allow(single-recording-path, synthetic artifact/manifest generation (HLO text, params, manifest.json), not results)
             std::fs::write(dir.join(&rel), stage_hlo(spec, i, b, in_feat))?;
             *files += 1;
             list.push(Json::obj(vec![

@@ -17,6 +17,7 @@ impl TempDir {
         let path = std::env::temp_dir().join(format!(
             "xbench-{}-{}-{n}",
             std::process::id(),
+            // xbench-lint: allow(clock-discipline, tmpdir name entropy, not a measurement)
             std::time::SystemTime::now()
                 .duration_since(std::time::UNIX_EPOCH)
                 .map(|d| d.subsec_nanos())

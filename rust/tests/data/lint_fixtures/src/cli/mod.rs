@@ -1,0 +1,21 @@
+//! Fixture CLI dispatcher with drifting docs.
+
+pub const VERBS: &[(&str, &str)] = &[
+    ("run", "execute the fixture workload"),
+    ("stats", "print fixture counters"),
+    ("lint", "self-check"),
+];
+
+pub const USAGE: &str = "\
+usage: fixture <verb>
+
+  run               execute the fixture workload
+  lint              self-check
+";
+
+pub fn dispatch(verb: &str) -> i32 {
+    match verb {
+        "run" | "stats" | "lint" => 0,
+        _ => 1,
+    }
+}

@@ -1,0 +1,14 @@
+//! Fixture measure loop with planted perturbations inside the region.
+
+pub fn measure(repeats: usize) -> f64 {
+    let mut total = 0.0;
+    let t0 = std::time::Instant::now();
+    // xbench-lint: timed-region begin
+    for _rep in 0..repeats {
+        println!("tick");
+        let _mid = std::time::Instant::now();
+        total += 1.0;
+    }
+    // xbench-lint: timed-region end
+    total + t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,5 @@
+//! Fixture with an unbalanced region marker.
+
+pub fn warm() {
+    // xbench-lint: timed-region end
+}

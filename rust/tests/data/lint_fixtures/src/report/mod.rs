@@ -1,0 +1,5 @@
+//! Fixture exporter that writes results outside the store layer.
+
+pub fn export(path: &std::path::Path, body: &str) -> std::io::Result<()> {
+    std::fs::write(path, body)
+}

@@ -1,0 +1,11 @@
+//! Fixture renderer with an order-unstable map.
+
+use std::collections::HashMap;
+
+pub fn render(rows: &HashMap<String, f64>) -> String {
+    let mut out = String::new();
+    for (k, v) in rows {
+        out.push_str(&format!("{k},{v}\n"));
+    }
+    out
+}

@@ -1,0 +1,16 @@
+//! Fixture daemon handler that panics on bad input; the unwrap in the
+//! test module below must NOT fire the rule.
+
+pub fn handle(req: &str) -> String {
+    let n: u64 = req.trim().parse().unwrap();
+    format!("ok {n}")
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        let v: u64 = "7".parse().unwrap();
+        assert_eq!(v, 7);
+    }
+}

@@ -1,0 +1,12 @@
+//! Fixture store layer: the sanctioned recording path. Nothing here
+//! may fire single-recording-path — writes under store/ are the rule's
+//! one legal home.
+
+use std::io::Write;
+
+pub fn append(path: &std::path::Path, line: &str) -> std::io::Result<()> {
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    f.write_all(line.as_bytes())?;
+    f.write_all(b"\n")?;
+    Ok(())
+}

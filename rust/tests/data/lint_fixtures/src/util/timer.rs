@@ -1,0 +1,23 @@
+//! Fixture helpers exercising the clock rule and pragma hygiene.
+
+pub fn stamp() -> std::time::SystemTime {
+    std::time::SystemTime::now()
+}
+
+pub fn scratch_elapsed() -> u64 {
+    // xbench-lint: allow(clock-discipline, fixture scratch timer; its reading is never recorded)
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_nanos() as u64
+}
+
+// xbench-lint: allow(clock-discipline, )
+pub fn empty_reason() {}
+
+// xbench-lint: allow(deterministic-render, this module renders nothing)
+pub fn unused_allow() {}
+
+// xbench-lint: allow(made-up-rule, whatever)
+pub fn unknown_rule() {}
+
+// xbench-lint: allow(no-panic-in-daemon)
+pub fn reasonless() {}

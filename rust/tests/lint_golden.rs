@@ -1,0 +1,125 @@
+//! Golden tests for `xbench lint`.
+//!
+//! The fixture tree (`tests/data/lint_fixtures/`) plants at least one
+//! violation per rule — plus the negatives that must NOT fire: an
+//! unwrap inside `#[cfg(test)]`, a store/ write, a pragma-suppressed
+//! clock read — and this test pins the linter's complete text and
+//! JSON output **byte-exactly**. Any change to a diagnostic message,
+//! a sort key, a column computation, or the JSON encoder shows up
+//! here as a diff, which is the point: downstream CI greps and
+//! byte-compares this output.
+
+use std::path::PathBuf;
+use xbench::lint::{render_json, render_text, run, Options};
+
+fn fixture_opts() -> Options {
+    let base = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/data/lint_fixtures");
+    Options { src: base.join("src"), docs: base.join("docs"), rules: Vec::new() }
+}
+
+/// The complete expected text render over the fixture tree: one
+/// pinned diagnostic per planted violation, sorted.
+const GOLDEN_TEXT: &str = "\
+cli/mod.rs:5:6: docs-drift: verb `stats` has no USAGE line
+cli/mod.rs:5:6: docs-drift: verb `stats` has no docs/CLI.md section
+coordinator/runner.rs:8:9: timed-region-hygiene: println! inside a timed region perturbs the measurement
+coordinator/runner.rs:9:31: timed-region-hygiene: Instant::now() inside a timed region; only the loop-boundary reads may touch the clock (pragma them)
+coordinator/warm.rs:4:5: timed-region-hygiene: timed-region end without a matching begin
+docs/CLI.md:7:1: docs-drift: sections out of dispatch order: expected `run`, found `lint`
+docs/CLI.md:15:1: docs-drift: section `run` lacks an `xbench run` synopsis
+docs/CLI.md:19:1: docs-drift: section documents `retired`, which is not a dispatched verb
+report/mod.rs:4:10: single-recording-path: `fs::write` outside store/ — results persistence has a single recording path; route through the store layer or pragma why this write is not a measurement record
+report_out/html.rs:3:23: deterministic-render: HashMap in a render path — iteration order reaches rendered bytes; use BTreeMap/BTreeSet or sort explicitly
+report_out/html.rs:5:22: deterministic-render: HashMap in a render path — iteration order reaches rendered bytes; use BTreeMap/BTreeSet or sort explicitly
+service/daemon.rs:5:37: no-panic-in-daemon: .unwrap(...) in daemon code — a panicking handler thread drops the client connection silently; return an error response or recover
+util/timer.rs:4:16: clock-discipline: raw SystemTime::now() outside the clock allowlist; time through the measurement protocol or add `// xbench-lint: allow(clock-discipline, <reason>)`
+util/timer.rs:13:1: pragma-hygiene: allow(clock-discipline) has an empty reason
+util/timer.rs:16:1: pragma-hygiene: allow(deterministic-render) suppresses nothing — the violation is gone; remove the pragma
+util/timer.rs:19:1: pragma-hygiene: allow(made-up-rule) names an unknown rule
+util/timer.rs:22:1: pragma-hygiene: allow(no-panic-in-daemon) has no reason
+";
+
+/// Same findings as one compact key-sorted JSON object.
+const GOLDEN_JSON: &str = "{\"count\":17,\"findings\":[{\"col\":6,\"file\":\"cli/mod.rs\",\"line\":5,\"message\":\"verb `stats` has no USAGE line\",\"rule\":\"docs-drift\"},{\"col\":6,\"file\":\"cli/mod.rs\",\"line\":5,\"message\":\"verb `stats` has no docs/CLI.md section\",\"rule\":\"docs-drift\"},{\"col\":9,\"file\":\"coordinator/runner.rs\",\"line\":8,\"message\":\"println! inside a timed region perturbs the measurement\",\"rule\":\"timed-region-hygiene\"},{\"col\":31,\"file\":\"coordinator/runner.rs\",\"line\":9,\"message\":\"Instant::now() inside a timed region; only the loop-boundary reads may touch the clock (pragma them)\",\"rule\":\"timed-region-hygiene\"},{\"col\":5,\"file\":\"coordinator/warm.rs\",\"line\":4,\"message\":\"timed-region end without a matching begin\",\"rule\":\"timed-region-hygiene\"},{\"col\":1,\"file\":\"docs/CLI.md\",\"line\":7,\"message\":\"sections out of dispatch order: expected `run`, found `lint`\",\"rule\":\"docs-drift\"},{\"col\":1,\"file\":\"docs/CLI.md\",\"line\":15,\"message\":\"section `run` lacks an `xbench run` synopsis\",\"rule\":\"docs-drift\"},{\"col\":1,\"file\":\"docs/CLI.md\",\"line\":19,\"message\":\"section documents `retired`, which is not a dispatched verb\",\"rule\":\"docs-drift\"},{\"col\":10,\"file\":\"report/mod.rs\",\"line\":4,\"message\":\"`fs::write` outside store/ — results persistence has a single recording path; route through the store layer or pragma why this write is not a measurement record\",\"rule\":\"single-recording-path\"},{\"col\":23,\"file\":\"report_out/html.rs\",\"line\":3,\"message\":\"HashMap in a render path — iteration order reaches rendered bytes; use BTreeMap/BTreeSet or sort explicitly\",\"rule\":\"deterministic-render\"},{\"col\":22,\"file\":\"report_out/html.rs\",\"line\":5,\"message\":\"HashMap in a render path — iteration order reaches rendered bytes; use BTreeMap/BTreeSet or sort explicitly\",\"rule\":\"deterministic-render\"},{\"col\":37,\"file\":\"service/daemon.rs\",\"line\":5,\"message\":\".unwrap(...) in daemon code — a panicking handler thread drops the client connection silently; return an error response or recover\",\"rule\":\"no-panic-in-daemon\"},{\"col\":16,\"file\":\"util/timer.rs\",\"line\":4,\"message\":\"raw SystemTime::now() outside the clock allowlist; time through the measurement protocol or add `// xbench-lint: allow(clock-discipline, <reason>)`\",\"rule\":\"clock-discipline\"},{\"col\":1,\"file\":\"util/timer.rs\",\"line\":13,\"message\":\"allow(clock-discipline) has an empty reason\",\"rule\":\"pragma-hygiene\"},{\"col\":1,\"file\":\"util/timer.rs\",\"line\":16,\"message\":\"allow(deterministic-render) suppresses nothing — the violation is gone; remove the pragma\",\"rule\":\"pragma-hygiene\"},{\"col\":1,\"file\":\"util/timer.rs\",\"line\":19,\"message\":\"allow(made-up-rule) names an unknown rule\",\"rule\":\"pragma-hygiene\"},{\"col\":1,\"file\":\"util/timer.rs\",\"line\":22,\"message\":\"allow(no-panic-in-daemon) has no reason\",\"rule\":\"pragma-hygiene\"}]}\n";
+
+#[test]
+fn fixture_text_output_is_pinned_byte_exact() {
+    let findings = run(&fixture_opts()).unwrap();
+    assert_eq!(render_text(&findings), GOLDEN_TEXT);
+}
+
+#[test]
+fn fixture_json_output_is_pinned_byte_exact() {
+    let findings = run(&fixture_opts()).unwrap();
+    assert_eq!(render_json(&findings), GOLDEN_JSON);
+}
+
+#[test]
+fn two_invocations_are_byte_identical() {
+    let a = run(&fixture_opts()).unwrap();
+    let b = run(&fixture_opts()).unwrap();
+    assert_eq!(render_text(&a), render_text(&b));
+    assert_eq!(render_json(&a), render_json(&b));
+}
+
+#[test]
+fn every_rule_fires_on_the_fixture_tree() {
+    let findings = run(&fixture_opts()).unwrap();
+    for (id, _) in xbench::lint::rules::RULES {
+        assert!(
+            findings.iter().any(|f| f.rule == *id),
+            "rule {id} produced no finding on the fixture tree"
+        );
+    }
+}
+
+#[test]
+fn negatives_do_not_fire() {
+    let findings = run(&fixture_opts()).unwrap();
+    // The store/ write is the sanctioned path; the cfg(test) unwrap is
+    // test code; the pragma'd Instant::now() (util/timer.rs:9) is
+    // suppressed.
+    assert!(!findings.iter().any(|f| f.file.starts_with("store/")));
+    assert!(!findings.iter().any(|f| f.file == "service/daemon.rs" && f.line > 8));
+    assert!(!findings.iter().any(|f| f.file == "util/timer.rs" && f.line == 9));
+}
+
+#[test]
+fn rule_filter_runs_a_subset_without_pragma_noise() {
+    let mut opts = fixture_opts();
+    opts.rules = vec!["no-panic-in-daemon".to_string()];
+    let findings = run(&opts).unwrap();
+    // Exactly the planted unwrap — and no unused-pragma findings for
+    // pragmas naming rules that did not run this invocation.
+    assert_eq!(findings.len(), 1);
+    assert_eq!(findings[0].file, "service/daemon.rs");
+    assert_eq!(findings[0].rule, "no-panic-in-daemon");
+}
+
+#[test]
+fn unknown_rule_is_an_error() {
+    let mut opts = fixture_opts();
+    opts.rules = vec!["no-such-rule".to_string()];
+    let err = run(&opts).unwrap_err().to_string();
+    assert!(err.contains("unknown rule"), "{err}");
+}
+
+/// The shipped tree lints clean — the codebase obeys its own
+/// methodology rules. This is the same check CI's lint job runs via
+/// the binary; failing it means a change introduced a violation
+/// without a reasoned pragma.
+#[test]
+fn shipped_tree_is_self_clean() {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let opts = Options {
+        src: manifest.join("src"),
+        docs: manifest.parent().unwrap().join("docs"),
+        rules: Vec::new(),
+    };
+    let findings = run(&opts).unwrap();
+    assert!(
+        findings.is_empty(),
+        "shipped tree has lint findings:\n{}",
+        render_text(&findings)
+    );
+}
