@@ -1,0 +1,122 @@
+//! Queue-latency probe for the multi-tenant daemon scheduler.
+//!
+//! `cargo bench --bench service` — boots the same in-process daemon
+//! twice (1 executor, then 4), fires an identical synthetic submit
+//! storm at each, and reports the queue-wait quantiles (submit →
+//! claim, diffed out of the global metrics sketch) plus the drain wall
+//! time. Writes `BENCH_service.json` (consumed by CI) and a human
+//! table. Scheduling happens entirely outside the §2.2 timed regions,
+//! so executor count may only ever move *queue wait* — never the
+//! measured per-iteration metrics.
+
+use std::time::Instant;
+
+use xbench::config::RunConfig;
+use xbench::obs::metrics::{self, Sketch};
+use xbench::report::Table;
+use xbench::runtime::Manifest;
+use xbench::service::{self, Daemon, JobSpec};
+use xbench::store::{Archive, Journal};
+use xbench::suite::Suite;
+use xbench::util::{Json, TempDir};
+
+const STORM: usize = 12;
+
+fn quick_spec(k: usize) -> JobSpec {
+    let mut spec = JobSpec::default_run();
+    spec.repeats = 1;
+    spec.iterations = 1;
+    spec.warmup = 0;
+    spec.models = vec![if k % 2 == 0 { "deeprec_ae" } else { "dlrm_tiny" }.into()];
+    spec
+}
+
+/// One storm against a fresh daemon with `executors` resident
+/// executor threads: submit everything as fast as TCP allows, then
+/// wait for the drain. Returns (queue p50 secs, queue p99 secs, drain
+/// wall secs).
+fn storm(executors: usize) -> anyhow::Result<(f64, f64, f64)> {
+    let dir = TempDir::new()?;
+    xbench::suite::synth::write_synthetic_artifacts(dir.path(), 20230102, false)?;
+    let suite = Suite::new(Manifest::load(dir.path())?);
+    let archive_path = dir.path().join("runs.jsonl");
+    let mut daemon =
+        Daemon::bind(0, dir.path().to_path_buf(), Journal::beside(&archive_path))?;
+    daemon.set_executors(executors);
+    let port = daemon.port();
+    let server = std::thread::spawn({
+        let archive = Archive::new(&archive_path);
+        let cfg = RunConfig {
+            repeats: 1,
+            iterations: 1,
+            warmup: 0,
+            artifacts: dir.path().to_path_buf(),
+            ..Default::default()
+        };
+        move || daemon.run(suite, archive, cfg)
+    });
+
+    // The global sketch never resets; bracketing snapshots isolate the
+    // waits this storm recorded.
+    let before = metrics::global().queue_wait.snapshot();
+    let t0 = Instant::now();
+    let mut ids = Vec::new();
+    for k in 0..STORM {
+        ids.push(service::submit(port, quick_spec(k))?);
+    }
+    for id in &ids {
+        let (view, _) = service::fetch_result(port, id, true, 300)?;
+        anyhow::ensure!(view.req_str("status")? == "done", "{id} did not complete");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let after = metrics::global().queue_wait.snapshot();
+
+    service::shutdown(port)?;
+    server.join().unwrap()?;
+
+    let delta: [u64; 64] = std::array::from_fn(|i| after[i] - before[i]);
+    let p50 = Sketch::quantile_of(&delta, 0.50) as f64 / 1e6;
+    let p99 = Sketch::quantile_of(&delta, 0.99) as f64 / 1e6;
+    Ok((p50, p99, wall))
+}
+
+fn main() -> anyhow::Result<()> {
+    let (p50_1, p99_1, wall_1) = storm(1)?;
+    let (p50_4, p99_4, wall_4) = storm(4)?;
+
+    let mut t = Table::new(
+        format!("Daemon queue wait under a {STORM}-job submit storm"),
+        &["executors", "queue p50", "queue p99", "drain wall"],
+    );
+    for (e, p50, p99, wall) in [(1, p50_1, p99_1, wall_1), (4, p50_4, p99_4, wall_4)] {
+        t.row(vec![
+            e.to_string(),
+            format!("{:.1}ms", p50 * 1e3),
+            format!("{:.1}ms", p99 * 1e3),
+            format!("{:.2}s", wall),
+        ]);
+    }
+    print!("{}", t.render());
+
+    let json = Json::obj(vec![
+        ("jobs", Json::num(STORM as f64)),
+        ("executors_baseline", Json::num(1.0)),
+        ("executors_scaled", Json::num(4.0)),
+        ("queue_p50_1x_s", Json::num(p50_1)),
+        ("queue_p99_1x_s", Json::num(p99_1)),
+        ("queue_p50_4x_s", Json::num(p50_4)),
+        ("queue_p99_4x_s", Json::num(p99_4)),
+        ("drain_wall_1x_s", Json::num(wall_1)),
+        ("drain_wall_4x_s", Json::num(wall_4)),
+        ("p99_4x_over_1x", Json::num(p99_4 / p99_1.max(1e-12))),
+    ]);
+    std::fs::write("BENCH_service.json", json.to_json_pretty())?;
+    eprintln!("wrote BENCH_service.json");
+    if p99_4 >= p99_1 {
+        eprintln!(
+            "warning: 4 executors (queue p99 {p99_4:.4}s) did not beat 1 ({p99_1:.4}s) on \
+             this host — per-job runtime may be too small to build a backlog here"
+        );
+    }
+    Ok(())
+}

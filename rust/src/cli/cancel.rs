@@ -1,0 +1,28 @@
+//! `xbench cancel` — cancel a daemon job.
+//!
+//! A claimable (`pending`/`interrupted`) job settles `canceled`
+//! immediately; a `running` job is flagged and stops cooperatively at
+//! its next bench-item boundary — if it finishes first, completion
+//! wins and the job stays `done`. Canceling an already-settled job is
+//! idempotent: the daemon just reports the final status again, so a
+//! cancel racing a completion is normal traffic, never an error.
+
+use anyhow::Result;
+
+use crate::service;
+
+pub fn cmd(port: u16, job: &str) -> Result<()> {
+    let resp = service::cancel(port, job)?;
+    let status = resp.req_str("status")?;
+    let flagged =
+        resp.get("cancel_requested").and_then(|b| b.as_bool()).unwrap_or(false);
+    if flagged {
+        eprintln!(
+            "{job} is running; cancel requested — it stops at its next item \
+             boundary (check `xbench queue --port {port}`)"
+        );
+    } else {
+        eprintln!("{job}: {status}");
+    }
+    Ok(())
+}

@@ -12,15 +12,16 @@
 //!   `synth-artifacts`): need the manifest/artifacts but no device;
 //! - **executing** (`run`, `breakdown`, `compare-compiler`, `sweep`,
 //!   `optim`, `ci`, `train`): bring up the PJRT device and dispatch;
-//! - **service** (`serve`, `submit`, `queue`, `result`, `stats`): the
-//!   resident benchmark daemon and its clients — `serve` owns its
-//!   device on the executor thread, the clients only speak localhost
-//!   TCP (`docs/SERVICE.md`);
+//! - **service** (`serve`, `submit`, `queue`, `result`, `cancel`,
+//!   `stats`): the resident benchmark daemon and its clients — `serve`
+//!   owns its devices on the executor threads, the clients only speak
+//!   localhost TCP (`docs/SERVICE.md`);
 //! - **observability** (`trace`, plus `run --trace`): the flight
 //!   recorder — record a run's structured spans, export them as a
 //!   Chrome trace (`docs/METHODOLOGY.md`).
 
 pub mod breakdown;
+pub mod cancel;
 pub mod ci;
 pub mod cmp;
 pub mod compare_compiler;
@@ -86,6 +87,7 @@ pub const VERBS: &[(&str, &str)] = &[
     ("submit", "enqueue a run/sweep/ci job on the daemon"),
     ("queue", "daemon job queue status"),
     ("result", "fetch a completed daemon job's results"),
+    ("cancel", "cancel a queued or running daemon job"),
     ("stats", "daemon health counters and latency quantiles"),
     ("trace", "flight recorder: record a traced run / export a Chrome trace"),
     ("lint", "measurement-integrity lint over the crate's own source"),
@@ -154,17 +156,31 @@ ARCHIVE QUERIES (read the --archive JSONL; no artifacts needed):
 BENCHMARK SERVICE (resident daemon; see docs/SERVICE.md):
   serve             run the daemon      [--port N] [--stop] [--fresh]
                                         [--retain-days N]
+                                        [--executors N] [--queue-cap N]
                     (replays the queue.jsonl job journal on start;
                      --fresh discards it instead; clean shutdown
                      compacts it, dropping settled jobs older than
-                     --retain-days [default 14])
+                     --retain-days [default 14]; --executors runs N
+                     concurrent executor threads [default 1];
+                     --queue-cap refuses submits past N claimable
+                     jobs with `rejected: queue full` [0 = unbounded])
   submit [VERB]     enqueue a job (VERB: run|sweep|ci; default run)
                                         [--mode ..] [--compiler ..] [--batch N]
                                         [--jobs N] [--note TEXT] [--run-id ID]
                                         [--baseline RUN] [--gate point|stat] [--port N]
+                                        [--priority high|normal|low]
+                                        [--timeout-secs S] [--client NAME]
+                    (priority steers claim order only; same-priority
+                     jobs round-robin across --client names; a job past
+                     its --timeout-secs budget settles `timed_out` at
+                     the next item boundary)
   queue             job queue status    [--port N]
                     (shows per-job queue-wait and exec latency once started)
   result <JOB>      fetch job results   [--wait] [--timeout SECS] [--port N]
+  cancel <JOB>      cancel a job        [--port N]
+                    (pending jobs settle `canceled` now; running jobs
+                     stop at the next item boundary — completion wins
+                     the race; canceling a settled job is idempotent)
   stats             daemon health counters & latency quantiles
                                         [--prom] [--port N]
 
@@ -435,10 +451,16 @@ pub fn main() -> Result<()> {
                 retain_days >= 0.0 && retain_days.is_finite(),
                 "--retain-days must be a non-negative number of days"
             );
+            let executors = args.get_usize("executors", 1)?;
+            anyhow::ensure!(executors >= 1, "--executors must be at least 1");
+            let queue_cap = args.get_usize("queue-cap", 0)?;
             args.finish()?;
             let suite = Suite::new(Manifest::load(&artifacts)?);
             let retain_secs = (retain_days * 86_400.0) as u64;
-            serve::cmd(artifacts, archive, base_cfg, suite, port, fresh, retain_secs)
+            serve::cmd(
+                artifacts, archive, base_cfg, suite, port, fresh, retain_secs, executors,
+                queue_cap,
+            )
         }
         "submit" => {
             let port = parse_port(&mut args)?;
@@ -456,6 +478,12 @@ pub fn main() -> Result<()> {
             let timeout = args.get_u64("timeout", 0)?;
             args.finish()?;
             result::cmd(port, csv_dir.as_deref(), &job, wait, timeout)
+        }
+        "cancel" => {
+            let port = parse_port(&mut args)?;
+            let job = args.positional("job-id")?;
+            args.finish()?;
+            cancel::cmd(port, &job)
         }
         "stats" => {
             let port = parse_port(&mut args)?;

@@ -2,10 +2,17 @@
 //!
 //! Binds a localhost TCP socket and serves the JSON-lines job protocol
 //! (`docs/SERVICE.md`): `submit` enqueues `run`/`sweep`/`ci` jobs,
-//! `queue` reports status, `result` fetches reassembled results.
-//! Completed jobs append to the same [`crate::store::Archive`] the
-//! one-shot verbs record into, so `cmp`/`rank`/`history` query daemon
-//! output with zero new result formats.
+//! `queue` reports status, `result` fetches reassembled results,
+//! `cancel` stops a job. Completed jobs append to the same
+//! [`crate::store::Archive`] the one-shot verbs record into, so
+//! `cmp`/`rank`/`history` query daemon output with zero new result
+//! formats.
+//!
+//! `--executors N` runs N concurrent executor threads (default 1),
+//! each with its own device + artifact store, claiming jobs under the
+//! priority + client-fair scheduler; `--queue-cap C` bounds the
+//! claimable backlog — submissions past it are refused loudly
+//! (`rejected: queue full`) instead of queueing without bound.
 //!
 //! The job queue is durable: transitions are journaled to
 //! `queue.jsonl` beside the archive and replayed at startup (crashed
@@ -27,6 +34,7 @@ use crate::service::Daemon;
 use crate::store::{Archive, Journal};
 use crate::suite::Suite;
 
+#[allow(clippy::too_many_arguments)]
 pub fn cmd(
     artifacts: PathBuf,
     archive: Archive,
@@ -35,10 +43,14 @@ pub fn cmd(
     port: u16,
     fresh: bool,
     retain_secs: u64,
+    executors: usize,
+    queue_cap: usize,
 ) -> Result<()> {
     let journal = Journal::beside(archive.path());
     let mut daemon = Daemon::bind(port, artifacts, journal)?;
     daemon.set_fresh(fresh);
     daemon.set_retention_secs(retain_secs);
+    daemon.set_executors(executors);
+    daemon.set_queue_cap(queue_cap);
     daemon.run(suite, archive, base_cfg)
 }

@@ -6,7 +6,7 @@
 use anyhow::Result;
 
 use crate::config::RunConfig;
-use crate::service::{self, JobSpec, JobVerb};
+use crate::service::{self, JobSpec, JobVerb, Priority};
 use crate::util::Args;
 
 pub fn cmd(args: &mut Args, base_cfg: &RunConfig, port: u16) -> Result<()> {
@@ -33,6 +33,16 @@ pub fn cmd(args: &mut Args, base_cfg: &RunConfig, port: u16) -> Result<()> {
         run_id: args.get_opt("run-id")?,
         baseline: args.get_opt("baseline")?,
         gate: args.get_opt("gate")?,
+        // Scheduling knobs (proto v5): claim order, wall-clock budget,
+        // fairness key — none of them touch the measurement protocol.
+        priority: Priority::parse(&args.get_str("priority", "normal")?)?,
+        timeout_secs: match args.get_opt("timeout-secs")? {
+            Some(t) => {
+                Some(t.parse().map_err(|e| anyhow::anyhow!("--timeout-secs: {e}"))?)
+            }
+            None => None,
+        },
+        client: args.get_str("client", "")?,
     };
     anyhow::ensure!(
         spec.baseline.is_none() || spec.verb == JobVerb::Ci,

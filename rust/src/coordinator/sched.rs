@@ -32,11 +32,44 @@
 
 use anyhow::Result;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, PoisonError};
 
 use crate::report::Progress;
 use crate::runtime::ArtifactStore;
 use crate::util::Args;
+
+/// A cooperative interruption handle consulted at bench-item boundaries.
+///
+/// The daemon's `cancel` verb and per-job wall-clock timeouts both work
+/// through this seam: the closure is polled *between* worklist items —
+/// never inside one — so an interrupted fan-out stops at the next item
+/// boundary without ever perturbing a timed region. `check()` returning
+/// `Some(reason)` stops the fan-out; the reason surfaces in the error
+/// (`"<what> interrupted: <reason>"`). A fired check must keep firing
+/// (the flag stays set), so the post-fan-out sweep sees it too.
+#[derive(Clone, Default)]
+pub struct Interrupt(Option<Arc<dyn Fn() -> Option<&'static str> + Send + Sync>>);
+
+impl Interrupt {
+    /// Never fires — the default for one-shot CLI runs.
+    pub const NONE: Interrupt = Interrupt(None);
+
+    /// Arm an interruption check (e.g. a cancel flag + deadline probe).
+    pub fn armed(f: impl Fn() -> Option<&'static str> + Send + Sync + 'static) -> Interrupt {
+        Interrupt(Some(Arc::new(f)))
+    }
+
+    /// Poll the check; `Some(reason)` means stop at this item boundary.
+    pub fn check(&self) -> Option<&'static str> {
+        self.0.as_ref().and_then(|f| f())
+    }
+}
+
+impl std::fmt::Debug for Interrupt {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(if self.0.is_some() { "Interrupt(armed)" } else { "Interrupt(none)" })
+    }
+}
 
 /// One shard of a deterministically partitioned worklist: `--shard I/M`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -92,11 +125,15 @@ pub struct ExecOpts {
     /// Abort on the first failing config instead of collecting errors
     /// and finishing the rest of the worklist.
     pub fail_fast: bool,
+    /// Cooperative cancellation/timeout check, polled at item
+    /// boundaries ([`Interrupt::NONE`] for one-shot CLI runs).
+    pub interrupt: Interrupt,
 }
 
 impl ExecOpts {
     /// Serial, unsharded, collect-errors — the pre-scheduler behavior.
-    pub const SERIAL: ExecOpts = ExecOpts { jobs: 1, shard: None, fail_fast: false };
+    pub const SERIAL: ExecOpts =
+        ExecOpts { jobs: 1, shard: None, fail_fast: false, interrupt: Interrupt::NONE };
 
     /// Parse `--jobs N`, `--shard I/M`, `--fail-fast` from a command
     /// line (shared by the `run`, `sweep`, and `ci` verbs). An omitted
@@ -108,7 +145,12 @@ impl ExecOpts {
             Some(s) => Some(ShardSpec::parse(&s)?),
             None => None,
         };
-        Ok(ExecOpts { jobs, shard, fail_fast: args.has("fail-fast") })
+        Ok(ExecOpts {
+            jobs,
+            shard,
+            fail_fast: args.has("fail-fast"),
+            interrupt: Interrupt::NONE,
+        })
     }
 }
 
@@ -225,6 +267,10 @@ where
     if jobs <= 1 {
         // Serial path: caller's store, caller's thread, worklist order.
         for &seq in &work {
+            // Cancellation checkpoint: between items, never inside one.
+            if let Some(reason) = opts.interrupt.check() {
+                anyhow::bail!("{what} interrupted: {reason}");
+            }
             match traced_item(&labels[seq], || f(store, &items[seq])) {
                 Ok(t) => {
                     progress.tick(&labels[seq], "ok");
@@ -255,7 +301,8 @@ where
         let sink: Mutex<(Vec<(usize, T)>, Vec<SchedError>)> =
             Mutex::new((Vec::new(), Vec::new()));
         pool.scoped_fanout(jobs, |wstore| loop {
-            if stop.load(Ordering::Relaxed) {
+            // Cancellation checkpoint: between items, never inside one.
+            if stop.load(Ordering::Relaxed) || opts.interrupt.check().is_some() {
                 break;
             }
             // The shared queue: claiming an index is the steal, so
@@ -268,14 +315,14 @@ where
             match traced_item(&labels[seq], || f(wstore, &items[seq])) {
                 Ok(t) => {
                     progress.tick(&labels[seq], "ok");
-                    sink.lock().unwrap().0.push((seq, t));
+                    sink.lock().unwrap_or_else(PoisonError::into_inner).0.push((seq, t));
                 }
                 Err(e) => {
                     progress.tick(&labels[seq], "FAILED");
                     if opts.fail_fast {
                         stop.store(true, Ordering::Relaxed);
                     }
-                    sink.lock().unwrap().1.push(SchedError {
+                    sink.lock().unwrap_or_else(PoisonError::into_inner).1.push(SchedError {
                         seq,
                         label: labels[seq].clone(),
                         message: format!("{e:#}"),
@@ -284,9 +331,15 @@ where
             }
         })
         .map_err(|e| e.context(format!("{what}: pool fan-out")))?;
-        let (c, e) = sink.into_inner().unwrap();
+        let (c, e) = sink.into_inner().unwrap_or_else(PoisonError::into_inner);
         completed = c;
         errors = e;
+    }
+    // A fired interrupt wins over partial results: the fan-out stopped
+    // at an item boundary, so downstream must not record a truncated
+    // worklist as if it completed.
+    if let Some(reason) = opts.interrupt.check() {
+        anyhow::bail!("{what} interrupted: {reason}");
     }
 
     // Reassemble: downstream consumers (tables, gate, archive) must see
@@ -436,6 +489,63 @@ mod tests {
                 .unwrap_err();
             assert!(format!("{err:#}").contains("planted failure"), "{err:#}");
         }
+    }
+
+    #[test]
+    fn interrupt_stops_at_item_boundaries() {
+        use std::sync::atomic::AtomicUsize;
+        let items: Vec<usize> = (0..8).collect();
+        let store = test_store();
+        // Fires after the second item has run: the serial loop must
+        // stop at the next boundary and surface the reason.
+        let ran = Arc::new(AtomicUsize::new(0));
+        let f = {
+            let ran = ran.clone();
+            move |_: &ArtifactStore, i: &usize| -> Result<usize> {
+                ran.fetch_add(1, Ordering::SeqCst);
+                Ok(*i)
+            }
+        };
+        let flag = Arc::new(AtomicBool::new(false));
+        let opts = ExecOpts {
+            interrupt: Interrupt::armed({
+                let ran = ran.clone();
+                let flag = flag.clone();
+                move || {
+                    if flag.load(Ordering::SeqCst) || ran.load(Ordering::SeqCst) >= 2 {
+                        flag.store(true, Ordering::SeqCst);
+                        Some("canceled")
+                    } else {
+                        None
+                    }
+                }
+            }),
+            ..ExecOpts::SERIAL
+        };
+        let err = run_partitioned(&opts, &store, &items, &labels(8), "t", &f).unwrap_err();
+        assert!(format!("{err:#}").contains("t interrupted: canceled"), "{err:#}");
+        assert_eq!(ran.load(Ordering::SeqCst), 2, "stopped at the item boundary");
+
+        // A never-firing interrupt is a no-op, serial and parallel.
+        for jobs in [1, 3] {
+            let opts = ExecOpts {
+                jobs,
+                interrupt: Interrupt::armed(|| None),
+                ..ExecOpts::SERIAL
+            };
+            let out = run_partitioned(&opts, &store, &items, &labels(8), "t", &f).unwrap();
+            assert_eq!(out.completed.len(), 8);
+        }
+
+        // An already-fired interrupt runs nothing at all.
+        let pre = ExecOpts {
+            interrupt: Interrupt::armed(|| Some("timed out")),
+            ..ExecOpts::SERIAL
+        };
+        let before = ran.load(Ordering::SeqCst);
+        let err = run_partitioned(&pre, &store, &items, &labels(8), "t", &f).unwrap_err();
+        assert!(format!("{err:#}").contains("timed out"), "{err:#}");
+        assert_eq!(ran.load(Ordering::SeqCst), before);
     }
 
     #[test]

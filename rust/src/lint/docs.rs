@@ -1,15 +1,21 @@
 //! docs-drift: the CLI surface, the USAGE screen, and `docs/CLI.md`
-//! must describe the same verb set in the same order.
+//! must describe the same verb set in the same order — and the service
+//! protocol's `JOB_STATES` must match the `docs/SERVICE.md` state
+//! table.
 //!
 //! This absorbs (and extends) the `tests/cli_docs.rs` drift check as a
 //! lint rule: the dispatch table `cli::VERBS` is the source of truth;
 //! every entry needs a USAGE line and a `` ## `verb` `` section in
 //! `docs/CLI.md` containing an `xbench <verb>` synopsis; stale or
-//! out-of-order sections are findings.
+//! out-of-order sections are findings. [`check_job_states`] does the
+//! same for job states: `service/protocol.rs::JOB_STATES` is the
+//! source of truth, and the table under the
+//! `<!-- lint:job-states -->` marker in `docs/SERVICE.md` must list
+//! exactly those states, in lifecycle order.
 //!
-//! Findings anchored in source point into `cli/mod.rs`; findings about
-//! the markdown itself carry the fixed label `docs/CLI.md` (the rule
-//! reads exactly one markdown file, addressed via `--docs`).
+//! Findings anchored in source point into the scanned file; findings
+//! about the markdown itself carry the fixed labels `docs/CLI.md` /
+//! `docs/SERVICE.md` (the rule reads those exact files under `--docs`).
 
 use super::pragma::Directives;
 use super::rules::DOCS;
@@ -135,6 +141,141 @@ pub fn check(
     }
 }
 
+/// Label used for findings anchored in the service markdown file.
+const SERVICE_DOC_LABEL: &str = "docs/SERVICE.md";
+
+/// Marker line preceding the job-state table in `docs/SERVICE.md`.
+const STATE_TABLE_MARKER: &str = "<!-- lint:job-states -->";
+
+/// Drift check between `service/protocol.rs::JOB_STATES` and the
+/// `docs/SERVICE.md` state table. The table is addressed by the
+/// [`STATE_TABLE_MARKER`] comment directly above it (other tables in
+/// the file may legitimately backtick state-like words); its rows must
+/// name exactly the `JOB_STATES`, in the same (lifecycle) order.
+pub fn check_job_states(
+    rel: &str,
+    toks: &[Tok],
+    dirs: &Directives,
+    docs_dir: &Path,
+    findings: &mut Vec<Finding>,
+) {
+    let states = parse_states(toks);
+    if states.is_empty() {
+        return; // fixture trees without a protocol module are legal
+    }
+    let mut emit = |file: &str, line: u32, col: u32, message: String| {
+        if file == rel && dirs.suppresses(DOCS, line) {
+            return;
+        }
+        findings.push(Finding { file: file.to_string(), line, col, rule: DOCS, message });
+    };
+
+    let (anchor_line, anchor_col) = states[0].pos;
+    let doc_path = docs_dir.join("SERVICE.md");
+    let doc_text = match std::fs::read_to_string(&doc_path) {
+        Ok(t) => t,
+        Err(_) => {
+            emit(
+                rel,
+                anchor_line,
+                anchor_col,
+                format!(
+                    "docs/SERVICE.md not found under {} — {} job states undocumented",
+                    docs_dir.display(),
+                    states.len()
+                ),
+            );
+            return;
+        }
+    };
+
+    let Some((marker_line, documented)) = parse_state_table(&doc_text) else {
+        emit(
+            rel,
+            anchor_line,
+            anchor_col,
+            format!(
+                "docs/SERVICE.md has no `{STATE_TABLE_MARKER}` marker above its \
+                 job-state table"
+            ),
+        );
+        return;
+    };
+
+    let want: Vec<&str> = states.iter().map(|s| s.name.as_str()).collect();
+    let got: Vec<&str> = documented.iter().map(|s| s.as_str()).collect();
+    if want != got {
+        emit(
+            SERVICE_DOC_LABEL,
+            marker_line,
+            1,
+            format!(
+                "job-state table drifted from protocol.rs JOB_STATES: \
+                 documented [{}], dispatched [{}]",
+                got.join(", "),
+                want.join(", ")
+            ),
+        );
+    }
+}
+
+struct State {
+    name: String,
+    pos: (u32, u32),
+}
+
+/// The string literals of the `JOB_STATES` const, in declaration order.
+fn parse_states(toks: &[Tok]) -> Vec<State> {
+    let Some(start) = toks
+        .iter()
+        .position(|t| t.kind == Kind::Ident && t.text == "JOB_STATES" && !t.in_test)
+    else {
+        return Vec::new();
+    };
+    let Some(eq) = toks[start..].iter().position(|t| t.kind == Kind::Punct && t.text == "=")
+    else {
+        return Vec::new();
+    };
+    toks[start + eq..]
+        .iter()
+        .take_while(|t| !(t.kind == Kind::Punct && t.text == ";"))
+        .filter(|t| t.kind == Kind::Str)
+        .map(|t| State { name: t.text.clone(), pos: (t.line, t.col) })
+        .collect()
+}
+
+/// Find the marked state table: the marker's 1-based line plus the
+/// backticked first-column entries of the table rows that follow
+/// (header and `---` separator rows are skipped; the first non-table
+/// line ends it). `None` when the marker is absent.
+fn parse_state_table(text: &str) -> Option<(u32, Vec<String>)> {
+    let mut lines = text.lines().enumerate();
+    let (marker_idx, _) =
+        lines.find(|(_, l)| l.trim() == STATE_TABLE_MARKER)?;
+    let mut states = Vec::new();
+    for (_, line) in lines {
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            if states.is_empty() {
+                continue; // blank line between marker and table
+            }
+            break;
+        }
+        if !trimmed.starts_with('|') {
+            break;
+        }
+        if let Some(name) = trimmed
+            .trim_start_matches('|')
+            .trim_start()
+            .strip_prefix('`')
+            .and_then(|r| r.split('`').next())
+        {
+            states.push(name.to_string());
+        }
+    }
+    Some((marker_idx as u32 + 1, states))
+}
+
 struct Verb {
     name: String,
     pos: (u32, u32),
@@ -186,6 +327,25 @@ struct Section {
     name: String,
     line: u32,
     body: String,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_table_parses_rows_under_the_marker() {
+        let md = "intro\n\n<!-- lint:job-states -->\n\n\
+                  | state | meaning |\n\
+                  |---|---|\n\
+                  | `pending` | waiting |\n\
+                  | `running` | claimed |\n\
+                  \nafter `done` mention that must not count\n";
+        let (line, states) = parse_state_table(md).unwrap();
+        assert_eq!(line, 3);
+        assert_eq!(states, vec!["pending".to_string(), "running".to_string()]);
+        assert!(parse_state_table("no marker here").is_none());
+    }
 }
 
 /// Split `CLI.md` into `` ## `verb` `` sections (1-based heading line,

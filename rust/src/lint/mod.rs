@@ -80,6 +80,9 @@ pub fn run(opts: &Options) -> Result<Vec<Finding>> {
         if selected(rules::DOCS) && rel == "cli/mod.rs" {
             docs::check(rel, &toks, &dirs, &opts.docs, &mut findings);
         }
+        if selected(rules::DOCS) && rel == "service/protocol.rs" {
+            docs::check_job_states(rel, &toks, &dirs, &opts.docs, &mut findings);
+        }
         if selected(rules::PRAGMA) {
             // Last per file: every other rule has marked its pragmas used.
             rules::pragma_hygiene(&ctx, &selected, &mut findings);
@@ -213,6 +216,21 @@ mod tests {
         let f = lint_str("service/daemon.rs", "fn f() { m.lock().unwrap(); }");
         assert_eq!(f.len(), 1);
         assert_eq!(f[0].rule, rules::PANIC);
+    }
+
+    #[test]
+    fn panic_rule_covers_scheduler_and_fault_seams() {
+        // Executors run jobs through coordinator/sched.rs, and
+        // service/faults.rs sits on the durability seams — a panic in
+        // either unwinds an executor thread mid-job.
+        for rel in ["coordinator/sched.rs", "service/faults.rs"] {
+            let f = lint_str(rel, "fn f() { m.lock().unwrap(); }");
+            assert_eq!(f.len(), 1, "{rel}: {f:?}");
+            assert_eq!(f[0].rule, rules::PANIC);
+        }
+        assert!(lint_str("coordinator/runner.rs", "fn f() { m.lock().unwrap(); }")
+            .iter()
+            .all(|f| f.rule != rules::PANIC));
     }
 
     #[test]

@@ -25,8 +25,8 @@ pub const RULES: &[(&str, &str)] = &[
     (REGION, "timed-region markers in coordinator/runner.rs; no IO/printing/spans/extra clocks inside"),
     (RECORD, "append_jsonl/OpenOptions/File::create/fs::write only under store/"),
     (RENDER, "no HashMap/HashSet in render paths (report_out/, obs/chrome.rs, cli/)"),
-    (PANIC, "no .unwrap()/.expect( in service/ outside #[cfg(test)]"),
-    (DOCS, "every cli::VERBS entry has a USAGE line and a docs/CLI.md section, in order"),
+    (PANIC, "no .unwrap()/.expect( in service/ or coordinator/sched.rs outside #[cfg(test)]"),
+    (DOCS, "CLI verbs match docs/CLI.md; protocol JOB_STATES match the docs/SERVICE.md table"),
     (PRAGMA, "pragmas must parse, name a known rule, carry a reason, and suppress something"),
 ];
 
@@ -292,7 +292,11 @@ fn deterministic_render(ctx: &FileCtx, code: &[&Tok], findings: &mut Vec<Finding
 }
 
 fn no_panic_in_daemon(ctx: &FileCtx, code: &[&Tok], findings: &mut Vec<Finding>) {
-    if !ctx.rel.starts_with("service/") {
+    // service/ covers the daemon, its scheduler, and the fault-injection
+    // seams (faults.rs); coordinator/sched.rs is in scope because the
+    // executors run jobs through it — a panic there unwinds an executor
+    // thread mid-job.
+    if !(ctx.rel.starts_with("service/") || ctx.rel == "coordinator/sched.rs") {
         return;
     }
     for i in 0..code.len() {

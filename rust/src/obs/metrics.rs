@@ -44,10 +44,23 @@ impl Sketch {
         self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
     }
 
+    /// A point-in-time copy of the bucket counts. Subtracting two
+    /// snapshots isolates the samples recorded in between — the global
+    /// registry never resets, so windowed views (benches comparing two
+    /// phases in one process) diff snapshots instead.
+    pub fn snapshot(&self) -> [u64; 64] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
     /// The upper bound (µs) of the bucket holding quantile `q` in
     /// `[0, 1]`; 0 when the sketch is empty.
     pub fn quantile_us(&self, q: f64) -> u64 {
-        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        Self::quantile_of(&self.snapshot(), q)
+    }
+
+    /// Quantile over raw bucket counts — the same walk `quantile_us`
+    /// does, usable on a snapshot delta.
+    pub fn quantile_of(counts: &[u64; 64], q: f64) -> u64 {
         let total: u64 = counts.iter().sum();
         if total == 0 {
             return 0;
@@ -76,8 +89,18 @@ pub struct Metrics {
     pub archive_appends: AtomicU64,
     /// Microseconds the daemon executor spent running jobs.
     pub busy_us: AtomicU64,
+    /// Submissions refused at admission (`rejected: queue full`).
+    pub jobs_rejected: AtomicU64,
+    /// Cancel requests that settled a job (`canceled`).
+    pub jobs_canceled: AtomicU64,
+    /// Jobs stopped by their wall-clock budget (`timed_out`).
+    pub jobs_timed_out: AtomicU64,
     /// Queue-wait latency per claimed job (submit → claim).
     pub queue_wait: Sketch,
+    /// Queue-wait latency split by priority class, indexed in
+    /// [`crate::service::protocol::Priority::ALL`] order
+    /// (high, normal, low).
+    pub queue_wait_class: [Sketch; 3],
     /// Execution latency per settled job (claim → done/failed).
     pub exec: Sketch,
 }
@@ -124,10 +147,21 @@ const PROM_HELP: &[(&str, &str)] = &[
     ("jobs_done", "Jobs completed successfully."),
     ("jobs_failed", "Jobs that errored (including a second interruption)."),
     ("jobs_abandoned", "Jobs drained unrun at daemon shutdown."),
+    ("jobs_canceled", "Jobs settled by a client cancel."),
+    ("jobs_timed_out", "Jobs stopped by their wall-clock budget."),
+    ("jobs_rejected_total", "Submissions refused at admission (queue full)."),
     ("job_interruptions_total", "Total crash interruptions across all jobs."),
     ("queue_depth", "Claimable jobs (pending + interrupted)."),
+    ("executors", "Executor threads serving this daemon."),
+    ("queue_cap", "Admission cap on claimable jobs (0 = unbounded)."),
     ("queue_wait_p50_s", "Median submit-to-claim latency in seconds (log2 sketch, <=2x error)."),
     ("queue_wait_p99_s", "p99 submit-to-claim latency in seconds (log2 sketch, <=2x error)."),
+    ("queue_wait_high_p50_s", "Median submit-to-claim latency, high-priority jobs (seconds)."),
+    ("queue_wait_high_p99_s", "p99 submit-to-claim latency, high-priority jobs (seconds)."),
+    ("queue_wait_normal_p50_s", "Median submit-to-claim latency, normal-priority jobs (seconds)."),
+    ("queue_wait_normal_p99_s", "p99 submit-to-claim latency, normal-priority jobs (seconds)."),
+    ("queue_wait_low_p50_s", "Median submit-to-claim latency, low-priority jobs (seconds)."),
+    ("queue_wait_low_p99_s", "p99 submit-to-claim latency, low-priority jobs (seconds)."),
     ("exec_p50_s", "Median claim-to-settled latency in seconds (log2 sketch, <=2x error)."),
     ("exec_p99_s", "p99 claim-to-settled latency in seconds (log2 sketch, <=2x error)."),
     ("executor_busy_fraction", "Fraction of uptime the executor spent running jobs."),

@@ -4,15 +4,87 @@
 //! reads one JSON line back, and translates `{"ok": false}` responses
 //! into `Err` — so the CLI verbs (`submit`/`queue`/`result`,
 //! `serve --stop`) never see protocol plumbing.
+//!
+//! I/O timeouts are configurable via `XBENCH_CLIENT_TIMEOUT_SECS`
+//! (default 30s) for daemons busy enough that a response takes a
+//! while. Queue-facing helpers ([`submit`], [`queue_status`],
+//! [`fetch_result`], [`cancel`], [`stats`]) additionally retry a
+//! connection-refused failure a bounded number of times with seeded
+//! jittered backoff — a daemon mid-restart (CI brings it up in the
+//! background) looks exactly like that. [`ping`] and [`shutdown`]
+//! never retry: probing liveness and stopping a daemon must report
+//! the first answer, not paper over it.
 
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::OnceLock;
 use std::time::Duration;
 
 use crate::util::Json;
 
 use super::protocol::{JobSpec, Request};
+
+/// Read/write timeout for one daemon conversation
+/// (`XBENCH_CLIENT_TIMEOUT_SECS`, default 30, floor 1; malformed
+/// values fall back to the default). Read once per process.
+fn io_timeout() -> Duration {
+    static TIMEOUT: OnceLock<Duration> = OnceLock::new();
+    *TIMEOUT.get_or_init(|| {
+        let secs = std::env::var("XBENCH_CLIENT_TIMEOUT_SECS")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .unwrap_or(30)
+            .max(1);
+        Duration::from_secs(secs)
+    })
+}
+
+/// Connect timeout: snappy by default, but never longer than the
+/// configured I/O timeout (a 1s budget means 1s total, not 3+1).
+fn connect_timeout() -> Duration {
+    Duration::from_secs(3).min(io_timeout())
+}
+
+/// Retry budget for transient connect failures: total attempts,
+/// including the first.
+const RETRY_ATTEMPTS: u32 = 3;
+
+/// Only a refused connection is transient (daemon restarting, not yet
+/// listening). Anything else — timeout, protocol error, daemon error
+/// response — is a real answer and surfaces immediately.
+fn is_transient(e: &anyhow::Error) -> bool {
+    e.root_cause()
+        .downcast_ref::<std::io::Error>()
+        .map_or(false, |io| io.kind() == std::io::ErrorKind::ConnectionRefused)
+}
+
+/// [`request`] with the bounded retry policy: up to [`RETRY_ATTEMPTS`]
+/// tries, exponential backoff (100ms, 200ms, …) plus seeded jitter so
+/// a storm of clients retrying against one restarting daemon doesn't
+/// arrive in lockstep.
+fn request_retry(port: u16, req: &Request) -> Result<Json> {
+    let mut rng =
+        crate::util::rng::Rng::seed_from_name("client-retry", std::process::id() as u64);
+    let mut attempt = 0u32;
+    loop {
+        match request(port, req) {
+            Ok(v) => return Ok(v),
+            Err(e) if attempt + 1 < RETRY_ATTEMPTS && is_transient(&e) => {
+                let backoff_ms = 100u64 << attempt;
+                let jitter_ms = rng.gen_range(backoff_ms / 2 + 1);
+                attempt += 1;
+                eprintln!(
+                    "daemon connection refused; retry {attempt}/{} in {}ms",
+                    RETRY_ATTEMPTS - 1,
+                    backoff_ms + jitter_ms
+                );
+                std::thread::sleep(Duration::from_millis(backoff_ms + jitter_ms));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
 
 /// Send one request, return the decoded `ok` response body.
 pub fn request(port: u16, req: &Request) -> Result<Json> {
@@ -35,12 +107,12 @@ pub fn request_addr(addr: &str, req: &Request) -> Result<Json> {
 }
 
 fn request_at(addr: SocketAddr, req: &Request) -> Result<Json> {
-    let mut stream = TcpStream::connect_timeout(&addr, Duration::from_secs(3))
+    let mut stream = TcpStream::connect_timeout(&addr, connect_timeout())
         .with_context(|| {
             format!("connecting to the xbench daemon at {addr} (is `xbench serve` running?)")
         })?;
-    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
-    stream.set_write_timeout(Some(Duration::from_secs(30)))?;
+    stream.set_read_timeout(Some(io_timeout()))?;
+    stream.set_write_timeout(Some(io_timeout()))?;
     stream.write_all(req.to_json().to_json().as_bytes())?;
     stream.write_all(b"\n")?;
     stream.flush()?;
@@ -64,20 +136,29 @@ pub fn ping(port: u16) -> Result<Json> {
 
 /// Enqueue a job; returns its id.
 pub fn submit(port: u16, spec: JobSpec) -> Result<String> {
-    Ok(request(port, &Request::Submit(spec))?.req_str("job")?.to_string())
+    Ok(request_retry(port, &Request::Submit(spec))?.req_str("job")?.to_string())
+}
+
+/// Cancel a job; returns its status row fields (`status` is
+/// `"canceled"` for a waiting job, `"running"` with
+/// `cancel_requested` for one the executor will stop cooperatively,
+/// or the terminal state of an already-settled job).
+pub fn cancel(port: u16, job: &str) -> Result<Json> {
+    request_retry(port, &Request::Cancel { job: job.to_string() })
 }
 
 /// Snapshot of every job's status row.
 pub fn queue_status(port: u16) -> Result<Vec<Json>> {
-    Ok(request(port, &Request::Queue)?.req_array("jobs")?.to_vec())
+    Ok(request_retry(port, &Request::Queue)?.req_array("jobs")?.to_vec())
 }
 
 /// Fetch one job: `(status row, result payload when done)`.
 ///
 /// With `wait`, polls until the job settles
-/// ([`super::protocol::is_settled`]: `done`/`failed`/`abandoned`; an
-/// `interrupted` job is still going to be retried, so waiting
-/// continues) or `timeout_secs` elapses (0 = no limit). Each poll is
+/// ([`super::protocol::is_settled`]: `done`/`failed`/`canceled`/
+/// `timed_out`/`abandoned`; an `interrupted` job is still going to be
+/// retried, so waiting continues) or `timeout_secs` elapses (0 = no
+/// limit). Each poll is
 /// its own connection, so a waiting client never ties up the daemon.
 pub fn fetch_result(
     port: u16,
@@ -89,7 +170,7 @@ pub fn fetch_result(
         // xbench-lint: allow(clock-discipline, client-side --wait deadline, nowhere near a timed region)
         .then(|| std::time::Instant::now() + Duration::from_secs(timeout_secs));
     loop {
-        let resp = request(port, &Request::Result { job: job.to_string() })?;
+        let resp = request_retry(port, &Request::Result { job: job.to_string() })?;
         let view = resp.req("job")?.clone();
         let status = view.req_str("status")?;
         let settled = super::protocol::is_settled(status);
@@ -109,7 +190,7 @@ pub fn fetch_result(
 
 /// Snapshot of the daemon's health counters (the `stats` op payload).
 pub fn stats(port: u16) -> Result<Json> {
-    Ok(request(port, &Request::Stats)?.req("stats")?.clone())
+    Ok(request_retry(port, &Request::Stats)?.req("stats")?.clone())
 }
 
 /// Fetch a rendered report from a daemon (`report` op, proto v4).

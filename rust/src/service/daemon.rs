@@ -7,13 +7,31 @@
 //!   thread — a client that connects and never writes must not stall
 //!   `queue`/`result`/`serve --stop` for everyone else (requests are
 //!   cheap queue-state reads/writes; the threads live milliseconds).
-//! - the **executor**: owns the persistent device + [`ArtifactStore`]
-//!   (single-threaded by design — it never crosses threads) plus the
-//!   loaded suite, and drains the job queue one job at a time through
+//! - the **executors** (`serve --executors N`, default 1): each owns
+//!   its *own* persistent device + [`ArtifactStore`] (single-threaded
+//!   by design — neither ever crosses threads) and shares the loaded
+//!   suite; each drains the job queue one job at a time through
 //!   [`super::exec::execute_job`]; parallel fan-out inside a job goes
-//!   through the warm [`crate::pool`]. One job at a time is a feature:
-//!   concurrent benchmark jobs would contend for cores and corrupt
-//!   each other's measurements.
+//!   through the warm [`crate::pool`]. The default of one executor is
+//!   a feature: concurrent benchmark jobs contend for cores and
+//!   corrupt each other's measurements. More executors trade
+//!   measurement isolation for throughput — right for CI smoke
+//!   storms, wrong for flagship numbers (see docs/METHODOLOGY.md).
+//!
+//! # Scheduling & admission
+//!
+//! Claimable jobs are picked highest priority class first
+//! (`submit --priority high|normal|low`), round-robin across clients
+//! inside a class (`submit --client NAME`; one chatty client cannot
+//! starve the rest), oldest first within a client. With
+//! `--queue-cap C` set, a submission that would make more than `C`
+//! jobs claimable is refused loudly (`rejected: queue full`) and
+//! never journaled. A running job is stopped cooperatively at bench
+//! item boundaries when its wall-clock budget expires
+//! (`submit --timeout-secs`, journaled `timed_out`) or a client
+//! cancels it (`xbench cancel`, journaled `canceled`); a waiting job
+//! cancels immediately. None of this touches timed regions: scheduling
+//! happens strictly between jobs and between bench items.
 //!
 //! # Durability
 //!
@@ -49,6 +67,7 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::config::RunConfig;
+use crate::coordinator::Interrupt;
 use crate::runtime::{ArtifactStore, Device};
 use crate::store::journal::{self, JobEvent, ReplayState, ResultSpill, DEFAULT_RETAIN_SECS};
 use crate::store::{Archive, FileLock, Journal};
@@ -57,7 +76,8 @@ use crate::util::Json;
 
 pub use super::exec::JobProgress;
 use super::exec::{execute_job, ExecEnv};
-use super::protocol::{err_response, ok_response, JobSpec, Request, PROTO_VERSION};
+use super::faults;
+use super::protocol::{err_response, ok_response, JobSpec, Priority, Request, PROTO_VERSION};
 use super::unix_now;
 
 /// How long a connection may sit silent before its handler stops
@@ -80,6 +100,12 @@ enum Status {
     Failed(String),
     /// Still waiting when the daemon shut down (terminal).
     Abandoned,
+    /// Stopped at a bench-item boundary by `submit --timeout-secs`
+    /// (terminal).
+    TimedOut,
+    /// Stopped by `xbench cancel` — immediately while waiting,
+    /// cooperatively at a bench-item boundary while running (terminal).
+    Canceled,
 }
 
 impl Status {
@@ -91,6 +117,8 @@ impl Status {
             Status::Done => "done",
             Status::Failed(_) => "failed",
             Status::Abandoned => "abandoned",
+            Status::TimedOut => "timed_out",
+            Status::Canceled => "canceled",
         }
     }
 
@@ -127,6 +155,9 @@ struct JobRecord {
     result_at: Option<(u64, u64)>,
     /// Archive run id for the queue view when the payload is on disk.
     run_id: Option<String>,
+    /// Cooperative cancel flag: set by the `cancel` op on a running
+    /// job, checked by its executor at bench-item boundaries.
+    cancel: Arc<AtomicBool>,
 }
 
 impl JobRecord {
@@ -152,6 +183,11 @@ impl JobRecord {
         }
         if let Status::Failed(e) = &self.status {
             fields.push(("error", Json::str(e)));
+        }
+        if self.status == Status::TimedOut {
+            if let Some(t) = self.spec.timeout_secs {
+                fields.push(("error", Json::str(format!("exceeded --timeout-secs {t}"))));
+            }
         }
         if let Some(run_id) = self.result.as_ref().and_then(|r| r.get("run_id")) {
             fields.push(("run_id", run_id.clone()));
@@ -179,6 +215,17 @@ struct ServiceState {
     /// Next job number — seeded past the journal's highest at startup,
     /// so ids survive restarts. Mutated only under the `jobs` lock.
     next_id: AtomicUsize,
+    /// Executor threads serving the queue (`serve --executors`).
+    executors: AtomicUsize,
+    /// Admission cap on claimable jobs (`serve --queue-cap`, 0 =
+    /// unbounded): a submission that would exceed it is refused with
+    /// `rejected: queue full` and never journaled.
+    queue_cap: AtomicUsize,
+    /// Last client served per priority class (indexed in
+    /// [`Priority::ALL`] order) — the round-robin cursor. Locked only
+    /// while already holding the `jobs` lock (claim path), so the lock
+    /// order is fixed.
+    last_served: Mutex<[String; 3]>,
     /// Archive served by the `report` op. Seeded at bind with the
     /// conventional `<artifacts>/runs.jsonl`; [`Daemon::run`] overwrites
     /// it with the actual archive's path (`--archive`) before the
@@ -217,6 +264,59 @@ impl ServiceState {
     fn lock_archive_path(&self) -> std::sync::MutexGuard<'_, PathBuf> {
         self.archive_path.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
     }
+
+    /// The round-robin cursor, poison-tolerant (plain data — a stale
+    /// cursor only shifts fairness by one turn).
+    fn lock_last_served(&self) -> std::sync::MutexGuard<'_, [String; 3]> {
+        self.last_served.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Claimable (pending + interrupted) jobs in the table. Callers
+    /// hold the `jobs` guard they pass in.
+    fn claimable_depth(jobs: &[JobRecord]) -> usize {
+        jobs.iter().filter(|j| j.status.is_claimable()).count()
+    }
+}
+
+/// Index of a priority class into per-class tables
+/// ([`Priority::ALL`] order: high, normal, low).
+fn class_index(p: Priority) -> usize {
+    match p {
+        Priority::High => 0,
+        Priority::Normal => 1,
+        Priority::Low => 2,
+    }
+}
+
+/// Pick the next job to claim: highest priority class with claimable
+/// jobs, round-robin over that class's clients (sorted, next strictly
+/// after the last-served one, wrapping), oldest job of the chosen
+/// client. Returns the index into `jobs` and advances the cursor.
+fn pick_claimable(jobs: &[JobRecord], last_served: &mut [String; 3]) -> Option<usize> {
+    for p in Priority::ALL {
+        let mut clients: Vec<&str> = jobs
+            .iter()
+            .filter(|j| j.status.is_claimable() && j.spec.priority == p)
+            .map(|j| j.spec.client.as_str())
+            .collect();
+        if clients.is_empty() {
+            continue;
+        }
+        clients.sort_unstable();
+        clients.dedup();
+        let cursor = &mut last_served[class_index(p)];
+        let client = clients
+            .iter()
+            .find(|c| **c > cursor.as_str())
+            .copied()
+            .unwrap_or(clients[0]);
+        let index = jobs.iter().position(|j| {
+            j.status.is_claimable() && j.spec.priority == p && j.spec.client == client
+        })?;
+        *cursor = client.to_string();
+        return Some(index);
+    }
+    None
 }
 
 /// Exclusive ownership of one job journal for a daemon's lifetime.
@@ -334,10 +434,26 @@ impl Daemon {
                 journal,
                 spill,
                 next_id: AtomicUsize::new(1),
+                executors: AtomicUsize::new(1),
+                queue_cap: AtomicUsize::new(0),
+                last_served: Mutex::new(std::array::from_fn(|_| String::new())),
             }),
             fresh: false,
             retain_secs: DEFAULT_RETAIN_SECS,
         })
+    }
+
+    /// Concurrent executor threads (`serve --executors`, clamped to at
+    /// least 1). Each brings up its own device + artifact store.
+    pub fn set_executors(&mut self, n: usize) {
+        self.state.executors.store(n.max(1), Ordering::SeqCst);
+    }
+
+    /// Admission cap on claimable jobs (`serve --queue-cap`; 0 =
+    /// unbounded). Submissions past the cap are refused with
+    /// `rejected: queue full` and never journaled.
+    pub fn set_queue_cap(&mut self, cap: usize) {
+        self.state.queue_cap.store(cap, Ordering::SeqCst);
     }
 
     /// Override the settled-job retention window applied by the
@@ -412,16 +528,47 @@ impl Daemon {
         // path so the `report` op can open a read-only view of it.
         *self.state.lock_archive_path() = archive.path().to_path_buf();
 
-        let state = self.state.clone();
+        let n_executors = self.state.executors.load(Ordering::SeqCst).max(1);
+        let suite = Arc::new(suite);
         let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
-        let executor = std::thread::Builder::new()
-            .name("xbench-executor".into())
-            .spawn(move || executor_loop(state, suite, archive, base_cfg, ready_tx))
-            .context("spawning executor thread")?;
-        match ready_rx.recv() {
-            Ok(Ok(())) => {}
-            Ok(Err(e)) => return Err(e.context("executor: creating device")),
-            Err(_) => anyhow::bail!("executor thread died during startup"),
+        let mut executors = Vec::with_capacity(n_executors);
+        for i in 0..n_executors {
+            let state = self.state.clone();
+            let suite = Arc::clone(&suite);
+            let archive = archive.clone();
+            let base_cfg = base_cfg.clone();
+            let ready_tx = ready_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("xbench-executor-{i}"))
+                .spawn(move || executor_loop(state, suite, archive, base_cfg, ready_tx))
+                .with_context(|| format!("spawning executor thread {i}"))?;
+            executors.push(handle);
+        }
+        drop(ready_tx);
+        // Every executor brings up its own device before the daemon
+        // advertises the port: a failure there fails startup loudly,
+        // not some later job. On failure the healthy executors are
+        // shut down and joined before returning.
+        let mut startup_err: Option<anyhow::Error> = None;
+        for _ in 0..n_executors {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    startup_err.get_or_insert(e.context("executor: creating device"));
+                }
+                Err(_) => {
+                    startup_err
+                        .get_or_insert(anyhow::anyhow!("executor thread died during startup"));
+                }
+            }
+        }
+        if let Some(e) = startup_err {
+            self.state.shutdown.store(true, Ordering::SeqCst);
+            self.state.wake.notify_all();
+            for h in executors {
+                let _ = h.join();
+            }
+            return Err(e);
         }
 
         let Daemon { listener, state, retain_secs, .. } = self;
@@ -479,10 +626,16 @@ impl Daemon {
             }
         }
         state.wake.notify_all();
-        eprintln!("shutdown: waiting for the running job (if any)…");
-        executor
-            .join()
-            .map_err(|_| anyhow::anyhow!("executor thread panicked"))?;
+        eprintln!(
+            "shutdown: waiting for running jobs (if any) across {} executor(s)…",
+            executors.len()
+        );
+        // Every executor finishes (or times out / cancels) its current
+        // job before the daemon compacts and exits — a `--stop` must
+        // never strand a running job's terminal transition.
+        for h in executors {
+            h.join().map_err(|_| anyhow::anyhow!("executor thread panicked"))?;
+        }
         // Clean shutdown owns the journal exclusively and nothing is
         // appending anymore: fold every settled job to a summary line,
         // spill payloads to results.jsonl, drop jobs past retention.
@@ -609,6 +762,14 @@ fn recover(state: &ServiceState) -> Result<()> {
                 restored += 1;
                 Status::Abandoned
             }
+            ReplayState::TimedOut => {
+                restored += 1;
+                Status::TimedOut
+            }
+            ReplayState::Canceled => {
+                restored += 1;
+                Status::Canceled
+            }
         };
         jobs.push(JobRecord {
             id: rj.id,
@@ -623,6 +784,7 @@ fn recover(state: &ServiceState) -> Result<()> {
             result,
             result_at,
             run_id,
+            cancel: Arc::new(AtomicBool::new(false)),
         });
     }
     eprintln!(
@@ -632,10 +794,12 @@ fn recover(state: &ServiceState) -> Result<()> {
     Ok(())
 }
 
-/// The executor: persistent device + store + suite, one job at a time.
+/// One executor: its own persistent device + store, the shared suite,
+/// one job at a time. `serve --executors N` runs N of these against
+/// the same queue.
 fn executor_loop(
     state: Arc<ServiceState>,
-    suite: Suite,
+    suite: Arc<Suite>,
     archive: Archive,
     base_cfg: RunConfig,
     ready_tx: std::sync::mpsc::Sender<Result<()>>,
@@ -653,17 +817,34 @@ fn executor_loop(
     let _ = ready_tx.send(Ok(()));
 
     loop {
-        // Claim the oldest claimable job (submission order = run
-        // order; a replayed interrupted job keeps its original slot).
-        // Shutdown is checked *before* claiming so pending jobs are
-        // abandoned, not drained, once a shutdown is requested.
+        // Claim the next job per the scheduling policy (priority class,
+        // then client round-robin, then age — see [`pick_claimable`]).
+        // The `started` line is journaled inside this critical section,
+        // so journal order *is* claim order. Shutdown is checked
+        // *before* claiming so pending jobs are abandoned, not
+        // drained, once a shutdown is requested.
         let claimed = {
             let mut jobs = state.lock_jobs();
             loop {
                 if state.shutdown.load(Ordering::SeqCst) {
                     break None;
                 }
-                if let Some(i) = jobs.iter().position(|j| j.status.is_claimable()) {
+                let picked = {
+                    let mut cursor = state.lock_last_served();
+                    pick_claimable(&jobs, &mut cursor)
+                };
+                if let Some(i) = picked {
+                    // The claim seam: an injected fault must leave the
+                    // job claimable by any executor — nothing has been
+                    // journaled or mutated yet, so backing out is a
+                    // pure retry.
+                    if let Err(e) = faults::fail_point("claim") {
+                        eprintln!("executor: claim of {} aborted: {e:#}", jobs[i].id);
+                        drop(jobs);
+                        std::thread::yield_now();
+                        jobs = state.lock_jobs();
+                        continue;
+                    }
                     // xbench-lint: allow(clock-discipline, claim-span bracket — queue bookkeeping, never inside a timed region)
                     let claim_t0 = std::time::Instant::now();
                     let retry = jobs[i].status == Status::Interrupted;
@@ -680,7 +861,9 @@ fn executor_loop(
                     jobs[i].status = Status::Running;
                     jobs[i].started_ts = Some(ts);
                     state.journal_event(&JobEvent::Started { job: jobs[i].id.clone(), ts });
-                    crate::obs::metrics::global().queue_wait.record_us(wait_us);
+                    let m = crate::obs::metrics::global();
+                    m.queue_wait.record_us(wait_us);
+                    m.queue_wait_class[class_index(jobs[i].spec.priority)].record_us(wait_us);
                     if crate::obs::span::is_enabled() {
                         let end_us = crate::obs::span::now_us();
                         crate::obs::span::record_manual(
@@ -698,24 +881,59 @@ fn executor_loop(
                         );
                     }
                     if retry {
-                        eprintln!("job {} retrying after crash interruption", jobs[i].id);
+                        eprintln!("job {} retrying after interruption", jobs[i].id);
                     }
-                    break Some((i, jobs[i].spec.clone(), jobs[i].progress.clone()));
+                    break Some((
+                        i,
+                        jobs[i].spec.clone(),
+                        jobs[i].progress.clone(),
+                        jobs[i].cancel.clone(),
+                        claim_t0,
+                    ));
                 }
                 jobs = state.wait_wake(jobs);
             }
         };
-        let Some((index, spec, progress)) = claimed else { return };
+        let Some((index, spec, progress, cancel, claimed_at)) = claimed else { return };
+
+        // The cooperative interrupt: checked by the scheduler at bench
+        // item boundaries, never inside a timed region. The wall-clock
+        // budget starts at claim, not submit — queue wait is the
+        // daemon's fault, not the job's.
+        let deadline =
+            spec.timeout_secs.map(|s| claimed_at + std::time::Duration::from_secs(s));
+        let interrupt = {
+            let cancel = Arc::clone(&cancel);
+            Interrupt::armed(move || {
+                if cancel.load(Ordering::Relaxed) {
+                    return Some("canceled");
+                }
+                // xbench-lint: allow(clock-discipline, timeout deadline check between bench items — scheduling, never inside a timed region)
+                if deadline.map_or(false, |d| std::time::Instant::now() >= d) {
+                    return Some("timed out");
+                }
+                None
+            })
+        };
 
         let env = ExecEnv {
-            suite: &suite,
+            suite: suite.as_ref(),
             store: &store,
             archive: &archive,
             base_cfg: &base_cfg,
         };
         // xbench-lint: allow(clock-discipline, whole-job exec latency for the stats sketch — wraps the job, never inside its timed regions)
         let exec_t0 = std::time::Instant::now();
-        let outcome = execute_job(&env, &spec, &progress);
+        // A panicking job must not take its executor thread (and every
+        // job behind it) down: catch at the job boundary and apply the
+        // crash-interruption contract — retry once, then give up. The
+        // `exec-panic` fault site injects exactly this mid-job.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if faults::panic_point("exec-panic") {
+                panic!("injected executor panic (XBENCH_FAULTS exec-panic)");
+            }
+            execute_job(&env, &spec, &progress, interrupt.clone())
+        }));
         let exec_us = exec_t0.elapsed().as_micros() as u64;
         {
             let m = crate::obs::metrics::global();
@@ -726,11 +944,45 @@ fn executor_loop(
         // job's queue wait is never inflated by span bookkeeping.
         crate::obs::span::flush_thread();
         let mut jobs = state.lock_jobs();
-        let job = &mut jobs[index];
         let ts = unix_now();
+        let outcome = match outcome {
+            Ok(outcome) => outcome,
+            Err(_) => {
+                let job = &mut jobs[index];
+                if job.interruptions == 0 {
+                    job.interruptions += 1;
+                    job.status = Status::Interrupted;
+                    job.finished_ts = None;
+                    let id = job.id.clone();
+                    state.journal_event(&JobEvent::Interrupted { job: id.clone(), ts });
+                    eprintln!("job {id} interrupted by an executor panic; retrying once");
+                    drop(jobs);
+                    // Any executor (this one included) claims the retry.
+                    state.wake.notify_all();
+                } else {
+                    let error = format!(
+                        "interrupted by an executor panic {} times; giving up after one retry",
+                        job.interruptions + 1
+                    );
+                    eprintln!("job {} FAILED: {error}", job.id);
+                    state.journal_event(&JobEvent::Failed {
+                        job: job.id.clone(),
+                        ts,
+                        error: error.clone(),
+                    });
+                    job.status = Status::Failed(error);
+                    job.finished_ts = Some(ts);
+                }
+                continue;
+            }
+        };
+        let job = &mut jobs[index];
         job.finished_ts = Some(ts);
         match outcome {
             Ok(result) => {
+                // Completion wins the cancel-vs-completion race: the
+                // work is done and archived, so the job settles `done`
+                // — exactly one terminal state either way.
                 eprintln!(
                     "job {} done ({})",
                     job.id,
@@ -748,10 +1000,41 @@ fn executor_loop(
                 job.status = Status::Done;
             }
             Err(e) => {
-                let error = format!("{e:#}");
-                eprintln!("job {} FAILED: {error}", job.id);
-                state.journal_event(&JobEvent::Failed { job: job.id.clone(), ts, error: error.clone() });
-                job.status = Status::Failed(error);
+                // The interrupt's own verdict — not error-text
+                // sniffing — decides between canceled, timed out, and
+                // a genuine failure.
+                match interrupt.check() {
+                    Some("canceled") => {
+                        eprintln!("job {} canceled", job.id);
+                        state.journal_event(&JobEvent::Canceled { job: job.id.clone(), ts });
+                        crate::obs::metrics::Metrics::incr(
+                            &crate::obs::metrics::global().jobs_canceled,
+                        );
+                        job.status = Status::Canceled;
+                    }
+                    Some(_) => {
+                        eprintln!(
+                            "job {} timed out (--timeout-secs {})",
+                            job.id,
+                            spec.timeout_secs.unwrap_or(0)
+                        );
+                        state.journal_event(&JobEvent::TimedOut { job: job.id.clone(), ts });
+                        crate::obs::metrics::Metrics::incr(
+                            &crate::obs::metrics::global().jobs_timed_out,
+                        );
+                        job.status = Status::TimedOut;
+                    }
+                    None => {
+                        let error = format!("{e:#}");
+                        eprintln!("job {} FAILED: {error}", job.id);
+                        state.journal_event(&JobEvent::Failed {
+                            job: job.id.clone(),
+                            ts,
+                            error: error.clone(),
+                        });
+                        job.status = Status::Failed(error);
+                    }
+                }
             }
         }
     }
@@ -839,14 +1122,33 @@ fn handle_request(req: Request, state: &Arc<ServiceState>) -> Json {
             if state.shutdown.load(Ordering::SeqCst) {
                 return err_response("daemon is shutting down");
             }
+            // Admission control: refuse — loudly, and without
+            // journaling — a submission that would push the claimable
+            // backlog past --queue-cap. The client sees the depth, so
+            // "retry later" is an informed decision, not a guess.
+            let cap = state.queue_cap.load(Ordering::SeqCst);
+            let depth = ServiceState::claimable_depth(&jobs);
+            if cap > 0 && depth >= cap {
+                crate::obs::metrics::Metrics::incr(
+                    &crate::obs::metrics::global().jobs_rejected,
+                );
+                return err_response(format!(
+                    "rejected: queue full ({depth} claimable job(s) at --queue-cap {cap}); \
+                     retry later or raise --queue-cap"
+                ));
+            }
             let id = journal::job_id(state.next_id.fetch_add(1, Ordering::SeqCst));
             let ts = unix_now();
             // Journal before acking: an acked submission must survive
-            // a crash, so a journal failure here rejects the job.
-            if let Err(e) = state.journal.append(&JobEvent::Submitted {
-                job: id.clone(),
-                ts,
-                spec: spec.to_json(),
+            // a crash, so a journal failure here rejects the job. The
+            // `journal-append` fault site injects exactly that
+            // failure — the job must never be acked or enqueued.
+            if let Err(e) = faults::fail_point("journal-append").and_then(|()| {
+                state.journal.append(&JobEvent::Submitted {
+                    job: id.clone(),
+                    ts,
+                    spec: spec.to_json(),
+                })
             }) {
                 return err_response(format!("journaling submission: {e:#}"));
             }
@@ -864,10 +1166,52 @@ fn handle_request(req: Request, state: &Arc<ServiceState>) -> Json {
                 result: None,
                 result_at: None,
                 run_id: None,
+                cancel: Arc::new(AtomicBool::new(false)),
             });
             drop(jobs);
             state.wake.notify_all();
             ok_response(vec![("job", Json::str(id))])
+        }
+        Request::Cancel { job } => {
+            let mut jobs = state.lock_jobs();
+            let Some(j) = jobs.iter_mut().find(|j| j.id == job) else {
+                return err_response(format!(
+                    "unknown job {job:?} ({} submitted so far)",
+                    jobs.len()
+                ));
+            };
+            if j.status.is_claimable() {
+                // Not yet claimed: settle immediately. Journal-before-
+                // visible, like every transition.
+                let ts = unix_now();
+                j.status = Status::Canceled;
+                j.finished_ts = Some(ts);
+                state.journal_event(&JobEvent::Canceled { job: j.id.clone(), ts });
+                crate::obs::metrics::Metrics::incr(
+                    &crate::obs::metrics::global().jobs_canceled,
+                );
+                ok_response(vec![
+                    ("job", Json::str(&j.id)),
+                    ("status", Json::str(j.status.as_str())),
+                ])
+            } else if j.status == Status::Running {
+                // Cooperative: the executor notices at the next bench
+                // item boundary. The response reports the request, not
+                // the outcome — completion may still win the race.
+                j.cancel.store(true, Ordering::SeqCst);
+                ok_response(vec![
+                    ("job", Json::str(&j.id)),
+                    ("status", Json::str(j.status.as_str())),
+                    ("cancel_requested", Json::Bool(true)),
+                ])
+            } else {
+                // Already settled: idempotent report, never an error —
+                // a cancel raced against completion is normal traffic.
+                ok_response(vec![
+                    ("job", Json::str(&j.id)),
+                    ("status", Json::str(j.status.as_str())),
+                ])
+            }
         }
         Request::Queue => {
             let jobs = state.lock_jobs();
@@ -943,6 +1287,7 @@ fn handle_request(req: Request, state: &Arc<ServiceState>) -> Json {
 fn stats_snapshot(state: &Arc<ServiceState>) -> Json {
     let (mut pending, mut running, mut interrupted) = (0u64, 0u64, 0u64);
     let (mut done, mut failed, mut abandoned) = (0u64, 0u64, 0u64);
+    let (mut canceled, mut timed_out) = (0u64, 0u64);
     let mut interruptions = 0u64;
     let submitted = {
         let jobs = state.lock_jobs();
@@ -955,6 +1300,8 @@ fn stats_snapshot(state: &Arc<ServiceState>) -> Json {
                 Status::Done => done += 1,
                 Status::Failed(_) => failed += 1,
                 Status::Abandoned => abandoned += 1,
+                Status::TimedOut => timed_out += 1,
+                Status::Canceled => canceled += 1,
             }
         }
         jobs.len() as u64
@@ -964,6 +1311,9 @@ fn stats_snapshot(state: &Arc<ServiceState>) -> Json {
     let pool = crate::pool::shared(&state.artifacts).stats();
     let journal_bytes =
         std::fs::metadata(state.journal.path()).map(|md| md.len()).unwrap_or(0);
+    let class_q = |class: usize, q: f64| {
+        Json::num(m.queue_wait_class[class].quantile_us(q) as f64 / 1e6)
+    };
     Json::obj(vec![
         ("jobs_submitted", Json::num(submitted as f64)),
         ("jobs_pending", Json::num(pending as f64)),
@@ -972,10 +1322,21 @@ fn stats_snapshot(state: &Arc<ServiceState>) -> Json {
         ("jobs_done", Json::num(done as f64)),
         ("jobs_failed", Json::num(failed as f64)),
         ("jobs_abandoned", Json::num(abandoned as f64)),
+        ("jobs_canceled", Json::num(canceled as f64)),
+        ("jobs_timed_out", Json::num(timed_out as f64)),
+        ("jobs_rejected_total", Json::num(load(&m.jobs_rejected))),
         ("job_interruptions_total", Json::num(interruptions as f64)),
         ("queue_depth", Json::num((pending + interrupted) as f64)),
+        ("executors", Json::num(state.executors.load(Ordering::SeqCst) as f64)),
+        ("queue_cap", Json::num(state.queue_cap.load(Ordering::SeqCst) as f64)),
         ("queue_wait_p50_s", Json::num(m.queue_wait.quantile_us(0.50) as f64 / 1e6)),
         ("queue_wait_p99_s", Json::num(m.queue_wait.quantile_us(0.99) as f64 / 1e6)),
+        ("queue_wait_high_p50_s", class_q(0, 0.50)),
+        ("queue_wait_high_p99_s", class_q(0, 0.99)),
+        ("queue_wait_normal_p50_s", class_q(1, 0.50)),
+        ("queue_wait_normal_p99_s", class_q(1, 0.99)),
+        ("queue_wait_low_p50_s", class_q(2, 0.50)),
+        ("queue_wait_low_p99_s", class_q(2, 0.99)),
         ("exec_p50_s", Json::num(m.exec.quantile_us(0.50) as f64 / 1e6)),
         ("exec_p99_s", Json::num(m.exec.quantile_us(0.99) as f64 / 1e6)),
         ("executor_busy_fraction", Json::num(crate::obs::metrics::busy_fraction())),
@@ -1198,5 +1559,119 @@ mod tests {
         let replayed = journal::replay(&state.journal.load().unwrap()).unwrap();
         assert_eq!(replayed.jobs[0].state, ReplayState::Interrupted);
         assert_eq!(replayed.jobs[1].state, ReplayState::Failed);
+    }
+
+    /// A pending [`JobRecord`] for scheduler tests.
+    fn rec(n: usize, client: &str, priority: Priority) -> JobRecord {
+        let mut spec = JobSpec::default_run();
+        spec.priority = priority;
+        spec.client = client.into();
+        JobRecord {
+            id: journal::job_id(n),
+            spec,
+            status: Status::Pending,
+            submitted_ts: n as u64,
+            submitted_at: None,
+            started_ts: None,
+            finished_ts: None,
+            interruptions: 0,
+            progress: Arc::new(JobProgress::default()),
+            result: None,
+            result_at: None,
+            run_id: None,
+            cancel: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    #[test]
+    fn pick_claimable_prefers_priority_then_round_robins_clients() {
+        let mut jobs = vec![
+            rec(1, "a", Priority::Low),
+            rec(2, "a", Priority::Normal),
+            rec(3, "b", Priority::Normal),
+            rec(4, "a", Priority::Normal),
+            rec(5, "c", Priority::High),
+        ];
+        let mut cursor: [String; 3] = std::array::from_fn(|_| String::new());
+        let mut order = Vec::new();
+        while let Some(i) = pick_claimable(&jobs, &mut cursor) {
+            order.push(jobs[i].id.clone());
+            jobs[i].status = Status::Running;
+        }
+        // High first; normal alternates clients a/b/a (oldest within a
+        // client); low last.
+        let want: Vec<String> = [5, 2, 3, 4, 1].into_iter().map(journal::job_id).collect();
+        assert_eq!(order, want);
+        // Round-robin resumes from the cursor, not from scratch: with a
+        // fresh `a` job and a fresh `b` job queued and `a` served last,
+        // `b` goes first.
+        let mut jobs = vec![rec(6, "a", Priority::Normal), rec(7, "b", Priority::Normal)];
+        let i = pick_claimable(&jobs, &mut cursor).unwrap();
+        assert_eq!(jobs[i].id, journal::job_id(7));
+        jobs[i].status = Status::Running;
+        let i = pick_claimable(&jobs, &mut cursor).unwrap();
+        assert_eq!(jobs[i].id, journal::job_id(6));
+    }
+
+    #[test]
+    fn submit_rejects_when_queue_is_full_without_journaling() {
+        let dir = TempDir::new().unwrap();
+        let (mut daemon, state) = bound_state(dir.path());
+        daemon.set_queue_cap(2);
+        for want in ["job-0001", "job-0002"] {
+            let resp = handle_request(Request::Submit(JobSpec::default_run()), &state);
+            assert_eq!(resp.req_str("job").unwrap(), want);
+        }
+        let resp = handle_request(Request::Submit(JobSpec::default_run()), &state);
+        assert_eq!(resp.get("ok").and_then(|b| b.as_bool()), Some(false));
+        let error = resp.req_str("error").unwrap();
+        assert!(error.starts_with("rejected: queue full"), "{error}");
+        assert_eq!(state.lock_jobs().len(), 2, "rejected submit must not enqueue");
+        assert_eq!(state.journal.load().unwrap().len(), 2, "rejected submit must not journal");
+        // Canceling a waiting job frees a slot — and the rejected
+        // submission never consumed a job number.
+        let resp = handle_request(Request::Cancel { job: "job-0001".into() }, &state);
+        assert_eq!(resp.req_str("status").unwrap(), "canceled");
+        let resp = handle_request(Request::Submit(JobSpec::default_run()), &state);
+        assert_eq!(resp.req_str("job").unwrap(), "job-0003");
+    }
+
+    #[test]
+    fn cancel_settles_waiting_jobs_and_flags_running_ones() {
+        let dir = TempDir::new().unwrap();
+        let (_daemon, state) = bound_state(dir.path());
+        for _ in 0..2 {
+            let resp = handle_request(Request::Submit(JobSpec::default_run()), &state);
+            assert_eq!(resp.get("ok").and_then(|b| b.as_bool()), Some(true));
+        }
+        {
+            let mut jobs = state.lock_jobs();
+            jobs[0].status = Status::Running;
+        }
+        // Running: flagged, not settled — the executor decides at the
+        // next bench-item boundary.
+        let resp = handle_request(Request::Cancel { job: "job-0001".into() }, &state);
+        assert_eq!(resp.req_str("status").unwrap(), "running");
+        assert_eq!(resp.get("cancel_requested").and_then(|b| b.as_bool()), Some(true));
+        assert!(state.lock_jobs()[0].cancel.load(Ordering::SeqCst));
+        // Waiting: settled immediately, journaled, idempotent.
+        let resp = handle_request(Request::Cancel { job: "job-0002".into() }, &state);
+        assert_eq!(resp.req_str("status").unwrap(), "canceled");
+        let resp = handle_request(Request::Cancel { job: "job-0002".into() }, &state);
+        assert_eq!(resp.req_str("status").unwrap(), "canceled");
+        let events = state.journal.load().unwrap();
+        let canceled = events
+            .iter()
+            .filter(|e| matches!(e, JobEvent::Canceled { .. }))
+            .count();
+        assert_eq!(canceled, 1, "idempotent cancel must journal once");
+        // Unknown job: loud.
+        let resp = handle_request(Request::Cancel { job: "job-9999".into() }, &state);
+        assert_eq!(resp.get("ok").and_then(|b| b.as_bool()), Some(false));
+        // The stats partition stays consistent with the new states.
+        let stats = stats_snapshot(&state);
+        assert_eq!(stats.get("jobs_submitted").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(stats.get("jobs_canceled").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(stats.get("jobs_running").and_then(|v| v.as_usize()), Some(1));
     }
 }

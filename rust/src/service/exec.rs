@@ -17,8 +17,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use crate::ci::{BaselineStore, Detector, GateMode};
 use crate::config::{BatchPolicy, Compiler, Mode, RunConfig};
 use crate::coordinator::{
-    default_jobs, planned_bench_key, run_partitioned, sweep_model, ExecOpts, RunResult, Runner,
-    SchedError,
+    default_jobs, planned_bench_key, run_partitioned, sweep_model, ExecOpts, Interrupt,
+    RunResult, Runner, SchedError,
 };
 use crate::runtime::{ArtifactStore, ModelEntry};
 use crate::store::{Archive, RunMeta, RunRecord};
@@ -106,7 +106,12 @@ fn cfg_for(env: &ExecEnv, spec: &JobSpec) -> Result<RunConfig> {
 /// the job record and served by the `result` op: archive `run_id`,
 /// per-config `records`, per-item `errors`, and (ci with a baseline)
 /// `regressions`.
-pub fn execute_job(env: &ExecEnv, spec: &JobSpec, progress: &JobProgress) -> Result<Json> {
+pub fn execute_job(
+    env: &ExecEnv,
+    spec: &JobSpec,
+    progress: &JobProgress,
+    interrupt: Interrupt,
+) -> Result<Json> {
     let cfg = cfg_for(env, spec)?;
     let exec = ExecOpts {
         jobs: spec.jobs.unwrap_or_else(default_jobs),
@@ -114,6 +119,9 @@ pub fn execute_job(env: &ExecEnv, spec: &JobSpec, progress: &JobProgress) -> Res
         // A gate over partial measurements would pass silently, so ci
         // keeps the one-shot verb's always-fail-fast policy.
         fail_fast: spec.verb == JobVerb::Ci,
+        // Cancel/timeout checkpoints fire between worklist items (the
+        // scheduler polls this, never a timed region).
+        interrupt,
     };
     // Pre-flight any run-id override against the archive *before*
     // measuring, mirroring cli/run.rs: a reserved or already-recorded
@@ -172,6 +180,9 @@ pub fn execute_job(env: &ExecEnv, spec: &JobSpec, progress: &JobProgress) -> Res
     if exec.jobs > 1 {
         meta = meta.with_parallelism(exec.jobs, None);
     }
+    // Fault-injection seam (no-op unless XBENCH_FAULTS arms it): a
+    // failed archive append must fail the job loudly, never record.
+    super::faults::fail_point("archive-record")?;
     let (records, meta) =
         env.archive
             .record_scheduled(&indexed, meta, spec.run_id.as_deref(), &worklist)?;

@@ -1,0 +1,210 @@
+//! Deterministic fault injection for the daemon's durability seams.
+//!
+//! Chaos testing only works if the chaos is reproducible: the journal's
+//! invariants ("no job lost, no double execution, retry once then give
+//! up") must hold under injected failures, and a failing run must be
+//! re-runnable bit-for-bit to debug it. This module arms seeded fault
+//! points at the seams the durability story depends on, and nothing
+//! else:
+//!
+//! - `journal-append` — [`crate::service::daemon`]'s journal writes
+//!   (a submit whose journal append fails must NOT be acked);
+//! - `archive-record` — the archive append in
+//!   [`crate::service::exec::execute_job`] (the job fails loudly, the
+//!   archive stays consistent);
+//! - `claim` — an executor's claim attempt (a faulted claim must leave
+//!   the job claimable by someone else, never half-claimed);
+//! - `exec-panic` — a mid-job executor panic (the daemon treats it
+//!   like a crash interruption: retry once, then `failed "giving up"`).
+//!
+//! Arming is opt-in via the environment, read once per process:
+//!
+//! ```text
+//! XBENCH_FAULTS=<seed>:<site>=<rate>[,<site>=<rate>...]
+//! XBENCH_FAULTS=42:journal-append=0.2,claim=0.1,exec-panic=0.3
+//! ```
+//!
+//! Each site draws from its own [`Rng`] stream (seeded from the site
+//! name and the shared seed), so the k-th probe of a site fires
+//! identically across runs regardless of how other sites interleave.
+//! Unarmed (no env var, the overwhelmingly common case) every probe is
+//! one relaxed pointer load and a `None` branch — no clocks, no locks.
+
+use std::sync::{Mutex, OnceLock, PoisonError};
+
+use anyhow::Result;
+
+use crate::util::rng::Rng;
+
+/// One parsed `XBENCH_FAULTS` specification.
+#[derive(Debug)]
+pub struct Faults {
+    seed: u64,
+    /// `(site, rate, per-site rng)` — `Vec` keeps site order stable for
+    /// diagnostics; lookups scan (the list is tiny).
+    sites: Mutex<Vec<(String, f32, Rng)>>,
+}
+
+impl Faults {
+    /// Parse `"<seed>:<site>=<rate>[,...]"`. Rates are clamped to
+    /// `[0, 1]`; a rate of 1 fires every probe.
+    pub fn parse(spec: &str) -> Result<Faults> {
+        let (seed_s, rest) = spec.split_once(':').ok_or_else(|| {
+            anyhow::anyhow!(
+                "bad XBENCH_FAULTS {spec:?}: expected <seed>:<site>=<rate>[,...]"
+            )
+        })?;
+        let seed: u64 = seed_s
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad XBENCH_FAULTS seed {seed_s:?}: {e}"))?;
+        let mut sites = Vec::new();
+        for part in rest.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (site, rate_s) = part.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("bad XBENCH_FAULTS entry {part:?}: expected <site>=<rate>")
+            })?;
+            anyhow::ensure!(
+                KNOWN_SITES.contains(&site),
+                "unknown XBENCH_FAULTS site {site:?} (known: {})",
+                KNOWN_SITES.join(", ")
+            );
+            let rate: f32 = rate_s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad XBENCH_FAULTS rate {rate_s:?}: {e}"))?;
+            let rate = rate.clamp(0.0, 1.0);
+            sites.push((site.to_string(), rate, Rng::seed_from_name(site, seed)));
+        }
+        anyhow::ensure!(!sites.is_empty(), "XBENCH_FAULTS {spec:?} arms no sites");
+        Ok(Faults { seed, sites: Mutex::new(sites) })
+    }
+
+    /// Seed the spec was armed with (diagnostics / banner).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Draw the next deterministic verdict for `site`. Unknown or
+    /// unarmed sites never fire.
+    pub fn fires(&self, site: &str) -> bool {
+        let mut sites = self.sites.lock().unwrap_or_else(PoisonError::into_inner);
+        for (name, rate, rng) in sites.iter_mut() {
+            if name == site {
+                return rng.uniform_f32() < *rate;
+            }
+        }
+        false
+    }
+}
+
+/// Every site a spec may arm — parsing rejects typos loudly instead of
+/// silently running a chaos test with no chaos.
+pub const KNOWN_SITES: &[&str] =
+    &["journal-append", "archive-record", "claim", "exec-panic"];
+
+/// The process-global armed spec (`None` = unarmed), read once.
+fn global() -> Option<&'static Faults> {
+    static FAULTS: OnceLock<Option<Faults>> = OnceLock::new();
+    FAULTS
+        .get_or_init(|| {
+            let spec = std::env::var("XBENCH_FAULTS").ok()?;
+            match Faults::parse(&spec) {
+                Ok(f) => {
+                    eprintln!(
+                        "fault injection ARMED (XBENCH_FAULTS, seed {}): {spec}",
+                        f.seed()
+                    );
+                    Some(f)
+                }
+                Err(e) => {
+                    eprintln!("ignoring malformed XBENCH_FAULTS: {e:#}");
+                    None
+                }
+            }
+        })
+        .as_ref()
+}
+
+/// Is any fault spec armed in this process?
+pub fn armed() -> bool {
+    global().is_some()
+}
+
+/// Probe a fault site: `Err` when the armed spec fires, `Ok(())`
+/// otherwise (including always when unarmed). The error text names the
+/// site so chaos-test assertions and operators can tell injected
+/// failures from real ones.
+pub fn fail_point(site: &str) -> Result<()> {
+    if let Some(f) = global() {
+        if f.fires(site) {
+            anyhow::bail!("injected fault at {site} (XBENCH_FAULTS)");
+        }
+    }
+    Ok(())
+}
+
+/// Probe a panic site (the `exec-panic` seam): `true` means the caller
+/// should panic mid-job to exercise the crash-interruption path.
+pub fn panic_point(site: &str) -> bool {
+    global().map_or(false, |f| f.fires(site))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_the_documented_shape() {
+        let f = Faults::parse("42:journal-append=0.5,claim=1.0").unwrap();
+        assert_eq!(f.seed(), 42);
+        // Rate 1.0 fires every draw; unarmed sites never fire.
+        assert!(f.fires("claim"));
+        assert!(f.fires("claim"));
+        assert!(!f.fires("archive-record"));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        assert!(Faults::parse("").is_err());
+        assert!(Faults::parse("42").is_err());
+        assert!(Faults::parse("x:claim=0.5").is_err());
+        assert!(Faults::parse("42:claim").is_err());
+        assert!(Faults::parse("42:claim=x").is_err());
+        assert!(Faults::parse("42:no-such-site=0.5").is_err());
+        assert!(Faults::parse("42:").is_err());
+    }
+
+    #[test]
+    fn draws_are_deterministic_per_site_and_seed() {
+        let seq = |spec: &str, site: &str, n: usize| -> Vec<bool> {
+            let f = Faults::parse(spec).unwrap();
+            (0..n).map(|_| f.fires(site)).collect()
+        };
+        // Same seed → identical verdict sequence, independent of how
+        // the other sites are probed in between.
+        let a = seq("7:journal-append=0.3,claim=0.3", "claim", 64);
+        let interleaved = {
+            let f = Faults::parse("7:journal-append=0.3,claim=0.3").unwrap();
+            (0..64)
+                .map(|i| {
+                    if i % 2 == 0 {
+                        let _ = f.fires("journal-append");
+                    }
+                    f.fires("claim")
+                })
+                .collect::<Vec<bool>>()
+        };
+        assert_eq!(a, interleaved, "per-site streams must not interfere");
+        // A different seed changes the sequence; a rate of 0 never
+        // fires; a rate above 1 clamps to always-fire.
+        assert_ne!(a, seq("8:claim=0.3", "claim", 64));
+        assert!(seq("7:claim=0", "claim", 64).iter().all(|v| !v));
+        assert!(seq("7:claim=2.0", "claim", 64).iter().all(|v| *v));
+        // The firing fraction tracks the rate loosely (seeded, so this
+        // is a fixed arithmetic fact, not a statistical flake).
+        let fired = seq("7:claim=0.3", "claim", 256).iter().filter(|v| **v).count();
+        assert!((32..=128).contains(&fired), "{fired} of 256 at rate 0.3");
+    }
+}

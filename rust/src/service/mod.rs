@@ -9,17 +9,22 @@
 //! - [`protocol`]: the JSON-lines request/response vocabulary spoken
 //!   over localhost TCP (std-only, `std::net`) — [`JobSpec`] describes
 //!   a `run`/`sweep`/`ci` job, [`Request`] the wire ops;
-//! - [`daemon`]: `xbench serve` — accept loop + a single executor
-//!   thread that owns the persistent device/store and drains the job
-//!   queue through the pool; the queue is durable (one journal line
-//!   per job transition, [`crate::store::Journal`]) and replayed on
+//! - [`daemon`]: `xbench serve` — accept loop + `--executors N`
+//!   executor threads (default 1), each owning its own persistent
+//!   device/store, draining the job queue through the pool under a
+//!   priority + client-fair scheduler with optional `--queue-cap`
+//!   admission control; the queue is durable (one journal line per
+//!   job transition, [`crate::store::Journal`]) and replayed on
 //!   startup, so a crash loses at most the in-flight measurement;
-//! - [`client`]: `xbench submit`/`queue`/`result` — one-line request,
-//!   one-line response, connection per call;
+//! - [`client`]: `xbench submit`/`queue`/`result`/`cancel` — one-line
+//!   request, one-line response, connection per call, bounded retry on
+//!   a refused connection;
 //! - [`exec`]: job execution — the same worklist expansion, scheduler
 //!   contract, and archive recording as the one-shot verbs, so daemon
 //!   output is queryable by `cmp`/`rank`/`history` with zero new result
-//!   formats.
+//!   formats;
+//! - [`faults`]: deterministic fault injection (`XBENCH_FAULTS`) at
+//!   the durability seams, for the chaos suite.
 //!
 //! Job lifecycle, wire protocol, and archive interaction are documented
 //! in `docs/SERVICE.md`.
@@ -27,14 +32,15 @@
 pub mod client;
 pub mod daemon;
 pub mod exec;
+pub mod faults;
 pub mod protocol;
 
 pub use client::{
-    fetch_result, ping, queue_status, report_from, request, request_addr, shutdown, stats,
-    submit,
+    cancel, fetch_result, ping, queue_status, report_from, request, request_addr, shutdown,
+    stats, submit,
 };
 pub use daemon::{Daemon, JobProgress};
-pub use protocol::{JobSpec, JobVerb, Request, DEFAULT_PORT};
+pub use protocol::{JobSpec, JobVerb, Priority, Request, DEFAULT_PORT};
 
 /// Unix seconds now (0 if the clock is before the epoch).
 pub(crate) fn unix_now() -> u64 {

@@ -34,23 +34,77 @@ pub const DEFAULT_PORT: u16 = 7483;
 ///   snapshot for the client-side service-health panel. The op takes
 ///   no options, so the `report` payload is byte-identical to a local
 ///   `xbench report` over the same archive bytes.
-pub const PROTO_VERSION: usize = 4;
+/// - **v5**: multi-tenant scheduling. New `cancel` op (cancel a
+///   pending job immediately, or flag a running one to stop at its
+///   next item boundary); job specs gain `priority`
+///   (`high`|`normal`|`low`), `timeout_secs` (wall-clock budget from
+///   claim), and `client` (fairness key); status rows gain the
+///   `canceled` and `timed_out` terminal states; `submit` against a
+///   full bounded queue answers `ok: false` with an error starting
+///   `rejected: queue full` instead of enqueueing. `queue`/`result`
+///   payloads are wire-compatible: the new states arrive through the
+///   existing `status` key, old daemons ignore the new spec keys.
+pub const PROTO_VERSION: usize = 5;
 
 /// Every `status` a job status row can carry, in lifecycle order.
 ///
 /// `pending → running → done | failed` is the crash-free path.
 /// `interrupted` is a replayed `running` job re-queued for its one
-/// retry; `abandoned` is a `pending`/`interrupted` job drained at
-/// shutdown. `done`, `failed`, and `abandoned` are terminal
-/// ([`is_settled`]).
-pub const JOB_STATES: &[&str] =
-    &["pending", "running", "interrupted", "done", "failed", "abandoned"];
+/// retry; `canceled` is a job stopped by the `cancel` op (immediately
+/// when pending, at the next item boundary when running); `timed_out`
+/// is a running job that exhausted its `timeout_secs` budget;
+/// `abandoned` is a `pending`/`interrupted` job drained at shutdown.
+/// `done`, `failed`, `canceled`, `timed_out`, and `abandoned` are
+/// terminal ([`is_settled`]).
+pub const JOB_STATES: &[&str] = &[
+    "pending",
+    "running",
+    "interrupted",
+    "done",
+    "failed",
+    "canceled",
+    "timed_out",
+    "abandoned",
+];
 
 /// Whether a status row's `status` is terminal — the job will never
 /// run again, so waiting clients should stop polling. `interrupted` is
 /// *not* settled: the daemon retries it once.
 pub fn is_settled(status: &str) -> bool {
-    matches!(status, "done" | "failed" | "abandoned")
+    matches!(status, "done" | "failed" | "canceled" | "timed_out" | "abandoned")
+}
+
+/// A job's scheduling class. Executors always claim the highest class
+/// with claimable work; within a class, clients are served round-robin.
+/// Priority affects *claim order only* — never the measurement
+/// protocol, so it does not enter `config_hash`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    High,
+    Normal,
+    Low,
+}
+
+impl Priority {
+    /// All classes, highest first (claim-scan order).
+    pub const ALL: [Priority; 3] = [Priority::High, Priority::Normal, Priority::Low];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Priority> {
+        match s {
+            "high" => Ok(Priority::High),
+            "normal" => Ok(Priority::Normal),
+            "low" => Ok(Priority::Low),
+            _ => bail!("unknown priority {s:?} (high|normal|low)"),
+        }
+    }
 }
 
 /// What kind of work a job runs. Mirrors the one-shot verbs: `run`
@@ -118,6 +172,16 @@ pub struct JobSpec {
     /// (None = point). Parsed into a [`crate::ci::GateMode`] at
     /// execution; old daemons ignore the key and gate point-wise.
     pub gate: Option<String>,
+    /// Scheduling class (claim order only — never enters the
+    /// measurement protocol or `config_hash`).
+    pub priority: Priority,
+    /// Wall-clock execution budget in seconds, measured from claim;
+    /// the job settles `timed_out` at the first item boundary past it
+    /// (None = no limit).
+    pub timeout_secs: Option<u64>,
+    /// Fairness key: same-priority jobs are claimed round-robin across
+    /// distinct clients ("" = the shared anonymous client).
+    pub client: String,
 }
 
 impl JobSpec {
@@ -138,6 +202,9 @@ impl JobSpec {
             run_id: None,
             baseline: None,
             gate: None,
+            priority: Priority::Normal,
+            timeout_secs: None,
+            client: String::new(),
         }
     }
 
@@ -174,6 +241,15 @@ impl JobSpec {
         }
         if let Some(g) = &self.gate {
             fields.push(("gate", Json::str(g)));
+        }
+        if self.priority != Priority::Normal {
+            fields.push(("priority", Json::str(self.priority.as_str())));
+        }
+        if let Some(t) = self.timeout_secs {
+            fields.push(("timeout_secs", Json::num(t as f64)));
+        }
+        if !self.client.is_empty() {
+            fields.push(("client", Json::str(&self.client)));
         }
         Json::obj(fields)
     }
@@ -246,6 +322,9 @@ impl JobSpec {
             run_id: opt_str("run_id")?,
             baseline: opt_str("baseline")?,
             gate: opt_str("gate")?,
+            priority: Priority::parse(&str_of("priority", "normal")?)?,
+            timeout_secs: opt_usize("timeout_secs")?.map(|t| t as u64),
+            client: str_of("client", "")?,
         })
     }
 }
@@ -261,6 +340,10 @@ pub enum Request {
     Queue,
     /// Fetch one job's status + (when done) its results.
     Result { job: String },
+    /// Cancel one job: a claimable job settles `canceled` immediately;
+    /// a running one is flagged and stops at its next item boundary.
+    /// Idempotent — canceling a settled job reports its final status.
+    Cancel { job: String },
     /// Snapshot of daemon health counters and latency quantiles.
     Stats,
     /// Render the daemon's archive with the default report options;
@@ -281,6 +364,9 @@ impl Request {
             Request::Result { job } => {
                 Json::obj(vec![("op", Json::str("result")), ("job", Json::str(job))])
             }
+            Request::Cancel { job } => {
+                Json::obj(vec![("op", Json::str("cancel")), ("job", Json::str(job))])
+            }
             Request::Stats => Json::obj(vec![("op", Json::str("stats"))]),
             Request::Report => Json::obj(vec![("op", Json::str("report"))]),
             Request::Shutdown => Json::obj(vec![("op", Json::str("shutdown"))]),
@@ -293,11 +379,15 @@ impl Request {
             "submit" => Ok(Request::Submit(JobSpec::decode(v.req("spec")?)?)),
             "queue" => Ok(Request::Queue),
             "result" => Ok(Request::Result { job: v.req_str("job")?.to_string() }),
+            "cancel" => Ok(Request::Cancel { job: v.req_str("job")?.to_string() }),
             "stats" => Ok(Request::Stats),
             "report" => Ok(Request::Report),
             "shutdown" => Ok(Request::Shutdown),
             other => {
-                bail!("unknown op {other:?} (ping|submit|queue|result|stats|report|shutdown)")
+                bail!(
+                    "unknown op {other:?} \
+                     (ping|submit|queue|result|cancel|stats|report|shutdown)"
+                )
             }
         }
     }
@@ -338,6 +428,9 @@ mod tests {
         spec.run_id = Some("svc-1".into());
         spec.baseline = Some("latest".into());
         spec.gate = Some("stat".into());
+        spec.priority = Priority::High;
+        spec.timeout_secs = Some(90);
+        spec.client = "ci-bot".into();
         let line = spec.to_json().to_json();
         assert!(!line.contains('\n'));
         assert_eq!(JobSpec::decode(&crate::util::json::parse(&line).unwrap()).unwrap(), spec);
@@ -363,6 +456,10 @@ mod tests {
             r#"{"verb":"run","models":"gpt_tiny"}"#,
             r#"{"verb":"run","models":[1,2]}"#,
             r#"{"verb":"run","jobs":"all"}"#,
+            r#"{"verb":"run","priority":"urgent"}"#,
+            r#"{"verb":"run","priority":3}"#,
+            r#"{"verb":"run","timeout_secs":"soon"}"#,
+            r#"{"verb":"run","client":7}"#,
         ] {
             let v = crate::util::json::parse(bad).unwrap();
             assert!(JobSpec::decode(&v).is_err(), "accepted malformed spec {bad}");
@@ -376,6 +473,7 @@ mod tests {
             Request::Submit(JobSpec::default_run()),
             Request::Queue,
             Request::Result { job: "job-0001".into() },
+            Request::Cancel { job: "job-0001".into() },
             Request::Stats,
             Request::Report,
             Request::Shutdown,
@@ -395,8 +493,29 @@ mod tests {
         assert_eq!(sorted.len(), JOB_STATES.len(), "duplicate job state");
         let settled: Vec<&str> =
             JOB_STATES.iter().copied().filter(|&s| is_settled(s)).collect();
-        assert_eq!(settled, vec!["done", "failed", "abandoned"]);
+        assert_eq!(settled, vec!["done", "failed", "canceled", "timed_out", "abandoned"]);
         assert!(!is_settled("interrupted"), "interrupted jobs are retried, not settled");
+    }
+
+    #[test]
+    fn priority_parses_and_orders_highest_first() {
+        for p in Priority::ALL {
+            assert_eq!(Priority::parse(p.as_str()).unwrap(), p);
+        }
+        assert!(Priority::parse("urgent").is_err());
+        assert_eq!(
+            Priority::ALL.to_vec(),
+            vec![Priority::High, Priority::Normal, Priority::Low]
+        );
+        // The derived order backs the claim scan: High < Normal < Low.
+        assert!(Priority::High < Priority::Normal);
+        assert!(Priority::Normal < Priority::Low);
+        // Default-priority specs stay wire-identical to v4 specs.
+        let spec = JobSpec::default_run();
+        let line = spec.to_json().to_json();
+        assert!(!line.contains("priority"), "{line}");
+        assert!(!line.contains("client"), "{line}");
+        assert!(!line.contains("timeout_secs"), "{line}");
     }
 
     #[test]

@@ -3,7 +3,8 @@
 //! The archive is the durable record of *results*; this journal is the
 //! durable record of *queue state*. `xbench serve` appends one JSON
 //! line per job transition — `submitted` / `started` / `done` /
-//! `failed` / `interrupted` / `abandoned` — using exactly the
+//! `failed` / `interrupted` / `abandoned` / `timed_out` / `canceled`
+//! — using exactly the
 //! [`RunRecord`](super::record::RunRecord) JSONL discipline: append-only,
 //! one compact object per line, serialized across processes by the
 //! [`FileLock`](super::lock::FileLock) sidecar, any prefix of the file
@@ -12,8 +13,8 @@
 //! On startup the daemon [`replay`]s the journal:
 //!
 //! - jobs whose last transition is terminal (`done`/`failed`/
-//!   `abandoned`) are restored read-only, so `queue` and `result` keep
-//!   answering for them across restarts;
+//!   `abandoned`/`timed_out`/`canceled`) are restored read-only, so
+//!   `queue` and `result` keep answering for them across restarts;
 //! - jobs that were `pending` at crash time are re-queued as-is;
 //! - jobs that were `running` at crash time come back as
 //!   [`ReplayState::Running`]; the daemon journals an `interrupted`
@@ -76,6 +77,13 @@ pub enum JobEvent {
     Interrupted { job: String, ts: u64 },
     /// Shutdown drained the queue with this job still waiting.
     Abandoned { job: String, ts: u64 },
+    /// The job's wall-clock budget (`submit --timeout-secs`) expired
+    /// mid-run; the executor stopped it at a bench-item boundary.
+    TimedOut { job: String, ts: u64 },
+    /// A client canceled the job (`xbench cancel`) — immediately while
+    /// it was waiting, or cooperatively at a bench-item boundary while
+    /// it was running.
+    Canceled { job: String, ts: u64 },
     /// One settled job folded to a single line by [`Journal::compact`]:
     /// its whole transition history replaced by the outcome, the
     /// result payload (if any) spilled to [`ResultSpill`] and
@@ -114,6 +122,8 @@ pub enum SettledState {
     Done,
     Failed,
     Abandoned,
+    TimedOut,
+    Canceled,
 }
 
 impl SettledState {
@@ -122,6 +132,8 @@ impl SettledState {
             SettledState::Done => "done",
             SettledState::Failed => "failed",
             SettledState::Abandoned => "abandoned",
+            SettledState::TimedOut => "timed_out",
+            SettledState::Canceled => "canceled",
         }
     }
 
@@ -130,7 +142,11 @@ impl SettledState {
             "done" => Ok(SettledState::Done),
             "failed" => Ok(SettledState::Failed),
             "abandoned" => Ok(SettledState::Abandoned),
-            other => bail!("unknown settled state {other:?} (done|failed|abandoned)"),
+            "timed_out" => Ok(SettledState::TimedOut),
+            "canceled" => Ok(SettledState::Canceled),
+            other => bail!(
+                "unknown settled state {other:?} (done|failed|abandoned|timed_out|canceled)"
+            ),
         }
     }
 }
@@ -145,6 +161,8 @@ impl JobEvent {
             | JobEvent::Failed { job, .. }
             | JobEvent::Interrupted { job, .. }
             | JobEvent::Abandoned { job, .. }
+            | JobEvent::TimedOut { job, .. }
+            | JobEvent::Canceled { job, .. }
             | JobEvent::Settled { job, .. }
             | JobEvent::Compacted { job, .. } => job,
         }
@@ -158,6 +176,8 @@ impl JobEvent {
             JobEvent::Failed { .. } => "failed",
             JobEvent::Interrupted { .. } => "interrupted",
             JobEvent::Abandoned { .. } => "abandoned",
+            JobEvent::TimedOut { .. } => "timed_out",
+            JobEvent::Canceled { .. } => "canceled",
             JobEvent::Settled { .. } => "settled",
             JobEvent::Compacted { .. } => "compacted",
         }
@@ -172,6 +192,8 @@ impl JobEvent {
             | JobEvent::Failed { job, ts, .. }
             | JobEvent::Interrupted { job, ts }
             | JobEvent::Abandoned { job, ts }
+            | JobEvent::TimedOut { job, ts }
+            | JobEvent::Canceled { job, ts }
             | JobEvent::Settled { job, ts, .. }
             | JobEvent::Compacted { job, ts, .. } => (job, *ts),
         };
@@ -244,6 +266,8 @@ impl JobEvent {
             }
             "interrupted" => JobEvent::Interrupted { job, ts },
             "abandoned" => JobEvent::Abandoned { job, ts },
+            "timed_out" => JobEvent::TimedOut { job, ts },
+            "canceled" => JobEvent::Canceled { job, ts },
             "settled" => JobEvent::Settled {
                 job,
                 ts,
@@ -399,10 +423,7 @@ impl Journal {
         let mut live: std::collections::BTreeMap<&str, Vec<&JobEvent>> =
             std::collections::BTreeMap::new();
         for job in &replayed.jobs {
-            if !matches!(
-                job.state,
-                ReplayState::Done | ReplayState::Failed | ReplayState::Abandoned
-            ) {
+            if !job.state.is_terminal() {
                 live.insert(job.id.as_str(), Vec::new());
             }
         }
@@ -430,6 +451,8 @@ impl Journal {
                 ReplayState::Done => SettledState::Done,
                 ReplayState::Failed => SettledState::Failed,
                 ReplayState::Abandoned => SettledState::Abandoned,
+                ReplayState::TimedOut => SettledState::TimedOut,
+                ReplayState::Canceled => SettledState::Canceled,
                 _ => {
                     for ev in live.get(job.id.as_str()).into_iter().flatten() {
                         body.push_str(&ev.to_json().to_json());
@@ -649,6 +672,23 @@ pub enum ReplayState {
     Done,
     Failed,
     Abandoned,
+    TimedOut,
+    Canceled,
+}
+
+impl ReplayState {
+    /// Terminal states accept no further transitions; compaction folds
+    /// them to [`JobEvent::Settled`] summary lines.
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            ReplayState::Done
+                | ReplayState::Failed
+                | ReplayState::Abandoned
+                | ReplayState::TimedOut
+                | ReplayState::Canceled
+        )
+    }
 }
 
 /// One job reconstructed from the journal, in submission order.
@@ -770,6 +810,8 @@ pub fn replay(events: &[JobEvent]) -> Result<Replay> {
                     SettledState::Done => ReplayState::Done,
                     SettledState::Failed => ReplayState::Failed,
                     SettledState::Abandoned => ReplayState::Abandoned,
+                    SettledState::TimedOut => ReplayState::TimedOut,
+                    SettledState::Canceled => ReplayState::Canceled,
                 },
                 submitted_ts: *submitted_ts,
                 started_ts: *started_ts,
@@ -788,10 +830,7 @@ pub fn replay(events: &[JobEvent]) -> Result<Replay> {
             .with_context(|| format!("journal corrupt: transition for unsubmitted {id}"))?;
         let job = &mut jobs[index];
         anyhow::ensure!(
-            !matches!(
-                job.state,
-                ReplayState::Done | ReplayState::Failed | ReplayState::Abandoned
-            ),
+            !job.state.is_terminal(),
             "journal corrupt: transition after terminal state for {id}"
         );
         match ev {
@@ -818,6 +857,20 @@ pub fn replay(events: &[JobEvent]) -> Result<Replay> {
             }
             JobEvent::Abandoned { ts, .. } => {
                 job.state = ReplayState::Abandoned;
+                job.finished_ts = Some(*ts);
+            }
+            JobEvent::TimedOut { ts, .. } => {
+                // A timeout is noticed mid-run: anything else is a
+                // journal writer bug, not a crash artifact.
+                anyhow::ensure!(
+                    job.state == ReplayState::Running,
+                    "journal corrupt: {id} timed out while not running"
+                );
+                job.state = ReplayState::TimedOut;
+                job.finished_ts = Some(*ts);
+            }
+            JobEvent::Canceled { ts, .. } => {
+                job.state = ReplayState::Canceled;
                 job.finished_ts = Some(*ts);
             }
         }
@@ -850,6 +903,8 @@ mod tests {
             JobEvent::Failed { job: job_id(2), ts: 13, error: "boom".into() },
             JobEvent::Interrupted { job: job_id(3), ts: 14 },
             JobEvent::Abandoned { job: job_id(4), ts: 15 },
+            JobEvent::TimedOut { job: job_id(5), ts: 16 },
+            JobEvent::Canceled { job: job_id(6), ts: 17 },
         ];
         for ev in evs {
             let line = ev.to_json().to_json();
@@ -936,9 +991,14 @@ mod tests {
             JobEvent::Started { job: job_id(6), ts: 22 },
             JobEvent::Interrupted { job: job_id(6), ts: 23 },
             JobEvent::Started { job: job_id(6), ts: 24 }, // died in the retry
+            submitted(7, 25),
+            JobEvent::Started { job: job_id(7), ts: 26 },
+            JobEvent::TimedOut { job: job_id(7), ts: 27 },
+            submitted(8, 28),
+            JobEvent::Canceled { job: job_id(8), ts: 29 }, // canceled while waiting
         ];
         let replay = replay(&events).unwrap();
-        assert_eq!(replay.next_job_number, 7);
+        assert_eq!(replay.next_job_number, 9);
         let by_id = |n: usize| replay.jobs.iter().find(|j| j.id == job_id(n)).unwrap();
         assert_eq!(by_id(1).state, ReplayState::Done);
         assert_eq!(by_id(1).result, Some(result));
@@ -951,9 +1011,15 @@ mod tests {
         assert_eq!(by_id(5).state, ReplayState::Abandoned);
         assert_eq!(by_id(6).state, ReplayState::Running);
         assert_eq!(by_id(6).interruptions, 1);
+        assert_eq!(by_id(7).state, ReplayState::TimedOut);
+        assert_eq!(by_id(7).finished_ts, Some(27));
+        assert!(by_id(7).state.is_terminal());
+        assert_eq!(by_id(8).state, ReplayState::Canceled);
+        assert!(by_id(8).state.is_terminal());
+        assert!(!by_id(6).state.is_terminal());
         // Submission order is preserved.
         let ids: Vec<&str> = replay.jobs.iter().map(|j| j.id.as_str()).collect();
-        assert_eq!(ids, (1..=6).map(job_id).collect::<Vec<_>>());
+        assert_eq!(ids, (1..=8).map(job_id).collect::<Vec<_>>());
     }
 
     #[test]
@@ -1006,14 +1072,49 @@ mod tests {
             records: 0,
             result_at: None,
         };
+        let timed_out = JobEvent::Settled {
+            job: job_id(10),
+            ts: 33,
+            state: SettledState::TimedOut,
+            spec: spec(),
+            submitted_ts: 15,
+            started_ts: Some(16),
+            interruptions: 0,
+            error: None,
+            run_id: None,
+            records: 0,
+            result_at: None,
+        };
+        let canceled = JobEvent::Settled {
+            job: job_id(11),
+            ts: 34,
+            state: SettledState::Canceled,
+            spec: spec(),
+            submitted_ts: 17,
+            started_ts: None,
+            interruptions: 0,
+            error: None,
+            run_id: None,
+            records: 0,
+            result_at: None,
+        };
         let marker =
             JobEvent::Compacted { job: "journal".into(), ts: 33, next: 42, dropped: 5 };
-        for ev in [full, minimal, failed, marker] {
+        for ev in [full, minimal, failed, timed_out, canceled, marker] {
             let line = ev.to_json().to_json();
             assert!(!line.contains('\n'));
             assert_eq!(JobEvent::decode_line(&line).unwrap(), ev);
         }
         assert!(SettledState::parse("pending").is_err());
+        for s in [
+            SettledState::Done,
+            SettledState::Failed,
+            SettledState::Abandoned,
+            SettledState::TimedOut,
+            SettledState::Canceled,
+        ] {
+            assert_eq!(SettledState::parse(s.as_str()).unwrap(), s);
+        }
     }
 
     #[test]
@@ -1206,5 +1307,52 @@ mod tests {
         ])
         .unwrap_err();
         assert!(format!("{err}").contains("terminal"), "{err}");
+        // A timeout can only be noticed mid-run.
+        let err = replay(&[submitted(1, 1), JobEvent::TimedOut { job: job_id(1), ts: 2 }])
+            .unwrap_err();
+        assert!(format!("{err}").contains("not running"), "{err}");
+        // A cancel after settlement is a transition after terminal.
+        let err = replay(&[
+            submitted(1, 1),
+            JobEvent::Canceled { job: job_id(1), ts: 2 },
+            JobEvent::Canceled { job: job_id(1), ts: 3 },
+        ])
+        .unwrap_err();
+        assert!(format!("{err}").contains("terminal"), "{err}");
+    }
+
+    /// Timed-out and canceled jobs are settled: compaction folds them
+    /// to summary lines exactly like done/failed/abandoned ones.
+    #[test]
+    fn compact_folds_timed_out_and_canceled_jobs() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let journal = Journal::new(dir.path().join(JOURNAL_FILE));
+        let spill = ResultSpill::beside(journal.path());
+        for ev in [
+            submitted(1, 100),
+            JobEvent::Started { job: job_id(1), ts: 101 },
+            JobEvent::TimedOut { job: job_id(1), ts: 160 },
+            submitted(2, 110),
+            JobEvent::Canceled { job: job_id(2), ts: 111 },
+        ] {
+            journal.append(&ev).unwrap();
+        }
+        let stats = journal.compact(&spill, 1000, 10_000).unwrap();
+        assert_eq!(stats.settled, 2);
+        assert_eq!(stats.dropped, 0);
+        let replayed = replay(&journal.load().unwrap()).unwrap();
+        assert_eq!(replayed.jobs.len(), 2);
+        assert_eq!(replayed.jobs[0].state, ReplayState::TimedOut);
+        assert_eq!(replayed.jobs[0].finished_ts, Some(160));
+        assert_eq!(replayed.jobs[1].state, ReplayState::Canceled);
+        let text = std::fs::read_to_string(journal.path()).unwrap();
+        assert!(text.contains("\"state\":\"timed_out\""), "{text}");
+        assert!(text.contains("\"state\":\"canceled\""), "{text}");
+        // Stable under a second compaction.
+        let stats = journal.compact(&spill, 1100, 10_000).unwrap();
+        assert_eq!(stats.settled, 2);
+        let again = replay(&journal.load().unwrap()).unwrap();
+        assert_eq!(again.jobs[0].state, ReplayState::TimedOut);
+        assert_eq!(again.jobs[1].state, ReplayState::Canceled);
     }
 }

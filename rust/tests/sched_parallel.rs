@@ -109,7 +109,7 @@ fn sharded_archive_merge_equals_serial_run() {
     // Two shards of one logical run, recorded under one run id.
     for index in 0..2usize {
         let shard = ShardSpec { index, total: 2 };
-        let opts = ExecOpts { jobs: 2, shard: Some(shard), fail_fast: false };
+        let opts = ExecOpts { jobs: 2, shard: Some(shard), ..ExecOpts::SERIAL };
         let out = run(&opts);
         assert_eq!(out.worklist_len, entries.len());
         assert_eq!(out.ran, out.completed.len());

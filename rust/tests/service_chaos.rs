@@ -1,0 +1,229 @@
+//! Chaos suite: the daemon under deterministic fault injection
+//! (`XBENCH_FAULTS`, see `service/faults.rs`). Seeded failures fire at
+//! the journal-append, archive-record, and claim seams, plus injected
+//! executor panics mid-job — and the invariants must hold anyway:
+//! every acked job settles in exactly one terminal state, nothing runs
+//! more than the retry-once contract allows, and a `kill -9` in the
+//! middle of the storm replays to a consistent queue on restart.
+//!
+//! Faults are armed via the child daemon's environment, so the tests
+//! in this binary stay hermetic: nothing here arms the in-process
+//! fault registry.
+
+use std::io::BufRead as _;
+use std::path::Path;
+use std::process::{Child, Command, Stdio};
+
+use xbench::service::{self, JobSpec};
+use xbench::store::journal::{self, JobEvent};
+use xbench::store::Journal;
+use xbench::util::TempDir;
+
+/// One seed, all four sites: ~5% journal-append failures, ~10%
+/// archive-record failures, ~15% aborted claims, ~30% executor panics.
+/// Deterministic per (seed, site) — reruns see the same storm.
+const FAULT_SPEC: &str = "42:journal-append=0.05,archive-record=0.1,claim=0.15,exec-panic=0.3";
+
+fn fast_spec(models: &[&str]) -> JobSpec {
+    let mut spec = JobSpec::default_run();
+    spec.repeats = 1;
+    spec.iterations = 1;
+    spec.warmup = 0;
+    spec.models = models.iter().map(|m| m.to_string()).collect();
+    spec
+}
+
+/// Spawn the real `xbench serve` binary, optionally with faults armed,
+/// and parse the bound port from the startup banner (printed after
+/// recovery, so once the port is known the journal has replayed).
+fn spawn_daemon(arts: &Path, faults: Option<&str>, extra: &[&str]) -> (Child, u16) {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_xbench"));
+    cmd.args(["serve", "--port", "0", "--artifacts"])
+        .arg(arts)
+        .args(extra)
+        .stdout(Stdio::null())
+        .stderr(Stdio::piped());
+    match faults {
+        Some(spec) => cmd.env("XBENCH_FAULTS", spec),
+        None => cmd.env_remove("XBENCH_FAULTS"),
+    };
+    let mut child = cmd.spawn().expect("spawning xbench serve");
+    let stderr = child.stderr.take().unwrap();
+    let mut reader = std::io::BufReader::new(stderr);
+    let mut port = None;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line).unwrap_or(0) == 0 {
+            break; // daemon died before listening
+        }
+        if let Some(rest) = line.split("listening on 127.0.0.1:").nth(1) {
+            port = rest.split_whitespace().next().and_then(|p| p.parse::<u16>().ok());
+            break;
+        }
+    }
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        while reader.read_line(&mut sink).map(|n| n > 0).unwrap_or(false) {
+            sink.clear();
+        }
+    });
+    let port = port.unwrap_or_else(|| {
+        let _ = child.kill();
+        panic!("daemon did not report a bound port");
+    });
+    (child, port)
+}
+
+/// Submit under fault injection: an injected journal-append failure
+/// refuses the submit (journal-before-ack), which is correct behavior,
+/// not a test failure — only *acked* jobs carry settlement guarantees.
+fn submit_storm(port: u16, n: usize) -> Vec<String> {
+    let mut acked = Vec::new();
+    for k in 0..n {
+        let models: &[&str] =
+            if k % 2 == 0 { &["deeprec_ae"] } else { &["dlrm_tiny"] };
+        match service::submit(port, fast_spec(models)) {
+            Ok(id) => acked.push(id),
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(
+                    msg.contains("injected fault"),
+                    "only injected faults may refuse a submit: {msg}"
+                );
+            }
+        }
+    }
+    acked
+}
+
+/// Per-job journal accounting: (starts, terminal event names).
+fn job_ledger(events: &[JobEvent], job: &str) -> (usize, Vec<&'static str>) {
+    let mut starts = 0;
+    let mut terminals = Vec::new();
+    for ev in events.iter().filter(|ev| ev.job() == job) {
+        match ev {
+            JobEvent::Started { .. } => starts += 1,
+            JobEvent::Done { .. } => terminals.push("done"),
+            JobEvent::Failed { .. } => terminals.push("failed"),
+            JobEvent::Canceled { .. } => terminals.push("canceled"),
+            JobEvent::TimedOut { .. } => terminals.push("timed_out"),
+            JobEvent::Abandoned { .. } => terminals.push("abandoned"),
+            _ => {}
+        }
+    }
+    (starts, terminals)
+}
+
+#[test]
+fn faulted_storm_settles_every_acked_job_exactly_once() {
+    let dir = TempDir::new().unwrap();
+    xbench::suite::synth::write_synthetic_artifacts(dir.path(), 20230102, false).unwrap();
+    let (mut child, port) =
+        spawn_daemon(dir.path(), Some(FAULT_SPEC), &["--executors", "2"]);
+
+    let acked = submit_storm(port, 10);
+    assert!(!acked.is_empty(), "a ~5% append-fault rate cannot refuse all 10 submits");
+
+    // Every acked job must reach a terminal state despite aborted
+    // claims and mid-job panics — done, or failed (an injected
+    // archive-record error fails the run; a second panic exhausts the
+    // single retry and gives up).
+    for id in &acked {
+        let (view, _) = service::fetch_result(port, id, true, 300).unwrap();
+        let status = view.req_str("status").unwrap();
+        assert!(status == "done" || status == "failed", "{id}: {status}");
+        if status == "failed" {
+            let err = view.req_str("error").unwrap();
+            assert!(
+                err.contains("injected fault") || err.contains("giving up"),
+                "{id}: a chaos failure must trace to a fault site: {err}"
+            );
+        }
+    }
+
+    // Journal ledger (read before shutdown — compaction would fold
+    // it): exactly one terminal per acked job, and at most two starts
+    // (the retry-once contract bounds re-execution even under panics).
+    let events = Journal::beside(&dir.path().join("runs.jsonl")).load().unwrap();
+    for id in &acked {
+        let (starts, terminals) = job_ledger(&events, id);
+        assert_eq!(terminals.len(), 1, "{id}: one terminal, got {terminals:?}");
+        assert!((1..=2).contains(&starts), "{id}: {starts} starts breaks retry-once");
+    }
+    // Refused submits must have left no trace at all.
+    let phantom = events
+        .iter()
+        .filter(|ev| matches!(ev, JobEvent::Submitted { .. }))
+        .count();
+    assert_eq!(phantom, acked.len(), "journaled submits must equal acked submits");
+
+    service::shutdown(port).unwrap();
+    let status = child.wait().unwrap();
+    assert!(status.success(), "daemon exited {status:?}");
+}
+
+#[test]
+fn kill9_mid_faulted_storm_replays_to_a_consistent_queue() {
+    let dir = TempDir::new().unwrap();
+    xbench::suite::synth::write_synthetic_artifacts(dir.path(), 20230102, false).unwrap();
+    let (mut child, port) =
+        spawn_daemon(dir.path(), Some(FAULT_SPEC), &["--executors", "2"]);
+
+    let acked = submit_storm(port, 8);
+    assert!(!acked.is_empty());
+
+    // Let the storm get properly airborne — at least one claim
+    // journaled — then SIGKILL with jobs in every state.
+    for _ in 0..1000 {
+        let started = Journal::beside(&dir.path().join("runs.jsonl"))
+            .load()
+            .map(|evs| evs.iter().any(|ev| matches!(ev, JobEvent::Started { .. })))
+            .unwrap_or(false);
+        if started {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    child.kill().unwrap();
+    child.wait().unwrap();
+
+    // The survivor journal replays cleanly even though it was written
+    // under fault injection and truncated by a SIGKILL.
+    let events = Journal::beside(&dir.path().join("runs.jsonl")).load().unwrap();
+    journal::replay(&events).expect("chaos journal must replay");
+
+    // Restart with faults DISARMED: recovery resurrects every acked
+    // job and the queue drains normally.
+    let (mut child2, port2) = spawn_daemon(dir.path(), None, &[]);
+    let listed: Vec<String> = service::queue_status(port2)
+        .unwrap()
+        .iter()
+        .map(|j| j.req_str("id").unwrap().to_string())
+        .collect();
+    for id in &acked {
+        assert!(listed.contains(id), "{id} was acked then lost across the crash");
+    }
+
+    for id in &acked {
+        let (view, _) = service::fetch_result(port2, id, true, 300).unwrap();
+        let status = view.req_str("status").unwrap();
+        // done, or failed via the retry-once contract (a job that was
+        // mid-run at the kill AND mid-retry from an earlier injected
+        // panic is journaled `failed: giving up`).
+        assert!(status == "done" || status == "failed", "{id}: {status}");
+    }
+
+    // Final ledger: exactly one terminal per acked job, never more
+    // than two starts across BOTH daemon lifetimes.
+    let events = Journal::beside(&dir.path().join("runs.jsonl")).load().unwrap();
+    for id in &acked {
+        let (starts, terminals) = job_ledger(&events, id);
+        assert_eq!(terminals.len(), 1, "{id}: one terminal, got {terminals:?}");
+        assert!((1..=2).contains(&starts), "{id}: {starts} starts breaks retry-once");
+    }
+
+    service::shutdown(port2).unwrap();
+    let status = child2.wait().unwrap();
+    assert!(status.success(), "daemon exited {status:?}");
+}

@@ -6,8 +6,8 @@
 use std::path::Path;
 
 use xbench::config::RunConfig;
-use xbench::service::{self, Daemon, JobSpec, JobVerb};
-use xbench::store::{Archive, Journal};
+use xbench::service::{self, Daemon, JobSpec, JobVerb, Priority};
+use xbench::store::{Archive, JobEvent, Journal};
 use xbench::suite::Suite;
 use xbench::runtime::Manifest;
 use xbench::util::TempDir;
@@ -253,6 +253,8 @@ fn stats_counters_stay_consistent_under_a_submit_storm() {
                 + g("jobs_interrupted")
                 + g("jobs_done")
                 + g("jobs_failed")
+                + g("jobs_canceled")
+                + g("jobs_timed_out")
                 + g("jobs_abandoned"),
             "state counts must partition jobs_submitted: {}",
             s.to_json()
@@ -297,6 +299,315 @@ fn stats_counters_stay_consistent_under_a_submit_storm() {
     assert!(end.req_f64("uptime_s").unwrap() >= 0.0);
     let busy = end.req_f64("executor_busy_fraction").unwrap();
     assert!((0.0..=1.0).contains(&busy), "busy fraction {busy} out of [0,1]");
+
+    service::shutdown(port).unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn multi_tenant_storm_schedules_by_priority_then_client_fairness() {
+    // Four tenants with mixed priorities. The claimable set is fixed
+    // up front (the jobs are journaled `submitted` before the daemon
+    // boots, so recovery re-queues all eight as pending), which makes
+    // the claim order a pure function of the scheduler: priority class
+    // first, round-robin across clients inside a class, oldest job per
+    // client. `started` is journaled inside the claim critical
+    // section, so the journal's Started sequence IS the claim order —
+    // deterministic even with two executors racing.
+    let dir = TempDir::new().unwrap();
+    xbench::suite::synth::write_synthetic_artifacts(dir.path(), 20230102, false).unwrap();
+    let suite = Suite::new(Manifest::load(dir.path()).unwrap());
+    let archive_path = dir.path().join("runs.jsonl");
+
+    // (client, priority) in submission order; ids are job-0001..0008.
+    let tenants = [
+        ("a", Priority::Low),
+        ("b", Priority::Low),
+        ("c", Priority::High),
+        ("d", Priority::High),
+        ("a", Priority::Normal),
+        ("b", Priority::Normal),
+        ("c", Priority::Normal),
+        ("d", Priority::Normal),
+    ];
+    let journal = Journal::beside(&archive_path);
+    for (i, (client, priority)) in tenants.iter().enumerate() {
+        let mut spec = JobSpec::default_run();
+        spec.repeats = 1;
+        spec.iterations = 1;
+        spec.warmup = 0;
+        spec.models = vec!["deeprec_ae".into()];
+        spec.priority = *priority;
+        spec.client = (*client).into();
+        journal
+            .append(&JobEvent::Submitted {
+                job: format!("job-{:04}", i + 1),
+                ts: 1_700_000_000 + i as u64,
+                spec: spec.to_json(),
+            })
+            .unwrap();
+    }
+
+    let mut daemon =
+        Daemon::bind(0, dir.path().to_path_buf(), Journal::beside(&archive_path)).unwrap();
+    daemon.set_executors(2);
+    let port = daemon.port();
+    let server = std::thread::spawn({
+        let base_cfg = fast_cfg(dir.path());
+        let archive = Archive::new(&archive_path);
+        move || daemon.run(suite, archive, base_cfg)
+    });
+
+    for i in 1..=tenants.len() {
+        let id = format!("job-{i:04}");
+        let (view, _) = service::fetch_result(port, &id, true, 300).unwrap();
+        assert_eq!(view.req_str("status").unwrap(), "done", "{id}");
+    }
+
+    // Read the journal BEFORE shutdown: clean shutdown compacts
+    // settled jobs into `settled` lines and would drop the Started
+    // sequence this test is about.
+    let started: Vec<String> = Journal::beside(&archive_path)
+        .load()
+        .unwrap()
+        .iter()
+        .filter_map(|ev| match ev {
+            JobEvent::Started { job, .. } => Some(job.clone()),
+            _ => None,
+        })
+        .collect();
+    // High class: clients {c, d} round-robin from a fresh cursor.
+    // Normal class: {a, b, c, d}, cursor wraps past "d" back to "a".
+    // Low class: {a, b}.
+    assert_eq!(
+        started,
+        vec![
+            "job-0003", "job-0004", // high: c, d
+            "job-0005", "job-0006", "job-0007", "job-0008", // normal: a, b, c, d
+            "job-0001", "job-0002", // low: a, b
+        ],
+        "claim order must follow priority class then client round-robin"
+    );
+
+    let stats = service::stats(port).unwrap();
+    assert_eq!(stats.req_usize("executors").unwrap(), 2);
+    assert_eq!(stats.req_usize("jobs_done").unwrap(), 8);
+
+    service::shutdown(port).unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn full_queue_rejects_submissions_until_a_cancel_frees_a_slot() {
+    let dir = TempDir::new().unwrap();
+    xbench::suite::synth::write_synthetic_artifacts(dir.path(), 20230102, false).unwrap();
+    let suite = Suite::new(Manifest::load(dir.path()).unwrap());
+    let archive_path = dir.path().join("runs.jsonl");
+    let mut daemon =
+        Daemon::bind(0, dir.path().to_path_buf(), Journal::beside(&archive_path)).unwrap();
+    daemon.set_queue_cap(2);
+    let port = daemon.port();
+    let server = std::thread::spawn({
+        let base_cfg = fast_cfg(dir.path());
+        let archive = Archive::new(&archive_path);
+        move || daemon.run(suite, archive, base_cfg)
+    });
+    service::ping(port).unwrap();
+
+    // A deliberately heavy blocker (full suite, extra repeats) keeps
+    // the single executor busy while the cap math is probed.
+    let mut blocker = JobSpec::default_run();
+    blocker.repeats = 2;
+    blocker.iterations = 2;
+    blocker.warmup = 1;
+    let blocker_id = service::submit(port, blocker).unwrap();
+    // Admission counts only claimable jobs, so wait until the blocker
+    // is off the queue and running before filling the two slots.
+    loop {
+        let jobs = service::queue_status(port).unwrap();
+        let view = jobs.iter().find(|j| j.req_str("id").unwrap() == blocker_id).unwrap();
+        if view.req_str("status").unwrap() == "running" {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+
+    let quick = || {
+        let mut spec = JobSpec::default_run();
+        spec.repeats = 1;
+        spec.iterations = 1;
+        spec.warmup = 0;
+        spec.models = vec!["deeprec_ae".into()];
+        spec
+    };
+    let filler_a = service::submit(port, quick()).unwrap();
+    let filler_b = service::submit(port, quick()).unwrap();
+
+    // Queue full: the submit is refused loudly, consumes no job id,
+    // and leaves no journal trace.
+    let err = service::submit(port, quick()).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("rejected: queue full"),
+        "rejection must be loud and say why: {err:#}"
+    );
+    let stats = service::stats(port).unwrap();
+    assert_eq!(stats.req_usize("queue_cap").unwrap(), 2);
+    // The rejection counter is a process-global metric shared by every
+    // test in this binary, so only a floor is asserted.
+    assert!(stats.req_usize("jobs_rejected_total").unwrap() >= 1);
+
+    // Canceling a pending job frees its slot immediately.
+    let resp = service::cancel(port, &filler_a).unwrap();
+    assert_eq!(resp.req_str("status").unwrap(), "canceled");
+    let readmitted = service::submit(port, quick()).unwrap();
+
+    // No id was burned by the rejected submit: the readmitted job is
+    // the 4th ack.
+    assert_eq!(readmitted, "job-0004");
+
+    let journal_events = Journal::beside(&archive_path).load().unwrap();
+    assert!(
+        journal_events.iter().all(|ev| ev.job() != "job-0005"),
+        "a rejected submission must leave no journal trace"
+    );
+
+    for id in [&blocker_id, &filler_b, &readmitted] {
+        let (view, _) = service::fetch_result(port, id, true, 300).unwrap();
+        assert_eq!(view.req_str("status").unwrap(), "done", "{id}");
+    }
+    let (view, result) = service::fetch_result(port, &filler_a, false, 0).unwrap();
+    assert_eq!(view.req_str("status").unwrap(), "canceled");
+    assert!(result.is_none());
+
+    service::shutdown(port).unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn cancel_races_completion_to_exactly_one_terminal_state() {
+    // `cancel` against a running job is cooperative: the executor sees
+    // the flag at the next bench-item boundary. Completion is allowed
+    // to win the race — the invariant is that the job settles exactly
+    // once, as either done or canceled, and the journal agrees.
+    let dir = TempDir::new().unwrap();
+    xbench::suite::synth::write_synthetic_artifacts(dir.path(), 20230102, false).unwrap();
+    let suite = Suite::new(Manifest::load(dir.path()).unwrap());
+    let archive_path = dir.path().join("runs.jsonl");
+    let daemon =
+        Daemon::bind(0, dir.path().to_path_buf(), Journal::beside(&archive_path)).unwrap();
+    let port = daemon.port();
+    let server = std::thread::spawn({
+        let base_cfg = fast_cfg(dir.path());
+        let archive = Archive::new(&archive_path);
+        move || daemon.run(suite, archive, base_cfg)
+    });
+
+    // Full suite = many item boundaries = many cancellation windows.
+    let mut spec = JobSpec::default_run();
+    spec.repeats = 1;
+    spec.iterations = 1;
+    spec.warmup = 0;
+    let id = service::submit(port, spec).unwrap();
+
+    // Fire the cancel as soon as the job leaves the queue (or
+    // immediately, if it settles faster than we can poll).
+    loop {
+        let jobs = service::queue_status(port).unwrap();
+        let status = jobs[0].req_str("status").unwrap().to_string();
+        if status != "pending" {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let resp = service::cancel(port, &id).unwrap();
+    let ack = resp.req_str("status").unwrap();
+    assert!(
+        ack == "canceled"
+            || ack == "done"
+            || (ack == "running"
+                && resp.get("cancel_requested").and_then(|b| b.as_bool()) == Some(true)),
+        "unexpected cancel ack: {}",
+        resp.to_json()
+    );
+
+    let (view, _) = service::fetch_result(port, &id, true, 300).unwrap();
+    let settled = view.req_str("status").unwrap().to_string();
+    assert!(
+        settled == "done" || settled == "canceled",
+        "race must settle done or canceled, got {settled}"
+    );
+    // Cancel is idempotent after settling.
+    let again = service::cancel(port, &id).unwrap();
+    assert_eq!(again.req_str("status").unwrap(), settled);
+
+    // The journal records exactly ONE terminal event, matching the
+    // reported status (read before shutdown — compaction folds it).
+    let terminals: Vec<&'static str> = Journal::beside(&archive_path)
+        .load()
+        .unwrap()
+        .iter()
+        .filter(|ev| ev.job() == id)
+        .filter_map(|ev| match ev {
+            JobEvent::Done { .. } => Some("done"),
+            JobEvent::Failed { .. } => Some("failed"),
+            JobEvent::Canceled { .. } => Some("canceled"),
+            JobEvent::TimedOut { .. } => Some("timed_out"),
+            JobEvent::Abandoned { .. } => Some("abandoned"),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(terminals, vec![settled.as_str()], "exactly one terminal journal event");
+
+    service::shutdown(port).unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn zero_timeout_job_times_out_at_the_first_item_boundary() {
+    // --timeout-secs budgets wall clock from the claim, checked at
+    // bench-item boundaries; a zero budget is over by the first check,
+    // which makes the timeout path deterministic enough to test.
+    let dir = TempDir::new().unwrap();
+    xbench::suite::synth::write_synthetic_artifacts(dir.path(), 20230102, false).unwrap();
+    let suite = Suite::new(Manifest::load(dir.path()).unwrap());
+    let archive_path = dir.path().join("runs.jsonl");
+    let daemon =
+        Daemon::bind(0, dir.path().to_path_buf(), Journal::beside(&archive_path)).unwrap();
+    let port = daemon.port();
+    let server = std::thread::spawn({
+        let base_cfg = fast_cfg(dir.path());
+        let archive = Archive::new(&archive_path);
+        move || daemon.run(suite, archive, base_cfg)
+    });
+
+    let mut spec = JobSpec::default_run();
+    spec.repeats = 1;
+    spec.iterations = 1;
+    spec.warmup = 0;
+    spec.models = vec!["deeprec_ae".into()];
+    spec.timeout_secs = Some(0);
+    let id = service::submit(port, spec).unwrap();
+
+    let (view, result) = service::fetch_result(port, &id, true, 300).unwrap();
+    assert_eq!(view.req_str("status").unwrap(), "timed_out");
+    assert!(
+        view.req_str("error").unwrap().contains("exceeded --timeout-secs 0"),
+        "{}",
+        view.to_json()
+    );
+    assert!(result.is_none());
+
+    let events = Journal::beside(&archive_path).load().unwrap();
+    assert!(
+        events
+            .iter()
+            .any(|ev| matches!(ev, JobEvent::TimedOut { job, .. } if job == &id)),
+        "journal must carry the timed_out transition"
+    );
+    // Per-state counts come from this daemon's own job table (not the
+    // process-global metrics registry), so exact assertion is safe.
+    let stats = service::stats(port).unwrap();
+    assert_eq!(stats.req_usize("jobs_timed_out").unwrap(), 1);
 
     service::shutdown(port).unwrap();
     server.join().unwrap().unwrap();

@@ -39,9 +39,16 @@ fn fast_spec(models: &[&str]) -> JobSpec {
 /// the bound port from its startup banner. Stderr keeps draining on a
 /// background thread so the daemon can never block on a full pipe.
 fn spawn_daemon(arts: &Path) -> (Child, u16) {
+    spawn_daemon_with(arts, &[])
+}
+
+/// Like [`spawn_daemon`] but with extra `serve` flags (e.g.
+/// `--executors 2`).
+fn spawn_daemon_with(arts: &Path, extra: &[&str]) -> (Child, u16) {
     let mut child = Command::new(env!("CARGO_BIN_EXE_xbench"))
         .args(["serve", "--port", "0", "--artifacts"])
         .arg(arts)
+        .args(extra)
         .stdout(Stdio::null())
         .stderr(Stdio::piped())
         .spawn()
@@ -313,6 +320,103 @@ fn sigkill_then_restart_compacts_the_journal_at_startup() {
     assert_eq!(after.expect("restored payload"), before);
     let j2 = service::submit(port2, fast_spec(&["deeprec_ae"])).unwrap();
     assert_eq!(j2, "job-0002");
+
+    service::shutdown(port2).unwrap();
+    let status = child2.wait().unwrap();
+    assert!(status.success(), "daemon exited {status:?}");
+}
+
+#[test]
+fn sigkill_during_concurrent_execution_retries_every_in_flight_job() {
+    // The multi-executor variant of the crash contract: with two
+    // executors BOTH mid-job at SIGKILL time, a restart must journal
+    // one `interrupted` per in-flight job and retry each exactly once
+    // — no job lost, none run twice, queued jobs simply resume.
+    let dir = TempDir::new().unwrap();
+    xbench::suite::synth::write_synthetic_artifacts(dir.path(), 20230102, false).unwrap();
+    let (mut child, port) = spawn_daemon_with(dir.path(), &["--executors", "2"]);
+
+    // Two heavy jobs (full suite, extra repeats) occupy both
+    // executors; two quick jobs queue behind them.
+    let heavy = || {
+        let mut s = fast_spec(&[]);
+        s.repeats = 2;
+        s.iterations = 2;
+        s.warmup = 1;
+        s
+    };
+    let j1 = service::submit(port, heavy()).unwrap();
+    let j2 = service::submit(port, heavy()).unwrap();
+    let j3 = service::submit(port, fast_spec(&["deeprec_ae"])).unwrap();
+    let j4 = service::submit(port, fast_spec(&["dlrm_tiny"])).unwrap();
+
+    // Kill only once both heavy jobs are genuinely mid-run.
+    for _ in 0..1000 {
+        let jobs = service::queue_status(port).unwrap();
+        let both_running = jobs
+            .iter()
+            .filter(|v| {
+                let id = v.req_str("id").unwrap();
+                (id == j1 || id == j2) && v.req_str("status").unwrap() == "running"
+            })
+            .count()
+            == 2;
+        if both_running {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    child.kill().unwrap();
+    child.wait().unwrap();
+
+    // The crash left both claims journaled and unsettled.
+    let archive_path = dir.path().join("runs.jsonl");
+    let events = Journal::beside(&archive_path).load().unwrap();
+    for j in [&j1, &j2] {
+        assert!(
+            events
+                .iter()
+                .any(|ev| matches!(ev, JobEvent::Started { job, .. } if job == j)),
+            "{j}: claim must be journaled before the crash"
+        );
+    }
+
+    // Restart: every acked job settles done — the in-flight pair via
+    // the retry-once contract (interruptions == 1), the queued pair by
+    // simply running.
+    let (mut child2, port2) = spawn_daemon(dir.path());
+    for (j, was_running) in [(&j1, true), (&j2, true), (&j3, false), (&j4, false)] {
+        let (view, result) = service::fetch_result(port2, j, true, 300).unwrap();
+        assert_eq!(view.req_str("status").unwrap(), "done", "{j}");
+        assert!(result.is_some(), "{j}: completed job must carry a payload");
+        if was_running {
+            assert_eq!(
+                view.req_usize("interruptions").unwrap(),
+                1,
+                "{j}: crashed mid-run, so exactly one journaled retry"
+            );
+        }
+    }
+
+    // Exactly one terminal per job — retried, never double-settled.
+    let events = Journal::beside(&archive_path).load().unwrap();
+    for j in [&j1, &j2, &j3, &j4] {
+        let terminals = events
+            .iter()
+            .filter(|ev| {
+                ev.job() == j.as_str()
+                    && matches!(
+                        ev,
+                        JobEvent::Done { .. }
+                            | JobEvent::Failed { .. }
+                            | JobEvent::Canceled { .. }
+                            | JobEvent::TimedOut { .. }
+                            | JobEvent::Abandoned { .. }
+                    )
+            })
+            .count();
+        assert_eq!(terminals, 1, "{j}: exactly one terminal journal event");
+    }
 
     service::shutdown(port2).unwrap();
     let status = child2.wait().unwrap();
